@@ -1,0 +1,57 @@
+//! Quickstart: load an exported model, calibrate its quantizer scales, and
+//! compare the float baseline against uniform int8 / int4 quantization.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use mpq::quant::QuantConfig;
+use mpq::report::experiments::ExperimentCtx;
+
+fn main() -> mpq::Result<()> {
+    let dir = mpq::artifacts_dir()
+        .ok_or_else(|| anyhow::anyhow!("run `make artifacts` first"))?;
+
+    // One ExperimentCtx = one model pipeline (PJRT engine, compiled AOT
+    // graphs, device-resident params + datasets) plus its cost models.
+    let mut ctx = ExperimentCtx::new(&dir, "resnet_s")?;
+
+    // Two-step scale estimation: max calibration, then backprop adjustment
+    // of the scales only (model parameters are never touched — that is the
+    // paper's PTQ deployment story).
+    ctx.ensure_calibrated()?;
+
+    let n = ctx.pipeline.num_quant_layers();
+    println!("model: resnet_s with {n} quantizable layers");
+    println!(
+        "float baseline: {:.2}% accuracy, {:.2} MB, {:.3} ms",
+        ctx.pipeline.float_val_acc() * 100.0,
+        ctx.cost.base_size_mb(),
+        ctx.cost.base_latency_ms()
+    );
+
+    for bits in [8.0f32, 4.0] {
+        let cfg = QuantConfig::uniform(n, bits);
+        let r = ctx.pipeline.eval_config(&cfg, None)?;
+        println!(
+            "uniform int{bits:>2}: accuracy {:.2}%  size {:.1}%  latency {:.1}%",
+            r.accuracy * 100.0,
+            ctx.cost.rel_size(&cfg) * 100.0,
+            ctx.cost.rel_latency(&cfg) * 100.0
+        );
+    }
+
+    // A hand-built mixed configuration: first and last layers protected at
+    // higher precision — the intuition the guided searches automate.
+    let mut mixed = QuantConfig::uniform(n, 4.0);
+    mixed.set_layer(0, 8.0);
+    mixed.set_layer(n - 1, 8.0);
+    let r = ctx.pipeline.eval_config(&mixed, None)?;
+    println!(
+        "mixed (ends @8b): accuracy {:.2}%  size {:.1}%  latency {:.1}%",
+        r.accuracy * 100.0,
+        ctx.cost.rel_size(&mixed) * 100.0,
+        ctx.cost.rel_latency(&mixed) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Sensitivity metric study (paper §3.2 / Fig. 4): compute all three
+//! metrics for one model, print the per-layer scores and orderings, and the
+//! pairwise Levenshtein distances between orderings.
+//!
+//! ```sh
+//! cargo run --release --example sensitivity_analysis [-- bert_s]
+//! ```
+
+use mpq::report::experiments::{ExperimentCtx, METRIC_TRIALS};
+use mpq::sensitivity::{self, levenshtein, MetricKind, Sensitivity};
+
+fn main() -> mpq::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "resnet_s".to_string());
+    let dir = mpq::artifacts_dir()
+        .ok_or_else(|| anyhow::anyhow!("run `make artifacts` first"))?;
+    let mut ctx = ExperimentCtx::new(&dir, &model)?;
+    ctx.ensure_calibrated()?;
+
+    let names: Vec<String> = ctx
+        .pipeline
+        .artifacts
+        .manifest
+        .quant_layers()
+        .iter()
+        .map(|l| l.name.clone())
+        .collect();
+
+    let metrics = [MetricKind::Qe, MetricKind::Noise, MetricKind::Hessian];
+    let mut results: Vec<Sensitivity> = Vec::new();
+    for mk in metrics {
+        let t0 = std::time::Instant::now();
+        let s = sensitivity::compute(&mut ctx.pipeline, mk, METRIC_TRIALS, 0)?;
+        println!("{} computed in {:.1}s", mk.label(), t0.elapsed().as_secs_f64());
+        results.push(s);
+    }
+
+    println!("\nper-layer scores ({model}):");
+    println!("{:>22} {:>12} {:>12} {:>12}", "layer", "QE", "Noise", "Hessian");
+    for i in 0..names.len() {
+        println!(
+            "{:>22} {:>12.4e} {:>12.4e} {:>12.4e}",
+            names[i], results[0].scores[i], results[1].scores[i], results[2].scores[i]
+        );
+    }
+
+    println!("\norderings (least sensitive first):");
+    for s in &results {
+        let order: Vec<&str> = s.order.iter().map(|&i| names[i].as_str()).collect();
+        println!("  {:>8}: {}", s.metric.label(), order.join(" < "));
+    }
+
+    println!("\nLevenshtein distances between orderings (max {}):", names.len());
+    for i in 0..results.len() {
+        for j in (i + 1)..results.len() {
+            println!(
+                "  {} vs {}: {}",
+                results[i].metric.label(),
+                results[j].metric.label(),
+                levenshtein(&results[i].order, &results[j].order)
+            );
+        }
+    }
+    Ok(())
+}

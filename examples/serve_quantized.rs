@@ -1,0 +1,83 @@
+//! Serving demo: run the batched inference server over a mixed-precision
+//! configuration found by a quick greedy search, and measure request
+//! latency under concurrent load — the QoS setting that motivates the
+//! paper's latency objective.
+//!
+//! ```sh
+//! cargo run --release --example serve_quantized
+//! ```
+
+use mpq::coordinator::SearchAlgo;
+use mpq::quant::Scales;
+use mpq::report::experiments::{run_cell, ExperimentCtx, METRIC_TRIALS};
+use mpq::sensitivity::{self, MetricKind};
+use mpq::server::{spawn, ServeOptions};
+
+fn main() -> mpq::Result<()> {
+    let model = "bert_s";
+    let dir = mpq::artifacts_dir()
+        .ok_or_else(|| anyhow::anyhow!("run `make artifacts` first"))?;
+
+    // 1. Find a deployable mixed-precision configuration (QE guidance is the
+    //    cheapest metric — fine for a demo).
+    let mut ctx = ExperimentCtx::new(&dir, model)?;
+    ctx.ensure_calibrated()?;
+    let sens = sensitivity::compute(&mut ctx.pipeline, MetricKind::Qe, METRIC_TRIALS, 0)?;
+    let cell = run_cell(&mut ctx, SearchAlgo::Greedy, &sens, 0, 0.99)?;
+    println!(
+        "serving config: accuracy {:.2}%, size {:.1}%, modeled latency {:.1}%",
+        cell.accuracy * 100.0,
+        cell.rel_size_pct,
+        cell.rel_latency_pct
+    );
+    let examples: Vec<_> = (0..192)
+        .map(|i| ctx.pipeline.artifacts.val.x.slice_rows(i % ctx.pipeline.artifacts.val.count, 1))
+        .collect();
+    drop(ctx); // release the search pipeline before the server builds its own
+
+    // 2. Spawn the server on its own executor thread.
+    let scales_path = dir.join(format!("{model}_scales.json"));
+    let (handle, _join) = spawn(
+        dir.clone(),
+        model.to_string(),
+        cell.config.clone(),
+        ServeOptions::default(),
+        move |p| {
+            p.scales = Scales::load(&scales_path)?;
+            p.sync_scales()?;
+            Ok(())
+        },
+    )?;
+
+    // 3. Drive it with 8 concurrent clients.
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..8usize {
+            let handle = handle.clone();
+            let examples = &examples;
+            s.spawn(move || {
+                for (i, ex) in examples.iter().enumerate() {
+                    if i % 8 == c {
+                        let out = handle.infer(ex.clone()).expect("inference failed");
+                        assert!(!out.is_empty());
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = handle.stats();
+    println!(
+        "served {} requests in {wall:.2}s ({:.0} req/s), mean batch fill {:.1}",
+        stats.requests,
+        stats.requests as f64 / wall,
+        stats.mean_batch_fill()
+    );
+    println!(
+        "request latency: mean {:.1} ms, p50 {:.1} ms, p99 {:.1} ms",
+        stats.mean_us() / 1e3,
+        stats.percentile_us(0.5) as f64 / 1e3,
+        stats.percentile_us(0.99) as f64 / 1e3
+    );
+    Ok(())
+}

@@ -1,0 +1,332 @@
+"""AOT exporter: lower the L2 graphs to HLO text + manifests for Rust.
+
+This is the single build-path entry point (``make artifacts``).  It
+
+1. generates the synthetic datasets (``data.py``),
+2. pretrains the float models (``train.py``),
+3. lowers five graphs per model to **HLO text** (the interchange format —
+   jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids that the
+   xla_extension 0.5.1 behind the Rust ``xla`` crate rejects; the text
+   parser reassigns ids and round-trips cleanly),
+4. writes a JSON manifest describing the argument layout, layer metadata
+   (kinds/MACs/GEMM dims for the latency model), parameter table, dataset
+   binaries and float baselines.
+
+Graphs (argument order is the manifest's contract with Rust):
+
+  eval       (params…, aw[L], gw[L], aa[L], ga[L], bw[L], ba[L], x, y)
+             -> (loss, correct)                      [Pallas kernel path]
+  logits     (params…, scales…, bits…, x) -> predictions          [kernel]
+  actstats   (params…, x) -> maxabs[L]      float activation calibration
+  scale_grad (params…, scales…, bits…, x, y)
+             -> (loss, d_aw, d_gw, d_aa, d_ga)       [diff path, STE round]
+  hvp        (params…, x, y, probes…) -> v^T H v per quantizable layer
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--quick]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, train
+from .models import bert_s, common, resnet_s
+
+MANIFEST_VERSION = 4
+
+# Serving-path batch sizes: the logits graph is exported once per size so
+# the Rust server can pick the smallest compiled batch covering its queue
+# instead of padding every request bundle to the evaluation batch (§Perf).
+LOGITS_BATCHES = (1, 8, 32)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelRecipe:
+    """Everything the exporter needs to know about one model family."""
+
+    name: str
+    module: object
+    task: str
+    train_fn: object
+    eval_batch: int
+    calib_batch: int
+    train_n: int
+    calib_n: int
+    val_n: int
+    x_dtype: str  # "f32" | "i32"
+
+
+def _recipes(quick: bool) -> list[ModelRecipe]:
+    if quick:
+        return [
+            ModelRecipe("resnet_s", resnet_s, "vision",
+                        lambda s: train.train_resnet(s, steps=120, batch=64, log_every=40),
+                        eval_batch=64, calib_batch=32, train_n=1024, calib_n=128, val_n=128,
+                        x_dtype="f32"),
+            ModelRecipe("bert_s", bert_s, "span",
+                        lambda s: train.train_bert(s, steps=300, batch=48, log_every=100),
+                        eval_batch=64, calib_batch=32, train_n=1024, calib_n=128, val_n=128,
+                        x_dtype="i32"),
+        ]
+    return [
+        ModelRecipe("resnet_s", resnet_s, "vision",
+                    lambda s: train.train_resnet(s, steps=1500, batch=64, log_every=250),
+                    eval_batch=256, calib_batch=128, train_n=1, calib_n=512, val_n=512,
+                    x_dtype="f32"),
+        ModelRecipe("bert_s", bert_s, "span",
+                    lambda s: train.train_bert(s, steps=2500, batch=48, log_every=500),
+                    eval_batch=128, calib_batch=64, train_n=1, calib_n=512, val_n=512,
+                    x_dtype="i32"),
+    ]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _specs_for(params: dict[str, np.ndarray], order: list[str]):
+    return [jax.ShapeDtypeStruct(params[n].shape, jnp.float32) for n in order]
+
+
+def _scale_specs(num_layers: int):
+    vec = jax.ShapeDtypeStruct((num_layers,), jnp.float32)
+    return [vec] * 6  # aw, gw, aa, ga, bits_w, bits_a
+
+
+def _x_spec(recipe: ModelRecipe, batch: int):
+    if recipe.task == "vision":
+        return jax.ShapeDtypeStruct((batch, data.IMG_SIZE, data.IMG_SIZE, data.IMG_CHANNELS), jnp.float32)
+    return jax.ShapeDtypeStruct((batch, data.SEQ_LEN), jnp.int32)
+
+
+def _y_spec(recipe: ModelRecipe, batch: int):
+    if recipe.task == "vision":
+        return jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return jax.ShapeDtypeStruct((batch, 2), jnp.int32)
+
+
+def build_graphs(recipe: ModelRecipe, params: dict[str, np.ndarray]):
+    """Return {graph name: (callable, arg specs)} for lowering."""
+    mod = recipe.module
+    order = mod.param_order()
+    nq = mod.NUM_QUANT_LAYERS
+    qnames = [s.param for s in mod.layer_specs() if s.quantizable]
+    pspecs = _specs_for(params, order)
+
+    def unpack(args):
+        return dict(zip(order, args[: len(order)])), args[len(order):]
+
+    def eval_fn(*args):
+        p, rest = unpack(args)
+        aw, gw, aa, ga, bw, ba, x, y = rest
+        ctx = common.QuantCtx(aw, gw, aa, ga, bw, ba, path="kernel")
+        loss, correct = mod.loss_and_correct(p, x, y, ctx)
+        return loss, correct
+
+    def logits_fn(*args):
+        p, rest = unpack(args)
+        aw, gw, aa, ga, bw, ba, x = rest
+        ctx = common.QuantCtx(aw, gw, aa, ga, bw, ba, path="kernel")
+        out = mod.apply(p, x, ctx) if recipe.task == "span" else mod.apply(p, x, ctx)[0]
+        if recipe.task == "span":
+            out = jnp.stack(out, axis=-1)  # (B, S, 2)
+        return (out,)
+
+    def actstats_fn(*args):
+        p, rest = unpack(args)
+        (x,) = rest
+        ctx = common.float_ctx(nq, path="diff")
+        ctx.act_maxabs = {}
+        if recipe.task == "span":
+            mod.apply(p, x, ctx)
+        else:
+            mod.apply(p, x, ctx)
+        stats = [ctx.act_maxabs.get(i, jnp.float32(1.0)) for i in range(nq)]
+        return (jnp.stack(stats),)
+
+    def scale_grad_fn(*args):
+        p, rest = unpack(args)
+        aw, gw, aa, ga, bw, ba, x, y = rest
+
+        def loss_of(aw_, gw_, aa_, ga_):
+            ctx = common.QuantCtx(aw_, gw_, aa_, ga_, bw, ba, path="diff")
+            return mod.loss_and_correct(p, x, y, ctx)[0]
+
+        loss, grads = jax.value_and_grad(loss_of, argnums=(0, 1, 2, 3))(aw, gw, aa, ga)
+        return (loss, *grads)
+
+    def hvp_fn(*args):
+        p, rest = unpack(args)
+        x, y = rest[0], rest[1]
+        probes = list(rest[2:])
+
+        def loss_of(qvals):
+            p2 = {**p, **dict(zip(qnames, qvals))}
+            ctx = common.float_ctx(nq, path="diff")
+            return mod.loss_and_correct(p2, x, y, ctx)[0]
+
+        qvals = [p[n] for n in qnames]
+        _, hv = jax.jvp(jax.grad(loss_of), (qvals,), (probes,))
+        vhv = [jnp.vdot(h, v) for h, v in zip(hv, probes)]
+        return (jnp.stack(vhv),)
+
+    eb, cb = recipe.eval_batch, recipe.calib_batch
+    probes = [jax.ShapeDtypeStruct(params[n].shape, jnp.float32) for n in qnames]
+    graphs = {
+        "eval": (eval_fn, pspecs + _scale_specs(nq) + [_x_spec(recipe, eb), _y_spec(recipe, eb)]),
+        "logits": (logits_fn, pspecs + _scale_specs(nq) + [_x_spec(recipe, eb)]),
+        "actstats": (actstats_fn, pspecs + [_x_spec(recipe, cb)]),
+        "scale_grad": (scale_grad_fn, pspecs + _scale_specs(nq) + [_x_spec(recipe, cb), _y_spec(recipe, cb)]),
+        "hvp": (hvp_fn, pspecs + [_x_spec(recipe, cb), _y_spec(recipe, cb)] + probes),
+    }
+    for b in LOGITS_BATCHES:
+        if b < eb:
+            graphs[f"logits_b{b}"] = (
+                logits_fn, pspecs + _scale_specs(nq) + [_x_spec(recipe, b)])
+    return graphs
+
+
+def _load_cached_params(recipe: ModelRecipe, out_dir: str):
+    """Reuse a previously trained checkpoint if its blob matches the model."""
+    path = os.path.join(out_dir, f"{recipe.name}_params.bin")
+    if not os.path.exists(path):
+        return None
+    ref = recipe.module.init_params(0)
+    order = recipe.module.param_order()
+    blob = np.fromfile(path, dtype="<f4")
+    total = sum(int(np.prod(ref[n].shape)) for n in order)
+    if blob.size != total:
+        return None
+    params, off = {}, 0
+    for n in order:
+        numel = int(np.prod(ref[n].shape))
+        params[n] = blob[off:off + numel].reshape(ref[n].shape).copy()
+        off += numel
+    print(f"[{recipe.name}] reusing cached checkpoint {path}")
+    return params
+
+
+def export_model(recipe: ModelRecipe, out_dir: str, retrain: bool = False) -> dict:
+    """Train + lower + serialize one model. Returns its manifest dict."""
+    mod = recipe.module
+    t0 = time.time()
+    print(f"=== {recipe.name}: generating data ===")
+    splits = data.make_splits(recipe.task, recipe.train_n, recipe.calib_n,
+                              recipe.calib_n, recipe.val_n)
+    params = None if retrain else _load_cached_params(recipe, out_dir)
+    if params is None:
+        print(f"=== {recipe.name}: training float baseline ===")
+        params = recipe.train_fn(splits)
+    val_loss, val_acc = train.evaluate(recipe.name, params, splits["val"], recipe.eval_batch)
+    print(f"[{recipe.name}] float val loss={val_loss:.4f} acc={val_acc:.4f}")
+
+    order = mod.param_order()
+    # Flat little-endian f32 parameter blob, manifest order.
+    offsets, off = {}, 0
+    blob = []
+    for n in order:
+        arr = np.ascontiguousarray(params[n], dtype=np.float32)
+        offsets[n] = off
+        off += arr.size
+        blob.append(arr.reshape(-1))
+    params_bin = f"{recipe.name}_params.bin"
+    np.concatenate(blob).astype("<f4").tofile(os.path.join(out_dir, params_bin))
+
+    graphs = {}
+    for gname, (fn, specs) in build_graphs(recipe, params).items():
+        print(f"[{recipe.name}] lowering {gname} ({len(specs)} args)…")
+        # keep_unused=True: the Rust side passes every argument positionally;
+        # jax must not prune args that are dead in a particular graph (e.g.
+        # the classifier weights in `actstats`).
+        text = to_hlo_text(jax.jit(fn, keep_unused=True).lower(*specs))
+        fname = f"{recipe.name}_{gname}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        graphs[gname] = fname
+
+    data_meta = {}
+    for split in ("calib_sens", "calib_adj", "val"):
+        xp = f"{recipe.name}_{split}_x.bin"
+        yp = f"{recipe.name}_{split}_y.bin"
+        meta = data.save_split(splits[split], os.path.join(out_dir, xp), os.path.join(out_dir, yp))
+        data_meta[split] = {**meta, "x_file": xp, "y_file": yp}
+
+    qindex = {}
+    qi = 0
+    layers = []
+    for s in mod.layer_specs():
+        entry = dataclasses.asdict(s)
+        if s.quantizable:
+            entry["quant_index"] = qi
+            qindex[s.name] = qi
+            qi += 1
+        else:
+            entry["quant_index"] = -1
+        layers.append(entry)
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "model": recipe.name,
+        "task": recipe.task,
+        "num_quant_layers": mod.NUM_QUANT_LAYERS,
+        "eval_batch": recipe.eval_batch,
+        "calib_batch": recipe.calib_batch,
+        "x_dtype": recipe.x_dtype,
+        "x_shape": list(_x_spec(recipe, 1).shape[1:]),
+        "y_shape": list(_y_spec(recipe, 1).shape[1:]),
+        "params_bin": params_bin,
+        "params": [
+            {"name": n, "shape": list(params[n].shape),
+             "numel": int(np.prod(params[n].shape)), "offset": offsets[n]}
+            for n in order
+        ],
+        "layers": layers,
+        "graphs": graphs,
+        "data": data_meta,
+        "float_val_loss": val_loss,
+        "float_val_acc": val_acc,
+        "export_seconds": round(time.time() - t0, 1),
+    }
+    with open(os.path.join(out_dir, f"{recipe.name}_manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[{recipe.name}] exported in {time.time()-t0:.0f}s")
+    return manifest
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--models", default="resnet_s,bert_s")
+    parser.add_argument("--quick", action="store_true",
+                        help="tiny datasets + short training, for CI smoke runs")
+    parser.add_argument("--retrain", action="store_true",
+                        help="ignore cached checkpoints and retrain")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    wanted = set(args.models.split(","))
+    index = []
+    for recipe in _recipes(args.quick):
+        if recipe.name in wanted:
+            m = export_model(recipe, args.out_dir, retrain=args.retrain)
+            index.append({"model": m["model"], "manifest": f"{m['model']}_manifest.json"})
+    with open(os.path.join(args.out_dir, "index.json"), "w") as f:
+        json.dump({"version": MANIFEST_VERSION, "models": index}, f, indent=1)
+    print("AOT export complete.")
+
+
+if __name__ == "__main__":
+    main()

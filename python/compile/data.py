@@ -1,0 +1,127 @@
+"""Synthetic datasets standing in for ImageNet and SQuAD.
+
+The paper evaluates on ImageNet/ResNet50 and SQuAD/BERT.  Neither dataset
+(nor pretrained checkpoints) is available in this environment, so we build
+deterministic synthetic tasks that preserve the properties the search
+pipeline actually depends on (see DESIGN.md §2):
+
+* a trained float model with a real accuracy signal on a held-out set,
+* per-layer sensitivity that differs across layers,
+* an accuracy cliff under aggressive (4-bit) uniform quantization.
+
+``SynthVision`` is a 10-class 32x32x3 image task: each class has a fixed
+random prototype; samples are contrast/brightness-jittered, circularly
+shifted, noisy renderings of the prototype.  ``SynthSpan`` is an extractive
+span task over a 64-token vocabulary: a MARK token opens the answer span and
+a length token at position 1 encodes its width; the model predicts
+(start, end) positions, scored by exact match, mirroring SQuAD metrics.
+
+Everything is seeded and versioned: the same seed always regenerates
+bit-identical datasets, which the Rust side relies on for reproducibility.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+DATA_VERSION = 3
+
+# SynthVision geometry.
+IMG_SIZE = 32
+IMG_CHANNELS = 3
+NUM_CLASSES = 10
+
+# SynthSpan geometry.
+VOCAB = 64
+SEQ_LEN = 32
+MARK_TOKEN = 1  # opens the answer span
+LEN_TOKEN_BASE = 2  # tokens 2..2+MAX_SPAN-1 encode span length
+MAX_SPAN = 4
+PAD_TOKEN = 0
+BODY_TOKEN_MIN = 8  # ordinary "text" tokens live in [8, VOCAB)
+
+
+@dataclasses.dataclass(frozen=True)
+class Split:
+    """One dataset split as dense numpy arrays."""
+
+    x: np.ndarray  # f32 images or i32 token ids
+    y: np.ndarray  # i32 labels: (N,) classes or (N, 2) span start/end
+
+
+def _vision_prototypes(rng: np.random.Generator) -> np.ndarray:
+    """Fixed per-class spatial patterns with low-frequency structure."""
+    protos = rng.normal(0.0, 1.0, size=(NUM_CLASSES, IMG_SIZE, IMG_SIZE, IMG_CHANNELS))
+    # Smooth each prototype so classes differ in coarse structure, not
+    # per-pixel noise; quantization then perturbs genuinely useful signal.
+    for _ in range(2):
+        protos = 0.5 * protos + 0.125 * (
+            np.roll(protos, 1, axis=1)
+            + np.roll(protos, -1, axis=1)
+            + np.roll(protos, 1, axis=2)
+            + np.roll(protos, -1, axis=2)
+        )
+    protos /= np.abs(protos).max(axis=(1, 2, 3), keepdims=True)
+    return protos.astype(np.float32)
+
+
+def synth_vision(n: int, seed: int) -> Split:
+    """Sample ``n`` SynthVision examples. Class-balanced in expectation."""
+    rng = np.random.default_rng(np.random.SeedSequence([DATA_VERSION, 11, seed]))
+    protos = _vision_prototypes(np.random.default_rng(np.random.SeedSequence([DATA_VERSION, 7])))
+    labels = rng.integers(0, NUM_CLASSES, size=n)
+    contrast = rng.uniform(0.6, 1.4, size=(n, 1, 1, 1)).astype(np.float32)
+    brightness = rng.uniform(-0.3, 0.3, size=(n, 1, 1, 1)).astype(np.float32)
+    noise = rng.normal(0.0, 0.55, size=(n, IMG_SIZE, IMG_SIZE, IMG_CHANNELS)).astype(np.float32)
+    x = protos[labels] * contrast + brightness + noise
+    # Random circular shifts decouple class identity from absolute position.
+    shifts = rng.integers(-4, 5, size=(n, 2))
+    for i in range(n):
+        x[i] = np.roll(x[i], (shifts[i, 0], shifts[i, 1]), axis=(0, 1))
+    return Split(x=x.astype(np.float32), y=labels.astype(np.int32))
+
+
+def synth_span(n: int, seed: int) -> Split:
+    """Sample ``n`` SynthSpan sequences with their (start, end) answers."""
+    rng = np.random.default_rng(np.random.SeedSequence([DATA_VERSION, 13, seed]))
+    x = rng.integers(BODY_TOKEN_MIN, VOCAB, size=(n, SEQ_LEN)).astype(np.int32)
+    span_len = rng.integers(1, MAX_SPAN + 1, size=n)
+    # Start position leaves room for the span; position 0/1 hold the "question".
+    start = rng.integers(3, SEQ_LEN - MAX_SPAN - 1, size=n)
+    end = start + span_len - 1
+    x[:, 0] = PAD_TOKEN
+    x[:, 1] = LEN_TOKEN_BASE + (span_len - 1)
+    x[np.arange(n), start - 1] = MARK_TOKEN  # MARK immediately precedes span
+    y = np.stack([start, end], axis=1).astype(np.int32)
+    return Split(x=x, y=y)
+
+
+def make_splits(task: str, train: int, calib_sens: int, calib_adj: int, val: int):
+    """Generate the four disjoint splits used by the pipeline.
+
+    ``calib_sens`` feeds the sensitivity metrics, ``calib_adj`` feeds scale
+    calibration + adjustment (the paper resamples 512 examples for each), and
+    ``val`` is the held-out set the configuration search scores against.
+    """
+    gen = {"vision": synth_vision, "span": synth_span}[task]
+    return {
+        "train": gen(train, seed=101),
+        "calib_sens": gen(calib_sens, seed=202),
+        "calib_adj": gen(calib_adj, seed=303),
+        "val": gen(val, seed=404),
+    }
+
+
+def save_split(split: Split, x_path: str, y_path: str) -> dict:
+    """Write a split as raw little-endian binaries consumed by the Rust side."""
+    split.x.astype(split.x.dtype.newbyteorder("<")).tofile(x_path)
+    split.y.astype(split.y.dtype.newbyteorder("<")).tofile(y_path)
+    return {
+        "count": int(split.x.shape[0]),
+        "x_shape": list(split.x.shape),
+        "x_dtype": str(split.x.dtype),
+        "y_shape": list(split.y.shape),
+        "y_dtype": str(split.y.dtype),
+    }

@@ -1,0 +1,80 @@
+"""Pallas fake-quantization kernel (Eq. 1, dual-scale clip/round).
+
+This is the elementwise hot-spot of the PTQ pipeline: it runs on every
+weight tensor and every quantized activation in the serving forward path.
+
+TPU mapping (DESIGN.md §3): the tensor is streamed HBM->VMEM in 1-D blocks
+sized to fit VMEM alongside double-buffering; the quantization parameters
+ride along as a tiny replicated block. ``interpret=True`` is mandatory on
+this CPU PJRT setup — real TPU lowering emits a Mosaic custom-call.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 64 KiB of f32 per block: small enough to double-buffer in 16 MiB VMEM with
+# plenty of headroom, large enough to amortize grid-step overhead.
+DEFAULT_BLOCK = 16384
+
+_FLOAT_BITS_THRESHOLD = 15.5
+
+
+def _fake_quant_kernel(qp_ref, x_ref, o_ref):
+    """One block: o = Q(x) with (alpha, gamma, bits) = qp."""
+    alpha = qp_ref[0]
+    gamma = qp_ref[1]
+    bits = qp_ref[2]
+    x = x_ref[...]
+    # exp2 keeps the step computation cheap and exact for integer bit widths.
+    step = jnp.exp2(bits - 1.0)
+    clipped = jnp.minimum(jnp.maximum(x * alpha, -1.0), 1.0)
+    q = jnp.round(clipped * step) * (gamma / step)
+    # Select (not where-on-scalar) so both paths stay vectorized in-kernel.
+    o_ref[...] = jax.lax.select(
+        jnp.full(x.shape, bits >= _FLOAT_BITS_THRESHOLD), x, q
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def fake_quant(x, alpha, gamma, bits, *, block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """Quantize-dequantize ``x`` with per-tensor scales.
+
+    Args:
+      x: any-shape f32 tensor.
+      alpha, gamma, bits: scalar (traced) f32 quantization parameters.
+      block: 1-D VMEM block length; the flattened tensor is padded up to a
+        multiple of it.
+      interpret: must stay True on CPU PJRT (see module docstring).
+
+    Returns:
+      ``Q(x)`` with the same shape as ``x``.
+    """
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    blk = min(block, max(n, 1))
+    pad = (-n) % blk
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    qp = jnp.stack([
+        jnp.asarray(alpha, jnp.float32),
+        jnp.asarray(gamma, jnp.float32),
+        jnp.asarray(bits, jnp.float32),
+    ])
+    out = pl.pallas_call(
+        _fake_quant_kernel,
+        grid=((n + pad) // blk,),
+        in_specs=[
+            pl.BlockSpec((3,), lambda i: (0,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, jnp.float32),
+        interpret=interpret,
+    )(qp, flat)
+    return out[:n].reshape(shape)

@@ -1,0 +1,83 @@
+"""Pallas reduction kernel for the quantization-error sensitivity metric.
+
+Computes, in one pass over a tensor, the two statistics Eq. 2 needs:
+``sum((Q(x) - x)^2)`` and ``max|x|``.  The grid walks 1-D blocks and
+accumulates into a single tiny output block (sequential grid semantics on
+TPU make the revisited-output accumulation well-defined; interpret mode
+executes the grid sequentially too).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fake_quant import DEFAULT_BLOCK
+
+_FLOAT_BITS_THRESHOLD = 15.5
+
+
+def _qe_stats_kernel(qp_ref, x_ref, mask_ref, o_ref):
+    """Accumulate (sse, maxabs) for one block; block 0 initializes."""
+    alpha = qp_ref[0]
+    gamma = qp_ref[1]
+    bits = qp_ref[2]
+    x = x_ref[...]
+    mask = mask_ref[...]
+    step = jnp.exp2(bits - 1.0)
+    q = jnp.round(jnp.minimum(jnp.maximum(x * alpha, -1.0), 1.0) * step) * (gamma / step)
+    q = jax.lax.select(jnp.full(x.shape, bits >= _FLOAT_BITS_THRESHOLD), x, q)
+    err = (q - x) * mask
+    sse = jnp.sum(err * err)
+    maxabs = jnp.max(jnp.abs(x) * mask)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[0] = sse
+        o_ref[1] = maxabs
+
+    @pl.when(pl.program_id(0) != 0)
+    def _acc():
+        o_ref[0] = o_ref[0] + sse
+        o_ref[1] = jnp.maximum(o_ref[1], maxabs)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def qe_stats(x, alpha, gamma, bits, *, block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """Return ``(sum squared quantization error, max |x|)`` for tensor ``x``."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    blk = min(block, max(n, 1))
+    pad = (-n) % blk
+    mask = jnp.ones((n,), jnp.float32)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+        mask = jnp.pad(mask, (0, pad))
+    qp = jnp.stack([
+        jnp.asarray(alpha, jnp.float32),
+        jnp.asarray(gamma, jnp.float32),
+        jnp.asarray(bits, jnp.float32),
+    ])
+    out = pl.pallas_call(
+        _qe_stats_kernel,
+        grid=((n + pad) // blk,),
+        in_specs=[
+            pl.BlockSpec((3,), lambda i: (0,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((2,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((2,), jnp.float32),
+        interpret=interpret,
+    )(qp, flat, mask)
+    return out[0], out[1]
+
+
+def eps_qe(x, bits, *, interpret: bool = True):
+    """Eq. 2 via the kernel: max-normalized RMSE under max calibration."""
+    maxabs = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    sse, _ = qe_stats(x, 1.0 / maxabs, maxabs, bits, interpret=interpret)
+    return jnp.sqrt(sse / x.size) / maxabs

@@ -1,0 +1,88 @@
+"""Fused quantize->matmul Pallas kernel.
+
+The serving-path GEMM: both operands are fake-quantized (Eq. 1) in the
+kernel prologue, then contracted with f32 accumulation — the TPU analog of
+the paper's CUTLASS int4/int8 tensor-core kernels with fused epilogues.
+
+TPU mapping (DESIGN.md §3): the grid tiles (M, N); each step streams an
+(bm, K) activation panel and a (K, bn) weight panel HBM->VMEM and feeds the
+MXU with the full-K contraction, so no accumulator scratch or K-revisiting
+is needed (K fits VMEM for the model family this repo targets; the block
+sizes are asserted against a VMEM budget). ``interpret=True`` is mandatory
+on CPU PJRT.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-aligned output tile.
+DEFAULT_BM = 256
+DEFAULT_BN = 128
+
+# f32 VMEM budget per grid step (x panel + w panel + out tile), in elements.
+# 16 MiB VMEM / 4 B, halved for double buffering.
+_VMEM_ELEMS = (16 * 1024 * 1024 // 4) // 2
+
+_FLOAT_BITS_THRESHOLD = 15.5
+
+
+def _qdq(x, alpha, gamma, bits):
+    step = jnp.exp2(bits - 1.0)
+    q = jnp.round(jnp.minimum(jnp.maximum(x * alpha, -1.0), 1.0) * step) * (gamma / step)
+    return jax.lax.select(jnp.full(x.shape, bits >= _FLOAT_BITS_THRESHOLD), x, q)
+
+
+def _quant_matmul_kernel(qp_ref, x_ref, w_ref, o_ref):
+    """One (bm, bn) output tile: o = Q(x_panel) @ Q(w_panel)."""
+    xq = _qdq(x_ref[...], qp_ref[0], qp_ref[1], qp_ref[2])
+    wq = _qdq(w_ref[...], qp_ref[3], qp_ref[4], qp_ref[5])
+    o_ref[...] = jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def quant_matmul(x, w, qx, qw, *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                 interpret: bool = True):
+    """Compute ``Q(x) @ Q(w)`` with per-tensor quantization parameters.
+
+    Args:
+      x: f32[M, K] activations.
+      w: f32[K, N] weights.
+      qx, qw: (alpha, gamma, bits) scalar triples for x and w.
+      bm, bn: output tile sizes; M and N are padded up to multiples.
+      interpret: must stay True on CPU PJRT.
+
+    Returns:
+      f32[M, N] product of the fake-quantized operands.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {w.shape}"
+    bm = min(bm, m)
+    bn = min(bn, n)
+    assert bm * k + k * bn + bm * bn <= _VMEM_ELEMS, (
+        f"tile ({bm},{k},{bn}) exceeds the VMEM budget; shrink bm/bn"
+    )
+    pm, pn = (-m) % bm, (-n) % bn
+    if pm:
+        x = jnp.pad(x, ((0, pm), (0, 0)))
+    if pn:
+        w = jnp.pad(w, ((0, 0), (0, pn)))
+    qp = jnp.stack([jnp.asarray(v, jnp.float32) for v in (*qx, *qw)])
+    out = pl.pallas_call(
+        _quant_matmul_kernel,
+        grid=((m + pm) // bm, (n + pn) // bn),
+        in_specs=[
+            pl.BlockSpec((6,), lambda i, j: (0,)),
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m + pm, n + pn), jnp.float32),
+        interpret=interpret,
+    )(qp, x, w)
+    return out[:m, :n]

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are deliberately written as straight transcriptions of the paper's
+equations, independent of the kernel implementations in this package, so that
+``pytest`` comparisons between kernel and oracle are meaningful.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Bit widths >= this value mean "leave the tensor in floating point".
+FLOAT_BITS_THRESHOLD = 15.5
+
+
+def qdq_ref(x, alpha, gamma, bits):
+    """Eq. 1 of the paper: dual-scale clip/round fake quantization.
+
+    ``Q(x) = round(clip(alpha * x, -1, 1) * 2^(b-1)) * 2^-(b-1) * gamma``
+
+    ``bits`` is a (traced) float; values >= 16 select the float passthrough,
+    which is what lets a single compiled graph serve every mixed-precision
+    configuration (DESIGN.md §4).
+    """
+    step = jnp.exp2(bits - 1.0)
+    q = jnp.round(jnp.clip(x * alpha, -1.0, 1.0) * step) / step * gamma
+    return jnp.where(bits >= FLOAT_BITS_THRESHOLD, x, q)
+
+
+def fake_quant_ref(x, alpha, gamma, bits):
+    """Oracle for ``kernels.fake_quant.fake_quant``."""
+    return qdq_ref(x, alpha, gamma, bits)
+
+
+def quant_matmul_ref(x, w, qx, qw):
+    """Oracle for the fused quantize->matmul kernel.
+
+    ``qx``/``qw`` are (alpha, gamma, bits) triples for activations / weights.
+    Accumulation is f32 over quantize-dequantized operands, matching
+    int-in/float-accumulate tensor-core (and MXU) semantics.
+    """
+    xq = qdq_ref(x, *qx)
+    wq = qdq_ref(w, *qw)
+    return jnp.matmul(xq, wq, preferred_element_type=jnp.float32)
+
+
+def qe_stats_ref(x, alpha, gamma, bits):
+    """Oracle for the QE-statistics kernel: (sum squared error, max |x|)."""
+    err = qdq_ref(x, alpha, gamma, bits) - x
+    return jnp.sum(err * err), jnp.max(jnp.abs(x))
+
+
+def eps_qe_ref(x, bits):
+    """Eq. 2: max-normalized RMSE of quantizing ``x`` with max calibration."""
+    maxabs = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    sse, _ = qe_stats_ref(x, 1.0 / maxabs, maxabs, bits)
+    return jnp.sqrt(sse / x.size) / maxabs

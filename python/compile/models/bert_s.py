@@ -1,0 +1,188 @@
+"""``bert_s``: a BERT-style encoder standing in for the paper's BERT-base.
+
+Four pre-LN transformer blocks (d_model=128, 4 heads, FFN 256) over
+32-token sequences from a 64-token vocabulary, plus a span-extraction head
+predicting answer (start, end) positions — the SQuAD-shaped objective the
+paper evaluates, scored by exact match.
+
+Quantizable tensors (26): the token embedding, per block Q/K/V/O and both
+FFN matrices (6 x 4 = 24), and the span head.  Every dense layer routes
+through the fused Pallas ``quant_matmul`` kernel on the serving path; the
+embedding quantizes its weight table via ``fake_quant``.  The attention
+score/context batched GEMMs are *not* quantized (the paper quantizes
+parameterized layers) but are modeled as fp16 kernels by the latency model
+via ``attn_gemm`` layer specs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..data import MAX_SPAN, SEQ_LEN, VOCAB
+from .common import QuantCtx, cross_entropy
+from .resnet_s import LayerSpec
+
+D_MODEL = 128
+N_HEADS = 4
+D_HEAD = D_MODEL // N_HEADS
+D_FFN = 256
+N_BLOCKS = 4
+LN_EPS = 1e-5
+
+NAME = "bert_s"
+
+_DENSE = ("q", "k", "v", "o", "ffn1", "ffn2")
+
+
+def param_order() -> list[str]:
+    names = ["tok_emb", "pos_emb"]
+    for i in range(N_BLOCKS):
+        p = f"blk{i}"
+        names += [f"{p}_ln1_scale", f"{p}_ln1_bias"]
+        names += [f"{p}_{d}_w" for d in ("q", "k", "v", "o")]
+        names += [f"{p}_{d}_b" for d in ("q", "k", "v", "o")]
+        names += [f"{p}_ln2_scale", f"{p}_ln2_bias"]
+        names += [f"{p}_ffn1_w", f"{p}_ffn1_b", f"{p}_ffn2_w", f"{p}_ffn2_b"]
+    names += ["final_ln_scale", "final_ln_bias", "span_w", "span_b"]
+    return names
+
+
+def layer_specs() -> list[LayerSpec]:
+    """Quantizable tensors in ``QuantCtx`` order + unquantized attn GEMMs."""
+    specs = [LayerSpec(
+        name="tok_emb", param="tok_emb", kind="embed", quantizable=True,
+        macs=0, weight_numel=VOCAB * D_MODEL, act_in_numel=SEQ_LEN,
+        out_numel=SEQ_LEN * D_MODEL, m=SEQ_LEN, n=D_MODEL, k=1,
+    )]
+    dims = {
+        "q": (D_MODEL, D_MODEL), "k": (D_MODEL, D_MODEL),
+        "v": (D_MODEL, D_MODEL), "o": (D_MODEL, D_MODEL),
+        "ffn1": (D_MODEL, D_FFN), "ffn2": (D_FFN, D_MODEL),
+    }
+    for i in range(N_BLOCKS):
+        for d in _DENSE:
+            din, dout = dims[d]
+            specs.append(LayerSpec(
+                name=f"blk{i}_{d}", param=f"blk{i}_{d}_w", kind="gemm",
+                quantizable=True, macs=SEQ_LEN * din * dout,
+                weight_numel=din * dout, act_in_numel=SEQ_LEN * din,
+                out_numel=SEQ_LEN * dout, m=SEQ_LEN, n=dout, k=din,
+            ))
+        # Unquantized attention score (QK^T) and context (AV) batched GEMMs:
+        # modeled for latency, invisible to the quantization search.
+        specs.append(LayerSpec(
+            name=f"blk{i}_attn_scores", param="", kind="attn_gemm",
+            quantizable=False, macs=N_HEADS * SEQ_LEN * SEQ_LEN * D_HEAD,
+            weight_numel=0, act_in_numel=2 * SEQ_LEN * D_MODEL,
+            out_numel=N_HEADS * SEQ_LEN * SEQ_LEN,
+            m=SEQ_LEN, n=SEQ_LEN, k=D_HEAD,
+        ))
+        specs.append(LayerSpec(
+            name=f"blk{i}_attn_ctx", param="", kind="attn_gemm",
+            quantizable=False, macs=N_HEADS * SEQ_LEN * SEQ_LEN * D_HEAD,
+            weight_numel=0,
+            act_in_numel=N_HEADS * SEQ_LEN * SEQ_LEN + SEQ_LEN * D_MODEL,
+            out_numel=SEQ_LEN * D_MODEL, m=SEQ_LEN, n=D_HEAD, k=SEQ_LEN,
+        ))
+    specs.append(LayerSpec(
+        name="span", param="span_w", kind="gemm", quantizable=True,
+        macs=SEQ_LEN * D_MODEL * 2, weight_numel=D_MODEL * 2,
+        act_in_numel=SEQ_LEN * D_MODEL, out_numel=SEQ_LEN * 2,
+        m=SEQ_LEN, n=2, k=D_MODEL,
+    ))
+    return specs
+
+
+NUM_QUANT_LAYERS = sum(1 for s in layer_specs() if s.quantizable)
+
+
+def init_params(seed: int = 0) -> dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    p: dict[str, np.ndarray] = {}
+
+    def dense(din, dout):
+        return rng.normal(0, np.sqrt(1.0 / din), (din, dout)).astype(np.float32)
+
+    p["tok_emb"] = rng.normal(0, 0.5, (VOCAB, D_MODEL)).astype(np.float32)
+    p["pos_emb"] = rng.normal(0, 0.1, (SEQ_LEN, D_MODEL)).astype(np.float32)
+    for i in range(N_BLOCKS):
+        pre = f"blk{i}"
+        p[f"{pre}_ln1_scale"] = np.ones((D_MODEL,), np.float32)
+        p[f"{pre}_ln1_bias"] = np.zeros((D_MODEL,), np.float32)
+        for d in ("q", "k", "v", "o"):
+            p[f"{pre}_{d}_w"] = dense(D_MODEL, D_MODEL)
+        for d in ("q", "k", "v", "o"):
+            p[f"{pre}_{d}_b"] = np.zeros((D_MODEL,), np.float32)
+        p[f"{pre}_ln2_scale"] = np.ones((D_MODEL,), np.float32)
+        p[f"{pre}_ln2_bias"] = np.zeros((D_MODEL,), np.float32)
+        p[f"{pre}_ffn1_w"] = dense(D_MODEL, D_FFN)
+        p[f"{pre}_ffn1_b"] = np.zeros((D_FFN,), np.float32)
+        p[f"{pre}_ffn2_w"] = dense(D_FFN, D_MODEL)
+        p[f"{pre}_ffn2_b"] = np.zeros((D_MODEL,), np.float32)
+    p["final_ln_scale"] = np.ones((D_MODEL,), np.float32)
+    p["final_ln_bias"] = np.zeros((D_MODEL,), np.float32)
+    p["span_w"] = dense(D_MODEL, 2)
+    p["span_b"] = np.zeros((2,), np.float32)
+    assert list(p) == param_order()
+    return p
+
+
+def _ln(x, scale, bias):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return scale * (x - mean) * jax.lax.rsqrt(var + LN_EPS) + bias
+
+
+def _dense(ctx: QuantCtx, x, w, b):
+    """Quantized dense over the flattened (batch*seq, din) view."""
+    bsz, seq, din = x.shape
+    out = ctx.matmul(x.reshape(bsz * seq, din), w)
+    return out.reshape(bsz, seq, -1) + b
+
+
+def apply(params, tokens, ctx: QuantCtx):
+    """Forward pass: token ids i32[B, S] -> (start_logits, end_logits)."""
+    emb_w = ctx.quant_w(params["tok_emb"])
+    ctx.advance()
+    h = emb_w[tokens] + params["pos_emb"][None, :, :]
+    bsz = tokens.shape[0]
+    for i in range(N_BLOCKS):
+        pre = f"blk{i}"
+        hn = _ln(h, params[f"{pre}_ln1_scale"], params[f"{pre}_ln1_bias"])
+        q = _dense(ctx, hn, params[f"{pre}_q_w"], params[f"{pre}_q_b"])
+        k = _dense(ctx, hn, params[f"{pre}_k_w"], params[f"{pre}_k_b"])
+        v = _dense(ctx, hn, params[f"{pre}_v_w"], params[f"{pre}_v_b"])
+
+        def split(t):
+            return t.reshape(bsz, SEQ_LEN, N_HEADS, D_HEAD).transpose(0, 2, 1, 3)
+
+        qh, kh, vh = split(q), split(k), split(v)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / np.sqrt(D_HEAD)
+        attn = jax.nn.softmax(scores, axis=-1)
+        ctxv = jnp.einsum("bhqk,bhkd->bhqd", attn, vh)
+        ctxv = ctxv.transpose(0, 2, 1, 3).reshape(bsz, SEQ_LEN, D_MODEL)
+        h = h + _dense(ctx, ctxv, params[f"{pre}_o_w"], params[f"{pre}_o_b"])
+
+        hn = _ln(h, params[f"{pre}_ln2_scale"], params[f"{pre}_ln2_bias"])
+        f = jax.nn.gelu(_dense(ctx, hn, params[f"{pre}_ffn1_w"], params[f"{pre}_ffn1_b"]))
+        h = h + _dense(ctx, f, params[f"{pre}_ffn2_w"], params[f"{pre}_ffn2_b"])
+    h = _ln(h, params["final_ln_scale"], params["final_ln_bias"])
+    span = _dense(ctx, h, params["span_w"], params["span_b"])
+    return span[:, :, 0], span[:, :, 1]
+
+
+def loss_and_correct(params, tokens, y, ctx: QuantCtx):
+    """Mean span CE and exact-match count (both endpoints correct)."""
+    start_logits, end_logits = apply(params, tokens, ctx)
+    loss = cross_entropy(start_logits, y[:, 0]) + cross_entropy(end_logits, y[:, 1])
+    em = jnp.logical_and(
+        jnp.argmax(start_logits, axis=-1) == y[:, 0],
+        jnp.argmax(end_logits, axis=-1) == y[:, 1],
+    )
+    return loss, jnp.sum(em.astype(jnp.float32))
+
+
+# Silence the unused-import linter: MAX_SPAN documents the task geometry.
+_ = MAX_SPAN

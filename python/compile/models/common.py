@@ -1,0 +1,132 @@
+"""Shared quantization plumbing for the L2 models.
+
+Two quantization paths exist on purpose (DESIGN.md §4):
+
+* ``path="kernel"`` — the serving path: Pallas kernels (``fake_quant``,
+  ``quant_matmul``) do the quantized math.  Used by the forward-only graphs
+  (``eval``, ``logits``, ``actstats``) that the Rust coordinator executes.
+* ``path="diff"`` — the calibration path: pure-jnp quantize-dequantize with a
+  straight-through estimator for ``round``, so that ``jax.grad`` w.r.t. the
+  quantization *scales* is well-defined.  Used by the ``scale_grad`` graph.
+
+Both paths compute identical forward values (verified in pytest), so the
+scales adjusted on the diff path are valid for the kernel path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.fake_quant import fake_quant
+from ..kernels.quant_matmul import quant_matmul
+from ..kernels.ref import FLOAT_BITS_THRESHOLD
+
+
+@jax.custom_vjp
+def ste_round(x):
+    """``round`` with a straight-through (identity) gradient."""
+    return jnp.round(x)
+
+
+def _ste_round_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_round_bwd(_, g):
+    return (g,)
+
+
+ste_round.defvjp(_ste_round_fwd, _ste_round_bwd)
+
+
+def qdq_diff(x, alpha, gamma, bits):
+    """Differentiable Eq. 1 (STE round); grads flow to alpha and gamma."""
+    step = jnp.exp2(bits - 1.0)
+    q = ste_round(jnp.clip(x * alpha, -1.0, 1.0) * step) / step * gamma
+    return jnp.where(bits >= FLOAT_BITS_THRESHOLD, x, q)
+
+
+@dataclasses.dataclass
+class QuantCtx:
+    """Walks the model's quantizable tensors in registration order.
+
+    The layer index ``i`` advances once per quantizable op; the ordering must
+    match the manifest's ``layers`` list exactly — the Rust coordinator
+    addresses scales and bit widths positionally.
+
+    ``alpha_w/gamma_w`` scale weights, ``alpha_a/gamma_a`` scale the op's
+    input activation; ``bits_w``/``bits_a`` are the per-layer bit widths
+    (f32[L] graph inputs — one compiled graph serves every configuration).
+    """
+
+    alpha_w: jnp.ndarray
+    gamma_w: jnp.ndarray
+    alpha_a: jnp.ndarray
+    gamma_a: jnp.ndarray
+    bits_w: jnp.ndarray
+    bits_a: jnp.ndarray
+    path: str = "kernel"
+    i: int = 0
+    # When set, records max|activation| keyed by layer index (actstats graph).
+    # Layers whose input is not a float activation (e.g. embedding lookups)
+    # leave no entry; the AOT exporter fills those with 1.0.
+    act_maxabs: dict | None = None
+
+    # Interpret-mode grid steps cost ~ms each (python-driven), so the AOT
+    # graphs use one whole-tensor block per fake_quant call and full-M/N
+    # tiles per matmul (grid == 1).  Real-TPU deployments would shrink these
+    # to the VMEM-budgeted defaults in the kernel modules; see DESIGN.md §8.
+    _FQ_BLOCK = 1 << 23
+
+    def _q(self, x, alpha, gamma, bits):
+        if self.path == "diff":
+            return qdq_diff(x, alpha, gamma, bits)
+        return fake_quant(x, alpha, gamma, bits, block=self._FQ_BLOCK)
+
+    def quant_w(self, w):
+        i = self.i
+        return self._q(w, self.alpha_w[i], self.gamma_w[i], self.bits_w[i])
+
+    def quant_a(self, x):
+        i = self.i
+        if self.act_maxabs is not None:
+            self.act_maxabs[i] = jnp.max(jnp.abs(x))
+        return self._q(x, self.alpha_a[i], self.gamma_a[i], self.bits_a[i])
+
+    def matmul(self, x, w):
+        """Quantized GEMM for the current layer; advances the layer index."""
+        i = self.i
+        if self.act_maxabs is not None:
+            self.act_maxabs[i] = jnp.max(jnp.abs(x))
+        if self.path == "kernel":
+            out = quant_matmul(
+                x, w,
+                (self.alpha_a[i], self.gamma_a[i], self.bits_a[i]),
+                (self.alpha_w[i], self.gamma_w[i], self.bits_w[i]),
+                bm=x.shape[0], bn=w.shape[1],
+            )
+        else:
+            xq = qdq_diff(x, self.alpha_a[i], self.gamma_a[i], self.bits_a[i])
+            wq = qdq_diff(w, self.alpha_w[i], self.gamma_w[i], self.bits_w[i])
+            out = jnp.matmul(xq, wq, preferred_element_type=jnp.float32)
+        self.i += 1
+        return out
+
+    def advance(self):
+        self.i += 1
+
+
+def float_ctx(num_layers: int, path: str = "kernel") -> QuantCtx:
+    """A context that leaves every tensor in floating point (bits=16)."""
+    ones = jnp.ones((num_layers,), jnp.float32)
+    b16 = jnp.full((num_layers,), 16.0, jnp.float32)
+    return QuantCtx(ones, ones, ones, ones, b16, b16, path=path)
+
+
+def cross_entropy(logits, labels):
+    """Mean softmax cross-entropy over integer labels."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))

@@ -1,0 +1,193 @@
+"""``resnet_s``: a ResNet-style CNN standing in for the paper's ResNet50.
+
+Three stages of two basic blocks (16/32/64 channels) over 32x32x3 inputs,
+batch-norm after every conv, identity/projection shortcuts, global average
+pooling and a linear classifier — 16 quantizable tensors (15 convs + 1 FC),
+~0.27M parameters.  Enough depth that per-layer sensitivity genuinely varies
+(the property the paper's search exploits), small enough to evaluate
+thousands of configurations on CPU PJRT.
+
+Every conv quantizes its weight tensor and its input activation through the
+``QuantCtx`` (Pallas ``fake_quant`` on the serving path); the FC layer goes
+through the fused ``quant_matmul`` kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..data import IMG_CHANNELS, IMG_SIZE, NUM_CLASSES
+from .common import QuantCtx, cross_entropy
+
+STAGE_CHANNELS = (8, 16, 32)
+BLOCKS_PER_STAGE = 2
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.9
+
+NAME = "resnet_s"
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """Metadata for one compute layer, consumed by the Rust cost models."""
+
+    name: str
+    param: str  # weight tensor's parameter name ("" if not quantizable)
+    kind: str  # conv2d | gemm | attn_gemm | embed
+    quantizable: bool
+    macs: int  # multiply-accumulates at batch 1
+    weight_numel: int
+    act_in_numel: int  # input activation elements at batch 1
+    out_numel: int
+    m: int  # GEMM-equivalent dims (conv via implicit GEMM)
+    n: int
+    k: int
+
+
+def _conv_names(prefix):
+    return f"{prefix}_w", f"{prefix}_bn_scale", f"{prefix}_bn_bias", f"{prefix}_bn_mean", f"{prefix}_bn_var"
+
+
+def _stage_plan():
+    """Yield (conv name, cin, cout, stride, spatial-in) for every conv, in ctx order."""
+    plan = []
+    size = IMG_SIZE
+    plan.append(("conv_init", IMG_CHANNELS, STAGE_CHANNELS[0], 1, size))
+    cin = STAGE_CHANNELS[0]
+    for s, cout in enumerate(STAGE_CHANNELS):
+        for b in range(BLOCKS_PER_STAGE):
+            stride = 2 if (s > 0 and b == 0) else 1
+            pre = f"s{s}b{b}"
+            plan.append((f"{pre}_conv1", cin, cout, stride, size))
+            if stride != 1 or cin != cout:
+                plan.append((f"{pre}_proj", cin, cout, stride, size))
+            if stride == 2:
+                size //= 2
+            plan.append((f"{pre}_conv2", cout, cout, 1, size))
+            cin = cout
+    return plan
+
+
+def param_order() -> list[str]:
+    """Canonical parameter ordering (the AOT argument layout)."""
+    names: list[str] = []
+    for conv, _cin, _cout, _stride, _size in _stage_plan():
+        k = 1 if conv.endswith("_proj") else 3
+        del k
+        names.extend(_conv_names(conv))
+    names.extend(["fc_w", "fc_b"])
+    return names
+
+
+def layer_specs() -> list[LayerSpec]:
+    """Quantizable-tensor metadata in exact ``QuantCtx`` order."""
+    specs = []
+    for conv, cin, cout, stride, size in _stage_plan():
+        k = 1 if conv.endswith("_proj") else 3
+        out_size = size // stride
+        macs = out_size * out_size * k * k * cin * cout
+        specs.append(LayerSpec(
+            name=conv, param=f"{conv}_w", kind="conv2d", quantizable=True,
+            macs=macs, weight_numel=k * k * cin * cout,
+            act_in_numel=size * size * cin, out_numel=out_size * out_size * cout,
+            m=out_size * out_size, n=cout, k=k * k * cin,
+        ))
+    feat = STAGE_CHANNELS[-1]
+    specs.append(LayerSpec(
+        name="fc", param="fc_w", kind="gemm", quantizable=True,
+        macs=feat * NUM_CLASSES, weight_numel=feat * NUM_CLASSES,
+        act_in_numel=feat, out_numel=NUM_CLASSES,
+        m=1, n=NUM_CLASSES, k=feat,
+    ))
+    return specs
+
+
+NUM_QUANT_LAYERS = sum(1 for s in layer_specs() if s.quantizable)
+
+
+def init_params(seed: int = 0) -> dict[str, np.ndarray]:
+    """He-initialized parameters, keyed by ``param_order()`` names."""
+    rng = np.random.default_rng(seed)
+    params: dict[str, np.ndarray] = {}
+    for conv, cin, cout, _stride, _size in _stage_plan():
+        k = 1 if conv.endswith("_proj") else 3
+        fan_in = k * k * cin
+        params[f"{conv}_w"] = rng.normal(0, np.sqrt(2.0 / fan_in), (k, k, cin, cout)).astype(np.float32)
+        params[f"{conv}_bn_scale"] = np.ones((cout,), np.float32)
+        params[f"{conv}_bn_bias"] = np.zeros((cout,), np.float32)
+        params[f"{conv}_bn_mean"] = np.zeros((cout,), np.float32)
+        params[f"{conv}_bn_var"] = np.ones((cout,), np.float32)
+    feat = STAGE_CHANNELS[-1]
+    params["fc_w"] = rng.normal(0, np.sqrt(1.0 / feat), (feat, NUM_CLASSES)).astype(np.float32)
+    params["fc_b"] = np.zeros((NUM_CLASSES,), np.float32)
+    assert list(params) == param_order()
+    return params
+
+
+def _conv(x, w, stride):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _bn(params, prefix, x, train, stats_out):
+    scale = params[f"{prefix}_bn_scale"]
+    bias = params[f"{prefix}_bn_bias"]
+    if train:
+        mean = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        stats_out[f"{prefix}_bn_mean"] = (
+            BN_MOMENTUM * params[f"{prefix}_bn_mean"] + (1 - BN_MOMENTUM) * mean)
+        stats_out[f"{prefix}_bn_var"] = (
+            BN_MOMENTUM * params[f"{prefix}_bn_var"] + (1 - BN_MOMENTUM) * var)
+    else:
+        mean = params[f"{prefix}_bn_mean"]
+        var = params[f"{prefix}_bn_var"]
+    return scale * (x - mean) * jax.lax.rsqrt(var + BN_EPS) + bias
+
+
+def _qconv(params, prefix, x, stride, ctx, train, stats_out):
+    """Quantized conv + BN: quantize input activation and weight via ctx."""
+    xq = ctx.quant_a(x)
+    wq = ctx.quant_w(params[f"{prefix}_w"])
+    ctx.advance()
+    return _bn(params, prefix, _conv(xq, wq, stride), train, stats_out)
+
+
+def apply(params, x, ctx: QuantCtx, *, train: bool = False):
+    """Forward pass. Returns ``(logits, bn_stats_updates)``.
+
+    ``ctx`` must be constructed with ``NUM_QUANT_LAYERS`` entries; the conv
+    visit order here defines the layer indexing everywhere else.
+    """
+    stats: dict[str, jnp.ndarray] = {}
+    h = jax.nn.relu(_qconv(params, "conv_init", x, 1, ctx, train, stats))
+    cin = STAGE_CHANNELS[0]
+    for s, cout in enumerate(STAGE_CHANNELS):
+        for b in range(BLOCKS_PER_STAGE):
+            stride = 2 if (s > 0 and b == 0) else 1
+            pre = f"s{s}b{b}"
+            y = jax.nn.relu(_qconv(params, f"{pre}_conv1", h, stride, ctx, train, stats))
+            if stride != 1 or cin != cout:
+                shortcut = _qconv(params, f"{pre}_proj", h, stride, ctx, train, stats)
+            else:
+                shortcut = h
+            y = _qconv(params, f"{pre}_conv2", y, 1, ctx, train, stats)
+            h = jax.nn.relu(y + shortcut)
+            cin = cout
+    pooled = jnp.mean(h, axis=(1, 2))
+    logits = ctx.matmul(pooled, params["fc_w"]) + params["fc_b"]
+    return logits, stats
+
+
+def loss_and_correct(params, x, y, ctx: QuantCtx):
+    """Mean CE loss and number of correct top-1 predictions in the batch."""
+    logits, _ = apply(params, x, ctx)
+    loss = cross_entropy(logits, y)
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return loss, correct

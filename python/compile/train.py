@@ -1,0 +1,139 @@
+"""Build-time pretraining of the float models on the synthetic tasks.
+
+The paper starts from pretrained float checkpoints (ResNet50, BERT); this
+module produces their stand-ins.  It runs once inside ``make artifacts``
+(python is build-path only) and checkpoints to ``artifacts/``; nothing here
+is ever on the Rust request path.
+
+A tiny self-contained Adam implementation avoids an optax dependency.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .models import bert_s, common, resnet_s
+
+
+def adam_init(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, *, b1=0.9, b2=0.999, eps=1e-8, skip=()):
+    """One Adam step; parameter names in ``skip`` (e.g. BN stats) are untouched."""
+    t = state["t"] + 1
+    new_params, new_m, new_v = {}, {}, {}
+    for k, p in params.items():
+        if k in skip:
+            new_params[k], new_m[k], new_v[k] = p, state["m"][k], state["v"][k]
+            continue
+        g = grads[k]
+        m = b1 * state["m"][k] + (1 - b1) * g
+        v = b2 * state["v"][k] + (1 - b2) * g * g
+        mhat = m / (1 - b1 ** t.astype(jnp.float32))
+        vhat = v / (1 - b2 ** t.astype(jnp.float32))
+        new_params[k] = p - lr * mhat / (jnp.sqrt(vhat) + eps)
+        new_m[k], new_v[k] = m, v
+    return new_params, {"m": new_m, "v": new_v, "t": t}
+
+
+def _batches(task: str, batch: int, steps: int, seed: int):
+    """Fresh synthetic batches every step.
+
+    The generators are cheap, so training streams from the (infinite)
+    task distribution instead of a fixed split — memorization is impossible
+    and the float baseline genuinely generalizes to the held-out val split.
+    """
+    gen = {"vision": data.synth_vision, "span": data.synth_span}[task]
+    for i in range(steps):
+        split = gen(batch, seed=seed * 1_000_003 + i)
+        yield split.x, split.y
+
+
+def train_resnet(splits, *, steps: int = 1200, batch: int = 128, lr: float = 2e-3,
+                 log_every: int = 200) -> dict[str, np.ndarray]:
+    """Train ``resnet_s`` to a strong float baseline on SynthVision."""
+    params = {k: jnp.asarray(v) for k, v in resnet_s.init_params(0).items()}
+    bn_stats = tuple(k for k in params if k.endswith("_bn_mean") or k.endswith("_bn_var"))
+
+    def loss_fn(p, x, y):
+        ctx = common.float_ctx(resnet_s.NUM_QUANT_LAYERS, path="diff")
+        logits, stats = resnet_s.apply(p, x, ctx, train=True)
+        return common.cross_entropy(logits, y), stats
+
+    @jax.jit
+    def step(p, opt, x, y, lr_t):
+        (loss, stats), grads = jax.value_and_grad(loss_fn, has_aux=True)(p, x, y)
+        p, opt = adam_update(p, grads, opt, lr_t, skip=bn_stats)
+        p = {**p, **stats}  # fold in the running BN statistics
+        return p, opt, loss
+
+    opt = adam_init(params)
+    t0 = time.time()
+    for i, (x, y) in enumerate(_batches("vision", batch, steps, seed=17)):
+        lr_t = lr * min(1.0, (i + 1) / 100) * (0.5 ** (i // (steps // 2)))
+        params, opt, loss = step(params, opt, jnp.asarray(x), jnp.asarray(y), lr_t)
+        if (i + 1) % log_every == 0:
+            print(f"[resnet_s] step {i+1}/{steps} loss={float(loss):.4f} ({time.time()-t0:.0f}s)")
+    return {k: np.asarray(v) for k, v in params.items()}
+
+
+def train_bert(splits, *, steps: int = 1500, batch: int = 48, lr: float = 1e-3,
+               log_every: int = 250) -> dict[str, np.ndarray]:
+    """Train ``bert_s`` to a strong exact-match baseline on SynthSpan."""
+    params = {k: jnp.asarray(v) for k, v in bert_s.init_params(0).items()}
+
+    def loss_fn(p, x, y):
+        ctx = common.float_ctx(bert_s.NUM_QUANT_LAYERS, path="diff")
+        start, end = bert_s.apply(p, x, ctx)
+        return common.cross_entropy(start, y[:, 0]) + common.cross_entropy(end, y[:, 1])
+
+    @jax.jit
+    def step(p, opt, x, y, lr_t):
+        loss, grads = jax.value_and_grad(loss_fn)(p, x, y)
+        p, opt = adam_update(p, grads, opt, lr_t)
+        return p, opt, loss
+
+    opt = adam_init(params)
+    t0 = time.time()
+    for i, (x, y) in enumerate(_batches("span", batch, steps, seed=23)):
+        lr_t = lr * min(1.0, (i + 1) / 100) * (0.5 ** (i // (steps // 2)))
+        params, opt, loss = step(params, opt, jnp.asarray(x), jnp.asarray(y), lr_t)
+        if (i + 1) % log_every == 0:
+            print(f"[bert_s] step {i+1}/{steps} loss={float(loss):.4f} ({time.time()-t0:.0f}s)")
+    return {k: np.asarray(v) for k, v in params.items()}
+
+
+@functools.lru_cache(maxsize=None)
+def eval_fns(model_name: str):
+    """Jitted float-eval helper used to report baseline accuracy."""
+    mod = {"resnet_s": resnet_s, "bert_s": bert_s}[model_name]
+
+    @jax.jit
+    def run(p, x, y):
+        ctx = common.float_ctx(mod.NUM_QUANT_LAYERS, path="diff")
+        return mod.loss_and_correct(p, x, y, ctx)
+
+    return run
+
+
+def evaluate(model_name: str, params, split: data.Split, batch: int) -> tuple[float, float]:
+    """(mean loss, accuracy) of the float model over a split."""
+    run = eval_fns(model_name)
+    p = {k: jnp.asarray(v) for k, v in params.items()}
+    losses, correct, n = [], 0.0, 0
+    for i in range(0, split.x.shape[0] - batch + 1, batch):
+        x = jnp.asarray(split.x[i:i + batch])
+        y = jnp.asarray(split.y[i:i + batch])
+        loss, c = run(p, x, y)
+        losses.append(float(loss))
+        correct += float(c)
+        n += batch
+    return float(np.mean(losses)), correct / n

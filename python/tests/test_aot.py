@@ -1,0 +1,134 @@
+"""AOT exporter: graph construction, argument layout, HLO round-trip.
+
+Uses untrained parameters and tiny batches — these tests validate the
+*contract* with the Rust side (argument order, output arity, HLO-text
+parseability), not model quality.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, data
+from compile.models import bert_s, resnet_s
+
+
+def _recipe(name):
+    return next(r for r in aot._recipes(quick=True) if r.name == name)
+
+
+@pytest.fixture(scope="module", params=["resnet_s", "bert_s"])
+def built(request):
+    recipe = _recipe(request.param)
+    mod = recipe.module
+    params = mod.init_params(0)
+    return recipe, mod, params, aot.build_graphs(recipe, params)
+
+
+def _concrete_args(recipe, mod, params, graph):
+    order = mod.param_order()
+    L = mod.NUM_QUANT_LAYERS
+    ones = np.ones((L,), np.float32)
+    b8 = np.full((L,), 8.0, np.float32)
+    gen = {"vision": data.synth_vision, "span": data.synth_span}[recipe.task]
+    eb, cb = recipe.eval_batch, recipe.calib_batch
+    ev, cv = gen(eb, seed=1), gen(cb, seed=2)
+    plist = [jnp.asarray(params[n]) for n in order]
+    scales = [ones, ones, ones, ones, b8, b8]
+    qnames = [s.param for s in mod.layer_specs() if s.quantizable]
+    probes = [np.sign(np.random.default_rng(0).standard_normal(params[n].shape)).astype(np.float32)
+              for n in qnames]
+    if graph.startswith("logits_b"):
+        bv = gen(int(graph.removeprefix("logits_b")), seed=3)
+        return plist + scales + [jnp.asarray(bv.x)]
+    return {
+        "eval": plist + scales + [jnp.asarray(ev.x), jnp.asarray(ev.y)],
+        "logits": plist + scales + [jnp.asarray(ev.x)],
+        "actstats": plist + [jnp.asarray(cv.x)],
+        "scale_grad": plist + scales + [jnp.asarray(cv.x), jnp.asarray(cv.y)],
+        "hvp": plist + [jnp.asarray(cv.x), jnp.asarray(cv.y)] + [jnp.asarray(p) for p in probes],
+    }[graph]
+
+
+def test_graph_arg_counts(built):
+    recipe, mod, params, graphs = built
+    for name, (fn, specs) in graphs.items():
+        args = _concrete_args(recipe, mod, params, name)
+        assert len(args) == len(specs), f"{name}: {len(args)} != {len(specs)}"
+        for a, s in zip(args, specs):
+            assert tuple(a.shape) == tuple(s.shape), name
+            assert a.dtype == s.dtype, f"{name}: {a.dtype} vs {s.dtype}"
+
+
+def test_eval_graph_outputs(built):
+    recipe, mod, params, graphs = built
+    fn, _ = graphs["eval"]
+    loss, correct = fn(*_concrete_args(recipe, mod, params, "eval"))
+    assert np.isfinite(float(loss))
+    assert 0 <= float(correct) <= recipe.eval_batch
+
+
+def test_actstats_positive(built):
+    recipe, mod, params, graphs = built
+    fn, _ = graphs["actstats"]
+    (stats,) = fn(*_concrete_args(recipe, mod, params, "actstats"))
+    assert stats.shape == (mod.NUM_QUANT_LAYERS,)
+    assert np.all(np.asarray(stats) > 0)
+
+
+def test_scale_grad_outputs(built):
+    recipe, mod, params, graphs = built
+    fn, _ = graphs["scale_grad"]
+    out = fn(*_concrete_args(recipe, mod, params, "scale_grad"))
+    assert len(out) == 5  # loss + 4 gradient vectors
+    L = mod.NUM_QUANT_LAYERS
+    for g in out[1:]:
+        assert g.shape == (L,)
+    # Quantization is active at 8 bits, so at least one scale grad is nonzero.
+    assert any(np.any(np.asarray(g) != 0) for g in out[1:])
+
+
+def test_hvp_output_shape(built):
+    recipe, mod, params, graphs = built
+    fn, _ = graphs["hvp"]
+    (vhv,) = fn(*_concrete_args(recipe, mod, params, "hvp"))
+    assert vhv.shape == (mod.NUM_QUANT_LAYERS,)
+    assert np.all(np.isfinite(np.asarray(vhv)))
+
+
+def test_hlo_text_roundtrip(built):
+    """The lowered eval graph must serialize to parseable HLO text with the
+    ENTRY computation and the expected parameter count."""
+    recipe, mod, params, graphs = built
+    fn, specs = graphs["eval"]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    assert "ENTRY" in text
+    assert "parameter(0)" in text
+    assert f"parameter({len(specs) - 1})" in text
+
+
+def test_manifest_schema_fields():
+    """Keep the manifest keys in sync with the Rust loader's expectations."""
+    required = {
+        "version", "model", "task", "num_quant_layers", "eval_batch",
+        "calib_batch", "x_dtype", "x_shape", "y_shape", "params_bin",
+        "params", "layers", "graphs", "data", "float_val_loss", "float_val_acc",
+    }
+    # Build a minimal fake manifest through the same code path the exporter
+    # uses would require training; instead assert the exporter's literal dict
+    # (source-level contract) mentions every required key.
+    import inspect
+    src = inspect.getsource(aot.export_model)
+    for key in required:
+        assert f'"{key}"' in src, key
+
+
+@pytest.mark.parametrize("mod", [resnet_s, bert_s])
+def test_quant_layer_count_stable(mod):
+    """Layer counts are part of the artifact contract; catch accidental
+    model-architecture drift that would invalidate saved manifests."""
+    expected = {"resnet_s": 16, "bert_s": 26}[mod.NAME]
+    assert mod.NUM_QUANT_LAYERS == expected

@@ -1,0 +1,52 @@
+"""Synthetic dataset invariants the Rust loader and the tasks depend on."""
+
+import numpy as np
+
+from compile import data
+
+
+def test_vision_determinism_and_shapes():
+    a = data.synth_vision(32, seed=9)
+    b = data.synth_vision(32, seed=9)
+    np.testing.assert_array_equal(a.x, b.x)
+    np.testing.assert_array_equal(a.y, b.y)
+    assert a.x.shape == (32, data.IMG_SIZE, data.IMG_SIZE, data.IMG_CHANNELS)
+    assert a.x.dtype == np.float32
+    assert a.y.dtype == np.int32
+    assert set(np.unique(a.y)) <= set(range(data.NUM_CLASSES))
+
+
+def test_vision_seeds_differ():
+    a = data.synth_vision(16, seed=1)
+    b = data.synth_vision(16, seed=2)
+    assert not np.array_equal(a.x, b.x)
+
+
+def test_span_well_formed():
+    s = data.synth_span(128, seed=3)
+    assert s.x.shape == (128, data.SEQ_LEN)
+    assert s.y.shape == (128, 2)
+    for i in range(128):
+        start, end = s.y[i]
+        assert 0 < start <= end < data.SEQ_LEN
+        assert end - start + 1 <= data.MAX_SPAN
+        # The MARK token must immediately precede the span; the length token
+        # at position 1 must encode the span width.
+        assert s.x[i, start - 1] == data.MARK_TOKEN
+        assert s.x[i, 1] == data.LEN_TOKEN_BASE + (end - start)
+
+
+def test_splits_are_disjoint_by_seed():
+    splits = data.make_splits("span", 4, 4, 4, 4)
+    xs = [splits[k].x.tobytes() for k in ("train", "calib_sens", "calib_adj", "val")]
+    assert len(set(xs)) == 4
+
+
+def test_save_split_roundtrip(tmp_path):
+    s = data.synth_vision(8, seed=7)
+    meta = data.save_split(s, str(tmp_path / "x.bin"), str(tmp_path / "y.bin"))
+    x = np.fromfile(tmp_path / "x.bin", dtype="<f4").reshape(meta["x_shape"])
+    y = np.fromfile(tmp_path / "y.bin", dtype="<i4").reshape(meta["y_shape"])
+    np.testing.assert_array_equal(x, s.x)
+    np.testing.assert_array_equal(y, s.y)
+    assert meta["count"] == 8

@@ -1,0 +1,75 @@
+"""Edge-case behaviour of the Pallas kernels beyond the hypothesis sweeps."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import ref
+from compile.kernels.fake_quant import fake_quant
+from compile.kernels.qe_stats import qe_stats
+from compile.kernels.quant_matmul import quant_matmul
+
+
+def test_fake_quant_single_element():
+    out = fake_quant(jnp.asarray([0.3], jnp.float32), 1.0, 1.0, 4.0, block=16)
+    np.testing.assert_allclose(np.asarray(out), [0.25])
+
+
+def test_fake_quant_zero_tensor():
+    x = jnp.zeros((33,), jnp.float32)
+    out = fake_quant(x, 1.0, 1.0, 4.0, block=8)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros(33))
+
+
+def test_fake_quant_extreme_values_clip():
+    x = jnp.asarray([1e9, -1e9, 0.0], jnp.float32)
+    out = np.asarray(fake_quant(x, 1.0, 2.0, 4.0))
+    np.testing.assert_allclose(out, [2.0, -2.0, 0.0])
+
+
+def test_fake_quant_one_bit():
+    """b=1 -> step=1: outputs in {-gamma, 0(+/-), gamma} only."""
+    x = jnp.asarray(np.linspace(-2, 2, 41).astype(np.float32))
+    out = np.asarray(fake_quant(x, 1.0, 3.0, 1.0))
+    assert set(np.unique(np.abs(out))) <= {0.0, 3.0}
+
+
+def test_fake_quant_preserves_shape_4d():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 3, 4, 5)).astype(np.float32))
+    out = fake_quant(x, 0.8, 1.2, 8.0)
+    assert out.shape == x.shape
+
+
+def test_quant_matmul_identity_weights():
+    """Q(I) == I at any width under max calibration, so y == Q(x)."""
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(7, 5)).astype(np.float32))
+    eye = jnp.eye(5, dtype=jnp.float32)
+    got = quant_matmul(x, eye, (1.0, 1.0, 8.0), (1.0, 1.0, 4.0), bm=4, bn=4)
+    want = ref.qdq_ref(x, 1.0, 1.0, 8.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_quant_matmul_single_row_and_col():
+    x = jnp.asarray([[0.5, -0.5]], jnp.float32)
+    w = jnp.asarray([[1.0], [1.0]], jnp.float32)
+    got = quant_matmul(x, w, (1.0, 1.0, 16.0), (1.0, 1.0, 16.0), bm=8, bn=8)
+    np.testing.assert_allclose(np.asarray(got), [[0.0]], atol=1e-7)
+
+
+def test_qe_stats_padding_does_not_leak():
+    """Padding lanes are masked: a 5-element tensor in 4-wide blocks gives
+    the same stats as the unpadded reference."""
+    x = jnp.asarray([10.0, -3.0, 0.5, 2.0, -7.0], jnp.float32)
+    sse, ma = qe_stats(x, 0.1, 10.0, 4.0, block=4)
+    sse_r, ma_r = ref.qe_stats_ref(x, 0.1, 10.0, 4.0)
+    np.testing.assert_allclose(float(sse), float(sse_r), rtol=1e-5)
+    assert float(ma) == float(ma_r)
+
+
+def test_ref_qdq_dual_scale_asymmetry():
+    """alpha and gamma act independently (Park & Yoo dual-scale form)."""
+    x = jnp.asarray([0.5], jnp.float32)
+    a = float(ref.qdq_ref(x, 1.0, 1.0, 8.0)[0])
+    b = float(ref.qdq_ref(x, 1.0, 2.0, 8.0)[0])
+    c = float(ref.qdq_ref(x, 0.5, 1.0, 8.0)[0])
+    assert abs(b - 2 * a) < 1e-6  # gamma rescales output
+    assert abs(c - a / 2) < 1e-2  # alpha rescales input pre-round

@@ -1,0 +1,136 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle.
+
+Hypothesis sweeps shapes, block sizes and bit widths — the properties the
+AOT graphs rely on (padding correctness, grid accumulation, float
+passthrough) must hold for arbitrary configurations, not just the ones the
+models happen to use.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.fake_quant import fake_quant
+from compile.kernels.qe_stats import eps_qe, qe_stats
+from compile.kernels.quant_matmul import quant_matmul
+
+hypothesis.settings.register_profile(
+    "kernels", max_examples=25, deadline=None,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+hypothesis.settings.load_profile("kernels")
+
+BITS = st.sampled_from([2.0, 4.0, 8.0, 16.0])
+
+
+def _tensor(rng, shape, scale=2.0):
+    return jnp.asarray((rng.standard_normal(shape) * scale).astype(np.float32))
+
+
+# ---------------------------------------------------------------- fake_quant
+
+
+@hypothesis.given(
+    shape=st.sampled_from([(7,), (33,), (8, 8), (5, 3, 2), (1, 130)]),
+    block=st.sampled_from([4, 16, 64, 1 << 20]),
+    bits=BITS,
+    seed=st.integers(0, 2**16),
+)
+def test_fake_quant_matches_ref(shape, block, bits, seed):
+    rng = np.random.default_rng(seed)
+    x = _tensor(rng, shape)
+    alpha, gamma = 0.7, 1.9
+    got = fake_quant(x, alpha, gamma, bits, block=block)
+    want = ref.fake_quant_ref(x, alpha, gamma, bits)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_fake_quant_float_passthrough_is_exact():
+    rng = np.random.default_rng(0)
+    x = _tensor(rng, (257,))
+    out = fake_quant(x, 0.3, 3.3, 16.0, block=64)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+@hypothesis.given(bits=st.sampled_from([2.0, 4.0, 8.0]), seed=st.integers(0, 2**16))
+def test_fake_quant_levels_bounded(bits, seed):
+    """Quantized outputs take at most 2^b + 1 distinct values and stay in
+    [-gamma, gamma] — the defining property of Eq. 1 with max calibration."""
+    rng = np.random.default_rng(seed)
+    x = _tensor(rng, (512,))
+    gamma = float(np.abs(x).max())
+    out = np.asarray(fake_quant(x, 1.0 / gamma, gamma, bits))
+    assert len(np.unique(out)) <= 2 ** int(bits) + 1
+    assert np.all(np.abs(out) <= gamma * (1 + 1e-6))
+
+
+def test_fake_quant_idempotent():
+    """Q(Q(x)) == Q(x): quantization is a projection."""
+    rng = np.random.default_rng(1)
+    x = _tensor(rng, (300,))
+    a, g = 0.5, 2.0
+    once = fake_quant(x, a, g, 4.0)
+    twice = fake_quant(once, a, g, 4.0)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice), rtol=1e-6, atol=1e-7)
+
+
+# -------------------------------------------------------------- quant_matmul
+
+
+@hypothesis.given(
+    m=st.integers(1, 40), k=st.integers(1, 40), n=st.integers(1, 40),
+    bm=st.sampled_from([4, 8, 256]), bn=st.sampled_from([4, 8, 128]),
+    bits_x=BITS, bits_w=BITS, seed=st.integers(0, 2**16),
+)
+def test_quant_matmul_matches_ref(m, k, n, bm, bn, bits_x, bits_w, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _tensor(rng, (m, k), 1.0), _tensor(rng, (k, n), 1.0)
+    qx = (0.8, 1.3, bits_x)
+    qw = (1.1, 0.9, bits_w)
+    got = quant_matmul(x, w, qx, qw, bm=bm, bn=bn)
+    want = ref.quant_matmul_ref(x, w, qx, qw)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_quant_matmul_float_bits_is_plain_matmul():
+    rng = np.random.default_rng(3)
+    x, w = _tensor(rng, (17, 9)), _tensor(rng, (9, 13))
+    got = quant_matmul(x, w, (0.5, 2.0, 16.0), (0.5, 2.0, 16.0), bm=8, bn=8)
+    np.testing.assert_allclose(got, jnp.matmul(x, w), rtol=1e-5, atol=1e-5)
+
+
+def test_quant_matmul_rejects_vmem_blowout():
+    rng = np.random.default_rng(4)
+    x, w = _tensor(rng, (4096, 4096)), _tensor(rng, (4096, 4096))
+    with pytest.raises(AssertionError, match="VMEM"):
+        quant_matmul(x, w, (1.0, 1.0, 8.0), (1.0, 1.0, 8.0), bm=4096, bn=4096)
+
+
+# ------------------------------------------------------------------ qe_stats
+
+
+@hypothesis.given(
+    n=st.integers(1, 700), block=st.sampled_from([16, 128, 1 << 14]),
+    bits=BITS, seed=st.integers(0, 2**16),
+)
+def test_qe_stats_matches_ref(n, block, bits, seed):
+    rng = np.random.default_rng(seed)
+    x = _tensor(rng, (n,))
+    a, g = 0.6, 1.7
+    sse, ma = qe_stats(x, a, g, bits, block=block)
+    sse_r, ma_r = ref.qe_stats_ref(x, a, g, bits)
+    np.testing.assert_allclose(sse, sse_r, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(ma, ma_r, rtol=1e-6)
+
+
+@hypothesis.given(seed=st.integers(0, 2**16))
+def test_eps_qe_monotone_in_bits(seed):
+    """Fewer bits must never reduce the quantization error (Eq. 2)."""
+    rng = np.random.default_rng(seed)
+    x = _tensor(rng, (256,))
+    errs = [float(eps_qe(x, b)) for b in (2.0, 4.0, 8.0)]
+    assert errs[0] >= errs[1] >= errs[2]
+    assert float(eps_qe(x, 16.0)) == 0.0

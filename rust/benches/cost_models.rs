@@ -1,0 +1,58 @@
+//! Benchmarks for the latency/size cost models — called once per search
+//! step when ranking candidate configurations, and thousands of times when
+//! regenerating the paper's tables.
+
+mod harness;
+
+use harness::{black_box, Bench};
+use mpq::latency::{AccelModel, CostModel, DeployScale};
+use mpq::model::Manifest;
+use mpq::quant::QuantConfig;
+use mpq::util::rng::Rng;
+
+fn load_manifest() -> Option<Manifest> {
+    let dir = mpq::artifacts_dir()?;
+    Manifest::load(&dir.join("bert_s_manifest.json")).ok()
+}
+
+fn main() {
+    let b = Bench::new("cost_models");
+    let Some(manifest) = load_manifest() else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let accel = AccelModel::a100_like();
+
+    b.bench_n("kernel_table_profile", 20, || {
+        black_box(CostModel::new(&manifest, &accel));
+    });
+
+    let cm = CostModel::new(&manifest, &accel);
+    let n = manifest.num_quant_layers;
+    let mut rng = Rng::seed_from(3);
+    let mut cfgs = Vec::new();
+    for _ in 0..64 {
+        let mut c = QuantConfig::float(n);
+        for i in 0..n {
+            c.set_layer(i, [4.0, 8.0, 16.0][rng.below(3)]);
+        }
+        cfgs.push(c);
+    }
+    let mut i = 0;
+    b.bench("latency_lookup_per_config", || {
+        black_box(cm.latency_s(&cfgs[i % cfgs.len()]));
+        i += 1;
+    });
+    let mut j = 0;
+    b.bench("size_per_config", || {
+        black_box(cm.size_bytes(&cfgs[j % cfgs.len()]));
+        j += 1;
+    });
+    b.bench("tile_efficiency", || {
+        black_box(accel.tile_efficiency(black_box(96), black_box(768), black_box(3072)));
+    });
+    b.bench("deploy_scale_apply", || {
+        let s = DeployScale::for_manifest(&manifest);
+        black_box(s.apply(&manifest.layers[3]));
+    });
+}

@@ -1,0 +1,71 @@
+//! End-to-end benchmarks against the real AOT artifacts: configuration
+//! evaluation throughput (the search inner loop) and full search cells.
+//! These regenerate the performance-relevant rows of the paper's tables —
+//! `mpq table --id N` produces the tables themselves.
+//!
+//! Requires `make artifacts`. Heavyweight; each measurement runs a fixed
+//! small number of iterations.
+
+mod harness;
+
+use harness::{black_box, Bench};
+use mpq::coordinator::SearchAlgo;
+use mpq::quant::QuantConfig;
+use mpq::report::experiments::{run_cell, ExperimentCtx, METRIC_TRIALS};
+use mpq::sensitivity::{self, MetricKind};
+
+fn main() -> mpq::Result<()> {
+    let b = Bench::new("end_to_end");
+    let Some(dir) = mpq::artifacts_dir() else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return Ok(());
+    };
+
+    for model in ["resnet_s", "bert_s"] {
+        let mut ctx = ExperimentCtx::new(&dir, model)?;
+        ctx.ensure_calibrated()?;
+        let n = ctx.pipeline.num_quant_layers();
+
+        // Eval throughput: full-validation evaluation of a fresh config.
+        // Alternate bits slightly so the memo cache never hits.
+        let mut flip = 0usize;
+        b.bench_n(&format!("{model}_eval_full_val"), 6, || {
+            let mut cfg = QuantConfig::uniform(n, 8.0);
+            cfg.set_layer(flip % n, 4.0);
+            cfg.bits_a[(flip + 1) % n] = 4.0; // unique key each iter
+            flip += 1;
+            black_box(ctx.pipeline.eval_config(&cfg, None).unwrap());
+        });
+
+        // Cached evaluation path (the search hits this constantly).
+        let cfg8 = QuantConfig::uniform(n, 8.0);
+        ctx.pipeline.eval_config(&cfg8, None)?;
+        b.bench(&format!("{model}_eval_cached"), || {
+            black_box(ctx.pipeline.eval_config(&cfg8, None).unwrap());
+        });
+
+        // Sensitivity metrics.
+        b.bench_n(&format!("{model}_metric_qe"), 3, || {
+            black_box(sensitivity::compute(&mut ctx.pipeline, MetricKind::Qe, 1, 0).unwrap());
+        });
+        b.bench_n(&format!("{model}_metric_hessian_1probe"), 2, || {
+            black_box(
+                sensitivity::compute(&mut ctx.pipeline, MetricKind::Hessian, 1, 0).unwrap(),
+            );
+        });
+
+        // One full search cell per algorithm (QE ordering: cheap + stable).
+        let sens = sensitivity::compute(&mut ctx.pipeline, MetricKind::Qe, METRIC_TRIALS, 0)?;
+        for algo in [SearchAlgo::Bisection, SearchAlgo::Greedy] {
+            b.bench_n(&format!("{model}_search_{}", algo.label().to_lowercase()), 1, || {
+                black_box(run_cell(&mut ctx, algo, &sens, 0, 0.99).unwrap());
+            });
+        }
+        let stats = ctx.pipeline.stats;
+        println!(
+            "    -> pipeline stats: {} evals, {} cache hits, {} executions, {} early exits",
+            stats.evals, stats.cache_hits, stats.batch_execs, stats.early_exits
+        );
+    }
+    Ok(())
+}

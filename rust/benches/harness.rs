@@ -1,0 +1,121 @@
+//! Tiny micro-benchmark harness (criterion-style output, no dependency).
+//!
+//! Each measurement warms up, then runs timed batches until the target
+//! measurement time elapses, reporting mean per-iteration time with a
+//! robust spread estimate. `MPQ_BENCH_FAST=1` shrinks the budget for CI.
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    suite: String,
+    measure_time: Duration,
+    warmup_time: Duration,
+}
+
+pub struct Report {
+    pub name: String,
+    pub mean_ns: f64,
+    pub spread_ns: f64,
+    pub iters: u64,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Self {
+        let fast = std::env::var_os("MPQ_BENCH_FAST").is_some();
+        println!("== bench suite: {suite} ==");
+        Self {
+            suite: suite.to_string(),
+            measure_time: if fast { Duration::from_millis(200) } else { Duration::from_secs(2) },
+            warmup_time: if fast { Duration::from_millis(50) } else { Duration::from_millis(500) },
+        }
+    }
+
+    /// Time `f` repeatedly; prints and returns the report.
+    pub fn bench<F: FnMut()>(&self, name: &str, mut f: F) -> Report {
+        // Warmup.
+        let w0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while w0.elapsed() < self.warmup_time {
+            f();
+            warm_iters += 1;
+        }
+        // Choose a batch size so each sample is ~1/50 of the budget.
+        let per_iter = (w0.elapsed().as_nanos() as f64 / warm_iters.max(1) as f64).max(1.0);
+        let batch = ((self.measure_time.as_nanos() as f64 / 50.0 / per_iter).ceil() as u64).max(1);
+
+        let mut samples: Vec<f64> = Vec::new();
+        let mut total_iters = 0u64;
+        let m0 = Instant::now();
+        while m0.elapsed() < self.measure_time {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+            total_iters += batch;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let p10 = samples[samples.len() / 10];
+        let p90 = samples[samples.len() * 9 / 10];
+        let report = Report {
+            name: format!("{}::{name}", self.suite),
+            mean_ns: mean,
+            spread_ns: (p90 - p10) / 2.0,
+            iters: total_iters,
+        };
+        println!(
+            "{:<52} {:>12}  (±{:>10}, {} iters)",
+            report.name,
+            fmt_ns(report.mean_ns),
+            fmt_ns(report.spread_ns),
+            report.iters
+        );
+        report
+    }
+
+    /// Time a fallible one-shot operation `n` times (for heavyweight
+    /// end-to-end paths where the criterion-style loop is impractical).
+    #[allow(dead_code)]
+    pub fn bench_n<F: FnMut()>(&self, name: &str, n: u64, mut f: F) -> Report {
+        let mut samples = Vec::with_capacity(n as usize);
+        for _ in 0..n {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let spread = (samples[samples.len() - 1] - samples[0]) / 2.0;
+        let report =
+            Report { name: format!("{}::{name}", self.suite), mean_ns: mean, spread_ns: spread, iters: n };
+        println!(
+            "{:<52} {:>12}  (±{:>10}, {} iters)",
+            report.name,
+            fmt_ns(report.mean_ns),
+            fmt_ns(report.spread_ns),
+            report.iters
+        );
+        report
+    }
+}
+
+#[allow(dead_code)]
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Keep a value alive / defeat dead-code elimination.
+#[allow(dead_code)]
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

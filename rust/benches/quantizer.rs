@@ -1,0 +1,39 @@
+//! Micro-benchmarks for the host-side Eq. 1 quantizer mirror and ε_QE —
+//! these run inside every sensitivity computation and size model, so they
+//! must stay off the profile of a search.
+
+mod harness;
+
+use harness::{black_box, Bench};
+use mpq::quant::{eps_qe, quantize, quantize_into};
+use mpq::util::rng::Rng;
+
+fn main() {
+    let b = Bench::new("quantizer");
+    let mut rng = Rng::seed_from(7);
+    let x: Vec<f32> = (0..65536).map(|_| rng.gaussian() as f32).collect();
+    let mut out = vec![0.0f32; x.len()];
+
+    // A/B for the §Perf log: per-element scalar path (branch + exp2 per
+    // element) vs the hoisted bulk path used everywhere.
+    b.bench("quantize_scalar_loop_64k (pre-opt baseline)", || {
+        let mut acc = 0.0f32;
+        for &v in &x {
+            acc += mpq::quant::quantize_scalar(v, 0.7, 1.4, 4.0);
+        }
+        black_box(acc);
+    });
+    b.bench("quantize_64k_alloc", || {
+        black_box(quantize(black_box(&x), 0.7, 1.4, 4.0));
+    });
+    b.bench("quantize_into_64k", || {
+        quantize_into(black_box(&x), 0.7, 1.4, 4.0, black_box(&mut out));
+    });
+    b.bench("eps_qe_64k", || {
+        black_box(eps_qe(black_box(&x), 4.0));
+    });
+    let small: Vec<f32> = x[..256].to_vec();
+    b.bench("eps_qe_256", || {
+        black_box(eps_qe(black_box(&small), 4.0));
+    });
+}

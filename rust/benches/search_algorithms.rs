@@ -1,0 +1,71 @@
+//! Search-algorithm benchmarks over a synthetic evaluation environment —
+//! isolates the coordination logic (Alg. 1 vs Alg. 2 evaluation budgets and
+//! overhead) from the PJRT execution cost, and checks the complexity claims
+//! of the paper: O(b log N) evals for bisection vs O(bN) for greedy.
+
+mod harness;
+
+use harness::{black_box, Bench};
+use mpq::coordinator::{EvalResult, SearchAlgo, SearchEnv};
+use mpq::quant::QuantConfig;
+use mpq::util::rng::Rng;
+
+/// Synthetic model: each layer has a quantization cost; accuracy is
+/// 1 - sum(cost). Mirrors the mock environments the unit tests use but at
+/// configurable scale.
+struct SynthEnv {
+    penalty: Vec<f64>,
+    evals: usize,
+}
+
+impl SynthEnv {
+    fn new(n: usize, seed: u64) -> Self {
+        let mut rng = Rng::seed_from(seed);
+        // A few ruinous layers, many cheap ones — the regime where guided
+        // search pays off.
+        let penalty = (0..n)
+            .map(|_| if rng.uniform() < 0.2 { 0.05 } else { 0.0002 })
+            .collect();
+        Self { penalty, evals: 0 }
+    }
+
+    fn order(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.penalty.len()).collect();
+        idx.sort_by(|&a, &b| self.penalty[a].partial_cmp(&self.penalty[b]).unwrap());
+        idx
+    }
+}
+
+impl SearchEnv for SynthEnv {
+    fn num_layers(&self) -> usize {
+        self.penalty.len()
+    }
+
+    fn eval(&mut self, cfg: &QuantConfig, _t: Option<f64>) -> mpq::Result<EvalResult> {
+        self.evals += 1;
+        let cost: f64 = cfg
+            .bits_w
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| self.penalty[i] * f64::from(16.0 - b) / 12.0)
+            .sum();
+        Ok(EvalResult { loss: cost, accuracy: 1.0 - cost, exact: true })
+    }
+}
+
+fn main() {
+    let b = Bench::new("search_algorithms");
+    for n in [16usize, 64, 256] {
+        for algo in [SearchAlgo::Greedy, SearchAlgo::Bisection] {
+            let mut evals_used = 0usize;
+            b.bench(&format!("{}_n{n}", algo.label().to_lowercase()), || {
+                let mut env = SynthEnv::new(n, 42);
+                let order = env.order();
+                let out = algo.run(&mut env, &order, &[8.0, 4.0], 0.99).unwrap();
+                evals_used = out.evals;
+                black_box(out);
+            });
+            println!("    -> {} evals at N={n}", evals_used);
+        }
+    }
+}

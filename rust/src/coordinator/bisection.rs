@@ -1,0 +1,146 @@
+//! Algorithm 1 — bisection configuration search.
+//!
+//! Assumes a threshold sensitivity exists per bit width: layers less
+//! sensitive than the threshold can run at that width. The search bisects
+//! over the prefix length of the sensitivity-sorted layer list, per width,
+//! using `O(b log N)` model evaluations. It inherits bisection's reliance
+//! on ordering quality — a mis-ordered sensitive layer poisons whole
+//! prefixes, which is exactly the behaviour the paper reports (bisection
+//! leaving many more layers at 16 bits than greedy).
+
+use crate::quant::QuantConfig;
+use crate::Result;
+
+use super::{SearchEnv, SearchOutcome};
+
+pub fn search<E: SearchEnv>(
+    env: &mut E,
+    order: &[usize],
+    quant_bits: &[f32],
+    target: f64,
+) -> Result<SearchOutcome> {
+    let n = env.num_layers();
+    assert_eq!(order.len(), n, "ordering must cover every quant layer");
+    let mut w = QuantConfig::float(n);
+    let mut evals = 0usize;
+    let mut ll: Vec<usize> = order.to_vec();
+    for &b in quant_bits {
+        if ll.is_empty() {
+            break;
+        }
+        // Alg. 1's threshold update ("thr ± (bound - thr)/2 until thr stops
+        // changing") oscillates between adjacent pass/fail prefixes with
+        // integer arithmetic; we implement the same bisection as a classic
+        // largest-passing-prefix search with invariant: every evaluated
+        // prefix <= lo passed, every evaluated prefix > hi failed.
+        let mut lo = 0usize;
+        let mut hi = ll.len();
+        while lo < hi {
+            let mid = lo + (hi - lo).div_ceil(2); // upper mid: never == lo
+            let mut lw = w.clone();
+            for &layer in &ll[..mid] {
+                lw.set_layer(layer, b);
+            }
+            let r = env.eval(&lw, Some(target))?;
+            evals += 1;
+            if r.accuracy >= target {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        // `lo` is the largest prefix meeting the target (0 if none does).
+        for &layer in &ll[..lo] {
+            w.set_layer(layer, b);
+        }
+        ll.truncate(lo);
+    }
+    let final_res = env.eval(&w, None)?;
+    evals += 1;
+    Ok(SearchOutcome { config: w, accuracy: final_res.accuracy, evals, target })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::EvalResult;
+
+    /// Threshold model: the first `ok8` layers of the ordering tolerate
+    /// 8 bits, the first `ok4` tolerate 4 bits (ok4 <= ok8). A prefix
+    /// passes iff it stays within the tolerance — exactly bisection's
+    /// structural assumption.
+    struct Threshold {
+        order_pos: Vec<usize>, // layer -> position in the ordering
+        ok8: usize,
+        ok4: usize,
+    }
+
+    impl SearchEnv for Threshold {
+        fn num_layers(&self) -> usize {
+            self.order_pos.len()
+        }
+
+        fn eval(&mut self, cfg: &QuantConfig, _t: Option<f64>) -> Result<EvalResult> {
+            let ok = cfg.bits_w.iter().enumerate().all(|(layer, &b)| {
+                let pos = self.order_pos[layer];
+                if b <= 4.0 {
+                    pos < self.ok4
+                } else if b <= 8.0 {
+                    pos < self.ok8
+                } else {
+                    true
+                }
+            });
+            let acc = if ok { 1.0 } else { 0.5 };
+            Ok(EvalResult { loss: 1.0 - acc, accuracy: acc, exact: true })
+        }
+    }
+
+    fn run(n: usize, ok8: usize, ok4: usize) -> SearchOutcome {
+        let order: Vec<usize> = (0..n).collect();
+        let mut env = Threshold { order_pos: order.clone(), ok8, ok4 };
+        search(&mut env, &order, &[8.0, 4.0], 0.9).unwrap()
+    }
+
+    #[test]
+    fn finds_exact_thresholds() {
+        let out = run(16, 11, 5);
+        for layer in 0..16 {
+            let expect = if layer < 5 {
+                4.0
+            } else if layer < 11 {
+                8.0
+            } else {
+                16.0
+            };
+            assert_eq!(out.config.layer_bits(layer), expect, "layer {layer}");
+        }
+        assert_eq!(out.accuracy, 1.0);
+    }
+
+    #[test]
+    fn nothing_quantizable() {
+        let out = run(8, 0, 0);
+        assert_eq!(out.config, QuantConfig::float(8));
+    }
+
+    #[test]
+    fn everything_quantizable() {
+        let out = run(8, 8, 8);
+        assert_eq!(out.config, QuantConfig::uniform(8, 4.0));
+    }
+
+    #[test]
+    fn eval_budget_logarithmic() {
+        let out = run(64, 40, 10);
+        // b * (log2(64) + slack) + final eval
+        assert!(out.evals <= 2 * 8 + 1, "used {} evals", out.evals);
+    }
+
+    #[test]
+    fn single_layer_models() {
+        assert_eq!(run(1, 1, 1).config, QuantConfig::uniform(1, 4.0));
+        assert_eq!(run(1, 1, 0).config, QuantConfig::uniform(1, 8.0));
+        assert_eq!(run(1, 0, 0).config, QuantConfig::float(1));
+    }
+}

@@ -1,0 +1,124 @@
+//! Algorithm 2 — greedy configuration search.
+//!
+//! Walks the layers in sensitivity order (least sensitive first), trial-
+//! quantizing one layer at a time and keeping the change only if the model
+//! still meets the accuracy target. Layers that survive a bit width remain
+//! candidates for the next, lower width. Average complexity
+//! `O((2 - 2^-(b-1)) N)` evaluations, worst case `O(bN)`.
+
+use crate::quant::QuantConfig;
+use crate::Result;
+
+use super::{EvalResult, SearchEnv, SearchOutcome};
+
+pub fn search<E: SearchEnv>(
+    env: &mut E,
+    order: &[usize],
+    quant_bits: &[f32],
+    target: f64,
+) -> Result<SearchOutcome> {
+    let n = env.num_layers();
+    assert_eq!(order.len(), n, "ordering must cover every quant layer");
+    let mut w = QuantConfig::float(n);
+    let mut evals = 0usize;
+    // ll: layers still eligible for further quantization, sensitivity order.
+    let mut ll: Vec<usize> = order.to_vec();
+    for &b in quant_bits {
+        let mut ql = Vec::with_capacity(ll.len());
+        for &layer in &ll {
+            let prev = w.layer_bits(layer);
+            w.set_layer(layer, b);
+            let r = env.eval(&w, Some(target))?;
+            evals += 1;
+            if r.accuracy >= target {
+                ql.push(layer);
+            } else {
+                w.set_layer(layer, prev);
+            }
+        }
+        ll = ql;
+    }
+    let final_res: EvalResult = env.eval(&w, None)?;
+    evals += 1;
+    Ok(SearchOutcome { config: w, accuracy: final_res.accuracy, evals, target })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::EvalResult;
+
+    /// Mock model: quantizing layer `i` to width `b` costs `penalty[i] *
+    /// (16 - b) / 12`; accuracy = 1 - total cost. Monotone and separable,
+    /// so the greedy optimum is known in closed form.
+    struct Mock {
+        penalty: Vec<f64>,
+    }
+
+    impl SearchEnv for Mock {
+        fn num_layers(&self) -> usize {
+            self.penalty.len()
+        }
+
+        fn eval(&mut self, cfg: &QuantConfig, _t: Option<f64>) -> Result<EvalResult> {
+            let cost: f64 = cfg
+                .bits_w
+                .iter()
+                .enumerate()
+                .map(|(i, &b)| self.penalty[i] * f64::from(16.0 - b) / 12.0)
+                .sum();
+            Ok(EvalResult { loss: cost, accuracy: 1.0 - cost, exact: true })
+        }
+    }
+
+    #[test]
+    fn quantizes_cheap_layers_and_protects_expensive() {
+        // Layer 0 free, layer 1 cheap, layer 2 ruinous.
+        let mut env = Mock { penalty: vec![0.0, 0.004, 1.0] };
+        let order = vec![0, 1, 2];
+        let out = search(&mut env, &order, &[8.0, 4.0], 0.99).unwrap();
+        assert_eq!(out.config.layer_bits(0), 4.0);
+        assert_eq!(out.config.layer_bits(2), 16.0);
+        assert!(out.accuracy >= 0.99);
+    }
+
+    #[test]
+    fn target_one_keeps_everything_float_when_any_cost() {
+        let mut env = Mock { penalty: vec![0.1, 0.1] };
+        let out = search(&mut env, &[0, 1], &[8.0, 4.0], 1.0).unwrap();
+        assert_eq!(out.config, QuantConfig::float(2));
+        assert_eq!(out.accuracy, 1.0);
+    }
+
+    #[test]
+    fn eval_budget_within_bound() {
+        // Worst case b*N + 1 final eval.
+        let mut env = Mock { penalty: vec![0.0; 10] };
+        let out = search(&mut env, &(0..10).collect::<Vec<_>>(), &[8.0, 4.0], 0.5).unwrap();
+        assert!(out.evals <= 2 * 10 + 1);
+    }
+
+    #[test]
+    fn layers_failing_high_width_not_retried_lower() {
+        // Layer 1 fails already at 8 bits; the 4-bit pass must skip it.
+        struct Counting {
+            inner: Mock,
+            evals_of_layer1_at4: usize,
+        }
+        impl SearchEnv for Counting {
+            fn num_layers(&self) -> usize {
+                self.inner.num_layers()
+            }
+            fn eval(&mut self, cfg: &QuantConfig, t: Option<f64>) -> Result<EvalResult> {
+                if cfg.layer_bits(1) == 4.0 {
+                    self.evals_of_layer1_at4 += 1;
+                }
+                self.inner.eval(cfg, t)
+            }
+        }
+        let mut env = Counting { inner: Mock { penalty: vec![0.0, 1.0] }, evals_of_layer1_at4: 0 };
+        let out = search(&mut env, &[0, 1], &[8.0, 4.0], 0.99).unwrap();
+        assert_eq!(out.config.layer_bits(1), 16.0);
+        assert_eq!(env.evals_of_layer1_at4, 0);
+    }
+}

@@ -1,0 +1,80 @@
+//! The L3 coordination layer: configuration evaluation pipeline and the
+//! paper's two guided search algorithms.
+//!
+//! [`Pipeline`] owns the PJRT engine, the compiled AOT graphs, the
+//! device-resident parameters/scales/datasets, and an evaluation memo-cache;
+//! [`greedy`] (Alg. 2) and [`bisection`] (Alg. 1) drive it through the
+//! [`SearchEnv`] trait, which also lets property tests run the searches
+//! against synthetic models with known optima.
+
+pub mod bisection;
+pub mod greedy;
+mod pipeline;
+
+pub use pipeline::{Pipeline, PipelineStats};
+
+use crate::quant::QuantConfig;
+use crate::Result;
+
+/// Outcome of evaluating one configuration on the validation split.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalResult {
+    /// Mean loss over evaluated batches.
+    pub loss: f64,
+    /// Fraction of correct predictions (top-1 / exact match).
+    pub accuracy: f64,
+    /// False if the evaluation early-exited once the accuracy target became
+    /// unreachable; the accuracy is then a valid *upper bound*.
+    pub exact: bool,
+}
+
+/// Anything a search can evaluate configurations against.
+pub trait SearchEnv {
+    fn num_layers(&self) -> usize;
+    /// Evaluate; `target` enables early-exit (result stays decision-exact:
+    /// `accuracy >= target` iff a full evaluation would satisfy it).
+    fn eval(&mut self, cfg: &QuantConfig, target: Option<f64>) -> Result<EvalResult>;
+}
+
+/// Result of a configuration search.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    pub config: QuantConfig,
+    /// Exact accuracy of the final configuration.
+    pub accuracy: f64,
+    /// Number of `eval` calls the search issued.
+    pub evals: usize,
+    /// The accuracy floor the search guaranteed.
+    pub target: f64,
+}
+
+/// Which search algorithm to run (CLI/report plumbing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchAlgo {
+    Bisection,
+    Greedy,
+}
+
+impl SearchAlgo {
+    pub fn label(self) -> &'static str {
+        match self {
+            SearchAlgo::Bisection => "Bisection",
+            SearchAlgo::Greedy => "Greedy",
+        }
+    }
+
+    /// Run this algorithm with a sensitivity ordering (ascending — least
+    /// sensitive first) over the quantized bit widths.
+    pub fn run<E: SearchEnv>(
+        self,
+        env: &mut E,
+        order: &[usize],
+        quant_bits: &[f32],
+        target: f64,
+    ) -> Result<SearchOutcome> {
+        match self {
+            SearchAlgo::Bisection => bisection::search(env, order, quant_bits, target),
+            SearchAlgo::Greedy => greedy::search(env, order, quant_bits, target),
+        }
+    }
+}

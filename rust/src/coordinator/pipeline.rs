@@ -1,0 +1,534 @@
+//! The evaluation pipeline: device-resident state + graph drivers.
+//!
+//! One `Pipeline` = one model loaded on one PJRT engine. Construction
+//! uploads parameters and all dataset batches to the device **once**;
+//! every configuration evaluation afterwards only uploads the two tiny
+//! per-layer bit vectors. Evaluations are memoized by configuration hash,
+//! and — when the caller supplies an accuracy target — batches are
+//! evaluated with two-sided early exit: the loop stops as soon as the
+//! pass/fail decision is mathematically settled.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{ensure, Context};
+
+use crate::model::ModelArtifacts;
+use crate::quant::{
+    self, AdjustReport, CalibrationOptions, QuantConfig, Scales,
+};
+use crate::runtime::{scalar_f32, vec_f32, Engine, Executable, HostTensor};
+use crate::util::rng::Rng;
+use crate::Result;
+
+use super::{EvalResult, SearchEnv};
+
+/// Counters for reports and the §Perf log.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PipelineStats {
+    /// `eval` calls answered (cache hits included).
+    pub evals: usize,
+    /// `eval` calls answered from the memo cache.
+    pub cache_hits: usize,
+    /// Graph executions (batches actually run on the device).
+    pub batch_execs: usize,
+    /// Evaluations that stopped before the last batch.
+    pub early_exits: usize,
+}
+
+/// Accuracy bounds of a (possibly partial) evaluation.
+#[derive(Debug, Clone, Copy)]
+struct CachedEval {
+    loss: f64,
+    /// Accuracy if every unevaluated example were wrong.
+    lb: f64,
+    /// Accuracy if every unevaluated example were correct.
+    ub: f64,
+}
+
+impl CachedEval {
+    fn exact(&self) -> bool {
+        self.lb == self.ub
+    }
+}
+
+pub struct Pipeline {
+    engine: Engine,
+    pub artifacts: ModelArtifacts,
+    pub scales: Scales,
+
+    eval_exe: Executable,
+    /// Serving executables keyed by compiled batch size (lazily built from
+    /// the `logits` / `logits_b{N}` graphs).
+    logits_exes: std::collections::HashMap<usize, Executable>,
+    actstats_exe: Option<Executable>,
+    scale_grad_exe: Option<Executable>,
+    hvp_exe: Option<Executable>,
+
+    param_bufs: Vec<xla::PjRtBuffer>,
+    scale_bufs: Vec<xla::PjRtBuffer>, // [aw, gw, aa, ga]
+    val_batches: Vec<(xla::PjRtBuffer, xla::PjRtBuffer)>,
+    calib_sens_batches: Vec<(xla::PjRtBuffer, xla::PjRtBuffer)>, // eval-batch sized
+    calib_adj_batches: Vec<(xla::PjRtBuffer, xla::PjRtBuffer)>,  // calib-batch sized
+
+    cache: HashMap<u64, CachedEval>,
+    pub stats: PipelineStats,
+}
+
+impl Pipeline {
+    /// Load a model's artifacts, compile its eval graph, and move all
+    /// static state onto the device.
+    pub fn new(artifacts_dir: &Path, model: &str) -> Result<Self> {
+        let engine = Engine::cpu()?;
+        let artifacts = ModelArtifacts::load(artifacts_dir, model)
+            .with_context(|| format!("loading artifacts for {model}"))?;
+        let eval_exe = engine.compile_hlo_file(&artifacts.graph_path("eval")?)?;
+
+        let m = &artifacts.manifest;
+        let mut param_bufs = Vec::with_capacity(m.params.len());
+        for (i, p) in m.params.iter().enumerate() {
+            let dims: Vec<usize> = p.shape.clone();
+            param_bufs.push(engine.upload_f32(artifacts.params.values(i), &dims)?);
+        }
+
+        let eb = m.eval_batch;
+        let upload_split = |split: &crate::model::Split, batch: usize| -> Result<Vec<_>> {
+            (0..split.num_batches(batch))
+                .map(|i| {
+                    let (x, y) = split.batch(i, batch);
+                    Ok((engine.upload(&x)?, engine.upload(&y)?))
+                })
+                .collect()
+        };
+        let val_batches = upload_split(&artifacts.val, eb)?;
+        ensure!(!val_batches.is_empty(), "validation split smaller than a batch");
+        let calib_sens_batches = upload_split(&artifacts.calib_sens, eb)?;
+        let calib_adj_batches = upload_split(&artifacts.calib_adj, m.calib_batch)?;
+
+        let scales = Scales::identity(m.num_quant_layers);
+        let mut pipe = Self {
+            engine,
+            artifacts,
+            scales,
+            eval_exe,
+            logits_exes: std::collections::HashMap::new(),
+            actstats_exe: None,
+            scale_grad_exe: None,
+            hvp_exe: None,
+            param_bufs,
+            scale_bufs: Vec::new(),
+            val_batches,
+            calib_sens_batches,
+            calib_adj_batches,
+            cache: HashMap::new(),
+            stats: PipelineStats::default(),
+        };
+        pipe.sync_scales()?;
+        Ok(pipe)
+    }
+
+    pub fn num_quant_layers(&self) -> usize {
+        self.artifacts.manifest.num_quant_layers
+    }
+
+    /// Float-baseline validation accuracy recorded at export time.
+    pub fn float_val_acc(&self) -> f64 {
+        self.artifacts.manifest.float_val_acc
+    }
+
+    /// Re-upload the scale vectors after a change (calibration/adjustment)
+    /// and invalidate the evaluation cache — results depend on scales.
+    pub fn sync_scales(&mut self) -> Result<()> {
+        let s = &self.scales;
+        let n = s.num_layers();
+        self.scale_bufs = vec![
+            self.engine.upload_f32(&s.alpha_w, &[n])?,
+            self.engine.upload_f32(&s.gamma_w, &[n])?,
+            self.engine.upload_f32(&s.alpha_a, &[n])?,
+            self.engine.upload_f32(&s.gamma_a, &[n])?,
+        ];
+        self.cache.clear();
+        Ok(())
+    }
+
+    fn bits_bufs(&self, cfg: &QuantConfig) -> Result<(xla::PjRtBuffer, xla::PjRtBuffer)> {
+        let n = cfg.num_layers();
+        Ok((
+            self.engine.upload_f32(&cfg.bits_w, &[n])?,
+            self.engine.upload_f32(&cfg.bits_a, &[n])?,
+        ))
+    }
+
+    /// Run the eval graph on one uploaded batch with given params; returns
+    /// (mean loss, correct count).
+    fn run_eval_batch(
+        &mut self,
+        params: &[xla::PjRtBuffer],
+        bw: &xla::PjRtBuffer,
+        ba: &xla::PjRtBuffer,
+        batch: &(xla::PjRtBuffer, xla::PjRtBuffer),
+    ) -> Result<(f64, f64)> {
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(params.len() + 8);
+        args.extend(params.iter());
+        args.extend(self.scale_bufs.iter());
+        args.push(bw);
+        args.push(ba);
+        args.push(&batch.0);
+        args.push(&batch.1);
+        let out = self.eval_exe.run(&args)?;
+        self.stats.batch_execs += 1;
+        Ok((scalar_f32(&out[0])? as f64, scalar_f32(&out[1])? as f64))
+    }
+
+    /// Evaluate a configuration over a batch list with optional two-sided
+    /// early exit against `target`. The batch vector is temporarily moved
+    /// out of `self` so the executor can borrow `self` mutably.
+    fn eval_on(
+        &mut self,
+        params: &[xla::PjRtBuffer],
+        cfg: &QuantConfig,
+        which: Which,
+        target: Option<f64>,
+    ) -> Result<CachedEval> {
+        let batches = match which {
+            Which::Val => std::mem::take(&mut self.val_batches),
+            Which::CalibSens => std::mem::take(&mut self.calib_sens_batches),
+        };
+        let res = self.eval_on_batches(params, cfg, &batches, target);
+        match which {
+            Which::Val => self.val_batches = batches,
+            Which::CalibSens => self.calib_sens_batches = batches,
+        }
+        res
+    }
+
+    fn eval_on_batches(
+        &mut self,
+        params: &[xla::PjRtBuffer],
+        cfg: &QuantConfig,
+        batches: &[(xla::PjRtBuffer, xla::PjRtBuffer)],
+        target: Option<f64>,
+    ) -> Result<CachedEval> {
+        let (bw, ba) = self.bits_bufs(cfg)?;
+        let batch_size = self.artifacts.manifest.eval_batch as f64;
+        let total = batches.len() as f64 * batch_size;
+        let mut correct = 0.0f64;
+        let mut loss_sum = 0.0f64;
+        let mut done = 0usize;
+        for batch in batches {
+            let (l, c) = self.run_eval_batch(params, &bw, &ba, batch)?;
+            loss_sum += l;
+            correct += c;
+            done += 1;
+            if let Some(t) = target {
+                let remaining = total - done as f64 * batch_size;
+                let lb = correct / total;
+                let ub = (correct + remaining) / total;
+                if (lb >= t || ub < t) && done < batches.len() {
+                    self.stats.early_exits += 1;
+                    return Ok(CachedEval { loss: loss_sum / done as f64, lb, ub });
+                }
+            }
+        }
+        let acc = correct / total;
+        Ok(CachedEval { loss: loss_sum / done as f64, lb: acc, ub: acc })
+    }
+
+    /// Evaluate on the validation split (memoized).
+    pub fn eval_config(&mut self, cfg: &QuantConfig, target: Option<f64>) -> Result<EvalResult> {
+        self.stats.evals += 1;
+        let key = cfg.key();
+        if let Some(hit) = self.cache.get(&key).copied() {
+            let decisive = match target {
+                None => hit.exact(),
+                Some(t) => hit.exact() || hit.lb >= t || hit.ub < t,
+            };
+            if decisive {
+                self.stats.cache_hits += 1;
+                return Ok(to_result(hit, target));
+            }
+        }
+        let params = std::mem::take(&mut self.param_bufs);
+        let res = self.eval_on(&params, cfg, Which::Val, target);
+        self.param_bufs = params;
+        let ce = res?;
+        // Keep the more precise of (old, new) bounds.
+        let entry = self.cache.entry(key).or_insert(ce);
+        if ce.ub - ce.lb < entry.ub - entry.lb {
+            *entry = ce;
+        }
+        Ok(to_result(ce, target))
+    }
+
+    /// Mean float loss on the sensitivity split with the stock parameters.
+    pub fn calib_loss_float(&mut self) -> Result<f64> {
+        let cfg = QuantConfig::float(self.num_quant_layers());
+        let params = std::mem::take(&mut self.param_bufs);
+        let res = self.eval_on(&params, &cfg, Which::CalibSens, None);
+        self.param_bufs = params;
+        Ok(res?.loss)
+    }
+
+    /// Mean float calibration loss with one parameter tensor temporarily
+    /// replaced by `perturbed` — the ε_N inner loop. Only the perturbed
+    /// tensor is uploaded; all other parameters stay device-resident.
+    pub fn calib_loss_with_perturbed(
+        &mut self,
+        param_index: usize,
+        perturbed: &[f32],
+    ) -> Result<f64> {
+        let dims = self.artifacts.params.dims(param_index).to_vec();
+        let new_buf = self.engine.upload_f32(perturbed, &dims)?;
+        let old = std::mem::replace(&mut self.param_bufs[param_index], new_buf);
+        let cfg = QuantConfig::float(self.num_quant_layers());
+        let params = std::mem::take(&mut self.param_bufs);
+        let res = self.eval_on(&params, &cfg, Which::CalibSens, None);
+        self.param_bufs = params;
+        self.param_bufs[param_index] = old;
+        Ok(res?.loss)
+    }
+
+    // ---------------------------------------------------------- calibration
+
+    /// Per-layer max|activation| over the adjustment split (float model).
+    pub fn act_stats(&mut self) -> Result<Vec<f32>> {
+        if self.actstats_exe.is_none() {
+            self.actstats_exe =
+                Some(self.engine.compile_hlo_file(&self.artifacts.graph_path("actstats")?)?);
+        }
+        let exe = self.actstats_exe.take().unwrap();
+        let n = self.num_quant_layers();
+        let mut maxabs = vec![0.0f32; n];
+        for bi in 0..self.calib_adj_batches.len() {
+            let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.param_bufs.len() + 1);
+            args.extend(self.param_bufs.iter());
+            args.push(&self.calib_adj_batches[bi].0);
+            let out = exe.run(&args)?;
+            self.stats.batch_execs += 1;
+            let stats = vec_f32(&out[0])?;
+            for (m, s) in maxabs.iter_mut().zip(stats) {
+                *m = m.max(s);
+            }
+        }
+        self.actstats_exe = Some(exe);
+        Ok(maxabs)
+    }
+
+    /// The paper's two-step scale estimation: max calibration for weights
+    /// (host-side) and activations (`actstats` graph), then backprop
+    /// adjustment of the four scale vectors on the calibration loss.
+    pub fn calibrate(&mut self, opts: &CalibrationOptions) -> Result<AdjustReport> {
+        // Step 1: max calibration.
+        self.scales = quant::calibrate::weight_scales(&self.artifacts.manifest, &self.artifacts.params);
+        let acts = self.act_stats()?;
+        quant::calibrate::apply_act_stats(&mut self.scales, &acts);
+        self.sync_scales()?;
+
+        // Step 2: adjustment via the scale_grad graph.
+        if self.scale_grad_exe.is_none() {
+            self.scale_grad_exe =
+                Some(self.engine.compile_hlo_file(&self.artifacts.graph_path("scale_grad")?)?);
+        }
+        let exe = self.scale_grad_exe.take().unwrap();
+        let n = self.num_quant_layers();
+        let cfg = QuantConfig::uniform(n, opts.adjust_bits);
+        let (bw, ba) = self.bits_bufs(&cfg)?;
+        let mut opt = quant::calibrate::ScaleAdam::new(n, opts.lr);
+        let mut first_loss = None;
+        let mut last_loss = 0.0f64;
+        let mut steps = 0usize;
+        for _epoch in 0..opts.epochs {
+            for bi in 0..self.calib_adj_batches.len() {
+                let sb = [
+                    self.engine.upload_f32(&self.scales.alpha_w, &[n])?,
+                    self.engine.upload_f32(&self.scales.gamma_w, &[n])?,
+                    self.engine.upload_f32(&self.scales.alpha_a, &[n])?,
+                    self.engine.upload_f32(&self.scales.gamma_a, &[n])?,
+                ];
+                let mut args: Vec<&xla::PjRtBuffer> =
+                    Vec::with_capacity(self.param_bufs.len() + 8);
+                args.extend(self.param_bufs.iter());
+                args.extend(sb.iter());
+                args.push(&bw);
+                args.push(&ba);
+                args.push(&self.calib_adj_batches[bi].0);
+                args.push(&self.calib_adj_batches[bi].1);
+                let out = exe.run(&args)?;
+                self.stats.batch_execs += 1;
+                let loss = scalar_f32(&out[0])? as f64;
+                first_loss.get_or_insert(loss);
+                last_loss = loss;
+                let mut grads = Vec::with_capacity(n * 4);
+                for g in &out[1..5] {
+                    grads.extend(vec_f32(g)?);
+                }
+                opt.step(&mut self.scales, &grads);
+                steps += 1;
+            }
+        }
+        self.scale_grad_exe = Some(exe);
+        self.sync_scales()?;
+        Ok(AdjustReport { loss_before: first_loss.unwrap_or(0.0), loss_after: last_loss, steps })
+    }
+
+    // -------------------------------------------------------------- hessian
+
+    /// Hutchinson estimate of the per-layer mean Hessian trace of the float
+    /// loss: `E[v^T H v] / numel` with Rademacher probes, averaged over
+    /// `trials` probes and the adjustment batches.
+    pub fn hessian_trace(&mut self, trials: usize, seed: u64) -> Result<Vec<f64>> {
+        if self.hvp_exe.is_none() {
+            self.hvp_exe = Some(self.engine.compile_hlo_file(&self.artifacts.graph_path("hvp")?)?);
+        }
+        let exe = self.hvp_exe.take().unwrap();
+        let m = self.artifacts.manifest.clone();
+        let qlayers = m.quant_layers();
+        let n = qlayers.len();
+        let mut acc = vec![0.0f64; n];
+        let mut rng = Rng::seed_from(seed);
+        let nb = self.calib_adj_batches.len();
+        for trial in 0..trials {
+            // One full Rademacher probe across all quantizable tensors.
+            let mut probe_bufs = Vec::with_capacity(n);
+            for l in qlayers.iter() {
+                let pi = self.artifacts.params.index_of(&l.param).unwrap();
+                let dims = self.artifacts.params.dims(pi).to_vec();
+                let numel: usize = dims.iter().product();
+                let v: Vec<f32> = (0..numel).map(|_| rng.rademacher()).collect();
+                probe_bufs.push(self.engine.upload_f32(&v, &dims)?);
+            }
+            // One batch per probe, rotating through the calibration split:
+            // across `trials` probes the estimator still sees every batch,
+            // at 1/nb the HVP cost of the full cross product (HVPs are the
+            // most expensive graph in the system — §Perf).
+            let bi = trial % nb;
+            let mut args: Vec<&xla::PjRtBuffer> =
+                Vec::with_capacity(self.param_bufs.len() + 2 + n);
+            args.extend(self.param_bufs.iter());
+            args.push(&self.calib_adj_batches[bi].0);
+            args.push(&self.calib_adj_batches[bi].1);
+            args.extend(probe_bufs.iter());
+            let out = exe.run(&args)?;
+            self.stats.batch_execs += 1;
+            let vhv = vec_f32(&out[0])?;
+            for (a, v) in acc.iter_mut().zip(vhv) {
+                *a += v as f64;
+            }
+        }
+        self.hvp_exe = Some(exe);
+        let denom = trials as f64;
+        Ok(qlayers
+            .iter()
+            .zip(acc)
+            .map(|(l, a)| a / denom / l.weight_numel as f64)
+            .collect())
+    }
+
+    // --------------------------------------------------------------- logits
+
+    /// Serving batch sizes available in the artifacts, ascending. Always
+    /// includes the evaluation batch; smaller `logits_b{N}` variants are
+    /// exported so the server can avoid padding tiny queues to the full
+    /// batch (§Perf).
+    pub fn logits_batch_sizes(&self) -> Vec<usize> {
+        let mut sizes: Vec<usize> = self
+            .artifacts
+            .manifest
+            .graphs
+            .keys()
+            .filter_map(|g| g.strip_prefix("logits_b").and_then(|n| n.parse().ok()))
+            .collect();
+        sizes.push(self.artifacts.manifest.eval_batch);
+        sizes.sort_unstable();
+        sizes.dedup();
+        sizes
+    }
+
+    fn logits_exe_for(&mut self, batch: usize) -> Result<()> {
+        if self.logits_exes.contains_key(&batch) {
+            return Ok(());
+        }
+        let graph = if batch == self.artifacts.manifest.eval_batch {
+            "logits".to_string()
+        } else {
+            format!("logits_b{batch}")
+        };
+        let exe = self.engine.compile_hlo_file(&self.artifacts.graph_path(&graph)?)?;
+        self.logits_exes.insert(batch, exe);
+        Ok(())
+    }
+
+    /// Compile (once per batch size) and return predictions for one batch —
+    /// the serving path used by [`crate::server`]. The leading dimension of
+    /// `x` must be one of [`Self::logits_batch_sizes`].
+    pub fn logits(&mut self, cfg: &QuantConfig, x: &HostTensor) -> Result<Vec<f32>> {
+        let batch = x.dims()[0];
+        self.logits_exe_for(batch)?;
+        let (bw, ba) = self.bits_bufs(cfg)?;
+        let xb = self.engine.upload(x)?;
+        let exe = self.logits_exes.remove(&batch).expect("compiled above");
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.param_bufs.len() + 7);
+        args.extend(self.param_bufs.iter());
+        args.extend(self.scale_bufs.iter());
+        args.push(&bw);
+        args.push(&ba);
+        args.push(&xb);
+        let out = exe.run(&args);
+        self.stats.batch_execs += 1;
+        self.logits_exes.insert(batch, exe);
+        Ok(vec_f32(&out?[0])?)
+    }
+
+    /// The engine (for uploads by metric drivers).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Gaussian perturbation ν ~ N(0, λ·max|w|) of one quant layer's weights.
+    pub fn gaussian_perturbation(
+        &self,
+        quant_index: usize,
+        lambda: f64,
+        rng: &mut Rng,
+    ) -> Result<(usize, Vec<f32>)> {
+        let m = &self.artifacts.manifest;
+        let layer = m.quant_layers()[quant_index].clone();
+        let pi = self
+            .artifacts
+            .params
+            .index_of(&layer.param)
+            .ok_or_else(|| anyhow::anyhow!("missing param {}", layer.param))?;
+        let w = self.artifacts.params.values(pi);
+        let maxabs = w.iter().fold(0.0f32, |mx, &v| mx.max(v.abs()));
+        let sigma = (lambda * maxabs as f64).max(1e-12);
+        let perturbed: Vec<f32> =
+            w.iter().map(|&v| v + (rng.gaussian() * sigma) as f32).collect();
+        Ok((pi, perturbed))
+    }
+}
+
+#[derive(Clone, Copy)]
+enum Which {
+    Val,
+    CalibSens,
+}
+
+fn to_result(ce: CachedEval, target: Option<f64>) -> EvalResult {
+    let exact = ce.exact();
+    let accuracy = match target {
+        _ if exact => ce.lb,
+        Some(t) if ce.lb >= t => ce.lb, // decisive pass: report the bound
+        _ => ce.ub,                     // decisive fail (or no target): upper bound
+    };
+    EvalResult { loss: ce.loss, accuracy, exact }
+}
+
+impl SearchEnv for Pipeline {
+    fn num_layers(&self) -> usize {
+        self.num_quant_layers()
+    }
+
+    fn eval(&mut self, cfg: &QuantConfig, target: Option<f64>) -> Result<EvalResult> {
+        self.eval_config(cfg, target)
+    }
+}

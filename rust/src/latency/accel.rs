@@ -1,0 +1,149 @@
+//! Analytical roofline model of an A100-class accelerator.
+
+
+use crate::quant::BitWidth;
+
+/// Execution precision of a kernel: the wider of its two operand widths
+/// (int4 weights with int8 activations run in the int8 pipeline, matching
+/// tensor-core / MXU operand-width semantics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    Int4,
+    Int8,
+    Fp16,
+}
+
+impl Precision {
+    pub fn of_pair(w: BitWidth, a: BitWidth) -> Self {
+        let widest = w.bits().max(a.bits());
+        match widest as u32 {
+            0..=4 => Precision::Int4,
+            5..=8 => Precision::Int8,
+            _ => Precision::Fp16,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::Int4 => "int4",
+            Precision::Int8 => "int8",
+            Precision::Fp16 => "fp16",
+        }
+    }
+}
+
+/// Roofline parameters. Defaults approximate an A100 SXM4-40GB, the
+/// hardware the paper profiled with CUTLASS.
+#[derive(Debug, Clone)]
+pub struct AccelModel {
+    /// Peak MACs/s at fp16 (A100: 312 TFLOPS ≈ 156e12 MAC/s dense).
+    pub peak_mac_fp16: f64,
+    /// Peak MACs/s at int8 (624 TOPS ≈ 312e12 MAC/s).
+    pub peak_mac_int8: f64,
+    /// Peak MACs/s at int4 (1248 TOPS ≈ 624e12 MAC/s).
+    pub peak_mac_int4: f64,
+    /// HBM bandwidth, bytes/s (A100-40GB: 1.555e12).
+    pub hbm_bytes_per_s: f64,
+    /// Fixed per-kernel launch + epilogue overhead, seconds.
+    pub launch_overhead_s: f64,
+    /// Math tile the systolic/tensor units consume (m, n, k granularity).
+    pub tile: (u64, u64, u64),
+}
+
+impl AccelModel {
+    /// The default substitution target (see DESIGN.md §2).
+    pub fn a100_like() -> Self {
+        Self {
+            peak_mac_fp16: 156e12,
+            peak_mac_int8: 312e12,
+            peak_mac_int4: 624e12,
+            hbm_bytes_per_s: 1.555e12,
+            launch_overhead_s: 4.0e-6,
+            tile: (128, 128, 32),
+        }
+    }
+
+    /// A TPU-v4-like configuration (documented hardware adaptation; MXU is
+    /// 128x128 bf16 with int8 support, no int4 math — int4 maps to int8
+    /// compute but still enjoys int4 memory traffic).
+    pub fn tpu_like() -> Self {
+        Self {
+            peak_mac_fp16: 137.5e12,
+            peak_mac_int8: 275e12,
+            peak_mac_int4: 275e12,
+            hbm_bytes_per_s: 1.2e12,
+            launch_overhead_s: 2.0e-6,
+            tile: (128, 128, 128),
+        }
+    }
+
+    pub fn peak_mac(&self, p: Precision) -> f64 {
+        match p {
+            Precision::Int4 => self.peak_mac_int4,
+            Precision::Int8 => self.peak_mac_int8,
+            Precision::Fp16 => self.peak_mac_fp16,
+        }
+    }
+
+    /// Tile-quantization efficiency: fraction of issued math that is useful
+    /// for a GEMM of logical shape (m, n, k).
+    pub fn tile_efficiency(&self, m: u64, n: u64, k: u64) -> f64 {
+        let (tm, tn, tk) = self.tile;
+        let pad = |x: u64, t: u64| -> f64 {
+            let tiles = x.div_ceil(t);
+            x as f64 / (tiles * t) as f64
+        };
+        pad(m, tm) * pad(n, tn) * pad(k, tk)
+    }
+
+    /// Roofline latency of one kernel.
+    ///
+    /// * `macs` — useful multiply-accumulates,
+    /// * `(m, n, k)` — GEMM-equivalent shape (tile efficiency),
+    /// * `bytes` — HBM traffic (weights at their storage width + I/O).
+    pub fn kernel_latency_s(&self, macs: u64, mnk: (u64, u64, u64), bytes: f64, p: Precision) -> f64 {
+        let eff = self.tile_efficiency(mnk.0, mnk.1, mnk.2).max(1e-3);
+        let compute = macs as f64 / (self.peak_mac(p) * eff);
+        let memory = bytes / self.hbm_bytes_per_s;
+        compute.max(memory) + self.launch_overhead_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_of_pair_takes_widest() {
+        assert_eq!(Precision::of_pair(BitWidth::Int4, BitWidth::Int8), Precision::Int8);
+        assert_eq!(Precision::of_pair(BitWidth::Int4, BitWidth::Int4), Precision::Int4);
+        assert_eq!(Precision::of_pair(BitWidth::Fp16, BitWidth::Int4), Precision::Fp16);
+    }
+
+    #[test]
+    fn tile_efficiency_bounds() {
+        let a = AccelModel::a100_like();
+        assert_eq!(a.tile_efficiency(128, 128, 32), 1.0);
+        let e = a.tile_efficiency(1, 10, 64);
+        assert!(e > 0.0 && e < 0.05, "tiny shapes waste the tile: {e}");
+    }
+
+    #[test]
+    fn memory_bound_kernel_scales_with_bytes() {
+        let a = AccelModel::a100_like();
+        // Tiny math, large traffic: halving bytes ~halves latency-minus-overhead.
+        let l8 = a.kernel_latency_s(1000, (128, 128, 32), 1e6, Precision::Int8);
+        let l4 = a.kernel_latency_s(1000, (128, 128, 32), 0.5e6, Precision::Int4);
+        let r = (l4 - a.launch_overhead_s) / (l8 - a.launch_overhead_s);
+        assert!((r - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn compute_bound_kernel_scales_with_precision() {
+        let a = AccelModel::a100_like();
+        let big = 1u64 << 40;
+        let l16 = a.kernel_latency_s(big, (4096, 4096, 4096), 1e3, Precision::Fp16);
+        let l8 = a.kernel_latency_s(big, (4096, 4096, 4096), 1e3, Precision::Int8);
+        assert!((l16 / l8 - 2.0).abs() < 0.1);
+    }
+}

@@ -1,0 +1,266 @@
+//! Latency and size cost models.
+//!
+//! The paper estimates deployment latency by profiling gemm/conv kernels at
+//! each precision on an A100 with CUTLASS (batch 1) and composing per-layer
+//! kernel latencies. That profiler and hardware are not available here, so
+//! we reproduce the *mechanism* exactly — a kernel-latency lookup table
+//! composed per layer — and substitute the table's provenance with an
+//! analytical roofline model of an A100-class accelerator (DESIGN.md §2).
+//!
+//! The model captures the effects that shape the paper's numbers:
+//! * per-precision peak math throughput (int4 : int8 : fp16 = 4 : 2 : 1),
+//! * HBM bandwidth bounding memory-bound layers (most of them at batch 1),
+//! * fixed per-kernel launch overhead (diminishing returns at low bits),
+//! * tile-quantization efficiency loss for shapes that fit the MXU poorly.
+
+mod accel;
+mod table;
+
+pub use accel::{AccelModel, Precision};
+pub use table::{KernelKey, KernelTable};
+
+use crate::model::{LayerInfo, Manifest};
+use crate::quant::{BitWidth, QuantConfig};
+
+/// Reference fp16 deployment footprints of the architectures our stand-ins
+/// represent (paper Table 1: ResNet50 51.00 MB, BERT 603.98 MB).
+fn reference_fp16_bytes(task: &str) -> f64 {
+    match task {
+        "vision" => 51.00e6,
+        "span" => 603.98e6,
+        _ => 100.0e6,
+    }
+}
+
+/// Channel/width multiplier mapping a stand-in architecture onto the
+/// deployment-class model it represents.
+///
+/// The synthetic models are hundreds of times smaller than ResNet50/BERT so
+/// that thousands of search evaluations stay tractable on CPU PJRT; at those
+/// sizes a physical A100 latency model degenerates (launch overhead is 98%
+/// of every kernel and precision stops mattering). The cost models therefore
+/// evaluate each layer at *deployment scale*: channel-like dimensions (n, k)
+/// grow by `s`, weights by `s^2`, activations by `s`, MACs by `s^2`, with
+/// `s = sqrt(reference fp16 bytes / stand-in fp16 bytes)`. This preserves
+/// the architecture's *shape* (depth, layer mix, relative widths) while the
+/// absolute operating point matches the hardware the paper profiled.
+#[derive(Debug, Clone, Copy)]
+pub struct DeployScale {
+    pub s: f64,
+}
+
+impl DeployScale {
+    /// Identity (cost the stand-in as-is).
+    pub fn native() -> Self {
+        Self { s: 1.0 }
+    }
+
+    /// Match the reference deployment footprint for this manifest's task.
+    pub fn for_manifest(manifest: &Manifest) -> Self {
+        let fp16_bytes = manifest.total_param_elems() as f64 * 2.0;
+        let s = (reference_fp16_bytes(&manifest.task) / fp16_bytes).sqrt();
+        Self { s: s.max(1.0) }
+    }
+
+    /// Scale one layer's dimensions to deployment size.
+    pub fn apply(&self, l: &LayerInfo) -> LayerInfo {
+        let s = self.s;
+        let s2 = s * s;
+        let mut out = l.clone();
+        // Embedding rows scale like d_model (s), not s^2 (vocab fixed).
+        let wscale = if l.kind == "embed" { s } else { s2 };
+        out.macs = (l.macs as f64 * s2) as u64;
+        out.weight_numel = (l.weight_numel as f64 * wscale) as u64;
+        out.act_in_numel = (l.act_in_numel as f64 * s) as u64;
+        out.out_numel = (l.out_numel as f64 * s) as u64;
+        out.n = (l.n as f64 * s).round().max(1.0) as u64;
+        out.k = (l.k as f64 * s).round().max(1.0) as u64;
+        out
+    }
+}
+
+/// Composes per-layer kernel latencies + parameter bytes into model-level
+/// latency/size, absolute and relative to the fp16 baseline.
+pub struct CostModel {
+    table: KernelTable,
+    layers: Vec<LayerInfo>,
+    /// Total deployment-scale parameter elements for size accounting.
+    total_param_elems: u64,
+    /// fp16 baselines, computed once.
+    base_latency_s: f64,
+    base_size_bytes: f64,
+}
+
+impl CostModel {
+    /// Cost model at deployment scale (see [`DeployScale`]).
+    pub fn new(manifest: &Manifest, accel: &AccelModel) -> Self {
+        Self::with_scale(manifest, accel, DeployScale::for_manifest(manifest))
+    }
+
+    pub fn with_scale(manifest: &Manifest, accel: &AccelModel, scale: DeployScale) -> Self {
+        let layers: Vec<LayerInfo> = manifest.layers.iter().map(|l| scale.apply(l)).collect();
+        let table = KernelTable::profile(accel, &layers);
+        // Non-layer parameters (biases, norms) scale like s; layer weights
+        // like s^2 (already applied). Total = scaled weights + scaled rest.
+        let weight_elems: u64 = manifest.layers.iter().map(|l| l.weight_numel).sum();
+        let rest = manifest.total_param_elems() as f64 - weight_elems as f64;
+        let scaled_weights: u64 = layers.iter().map(|l| l.weight_numel).sum();
+        let total_param_elems = scaled_weights + (rest * scale.s) as u64;
+        let mut cm = Self { table, layers, total_param_elems, base_latency_s: 0.0, base_size_bytes: 0.0 };
+        let float_cfg = QuantConfig::float(manifest.num_quant_layers);
+        cm.base_latency_s = cm.latency_s(&float_cfg);
+        cm.base_size_bytes = cm.size_bytes(&float_cfg);
+        cm
+    }
+
+    /// End-to-end model latency (seconds, batch 1) for a configuration.
+    pub fn latency_s(&self, cfg: &QuantConfig) -> f64 {
+        self.layers
+            .iter()
+            .map(|l| {
+                let (bw, ba) = if l.quant_index >= 0 {
+                    let qi = l.quant_index as usize;
+                    (BitWidth::from_bits(cfg.bits_w[qi]), BitWidth::from_bits(cfg.bits_a[qi]))
+                } else {
+                    (BitWidth::Fp16, BitWidth::Fp16)
+                };
+                self.table.lookup(l, bw, ba)
+            })
+            .sum()
+    }
+
+    /// Model size in bytes: quantizable weights at their configured width,
+    /// everything else (biases, norms, unquantized tensors) at fp16.
+    pub fn size_bytes(&self, cfg: &QuantConfig) -> f64 {
+        let mut quant_elems = 0u64;
+        let mut quant_bytes = 0.0f64;
+        for l in &self.layers {
+            if l.quant_index >= 0 {
+                let bits = cfg.bits_w[l.quant_index as usize] as f64;
+                quant_elems += l.weight_numel;
+                quant_bytes += l.weight_numel as f64 * bits / 8.0;
+            }
+        }
+        let other_elems = self.total_param_elems - quant_elems;
+        quant_bytes + other_elems as f64 * 2.0
+    }
+
+    /// Latency relative to the fp16 baseline (the paper's table unit).
+    pub fn rel_latency(&self, cfg: &QuantConfig) -> f64 {
+        self.latency_s(cfg) / self.base_latency_s
+    }
+
+    /// Size relative to the fp16 baseline.
+    pub fn rel_size(&self, cfg: &QuantConfig) -> f64 {
+        self.size_bytes(cfg) / self.base_size_bytes
+    }
+
+    pub fn base_latency_ms(&self) -> f64 {
+        self.base_latency_s * 1e3
+    }
+
+    pub fn base_size_mb(&self) -> f64 {
+        self.base_size_bytes / 1e6
+    }
+
+    pub fn table(&self) -> &KernelTable {
+        &self.table
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::LayerInfo;
+
+    fn layer(name: &str, qi: i64, weight: u64, macs: u64) -> LayerInfo {
+        LayerInfo {
+            name: name.into(),
+            param: format!("{name}_w"),
+            kind: "gemm".into(),
+            quantizable: qi >= 0,
+            macs,
+            weight_numel: weight,
+            act_in_numel: 64,
+            out_numel: 64,
+            m: 16,
+            n: 64,
+            k: 64,
+            quant_index: qi,
+        }
+    }
+
+    fn manifest() -> Manifest {
+        // Construct a minimal manifest via JSON to exercise the same path
+        // as artifact loading.
+        let layers = [layer("l0", 0, 4096, 65536), layer("l1", 1, 8192, 131072)];
+        let layer_json: Vec<String> = layers
+            .iter()
+            .map(|l| {
+                format!(
+                    r#"{{"name": "{}", "param": "{}", "kind": "{}", "quantizable": {},
+                        "macs": {}, "weight_numel": {}, "act_in_numel": {},
+                        "out_numel": {}, "m": {}, "n": {}, "k": {}, "quant_index": {}}}"#,
+                    l.name, l.param, l.kind, l.quantizable, l.macs, l.weight_numel,
+                    l.act_in_numel, l.out_numel, l.m, l.n, l.k, l.quant_index
+                )
+            })
+            .collect();
+        let text = format!(
+            r#"{{"version": 4, "model": "toy", "task": "vision",
+                "num_quant_layers": 2, "eval_batch": 4, "calib_batch": 4,
+                "x_dtype": "f32", "x_shape": [4], "y_shape": [],
+                "params_bin": "none.bin",
+                "params": [
+                  {{"name": "l0_w", "shape": [64, 64], "numel": 4096, "offset": 0}},
+                  {{"name": "l1_w", "shape": [64, 128], "numel": 8192, "offset": 4096}}
+                ],
+                "layers": [{}],
+                "graphs": {{"eval": "x", "logits": "x", "actstats": "x",
+                            "scale_grad": "x", "hvp": "x"}},
+                "data": {{}}, "float_val_loss": 0.0, "float_val_acc": 1.0}}"#,
+            layer_json.join(",")
+        );
+        Manifest::from_json(&crate::util::json::parse(&text).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn size_halves_with_bits() {
+        let cm = CostModel::new(&manifest(), &AccelModel::a100_like());
+        let n = 2;
+        let s16 = cm.size_bytes(&QuantConfig::uniform(n, 16.0));
+        let s8 = cm.size_bytes(&QuantConfig::uniform(n, 8.0));
+        let s4 = cm.size_bytes(&QuantConfig::uniform(n, 4.0));
+        assert!((s8 / s16 - 0.5).abs() < 1e-9);
+        assert!((s4 / s16 - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_monotone_in_bits() {
+        let cm = CostModel::new(&manifest(), &AccelModel::a100_like());
+        let n = 2;
+        let l16 = cm.latency_s(&QuantConfig::uniform(n, 16.0));
+        let l8 = cm.latency_s(&QuantConfig::uniform(n, 8.0));
+        let l4 = cm.latency_s(&QuantConfig::uniform(n, 4.0));
+        assert!(l4 <= l8 && l8 <= l16);
+        // Launch overhead bounds the benefit away from the linear ratio.
+        assert!(l4 / l16 > 0.25);
+    }
+
+    #[test]
+    fn relative_baseline_is_one() {
+        let cm = CostModel::new(&manifest(), &AccelModel::a100_like());
+        let f = QuantConfig::float(2);
+        assert!((cm.rel_latency(&f) - 1.0).abs() < 1e-12);
+        assert!((cm.rel_size(&f) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mixed_config_between_uniform_bounds() {
+        let cm = CostModel::new(&manifest(), &AccelModel::a100_like());
+        let mut mixed = QuantConfig::float(2);
+        mixed.set_layer(0, 4.0);
+        let l = cm.rel_latency(&mixed);
+        assert!(l < 1.0 && l > cm.rel_latency(&QuantConfig::uniform(2, 4.0)));
+    }
+}

@@ -1,0 +1,178 @@
+//! Kernel latency table — the paper's CUTLASS-profiler output format.
+//!
+//! The paper: *"We capture these interactions by benchmarking the
+//! performance of key kernels such as gemm and conv2d across different
+//! numerical precisions … The best performing kernels for a given tensor
+//! shape and precision were determined using the CUTLASS profiler."*
+//!
+//! [`KernelTable::profile`] plays the role of that profiler run: for every
+//! distinct (kind, m, n, k, bytes) kernel shape in a model and every
+//! precision, it records a latency produced by the [`AccelModel`]. The
+//! [`super::CostModel`] then only ever *looks up* — exactly the paper's
+//! two-phase methodology, and the natural place to drop in real measured
+//! tables later (the JSON I/O below).
+
+use std::collections::HashMap;
+
+
+use super::accel::{AccelModel, Precision};
+use crate::model::LayerInfo;
+use crate::quant::BitWidth;
+
+/// Table key: kernel shape + execution precision + storage widths (storage
+/// affects HBM traffic even when the math pipeline is shared).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct KernelKey {
+    pub kind: String,
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+    pub weight_bits: u32,
+    pub act_bits: u32,
+}
+
+/// Latency lookup table, serializable so a measured table can replace the
+/// analytical one without touching any caller.
+#[derive(Debug, Clone)]
+pub struct KernelTable {
+    entries: HashMap<KernelKey, f64>,
+    /// Output activations are produced at fp16 (2 bytes/elem).
+    pub out_bytes_per_elem: f64,
+}
+
+impl KernelTable {
+    /// "Profile" every layer of a model at every supported precision pair.
+    pub fn profile(accel: &AccelModel, layers: &[LayerInfo]) -> Self {
+        let widths = [BitWidth::Int4, BitWidth::Int8, BitWidth::Fp16];
+        let mut entries = HashMap::new();
+        for layer in layers {
+            for w in widths {
+                for a in widths {
+                    let key = Self::key_for(layer, w, a);
+                    let lat = Self::model_latency(accel, layer, w, a);
+                    entries.insert(key, lat);
+                }
+            }
+        }
+        Self { entries, out_bytes_per_elem: 2.0 }
+    }
+
+    fn key_for(layer: &LayerInfo, w: BitWidth, a: BitWidth) -> KernelKey {
+        KernelKey {
+            kind: layer.kind.clone(),
+            m: layer.m,
+            n: layer.n,
+            k: layer.k,
+            weight_bits: w.bits() as u32,
+            act_bits: a.bits() as u32,
+        }
+    }
+
+    fn model_latency(accel: &AccelModel, layer: &LayerInfo, w: BitWidth, a: BitWidth) -> f64 {
+        let bytes = layer.weight_numel as f64 * w.bits() as f64 / 8.0
+            + layer.act_in_numel as f64 * a.bits() as f64 / 8.0
+            + layer.out_numel as f64 * 2.0;
+        if layer.kind == "embed" {
+            // Lookup kernels move one row per token — pure memory op. The
+            // table row count (weight_numel) overstates traffic massively;
+            // use act_in (tokens) * row bytes ≈ out_numel at storage width.
+            let bytes = layer.out_numel as f64 * w.bits() as f64 / 8.0;
+            return bytes / accel.hbm_bytes_per_s + accel.launch_overhead_s;
+        }
+        let prec = Precision::of_pair(w, a);
+        accel.kernel_latency_s(layer.macs, (layer.m, layer.n, layer.k), bytes, prec)
+    }
+
+    /// Look up a layer's kernel latency at the given operand widths.
+    /// Panics on a missing entry — the table is profiled for exactly the
+    /// model it will serve, so a miss is a programming error.
+    pub fn lookup(&self, layer: &LayerInfo, w: BitWidth, a: BitWidth) -> f64 {
+        *self
+            .entries
+            .get(&Self::key_for(layer, w, a))
+            .unwrap_or_else(|| panic!("kernel table miss: {} {:?}/{:?}", layer.name, w, a))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Serialize (e.g. to ship alongside artifacts, or to diff against a
+    /// future measured table).
+    pub fn to_json(&self) -> crate::Result<String> {
+        use crate::util::json::Value;
+        let mut rows: Vec<&KernelKey> = self.entries.keys().collect();
+        rows.sort_by_key(|k| (k.kind.clone(), k.m, k.n, k.k, k.weight_bits, k.act_bits));
+        let arr = Value::Arr(
+            rows.into_iter()
+                .map(|k| {
+                    Value::obj(vec![
+                        ("kind", Value::Str(k.kind.clone())),
+                        ("m", Value::Num(k.m as f64)),
+                        ("n", Value::Num(k.n as f64)),
+                        ("k", Value::Num(k.k as f64)),
+                        ("weight_bits", Value::Num(k.weight_bits as f64)),
+                        ("act_bits", Value::Num(k.act_bits as f64)),
+                        ("latency_s", Value::Num(self.entries[k])),
+                    ])
+                })
+                .collect(),
+        );
+        Ok(arr.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gemm_layer() -> LayerInfo {
+        LayerInfo {
+            name: "g".into(),
+            param: "g_w".into(),
+            kind: "gemm".into(),
+            quantizable: true,
+            macs: 1 << 20,
+            weight_numel: 16384,
+            act_in_numel: 128,
+            out_numel: 128,
+            m: 1,
+            n: 128,
+            k: 128,
+            quant_index: 0,
+        }
+    }
+
+    #[test]
+    fn profile_covers_all_pairs() {
+        let t = KernelTable::profile(&AccelModel::a100_like(), &[gemm_layer()]);
+        assert_eq!(t.len(), 9);
+        let l = gemm_layer();
+        for w in [BitWidth::Int4, BitWidth::Int8, BitWidth::Fp16] {
+            for a in [BitWidth::Int4, BitWidth::Int8, BitWidth::Fp16] {
+                assert!(t.lookup(&l, w, a) > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn narrower_weights_never_slower() {
+        let t = KernelTable::profile(&AccelModel::a100_like(), &[gemm_layer()]);
+        let l = gemm_layer();
+        let l4 = t.lookup(&l, BitWidth::Int4, BitWidth::Int8);
+        let l8 = t.lookup(&l, BitWidth::Int8, BitWidth::Int8);
+        let l16 = t.lookup(&l, BitWidth::Fp16, BitWidth::Fp16);
+        assert!(l4 <= l8 && l8 <= l16);
+    }
+
+    #[test]
+    fn json_roundtrip_size() {
+        let t = KernelTable::profile(&AccelModel::a100_like(), &[gemm_layer()]);
+        let s = t.to_json().unwrap();
+        assert!(s.contains("gemm"));
+    }
+}

@@ -1,0 +1,55 @@
+//! # mpq — sensitivity-guided mixed-precision post-training quantization
+//!
+//! Rust coordinator (L3) of the three-layer reproduction of *"Mixed Precision
+//! Post Training Quantization of Neural Networks with Sensitivity Guided
+//! Search"* (Schaefer et al., 2023). The JAX/Pallas layers (L2/L1) live under
+//! `python/` and are AOT-compiled into `artifacts/*.hlo.txt`; this crate owns
+//! everything on the request path:
+//!
+//! * [`runtime`] — PJRT client wrapper: load HLO text, compile, execute.
+//! * [`model`] — artifact manifests, parameter store, dataset loaders.
+//! * [`quant`] — Eq. 1 quantizer mirror, per-layer configurations, scale
+//!   calibration + backprop adjustment drivers.
+//! * [`sensitivity`] — the paper's three metrics: ε_QE, ε_N, ε_Hessian.
+//! * [`coordinator`] — the evaluation pipeline plus the bisection (Alg. 1)
+//!   and greedy (Alg. 2) configuration searches.
+//! * [`latency`] — the roofline accelerator model + kernel latency table
+//!   standing in for the paper's CUTLASS-profiled A100 measurements.
+//! * [`report`] — regenerates every table and figure of the paper.
+//! * [`server`] — a minimal batched serving loop over a quantized model.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod coordinator;
+pub mod latency;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sensitivity;
+pub mod server;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Locate the artifacts directory: `$MPQ_ARTIFACTS` or `./artifacts`,
+/// walking up from the current directory so tests/examples work from
+/// any workspace subdirectory.
+pub fn artifacts_dir() -> Option<std::path::PathBuf> {
+    if let Ok(dir) = std::env::var("MPQ_ARTIFACTS") {
+        let p = std::path::PathBuf::from(dir);
+        return p.is_dir().then_some(p);
+    }
+    let mut cur = std::env::current_dir().ok()?;
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("index.json").is_file() {
+            return Some(cand);
+        }
+        if !cur.pop() {
+            return None;
+        }
+    }
+}

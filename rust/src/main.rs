@@ -1,0 +1,390 @@
+//! `mpq` — the coordinator CLI.
+//!
+//! Everything the paper's evaluation does is reachable from here:
+//!
+//! ```text
+//! mpq info                         # list exported models + baselines
+//! mpq calibrate --model resnet_s   # two-step scale estimation
+//! mpq eval --model resnet_s --bits 8
+//! mpq sensitivity --model bert_s --metric hessian
+//! mpq search --model bert_s --algo greedy --metric hessian --target 0.99
+//! mpq table --id 1|2|3 [--model M] [--out DIR]   # regenerate paper tables
+//! mpq figure --id 1|3|4 [--model M] [--out DIR]  # regenerate figure data
+//! mpq serve --model resnet_s --bits 8 --requests 256
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::Context;
+
+use mpq::coordinator::SearchAlgo;
+use mpq::model::ArtifactIndex;
+use mpq::quant::{CalibrationOptions, QuantConfig, Scales};
+use mpq::report::experiments::{
+    self, render_search_table, search_grid, ExperimentCtx, METRIC_TRIALS,
+};
+use mpq::report::cells_to_json;
+use mpq::sensitivity::{self, MetricKind};
+use mpq::util::cli::Args;
+use mpq::Result;
+
+const USAGE: &str = "\
+mpq — sensitivity-guided mixed-precision PTQ coordinator
+
+USAGE: mpq <command> [options]
+
+COMMANDS
+  info                                       list exported models
+  calibrate   --model M [--adjust-bits 8] [--lr 1e-5] [--epochs 2]
+  eval        --model M [--bits 8]
+  sensitivity --model M --metric random|qe|noise|hessian [--trials N] [--seed S]
+  search      --model M [--algo greedy|bisection] [--metric hessian]
+              [--target 0.99] [--seed 0]
+  table       --id 1|2|3 [--model M] [--out DIR]
+  figure      --id 1|3|4 [--model M] [--out DIR]
+  ablation    --model M [--target 0.99] [--out DIR]
+  serve       --model M [--bits 8] [--requests 256] [--concurrency 8]
+
+GLOBAL
+  --artifacts DIR    artifacts directory (default: $MPQ_ARTIFACTS or ./artifacts)
+";
+
+fn artifacts_dir(args: &Args) -> Result<PathBuf> {
+    if let Some(d) = args.get_str("artifacts") {
+        return Ok(PathBuf::from(d));
+    }
+    mpq::artifacts_dir()
+        .ok_or_else(|| anyhow::anyhow!("no artifacts directory found — run `make artifacts` first"))
+}
+
+fn all_models(dir: &PathBuf, only: Option<&str>) -> Result<Vec<String>> {
+    let index = ArtifactIndex::load(dir)?;
+    Ok(index
+        .models
+        .iter()
+        .map(|m| m.model.clone())
+        .filter(|m| only.map_or(true, |o| o == m))
+        .collect())
+}
+
+fn parse_algo(s: &str) -> Result<SearchAlgo> {
+    match s.to_ascii_lowercase().as_str() {
+        "greedy" => Ok(SearchAlgo::Greedy),
+        "bisection" => Ok(SearchAlgo::Bisection),
+        other => anyhow::bail!("unknown algo `{other}` (greedy|bisection)"),
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    if args.cmd.is_empty() || args.cmd == "help" || args.flag("help") {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let dir = artifacts_dir(&args)?;
+    match args.cmd.as_str() {
+        "info" => cmd_info(&dir),
+        "calibrate" => cmd_calibrate(&dir, &args),
+        "eval" => cmd_eval(&dir, &args),
+        "sensitivity" => cmd_sensitivity(&dir, &args),
+        "search" => cmd_search(&dir, &args),
+        "table" => cmd_table(&dir, &args),
+        "figure" => cmd_figure(&dir, &args),
+        "ablation" => cmd_ablation(&dir, &args),
+        "serve" => cmd_serve(&dir, &args),
+        other => {
+            eprint!("unknown command `{other}`\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_info(dir: &PathBuf) -> Result<()> {
+    let index = ArtifactIndex::load(dir)?;
+    println!("artifacts: {} (schema v{})", dir.display(), index.version);
+    for entry in &index.models {
+        let ctx = ExperimentCtx::new(dir, &entry.model)?;
+        let m = &ctx.pipeline.artifacts.manifest;
+        println!(
+            "  {:>10}: task={} layers={} (quant {}) eval_batch={} float acc={:.2}% \
+             size(fp16)={:.2}MB latency(fp16)={:.3}ms",
+            m.model,
+            m.task,
+            m.layers.len(),
+            m.num_quant_layers,
+            m.eval_batch,
+            m.float_val_acc * 100.0,
+            ctx.cost.base_size_mb(),
+            ctx.cost.base_latency_ms(),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(dir: &PathBuf, args: &Args) -> Result<()> {
+    let model = args.req_str("model")?;
+    let mut ctx = ExperimentCtx::new(dir, model)?;
+    let opts = CalibrationOptions {
+        adjust_bits: args.get_or("adjust-bits", 8.0f32)?,
+        lr: args.get_or("lr", 1e-5f32)?,
+        epochs: args.get_or("epochs", 2usize)?,
+    };
+    let report = ctx.pipeline.calibrate(&opts)?;
+    ctx.pipeline
+        .scales
+        .save(&dir.join(format!("{model}_scales.json")))
+        .context("saving scales")?;
+    println!(
+        "calibrated {model}: adjustment loss {:.4} -> {:.4} over {} steps",
+        report.loss_before, report.loss_after, report.steps
+    );
+    Ok(())
+}
+
+fn cmd_eval(dir: &PathBuf, args: &Args) -> Result<()> {
+    let model = args.req_str("model")?;
+    let bits = args.get_or("bits", 8.0f32)?;
+    let mut ctx = ExperimentCtx::new(dir, model)?;
+    ctx.ensure_calibrated()?;
+    let n = ctx.pipeline.num_quant_layers();
+    let cfg = QuantConfig::uniform(n, bits);
+    let r = ctx.pipeline.eval_config(&cfg, None)?;
+    println!(
+        "{model} @ uniform {bits}b: loss={:.4} accuracy={:.2}% (float {:.2}%) \
+         rel_size={:.2}% rel_latency={:.2}%",
+        r.loss,
+        r.accuracy * 100.0,
+        ctx.pipeline.float_val_acc() * 100.0,
+        ctx.cost.rel_size(&cfg) * 100.0,
+        ctx.cost.rel_latency(&cfg) * 100.0,
+    );
+    Ok(())
+}
+
+fn cmd_sensitivity(dir: &PathBuf, args: &Args) -> Result<()> {
+    let model = args.req_str("model")?;
+    let metric: MetricKind = args.req("metric")?;
+    let trials = args.get_or("trials", METRIC_TRIALS)?;
+    let seed = args.get_or("seed", 0u64)?;
+    let mut ctx = ExperimentCtx::new(dir, model)?;
+    ctx.ensure_calibrated()?;
+    let sens = sensitivity::compute(&mut ctx.pipeline, metric, trials, seed)?;
+    let names: Vec<String> = ctx
+        .pipeline
+        .artifacts
+        .manifest
+        .quant_layers()
+        .iter()
+        .map(|l| l.name.clone())
+        .collect();
+    println!("{} sensitivity for {model} (least sensitive first):", metric.label());
+    for &layer in &sens.order {
+        println!("  {:>20}  score={:.4e}", names[layer], sens.scores[layer]);
+    }
+    Ok(())
+}
+
+fn cmd_search(dir: &PathBuf, args: &Args) -> Result<()> {
+    let model = args.req_str("model")?;
+    let algo = parse_algo(args.get_str("algo").unwrap_or("greedy"))?;
+    let metric: MetricKind = args.get_or("metric", MetricKind::Hessian)?;
+    let target = args.get_or("target", 0.99f64)?;
+    let seed = args.get_or("seed", 0u64)?;
+    let mut ctx = ExperimentCtx::new(dir, model)?;
+    ctx.ensure_calibrated()?;
+    let sens = ctx.cached_sensitivity(metric, METRIC_TRIALS, seed)?;
+    let cell = experiments::run_cell(&mut ctx, algo, &sens, seed, target)?;
+    println!(
+        "{model} {}/{} target {:.1}%: accuracy={:.2}% size={:.2}% latency={:.2}% \
+         ({} evals, {:.1}s)",
+        cell.algo.label(),
+        cell.metric.label(),
+        target * 100.0,
+        cell.accuracy * 100.0,
+        cell.rel_size_pct,
+        cell.rel_latency_pct,
+        cell.evals,
+        cell.search_seconds,
+    );
+    let bits: Vec<u32> = cell.config.bits_w.iter().map(|&b| b as u32).collect();
+    println!("per-layer bits: {bits:?}");
+    let stats = ctx.pipeline.stats;
+    println!(
+        "pipeline: {} evals, {} cache hits, {} batch execs, {} early exits",
+        stats.evals, stats.cache_hits, stats.batch_execs, stats.early_exits
+    );
+    Ok(())
+}
+
+fn cmd_table(dir: &PathBuf, args: &Args) -> Result<()> {
+    let id = args.req::<u32>("id")?;
+    let out = args.get_str("out").map(PathBuf::from);
+    let models = all_models(dir, args.get_str("model"))?;
+    let mut rendered = String::new();
+    for m in &models {
+        let mut ctx = ExperimentCtx::new(dir, m)?;
+        let text = match id {
+            1 => experiments::table1(&mut ctx)?.render(),
+            2 | 3 => {
+                let targets: &[f64] = if id == 2 { &[0.99, 0.999] } else { &[0.90] };
+                let cells = search_grid(&mut ctx, targets, 0)?;
+                if let Some(dir_out) = &out {
+                    std::fs::create_dir_all(dir_out)?;
+                    std::fs::write(dir_out.join(format!("table{id}_{m}.json")), cells_to_json(&cells))?;
+                }
+                render_search_table(
+                    &format!("Table {id} — {m} (relative to fp16 baseline)"),
+                    &cells,
+                    targets,
+                )
+                .render()
+            }
+            _ => anyhow::bail!("unknown table id {id} (1, 2 or 3)"),
+        };
+        println!("{text}");
+        rendered.push_str(&text);
+    }
+    if let Some(dir_out) = &out {
+        std::fs::create_dir_all(dir_out)?;
+        std::fs::write(dir_out.join(format!("table{id}.txt")), rendered)?;
+    }
+    Ok(())
+}
+
+fn cmd_figure(dir: &PathBuf, args: &Args) -> Result<()> {
+    let id = args.req::<u32>("id")?;
+    let out = args.get_str("out").map(PathBuf::from);
+    let models = all_models(dir, args.get_str("model"))?;
+    let mut rendered = String::new();
+    for m in &models {
+        let mut ctx = ExperimentCtx::new(dir, m)?;
+        let text = match id {
+            1 => {
+                // Best (Hessian-greedy) cells at 99% and 99.9%.
+                let sens = ctx.cached_sensitivity(MetricKind::Hessian, METRIC_TRIALS, 0)?;
+                let mut cells = Vec::new();
+                for t in [0.99, 0.999] {
+                    cells.push(experiments::run_cell(&mut ctx, SearchAlgo::Greedy, &sens, 0, t)?);
+                }
+                let float_acc = vec![(m.clone(), ctx.pipeline.float_val_acc())];
+                experiments::fig1(&cells, &float_acc).render()
+            }
+            3 => {
+                let sensh = ctx.cached_sensitivity(MetricKind::Hessian, METRIC_TRIALS, 0)?;
+                let mut cells = Vec::new();
+                for algo in [SearchAlgo::Bisection, SearchAlgo::Greedy] {
+                    cells.push(experiments::run_cell(&mut ctx, algo, &sensh, 0, 0.99)?);
+                }
+                cells.push(experiments::run_cell(&mut ctx, SearchAlgo::Greedy, &sensh, 0, 0.999)?);
+                let names: Vec<String> = ctx
+                    .pipeline
+                    .artifacts
+                    .manifest
+                    .quant_layers()
+                    .iter()
+                    .map(|l| l.name.clone())
+                    .collect();
+                experiments::fig3(&cells, &names).render()
+            }
+            4 => {
+                let (curves, dist) = experiments::fig4(&mut ctx, 5)?;
+                format!("{}\n{}", curves.render(), dist.render())
+            }
+            _ => anyhow::bail!("unknown figure id {id} (1, 3 or 4)"),
+        };
+        println!("{text}");
+        rendered.push_str(&text);
+    }
+    if let Some(dir_out) = &out {
+        std::fs::create_dir_all(dir_out)?;
+        std::fs::write(dir_out.join(format!("figure{id}.txt")), rendered)?;
+    }
+    Ok(())
+}
+
+fn cmd_ablation(dir: &PathBuf, args: &Args) -> Result<()> {
+    let model = args.req_str("model")?;
+    let target = args.get_or("target", 0.99f64)?;
+    let out = args.get_str("out").map(PathBuf::from);
+    let mut ctx = ExperimentCtx::new(dir, model)?;
+    let mut rendered = String::new();
+    for table in [
+        mpq::report::ablation::weight_only(&mut ctx, target)?,
+        mpq::report::ablation::accelerators(&mut ctx)?,
+        mpq::report::ablation::adjustment(dir, model)?,
+    ] {
+        let text = table.render();
+        println!("{text}");
+        rendered.push_str(&text);
+    }
+    if let Some(dir_out) = &out {
+        std::fs::create_dir_all(dir_out)?;
+        std::fs::write(dir_out.join(format!("ablation_{model}.txt")), rendered)?;
+    }
+    Ok(())
+}
+
+/// Drive the batched server with concurrent clients and print latency
+/// percentiles — the QoS view the paper optimizes for.
+fn cmd_serve(dir: &PathBuf, args: &Args) -> Result<()> {
+    let model = args.req_str("model")?.to_string();
+    let bits = args.get_or("bits", 8.0f32)?;
+    let requests = args.get_or("requests", 256usize)?;
+    let concurrency = args.get_or("concurrency", 8usize)?.max(1);
+
+    // Build a pipeline once to learn shapes + produce examples from val.
+    let ctx = ExperimentCtx::new(dir, &model)?;
+    let n = ctx.pipeline.num_quant_layers();
+    let val_count = ctx.pipeline.artifacts.val.count;
+    let examples: Vec<mpq::runtime::HostTensor> =
+        (0..requests).map(|i| ctx.pipeline.artifacts.val.x.slice_rows(i % val_count, 1)).collect();
+    drop(ctx);
+
+    let cfg = QuantConfig::uniform(n, bits);
+    let scales_path = dir.join(format!("{model}_scales.json"));
+    let (handle, _join) = mpq::server::spawn(
+        dir.clone(),
+        model.clone(),
+        cfg,
+        mpq::server::ServeOptions::default(),
+        move |p| {
+            if scales_path.is_file() {
+                p.scales = Scales::load(&scales_path)?;
+                p.sync_scales()?;
+            } else {
+                p.calibrate(&CalibrationOptions::default())?;
+            }
+            Ok(())
+        },
+    )?;
+
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..concurrency {
+            let handle = handle.clone();
+            let examples = &examples;
+            s.spawn(move || {
+                for (i, ex) in examples.iter().enumerate() {
+                    if i % concurrency == c {
+                        let _ = handle.infer(ex.clone());
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = handle.stats();
+    println!(
+        "served {} requests in {wall:.2}s ({:.1} req/s) @ uniform {bits}b x{concurrency} clients",
+        stats.requests,
+        stats.requests as f64 / wall,
+    );
+    println!(
+        "latency: mean={:.1}ms p50={:.1}ms p99={:.1}ms | mean batch fill {:.1}",
+        stats.mean_us() / 1e3,
+        stats.percentile_us(0.5) as f64 / 1e3,
+        stats.percentile_us(0.99) as f64 / 1e3,
+        stats.mean_batch_fill()
+    );
+    Ok(())
+}

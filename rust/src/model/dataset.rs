@@ -1,0 +1,88 @@
+//! Dataset splits written by `python/compile/data.py` as raw binaries.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use super::manifest::SplitMeta;
+use crate::runtime::HostTensor;
+
+/// One dataset split held in host memory.
+pub struct Split {
+    pub x: HostTensor,
+    pub y: HostTensor,
+    pub count: usize,
+}
+
+fn read_f32(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    ensure!(bytes.len() % 4 == 0, "{} not a multiple of 4 bytes", path.display());
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+fn read_i32(path: &Path) -> Result<Vec<i32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    ensure!(bytes.len() % 4 == 0, "{} not a multiple of 4 bytes", path.display());
+    Ok(bytes.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+fn load_tensor(dir: &Path, file: &str, dtype: &str, dims: &[usize]) -> Result<HostTensor> {
+    let path = dir.join(file);
+    let numel: usize = dims.iter().product();
+    let t = match dtype {
+        "float32" | "f32" => {
+            let data = read_f32(&path)?;
+            ensure!(data.len() == numel, "{file}: {} elems, expected {numel}", data.len());
+            HostTensor::f32(data, dims.to_vec())
+        }
+        "int32" | "i32" => {
+            let data = read_i32(&path)?;
+            ensure!(data.len() == numel, "{file}: {} elems, expected {numel}", data.len());
+            HostTensor::i32(data, dims.to_vec())
+        }
+        other => anyhow::bail!("unsupported dtype {other}"),
+    };
+    Ok(t)
+}
+
+impl Split {
+    pub fn load(dir: &Path, meta: &SplitMeta) -> Result<Self> {
+        let x = load_tensor(dir, &meta.x_file, &meta.x_dtype, &meta.x_shape)?;
+        let y = load_tensor(dir, &meta.y_file, &meta.y_dtype, &meta.y_shape)?;
+        ensure!(x.dims()[0] == meta.count && y.dims()[0] == meta.count, "split count mismatch");
+        Ok(Self { x, y, count: meta.count })
+    }
+
+    /// Number of full batches of size `batch` (trailing remainder dropped,
+    /// matching the python-side evaluation convention).
+    pub fn num_batches(&self, batch: usize) -> usize {
+        self.count / batch
+    }
+
+    /// The `i`-th full batch as host tensors.
+    pub fn batch(&self, i: usize, batch: usize) -> (HostTensor, HostTensor) {
+        (self.x.slice_rows(i * batch, batch), self.y.slice_rows(i * batch, batch))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batching() {
+        let s = Split {
+            x: HostTensor::f32((0..20).map(|v| v as f32).collect(), vec![10, 2]),
+            y: HostTensor::i32((0..10).collect(), vec![10]),
+            count: 10,
+        };
+        assert_eq!(s.num_batches(4), 2);
+        let (x, y) = s.batch(1, 4);
+        assert_eq!(x.dims(), &[4, 2]);
+        assert_eq!(y.dims(), &[4]);
+        match y {
+            HostTensor::I32 { data, .. } => assert_eq!(data, vec![4, 5, 6, 7]),
+            _ => panic!(),
+        }
+    }
+}

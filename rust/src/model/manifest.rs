@@ -1,0 +1,313 @@
+//! The JSON manifest emitted by `python/compile/aot.py` — the contract
+//! between the build path and this coordinator. Field names must stay in
+//! sync with `export_model` (checked by `python/tests/test_aot.py` and the
+//! integration tests here).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// Manifest schema version this crate understands.
+pub const SUPPORTED_VERSION: u32 = 4;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub model: String,
+    pub task: String,
+    pub num_quant_layers: usize,
+    pub eval_batch: usize,
+    pub calib_batch: usize,
+    pub x_dtype: String,
+    pub x_shape: Vec<usize>,
+    pub y_shape: Vec<usize>,
+    pub params_bin: String,
+    pub params: Vec<ParamInfo>,
+    pub layers: Vec<LayerInfo>,
+    pub graphs: HashMap<String, String>,
+    pub data: HashMap<String, SplitMeta>,
+    pub float_val_loss: f64,
+    pub float_val_acc: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub numel: usize,
+    /// Element (not byte) offset into the flat f32 parameter blob.
+    pub offset: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct LayerInfo {
+    pub name: String,
+    /// Weight parameter name; empty for non-parameterized kernels.
+    pub param: String,
+    /// `conv2d` | `gemm` | `attn_gemm` | `embed`.
+    pub kind: String,
+    pub quantizable: bool,
+    /// Multiply-accumulates at inference batch 1.
+    pub macs: u64,
+    pub weight_numel: u64,
+    pub act_in_numel: u64,
+    pub out_numel: u64,
+    /// GEMM-equivalent dimensions (convs via implicit GEMM).
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+    /// Index into the quantization vectors; -1 if not quantizable.
+    pub quant_index: i64,
+}
+
+#[derive(Debug, Clone)]
+pub struct SplitMeta {
+    pub count: usize,
+    pub x_shape: Vec<usize>,
+    pub x_dtype: String,
+    pub y_shape: Vec<usize>,
+    pub y_dtype: String,
+    pub x_file: String,
+    pub y_file: String,
+}
+
+fn parse_param(v: &Value) -> Result<ParamInfo> {
+    Ok(ParamInfo {
+        name: v.req("name")?.as_str()?.to_string(),
+        shape: v.req("shape")?.as_usize_vec()?,
+        numel: v.req("numel")?.as_usize()?,
+        offset: v.req("offset")?.as_usize()?,
+    })
+}
+
+fn parse_layer(v: &Value) -> Result<LayerInfo> {
+    Ok(LayerInfo {
+        name: v.req("name")?.as_str()?.to_string(),
+        param: v.req("param")?.as_str()?.to_string(),
+        kind: v.req("kind")?.as_str()?.to_string(),
+        quantizable: v.req("quantizable")?.as_bool()?,
+        macs: v.req("macs")?.as_u64()?,
+        weight_numel: v.req("weight_numel")?.as_u64()?,
+        act_in_numel: v.req("act_in_numel")?.as_u64()?,
+        out_numel: v.req("out_numel")?.as_u64()?,
+        m: v.req("m")?.as_u64()?,
+        n: v.req("n")?.as_u64()?,
+        k: v.req("k")?.as_u64()?,
+        quant_index: v.req("quant_index")?.as_i64()?,
+    })
+}
+
+fn parse_split(v: &Value) -> Result<SplitMeta> {
+    Ok(SplitMeta {
+        count: v.req("count")?.as_usize()?,
+        x_shape: v.req("x_shape")?.as_usize_vec()?,
+        x_dtype: v.req("x_dtype")?.as_str()?.to_string(),
+        y_shape: v.req("y_shape")?.as_usize_vec()?,
+        y_dtype: v.req("y_dtype")?.as_str()?.to_string(),
+        x_file: v.req("x_file")?.as_str()?.to_string(),
+        y_file: v.req("y_file")?.as_str()?.to_string(),
+    })
+}
+
+impl Manifest {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let params = v.req("params")?.as_arr()?.iter().map(parse_param).collect::<Result<_>>()?;
+        let layers = v.req("layers")?.as_arr()?.iter().map(parse_layer).collect::<Result<_>>()?;
+        let graphs = match v.req("graphs")? {
+            Value::Obj(m) => m
+                .iter()
+                .map(|(k, val)| Ok((k.clone(), val.as_str()?.to_string())))
+                .collect::<Result<HashMap<_, _>>>()?,
+            _ => anyhow::bail!("graphs must be an object"),
+        };
+        let data = match v.req("data")? {
+            Value::Obj(m) => m
+                .iter()
+                .map(|(k, val)| Ok((k.clone(), parse_split(val)?)))
+                .collect::<Result<HashMap<_, _>>>()?,
+            _ => anyhow::bail!("data must be an object"),
+        };
+        let m = Manifest {
+            version: v.req("version")?.as_usize()? as u32,
+            model: v.req("model")?.as_str()?.to_string(),
+            task: v.req("task")?.as_str()?.to_string(),
+            num_quant_layers: v.req("num_quant_layers")?.as_usize()?,
+            eval_batch: v.req("eval_batch")?.as_usize()?,
+            calib_batch: v.req("calib_batch")?.as_usize()?,
+            x_dtype: v.req("x_dtype")?.as_str()?.to_string(),
+            x_shape: v.req("x_shape")?.as_usize_vec()?,
+            y_shape: v.req("y_shape")?.as_usize_vec()?,
+            params_bin: v.req("params_bin")?.as_str()?.to_string(),
+            params,
+            layers,
+            graphs,
+            data,
+            float_val_loss: v.req("float_val_loss")?.as_f64()?,
+            float_val_acc: v.req("float_val_acc")?.as_f64()?,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let v = json::parse(&text)
+            .with_context(|| format!("parsing manifest {}", path.display()))?;
+        Self::from_json(&v)
+    }
+
+    /// Internal consistency checks run at load time — fail fast on stale or
+    /// hand-edited artifacts rather than deep inside a search.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.version == SUPPORTED_VERSION,
+            "manifest version {} != supported {}",
+            self.version,
+            SUPPORTED_VERSION
+        );
+        let nq = self.layers.iter().filter(|l| l.quantizable).count();
+        ensure!(
+            nq == self.num_quant_layers,
+            "quantizable layer count {nq} != num_quant_layers {}",
+            self.num_quant_layers
+        );
+        // quant_index must be exactly 0..nq in layer order.
+        let mut expect = 0i64;
+        for l in &self.layers {
+            if l.quantizable {
+                ensure!(l.quant_index == expect, "layer {} quant_index out of order", l.name);
+                expect += 1;
+            } else {
+                ensure!(l.quant_index == -1, "non-quantizable layer {} has quant_index", l.name);
+            }
+        }
+        // Parameter offsets must be monotone and tightly packed.
+        let mut off = 0usize;
+        for p in &self.params {
+            ensure!(p.offset == off, "param {} offset {} != expected {off}", p.name, p.offset);
+            ensure!(p.numel == p.shape.iter().product::<usize>(), "param {} numel", p.name);
+            off += p.numel;
+        }
+        // Every quantizable layer's weight param must exist.
+        for l in self.layers.iter().filter(|l| l.quantizable) {
+            ensure!(
+                self.params.iter().any(|p| p.name == l.param),
+                "layer {} references missing param {}",
+                l.name,
+                l.param
+            );
+        }
+        for graph in ["eval", "logits", "actstats", "scale_grad", "hvp"] {
+            ensure!(self.graphs.contains_key(graph), "missing graph {graph}");
+        }
+        Ok(())
+    }
+
+    /// Total parameter elements (f32 blob length).
+    pub fn total_param_elems(&self) -> usize {
+        self.params.iter().map(|p| p.numel).sum()
+    }
+
+    /// Quantizable layers in quant-index order.
+    pub fn quant_layers(&self) -> Vec<&LayerInfo> {
+        self.layers.iter().filter(|l| l.quantizable).collect()
+    }
+
+    /// Parameter table index for a parameter name.
+    pub fn param_index(&self, name: &str) -> Option<usize> {
+        self.params.iter().position(|p| p.name == name)
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_fixtures {
+    /// A minimal well-formed manifest JSON for unit tests across modules.
+    pub fn toy_manifest_json() -> String {
+        r#"{
+          "version": 4, "model": "toy", "task": "vision",
+          "num_quant_layers": 2, "eval_batch": 4, "calib_batch": 4,
+          "x_dtype": "f32", "x_shape": [4], "y_shape": [],
+          "params_bin": "toy_params.bin",
+          "params": [
+            {"name": "l0_w", "shape": [4, 4], "numel": 16, "offset": 0},
+            {"name": "l0_b", "shape": [4], "numel": 4, "offset": 16},
+            {"name": "l1_w", "shape": [4, 2], "numel": 8, "offset": 20}
+          ],
+          "layers": [
+            {"name": "l0", "param": "l0_w", "kind": "gemm", "quantizable": true,
+             "macs": 16, "weight_numel": 16, "act_in_numel": 4, "out_numel": 4,
+             "m": 1, "n": 4, "k": 4, "quant_index": 0},
+            {"name": "mid", "param": "", "kind": "attn_gemm", "quantizable": false,
+             "macs": 8, "weight_numel": 0, "act_in_numel": 4, "out_numel": 4,
+             "m": 1, "n": 2, "k": 4, "quant_index": -1},
+            {"name": "l1", "param": "l1_w", "kind": "gemm", "quantizable": true,
+             "macs": 8, "weight_numel": 8, "act_in_numel": 4, "out_numel": 2,
+             "m": 1, "n": 2, "k": 4, "quant_index": 1}
+          ],
+          "graphs": {"eval": "toy_eval.hlo.txt", "logits": "toy_logits.hlo.txt",
+                      "actstats": "toy_actstats.hlo.txt",
+                      "scale_grad": "toy_scale_grad.hlo.txt", "hvp": "toy_hvp.hlo.txt"},
+          "data": {"val": {"count": 8, "x_shape": [8, 4], "x_dtype": "f32",
+                            "y_shape": [8], "y_dtype": "i32",
+                            "x_file": "toy_val_x.bin", "y_file": "toy_val_y.bin"}},
+          "float_val_loss": 0.1, "float_val_acc": 0.97
+        }"#
+        .to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Manifest {
+        let v = json::parse(&test_fixtures::toy_manifest_json()).unwrap();
+        Manifest::from_json(&v).unwrap()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let m = toy();
+        assert_eq!(m.model, "toy");
+        assert_eq!(m.num_quant_layers, 2);
+        assert_eq!(m.total_param_elems(), 28);
+        assert_eq!(m.quant_layers().len(), 2);
+        assert_eq!(m.quant_layers()[1].name, "l1");
+        assert_eq!(m.param_index("l1_w"), Some(2));
+        assert_eq!(m.data["val"].count, 8);
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let text = test_fixtures::toy_manifest_json().replace("\"version\": 4", "\"version\": 99");
+        let v = json::parse(&text).unwrap();
+        assert!(Manifest::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_quant_count() {
+        let text = test_fixtures::toy_manifest_json()
+            .replace("\"num_quant_layers\": 2", "\"num_quant_layers\": 3");
+        let v = json::parse(&text).unwrap();
+        assert!(Manifest::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn rejects_gapped_offsets() {
+        let text = test_fixtures::toy_manifest_json().replace("\"offset\": 16", "\"offset\": 17");
+        let v = json::parse(&text).unwrap();
+        assert!(Manifest::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_graph() {
+        let text =
+            test_fixtures::toy_manifest_json().replace("\"hvp\": \"toy_hvp.hlo.txt\"", "\"zzz\": \"x\"");
+        let v = json::parse(&text).unwrap();
+        assert!(Manifest::from_json(&v).is_err());
+    }
+}

@@ -1,0 +1,82 @@
+//! Artifact model descriptions: manifests, parameters, datasets.
+
+mod dataset;
+mod manifest;
+mod params;
+
+pub use dataset::Split;
+pub use manifest::{LayerInfo, Manifest, ParamInfo, SplitMeta};
+pub use params::ParamStore;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json;
+
+/// `artifacts/index.json` — the list of exported models.
+#[derive(Debug)]
+pub struct ArtifactIndex {
+    pub version: u32,
+    pub models: Vec<ArtifactEntry>,
+}
+
+#[derive(Debug)]
+pub struct ArtifactEntry {
+    pub model: String,
+    pub manifest: String,
+}
+
+impl ArtifactIndex {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("index.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        let models = v
+            .req("models")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                Ok(ArtifactEntry {
+                    model: e.req("model")?.as_str()?.to_string(),
+                    manifest: e.req("manifest")?.as_str()?.to_string(),
+                })
+            })
+            .collect::<Result<_>>()?;
+        Ok(Self { version: v.req("version")?.as_usize()? as u32, models })
+    }
+}
+
+/// Everything loaded from disk for one model: manifest + parameter blob +
+/// the three data splits. Graph compilation happens lazily in the pipeline.
+pub struct ModelArtifacts {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    pub params: ParamStore,
+    pub calib_sens: Split,
+    pub calib_adj: Split,
+    pub val: Split,
+}
+
+impl ModelArtifacts {
+    /// Load `{name}_manifest.json` and everything it references.
+    pub fn load(dir: &Path, name: &str) -> Result<Self> {
+        let manifest = Manifest::load(&dir.join(format!("{name}_manifest.json")))?;
+        let params = ParamStore::load(dir, &manifest)?;
+        let calib_sens = Split::load(dir, &manifest.data["calib_sens"])?;
+        let calib_adj = Split::load(dir, &manifest.data["calib_adj"])?;
+        let val = Split::load(dir, &manifest.data["val"])?;
+        Ok(Self { dir: dir.to_path_buf(), manifest, params, calib_sens, calib_adj, val })
+    }
+
+    /// Absolute path of one of this model's HLO graph artifacts.
+    pub fn graph_path(&self, graph: &str) -> Result<PathBuf> {
+        let file = self
+            .manifest
+            .graphs
+            .get(graph)
+            .ok_or_else(|| anyhow::anyhow!("model {} has no graph {graph}", self.manifest.model))?;
+        Ok(self.dir.join(file))
+    }
+}

@@ -1,0 +1,114 @@
+//! Flat f32 parameter blob + per-parameter views.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use super::manifest::Manifest;
+
+/// The model's parameters as one contiguous little-endian f32 blob, in
+/// manifest order — exactly the layout `aot.py` wrote and the AOT graphs
+/// expect as their leading arguments.
+#[derive(Clone)]
+pub struct ParamStore {
+    blob: Vec<f32>,
+    /// (name, element offset, numel, dims) per parameter, manifest order.
+    index: Vec<(String, usize, usize, Vec<usize>)>,
+}
+
+impl ParamStore {
+    pub fn load(dir: &Path, manifest: &Manifest) -> Result<Self> {
+        let path = dir.join(&manifest.params_bin);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading params blob {}", path.display()))?;
+        ensure!(bytes.len() % 4 == 0, "params blob not a multiple of 4 bytes");
+        let blob: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        ensure!(
+            blob.len() == manifest.total_param_elems(),
+            "params blob has {} elems, manifest expects {}",
+            blob.len(),
+            manifest.total_param_elems()
+        );
+        let index = manifest
+            .params
+            .iter()
+            .map(|p| (p.name.clone(), p.offset, p.numel, p.shape.clone()))
+            .collect();
+        Ok(Self { blob, index })
+    }
+
+    /// Build directly from host data (tests / synthetic stores).
+    pub fn from_parts(blob: Vec<f32>, index: Vec<(String, usize, usize, Vec<usize>)>) -> Self {
+        Self { blob, index }
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn name(&self, i: usize) -> &str {
+        &self.index[i].0
+    }
+
+    pub fn dims(&self, i: usize) -> &[usize] {
+        &self.index[i].3
+    }
+
+    /// View of parameter `i`'s elements.
+    pub fn values(&self, i: usize) -> &[f32] {
+        let (_, off, n, _) = &self.index[i];
+        &self.blob[*off..*off + *n]
+    }
+
+    /// Mutable view (used by the noise metric's perturb-and-eval).
+    pub fn values_mut(&mut self, i: usize) -> &mut [f32] {
+        let (_, off, n, _) = self.index[i].clone();
+        &mut self.blob[off..off + n]
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.index.iter().position(|(n, ..)| n == name)
+    }
+
+    /// `max |w|` of parameter `i` — the paper's weight calibration statistic.
+    pub fn max_abs(&self, i: usize) -> f32 {
+        self.values(i).iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> ParamStore {
+        ParamStore::from_parts(
+            vec![1.0, -2.0, 3.0, -4.5, 0.5, 0.0],
+            vec![
+                ("a".into(), 0, 4, vec![2, 2]),
+                ("b".into(), 4, 2, vec![2]),
+            ],
+        )
+    }
+
+    #[test]
+    fn views_and_maxabs() {
+        let s = store();
+        assert_eq!(s.values(0), &[1.0, -2.0, 3.0, -4.5]);
+        assert_eq!(s.values(1), &[0.5, 0.0]);
+        assert_eq!(s.max_abs(0), 4.5);
+        assert_eq!(s.max_abs(1), 0.5);
+        assert_eq!(s.index_of("b"), Some(1));
+        assert_eq!(s.dims(0), &[2, 2]);
+    }
+
+    #[test]
+    fn mutation_is_local() {
+        let mut s = store();
+        s.values_mut(1)[0] = 9.0;
+        assert_eq!(s.values(0), &[1.0, -2.0, 3.0, -4.5]);
+        assert_eq!(s.values(1), &[9.0, 0.0]);
+    }
+}

@@ -1,0 +1,145 @@
+//! Calibration math: max-based scale initialization (the paper's step 1)
+//! and the Adam machinery for backprop scale adjustment (step 2).
+//!
+//! Graph execution lives in the coordinator's [`crate::coordinator::Pipeline`];
+//! this module holds the pure host-side pieces so they are unit-testable
+//! without a PJRT device.
+
+
+use crate::model::{Manifest, ParamStore};
+use crate::quant::Scales;
+
+/// Options for the two-step scale estimation.
+#[derive(Debug, Clone)]
+pub struct CalibrationOptions {
+    /// Bit width at which scales are adjusted (quantization must be active
+    /// for gradients to be informative; 8 is the paper's highest int width).
+    pub adjust_bits: f32,
+    /// Adam learning rate for scale adjustment (paper: 1e-5).
+    pub lr: f32,
+    /// Passes over the calibration split.
+    pub epochs: usize,
+}
+
+impl Default for CalibrationOptions {
+    fn default() -> Self {
+        Self { adjust_bits: 8.0, lr: 1e-5, epochs: 2 }
+    }
+}
+
+/// Outcome of the adjustment loop, recorded for reports/EXPERIMENTS.md.
+#[derive(Debug, Clone)]
+pub struct AdjustReport {
+    pub loss_before: f64,
+    pub loss_after: f64,
+    pub steps: usize,
+}
+
+/// Step 1 (weights): `alpha = 1/max|w|`, `gamma = max|w|` per quant layer.
+/// Activation scales start at identity and are filled in by the pipeline
+/// from the `actstats` graph.
+pub fn weight_scales(manifest: &Manifest, params: &ParamStore) -> Scales {
+    let layers = manifest.quant_layers();
+    let mut scales = Scales::identity(layers.len());
+    for (qi, layer) in layers.iter().enumerate() {
+        let pi = params
+            .index_of(&layer.param)
+            .unwrap_or_else(|| panic!("param {} missing", layer.param));
+        let maxabs = params.max_abs(pi).max(1e-12);
+        scales.alpha_w[qi] = 1.0 / maxabs;
+        scales.gamma_w[qi] = maxabs;
+    }
+    scales
+}
+
+/// Fill activation scales from per-layer `max |a|` statistics.
+pub fn apply_act_stats(scales: &mut Scales, act_maxabs: &[f32]) {
+    assert_eq!(scales.num_layers(), act_maxabs.len());
+    for (qi, &m) in act_maxabs.iter().enumerate() {
+        let m = m.max(1e-12);
+        scales.alpha_a[qi] = 1.0 / m;
+        scales.gamma_a[qi] = m;
+    }
+}
+
+/// Minimal Adam over the four scale vectors (the only trainable state in
+/// PTQ — model parameters are never touched, which is the paper's central
+/// deployment argument).
+pub struct ScaleAdam {
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: i32,
+    lr: f32,
+}
+
+impl ScaleAdam {
+    pub fn new(dim: usize, lr: f32) -> Self {
+        Self { m: vec![0.0; dim * 4], v: vec![0.0; dim * 4], t: 0, lr }
+    }
+
+    /// Apply one update. `grads` are the four gradient vectors in the order
+    /// (d_alpha_w, d_gamma_w, d_alpha_a, d_gamma_a), concatenated.
+    pub fn step(&mut self, scales: &mut Scales, grads: &[f32]) {
+        const B1: f32 = 0.9;
+        const B2: f32 = 0.999;
+        const EPS: f32 = 1e-8;
+        let dim = scales.num_layers();
+        assert_eq!(grads.len(), dim * 4);
+        self.t += 1;
+        let t = self.t as f32;
+        let views: [&mut Vec<f32>; 4] = [
+            &mut scales.alpha_w,
+            &mut scales.gamma_w,
+            &mut scales.alpha_a,
+            &mut scales.gamma_a,
+        ];
+        for (vi, vec) in views.into_iter().enumerate() {
+            for i in 0..dim {
+                let gi = vi * dim + i;
+                let g = grads[gi];
+                self.m[gi] = B1 * self.m[gi] + (1.0 - B1) * g;
+                self.v[gi] = B2 * self.v[gi] + (1.0 - B2) * g * g;
+                let mhat = self.m[gi] / (1.0 - B1.powf(t));
+                let vhat = self.v[gi] / (1.0 - B2.powf(t));
+                vec[i] -= self.lr * mhat / (vhat.sqrt() + EPS);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_descends_quadratic() {
+        // Minimize sum((s - 3)^2) over all four vectors; Adam must move
+        // every component toward 3.
+        let mut scales = Scales::identity(2);
+        let mut opt = ScaleAdam::new(2, 0.05);
+        for _ in 0..500 {
+            let g: Vec<f32> = scales
+                .alpha_w
+                .iter()
+                .chain(&scales.gamma_w)
+                .chain(&scales.alpha_a)
+                .chain(&scales.gamma_a)
+                .map(|&s| 2.0 * (s - 3.0))
+                .collect();
+            opt.step(&mut scales, &g);
+        }
+        for v in scales.alpha_w.iter().chain(&scales.gamma_w) {
+            assert!((v - 3.0).abs() < 0.1, "got {v}");
+        }
+    }
+
+    #[test]
+    fn act_stats_applied() {
+        let mut s = Scales::identity(3);
+        apply_act_stats(&mut s, &[2.0, 4.0, 0.5]);
+        assert_eq!(s.gamma_a, vec![2.0, 4.0, 0.5]);
+        assert_eq!(s.alpha_a, vec![0.5, 0.25, 2.0]);
+        // weight side untouched
+        assert_eq!(s.alpha_w, vec![1.0; 3]);
+    }
+}

@@ -1,0 +1,138 @@
+//! Per-layer bit-width configurations — the search space of the paper.
+
+
+/// Bit width meaning "leave in floating point" (the fp16 baseline).
+pub const FLOAT_BITS: f32 = 16.0;
+
+/// The quantized widths the searches may assign, in descending order —
+/// the paper's `bs` (int8 first, then int4).
+pub const QUANT_BITS: [f32; 2] = [8.0, 4.0];
+
+/// One hardware-supported precision choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BitWidth {
+    Int4,
+    Int8,
+    Fp16,
+}
+
+impl BitWidth {
+    pub fn bits(self) -> f32 {
+        match self {
+            BitWidth::Int4 => 4.0,
+            BitWidth::Int8 => 8.0,
+            BitWidth::Fp16 => 16.0,
+        }
+    }
+
+    /// Snap an f32 bit count to the nearest supported precision at or above.
+    pub fn from_bits(bits: f32) -> Self {
+        if bits <= 4.0 {
+            BitWidth::Int4
+        } else if bits <= 8.0 {
+            BitWidth::Int8
+        } else {
+            BitWidth::Fp16
+        }
+    }
+}
+
+/// A full per-layer precision assignment: `bits_w[i]` / `bits_a[i]` are the
+/// weight / activation widths of quant-layer `i`. These vectors are fed
+/// directly into the compiled graphs as runtime inputs, so a configuration
+/// change never recompiles anything.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantConfig {
+    pub bits_w: Vec<f32>,
+    pub bits_a: Vec<f32>,
+}
+
+impl QuantConfig {
+    /// All layers at the float baseline.
+    pub fn float(num_layers: usize) -> Self {
+        Self::uniform(num_layers, FLOAT_BITS)
+    }
+
+    /// All layers at `bits` (weights and activations).
+    pub fn uniform(num_layers: usize, bits: f32) -> Self {
+        Self { bits_w: vec![bits; num_layers], bits_a: vec![bits; num_layers] }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.bits_w.len()
+    }
+
+    /// Set one layer's precision (weights and activations together — the
+    /// paper's per-layer granularity).
+    pub fn set_layer(&mut self, layer: usize, bits: f32) {
+        self.bits_w[layer] = bits;
+        self.bits_a[layer] = bits;
+    }
+
+    pub fn layer_bits(&self, layer: usize) -> f32 {
+        self.bits_w[layer]
+    }
+
+    /// Stable hash key for evaluation memoization.
+    pub fn key(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        for &b in self.bits_w.iter().chain(self.bits_a.iter()) {
+            b.to_bits().hash(&mut h);
+        }
+        h.finish()
+    }
+
+    /// Mean weight bit-width (reports / figures).
+    pub fn avg_bits_w(&self) -> f64 {
+        self.bits_w.iter().map(|&b| b as f64).sum::<f64>() / self.bits_w.len().max(1) as f64
+    }
+
+    /// Count of layers at exactly `bits`.
+    pub fn count_at(&self, bits: f32) -> usize {
+        self.bits_w.iter().filter(|&&b| b == bits).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_and_set() {
+        let mut c = QuantConfig::float(4);
+        assert_eq!(c.layer_bits(2), 16.0);
+        c.set_layer(2, 4.0);
+        assert_eq!(c.bits_w, vec![16.0, 16.0, 4.0, 16.0]);
+        assert_eq!(c.bits_a, vec![16.0, 16.0, 4.0, 16.0]);
+        assert_eq!(c.count_at(4.0), 1);
+    }
+
+    #[test]
+    fn keys_distinguish_configs() {
+        let a = QuantConfig::uniform(3, 8.0);
+        let mut b = a.clone();
+        assert_eq!(a.key(), b.key());
+        b.set_layer(0, 4.0);
+        assert_ne!(a.key(), b.key());
+        // weight/activation asymmetry must also be visible to the key
+        let mut c = QuantConfig::uniform(3, 8.0);
+        c.bits_w[1] = 4.0;
+        assert_ne!(a.key(), c.key());
+    }
+
+    #[test]
+    fn bitwidth_snap() {
+        assert_eq!(BitWidth::from_bits(4.0), BitWidth::Int4);
+        assert_eq!(BitWidth::from_bits(8.0), BitWidth::Int8);
+        assert_eq!(BitWidth::from_bits(16.0), BitWidth::Fp16);
+        assert_eq!(BitWidth::from_bits(6.0), BitWidth::Int8);
+    }
+
+    #[test]
+    fn avg_bits() {
+        let mut c = QuantConfig::float(2);
+        c.set_layer(0, 4.0);
+        assert_eq!(c.avg_bits_w(), 10.0);
+    }
+}

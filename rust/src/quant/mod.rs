@@ -1,0 +1,77 @@
+//! Quantization domain types: per-layer configurations, the Eq. 1 quantizer
+//! mirror, and scale state.
+
+pub mod calibrate;
+mod config;
+mod quantizer;
+
+pub use calibrate::{AdjustReport, CalibrationOptions};
+pub use config::{BitWidth, QuantConfig, FLOAT_BITS, QUANT_BITS};
+pub use quantizer::{eps_qe, quantize, quantize_into, quantize_scalar};
+
+use crate::util::json::{self, Value};
+
+/// Per-layer dual quantization scales (Eq. 1's alpha and gamma) for weights
+/// and input activations. Indexed by quant-layer index.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scales {
+    pub alpha_w: Vec<f32>,
+    pub gamma_w: Vec<f32>,
+    pub alpha_a: Vec<f32>,
+    pub gamma_a: Vec<f32>,
+}
+
+impl Scales {
+    /// Identity scales (alpha = gamma = 1): quantization of the unit range.
+    pub fn identity(num_layers: usize) -> Self {
+        Self {
+            alpha_w: vec![1.0; num_layers],
+            gamma_w: vec![1.0; num_layers],
+            alpha_a: vec![1.0; num_layers],
+            gamma_a: vec![1.0; num_layers],
+        }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.alpha_w.len()
+    }
+
+    /// Persist alongside the artifacts so calibration runs once per export.
+    pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
+        let v = Value::obj(vec![
+            ("alpha_w", Value::arr_f32(&self.alpha_w)),
+            ("gamma_w", Value::arr_f32(&self.gamma_w)),
+            ("alpha_a", Value::arr_f32(&self.alpha_a)),
+            ("gamma_a", Value::arr_f32(&self.gamma_a)),
+        ]);
+        std::fs::write(path, v.to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> crate::Result<Self> {
+        let v = json::parse(&std::fs::read_to_string(path)?)?;
+        Ok(Self {
+            alpha_w: v.req("alpha_w")?.as_f32_vec()?,
+            gamma_w: v.req("gamma_w")?.as_f32_vec()?,
+            alpha_a: v.req("alpha_a")?.as_f32_vec()?,
+            gamma_a: v.req("gamma_a")?.as_f32_vec()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scales_json_roundtrip() {
+        let mut s = Scales::identity(3);
+        s.alpha_w[1] = 0.25;
+        s.gamma_a[2] = 7.5;
+        let dir = std::env::temp_dir().join("mpq_scales_test.json");
+        s.save(&dir).unwrap();
+        let re = Scales::load(&dir).unwrap();
+        assert_eq!(re, s);
+        let _ = std::fs::remove_file(&dir);
+    }
+}

@@ -1,0 +1,111 @@
+//! Native mirror of Eq. 1 — bit-exact with the Pallas kernel and the jnp
+//! oracle (`python/compile/kernels/ref.py`). Used for the ε_QE sensitivity
+//! metric and for size accounting, so the coordinator never round-trips to
+//! the device for host-side statistics. Cross-checked against the kernel in
+//! the integration tests.
+
+use crate::quant::config::FLOAT_BITS;
+
+/// `Q(x) = round(clip(alpha*x, -1, 1) * 2^(b-1)) * 2^-(b-1) * gamma`.
+#[inline]
+pub fn quantize_scalar(x: f32, alpha: f32, gamma: f32, bits: f32) -> f32 {
+    if bits >= FLOAT_BITS - 0.5 {
+        return x;
+    }
+    let step = (bits - 1.0).exp2();
+    ((x * alpha).clamp(-1.0, 1.0) * step).round() / step * gamma
+}
+
+/// Quantize-dequantize a tensor (fresh allocation).
+pub fn quantize(x: &[f32], alpha: f32, gamma: f32, bits: f32) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    quantize_into(x, alpha, gamma, bits, &mut out);
+    out
+}
+
+/// Quantize-dequantize into a caller-provided buffer (hot path, no alloc).
+/// The step constants and the float-passthrough branch are hoisted out of
+/// the element loop (§Perf: ~2x over the scalar path).
+pub fn quantize_into(x: &[f32], alpha: f32, gamma: f32, bits: f32, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    if bits >= FLOAT_BITS - 0.5 {
+        out.copy_from_slice(x);
+        return;
+    }
+    let step = (bits - 1.0).exp2();
+    let inv_step_gamma = gamma / step;
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = ((v * alpha).clamp(-1.0, 1.0) * step).round() * inv_step_gamma;
+    }
+}
+
+/// Eq. 2: ε_QE — max-normalized RMSE under max calibration.
+pub fn eps_qe(x: &[f32], bits: f32) -> f64 {
+    if bits >= FLOAT_BITS - 0.5 {
+        return 0.0;
+    }
+    let maxabs = x.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-12);
+    let alpha = 1.0 / maxabs;
+    let step = (bits - 1.0).exp2();
+    let inv_step_gamma = maxabs / step;
+    let sse: f64 = x
+        .iter()
+        .map(|&v| {
+            let q = ((v * alpha).clamp(-1.0, 1.0) * step).round() * inv_step_gamma;
+            let e = (q - v) as f64;
+            e * e
+        })
+        .sum();
+    (sse / x.len() as f64).sqrt() / maxabs as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn float_bits_is_identity() {
+        let x = [0.3, -1.7, 2.5];
+        assert_eq!(quantize(&x, 0.4, 2.5, 16.0), x.to_vec());
+    }
+
+    #[test]
+    fn known_vectors_4bit() {
+        // alpha=1, gamma=1, b=4 -> step 8; x=0.3 -> round(2.4)/8 = 0.25
+        assert_eq!(quantize_scalar(0.3, 1.0, 1.0, 4.0), 0.25);
+        // clipping: x=1.7 -> clip to 1 -> 1.0
+        assert_eq!(quantize_scalar(1.7, 1.0, 1.0, 4.0), 1.0);
+        // negative: x=-0.3 -> -0.25
+        assert_eq!(quantize_scalar(-0.3, 1.0, 1.0, 4.0), -0.25);
+        // dual scale: gamma rescales the output
+        assert_eq!(quantize_scalar(0.3, 1.0, 2.0, 4.0), 0.5);
+    }
+
+    #[test]
+    fn levels_bounded() {
+        let x: Vec<f32> = (0..1000).map(|i| (i as f32 / 500.0) - 1.0).collect();
+        let q = quantize(&x, 1.0, 1.0, 3.0);
+        let mut uniq: Vec<i64> = q.iter().map(|v| (v * 1e6) as i64).collect();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert!(uniq.len() <= (1 << 3) + 1, "got {} levels", uniq.len());
+    }
+
+    #[test]
+    fn eps_qe_monotone() {
+        let x: Vec<f32> = (0..512).map(|i| ((i * 37 % 101) as f32 - 50.0) / 13.0).collect();
+        let e2 = eps_qe(&x, 2.0);
+        let e4 = eps_qe(&x, 4.0);
+        let e8 = eps_qe(&x, 8.0);
+        assert!(e2 > e4 && e4 > e8 && e8 > 0.0);
+        assert_eq!(eps_qe(&x, 16.0), 0.0);
+    }
+
+    #[test]
+    fn quantize_into_matches() {
+        let x = [0.1f32, -0.9, 0.77];
+        let mut out = [0.0f32; 3];
+        quantize_into(&x, 0.9, 1.2, 4.0, &mut out);
+        assert_eq!(out.to_vec(), quantize(&x, 0.9, 1.2, 4.0));
+    }
+}

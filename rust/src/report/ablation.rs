@@ -1,0 +1,140 @@
+//! Ablation studies for the design choices DESIGN.md calls out.
+//!
+//! 1. **Weight-only vs weight+activation quantization** — the paper
+//!    quantizes both; weight-only is the common deployment fallback when
+//!    activation quantization support is missing. Same greedy search, with
+//!    activations pinned to fp16.
+//! 2. **Scale adjustment** — the paper's step 2 (backprop on the scales).
+//!    Compare max-calibration-only against calibration+adjustment.
+//! 3. **Accelerator model** — re-cost the same configuration on the
+//!    A100-like vs TPU-like roofline (hardware-adaptation sanity: int4
+//!    gains shrink where there is no int4 math pipeline).
+
+use crate::coordinator::{EvalResult, SearchAlgo, SearchEnv};
+use crate::latency::{AccelModel, CostModel};
+use crate::quant::{CalibrationOptions, QuantConfig, FLOAT_BITS, QUANT_BITS};
+use crate::report::experiments::{ExperimentCtx, METRIC_TRIALS};
+use crate::report::Table;
+use crate::sensitivity::{self, MetricKind};
+use crate::Result;
+
+/// Search-env adapter that pins every activation to fp16, so the search
+/// explores weight precision only.
+pub struct WeightOnlyEnv<'a, E: SearchEnv>(pub &'a mut E);
+
+impl<E: SearchEnv> SearchEnv for WeightOnlyEnv<'_, E> {
+    fn num_layers(&self) -> usize {
+        self.0.num_layers()
+    }
+
+    fn eval(&mut self, cfg: &QuantConfig, target: Option<f64>) -> Result<EvalResult> {
+        let mut c = cfg.clone();
+        c.bits_a = vec![FLOAT_BITS; c.num_layers()];
+        self.0.eval(&c, target)
+    }
+}
+
+/// Weight-only vs weight+activation greedy search at one target.
+pub fn weight_only(ctx: &mut ExperimentCtx, target_frac: f64) -> Result<Table> {
+    ctx.ensure_calibrated()?;
+    let sens = sensitivity::compute(&mut ctx.pipeline, MetricKind::Qe, METRIC_TRIALS, 0)?;
+    let target = target_frac * ctx.pipeline.float_val_acc();
+
+    let both = SearchAlgo::Greedy.run(&mut ctx.pipeline, &sens.order, &QUANT_BITS, target)?;
+    let wonly = {
+        let mut env = WeightOnlyEnv(&mut ctx.pipeline);
+        let mut out = SearchAlgo::Greedy.run(&mut env, &sens.order, &QUANT_BITS, target)?;
+        out.config.bits_a = vec![FLOAT_BITS; out.config.num_layers()];
+        out
+    };
+
+    let mut t = Table::new(
+        format!(
+            "Ablation — weight-only vs weight+activation (greedy/QE, {} @ {:.1}%)",
+            ctx.model(),
+            target_frac * 100.0
+        ),
+        &["mode", "accuracy", "rel size", "rel latency", "evals"],
+    );
+    for (label, out) in [("weights+acts", &both), ("weights only", &wonly)] {
+        t.push_row(vec![
+            label.to_string(),
+            format!("{:.2}%", out.accuracy * 100.0),
+            format!("{:.2}%", ctx.cost.rel_size(&out.config) * 100.0),
+            format!("{:.2}%", ctx.cost.rel_latency(&out.config) * 100.0),
+            out.evals.to_string(),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Calibration-only vs calibration+adjustment at uniform widths.
+pub fn adjustment(artifacts_dir: &std::path::Path, model: &str) -> Result<Table> {
+    let mut t = Table::new(
+        format!("Ablation — scale adjustment ({model}, uniform configs)"),
+        &["scales", "int8 accuracy", "int4 accuracy"],
+    );
+    for (label, epochs) in [("max calibration only", 0usize), ("+ backprop adjustment", 2)] {
+        let mut p = crate::coordinator::Pipeline::new(artifacts_dir, model)?;
+        p.calibrate(&CalibrationOptions { epochs, ..Default::default() })?;
+        let n = p.num_quant_layers();
+        let a8 = p.eval_config(&QuantConfig::uniform(n, 8.0), None)?.accuracy;
+        let a4 = p.eval_config(&QuantConfig::uniform(n, 4.0), None)?.accuracy;
+        t.push_row(vec![
+            label.to_string(),
+            format!("{:.2}%", a8 * 100.0),
+            format!("{:.2}%", a4 * 100.0),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Same config costed on different accelerator models.
+pub fn accelerators(ctx: &mut ExperimentCtx) -> Result<Table> {
+    let manifest = ctx.pipeline.artifacts.manifest.clone();
+    let n = manifest.num_quant_layers;
+    let mut t = Table::new(
+        format!("Ablation — accelerator roofline ({})", ctx.model()),
+        &["accelerator", "int8 rel latency", "int4 rel latency"],
+    );
+    for (label, accel) in [("A100-like", AccelModel::a100_like()), ("TPU-like", AccelModel::tpu_like())] {
+        let cm = CostModel::new(&manifest, &accel);
+        t.push_row(vec![
+            label.to_string(),
+            format!("{:.2}%", cm.rel_latency(&QuantConfig::uniform(n, 8.0)) * 100.0),
+            format!("{:.2}%", cm.rel_latency(&QuantConfig::uniform(n, 4.0)) * 100.0),
+        ]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::EvalResult;
+
+    struct Recorder {
+        seen_float_acts: bool,
+        n: usize,
+    }
+
+    impl SearchEnv for Recorder {
+        fn num_layers(&self) -> usize {
+            self.n
+        }
+        fn eval(&mut self, cfg: &QuantConfig, _t: Option<f64>) -> Result<EvalResult> {
+            self.seen_float_acts = cfg.bits_a.iter().all(|&b| b == FLOAT_BITS);
+            Ok(EvalResult { loss: 0.0, accuracy: 1.0, exact: true })
+        }
+    }
+
+    #[test]
+    fn weight_only_env_pins_activations() {
+        let mut inner = Recorder { seen_float_acts: false, n: 3 };
+        let mut env = WeightOnlyEnv(&mut inner);
+        let mut cfg = QuantConfig::uniform(3, 4.0);
+        cfg.bits_a = vec![4.0; 3];
+        env.eval(&cfg, None).unwrap();
+        assert!(inner.seen_float_acts);
+    }
+}

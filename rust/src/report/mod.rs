@@ -1,0 +1,105 @@
+//! Report generation: paper-style tables and figure data.
+
+pub mod ablation;
+pub mod experiments;
+mod table;
+
+pub use table::Table;
+
+use crate::coordinator::SearchAlgo;
+use crate::quant::QuantConfig;
+use crate::sensitivity::MetricKind;
+use crate::util::json::Value;
+
+/// One cell of Table 2/3: a (model, target, search, metric) combination.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub model: String,
+    pub algo: SearchAlgo,
+    pub metric: MetricKind,
+    pub seed: u64,
+    /// Relative accuracy target (e.g. 0.99 of the float baseline).
+    pub target_frac: f64,
+    /// Size relative to the fp16 baseline, percent.
+    pub rel_size_pct: f64,
+    /// Latency relative to the fp16 baseline, percent.
+    pub rel_latency_pct: f64,
+    /// Absolute validation accuracy of the final configuration.
+    pub accuracy: f64,
+    /// Whether the final configuration met the target.
+    pub met_target: bool,
+    /// Search evaluations issued.
+    pub evals: usize,
+    /// Wall-clock seconds for the search (excludes sensitivity computation).
+    pub search_seconds: f64,
+    pub config: QuantConfig,
+}
+
+impl CellResult {
+    /// Structured dump for `--out` directories and EXPERIMENTS.md tooling.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("model", Value::Str(self.model.clone())),
+            ("algo", Value::Str(self.algo.label().to_string())),
+            ("metric", Value::Str(self.metric.label().to_string())),
+            ("seed", Value::Num(self.seed as f64)),
+            ("target_frac", Value::Num(self.target_frac)),
+            ("rel_size_pct", Value::Num(self.rel_size_pct)),
+            ("rel_latency_pct", Value::Num(self.rel_latency_pct)),
+            ("accuracy", Value::Num(self.accuracy)),
+            ("met_target", Value::Bool(self.met_target)),
+            ("evals", Value::Num(self.evals as f64)),
+            ("search_seconds", Value::Num(self.search_seconds)),
+            ("bits_w", Value::arr_f32(&self.config.bits_w)),
+            ("bits_a", Value::arr_f32(&self.config.bits_a)),
+        ])
+    }
+}
+
+/// Serialize a batch of cells as a JSON array.
+pub fn cells_to_json(cells: &[CellResult]) -> String {
+    Value::Arr(cells.iter().map(|c| c.to_json()).collect()).to_string()
+}
+
+/// Mean/σ aggregate over seeds (the paper reports ±σ for Random).
+pub fn aggregate(cells: &[&CellResult]) -> (f64, f64, f64, f64) {
+    let n = cells.len().max(1) as f64;
+    let ms: f64 = cells.iter().map(|c| c.rel_size_pct).sum::<f64>() / n;
+    let ml: f64 = cells.iter().map(|c| c.rel_latency_pct).sum::<f64>() / n;
+    let vs = cells.iter().map(|c| (c.rel_size_pct - ms).powi(2)).sum::<f64>() / n;
+    let vl = cells.iter().map(|c| (c.rel_latency_pct - ml).powi(2)).sum::<f64>() / n;
+    (ms, vs.sqrt(), ml, vl.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(size: f64, lat: f64) -> CellResult {
+        CellResult {
+            model: "m".into(),
+            algo: SearchAlgo::Greedy,
+            metric: MetricKind::Random,
+            seed: 0,
+            target_frac: 0.99,
+            rel_size_pct: size,
+            rel_latency_pct: lat,
+            accuracy: 0.99,
+            met_target: true,
+            evals: 1,
+            search_seconds: 0.0,
+            config: QuantConfig::float(1),
+        }
+    }
+
+    #[test]
+    fn aggregate_mean_sigma() {
+        let a = cell(50.0, 70.0);
+        let b = cell(60.0, 80.0);
+        let (ms, ss, ml, sl) = aggregate(&[&a, &b]);
+        assert_eq!(ms, 55.0);
+        assert_eq!(ml, 75.0);
+        assert!((ss - 5.0).abs() < 1e-9);
+        assert!((sl - 5.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,109 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! The interchange format is **HLO text**, not serialized `HloModuleProto`:
+//! jax >= 0.5 emits protos with 64-bit instruction ids that the
+//! xla_extension 0.5.1 behind the `xla` crate rejects; the text parser
+//! reassigns ids and round-trips cleanly (see `python/compile/aot.py`).
+//!
+//! Hot-path design: arguments live as device-resident [`xla::PjRtBuffer`]s
+//! (parameters, scales and validation batches are uploaded **once**), and
+//! every execution goes through [`Executable::run`] with borrowed buffers —
+//! the only per-call host↔device traffic is the tiny bits vectors that
+//! change between configurations and the scalar outputs.
+
+mod tensor;
+
+pub use tensor::HostTensor;
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A PJRT client plus compilation entry points.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine (the only backend in this environment).
+    pub fn cpu() -> Result<Self> {
+        // Silence the TFRT client's INFO chatter unless the user overrides.
+        if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
+            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    /// Platform string, e.g. `"cpu"` — used in logs and reports.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it for this engine.
+    pub fn compile_hlo_file(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+
+    /// Upload an f32 tensor to the device.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload an i32 tensor to the device.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload a [`HostTensor`] (f32 or i32).
+    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        match t {
+            HostTensor::F32 { data, dims } => self.upload_f32(data, dims),
+            HostTensor::I32 { data, dims } => self.upload_i32(data, dims),
+        }
+    }
+}
+
+/// A compiled artifact. All AOT graphs are lowered with `return_tuple=True`,
+/// so execution returns one tuple buffer that [`Executable::run`] flattens
+/// into per-output host literals.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    /// Execute with device-resident arguments; fetch all outputs to host.
+    pub fn run(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let outs = self
+            .exe
+            .execute_b(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let tuple = outs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching outputs of {}", self.name))?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Name (artifact path) of this executable, for logs.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Read back a scalar f32 output.
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// Read back an f32 vector output.
+pub fn vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}

@@ -1,0 +1,84 @@
+//! Minimal host-side tensor used at the Rust/PJRT boundary.
+
+/// A dense host tensor, either f32 or i32 — the only dtypes crossing the
+/// AOT boundary in this system.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32 { data: Vec<f32>, dims: Vec<usize> },
+    I32 { data: Vec<i32>, dims: Vec<usize> },
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, dims: Vec<usize>) -> Self {
+        debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+        HostTensor::F32 { data, dims }
+    }
+
+    pub fn i32(data: Vec<i32>, dims: Vec<usize>) -> Self {
+        debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+        HostTensor::I32 { data, dims }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { dims, .. } | HostTensor::I32 { dims, .. } => dims,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.dims().iter().product()
+    }
+
+    /// Leading-axis slice `[start, start+len)` — used for batching.
+    /// The row stride is the product of the trailing dims.
+    pub fn slice_rows(&self, start: usize, len: usize) -> HostTensor {
+        let dims = self.dims();
+        assert!(!dims.is_empty() && start + len <= dims[0], "slice out of range");
+        let stride: usize = dims[1..].iter().product::<usize>().max(1);
+        let mut new_dims = dims.to_vec();
+        new_dims[0] = len;
+        match self {
+            HostTensor::F32 { data, .. } => HostTensor::F32 {
+                data: data[start * stride..(start + len) * stride].to_vec(),
+                dims: new_dims,
+            },
+            HostTensor::I32 { data, .. } => HostTensor::I32 {
+                data: data[start * stride..(start + len) * stride].to_vec(),
+                dims: new_dims,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_rows_f32() {
+        let t = HostTensor::f32((0..12).map(|i| i as f32).collect(), vec![4, 3]);
+        let s = t.slice_rows(1, 2);
+        assert_eq!(s.dims(), &[2, 3]);
+        match s {
+            HostTensor::F32 { data, .. } => assert_eq!(data, vec![3., 4., 5., 6., 7., 8.]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn slice_rows_1d_labels() {
+        let t = HostTensor::i32(vec![7, 8, 9, 10], vec![4]);
+        let s = t.slice_rows(2, 2);
+        assert_eq!(s.dims(), &[2]);
+        match s {
+            HostTensor::I32 { data, .. } => assert_eq!(data, vec![9, 10]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "slice out of range")]
+    fn slice_rows_oob_panics() {
+        HostTensor::f32(vec![0.0; 6], vec![2, 3]).slice_rows(1, 2);
+    }
+}

@@ -1,0 +1,21 @@
+//! ε_Hessian (Eq. 6): per-layer mean Hessian trace via Hutchinson probes.
+//!
+//! The heavy lifting (the Hessian-vector products) happens in the AOT
+//! `hvp` graph — `grad` composed with `jvp` over the float loss — driven by
+//! [`Pipeline::hessian_trace`]. This wrapper just shapes the result into a
+//! [`Sensitivity`] ordering. Larger trace ⇒ sharper local curvature ⇒ more
+//! sensitive to quantization (Dong et al., 2019; 2020).
+
+use crate::coordinator::Pipeline;
+use crate::Result;
+
+use super::{MetricKind, Sensitivity};
+
+pub fn hessian_sensitivity(
+    pipeline: &mut Pipeline,
+    trials: usize,
+    seed: u64,
+) -> Result<Sensitivity> {
+    let scores = pipeline.hessian_trace(trials.max(1), seed)?;
+    Ok(Sensitivity::from_scores(MetricKind::Hessian, scores))
+}

@@ -1,0 +1,157 @@
+//! The paper's three sensitivity metrics (§3.2) plus the uninformed
+//! (random) baseline, each producing per-layer scores and an ascending
+//! ordering (least sensitive first) for the configuration searches.
+
+mod hessian;
+mod noise;
+mod qe;
+
+pub use hessian::hessian_sensitivity;
+pub use noise::{noise_sensitivity, NoiseOptions};
+pub use qe::qe_sensitivity;
+
+use crate::coordinator::Pipeline;
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// Which metric guides the search.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MetricKind {
+    /// Uninformed baseline: a seeded random permutation.
+    Random,
+    /// ε_QE — quantization error (Eq. 2).
+    Qe,
+    /// ε_N — accuracy degradation from Gaussian noise (Eqs. 3–5).
+    Noise,
+    /// ε_Hessian — Hutchinson mean Hessian trace (Eq. 6).
+    Hessian,
+}
+
+impl MetricKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            MetricKind::Random => "Random",
+            MetricKind::Qe => "QE",
+            MetricKind::Noise => "Noise",
+            MetricKind::Hessian => "Hessian",
+        }
+    }
+
+    pub const ALL: [MetricKind; 4] =
+        [MetricKind::Random, MetricKind::Qe, MetricKind::Noise, MetricKind::Hessian];
+}
+
+impl std::str::FromStr for MetricKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "random" => Ok(MetricKind::Random),
+            "qe" => Ok(MetricKind::Qe),
+            "noise" => Ok(MetricKind::Noise),
+            "hessian" => Ok(MetricKind::Hessian),
+            other => anyhow::bail!("unknown metric `{other}` (random|qe|noise|hessian)"),
+        }
+    }
+}
+
+/// Per-layer sensitivity scores and the ordering they induce.
+#[derive(Debug, Clone)]
+pub struct Sensitivity {
+    pub metric: MetricKind,
+    pub scores: Vec<f64>,
+    /// Layer indices sorted by score ascending — least sensitive first,
+    /// the order both search algorithms consume.
+    pub order: Vec<usize>,
+}
+
+impl Sensitivity {
+    pub fn from_scores(metric: MetricKind, scores: Vec<f64>) -> Self {
+        let mut order: Vec<usize> = (0..scores.len()).collect();
+        order.sort_by(|&a, &b| {
+            scores[a].partial_cmp(&scores[b]).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        Self { metric, scores, order }
+    }
+
+    /// Random "scores": a shuffled ranking, matching the paper's uninformed
+    /// guidance baseline (5 seeds in the tables).
+    pub fn random(num_layers: usize, seed: u64) -> Self {
+        let mut order: Vec<usize> = (0..num_layers).collect();
+        let mut rng = Rng::seed_from(seed);
+        rng.shuffle(&mut order);
+        let mut scores = vec![0.0f64; num_layers];
+        for (rank, &layer) in order.iter().enumerate() {
+            scores[layer] = rank as f64;
+        }
+        Self { metric: MetricKind::Random, scores, order }
+    }
+}
+
+/// Compute a metric against a live pipeline.
+pub fn compute(
+    pipeline: &mut Pipeline,
+    metric: MetricKind,
+    trials: usize,
+    seed: u64,
+) -> Result<Sensitivity> {
+    match metric {
+        MetricKind::Random => Ok(Sensitivity::random(pipeline.num_quant_layers(), seed)),
+        MetricKind::Qe => Ok(qe_sensitivity(pipeline)),
+        MetricKind::Noise => {
+            noise_sensitivity(pipeline, &NoiseOptions { trials, ..Default::default() }, seed)
+        }
+        MetricKind::Hessian => hessian_sensitivity(pipeline, trials, seed),
+    }
+}
+
+/// Levenshtein (edit) distance between two orderings — the paper's measure
+/// of how differently the metrics rank layers (§4.1).
+pub fn levenshtein(a: &[usize], b: &[usize]) -> usize {
+    let (la, lb) = (a.len(), b.len());
+    let mut prev: Vec<usize> = (0..=lb).collect();
+    let mut cur = vec![0usize; lb + 1];
+    for i in 1..=la {
+        cur[0] = i;
+        for j in 1..=lb {
+            let cost = usize::from(a[i - 1] != b[j - 1]);
+            cur[j] = (prev[j] + 1).min(cur[j - 1] + 1).min(prev[j - 1] + cost);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[lb]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_ascending() {
+        let s = Sensitivity::from_scores(MetricKind::Qe, vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn random_is_seeded_permutation() {
+        let a = Sensitivity::random(10, 7);
+        let b = Sensitivity::random(10, 7);
+        let c = Sensitivity::random(10, 8);
+        assert_eq!(a.order, b.order);
+        assert_ne!(a.order, c.order);
+        let mut sorted = a.order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..10).collect::<Vec<_>>());
+        // scores must induce the same order
+        let re = Sensitivity::from_scores(MetricKind::Random, a.scores.clone());
+        assert_eq!(re.order, a.order);
+    }
+
+    #[test]
+    fn levenshtein_basics() {
+        assert_eq!(levenshtein(&[1, 2, 3], &[1, 2, 3]), 0);
+        assert_eq!(levenshtein(&[1, 2, 3], &[3, 2, 1]), 2);
+        assert_eq!(levenshtein(&[], &[1, 2]), 2);
+        assert_eq!(levenshtein(&[1, 2, 3, 4], &[2, 3, 4, 5]), 2);
+    }
+}

@@ -1,0 +1,49 @@
+//! ε_N (Eqs. 3–5): loss degradation under Gaussian weight perturbation.
+//!
+//! For each quantizable tensor w_i, sample ν ~ N(0, λ·max|w_i|), replace
+//! w_i by w_i + ν, and measure the calibration loss increase relative to
+//! the clean model. Averaged over `trials` draws; the per-trial scatter is
+//! the source of this metric's instability the paper highlights in Fig. 4.
+
+use crate::coordinator::Pipeline;
+use crate::util::rng::Rng;
+use crate::Result;
+
+use super::{MetricKind, Sensitivity};
+
+#[derive(Debug, Clone)]
+pub struct NoiseOptions {
+    /// Perturbation scale λ relative to max|w| (Eq. 5).
+    pub lambda: f64,
+    /// Independent perturbation draws per layer.
+    pub trials: usize,
+}
+
+impl Default for NoiseOptions {
+    fn default() -> Self {
+        Self { lambda: 0.05, trials: 3 }
+    }
+}
+
+pub fn noise_sensitivity(
+    pipeline: &mut Pipeline,
+    opts: &NoiseOptions,
+    seed: u64,
+) -> Result<Sensitivity> {
+    let n = pipeline.num_quant_layers();
+    // ε_N isolates parameter perturbation from quantization: the model
+    // itself stays unquantized (Eq. 3).
+    let clean_loss = pipeline.calib_loss_float()?;
+    let mut rng = Rng::seed_from(seed);
+    let mut scores = vec![0.0f64; n];
+    for qi in 0..n {
+        let mut acc = 0.0f64;
+        for _ in 0..opts.trials {
+            let (pi, perturbed) = pipeline.gaussian_perturbation(qi, opts.lambda, &mut rng)?;
+            let loss = pipeline.calib_loss_with_perturbed(pi, &perturbed)?;
+            acc += loss - clean_loss;
+        }
+        scores[qi] = acc / opts.trials as f64;
+    }
+    Ok(Sensitivity::from_scores(MetricKind::Noise, scores))
+}

@@ -1,0 +1,28 @@
+//! ε_QE (Eq. 2): max-normalized RMS quantization error per weight tensor.
+//!
+//! Computed host-side with the native Eq. 1 mirror (bit-exact with the
+//! Pallas `qe_stats` kernel — cross-checked in the integration tests), at
+//! the most aggressive supported width: the more a tensor distorts at the
+//! harshest precision, the more sensitive it is assumed to be.
+
+use crate::coordinator::Pipeline;
+use crate::quant::{eps_qe, QUANT_BITS};
+
+use super::{MetricKind, Sensitivity};
+
+/// Bit width the error is probed at (the lowest searchable precision).
+pub const PROBE_BITS: f32 = QUANT_BITS[QUANT_BITS.len() - 1];
+
+pub fn qe_sensitivity(pipeline: &Pipeline) -> Sensitivity {
+    let manifest = &pipeline.artifacts.manifest;
+    let params = &pipeline.artifacts.params;
+    let scores: Vec<f64> = manifest
+        .quant_layers()
+        .iter()
+        .map(|layer| {
+            let pi = params.index_of(&layer.param).expect("validated at load");
+            eps_qe(params.values(pi), PROBE_BITS)
+        })
+        .collect();
+    Sensitivity::from_scores(MetricKind::Qe, scores)
+}

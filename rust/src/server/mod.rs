@@ -1,0 +1,252 @@
+//! Minimal batched inference server over a quantized model.
+//!
+//! The paper motivates mixed-precision PTQ with serving latency/QoS; this
+//! module closes the loop by actually serving the quantized model from the
+//! Rust hot path. PJRT handles are not `Send`, so the server owns its
+//! [`Pipeline`] on a dedicated executor thread; callers talk to it through
+//! a cloneable [`ServerHandle`] (thread-safe, usable from tokio tasks via
+//! `spawn_blocking`).
+//!
+//! Batching policy: collect requests until `max_batch` or `max_wait_us`
+//! elapses, pad the batch to the compiled batch size, run the `logits`
+//! graph once, scatter per-request outputs.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::Pipeline;
+use crate::quant::QuantConfig;
+use crate::runtime::HostTensor;
+use crate::Result;
+
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Max requests folded into one execution (≤ compiled batch size).
+    pub max_batch: usize,
+    /// Max time the batcher waits for more requests.
+    pub max_wait: Duration,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self { max_batch: 32, max_wait: Duration::from_micros(500) }
+    }
+}
+
+struct Request {
+    /// One example (leading dim == 1).
+    x: HostTensor,
+    resp: mpsc::Sender<Result<Vec<f32>>>,
+    enqueued: Instant,
+}
+
+/// Latency statistics collected by the server (microseconds).
+#[derive(Debug, Default, Clone)]
+pub struct ServeStats {
+    pub requests: usize,
+    pub batches: usize,
+    latencies_us: Vec<u64>,
+}
+
+impl ServeStats {
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.latencies_us.is_empty() {
+            return 0;
+        }
+        let mut v = self.latencies_us.clone();
+        v.sort_unstable();
+        let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
+        v[idx]
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.latencies_us.is_empty() {
+            return 0.0;
+        }
+        self.latencies_us.iter().sum::<u64>() as f64 / self.latencies_us.len() as f64
+    }
+
+    pub fn mean_batch_fill(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.requests as f64 / self.batches as f64
+    }
+}
+
+/// Cloneable, thread-safe handle to a running server.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: mpsc::Sender<Request>,
+    stats: Arc<Mutex<ServeStats>>,
+}
+
+impl ServerHandle {
+    /// Submit one example; blocks until its predictions return.
+    pub fn infer(&self, x: HostTensor) -> Result<Vec<f32>> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Request { x, resp: tx, enqueued: Instant::now() })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))?
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        self.stats.lock().unwrap().clone()
+    }
+}
+
+/// Spawn the server thread. `configure` runs on the freshly built pipeline
+/// (calibration, scale loading) before serving starts.
+pub fn spawn(
+    artifacts_dir: std::path::PathBuf,
+    model: String,
+    cfg: QuantConfig,
+    opts: ServeOptions,
+    configure: impl FnOnce(&mut Pipeline) -> Result<()> + Send + 'static,
+) -> Result<(ServerHandle, std::thread::JoinHandle<()>)> {
+    let (tx, rx) = mpsc::channel::<Request>();
+    let stats = Arc::new(Mutex::new(ServeStats::default()));
+    let stats2 = stats.clone();
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+    let join = std::thread::spawn(move || {
+        let mut pipeline = match Pipeline::new(&artifacts_dir, &model) {
+            Ok(p) => p,
+            Err(e) => {
+                let _ = ready_tx.send(Err(e));
+                return;
+            }
+        };
+        if let Err(e) = configure(&mut pipeline) {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+        // Warm every serving-batch executable before declaring readiness.
+        let warm = single_zero_example(&pipeline);
+        for batch in pipeline.logits_batch_sizes() {
+            if let Err(e) = pipeline.logits(&cfg, &pad_batch(&[warm.clone()], &pipeline, batch)) {
+                let _ = ready_tx.send(Err(e));
+                return;
+            }
+        }
+        let _ = ready_tx.send(Ok(()));
+        serve_loop(&mut pipeline, &cfg, &opts, &rx, &stats2);
+    });
+    ready_rx.recv().map_err(|_| anyhow::anyhow!("server thread died"))??;
+    Ok((ServerHandle { tx, stats }, join))
+}
+
+fn single_zero_example(pipeline: &Pipeline) -> HostTensor {
+    let m = &pipeline.artifacts.manifest;
+    let mut dims = vec![1usize];
+    dims.extend(&m.x_shape);
+    let numel: usize = dims.iter().product();
+    if m.x_dtype == "i32" {
+        HostTensor::i32(vec![0; numel], dims)
+    } else {
+        HostTensor::f32(vec![0.0; numel], dims)
+    }
+}
+
+/// Stack examples (leading dim 1 each) and zero-pad to `batch` rows.
+fn pad_batch(examples: &[HostTensor], pipeline: &Pipeline, batch: usize) -> HostTensor {
+    let m = &pipeline.artifacts.manifest;
+    debug_assert!(examples.len() <= batch);
+    let per: usize = m.x_shape.iter().product::<usize>().max(1);
+    let mut dims = vec![batch];
+    dims.extend(&m.x_shape);
+    match examples[0] {
+        HostTensor::F32 { .. } => {
+            let mut data = vec![0.0f32; batch * per];
+            for (i, e) in examples.iter().enumerate() {
+                if let HostTensor::F32 { data: d, .. } = e {
+                    data[i * per..(i + 1) * per].copy_from_slice(d);
+                }
+            }
+            HostTensor::f32(data, dims)
+        }
+        HostTensor::I32 { .. } => {
+            let mut data = vec![0i32; batch * per];
+            for (i, e) in examples.iter().enumerate() {
+                if let HostTensor::I32 { data: d, .. } = e {
+                    data[i * per..(i + 1) * per].copy_from_slice(d);
+                }
+            }
+            HostTensor::i32(data, dims)
+        }
+    }
+}
+
+fn serve_loop(
+    pipeline: &mut Pipeline,
+    cfg: &QuantConfig,
+    opts: &ServeOptions,
+    rx: &mpsc::Receiver<Request>,
+    stats: &Arc<Mutex<ServeStats>>,
+) {
+    let sizes = pipeline.logits_batch_sizes();
+    let batch_cap = opts.max_batch.min(*sizes.last().unwrap());
+    while let Ok(first) = rx.recv() {
+        let mut pending = vec![first];
+        let deadline = Instant::now() + opts.max_wait;
+        while pending.len() < batch_cap {
+            match rx.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
+                Ok(r) => pending.push(r),
+                Err(_) => break,
+            }
+        }
+        // Smallest compiled batch covering the queue — padding a queue of 3
+        // to batch 8 costs far less than padding it to the eval batch.
+        let batch_size = *sizes
+            .iter()
+            .find(|&&s| s >= pending.len())
+            .unwrap_or(sizes.last().unwrap());
+        let xs: Vec<HostTensor> = pending.iter().map(|r| r.x.clone()).collect();
+        let batch = pad_batch(&xs, pipeline, batch_size);
+        let result = pipeline.logits(cfg, &batch);
+        let total_out = match &result {
+            Ok(v) => v.len(),
+            Err(_) => 0,
+        };
+        let per_out = total_out / batch_size.max(1);
+        let now = Instant::now();
+        {
+            let mut s = stats.lock().unwrap();
+            s.batches += 1;
+            s.requests += pending.len();
+            for r in &pending {
+                s.latencies_us.push(now.duration_since(r.enqueued).as_micros() as u64);
+            }
+        }
+        match result {
+            Ok(values) => {
+                for (i, r) in pending.into_iter().enumerate() {
+                    let out = values[i * per_out..(i + 1) * per_out].to_vec();
+                    let _ = r.resp.send(Ok(out));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for r in pending {
+                    let _ = r.resp.send(Err(anyhow::anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles() {
+        let s = ServeStats { requests: 4, batches: 2, latencies_us: vec![10, 20, 30, 40] };
+        assert_eq!(s.percentile_us(0.0), 10);
+        assert_eq!(s.percentile_us(1.0), 40);
+        assert_eq!(s.percentile_us(0.5), 30); // round(1.5)=2 -> 30
+        assert_eq!(s.mean_us(), 25.0);
+        assert_eq!(s.mean_batch_fill(), 2.0);
+    }
+}

@@ -1,0 +1,121 @@
+//! Tiny command-line parser: `mpq <subcommand> [--key value | --flag]...`.
+
+use std::collections::HashMap;
+use std::str::FromStr;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed invocation: one subcommand plus `--key value` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub cmd: String,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (program name excluded).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
+        let mut it = args.into_iter().peekable();
+        let cmd = it.next().unwrap_or_default();
+        let mut opts = HashMap::new();
+        let mut flags = Vec::new();
+        while let Some(a) = it.next() {
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument `{a}`");
+            };
+            // --key=value or --key value or boolean --flag
+            if let Some((k, v)) = key.split_once('=') {
+                opts.insert(k.to_string(), v.to_string());
+            } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                opts.insert(key.to_string(), it.next().unwrap());
+            } else {
+                flags.push(key.to_string());
+            }
+        }
+        Ok(Self { cmd, opts, flags })
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get_str(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// Required string option.
+    pub fn req_str(&self, name: &str) -> Result<&str> {
+        self.get_str(name).ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    /// Typed option with default.
+    pub fn get_or<T: FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get_str(name) {
+            None => Ok(default),
+            Some(s) => s.parse::<T>().map_err(|e| anyhow!("bad --{name} `{s}`: {e}")),
+        }
+    }
+
+    /// Typed required option.
+    pub fn req<T: FromStr>(&self, name: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let s = self.req_str(name)?;
+        s.parse::<T>().map_err(|e| anyhow!("bad --{name} `{s}`: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("search --model bert_s --target 0.99 --verbose");
+        assert_eq!(a.cmd, "search");
+        assert_eq!(a.req_str("model").unwrap(), "bert_s");
+        assert_eq!(a.req::<f64>("target").unwrap(), 0.99);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.get_or("seed", 7u64).unwrap(), 7);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("eval --bits=4 --model=resnet_s");
+        assert_eq!(a.req::<f32>("bits").unwrap(), 4.0);
+        assert_eq!(a.req_str("model").unwrap(), "resnet_s");
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse("eval --lr -1e-5");
+        // `-1e-5` does not start with `--`, so it is consumed as a value.
+        assert_eq!(a.req::<f64>("lr").unwrap(), -1e-5);
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(Args::parse(["eval".into(), "oops".into()]).is_err());
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let a = parse("eval");
+        assert!(a.req_str("model").is_err());
+        assert!(a.req::<f32>("bits").is_err());
+    }
+}

@@ -1,0 +1,7 @@
+//! In-tree replacements for the support crates this offline build cannot
+//! pull from crates.io (serde/clap/rand equivalents). Small, tested, and
+//! scoped to exactly what the coordinator needs.
+
+pub mod cli;
+pub mod json;
+pub mod rng;

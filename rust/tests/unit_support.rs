@@ -1,0 +1,130 @@
+//! Edge-case tests for the support layers (table rendering, JSON corners,
+//! CLI corners, tensors, search degenerate inputs) — no artifacts needed.
+
+use mpq::coordinator::{EvalResult, SearchAlgo, SearchEnv};
+use mpq::quant::QuantConfig;
+use mpq::report::Table;
+use mpq::runtime::HostTensor;
+use mpq::util::cli::Args;
+use mpq::util::json::{self, Value};
+
+struct AlwaysPass;
+
+impl SearchEnv for AlwaysPass {
+    fn num_layers(&self) -> usize {
+        0
+    }
+    fn eval(&mut self, _c: &QuantConfig, _t: Option<f64>) -> mpq::Result<EvalResult> {
+        Ok(EvalResult { loss: 0.0, accuracy: 1.0, exact: true })
+    }
+}
+
+#[test]
+fn searches_handle_zero_layers() {
+    for algo in [SearchAlgo::Greedy, SearchAlgo::Bisection] {
+        let out = algo.run(&mut AlwaysPass, &[], &[8.0, 4.0], 0.99).unwrap();
+        assert_eq!(out.config.num_layers(), 0);
+        assert_eq!(out.accuracy, 1.0);
+    }
+}
+
+#[test]
+fn searches_handle_empty_bit_list() {
+    struct One;
+    impl SearchEnv for One {
+        fn num_layers(&self) -> usize {
+            1
+        }
+        fn eval(&mut self, _c: &QuantConfig, _t: Option<f64>) -> mpq::Result<EvalResult> {
+            Ok(EvalResult { loss: 0.0, accuracy: 1.0, exact: true })
+        }
+    }
+    for algo in [SearchAlgo::Greedy, SearchAlgo::Bisection] {
+        let out = algo.run(&mut One, &[0], &[], 0.5).unwrap();
+        assert_eq!(out.config, QuantConfig::float(1));
+    }
+}
+
+#[test]
+#[should_panic(expected = "ordering must cover")]
+fn greedy_rejects_partial_ordering() {
+    struct Two;
+    impl SearchEnv for Two {
+        fn num_layers(&self) -> usize {
+            2
+        }
+        fn eval(&mut self, _c: &QuantConfig, _t: Option<f64>) -> mpq::Result<EvalResult> {
+            Ok(EvalResult { loss: 0.0, accuracy: 1.0, exact: true })
+        }
+    }
+    let _ = SearchAlgo::Greedy.run(&mut Two, &[0], &[8.0], 0.5);
+}
+
+#[test]
+fn table_renders_empty_and_wide() {
+    let t = Table::new("empty", &["a"]);
+    let r = t.render();
+    assert!(r.contains("empty"));
+    let mut w = Table::new("wide", &["col", "very-long-header-name"]);
+    w.push_row(vec!["x".into(), "y".into()]);
+    let r = w.render();
+    // Every data row must be exactly as wide as the header row.
+    let lines: Vec<&str> = r.lines().collect();
+    assert_eq!(lines[1].len(), lines[2].len());
+    assert_eq!(lines[2].len(), lines[4].len());
+}
+
+#[test]
+fn json_numbers_edge_cases() {
+    assert_eq!(json::parse("1e20").unwrap().as_f64().unwrap(), 1e20);
+    assert_eq!(json::parse("-0.0").unwrap().as_f64().unwrap(), 0.0);
+    assert!(json::parse("0.1").unwrap().as_usize().is_err());
+    assert!(json::parse("-3").unwrap().as_usize().is_err());
+    assert_eq!(json::parse("-3").unwrap().as_i64().unwrap(), -3);
+    // Large integers survive the write path unquoted.
+    assert_eq!(Value::Num(9e15).to_string(), "9e15".parse::<f64>().unwrap().to_string());
+}
+
+#[test]
+fn json_deep_nesting_roundtrip() {
+    let mut v = Value::Num(1.0);
+    for _ in 0..64 {
+        v = Value::Arr(vec![v]);
+    }
+    let text = v.to_string();
+    assert_eq!(json::parse(&text).unwrap(), v);
+}
+
+#[test]
+fn cli_last_duplicate_wins_and_types_checked() {
+    let a = Args::parse(["x".into(), "--k".into(), "1".into(), "--k".into(), "2".into()]).unwrap();
+    assert_eq!(a.req::<u32>("k").unwrap(), 2);
+    assert!(a.req::<u32>("missing").is_err());
+    let b = Args::parse(["x".into(), "--n".into(), "abc".into()]).unwrap();
+    assert!(b.req::<u32>("n").is_err());
+}
+
+#[test]
+fn host_tensor_roundtrip_shapes() {
+    let t = HostTensor::f32(vec![0.0; 24], vec![2, 3, 4]);
+    assert_eq!(t.numel(), 24);
+    let s = t.slice_rows(1, 1);
+    assert_eq!(s.dims(), &[1, 3, 4]);
+    assert_eq!(s.numel(), 12);
+}
+
+#[test]
+fn quant_config_weight_only_views() {
+    let mut c = QuantConfig::uniform(3, 4.0);
+    c.bits_a = vec![16.0; 3];
+    assert_eq!(c.layer_bits(0), 4.0); // layer_bits reads the weight width
+    assert_eq!(c.count_at(4.0), 3);
+    assert_eq!(c.avg_bits_w(), 4.0);
+}
+
+#[test]
+fn eval_result_semantics() {
+    // exact=false results still carry a decision-valid accuracy bound.
+    let r = EvalResult { loss: 1.0, accuracy: 0.97, exact: false };
+    assert!(r.accuracy < 0.99);
+}

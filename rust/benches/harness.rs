@@ -87,8 +87,12 @@ impl Bench {
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let mean = samples.iter().sum::<f64>() / samples.len() as f64;
         let spread = (samples[samples.len() - 1] - samples[0]) / 2.0;
-        let report =
-            Report { name: format!("{}::{name}", self.suite), mean_ns: mean, spread_ns: spread, iters: n };
+        let report = Report {
+            name: format!("{}::{name}", self.suite),
+            mean_ns: mean,
+            spread_ns: spread,
+            iters: n,
+        };
         println!(
             "{:<52} {:>12}  (±{:>10}, {} iters)",
             report.name,

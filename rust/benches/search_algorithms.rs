@@ -1,32 +1,50 @@
-//! Search-algorithm benchmarks over a synthetic evaluation environment —
-//! isolates the coordination logic (Alg. 1 vs Alg. 2 evaluation budgets and
-//! overhead) from the PJRT execution cost, and checks the complexity claims
-//! of the paper: O(b log N) evals for bisection vs O(bN) for greedy.
+//! Search-algorithm benchmarks over synthetic evaluation environments.
+//!
+//! Two sections:
+//!
+//! 1. **Decision complexity** (instant evals): isolates the coordination
+//!    logic (Alg. 1 vs Alg. 2 evaluation budgets and overhead) from the
+//!    PJRT execution cost, checking the paper's complexity claims —
+//!    O(b log N) evals for bisection vs O(bN) for greedy.
+//! 2. **Parallel batched engine** (simulated-latency evals): the same
+//!    searches through [`ParallelEnv`] at 1/2/8 workers, measuring the
+//!    wall-clock speedup of speculative frontier batching and asserting
+//!    the final configurations are bit-identical at every worker count.
+//!
+//! The report is also written as JSON (`BENCH_search.json` in the current
+//! directory, or `$MPQ_BENCH_OUT`) so CI can archive baselines.
 
 mod harness;
 
-use harness::{black_box, Bench};
-use mpq::coordinator::{EvalResult, SearchAlgo, SearchEnv};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use harness::{black_box, fmt_ns, Bench};
+use mpq::coordinator::{EvalResult, ParallelEnv, SearchAlgo, SyncSearchEnv};
 use mpq::quant::QuantConfig;
+use mpq::util::json::Value;
 use mpq::util::rng::Rng;
 
 /// Synthetic model: each layer has a quantization cost; accuracy is
 /// 1 - sum(cost). Mirrors the mock environments the unit tests use but at
-/// configurable scale.
+/// configurable scale, with an optional simulated per-eval device latency
+/// (`work` iterations of a deterministic spin) so parallel speedups are
+/// measurable. Seeded, shared-state (`&self`) and deterministic per
+/// configuration, so any worker schedule produces identical results.
 struct SynthEnv {
     penalty: Vec<f64>,
-    evals: usize,
+    work: u32,
+    evals: AtomicUsize,
 }
 
 impl SynthEnv {
-    fn new(n: usize, seed: u64) -> Self {
+    fn new(n: usize, seed: u64, work: u32) -> Self {
         let mut rng = Rng::seed_from(seed);
         // A few ruinous layers, many cheap ones — the regime where guided
         // search pays off.
         let penalty = (0..n)
             .map(|_| if rng.uniform() < 0.2 { 0.05 } else { 0.0002 })
             .collect();
-        Self { penalty, evals: 0 }
+        Self { penalty, work, evals: AtomicUsize::new(0) }
     }
 
     fn order(&self) -> Vec<usize> {
@@ -36,13 +54,21 @@ impl SynthEnv {
     }
 }
 
-impl SearchEnv for SynthEnv {
+impl SyncSearchEnv for SynthEnv {
     fn num_layers(&self) -> usize {
         self.penalty.len()
     }
 
-    fn eval(&mut self, cfg: &QuantConfig, _t: Option<f64>) -> mpq::Result<EvalResult> {
-        self.evals += 1;
+    fn eval(&self, cfg: &QuantConfig, _t: Option<f64>) -> mpq::Result<EvalResult> {
+        self.evals.fetch_add(1, Ordering::Relaxed);
+        if self.work > 0 {
+            // Deterministic spin standing in for a device round-trip.
+            let mut x = 0.0f64;
+            for i in 0..self.work {
+                x += f64::from(i ^ 0x5A5A).sqrt();
+            }
+            black_box(x);
+        }
         let cost: f64 = cfg
             .bits_w
             .iter()
@@ -53,19 +79,94 @@ impl SearchEnv for SynthEnv {
     }
 }
 
+fn run_search(algo: SearchAlgo, env: &SynthEnv, workers: usize) -> mpq::coordinator::SearchOutcome {
+    let order = env.order();
+    let mut penv = ParallelEnv::new(env, workers);
+    algo.run(&mut penv, &order, &[8.0, 4.0], 0.99).unwrap()
+}
+
 fn main() {
     let b = Bench::new("search_algorithms");
+    let mut json_rows: Vec<Value> = Vec::new();
+
+    // ---- 1. decision complexity (instant evals, sequential) -------------
     for n in [16usize, 64, 256] {
         for algo in [SearchAlgo::Greedy, SearchAlgo::Bisection] {
             let mut evals_used = 0usize;
-            b.bench(&format!("{}_n{n}", algo.label().to_lowercase()), || {
-                let mut env = SynthEnv::new(n, 42);
-                let order = env.order();
-                let out = algo.run(&mut env, &order, &[8.0, 4.0], 0.99).unwrap();
+            let report = b.bench(&format!("{}_n{n}", algo.label().to_lowercase()), || {
+                let env = SynthEnv::new(n, 42, 0);
+                let out = run_search(algo, &env, 1);
                 evals_used = out.evals;
                 black_box(out);
             });
-            println!("    -> {} evals at N={n}", evals_used);
+            println!("    -> {evals_used} evals at N={n}");
+            json_rows.push(Value::obj(vec![
+                ("name", Value::Str(report.name.clone())),
+                ("mean_ns", Value::Num(report.mean_ns)),
+                ("spread_ns", Value::Num(report.spread_ns)),
+                ("evals", Value::Num(evals_used as f64)),
+            ]));
         }
+    }
+
+    // ---- 2. parallel batched engine (simulated device latency) ----------
+    // ~0.2 ms per eval: long enough that scoped-thread fan-out overhead is
+    // noise, short enough that the bench stays quick.
+    let work: u32 = std::env::var("MPQ_BENCH_WORK")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(60_000);
+    let n = 64;
+    for algo in [SearchAlgo::Greedy, SearchAlgo::Bisection] {
+        let mut sequential_ns = 0.0f64;
+        let reference = {
+            let env = SynthEnv::new(n, 42, 0);
+            run_search(algo, &env, 1)
+        };
+        for workers in [1usize, 2, 8] {
+            let label = format!("{}_slow_n{n}_w{workers}", algo.label().to_lowercase());
+            // Bit-identical outcome at every worker count (same seed).
+            let verify_env = SynthEnv::new(n, 42, 0);
+            let out = run_search(algo, &verify_env, workers);
+            assert_eq!(out.config, reference.config, "{label}: config drifted");
+            assert_eq!(out.evals, reference.evals, "{label}: decision evals drifted");
+            let raw_evals = verify_env.evals.load(Ordering::Relaxed);
+
+            let env = SynthEnv::new(n, 42, work);
+            let report = b.bench_n(&label, 3, || {
+                let out = run_search(algo, &env, workers);
+                black_box(out);
+            });
+            if workers == 1 {
+                sequential_ns = report.mean_ns;
+            }
+            let speedup = sequential_ns / report.mean_ns;
+            println!(
+                "    -> {workers} worker(s): {} ({speedup:.2}x vs sequential, \
+                 {raw_evals} raw evals)",
+                fmt_ns(report.mean_ns),
+            );
+            json_rows.push(Value::obj(vec![
+                ("name", Value::Str(report.name.clone())),
+                ("mean_ns", Value::Num(report.mean_ns)),
+                ("spread_ns", Value::Num(report.spread_ns)),
+                ("workers", Value::Num(workers as f64)),
+                ("speedup_vs_sequential", Value::Num(speedup)),
+                ("decision_evals", Value::Num(out.evals as f64)),
+                ("config_matches_sequential", Value::Bool(true)),
+            ]));
+        }
+    }
+
+    // ---- report ----------------------------------------------------------
+    let out_path = std::env::var("MPQ_BENCH_OUT").unwrap_or_else(|_| "BENCH_search.json".into());
+    let doc = Value::obj(vec![
+        ("suite", Value::Str("search_algorithms".into())),
+        ("spin_work", Value::Num(f64::from(work))),
+        ("results", Value::Arr(json_rows)),
+    ]);
+    match std::fs::write(&out_path, doc.to_string()) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
     }
 }

@@ -1,4 +1,4 @@
-//! Algorithm 1 — bisection configuration search.
+//! Algorithm 1 — bisection configuration search, with batched speculation.
 //!
 //! Assumes a threshold sensitivity exists per bit width: layers less
 //! sensitive than the threshold can run at that width. The search bisects
@@ -7,6 +7,21 @@
 //! on ordering quality — a mis-ordered sensitive layer poisons whole
 //! prefixes, which is exactly the behaviour the paper reports (bisection
 //! leaving many more layers at 16 bits than greedy).
+//!
+//! # Batched speculation
+//!
+//! Each probe's outcome decides which half-interval is searched next, so
+//! the upcoming probes form a binary decision tree rooted at the current
+//! interval. A batched round enumerates that tree breadth-first up to
+//! [`SearchEnv::preferred_batch`] nodes, evaluates all of their prefix
+//! configurations in one [`SearchEnv::eval_many`] call, then replays the
+//! sequential bisection against the batched results until it steps off the
+//! evaluated subtree. Probes on untaken branches are discarded; consumed
+//! probes are exactly the sequential sequence, so the final configuration
+//! and decision-eval count are bit-identical at every worker count. With a
+//! window of `w`, each round resolves ~`log2(w+1)` sequential decisions.
+
+use std::collections::HashMap;
 
 use crate::quant::QuantConfig;
 use crate::Result;
@@ -21,6 +36,7 @@ pub fn search<E: SearchEnv>(
 ) -> Result<SearchOutcome> {
     let n = env.num_layers();
     assert_eq!(order.len(), n, "ordering must cover every quant layer");
+    let window = env.preferred_batch().max(1);
     let mut w = QuantConfig::float(n);
     let mut evals = 0usize;
     let mut ll: Vec<usize> = order.to_vec();
@@ -36,17 +52,49 @@ pub fn search<E: SearchEnv>(
         let mut lo = 0usize;
         let mut hi = ll.len();
         while lo < hi {
-            let mid = lo + (hi - lo).div_ceil(2); // upper mid: never == lo
-            let mut lw = w.clone();
-            for &layer in &ll[..mid] {
-                lw.set_layer(layer, b);
+            // Breadth-first frontier of the upcoming decision tree: the
+            // sequential probe for (lo, hi) first, then the probes both of
+            // its outcomes would lead to, and so on up to `window` nodes.
+            // Probe prefixes from disjoint branches are distinct, so the
+            // mid -> result map below cannot collide.
+            let mut states = vec![(lo, hi)];
+            let mut mids: Vec<usize> = Vec::new();
+            let mut qi = 0usize;
+            while qi < states.len() && mids.len() < window {
+                let (l, h) = states[qi];
+                qi += 1;
+                if l >= h {
+                    continue;
+                }
+                let mid = l + (h - l).div_ceil(2); // upper mid: never == l
+                mids.push(mid);
+                states.push((mid, h)); // pass branch
+                states.push((l, mid - 1)); // fail branch
             }
-            let r = env.eval(&lw, Some(target))?;
-            evals += 1;
-            if r.accuracy >= target {
-                lo = mid;
-            } else {
-                hi = mid - 1;
+            let cfgs: Vec<QuantConfig> = mids
+                .iter()
+                .map(|&mid| {
+                    let mut lw = w.clone();
+                    for &layer in &ll[..mid] {
+                        lw.set_layer(layer, b);
+                    }
+                    lw
+                })
+                .collect();
+            let results = env.eval_many(&cfgs, Some(target));
+            let mut by_mid: HashMap<usize, _> = mids.into_iter().zip(results).collect();
+            // Replay the sequential bisection against the batch; stop when
+            // it needs a probe the speculation did not cover.
+            while lo < hi {
+                let mid = lo + (hi - lo).div_ceil(2);
+                let Some(r) = by_mid.remove(&mid) else { break };
+                let r = r?;
+                evals += 1;
+                if r.accuracy >= target {
+                    lo = mid;
+                } else {
+                    hi = mid - 1;
+                }
             }
         }
         // `lo` is the largest prefix meeting the target (0 if none does).
@@ -96,6 +144,28 @@ mod tests {
         }
     }
 
+    /// A `Threshold` that advertises a batch window.
+    struct BatchedThreshold {
+        inner: Threshold,
+        window: usize,
+        raw_evals: usize,
+    }
+
+    impl SearchEnv for BatchedThreshold {
+        fn num_layers(&self) -> usize {
+            self.inner.num_layers()
+        }
+
+        fn eval(&mut self, cfg: &QuantConfig, t: Option<f64>) -> Result<EvalResult> {
+            self.raw_evals += 1;
+            self.inner.eval(cfg, t)
+        }
+
+        fn preferred_batch(&self) -> usize {
+            self.window
+        }
+    }
+
     fn run(n: usize, ok8: usize, ok4: usize) -> SearchOutcome {
         let order: Vec<usize> = (0..n).collect();
         let mut env = Threshold { order_pos: order.clone(), ok8, ok4 };
@@ -142,5 +212,48 @@ mod tests {
         assert_eq!(run(1, 1, 1).config, QuantConfig::uniform(1, 4.0));
         assert_eq!(run(1, 1, 0).config, QuantConfig::uniform(1, 8.0));
         assert_eq!(run(1, 0, 0).config, QuantConfig::float(1));
+    }
+
+    #[test]
+    fn batched_windows_match_sequential_outcome() {
+        for (n, ok8, ok4) in [(16, 11, 5), (33, 20, 0), (7, 7, 7), (24, 0, 0), (50, 49, 13)] {
+            let order: Vec<usize> = (0..n).collect();
+            let mut seq_env = Threshold { order_pos: order.clone(), ok8, ok4 };
+            let seq = search(&mut seq_env, &order, &[8.0, 4.0], 0.9).unwrap();
+            for window in [1usize, 2, 3, 7, 8, 64] {
+                let mut env = BatchedThreshold {
+                    inner: Threshold { order_pos: order.clone(), ok8, ok4 },
+                    window,
+                    raw_evals: 0,
+                };
+                let out = search(&mut env, &order, &[8.0, 4.0], 0.9).unwrap();
+                assert_eq!(out.config, seq.config, "n={n} window={window}");
+                assert_eq!(out.evals, seq.evals, "n={n} window={window}");
+                assert!(env.raw_evals >= out.evals, "n={n} window={window}");
+            }
+        }
+    }
+
+    #[test]
+    fn speculation_resolves_multiple_decisions_per_round() {
+        // With a window of 7 (a full depth-3 tree) the replay consumes 3
+        // sequential decisions per eval_many round, so the number of rounds
+        // — visible as distinct raw-eval bursts — shrinks. Just bound total
+        // raw work: at most window * ceil(decisions / depth) + final.
+        let n = 64;
+        let order: Vec<usize> = (0..n).collect();
+        let mut env = BatchedThreshold {
+            inner: Threshold { order_pos: order.clone(), ok8: 40, ok4: 10 },
+            window: 7,
+            raw_evals: 0,
+        };
+        let out = search(&mut env, &order, &[8.0, 4.0], 0.9).unwrap();
+        let rounds_bound = out.evals.div_ceil(3) + 2;
+        assert!(
+            env.raw_evals <= 7 * rounds_bound + 1,
+            "raw {} vs bound {}",
+            env.raw_evals,
+            7 * rounds_bound + 1
+        );
     }
 }

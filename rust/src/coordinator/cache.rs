@@ -1,0 +1,231 @@
+//! Cross-run persistent evaluation cache.
+//!
+//! Report, ablation and search runs over the same model repeatedly evaluate
+//! the same configurations (uniform baselines, search prefixes, frontier
+//! candidates). The in-memory memo inside [`super::Pipeline`] only lives for
+//! one process; this cache persists **exact** (full-validation) results to a
+//! JSON file under the artifacts directory so later runs skip the device
+//! entirely.
+//!
+//! Entries are keyed by [`crate::quant::QuantConfig::key`] and guarded by a
+//! caller-supplied *context fingerprint* — everything an evaluation result
+//! depends on besides the configuration (model name, scales, dataset). A
+//! file whose fingerprint does not match is discarded wholesale rather than
+//! risking stale hits. Only exact results are stored: they answer any
+//! future target decisively, so the cache never changes a search decision —
+//! it only removes device work.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context as _;
+
+use crate::util::json::{self, Value};
+use crate::Result;
+
+use super::EvalResult;
+
+/// Schema version of the on-disk format.
+pub const EVAL_CACHE_VERSION: u64 = 1;
+
+/// One `{key, loss, accuracy}` row of the on-disk entry array.
+fn parse_row(row: &Value) -> Result<(u64, f64, f64)> {
+    let key = u64::from_str_radix(row.req("key")?.as_str()?, 16).context("bad cache key")?;
+    Ok((key, row.req("loss")?.as_f64()?, row.req("accuracy")?.as_f64()?))
+}
+
+/// A persistent config-key -> exact-[`EvalResult`] map.
+#[derive(Debug)]
+pub struct EvalCache {
+    path: PathBuf,
+    context: String,
+    entries: HashMap<u64, (f64, f64)>, // key -> (loss, accuracy)
+    hits: usize,
+    dirty: bool,
+}
+
+impl EvalCache {
+    /// Open the cache at `path` for the given context fingerprint. A
+    /// missing, unreadable, corrupt or context-mismatched file yields an
+    /// empty cache (never an error — the cache is an optimization).
+    pub fn load(path: &Path, context: &str) -> Self {
+        let mut cache = Self {
+            path: path.to_path_buf(),
+            context: context.to_string(),
+            entries: HashMap::new(),
+            hits: 0,
+            dirty: false,
+        };
+        let Ok(text) = std::fs::read_to_string(path) else {
+            return cache;
+        };
+        let Ok(v) = json::parse(&text) else {
+            return cache;
+        };
+        let version_ok = v.get("version").map(|x| x.as_u64().ok() == Some(EVAL_CACHE_VERSION));
+        let context_ok = v.get("context").map(|x| x.as_str().ok() == Some(context));
+        if version_ok != Some(true) || context_ok != Some(true) {
+            return cache;
+        }
+        let Some(Ok(rows)) = v.get("entries").map(|e| e.as_arr()) else {
+            return cache;
+        };
+        for row in rows {
+            if let Ok((key, loss, acc)) = parse_row(row) {
+                cache.entries.insert(key, (loss, acc));
+            }
+        }
+        cache
+    }
+
+    /// Look up a configuration key; exact results satisfy any target.
+    pub fn lookup(&mut self, key: u64) -> Option<EvalResult> {
+        let &(loss, accuracy) = self.entries.get(&key)?;
+        self.hits += 1;
+        Some(EvalResult { loss, accuracy, exact: true })
+    }
+
+    /// Record a result. Inexact (early-exited) results are ignored — their
+    /// bounds are only valid for the target they were produced under.
+    pub fn insert(&mut self, key: u64, result: &EvalResult) {
+        if !result.exact {
+            return;
+        }
+        let entry = (result.loss, result.accuracy);
+        if self.entries.insert(key, entry) != Some(entry) {
+            self.dirty = true;
+        }
+    }
+
+    /// Number of stored results.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Lookups answered from this cache since load.
+    pub fn hits(&self) -> usize {
+        self.hits
+    }
+
+    /// The context fingerprint this cache is bound to.
+    pub fn context(&self) -> &str {
+        &self.context
+    }
+
+    /// Write back if anything changed. Keys are emitted in sorted order so
+    /// the file is deterministic for a given entry set.
+    pub fn save(&mut self) -> Result<()> {
+        if !self.dirty {
+            return Ok(());
+        }
+        let mut keys: Vec<u64> = self.entries.keys().copied().collect();
+        keys.sort_unstable();
+        let rows: Vec<Value> = keys
+            .into_iter()
+            .map(|k| {
+                let (loss, acc) = self.entries[&k];
+                Value::obj(vec![
+                    ("key", Value::Str(format!("{k:016x}"))),
+                    ("loss", Value::Num(loss)),
+                    ("accuracy", Value::Num(acc)),
+                ])
+            })
+            .collect();
+        let v = Value::obj(vec![
+            ("version", Value::Num(EVAL_CACHE_VERSION as f64)),
+            ("context", Value::Str(self.context.clone())),
+            ("entries", Value::Arr(rows)),
+        ]);
+        std::fs::write(&self.path, v.to_string())
+            .with_context(|| format!("writing eval cache {}", self.path.display()))?;
+        self.dirty = false;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("mpq_evalcache_{name}.json"))
+    }
+
+    fn exact(loss: f64, acc: f64) -> EvalResult {
+        EvalResult { loss, accuracy: acc, exact: true }
+    }
+
+    #[test]
+    fn miss_insert_hit() {
+        let path = tmp("mih");
+        let _ = std::fs::remove_file(&path);
+        let mut c = EvalCache::load(&path, "ctx");
+        assert!(c.lookup(42).is_none());
+        c.insert(42, &exact(0.5, 0.9));
+        let hit = c.lookup(42).unwrap();
+        assert_eq!(hit, exact(0.5, 0.9));
+        assert_eq!(c.hits(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn inexact_results_not_stored() {
+        let path = tmp("inexact");
+        let _ = std::fs::remove_file(&path);
+        let mut c = EvalCache::load(&path, "ctx");
+        c.insert(7, &EvalResult { loss: 0.1, accuracy: 0.8, exact: false });
+        assert!(c.lookup(7).is_none());
+        assert!(c.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn persistence_roundtrip_and_context_guard() {
+        let path = tmp("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let mut c = EvalCache::load(&path, "model-a/scales-1");
+        c.insert(u64::MAX, &exact(1.25, 0.75));
+        c.insert(3, &exact(0.0, 1.0));
+        c.save().unwrap();
+
+        let mut re = EvalCache::load(&path, "model-a/scales-1");
+        assert_eq!(re.len(), 2);
+        assert_eq!(re.lookup(u64::MAX).unwrap(), exact(1.25, 0.75));
+        assert_eq!(re.lookup(3).unwrap(), exact(0.0, 1.0));
+
+        // A different context must not see the entries.
+        let other = EvalCache::load(&path, "model-a/scales-2");
+        assert!(other.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_file_degrades_to_empty() {
+        let path = tmp("corrupt");
+        std::fs::write(&path, "{not json").unwrap();
+        let c = EvalCache::load(&path, "ctx");
+        assert!(c.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn save_skips_when_clean_and_is_deterministic() {
+        let path = tmp("determ");
+        let _ = std::fs::remove_file(&path);
+        let mut c = EvalCache::load(&path, "ctx");
+        c.insert(10, &exact(0.25, 0.5));
+        c.insert(2, &exact(0.75, 0.25));
+        c.save().unwrap();
+        let first = std::fs::read_to_string(&path).unwrap();
+        // Re-inserting identical entries keeps the cache clean.
+        c.insert(10, &exact(0.25, 0.5));
+        c.save().unwrap();
+        let second = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(first, second);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,15 +1,49 @@
-//! Algorithm 2 — greedy configuration search.
+//! Algorithm 2 — greedy configuration search, with batched speculation.
 //!
 //! Walks the layers in sensitivity order (least sensitive first), trial-
 //! quantizing one layer at a time and keeping the change only if the model
 //! still meets the accuracy target. Layers that survive a bit width remain
 //! candidates for the next, lower width. Average complexity
 //! `O((2 - 2^-(b-1)) N)` evaluations, worst case `O(bN)`.
+//!
+//! # Batched speculation
+//!
+//! The sequential decision chain is data-dependent (an accepted layer
+//! changes the base configuration every later candidate builds on), so the
+//! search speculates like a branch predictor: it submits a frontier of
+//! [`SearchEnv::preferred_batch`] candidates per [`SearchEnv::eval_many`]
+//! call, built under one of two assumptions about the upcoming decisions —
+//!
+//! * **cumulative** (predicting accepts): candidate `k` quantizes the next
+//!   `k+1` pending layers on top of the current config, so a run of
+//!   accepts consumes the entire frontier;
+//! * **independent** (predicting rejects): candidate `k` quantizes only
+//!   the `k`-th pending layer, so a run of rejects consumes the entire
+//!   frontier.
+//!
+//! Candidate 0 is the same configuration in both modes — exactly the one
+//! the sequential algorithm would evaluate next — so every batch decides at
+//! least one layer. The replay consumes results while the predicted
+//! direction holds, flips the mode on the first mispredict, and re-batches.
+//! Consumed candidates are configurations the sequential search would have
+//! evaluated with identical results, which makes the final configuration,
+//! accuracy and decision-eval count bit-identical at every worker count;
+//! only discarded speculative work varies.
 
 use crate::quant::QuantConfig;
 use crate::Result;
 
 use super::{EvalResult, SearchEnv, SearchOutcome};
+
+/// Speculation mode for the next frontier: mirror of the last decision.
+#[derive(Clone, Copy, PartialEq)]
+enum Spec {
+    /// Assume upcoming candidates are accepted (stacked prefixes).
+    Cumulative,
+    /// Assume upcoming candidates are rejected (isolated single-layer
+    /// trials against a fixed base).
+    Independent,
+}
 
 pub fn search<E: SearchEnv>(
     env: &mut E,
@@ -19,28 +53,72 @@ pub fn search<E: SearchEnv>(
 ) -> Result<SearchOutcome> {
     let n = env.num_layers();
     assert_eq!(order.len(), n, "ordering must cover every quant layer");
+    let window = env.preferred_batch().max(1);
     let mut w = QuantConfig::float(n);
     let mut evals = 0usize;
     // ll: layers still eligible for further quantization, sensitivity order.
     let mut ll: Vec<usize> = order.to_vec();
+    // Most layers survive the first (highest) width, so start optimistic.
+    let mut mode = Spec::Cumulative;
     for &b in quant_bits {
         let mut ql = Vec::with_capacity(ll.len());
-        for &layer in &ll {
-            let prev = w.layer_bits(layer);
-            w.set_layer(layer, b);
-            let r = env.eval(&w, Some(target))?;
-            evals += 1;
-            if r.accuracy >= target {
-                ql.push(layer);
-            } else {
-                w.set_layer(layer, prev);
+        let mut i = 0usize;
+        while i < ll.len() {
+            let pending = &ll[i..(i + window).min(ll.len())];
+            let cfgs = speculate(&w, pending, b, mode);
+            let results = env.eval_many(&cfgs, Some(target));
+            let mut consumed = 0usize;
+            for (j, r) in results.into_iter().enumerate() {
+                let r = r?;
+                evals += 1;
+                consumed = j + 1;
+                let pass = r.accuracy >= target;
+                if pass {
+                    // The sequential config at this decision includes the
+                    // layer (and, in cumulative mode, its predecessors —
+                    // already applied on their own accepts).
+                    w.set_layer(pending[j], b);
+                    ql.push(pending[j]);
+                }
+                // A result at j+1 is only sequential-valid if decision j
+                // went the way the speculation mode assumed.
+                let predicted = match mode {
+                    Spec::Cumulative => pass,
+                    Spec::Independent => !pass,
+                };
+                if !predicted {
+                    mode = if pass { Spec::Cumulative } else { Spec::Independent };
+                    break;
+                }
             }
+            i += consumed;
         }
         ll = ql;
     }
     let final_res: EvalResult = env.eval(&w, None)?;
     evals += 1;
     Ok(SearchOutcome { config: w, accuracy: final_res.accuracy, evals, target })
+}
+
+/// Build one speculative frontier over `pending` layers at width `bits`.
+fn speculate(base: &QuantConfig, pending: &[usize], bits: f32, mode: Spec) -> Vec<QuantConfig> {
+    let mut out = Vec::with_capacity(pending.len());
+    let mut stacked = base.clone();
+    for &layer in pending {
+        let cfg = match mode {
+            Spec::Cumulative => {
+                stacked.set_layer(layer, bits);
+                stacked.clone()
+            }
+            Spec::Independent => {
+                let mut c = base.clone();
+                c.set_layer(layer, bits);
+                c
+            }
+        };
+        out.push(cfg);
+    }
+    out
 }
 
 #[cfg(test)]
@@ -68,6 +146,28 @@ mod tests {
                 .map(|(i, &b)| self.penalty[i] * f64::from(16.0 - b) / 12.0)
                 .sum();
             Ok(EvalResult { loss: cost, accuracy: 1.0 - cost, exact: true })
+        }
+    }
+
+    /// A `Mock` that advertises a batch window, to exercise speculation.
+    struct BatchedMock {
+        inner: Mock,
+        window: usize,
+        raw_evals: usize,
+    }
+
+    impl SearchEnv for BatchedMock {
+        fn num_layers(&self) -> usize {
+            self.inner.num_layers()
+        }
+
+        fn eval(&mut self, cfg: &QuantConfig, t: Option<f64>) -> Result<EvalResult> {
+            self.raw_evals += 1;
+            self.inner.eval(cfg, t)
+        }
+
+        fn preferred_batch(&self) -> usize {
+            self.window
         }
     }
 
@@ -120,5 +220,40 @@ mod tests {
         let out = search(&mut env, &[0, 1], &[8.0, 4.0], 0.99).unwrap();
         assert_eq!(out.config.layer_bits(1), 16.0);
         assert_eq!(env.evals_of_layer1_at4, 0);
+    }
+
+    #[test]
+    fn batched_windows_match_sequential_outcome() {
+        // Mixed accept/reject pattern; every window size must reproduce the
+        // sequential configuration, accuracy and decision-eval count.
+        let penalty = vec![0.0, 0.004, 0.5, 0.0001, 0.2, 0.0, 0.003, 0.9];
+        let order: Vec<usize> = (0..penalty.len()).collect();
+        let mut seq_env = Mock { penalty: penalty.clone() };
+        let seq = search(&mut seq_env, &order, &[8.0, 4.0], 0.99).unwrap();
+        for window in [1usize, 2, 3, 8, 64] {
+            let mut env =
+                BatchedMock { inner: Mock { penalty: penalty.clone() }, window, raw_evals: 0 };
+            let out = search(&mut env, &order, &[8.0, 4.0], 0.99).unwrap();
+            assert_eq!(out.config, seq.config, "window {window}");
+            assert_eq!(out.accuracy, seq.accuracy, "window {window}");
+            assert_eq!(out.evals, seq.evals, "window {window}");
+            // Speculation may add raw evals but never drops decisions.
+            assert!(env.raw_evals >= out.evals, "window {window}");
+        }
+    }
+
+    #[test]
+    fn cumulative_runs_consume_whole_windows() {
+        // All-accept model: with window W the search must issue about N/W
+        // batches, i.e. raw evals stay ~N (no quadratic re-batching).
+        let n = 32;
+        let mut env =
+            BatchedMock { inner: Mock { penalty: vec![0.0; n] }, window: 8, raw_evals: 0 };
+        let order: Vec<usize> = (0..n).collect();
+        let out = search(&mut env, &order, &[8.0, 4.0], 0.5).unwrap();
+        assert_eq!(out.config, QuantConfig::uniform(n, 4.0));
+        // Sequential would use 2n+1 evals; perfect speculation issues the
+        // same raw count (every speculative result gets consumed).
+        assert_eq!(env.raw_evals, 2 * n + 1);
     }
 }

@@ -6,12 +6,29 @@
 //! [`greedy`] (Alg. 2) and [`bisection`] (Alg. 1) drive it through the
 //! [`SearchEnv`] trait, which also lets property tests run the searches
 //! against synthetic models with known optima.
+//!
+//! Batched evaluation: per-layer candidate scoring is embarrassingly
+//! parallel (Pandey et al., "A Practical Mixed Precision Algorithm for
+//! Post-Training Quantization"), so [`SearchEnv::eval_many`] lets a search
+//! submit a whole candidate frontier at once. [`ParallelEnv`] fans such
+//! batches out over a worker pool for thread-safe environments,
+//! [`PipelinePool`] does the same with one device pipeline per worker, and
+//! [`EvalCache`] persists exact results across runs. Both searches size
+//! their speculative frontiers to [`SearchEnv::preferred_batch`] and replay
+//! the sequential decision sequence against the batched results, so the
+//! final configuration is bit-identical at every worker count.
 
 pub mod bisection;
+mod cache;
 pub mod greedy;
+mod parallel;
 mod pipeline;
+mod pool;
 
+pub use cache::EvalCache;
+pub use parallel::{ParallelEnv, SyncSearchEnv};
 pub use pipeline::{Pipeline, PipelineStats};
+pub use pool::PipelinePool;
 
 use crate::quant::QuantConfig;
 use crate::Result;
@@ -31,9 +48,27 @@ pub struct EvalResult {
 /// Anything a search can evaluate configurations against.
 pub trait SearchEnv {
     fn num_layers(&self) -> usize;
+
     /// Evaluate; `target` enables early-exit (result stays decision-exact:
     /// `accuracy >= target` iff a full evaluation would satisfy it).
     fn eval(&mut self, cfg: &QuantConfig, target: Option<f64>) -> Result<EvalResult>;
+
+    /// Evaluate a batch of candidate configurations, one result per input
+    /// in order. The default falls back to sequential [`SearchEnv::eval`];
+    /// parallel environments override it to score the whole frontier
+    /// concurrently. Per-candidate errors are reported in place so callers
+    /// decide which speculative failures matter.
+    fn eval_many(&mut self, cfgs: &[QuantConfig], target: Option<f64>) -> Vec<Result<EvalResult>> {
+        cfgs.iter().map(|c| self.eval(c, target)).collect()
+    }
+
+    /// How many candidates this environment can usefully evaluate at once
+    /// (its worker count). Searches size speculative frontiers to this;
+    /// `1` makes every batched search reduce exactly to its sequential
+    /// form.
+    fn preferred_batch(&self) -> usize {
+        1
+    }
 }
 
 /// Result of a configuration search.
@@ -42,7 +77,9 @@ pub struct SearchOutcome {
     pub config: QuantConfig,
     /// Exact accuracy of the final configuration.
     pub accuracy: f64,
-    /// Number of `eval` calls the search issued.
+    /// Number of *decision* evaluations the search consumed — identical at
+    /// every worker count. Speculative evaluations a batched run discards
+    /// are visible in the environment's own counters instead.
     pub evals: usize,
     /// The accuracy floor the search guaranteed.
     pub target: f64,

@@ -1,0 +1,175 @@
+//! Parallel candidate fan-out for thread-safe evaluation environments.
+//!
+//! [`ParallelEnv`] adapts anything implementing [`SyncSearchEnv`] (shared
+//! `&self` evaluation) into a [`SearchEnv`] whose `eval_many` scatters the
+//! batch over `workers` scoped threads. Results come back slot-indexed, so
+//! the output order — and therefore every decision a search replays — is
+//! independent of worker scheduling: outcomes are bit-identical at any
+//! worker count, only wall-clock changes.
+//!
+//! The device [`super::Pipeline`] is *not* `Sync` (PJRT handles are
+//! single-threaded); its multi-worker counterpart is
+//! [`super::PipelinePool`], which owns one pipeline per worker thread.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::quant::QuantConfig;
+use crate::Result;
+
+use super::{EvalResult, SearchEnv};
+
+/// A thread-safe evaluation environment: evaluation borrows `&self`, so
+/// many candidates can be scored concurrently.
+pub trait SyncSearchEnv: Sync {
+    fn num_layers(&self) -> usize;
+
+    /// Evaluate one configuration. Must be deterministic for a given
+    /// configuration (any seeding derived from inputs, not call order) so
+    /// that parallel schedules reproduce sequential results bit-exactly.
+    fn eval(&self, cfg: &QuantConfig, target: Option<f64>) -> Result<EvalResult>;
+}
+
+/// [`SearchEnv`] adapter fanning `eval_many` batches over scoped threads.
+pub struct ParallelEnv<'e, E: SyncSearchEnv> {
+    env: &'e E,
+    workers: usize,
+    /// Evaluations issued, speculative ones included (contrast with
+    /// [`super::SearchOutcome::evals`], which counts consumed decisions).
+    raw_evals: usize,
+}
+
+impl<'e, E: SyncSearchEnv> ParallelEnv<'e, E> {
+    pub fn new(env: &'e E, workers: usize) -> Self {
+        Self { env, workers: workers.max(1), raw_evals: 0 }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Total evaluations issued so far, including discarded speculation.
+    pub fn raw_evals(&self) -> usize {
+        self.raw_evals
+    }
+}
+
+impl<E: SyncSearchEnv> SearchEnv for ParallelEnv<'_, E> {
+    fn num_layers(&self) -> usize {
+        self.env.num_layers()
+    }
+
+    fn eval(&mut self, cfg: &QuantConfig, target: Option<f64>) -> Result<EvalResult> {
+        self.raw_evals += 1;
+        self.env.eval(cfg, target)
+    }
+
+    fn preferred_batch(&self) -> usize {
+        self.workers
+    }
+
+    fn eval_many(&mut self, cfgs: &[QuantConfig], target: Option<f64>) -> Vec<Result<EvalResult>> {
+        self.raw_evals += cfgs.len();
+        if self.workers == 1 || cfgs.len() <= 1 {
+            return cfgs.iter().map(|c| self.env.eval(c, target)).collect();
+        }
+        let env = self.env;
+        let next = AtomicUsize::new(0);
+        let mut slots: Vec<Option<Result<EvalResult>>> = Vec::new();
+        slots.resize_with(cfgs.len(), || None);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..self.workers.min(cfgs.len()))
+                .map(|_| {
+                    let next = &next;
+                    s.spawn(move || {
+                        // Work-stealing by atomic index: assignment order
+                        // varies between runs, slot order never does.
+                        let mut done = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= cfgs.len() {
+                                break;
+                            }
+                            done.push((i, env.eval(&cfgs[i], target)));
+                        }
+                        done
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (i, r) in h.join().expect("eval worker panicked") {
+                    slots[i] = Some(r);
+                }
+            }
+        });
+        slots.into_iter().map(|o| o.expect("every slot filled")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SearchAlgo;
+    use crate::quant::QUANT_BITS;
+
+    /// Separable monotone environment with shared-state eval.
+    struct Separable {
+        penalty: Vec<f64>,
+        evals: AtomicUsize,
+    }
+
+    impl SyncSearchEnv for Separable {
+        fn num_layers(&self) -> usize {
+            self.penalty.len()
+        }
+
+        fn eval(&self, cfg: &QuantConfig, _t: Option<f64>) -> Result<EvalResult> {
+            self.evals.fetch_add(1, Ordering::Relaxed);
+            let cost: f64 = cfg
+                .bits_w
+                .iter()
+                .enumerate()
+                .map(|(i, &b)| self.penalty[i] * f64::from(16.0 - b) / 12.0)
+                .sum();
+            Ok(EvalResult { loss: cost, accuracy: 1.0 - cost, exact: true })
+        }
+    }
+
+    #[test]
+    fn batch_results_are_slot_ordered() {
+        let env = Separable { penalty: vec![0.0, 0.5, 0.0, 0.9], evals: AtomicUsize::new(0) };
+        let mut p = ParallelEnv::new(&env, 4);
+        let cfgs: Vec<QuantConfig> = (0..4)
+            .map(|i| {
+                let mut c = QuantConfig::float(4);
+                c.set_layer(i, 4.0);
+                c
+            })
+            .collect();
+        let batched = p.eval_many(&cfgs, None);
+        for (i, r) in batched.iter().enumerate() {
+            let direct = env.eval(&cfgs[i], None).unwrap();
+            assert_eq!(*r.as_ref().unwrap(), direct, "slot {i}");
+        }
+        assert_eq!(p.raw_evals(), 4);
+    }
+
+    #[test]
+    fn search_outcomes_identical_across_worker_counts() {
+        let penalty = vec![0.0, 0.004, 0.5, 0.0001, 0.2, 0.0, 0.003, 0.9, 0.0, 0.0];
+        let order: Vec<usize> = (0..penalty.len()).collect();
+        let mut reference = None;
+        for workers in [1usize, 2, 8] {
+            let env = Separable { penalty: penalty.clone(), evals: AtomicUsize::new(0) };
+            let mut p = ParallelEnv::new(&env, workers);
+            let out = SearchAlgo::Greedy.run(&mut p, &order, &QUANT_BITS, 0.99).unwrap();
+            match &reference {
+                None => reference = Some(out),
+                Some(r) => {
+                    assert_eq!(out.config, r.config, "workers {workers}");
+                    assert_eq!(out.accuracy, r.accuracy, "workers {workers}");
+                    assert_eq!(out.evals, r.evals, "workers {workers}");
+                }
+            }
+        }
+    }
+}

@@ -14,22 +14,24 @@ use std::path::Path;
 use anyhow::{ensure, Context};
 
 use crate::model::ModelArtifacts;
-use crate::quant::{
-    self, AdjustReport, CalibrationOptions, QuantConfig, Scales,
-};
+use crate::quant::{self, AdjustReport, CalibrationOptions, QuantConfig, Scales};
 use crate::runtime::{scalar_f32, vec_f32, Engine, Executable, HostTensor};
 use crate::util::rng::Rng;
 use crate::Result;
 
-use super::{EvalResult, SearchEnv};
+use super::{EvalCache, EvalResult, SearchEnv};
 
 /// Counters for reports and the §Perf log.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct PipelineStats {
     /// `eval` calls answered (cache hits included).
     pub evals: usize,
-    /// `eval` calls answered from the memo cache.
+    /// `eval` calls answered from the in-memory memo cache.
     pub cache_hits: usize,
+    /// `eval` calls answered from the persistent cross-run cache.
+    pub persistent_hits: usize,
+    /// `eval_many` frontiers submitted.
+    pub batches: usize,
     /// Graph executions (batches actually run on the device).
     pub batch_execs: usize,
     /// Evaluations that stopped before the last batch.
@@ -72,6 +74,8 @@ pub struct Pipeline {
     calib_adj_batches: Vec<(xla::PjRtBuffer, xla::PjRtBuffer)>,  // calib-batch sized
 
     cache: HashMap<u64, CachedEval>,
+    /// Optional cross-run cache (see [`Pipeline::attach_eval_cache`]).
+    eval_cache: Option<EvalCache>,
     pub stats: PipelineStats,
 }
 
@@ -121,6 +125,7 @@ impl Pipeline {
             calib_sens_batches,
             calib_adj_batches,
             cache: HashMap::new(),
+            eval_cache: None,
             stats: PipelineStats::default(),
         };
         pipe.sync_scales()?;
@@ -137,7 +142,10 @@ impl Pipeline {
     }
 
     /// Re-upload the scale vectors after a change (calibration/adjustment)
-    /// and invalidate the evaluation cache — results depend on scales.
+    /// and invalidate the evaluation caches — results depend on scales. A
+    /// persistent cache attached for the previous scales is flushed and
+    /// detached (its context fingerprint no longer matches); re-attach once
+    /// the new scales are final.
     pub fn sync_scales(&mut self) -> Result<()> {
         let s = &self.scales;
         let n = s.num_layers();
@@ -148,7 +156,63 @@ impl Pipeline {
             self.engine.upload_f32(&s.gamma_a, &[n])?,
         ];
         self.cache.clear();
+        if let Some(mut cache) = self.eval_cache.take() {
+            let _ = cache.save();
+        }
         Ok(())
+    }
+
+    /// Fingerprint of everything an exact evaluation result depends on
+    /// besides the configuration: model identity, the four scale vectors
+    /// (bit-exact), and the validation data + trained parameters. The
+    /// latter two are covered by the export-time float baselines (computed
+    /// from both) plus the validation labels, so regenerated artifacts
+    /// invalidate the cache even when the model name is unchanged.
+    pub fn eval_context(&self) -> String {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        let s = &self.scales;
+        for v in [&s.alpha_w, &s.gamma_w, &s.alpha_a, &s.gamma_a] {
+            for &x in v {
+                x.to_bits().hash(&mut h);
+            }
+        }
+        let m = &self.artifacts.manifest;
+        m.float_val_acc.to_bits().hash(&mut h);
+        m.float_val_loss.to_bits().hash(&mut h);
+        m.eval_batch.hash(&mut h);
+        self.artifacts.val.count.hash(&mut h);
+        match &self.artifacts.val.y {
+            HostTensor::F32 { data, .. } => {
+                for v in data {
+                    v.to_bits().hash(&mut h);
+                }
+            }
+            HostTensor::I32 { data, .. } => data.hash(&mut h),
+        }
+        format!("{}/v{}/state-{:016x}", m.model, m.version, h.finish())
+    }
+
+    /// Attach a persistent cross-run [`EvalCache`] at `path`, bound to the
+    /// current [`Pipeline::eval_context`]. Call after calibration (scale
+    /// changes flush and detach it). Exact results are looked up before
+    /// touching the device and recorded after full evaluations; the cache
+    /// is written back on [`Pipeline::flush_eval_cache`] and on drop.
+    pub fn attach_eval_cache(&mut self, path: &Path) {
+        self.eval_cache = Some(EvalCache::load(path, &self.eval_context()));
+    }
+
+    /// Persist the attached eval cache, if any.
+    pub fn flush_eval_cache(&mut self) -> Result<()> {
+        match self.eval_cache.as_mut() {
+            Some(cache) => cache.save(),
+            None => Ok(()),
+        }
+    }
+
+    /// The attached eval cache, for stats/reporting.
+    pub fn eval_cache(&self) -> Option<&EvalCache> {
+        self.eval_cache.as_ref()
     }
 
     fn bits_bufs(&self, cfg: &QuantConfig) -> Result<(xla::PjRtBuffer, xla::PjRtBuffer)> {
@@ -234,7 +298,8 @@ impl Pipeline {
         Ok(CachedEval { loss: loss_sum / done as f64, lb: acc, ub: acc })
     }
 
-    /// Evaluate on the validation split (memoized).
+    /// Evaluate on the validation split (memoized, in-memory then
+    /// persistent cross-run cache).
     pub fn eval_config(&mut self, cfg: &QuantConfig, target: Option<f64>) -> Result<EvalResult> {
         self.stats.evals += 1;
         let key = cfg.key();
@@ -248,6 +313,14 @@ impl Pipeline {
                 return Ok(to_result(hit, target));
             }
         }
+        if let Some(hit) = self.eval_cache.as_mut().and_then(|c| c.lookup(key)) {
+            // Exact persisted results answer any target decisively; seed
+            // the memo cache so later lookups stay in memory.
+            self.stats.persistent_hits += 1;
+            let ce = CachedEval { loss: hit.loss, lb: hit.accuracy, ub: hit.accuracy };
+            self.cache.insert(key, ce);
+            return Ok(hit);
+        }
         let params = std::mem::take(&mut self.param_bufs);
         let res = self.eval_on(&params, cfg, Which::Val, target);
         self.param_bufs = params;
@@ -257,7 +330,11 @@ impl Pipeline {
         if ce.ub - ce.lb < entry.ub - entry.lb {
             *entry = ce;
         }
-        Ok(to_result(ce, target))
+        let result = to_result(ce, target);
+        if let Some(cache) = self.eval_cache.as_mut() {
+            cache.insert(key, &result);
+        }
+        Ok(result)
     }
 
     /// Mean float loss on the sensitivity split with the stock parameters.
@@ -291,6 +368,9 @@ impl Pipeline {
     // ---------------------------------------------------------- calibration
 
     /// Per-layer max|activation| over the adjustment split (float model).
+    // Indexing (not iterating) the batch list keeps `self` free for the
+    // mutable stats updates inside the loop.
+    #[allow(clippy::needless_range_loop)]
     pub fn act_stats(&mut self) -> Result<Vec<f32>> {
         if self.actstats_exe.is_none() {
             self.actstats_exe =
@@ -317,9 +397,11 @@ impl Pipeline {
     /// The paper's two-step scale estimation: max calibration for weights
     /// (host-side) and activations (`actstats` graph), then backprop
     /// adjustment of the four scale vectors on the calibration loss.
+    #[allow(clippy::needless_range_loop)]
     pub fn calibrate(&mut self, opts: &CalibrationOptions) -> Result<AdjustReport> {
         // Step 1: max calibration.
-        self.scales = quant::calibrate::weight_scales(&self.artifacts.manifest, &self.artifacts.params);
+        self.scales =
+            quant::calibrate::weight_scales(&self.artifacts.manifest, &self.artifacts.params);
         let acts = self.act_stats()?;
         quant::calibrate::apply_act_stats(&mut self.scales, &acts);
         self.sync_scales()?;
@@ -530,5 +612,23 @@ impl SearchEnv for Pipeline {
 
     fn eval(&mut self, cfg: &QuantConfig, target: Option<f64>) -> Result<EvalResult> {
         self.eval_config(cfg, target)
+    }
+
+    /// One device, so a frontier is expanded sequentially — duplicates and
+    /// previously seen configurations are absorbed by the memo + persistent
+    /// caches, which is where batch submission pays off on a single
+    /// pipeline. True multi-worker fan-out is [`super::PipelinePool`].
+    fn eval_many(&mut self, cfgs: &[QuantConfig], target: Option<f64>) -> Vec<Result<EvalResult>> {
+        self.stats.batches += 1;
+        cfgs.iter().map(|c| self.eval_config(c, target)).collect()
+    }
+}
+
+impl Drop for Pipeline {
+    fn drop(&mut self) {
+        // Best-effort write-back of the cross-run cache.
+        if let Some(cache) = self.eval_cache.as_mut() {
+            let _ = cache.save();
+        }
     }
 }

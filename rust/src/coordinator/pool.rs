@@ -1,0 +1,247 @@
+//! A worker pool of device pipelines for parallel candidate evaluation.
+//!
+//! PJRT handles are not `Send`, so — exactly like [`crate::server`] — each
+//! worker thread constructs and owns its *own* [`Pipeline`] (engine,
+//! compiled graphs, device-resident state). Candidate configurations from
+//! [`SearchEnv::eval_many`] are scattered round-robin across the workers
+//! and gathered slot-indexed, so result order (and every search decision
+//! replayed from it) is independent of scheduling.
+//!
+//! The workers share two interior-mutability-safe caches:
+//!
+//! * a memo map (`Mutex<HashMap>`) of exact results, so no configuration is
+//!   evaluated twice anywhere in the pool, and
+//! * an optional persistent [`EvalCache`], giving cross-run reuse identical
+//!   to a single pipeline's (see [`PipelinePool::attach_eval_cache`]).
+//!
+//! Only *exact* results enter the shared maps — they answer any accuracy
+//! target decisively, so sharing never changes a decision. Memory cost is
+//! one full device pipeline per worker; worth it when candidate evaluation
+//! dominates search wall-clock (every model in this repo).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{mpsc, Arc, Mutex};
+
+use anyhow::{anyhow, Context as _};
+
+use crate::quant::QuantConfig;
+use crate::Result;
+
+use super::{EvalCache, EvalResult, Pipeline, SearchEnv};
+
+/// Shared state all workers consult before touching their device.
+struct SharedCache {
+    /// Exact results by configuration key.
+    memo: Mutex<HashMap<u64, EvalResult>>,
+    /// Optional cross-run cache (exact results only, context-guarded).
+    persistent: Mutex<Option<EvalCache>>,
+}
+
+impl SharedCache {
+    fn lookup(&self, key: u64) -> Option<EvalResult> {
+        if let Some(hit) = self.memo.lock().unwrap().get(&key).copied() {
+            return Some(hit);
+        }
+        let mut guard = self.persistent.lock().unwrap();
+        let hit = guard.as_mut().and_then(|c| c.lookup(key))?;
+        self.memo.lock().unwrap().insert(key, hit);
+        Some(hit)
+    }
+
+    fn publish(&self, key: u64, result: &EvalResult) {
+        if !result.exact {
+            return;
+        }
+        self.memo.lock().unwrap().insert(key, *result);
+        if let Some(cache) = self.persistent.lock().unwrap().as_mut() {
+            cache.insert(key, result);
+        }
+    }
+}
+
+struct Job {
+    cfg: QuantConfig,
+    target: Option<f64>,
+    slot: usize,
+    resp: mpsc::Sender<(usize, Result<EvalResult>)>,
+}
+
+struct Worker {
+    tx: mpsc::Sender<Job>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+/// A pool of `workers` device pipelines implementing [`SearchEnv`] with
+/// genuinely parallel `eval_many`.
+pub struct PipelinePool {
+    workers: Vec<Worker>,
+    shared: Arc<SharedCache>,
+    num_layers: usize,
+    /// Evaluations dispatched to workers (shared-cache hits excluded).
+    dispatched: usize,
+}
+
+impl PipelinePool {
+    /// Build `workers` pipelines for `model`, running `configure` on each
+    /// freshly constructed pipeline (scale loading / calibration) before it
+    /// starts serving. Construction fails if any worker fails to build.
+    pub fn new(
+        artifacts_dir: &Path,
+        model: &str,
+        workers: usize,
+        configure: impl Fn(&mut Pipeline) -> Result<()> + Send + Sync + 'static,
+    ) -> Result<Self> {
+        let workers = workers.max(1);
+        let shared = Arc::new(SharedCache {
+            memo: Mutex::new(HashMap::new()),
+            persistent: Mutex::new(None),
+        });
+        let configure: Arc<dyn Fn(&mut Pipeline) -> Result<()> + Send + Sync> = Arc::new(configure);
+        // Spawn every worker before waiting on any readiness signal, so the
+        // expensive per-worker construction (graph compilation, scale
+        // loading) runs concurrently rather than serially.
+        let mut built = Vec::with_capacity(workers);
+        let mut readies = Vec::with_capacity(workers);
+        for wi in 0..workers {
+            let (tx, rx) = mpsc::channel::<Job>();
+            let (ready_tx, ready_rx) = mpsc::channel::<Result<usize>>();
+            let dir: PathBuf = artifacts_dir.to_path_buf();
+            let model = model.to_string();
+            let shared = shared.clone();
+            let configure = configure.clone();
+            let join = std::thread::spawn(move || {
+                let mut pipeline = match Pipeline::new(&dir, &model) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e.context(format!("pool worker {wi}"))));
+                        return;
+                    }
+                };
+                if let Err(e) = configure(&mut pipeline) {
+                    let _ = ready_tx.send(Err(e.context(format!("configuring pool worker {wi}"))));
+                    return;
+                }
+                let _ = ready_tx.send(Ok(pipeline.num_quant_layers()));
+                worker_loop(&mut pipeline, &shared, &rx);
+            });
+            built.push(Worker { tx, join: Some(join) });
+            readies.push((wi, ready_rx));
+        }
+        let mut num_layers = 0usize;
+        for (wi, ready_rx) in readies {
+            num_layers = ready_rx
+                .recv()
+                .map_err(|_| anyhow!("pool worker {wi} died during construction"))?
+                .with_context(|| format!("building pipeline pool for {model}"))?;
+        }
+        Ok(Self { workers: built, shared, num_layers, dispatched: 0 })
+    }
+
+    /// Attach a persistent cross-run cache shared by all workers. The
+    /// context fingerprint must come from one of the (identically
+    /// configured) worker pipelines; use [`Pipeline::eval_context`] on a
+    /// scratch pipeline, or pass any stable string covering model + scales.
+    pub fn attach_eval_cache(&self, path: &Path, context: &str) {
+        *self.shared.persistent.lock().unwrap() = Some(EvalCache::load(path, context));
+    }
+
+    /// Persist the shared cache, if attached.
+    pub fn flush_eval_cache(&self) -> Result<()> {
+        match self.shared.persistent.lock().unwrap().as_mut() {
+            Some(cache) => cache.save(),
+            None => Ok(()),
+        }
+    }
+
+    /// Evaluations that actually reached a worker (cache misses).
+    pub fn dispatched(&self) -> usize {
+        self.dispatched
+    }
+
+    fn submit(&mut self, cfgs: &[QuantConfig], target: Option<f64>) -> Vec<Result<EvalResult>> {
+        let mut slots: Vec<Option<Result<EvalResult>>> = Vec::new();
+        slots.resize_with(cfgs.len(), || None);
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let mut outstanding = 0usize;
+        for (slot, cfg) in cfgs.iter().enumerate() {
+            // Shared-cache hits short-circuit without touching a worker.
+            // Exact hits are target-independent, so this never changes a
+            // decision relative to a fresh evaluation.
+            if let Some(hit) = self.shared.lookup(cfg.key()) {
+                slots[slot] = Some(Ok(hit));
+                continue;
+            }
+            let worker = &self.workers[slot % self.workers.len()];
+            let job = Job { cfg: cfg.clone(), target, slot, resp: resp_tx.clone() };
+            if worker.tx.send(job).is_err() {
+                slots[slot] = Some(Err(anyhow!("pool worker exited")));
+                continue;
+            }
+            self.dispatched += 1;
+            outstanding += 1;
+        }
+        drop(resp_tx);
+        for _ in 0..outstanding {
+            match resp_rx.recv() {
+                Ok((slot, result)) => slots[slot] = Some(result),
+                Err(_) => break,
+            }
+        }
+        slots
+            .into_iter()
+            .map(|o| o.unwrap_or_else(|| Err(anyhow!("pool worker dropped a job"))))
+            .collect()
+    }
+}
+
+fn worker_loop(pipeline: &mut Pipeline, shared: &SharedCache, rx: &mpsc::Receiver<Job>) {
+    while let Ok(job) = rx.recv() {
+        let key = job.cfg.key();
+        let result = match shared.lookup(key) {
+            Some(hit) => Ok(hit),
+            None => {
+                let r = pipeline.eval_config(&job.cfg, job.target);
+                if let Ok(res) = &r {
+                    shared.publish(key, res);
+                }
+                r
+            }
+        };
+        let _ = job.resp.send((job.slot, result));
+    }
+}
+
+impl SearchEnv for PipelinePool {
+    fn num_layers(&self) -> usize {
+        self.num_layers
+    }
+
+    fn eval(&mut self, cfg: &QuantConfig, target: Option<f64>) -> Result<EvalResult> {
+        self.submit(std::slice::from_ref(cfg), target).pop().expect("one result per config")
+    }
+
+    fn preferred_batch(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn eval_many(&mut self, cfgs: &[QuantConfig], target: Option<f64>) -> Vec<Result<EvalResult>> {
+        self.submit(cfgs, target)
+    }
+}
+
+impl Drop for PipelinePool {
+    fn drop(&mut self) {
+        let _ = self.flush_eval_cache();
+        // Closing the job channels ends each worker loop; then reap.
+        let workers: Vec<Worker> = self.workers.drain(..).collect();
+        let mut joins = Vec::with_capacity(workers.len());
+        for mut w in workers {
+            joins.extend(w.join.take());
+            drop(w); // drops the sender
+        }
+        for join in joins {
+            let _ = join.join();
+        }
+    }
+}

@@ -1,6 +1,5 @@
 //! Analytical roofline model of an A100-class accelerator.
 
-
 use crate::quant::BitWidth;
 
 /// Execution precision of a kernel: the wider of its two operand widths
@@ -101,7 +100,13 @@ impl AccelModel {
     /// * `macs` — useful multiply-accumulates,
     /// * `(m, n, k)` — GEMM-equivalent shape (tile efficiency),
     /// * `bytes` — HBM traffic (weights at their storage width + I/O).
-    pub fn kernel_latency_s(&self, macs: u64, mnk: (u64, u64, u64), bytes: f64, p: Precision) -> f64 {
+    pub fn kernel_latency_s(
+        &self,
+        macs: u64,
+        mnk: (u64, u64, u64),
+        bytes: f64,
+        p: Precision,
+    ) -> f64 {
         let eff = self.tile_efficiency(mnk.0, mnk.1, mnk.2).max(1e-3);
         let compute = macs as f64 / (self.peak_mac(p) * eff);
         let memory = bytes / self.hbm_bytes_per_s;

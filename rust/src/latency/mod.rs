@@ -106,7 +106,8 @@ impl CostModel {
         let rest = manifest.total_param_elems() as f64 - weight_elems as f64;
         let scaled_weights: u64 = layers.iter().map(|l| l.weight_numel).sum();
         let total_param_elems = scaled_weights + (rest * scale.s) as u64;
-        let mut cm = Self { table, layers, total_param_elems, base_latency_s: 0.0, base_size_bytes: 0.0 };
+        let mut cm =
+            Self { table, layers, total_param_elems, base_latency_s: 0.0, base_size_bytes: 0.0 };
         let float_cfg = QuantConfig::float(manifest.num_quant_layers);
         cm.base_latency_s = cm.latency_s(&float_cfg);
         cm.base_size_bytes = cm.size_bytes(&float_cfg);

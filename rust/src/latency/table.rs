@@ -14,7 +14,6 @@
 
 use std::collections::HashMap;
 
-
 use super::accel::{AccelModel, Precision};
 use crate::model::LayerInfo;
 use crate::quant::BitWidth;

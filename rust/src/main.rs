@@ -13,7 +13,7 @@
 //! mpq serve --model resnet_s --bits 8 --requests 256
 //! ```
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::Context;
 
@@ -57,13 +57,13 @@ fn artifacts_dir(args: &Args) -> Result<PathBuf> {
         .ok_or_else(|| anyhow::anyhow!("no artifacts directory found — run `make artifacts` first"))
 }
 
-fn all_models(dir: &PathBuf, only: Option<&str>) -> Result<Vec<String>> {
+fn all_models(dir: &Path, only: Option<&str>) -> Result<Vec<String>> {
     let index = ArtifactIndex::load(dir)?;
     Ok(index
         .models
         .iter()
         .map(|m| m.model.clone())
-        .filter(|m| only.map_or(true, |o| o == m))
+        .filter(|m| only.is_none_or(|o| o == m))
         .collect())
 }
 
@@ -99,7 +99,7 @@ fn main() -> Result<()> {
     }
 }
 
-fn cmd_info(dir: &PathBuf) -> Result<()> {
+fn cmd_info(dir: &Path) -> Result<()> {
     let index = ArtifactIndex::load(dir)?;
     println!("artifacts: {} (schema v{})", dir.display(), index.version);
     for entry in &index.models {
@@ -121,7 +121,7 @@ fn cmd_info(dir: &PathBuf) -> Result<()> {
     Ok(())
 }
 
-fn cmd_calibrate(dir: &PathBuf, args: &Args) -> Result<()> {
+fn cmd_calibrate(dir: &Path, args: &Args) -> Result<()> {
     let model = args.req_str("model")?;
     let mut ctx = ExperimentCtx::new(dir, model)?;
     let opts = CalibrationOptions {
@@ -141,7 +141,7 @@ fn cmd_calibrate(dir: &PathBuf, args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_eval(dir: &PathBuf, args: &Args) -> Result<()> {
+fn cmd_eval(dir: &Path, args: &Args) -> Result<()> {
     let model = args.req_str("model")?;
     let bits = args.get_or("bits", 8.0f32)?;
     let mut ctx = ExperimentCtx::new(dir, model)?;
@@ -161,7 +161,7 @@ fn cmd_eval(dir: &PathBuf, args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_sensitivity(dir: &PathBuf, args: &Args) -> Result<()> {
+fn cmd_sensitivity(dir: &Path, args: &Args) -> Result<()> {
     let model = args.req_str("model")?;
     let metric: MetricKind = args.req("metric")?;
     let trials = args.get_or("trials", METRIC_TRIALS)?;
@@ -184,7 +184,7 @@ fn cmd_sensitivity(dir: &PathBuf, args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_search(dir: &PathBuf, args: &Args) -> Result<()> {
+fn cmd_search(dir: &Path, args: &Args) -> Result<()> {
     let model = args.req_str("model")?;
     let algo = parse_algo(args.get_str("algo").unwrap_or("greedy"))?;
     let metric: MetricKind = args.get_or("metric", MetricKind::Hessian)?;
@@ -216,7 +216,7 @@ fn cmd_search(dir: &PathBuf, args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_table(dir: &PathBuf, args: &Args) -> Result<()> {
+fn cmd_table(dir: &Path, args: &Args) -> Result<()> {
     let id = args.req::<u32>("id")?;
     let out = args.get_str("out").map(PathBuf::from);
     let models = all_models(dir, args.get_str("model"))?;
@@ -230,7 +230,8 @@ fn cmd_table(dir: &PathBuf, args: &Args) -> Result<()> {
                 let cells = search_grid(&mut ctx, targets, 0)?;
                 if let Some(dir_out) = &out {
                     std::fs::create_dir_all(dir_out)?;
-                    std::fs::write(dir_out.join(format!("table{id}_{m}.json")), cells_to_json(&cells))?;
+                    let cell_path = dir_out.join(format!("table{id}_{m}.json"));
+                    std::fs::write(cell_path, cells_to_json(&cells))?;
                 }
                 render_search_table(
                     &format!("Table {id} — {m} (relative to fp16 baseline)"),
@@ -251,7 +252,7 @@ fn cmd_table(dir: &PathBuf, args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_figure(dir: &PathBuf, args: &Args) -> Result<()> {
+fn cmd_figure(dir: &Path, args: &Args) -> Result<()> {
     let id = args.req::<u32>("id")?;
     let out = args.get_str("out").map(PathBuf::from);
     let models = all_models(dir, args.get_str("model"))?;
@@ -302,7 +303,7 @@ fn cmd_figure(dir: &PathBuf, args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_ablation(dir: &PathBuf, args: &Args) -> Result<()> {
+fn cmd_ablation(dir: &Path, args: &Args) -> Result<()> {
     let model = args.req_str("model")?;
     let target = args.get_or("target", 0.99f64)?;
     let out = args.get_str("out").map(PathBuf::from);
@@ -326,7 +327,7 @@ fn cmd_ablation(dir: &PathBuf, args: &Args) -> Result<()> {
 
 /// Drive the batched server with concurrent clients and print latency
 /// percentiles — the QoS view the paper optimizes for.
-fn cmd_serve(dir: &PathBuf, args: &Args) -> Result<()> {
+fn cmd_serve(dir: &Path, args: &Args) -> Result<()> {
     let model = args.req_str("model")?.to_string();
     let bits = args.get_or("bits", 8.0f32)?;
     let requests = args.get_or("requests", 256usize)?;
@@ -343,7 +344,7 @@ fn cmd_serve(dir: &PathBuf, args: &Args) -> Result<()> {
     let cfg = QuantConfig::uniform(n, bits);
     let scales_path = dir.join(format!("{model}_scales.json"));
     let (handle, _join) = mpq::server::spawn(
-        dir.clone(),
+        dir.to_path_buf(),
         model.clone(),
         cfg,
         mpq::server::ServeOptions::default(),

@@ -305,8 +305,8 @@ mod tests {
 
     #[test]
     fn rejects_missing_graph() {
-        let text =
-            test_fixtures::toy_manifest_json().replace("\"hvp\": \"toy_hvp.hlo.txt\"", "\"zzz\": \"x\"");
+        let text = test_fixtures::toy_manifest_json()
+            .replace("\"hvp\": \"toy_hvp.hlo.txt\"", "\"zzz\": \"x\"");
         let v = json::parse(&text).unwrap();
         assert!(Manifest::from_json(&v).is_err());
     }

@@ -5,7 +5,6 @@
 //! this module holds the pure host-side pieces so they are unit-testable
 //! without a PJRT device.
 
-
 use crate::model::{Manifest, ParamStore};
 use crate::quant::Scales;
 

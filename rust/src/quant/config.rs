@@ -1,6 +1,5 @@
 //! Per-layer bit-width configurations — the search space of the paper.
 
-
 /// Bit width meaning "leave in floating point" (the fp16 baseline).
 pub const FLOAT_BITS: f32 = 16.0;
 

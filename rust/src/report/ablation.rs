@@ -22,15 +22,30 @@ use crate::Result;
 /// explores weight precision only.
 pub struct WeightOnlyEnv<'a, E: SearchEnv>(pub &'a mut E);
 
+fn pin_activations(cfg: &QuantConfig) -> QuantConfig {
+    let mut c = cfg.clone();
+    c.bits_a = vec![FLOAT_BITS; c.num_layers()];
+    c
+}
+
 impl<E: SearchEnv> SearchEnv for WeightOnlyEnv<'_, E> {
     fn num_layers(&self) -> usize {
         self.0.num_layers()
     }
 
     fn eval(&mut self, cfg: &QuantConfig, target: Option<f64>) -> Result<EvalResult> {
-        let mut c = cfg.clone();
-        c.bits_a = vec![FLOAT_BITS; c.num_layers()];
-        self.0.eval(&c, target)
+        self.0.eval(&pin_activations(cfg), target)
+    }
+
+    /// Forward whole frontiers so batching/parallelism survives the
+    /// adapter (each candidate pinned before submission).
+    fn eval_many(&mut self, cfgs: &[QuantConfig], target: Option<f64>) -> Vec<Result<EvalResult>> {
+        let pinned: Vec<QuantConfig> = cfgs.iter().map(pin_activations).collect();
+        self.0.eval_many(&pinned, target)
+    }
+
+    fn preferred_batch(&self) -> usize {
+        self.0.preferred_batch()
     }
 }
 
@@ -77,13 +92,24 @@ pub fn adjustment(artifacts_dir: &std::path::Path, model: &str) -> Result<Table>
     for (label, epochs) in [("max calibration only", 0usize), ("+ backprop adjustment", 2)] {
         let mut p = crate::coordinator::Pipeline::new(artifacts_dir, model)?;
         p.calibrate(&CalibrationOptions { epochs, ..Default::default() })?;
+        // Each scale mode gets its own cross-run cache context, so both
+        // sweeps are replay-free on repeated ablation runs.
+        let cache_path = artifacts_dir.join(format!("{model}_evalcache_adjust{epochs}.json"));
+        p.attach_eval_cache(&cache_path);
         let n = p.num_quant_layers();
-        let a8 = p.eval_config(&QuantConfig::uniform(n, 8.0), None)?.accuracy;
-        let a4 = p.eval_config(&QuantConfig::uniform(n, 4.0), None)?.accuracy;
+        // Both uniform probes go out as one frontier.
+        let cfgs = [QuantConfig::uniform(n, 8.0), QuantConfig::uniform(n, 4.0)];
+        let accs: Vec<f64> = p
+            .eval_many(&cfgs, None)
+            .into_iter()
+            .collect::<Result<Vec<_>>>()?
+            .iter()
+            .map(|r| r.accuracy)
+            .collect();
         t.push_row(vec![
             label.to_string(),
-            format!("{:.2}%", a8 * 100.0),
-            format!("{:.2}%", a4 * 100.0),
+            format!("{:.2}%", accs[0] * 100.0),
+            format!("{:.2}%", accs[1] * 100.0),
         ]);
     }
     Ok(t)
@@ -97,7 +123,8 @@ pub fn accelerators(ctx: &mut ExperimentCtx) -> Result<Table> {
         format!("Ablation — accelerator roofline ({})", ctx.model()),
         &["accelerator", "int8 rel latency", "int4 rel latency"],
     );
-    for (label, accel) in [("A100-like", AccelModel::a100_like()), ("TPU-like", AccelModel::tpu_like())] {
+    let accels = [("A100-like", AccelModel::a100_like()), ("TPU-like", AccelModel::tpu_like())];
+    for (label, accel) in accels {
         let cm = CostModel::new(&manifest, &accel);
         t.push_row(vec![
             label.to_string(),

@@ -36,7 +36,10 @@ impl ExperimentCtx {
     }
 
     /// Calibrate scales once per context; reuse a cached scale file when
-    /// the artifacts directory already holds one from a previous run.
+    /// the artifacts directory already holds one from a previous run. Once
+    /// the scales are final, the persistent cross-run eval cache is
+    /// attached, so repeated table/ablation runs skip already-measured
+    /// configurations entirely.
     pub fn ensure_calibrated(&mut self) -> Result<()> {
         if self.calibrated {
             return Ok(());
@@ -46,22 +49,39 @@ impl ExperimentCtx {
             .artifacts
             .dir
             .join(format!("{}_scales.json", self.pipeline.artifacts.manifest.model));
+        let mut loaded = false;
         if path.is_file() {
             let scales = Scales::load(&path)?;
             if scales.num_layers() == self.pipeline.num_quant_layers() {
                 self.pipeline.scales = scales;
                 self.pipeline.sync_scales()?;
-                self.calibrated = true;
                 eprintln!("[calibration] loaded cached scales from {}", path.display());
-                return Ok(());
+                loaded = true;
             }
         }
-        let report = self.pipeline.calibrate(&CalibrationOptions::default())?;
-        eprintln!(
-            "[calibration] adjusted scales over {} steps: loss {:.4} -> {:.4}",
-            report.steps, report.loss_before, report.loss_after
-        );
-        self.pipeline.scales.save(&path)?;
+        if !loaded {
+            let report = self.pipeline.calibrate(&CalibrationOptions::default())?;
+            eprintln!(
+                "[calibration] adjusted scales over {} steps: loss {:.4} -> {:.4}",
+                report.steps, report.loss_before, report.loss_after
+            );
+            self.pipeline.scales.save(&path)?;
+        }
+        let cache_path = self
+            .pipeline
+            .artifacts
+            .dir
+            .join(format!("{}_evalcache.json", self.pipeline.artifacts.manifest.model));
+        self.pipeline.attach_eval_cache(&cache_path);
+        if let Some(cache) = self.pipeline.eval_cache() {
+            if !cache.is_empty() {
+                eprintln!(
+                    "[eval-cache] loaded {} exact results from {}",
+                    cache.len(),
+                    cache_path.display()
+                );
+            }
+        }
         self.calibrated = true;
         Ok(())
     }
@@ -145,6 +165,9 @@ pub fn run_cell(
 // ------------------------------------------------------------------ Table 1
 
 /// Table 1: uniform 4/8/16-bit accuracy, size, latency (absolute+relative).
+/// The three uniform configurations are submitted as one `eval_many`
+/// frontier (deduped/parallelized by the environment) instead of three
+/// sequential round-trips.
 pub fn table1(ctx: &mut ExperimentCtx) -> Result<Table> {
     ctx.ensure_calibrated()?;
     let n = ctx.pipeline.num_quant_layers();
@@ -152,23 +175,25 @@ pub fn table1(ctx: &mut ExperimentCtx) -> Result<Table> {
         format!("Table 1 — uniform quantization baselines ({})", ctx.model()),
         &["bits", "accuracy", "rel acc", "size (MB)", "rel size", "latency (ms)", "rel latency"],
     );
-    let base_acc = {
-        let r = ctx.pipeline.eval_config(&QuantConfig::float(n), None)?;
-        r.accuracy
+    let all_bits = [4.0f32, 8.0, FLOAT_BITS];
+    let cfgs: Vec<QuantConfig> = all_bits.iter().map(|&b| QuantConfig::uniform(n, b)).collect();
+    let results: Vec<crate::coordinator::EvalResult> = {
+        use crate::coordinator::SearchEnv;
+        ctx.pipeline.eval_many(&cfgs, None).into_iter().collect::<Result<_>>()?
     };
-    for bits in [4.0f32, 8.0, FLOAT_BITS] {
-        let cfg = QuantConfig::uniform(n, bits);
-        let r = ctx.pipeline.eval_config(&cfg, None)?;
-        let size_mb = ctx.cost.size_bytes(&cfg) / 1e6;
-        let lat_ms = ctx.cost.latency_s(&cfg) * 1e3;
+    // fp16 is the relative-accuracy baseline (== QuantConfig::float).
+    let base_acc = results[all_bits.len() - 1].accuracy;
+    for ((bits, cfg), r) in all_bits.iter().zip(&cfgs).zip(&results) {
+        let size_mb = ctx.cost.size_bytes(cfg) / 1e6;
+        let lat_ms = ctx.cost.latency_s(cfg) * 1e3;
         t.push_row(vec![
-            format!("{}", bits as u32),
+            format!("{}", *bits as u32),
             format!("{:.2}%", r.accuracy * 100.0),
             fmt_pct(r.accuracy / base_acc),
             format!("{size_mb:.3}"),
-            fmt_pct(ctx.cost.rel_size(&cfg)),
+            fmt_pct(ctx.cost.rel_size(cfg)),
             format!("{lat_ms:.4}"),
-            fmt_pct(ctx.cost.rel_latency(&cfg)),
+            fmt_pct(ctx.cost.rel_latency(cfg)),
         ]);
     }
     Ok(t)

@@ -27,7 +27,7 @@ impl Args {
             // --key=value or --key value or boolean --flag
             if let Some((k, v)) = key.split_once('=') {
                 opts.insert(k.to_string(), v.to_string());
-            } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+            } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
                 opts.insert(key.to_string(), it.next().unwrap());
             } else {
                 flags.push(key.to_string());

@@ -110,12 +110,6 @@ impl Value {
 
     // --------------------------------------------------------------- writer
 
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Value::Null => out.push_str("null"),
@@ -151,6 +145,15 @@ impl Value {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Compact (non-pretty) serialization; `value.to_string()` comes for free.
+impl std::fmt::Display for Value {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
     }
 }
 
@@ -191,7 +194,7 @@ struct Parser<'a> {
     pos: usize,
 }
 
-impl<'a> Parser<'a> {
+impl Parser<'_> {
     fn err(&self, msg: &str) -> anyhow::Error {
         anyhow!("JSON parse error at byte {}: {msg}", self.pos)
     }

@@ -1,0 +1,216 @@
+//! Parity properties for the batched/parallel search engine: at 1, 2 and 8
+//! workers — with and without a cross-run [`EvalCache`] in the loop — both
+//! algorithms must return the *same* `SearchOutcome.config`, accuracy and
+//! decision-eval count as the plain sequential path. No artifacts or PJRT
+//! device needed; randomized synthetic environments with the in-tree
+//! seeded RNG.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use mpq::coordinator::{
+    EvalCache, EvalResult, ParallelEnv, SearchAlgo, SearchEnv, SearchOutcome, SyncSearchEnv,
+};
+use mpq::quant::{QuantConfig, QUANT_BITS};
+use mpq::util::rng::Rng;
+
+const CASES: usize = 40;
+const WORKER_COUNTS: [usize; 3] = [1, 2, 8];
+
+/// Separable monotone environment, shared-state (`&self`) evaluation.
+struct MonotoneSync {
+    penalty: Vec<f64>,
+    evals: AtomicUsize,
+}
+
+impl MonotoneSync {
+    fn random(rng: &mut Rng, n: usize) -> Self {
+        let penalty = (0..n)
+            .map(|_| if rng.uniform() < 0.3 { rng.uniform() * 0.2 } else { rng.uniform() * 1e-3 })
+            .collect();
+        Self { penalty, evals: AtomicUsize::new(0) }
+    }
+
+    fn clone_fresh(&self) -> Self {
+        Self { penalty: self.penalty.clone(), evals: AtomicUsize::new(0) }
+    }
+
+    fn cost(&self, cfg: &QuantConfig) -> f64 {
+        cfg.bits_w
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| self.penalty[i] * f64::from(16.0 - b) / 12.0)
+            .sum()
+    }
+}
+
+impl SyncSearchEnv for MonotoneSync {
+    fn num_layers(&self) -> usize {
+        self.penalty.len()
+    }
+
+    fn eval(&self, cfg: &QuantConfig, _t: Option<f64>) -> mpq::Result<EvalResult> {
+        self.evals.fetch_add(1, Ordering::Relaxed);
+        let cost = self.cost(cfg);
+        Ok(EvalResult { loss: cost, accuracy: 1.0 - cost, exact: true })
+    }
+}
+
+/// An independent, deliberately simple sequential reference: implements
+/// `SearchEnv` directly (default `eval_many`, batch hint 1), so the parity
+/// tests compare the batched engine against the unbatched code path rather
+/// than against itself.
+struct SeqRef<'a>(&'a MonotoneSync);
+
+impl SearchEnv for SeqRef<'_> {
+    fn num_layers(&self) -> usize {
+        self.0.num_layers()
+    }
+
+    fn eval(&mut self, cfg: &QuantConfig, t: Option<f64>) -> mpq::Result<EvalResult> {
+        SyncSearchEnv::eval(self.0, cfg, t)
+    }
+}
+
+/// A `SyncSearchEnv` wrapper that routes every evaluation through a shared
+/// `EvalCache`, mimicking the pipeline's persistent-cache path on a
+/// synthetic environment.
+struct Cached<'a> {
+    inner: &'a MonotoneSync,
+    cache: &'a Mutex<EvalCache>,
+}
+
+impl SyncSearchEnv for Cached<'_> {
+    fn num_layers(&self) -> usize {
+        self.inner.num_layers()
+    }
+
+    fn eval(&self, cfg: &QuantConfig, t: Option<f64>) -> mpq::Result<EvalResult> {
+        let key = cfg.key();
+        if let Some(hit) = self.cache.lock().unwrap().lookup(key) {
+            return Ok(hit);
+        }
+        let r = SyncSearchEnv::eval(self.inner, cfg, t)?;
+        self.cache.lock().unwrap().insert(key, &r);
+        Ok(r)
+    }
+}
+
+fn assert_same(a: &SearchOutcome, b: &SearchOutcome, what: &str) {
+    assert_eq!(a.config, b.config, "{what}: config");
+    assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits(), "{what}: accuracy");
+    assert_eq!(a.evals, b.evals, "{what}: decision evals");
+}
+
+#[test]
+fn prop_greedy_parallel_matches_sequential_at_all_worker_counts() {
+    let mut rng = Rng::seed_from(4242);
+    for case in 0..CASES {
+        let n = 1 + rng.below(40);
+        let base = MonotoneSync::random(&mut rng, n);
+        // Noisy ordering creates accept/reject flips — the hard case for
+        // outcome-adaptive speculation.
+        let mut order: Vec<usize> = (0..n).collect();
+        if n >= 2 {
+            for _ in 0..(n / 3).max(1) {
+                let i = rng.below(n - 1);
+                order.swap(i, i + 1);
+            }
+        }
+        let target = 0.9 + rng.uniform() * 0.1;
+        let seq =
+            SearchAlgo::Greedy.run(&mut SeqRef(&base), &order, &QUANT_BITS, target).unwrap();
+        for workers in WORKER_COUNTS {
+            let env = base.clone_fresh();
+            let mut p = ParallelEnv::new(&env, workers);
+            let out = SearchAlgo::Greedy.run(&mut p, &order, &QUANT_BITS, target).unwrap();
+            assert_same(&out, &seq, &format!("case {case} workers {workers}"));
+            // Speculation may waste evals but never misses decisions.
+            assert!(p.raw_evals() >= out.evals, "case {case} workers {workers}");
+        }
+    }
+}
+
+#[test]
+fn prop_bisection_parallel_matches_sequential_at_all_worker_counts() {
+    let mut rng = Rng::seed_from(5252);
+    for case in 0..CASES {
+        let n = 1 + rng.below(60);
+        let base = MonotoneSync::random(&mut rng, n);
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let target = 0.9 + rng.uniform() * 0.1;
+        let seq =
+            SearchAlgo::Bisection.run(&mut SeqRef(&base), &order, &QUANT_BITS, target).unwrap();
+        for workers in WORKER_COUNTS {
+            let env = base.clone_fresh();
+            let mut p = ParallelEnv::new(&env, workers);
+            let out = SearchAlgo::Bisection.run(&mut p, &order, &QUANT_BITS, target).unwrap();
+            assert_same(&out, &seq, &format!("case {case} workers {workers}"));
+            assert!(p.raw_evals() >= out.evals, "case {case} workers {workers}");
+        }
+    }
+}
+
+#[test]
+fn prop_eval_cache_preserves_outcomes_across_runs_and_workers() {
+    let dir = std::env::temp_dir().join("mpq_batched_search_cache");
+    let _ = std::fs::create_dir_all(&dir);
+    let mut rng = Rng::seed_from(6262);
+    for case in 0..CASES / 2 {
+        let n = 2 + rng.below(24);
+        let base = MonotoneSync::random(&mut rng, n);
+        let order: Vec<usize> = (0..n).collect();
+        let target = 0.9 + rng.uniform() * 0.1;
+        let seq =
+            SearchAlgo::Greedy.run(&mut SeqRef(&base), &order, &QUANT_BITS, target).unwrap();
+
+        let path = dir.join(format!("case_{case}.json"));
+        let _ = std::fs::remove_file(&path);
+        let context = format!("monotone-{case}");
+        for (run, workers) in [(0usize, 1usize), (1, 2), (2, 8), (3, 8)] {
+            // Each run reloads the cache written by the previous one, so
+            // later runs answer mostly (finally: entirely) from cache.
+            let cache = Mutex::new(EvalCache::load(&path, &context));
+            let env = base.clone_fresh();
+            let cached = Cached { inner: &env, cache: &cache };
+            let mut p = ParallelEnv::new(&cached, workers);
+            let out = SearchAlgo::Greedy.run(&mut p, &order, &QUANT_BITS, target).unwrap();
+            assert_same(&out, &seq, &format!("case {case} run {run} workers {workers}"));
+            let mut guard = cache.lock().unwrap();
+            if run > 0 {
+                assert!(guard.hits() > 0, "case {case} run {run}: cache never hit");
+            }
+            if run == 3 {
+                // Same worker count as run 2 -> identical frontier, so
+                // every evaluation must now be a cache hit.
+                assert_eq!(
+                    env.evals.load(Ordering::Relaxed),
+                    0,
+                    "case {case}: warm rerun still touched the environment"
+                );
+            }
+            guard.save().unwrap();
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+#[test]
+fn degenerate_inputs_match_sequential() {
+    // Zero layers and empty bit lists through the parallel adapter.
+    let env = MonotoneSync { penalty: vec![], evals: AtomicUsize::new(0) };
+    for workers in WORKER_COUNTS {
+        for algo in [SearchAlgo::Greedy, SearchAlgo::Bisection] {
+            let mut p = ParallelEnv::new(&env, workers);
+            let out = algo.run(&mut p, &[], &QUANT_BITS, 0.99).unwrap();
+            assert_eq!(out.config.num_layers(), 0);
+        }
+    }
+    let one = MonotoneSync { penalty: vec![0.0], evals: AtomicUsize::new(0) };
+    for workers in WORKER_COUNTS {
+        let mut p = ParallelEnv::new(&one, workers);
+        let out = SearchAlgo::Greedy.run(&mut p, &[0], &[], 0.5).unwrap();
+        assert_eq!(out.config, QuantConfig::float(1));
+    }
+}

@@ -1,0 +1,185 @@
+//! In-tree stub of the `xla-rs` PJRT bindings.
+//!
+//! The real crate links `xla_extension` (a native PJRT + XLA build) and is
+//! not fetchable in this offline environment, so this stub mirrors exactly
+//! the API surface `mpq::runtime` consumes: client construction, HLO-text
+//! loading, compilation, buffer upload and execution. Every entry point
+//! that would require the native runtime returns [`Error::Unavailable`]
+//! with a pointer at the swap-in instructions; pure host-side plumbing
+//! (type conversions, dims bookkeeping) behaves normally.
+//!
+//! To run against real hardware, replace the `xla` path dependency in
+//! `rust/Cargo.toml` with the external `xla-rs` crate — the signatures
+//! below match it, so no caller changes.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type. Implements `std::error::Error`, so it converts into
+/// `anyhow::Error` through `?` like the real crate's error does.
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// The operation needs the native PJRT runtime, which this build lacks.
+    Unavailable(&'static str),
+    /// Malformed input detected host-side (e.g. dims/data mismatch).
+    Invalid(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what}: PJRT runtime unavailable in this build (in-tree `xla` stub; \
+                 point rust/Cargo.toml at the real xla-rs crate to enable execution)"
+            ),
+            Error::Invalid(msg) => write!(f, "invalid argument: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result type, mirroring `xla::Result`.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types transferable to the device. Mirrors the subset of the
+/// real crate's `NativeType` that `mpq` uses.
+pub trait NativeType: Copy + Default + fmt::Debug + Send + Sync + 'static {}
+
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+/// A PJRT client handle. In the stub, construction succeeds (so callers can
+/// build pipelines lazily), but any operation touching the device errors.
+pub struct PjRtClient {
+    platform: &'static str,
+}
+
+impl PjRtClient {
+    /// CPU client. Succeeds so that host-side setup paths are reachable;
+    /// the first compile/upload reports the stub.
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { platform: "cpu-stub" })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.platform.to_string()
+    }
+
+    /// Upload a host buffer. Stub: validates shape/data agreement, then
+    /// reports the missing runtime.
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let numel: usize = dims.iter().product();
+        if numel != data.len() {
+            return Err(Error::Invalid(format!(
+                "buffer has {} elements but dims {dims:?} imply {numel}",
+                data.len()
+            )));
+        }
+        Err(Error::Unavailable("uploading host buffer"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("compiling computation"))
+    }
+}
+
+/// A device-resident buffer. Never constructed by the stub; the type exists
+/// so signatures across `mpq::runtime` and `mpq::coordinator` typecheck.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _opaque: (),
+}
+
+/// A parsed HLO module.
+pub struct HloModuleProto {
+    _opaque: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO-text artifact. Stub: verifies the file is readable,
+    /// then reports the missing parser.
+    pub fn from_text_file(path: &Path) -> Result<Self> {
+        std::fs::read_to_string(path)
+            .map_err(|e| Error::Invalid(format!("reading {}: {e}", path.display())))?;
+        Err(Error::Unavailable("parsing HLO text"))
+    }
+}
+
+/// A computation ready for compilation.
+pub struct XlaComputation {
+    _opaque: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _opaque: () }
+    }
+}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable {
+    _opaque: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with borrowed device buffers; returns per-device outputs.
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("executing"))
+    }
+}
+
+impl PjRtBuffer {
+    /// Fetch the buffer to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("fetching buffer"))
+    }
+}
+
+/// A host-side literal (tuple or dense array).
+pub struct Literal {
+    _opaque: (),
+}
+
+impl Literal {
+    /// Flatten a tuple literal into its elements.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::Unavailable("detupling literal"))
+    }
+
+    /// First element of a dense literal.
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        Err(Error::Unavailable("reading literal scalar"))
+    }
+
+    /// All elements of a dense literal.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable("reading literal vector"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_constructs_but_device_ops_fail_loudly() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "cpu-stub");
+        let err = c.buffer_from_host_buffer(&[1.0f32, 2.0], &[2], None).unwrap_err();
+        assert!(err.to_string().contains("stub"), "{err}");
+    }
+
+    #[test]
+    fn shape_mismatch_detected_host_side() {
+        let c = PjRtClient::cpu().unwrap();
+        let err = c.buffer_from_host_buffer(&[1.0f32], &[2], None).unwrap_err();
+        assert!(matches!(err, Error::Invalid(_)), "{err:?}");
+    }
+}

@@ -35,13 +35,19 @@ fn main() -> mpq::Result<()> {
         .collect();
     drop(ctx); // release the search pipeline before the server builds its own
 
-    // 2. Spawn the server on its own executor thread.
+    // 2. Spawn the engine: two pipeline workers, bounded queue, 50 ms
+    //    per-request deadline.
     let scales_path = dir.join(format!("{model}_scales.json"));
-    let (handle, _join) = spawn(
+    let opts = ServeOptions {
+        workers: 2,
+        deadline: Some(std::time::Duration::from_millis(50)),
+        ..ServeOptions::default()
+    };
+    let (handle, join) = spawn(
         dir.clone(),
         model.to_string(),
         cell.config.clone(),
-        ServeOptions::default(),
+        opts,
         move |p| {
             p.scales = Scales::load(&scales_path)?;
             p.sync_scales()?;
@@ -49,22 +55,33 @@ fn main() -> mpq::Result<()> {
         },
     )?;
 
-    // 3. Drive it with 8 concurrent clients.
+    // 3. Drive it with 8 concurrent clients (deadline misses and queue
+    //    rejections are answered as errors, not hangs).
     let t0 = std::time::Instant::now();
+    let shed = std::sync::atomic::AtomicUsize::new(0);
     std::thread::scope(|s| {
         for c in 0..8usize {
             let handle = handle.clone();
             let examples = &examples;
+            let shed = &shed;
             s.spawn(move || {
                 for (i, ex) in examples.iter().enumerate() {
                     if i % 8 == c {
-                        let out = handle.infer(ex.clone()).expect("inference failed");
-                        assert!(!out.is_empty());
+                        match handle.infer(ex.clone()) {
+                            Ok(out) => assert!(!out.is_empty()),
+                            Err(_) => {
+                                shed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            }
+                        }
                     }
                 }
             });
         }
     });
+    let shed = shed.into_inner();
+    if shed > 0 {
+        println!("shed {shed} requests (deadline/queue)");
+    }
     let wall = t0.elapsed().as_secs_f64();
     let stats = handle.stats();
     println!(
@@ -74,10 +91,19 @@ fn main() -> mpq::Result<()> {
         stats.mean_batch_fill()
     );
     println!(
-        "request latency: mean {:.1} ms, p50 {:.1} ms, p99 {:.1} ms",
+        "request latency: mean {:.1} ms, p50 {:.1} ms, p95 {:.1} ms, p99 {:.1} ms",
         stats.mean_us() / 1e3,
         stats.percentile_us(0.5) as f64 / 1e3,
+        stats.percentile_us(0.95) as f64 / 1e3,
         stats.percentile_us(0.99) as f64 / 1e3
     );
+    for w in &stats.per_worker {
+        let fill = w.mean_batch_fill();
+        println!("worker {}: {} batches, mean fill {fill:.2}", w.worker, w.batches);
+    }
+
+    // 4. Graceful shutdown: drain in-flight batches, join the dispatcher.
+    handle.shutdown();
+    join.join().expect("dispatcher exits cleanly");
     Ok(())
 }

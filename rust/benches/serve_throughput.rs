@@ -1,0 +1,275 @@
+//! Serving-engine throughput/latency benchmark over stub spin workers.
+//!
+//! Compares 1/2/4-worker configurations at the same offered loads (32
+//! paced client threads) and reports achieved throughput plus p50/p95/
+//! p99 request latency, batch fill, admission rejects and deadline
+//! misses. Workers burn a deterministic CPU spin per batch (base cost +
+//! per-row cost), so multi-worker scaling is real parallel work, not
+//! sleeps — and the offered loads are self-calibrated against a measured
+//! single-batch execution so results are comparable across machines.
+//!
+//! Load generation is paced, not strictly open-loop: each client blocks
+//! on its in-flight request and skips missed ticks rather than building
+//! a backlog, so under saturation the pool degrades toward closed-loop
+//! at 32-way concurrency. `attempted_rps` records the submission rate
+//! the clients actually generated (vs the `offered_rps` schedule), so
+//! the JSON never claims a load that was not driven.
+//!
+//! The report is written as JSON (`BENCH_serve.json`, or `$MPQ_BENCH_OUT`)
+//! next to the search bench's `BENCH_search.json`. `MPQ_BENCH_FAST=1`
+//! shrinks trial durations for CI smoke runs.
+
+use std::hint::black_box;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use mpq::runtime::HostTensor;
+use mpq::server::{serve_with_backend, BatchJob, ServeOptions, ServingBackend};
+use mpq::util::json::Value;
+
+/// Compiled batch-size buckets the stub pretends to have.
+const BUCKETS: [usize; 5] = [2, 4, 8, 16, 32];
+/// Enough concurrency that the heavy load saturates a single worker and
+/// overflows the (deliberately shallow) submission queue.
+const CLIENTS: usize = 32;
+
+/// Deterministic CPU spin standing in for a device round-trip.
+fn spin(work: u32) {
+    let mut x = 0.0f64;
+    for i in 0..work {
+        x += f64::from(i ^ 0x5A5A).sqrt();
+    }
+    black_box(x);
+}
+
+fn base_work() -> u32 {
+    std::env::var("MPQ_SERVE_WORK").ok().and_then(|v| v.parse().ok()).unwrap_or(150_000)
+}
+
+/// Per-batch spin: fixed launch overhead plus a per-row cost.
+fn batch_work(base: u32, bucket: usize) -> u32 {
+    base + (base / 10) * bucket as u32
+}
+
+struct SpinBackend {
+    txs: Vec<mpsc::Sender<BatchJob>>,
+    joins: Vec<thread::JoinHandle<()>>,
+}
+
+impl SpinBackend {
+    fn new(workers: usize, base: u32) -> Self {
+        let mut txs = Vec::new();
+        let mut joins = Vec::new();
+        for _ in 0..workers {
+            let (tx, rx) = mpsc::channel::<BatchJob>();
+            joins.push(thread::spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    spin(batch_work(base, job.bucket()));
+                    let flat = vec![1.0f32; job.bucket()];
+                    job.complete(Ok(flat));
+                }
+            }));
+            txs.push(tx);
+        }
+        Self { txs, joins }
+    }
+}
+
+impl ServingBackend for SpinBackend {
+    fn num_workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        BUCKETS.to_vec()
+    }
+
+    fn submit(&mut self, w: usize, job: BatchJob) {
+        if let Err(mpsc::SendError(job)) = self.txs[w].send(job) {
+            job.complete(Err(anyhow::anyhow!("spin worker gone")));
+        }
+    }
+}
+
+impl Drop for SpinBackend {
+    fn drop(&mut self) {
+        self.txs.clear();
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+struct Trial {
+    workers: usize,
+    offered_rps: f64,
+    attempted_rps: f64,
+    achieved_rps: f64,
+    ok: usize,
+    shed: usize,
+    p50_us: u64,
+    p95_us: u64,
+    p99_us: u64,
+    mean_fill: f64,
+    batches: usize,
+    rejected: usize,
+    deadline_missed: usize,
+}
+
+fn run_trial(workers: usize, base: u32, offered_rps: f64, dur: Duration) -> Trial {
+    let backend = SpinBackend::new(workers, base);
+    // Shallow queue + short deadline so the heavy load visibly exercises
+    // admission control and deadline shedding instead of hiding overload
+    // in a deep buffer.
+    let opts = ServeOptions {
+        max_batch: 32,
+        max_wait: Duration::from_micros(500),
+        workers,
+        queue_depth: 16,
+        deadline: Some(Duration::from_millis(50)),
+        max_inflight: 2,
+        ..ServeOptions::default()
+    };
+    let (handle, join) = serve_with_backend(backend, &opts).expect("engine start");
+    let interval = Duration::from_secs_f64(CLIENTS as f64 / offered_rps);
+    let ok = AtomicUsize::new(0);
+    let shed = AtomicUsize::new(0);
+    let t0 = Instant::now();
+    thread::scope(|s| {
+        for _ in 0..CLIENTS {
+            let handle = handle.clone();
+            let (ok, shed) = (&ok, &shed);
+            s.spawn(move || {
+                let mut next = Instant::now();
+                while t0.elapsed() < dur {
+                    let now = Instant::now();
+                    if now < next {
+                        thread::sleep(next - now);
+                    }
+                    // Skip missed ticks instead of accumulating a backlog:
+                    // a saturated server should not owe an infinite burst.
+                    next = Instant::now().max(next + interval);
+                    match handle.infer(HostTensor::f32(vec![1.0], vec![1, 1])) {
+                        Ok(_) => {
+                            ok.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            shed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = handle.stats();
+    handle.shutdown();
+    join.join().expect("dispatcher exits");
+    let ok = ok.into_inner();
+    let shed = shed.into_inner();
+    Trial {
+        workers,
+        offered_rps,
+        attempted_rps: (ok + shed) as f64 / wall,
+        achieved_rps: ok as f64 / wall,
+        ok,
+        shed,
+        p50_us: stats.percentile_us(0.50),
+        p95_us: stats.percentile_us(0.95),
+        p99_us: stats.percentile_us(0.99),
+        mean_fill: stats.mean_batch_fill(),
+        batches: stats.batches,
+        rejected: stats.rejected,
+        deadline_missed: stats.deadline_missed,
+    }
+}
+
+fn main() {
+    let fast = std::env::var_os("MPQ_BENCH_FAST").is_some();
+    let dur = if fast { Duration::from_millis(400) } else { Duration::from_millis(1500) };
+    println!("== bench suite: serve_throughput ==");
+
+    // Self-calibrate: seconds per full-bucket batch on this machine.
+    let base = base_work();
+    spin(batch_work(base, 32)); // warm
+    let t0 = Instant::now();
+    let reps = 5u32;
+    for _ in 0..reps {
+        spin(batch_work(base, 32));
+    }
+    let batch_secs = t0.elapsed().as_secs_f64() / f64::from(reps);
+    // Rows/sec one fully-batched worker can execute.
+    let capacity_1w = 32.0 / batch_secs;
+    println!(
+        "calibration: {:.3} ms per 32-row batch -> ~{:.0} rows/s per worker",
+        batch_secs * 1e3,
+        capacity_1w
+    );
+
+    // Equal offered loads for every worker count: moderate (under one
+    // worker's capacity) and heavy (past it — only multi-worker configs
+    // can absorb it without shedding).
+    let loads = [("moderate", 0.4 * capacity_1w), ("heavy", 1.6 * capacity_1w)];
+    let mut rows: Vec<Value> = Vec::new();
+    for (load_name, offered) in loads {
+        let mut base_rps = 0.0f64;
+        for workers in [1usize, 2, 4] {
+            let t = run_trial(workers, base, offered, dur);
+            if workers == 1 {
+                base_rps = t.achieved_rps;
+            }
+            let speedup = if base_rps > 0.0 { t.achieved_rps / base_rps } else { 0.0 };
+            println!(
+                "serve_throughput::{load_name}_w{workers}: offered {:.0} (attempted {:.0}) \
+                 rps -> achieved {:.0} rps ({speedup:.2}x vs 1w) | p50 {:.1} ms p95 {:.1} ms \
+                 p99 {:.1} ms | fill {:.1} over {} batches | shed {} (rejected {}, deadline {})",
+                t.offered_rps,
+                t.attempted_rps,
+                t.achieved_rps,
+                t.p50_us as f64 / 1e3,
+                t.p95_us as f64 / 1e3,
+                t.p99_us as f64 / 1e3,
+                t.mean_fill,
+                t.batches,
+                t.shed,
+                t.rejected,
+                t.deadline_missed,
+            );
+            rows.push(Value::obj(vec![
+                ("name", Value::Str(format!("serve_throughput::{load_name}_w{workers}"))),
+                ("load", Value::Str(load_name.into())),
+                ("workers", Value::Num(t.workers as f64)),
+                ("offered_rps", Value::Num(t.offered_rps)),
+                ("attempted_rps", Value::Num(t.attempted_rps)),
+                ("achieved_rps", Value::Num(t.achieved_rps)),
+                ("speedup_vs_1w", Value::Num(speedup)),
+                ("ok", Value::Num(t.ok as f64)),
+                ("shed", Value::Num(t.shed as f64)),
+                ("p50_us", Value::Num(t.p50_us as f64)),
+                ("p95_us", Value::Num(t.p95_us as f64)),
+                ("p99_us", Value::Num(t.p99_us as f64)),
+                ("mean_batch_fill", Value::Num(t.mean_fill)),
+                ("batches", Value::Num(t.batches as f64)),
+                ("rejected", Value::Num(t.rejected as f64)),
+                ("deadline_missed", Value::Num(t.deadline_missed as f64)),
+            ]));
+        }
+    }
+
+    let out_path = std::env::var("MPQ_BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".into());
+    let doc = Value::obj(vec![
+        ("suite", Value::Str("serve_throughput".into())),
+        ("base_work", Value::Num(f64::from(base))),
+        ("calibrated_batch_seconds", Value::Num(batch_secs)),
+        ("capacity_rows_per_sec_1w", Value::Num(capacity_1w)),
+        ("clients", Value::Num(CLIENTS as f64)),
+        ("trial_seconds", Value::Num(dur.as_secs_f64())),
+        ("results", Value::Arr(rows)),
+    ]);
+    match std::fs::write(&out_path, doc.to_string()) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+}

@@ -117,7 +117,10 @@ impl EvalCache {
     }
 
     /// Write back if anything changed. Keys are emitted in sorted order so
-    /// the file is deterministic for a given entry set.
+    /// the file is deterministic for a given entry set. The write goes to
+    /// a temp file in the same directory followed by an atomic rename, so
+    /// a crash mid-write leaves either the old file or the new one —
+    /// never a truncated cache that poisons every later run.
     pub fn save(&mut self) -> Result<()> {
         if !self.dirty {
             return Ok(());
@@ -140,8 +143,19 @@ impl EvalCache {
             ("context", Value::Str(self.context.clone())),
             ("entries", Value::Arr(rows)),
         ]);
-        std::fs::write(&self.path, v.to_string())
-            .with_context(|| format!("writing eval cache {}", self.path.display()))?;
+        let file_name = self
+            .path
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "evalcache".to_string());
+        let tmp = self.path.with_file_name(format!(".{file_name}.tmp.{}", std::process::id()));
+        std::fs::write(&tmp, v.to_string())
+            .with_context(|| format!("writing eval cache temp {}", tmp.display()))?;
+        if let Err(e) = std::fs::rename(&tmp, &self.path) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(anyhow::Error::new(e)
+                .context(format!("committing eval cache {}", self.path.display())));
+        }
         self.dirty = false;
         Ok(())
     }
@@ -200,6 +214,34 @@ mod tests {
         // A different context must not see the entries.
         let other = EvalCache::load(&path, "model-a/scales-2");
         assert!(other.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn truncated_file_loads_as_empty_and_no_temp_left_behind() {
+        let path = tmp("truncated");
+        let _ = std::fs::remove_file(&path);
+        let mut c = EvalCache::load(&path, "ctx");
+        c.insert(1, &exact(0.5, 0.9));
+        c.insert(2, &exact(0.25, 0.95));
+        c.save().unwrap();
+        // Simulate a crash mid-write of the *old* non-atomic path: chop
+        // the file in half. The loader must degrade to empty, not error.
+        let full = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        let re = EvalCache::load(&path, "ctx");
+        assert!(re.is_empty());
+        // The atomic save leaves no temp droppings next to the cache.
+        let dir = path.parent().unwrap();
+        let leftovers = std::fs::read_dir(dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                let n = e.file_name().to_string_lossy().into_owned();
+                n.contains("mpq_evalcache_truncated") && n.contains(".tmp.")
+            })
+            .count();
+        assert_eq!(leftovers, 0);
         let _ = std::fs::remove_file(&path);
     }
 

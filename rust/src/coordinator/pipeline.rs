@@ -561,6 +561,26 @@ impl Pipeline {
         Ok(vec_f32(&out?[0])?)
     }
 
+    /// Compile and execute every serving bucket once with zero inputs so
+    /// the first real request never pays graph-compilation latency — the
+    /// server warms each pool worker with this before taking traffic.
+    pub fn warm_logits(&mut self, cfg: &QuantConfig) -> Result<()> {
+        let x_shape = self.artifacts.manifest.x_shape.clone();
+        let is_i32 = self.artifacts.manifest.x_dtype == "i32";
+        for batch in self.logits_batch_sizes() {
+            let mut dims = vec![batch];
+            dims.extend(&x_shape);
+            let numel: usize = dims.iter().product();
+            let x = if is_i32 {
+                HostTensor::i32(vec![0; numel], dims)
+            } else {
+                HostTensor::f32(vec![0.0; numel], dims)
+            };
+            self.logits(cfg, &x)?;
+        }
+        Ok(())
+    }
+
     /// The engine (for uploads by metric drivers).
     pub fn engine(&self) -> &Engine {
         &self.engine

@@ -67,8 +67,18 @@ struct Job {
     resp: mpsc::Sender<(usize, Result<EvalResult>)>,
 }
 
+/// What a worker thread can be asked to do with its pipeline.
+enum WorkerJob {
+    /// Evaluate a candidate configuration (search path).
+    Eval(Job),
+    /// Run an arbitrary task against the worker's pipeline — the serving
+    /// engine submits formed batches this way. Called with `None` if the
+    /// worker is gone, so the task can answer its callers with an error.
+    Task(Box<dyn FnOnce(Option<&mut Pipeline>) + Send>),
+}
+
 struct Worker {
-    tx: mpsc::Sender<Job>,
+    tx: mpsc::Sender<WorkerJob>,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -78,6 +88,9 @@ pub struct PipelinePool {
     workers: Vec<Worker>,
     shared: Arc<SharedCache>,
     num_layers: usize,
+    /// Compiled serving batch sizes, ascending (identical on every
+    /// worker — same artifacts), gathered at construction.
+    batch_sizes: Vec<usize>,
     /// Evaluations dispatched to workers (shared-cache hits excluded).
     dispatched: usize,
 }
@@ -104,8 +117,8 @@ impl PipelinePool {
         let mut built = Vec::with_capacity(workers);
         let mut readies = Vec::with_capacity(workers);
         for wi in 0..workers {
-            let (tx, rx) = mpsc::channel::<Job>();
-            let (ready_tx, ready_rx) = mpsc::channel::<Result<usize>>();
+            let (tx, rx) = mpsc::channel::<WorkerJob>();
+            let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, Vec<usize>)>>();
             let dir: PathBuf = artifacts_dir.to_path_buf();
             let model = model.to_string();
             let shared = shared.clone();
@@ -122,20 +135,55 @@ impl PipelinePool {
                     let _ = ready_tx.send(Err(e.context(format!("configuring pool worker {wi}"))));
                     return;
                 }
-                let _ = ready_tx.send(Ok(pipeline.num_quant_layers()));
+                let info = (pipeline.num_quant_layers(), pipeline.logits_batch_sizes());
+                let _ = ready_tx.send(Ok(info));
                 worker_loop(&mut pipeline, &shared, &rx);
             });
             built.push(Worker { tx, join: Some(join) });
             readies.push((wi, ready_rx));
         }
         let mut num_layers = 0usize;
+        let mut batch_sizes = Vec::new();
         for (wi, ready_rx) in readies {
-            num_layers = ready_rx
+            (num_layers, batch_sizes) = ready_rx
                 .recv()
                 .map_err(|_| anyhow!("pool worker {wi} died during construction"))?
                 .with_context(|| format!("building pipeline pool for {model}"))?;
         }
-        Ok(Self { workers: built, shared, num_layers, dispatched: 0 })
+        Ok(Self { workers: built, shared, num_layers, batch_sizes, dispatched: 0 })
+    }
+
+    /// Number of worker pipelines in the pool.
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Compiled serving batch sizes (ascending), as reported by the
+    /// workers' artifacts at construction.
+    pub fn logits_batch_sizes(&self) -> Vec<usize> {
+        self.batch_sizes.clone()
+    }
+
+    /// Submit an arbitrary task to worker `worker % num_workers()`'s
+    /// thread; it runs with exclusive access to that worker's pipeline,
+    /// after any already-queued work. If the worker is gone, the task is
+    /// invoked inline with `None` so it can report the failure itself.
+    /// Returns whether the worker accepted the task.
+    pub fn run_on(
+        &self,
+        worker: usize,
+        task: impl FnOnce(Option<&mut Pipeline>) + Send + 'static,
+    ) -> bool {
+        let w = &self.workers[worker % self.workers.len()];
+        match w.tx.send(WorkerJob::Task(Box::new(task))) {
+            Ok(()) => true,
+            Err(mpsc::SendError(job)) => {
+                if let WorkerJob::Task(t) = job {
+                    t(None);
+                }
+                false
+            }
+        }
     }
 
     /// Attach a persistent cross-run cache shared by all workers. The
@@ -174,7 +222,7 @@ impl PipelinePool {
             }
             let worker = &self.workers[slot % self.workers.len()];
             let job = Job { cfg: cfg.clone(), target, slot, resp: resp_tx.clone() };
-            if worker.tx.send(job).is_err() {
+            if worker.tx.send(WorkerJob::Eval(job)).is_err() {
                 slots[slot] = Some(Err(anyhow!("pool worker exited")));
                 continue;
             }
@@ -195,20 +243,25 @@ impl PipelinePool {
     }
 }
 
-fn worker_loop(pipeline: &mut Pipeline, shared: &SharedCache, rx: &mpsc::Receiver<Job>) {
+fn worker_loop(pipeline: &mut Pipeline, shared: &SharedCache, rx: &mpsc::Receiver<WorkerJob>) {
     while let Ok(job) = rx.recv() {
-        let key = job.cfg.key();
-        let result = match shared.lookup(key) {
-            Some(hit) => Ok(hit),
-            None => {
-                let r = pipeline.eval_config(&job.cfg, job.target);
-                if let Ok(res) = &r {
-                    shared.publish(key, res);
-                }
-                r
+        match job {
+            WorkerJob::Eval(job) => {
+                let key = job.cfg.key();
+                let result = match shared.lookup(key) {
+                    Some(hit) => Ok(hit),
+                    None => {
+                        let r = pipeline.eval_config(&job.cfg, job.target);
+                        if let Ok(res) = &r {
+                            shared.publish(key, res);
+                        }
+                        r
+                    }
+                };
+                let _ = job.resp.send((job.slot, result));
             }
-        };
-        let _ = job.resp.send((job.slot, result));
+            WorkerJob::Task(task) => task(Some(pipeline)),
+        }
     }
 }
 

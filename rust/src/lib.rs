@@ -16,7 +16,8 @@
 //! * [`latency`] — the roofline accelerator model + kernel latency table
 //!   standing in for the paper's CUTLASS-profiled A100 measurements.
 //! * [`report`] — regenerates every table and figure of the paper.
-//! * [`server`] — a minimal batched serving loop over a quantized model.
+//! * [`server`] — a multi-worker batching inference engine with admission
+//!   control, per-request deadlines and bounded stats.
 //!
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.

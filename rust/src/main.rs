@@ -44,6 +44,8 @@ COMMANDS
   figure      --id 1|3|4 [--model M] [--out DIR]
   ablation    --model M [--target 0.99] [--out DIR]
   serve       --model M [--bits 8] [--requests 256] [--concurrency 8]
+              [--workers 2] [--queue-depth 256] [--deadline-ms 0]
+              [--max-batch 32] [--wait-us 500]
 
 GLOBAL
   --artifacts DIR    artifacts directory (default: $MPQ_ARTIFACTS or ./artifacts)
@@ -325,16 +327,29 @@ fn cmd_ablation(dir: &Path, args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Drive the batched server with concurrent clients and print latency
-/// percentiles — the QoS view the paper optimizes for.
+/// Drive the batched multi-worker server with concurrent clients and
+/// print latency percentiles — the QoS view the paper optimizes for.
 fn cmd_serve(dir: &Path, args: &Args) -> Result<()> {
     let model = args.req_str("model")?.to_string();
     let bits = args.get_or("bits", 8.0f32)?;
     let requests = args.get_or("requests", 256usize)?;
     let concurrency = args.get_or("concurrency", 8usize)?.max(1);
+    let deadline_ms = args.get_or("deadline-ms", 0u64)?;
+    let opts = mpq::server::ServeOptions {
+        max_batch: args.get_or("max-batch", 32usize)?,
+        max_wait: std::time::Duration::from_micros(args.get_or("wait-us", 500u64)?),
+        workers: args.get_or("workers", 2usize)?,
+        queue_depth: args.get_or("queue-depth", 256usize)?,
+        deadline: (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms)),
+        ..Default::default()
+    };
 
-    // Build a pipeline once to learn shapes + produce examples from val.
-    let ctx = ExperimentCtx::new(dir, &model)?;
+    // Build a pipeline once to learn shapes, produce examples from val,
+    // and calibrate a single time (saving the scales file) — so the pool
+    // workers below all load the same scales instead of each re-running
+    // the full calibration pass.
+    let mut ctx = ExperimentCtx::new(dir, &model)?;
+    ctx.ensure_calibrated()?;
     let n = ctx.pipeline.num_quant_layers();
     let val_count = ctx.pipeline.artifacts.val.count;
     let examples: Vec<mpq::runtime::HostTensor> =
@@ -343,19 +358,14 @@ fn cmd_serve(dir: &Path, args: &Args) -> Result<()> {
 
     let cfg = QuantConfig::uniform(n, bits);
     let scales_path = dir.join(format!("{model}_scales.json"));
-    let (handle, _join) = mpq::server::spawn(
+    let (handle, join) = mpq::server::spawn(
         dir.to_path_buf(),
         model.clone(),
         cfg,
-        mpq::server::ServeOptions::default(),
+        opts,
         move |p| {
-            if scales_path.is_file() {
-                p.scales = Scales::load(&scales_path)?;
-                p.sync_scales()?;
-            } else {
-                p.calibrate(&CalibrationOptions::default())?;
-            }
-            Ok(())
+            p.scales = Scales::load(&scales_path)?;
+            p.sync_scales()
         },
     )?;
 
@@ -375,17 +385,34 @@ fn cmd_serve(dir: &Path, args: &Args) -> Result<()> {
     });
     let wall = t0.elapsed().as_secs_f64();
     let stats = handle.stats();
+    handle.shutdown();
+    join.join().map_err(|_| anyhow::anyhow!("serve dispatcher panicked"))?;
     println!(
-        "served {} requests in {wall:.2}s ({:.1} req/s) @ uniform {bits}b x{concurrency} clients",
+        "served {} requests in {wall:.2}s ({:.1} req/s) @ uniform {bits}b \
+         x{concurrency} clients ({} batches)",
         stats.requests,
         stats.requests as f64 / wall,
+        stats.batches,
     );
     println!(
-        "latency: mean={:.1}ms p50={:.1}ms p99={:.1}ms | mean batch fill {:.1}",
+        "latency: mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms",
         stats.mean_us() / 1e3,
         stats.percentile_us(0.5) as f64 / 1e3,
+        stats.percentile_us(0.95) as f64 / 1e3,
         stats.percentile_us(0.99) as f64 / 1e3,
-        stats.mean_batch_fill()
     );
+    println!(
+        "admission: rejected={} deadline_missed={} errors={} max_queue_depth={}",
+        stats.rejected, stats.deadline_missed, stats.errors, stats.max_queue_depth
+    );
+    for w in &stats.per_worker {
+        println!(
+            "worker {}: {} batches, {} requests, mean fill {:.2}",
+            w.worker,
+            w.batches,
+            w.requests,
+            w.mean_batch_fill()
+        );
+    }
     Ok(())
 }

@@ -1,0 +1,327 @@
+//! Batch formation and fan-out across serving workers.
+//!
+//! The dispatcher thread pulls request batches from the
+//! [`super::queue::SubmitQueue`], picks the smallest compiled batch-size
+//! bucket covering the batch, and hands the work to the least-loaded
+//! worker of a [`ServingBackend`]. In-flight batches per worker are
+//! bounded by [`InflightGate`], so saturated workers push backpressure
+//! into the submission queue — which is where admission control and
+//! deadline expiry live. Because a blocked dispatcher can hold a batch
+//! past its deadline, expiry is re-checked after the gate and before
+//! submission: expired requests are answered and dropped from the batch
+//! rather than executed. As a last line, [`BatchJob`] re-checks each
+//! request's deadline when delivering results, so an `Ok` response is
+//! never a late success even if the deadline passed while the batch sat
+//! in a worker's channel.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::ensure;
+
+use crate::runtime::HostTensor;
+use crate::Result;
+
+use super::queue::{Request, SubmitQueue};
+use super::stats::ServeRecorder;
+
+/// A set of serving workers the dispatcher can fan batches across.
+///
+/// Implementations run each submitted [`BatchJob`] on the given worker
+/// (typically on a thread owning a device pipeline) and MUST ensure
+/// [`BatchJob::complete`] is eventually called — dropping a job answers
+/// its requests with an error, so even a lost job cannot hang clients.
+/// Dropping the backend must block until in-flight jobs finish: that is
+/// what makes [`crate::server::ServerHandle::shutdown`] a drain.
+pub trait ServingBackend: Send + 'static {
+    fn num_workers(&self) -> usize;
+
+    /// Compiled batch-size buckets, in any order; the engine validates and
+    /// sorts them once at startup (an unsorted manifest must not shrink
+    /// the effective batch cap).
+    fn batch_sizes(&self) -> Vec<usize>;
+
+    /// Hand a formed batch to worker `w` (`w < num_workers()`).
+    fn submit(&mut self, w: usize, job: BatchJob);
+}
+
+/// Sort, dedup and validate backend-reported batch sizes.
+pub(crate) fn normalize_batch_sizes(raw: &[usize]) -> Result<Vec<usize>> {
+    let mut sizes: Vec<usize> = raw.iter().copied().filter(|&s| s > 0).collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+    ensure!(!sizes.is_empty(), "backend reports no serving batch sizes");
+    Ok(sizes)
+}
+
+/// Smallest compiled bucket covering `n` requests (`sizes` ascending).
+pub(crate) fn bucket_for(sizes: &[usize], n: usize) -> usize {
+    *sizes.iter().find(|&&s| s >= n).unwrap_or_else(|| sizes.last().expect("non-empty"))
+}
+
+/// Per-worker in-flight batch counters with a shared limit. `acquire`
+/// blocks until some worker has a free slot and returns the least-loaded
+/// one; `release` is called from worker threads as batches complete.
+#[derive(Debug)]
+pub(crate) struct InflightGate {
+    counts: Mutex<Vec<usize>>,
+    cond: Condvar,
+    limit: usize,
+}
+
+impl InflightGate {
+    pub fn new(workers: usize, limit: usize) -> Self {
+        Self {
+            counts: Mutex::new(vec![0; workers.max(1)]),
+            cond: Condvar::new(),
+            limit: limit.max(1),
+        }
+    }
+
+    pub fn acquire(&self) -> usize {
+        let mut counts = self.counts.lock().unwrap();
+        loop {
+            let mut best = 0;
+            for (i, &c) in counts.iter().enumerate() {
+                if c < counts[best] {
+                    best = i;
+                }
+            }
+            if counts[best] < self.limit {
+                counts[best] += 1;
+                return best;
+            }
+            counts = self.cond.wait(counts).unwrap();
+        }
+    }
+
+    pub fn release(&self, worker: usize) {
+        let mut counts = self.counts.lock().unwrap();
+        counts[worker] = counts[worker].saturating_sub(1);
+        drop(counts);
+        self.cond.notify_one();
+    }
+}
+
+/// A formed batch travelling from the dispatcher to a worker.
+///
+/// Completing (or dropping) the job answers every request, records stats
+/// on the owning worker's shard, and frees the worker's in-flight slot.
+pub struct BatchJob {
+    xs: Vec<HostTensor>,
+    bucket: usize,
+    state: Option<JobState>,
+}
+
+/// Response channel paired with the request's enqueue time and deadline.
+type RespSlot = (mpsc::Sender<Result<Vec<f32>>>, Instant, Option<Instant>);
+
+struct JobState {
+    resp: Vec<RespSlot>,
+    worker: usize,
+    recorder: Arc<ServeRecorder>,
+    gate: Arc<InflightGate>,
+    queue: Arc<SubmitQueue>,
+}
+
+impl BatchJob {
+    /// The live examples (leading dim 1 each); `len() <= bucket()`.
+    pub fn xs(&self) -> &[HostTensor] {
+        &self.xs
+    }
+
+    /// Compiled batch size the examples must be padded to.
+    pub fn bucket(&self) -> usize {
+        self.bucket
+    }
+
+    /// Deliver a flat output vector covering all `bucket()` rows (or an
+    /// execution error) to every requester.
+    pub fn complete(mut self, result: Result<Vec<f32>>) {
+        self.finish(result);
+    }
+
+    /// Run the real serving path: pad to the bucket, execute the `logits`
+    /// graph, scatter per-request outputs.
+    pub fn run_logits(
+        self,
+        pipeline: &mut crate::coordinator::Pipeline,
+        cfg: &crate::quant::QuantConfig,
+    ) {
+        let x_shape = pipeline.artifacts.manifest.x_shape.clone();
+        let padded = super::pad_batch(self.xs(), &x_shape, self.bucket());
+        let result = pipeline.logits(cfg, &padded);
+        self.complete(result);
+    }
+
+    fn finish(&mut self, result: Result<Vec<f32>>) {
+        let Some(st) = self.state.take() else { return };
+        let now = Instant::now();
+        let lats: Vec<u64> = st
+            .resp
+            .iter()
+            .map(|(_, t, _)| now.saturating_duration_since(*t).as_micros() as u64)
+            .collect();
+        // A deadline that passed while the batch sat in the worker's
+        // channel (or executed) must not surface as a late success: an
+        // `Ok` is always within deadline.
+        let late: Vec<bool> =
+            st.resp.iter().map(|(_, _, d)| d.is_some_and(|d| d <= now)).collect();
+        let errors = if result.is_ok() {
+            late.iter().filter(|&&l| l).count()
+        } else {
+            st.resp.len()
+        };
+        // Record before answering: a caller that reads `stats()` the
+        // moment its response arrives must already see this batch.
+        st.recorder.record_batch(st.worker, &lats, errors);
+        match result {
+            Ok(flat) => {
+                let per = flat.len() / self.bucket.max(1);
+                for (i, (tx, _, _)) in st.resp.iter().enumerate() {
+                    if late[i] {
+                        st.queue.note_expired();
+                        let _ = tx
+                            .send(Err(anyhow::anyhow!("deadline exceeded during execution")));
+                    } else {
+                        let _ = tx.send(Ok(flat[i * per..(i + 1) * per].to_vec()));
+                    }
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for (tx, _, _) in &st.resp {
+                    let _ = tx.send(Err(anyhow::anyhow!("{msg}")));
+                }
+            }
+        }
+        st.gate.release(st.worker);
+    }
+}
+
+impl Drop for BatchJob {
+    fn drop(&mut self) {
+        // Backend dropped the job without completing it: answer the
+        // requests and free the slot so nothing hangs.
+        self.finish(Err(anyhow::anyhow!("batch dropped by serving backend")));
+    }
+}
+
+/// The dispatcher loop state; owns the backend for its whole life.
+pub(crate) struct Dispatcher<B: ServingBackend> {
+    pub backend: B,
+    pub queue: Arc<SubmitQueue>,
+    pub recorder: Arc<ServeRecorder>,
+    pub gate: Arc<InflightGate>,
+    /// Normalized ascending compiled batch sizes.
+    pub sizes: Vec<usize>,
+    /// Max live requests folded into one batch.
+    pub batch_cap: usize,
+    pub max_wait: Duration,
+}
+
+impl<B: ServingBackend> Dispatcher<B> {
+    pub fn run(mut self) {
+        // If the loop unwinds (a panicking ServingBackend impl — the
+        // trait is public), close the queue and answer everything still
+        // queued: blocked and future `infer` calls must error out, not
+        // hang forever. On the normal exit path the queue is already
+        // closed and drained, so the guard is a no-op beyond `close`.
+        struct FailPending(Arc<SubmitQueue>);
+        impl Drop for FailPending {
+            fn drop(&mut self) {
+                self.0.fail_pending("serving dispatcher died");
+            }
+        }
+        let _guard = FailPending(self.queue.clone());
+        while let Some(batch) = self.queue.next_batch(self.batch_cap, self.max_wait) {
+            self.dispatch(batch);
+        }
+        // Queue closed and drained. Dropping the backend joins the worker
+        // threads after their channels drain, so in-flight batches still
+        // complete before the dispatcher thread (and thus `join`) returns.
+    }
+
+    fn dispatch(&mut self, batch: Vec<Request>) {
+        let worker = self.gate.acquire();
+        // The gate may have blocked on saturated workers; re-check
+        // deadlines so stale requests are answered, not executed.
+        let now = Instant::now();
+        let mut live = Vec::with_capacity(batch.len());
+        for req in batch {
+            if req.deadline.is_some_and(|d| d <= now) {
+                self.queue.expire(req);
+            } else {
+                live.push(req);
+            }
+        }
+        if live.is_empty() {
+            self.gate.release(worker);
+            return;
+        }
+        let bucket = bucket_for(&self.sizes, live.len());
+        let mut xs = Vec::with_capacity(live.len());
+        let mut resp = Vec::with_capacity(live.len());
+        for req in live {
+            xs.push(req.x);
+            resp.push((req.resp, req.enqueued, req.deadline));
+        }
+        let job = BatchJob {
+            xs,
+            bucket,
+            state: Some(JobState {
+                resp,
+                worker,
+                recorder: self.recorder.clone(),
+                gate: self.gate.clone(),
+                queue: self.queue.clone(),
+            }),
+        };
+        self.backend.submit(worker, job);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unsorted_sizes_are_normalized() {
+        // The pre-rework serve loop trusted manifest order and took
+        // `last()` as the max — an unsorted list silently capped batches
+        // at 8 and could trip `pad_batch`'s size assert.
+        let sizes = normalize_batch_sizes(&[32, 8, 16, 8, 0]).unwrap();
+        assert_eq!(sizes, vec![8, 16, 32]);
+        assert!(normalize_batch_sizes(&[]).is_err());
+        assert!(normalize_batch_sizes(&[0]).is_err());
+    }
+
+    #[test]
+    fn bucket_picks_smallest_cover() {
+        let sizes = normalize_batch_sizes(&[32, 8, 16]).unwrap();
+        assert_eq!(bucket_for(&sizes, 1), 8);
+        assert_eq!(bucket_for(&sizes, 8), 8);
+        assert_eq!(bucket_for(&sizes, 9), 16);
+        assert_eq!(bucket_for(&sizes, 32), 32);
+        // Oversized batches clamp to the true max, not the list tail.
+        assert_eq!(bucket_for(&sizes, 33), 32);
+    }
+
+    #[test]
+    fn gate_prefers_least_loaded_and_blocks_at_limit() {
+        let gate = Arc::new(InflightGate::new(2, 2));
+        assert_eq!(gate.acquire(), 0);
+        assert_eq!(gate.acquire(), 1);
+        assert_eq!(gate.acquire(), 0);
+        let w = gate.acquire();
+        assert_eq!(w, 1);
+        // All slots taken: acquire now blocks until a release.
+        let g2 = gate.clone();
+        let t = std::thread::spawn(move || g2.acquire());
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(!t.is_finished());
+        gate.release(0);
+        assert_eq!(t.join().unwrap(), 0);
+    }
+}

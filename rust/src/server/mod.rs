@@ -1,161 +1,243 @@
-//! Minimal batched inference server over a quantized model.
+//! Multi-worker batching inference server over a quantized model.
 //!
 //! The paper motivates mixed-precision PTQ with serving latency/QoS; this
-//! module closes the loop by actually serving the quantized model from the
-//! Rust hot path. PJRT handles are not `Send`, so the server owns its
-//! [`Pipeline`] on a dedicated executor thread; callers talk to it through
-//! a cloneable [`ServerHandle`] (thread-safe, usable from tokio tasks via
-//! `spawn_blocking`).
+//! module closes the loop by serving the quantized model from the Rust hot
+//! path. PJRT handles are not `Send`, so each worker thread of a
+//! [`crate::coordinator::PipelinePool`] owns its *own* [`Pipeline`];
+//! callers talk to the engine through a cloneable [`ServerHandle`].
 //!
-//! Batching policy: collect requests until `max_batch` or `max_wait_us`
-//! elapses, pad the batch to the compiled batch size, run the `logits`
-//! graph once, scatter per-request outputs.
+//! Request path:
+//!
+//! 1. **Admission** ([`queue`]): a bounded submission queue; a full queue
+//!    rejects immediately with an error instead of blocking or growing.
+//! 2. **Batching** ([`dispatch`]): the dispatcher collects requests until
+//!    `max_batch` or `max_wait` elapses, expires requests past their
+//!    deadline (they are answered, never executed), picks the smallest
+//!    compiled batch-size bucket covering the batch, and fans it to the
+//!    least-loaded worker. In-flight batches per worker are bounded, so
+//!    backpressure lands in the submission queue where admission control
+//!    and deadlines are enforced.
+//! 3. **Execution**: the worker pads the batch to its bucket, runs the
+//!    `logits` graph once, scatters per-request outputs, and records
+//!    latency into its own stats shard ([`stats`] — bounded memory).
+//!
+//! Shutdown: [`ServerHandle::shutdown`] (or dropping the last handle)
+//! closes the queue; the dispatcher drains everything already admitted,
+//! then drops the worker pool — which joins the worker threads — and the
+//! `JoinHandle` returned by [`spawn`] becomes joinable.
 
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+mod dispatch;
+mod queue;
+mod stats;
+
+pub use dispatch::{BatchJob, ServingBackend};
+pub use stats::{LatencyRing, ServeRecorder, ServeStats, WorkerStats, DEFAULT_LATENCY_SAMPLES};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::Pipeline;
+use crate::coordinator::{Pipeline, PipelinePool};
 use crate::quant::QuantConfig;
 use crate::runtime::HostTensor;
 use crate::Result;
 
+use dispatch::{Dispatcher, InflightGate};
+use queue::{Request, SubmitQueue};
+
 #[derive(Debug, Clone)]
 pub struct ServeOptions {
-    /// Max requests folded into one execution (≤ compiled batch size).
+    /// Max requests folded into one execution (≤ largest compiled bucket).
     pub max_batch: usize,
     /// Max time the batcher waits for more requests.
     pub max_wait: Duration,
+    /// Worker pipelines [`spawn`] builds into its pool.
+    /// [`serve_with_backend`] ignores this and sizes the engine from
+    /// [`ServingBackend::num_workers`] instead.
+    pub workers: usize,
+    /// Submission-queue depth; admissions beyond it are rejected.
+    pub queue_depth: usize,
+    /// Default per-request deadline ([`ServerHandle::infer`]).
+    pub deadline: Option<Duration>,
+    /// In-flight batches allowed per worker before backpressure.
+    pub max_inflight: usize,
+    /// Total latency samples retained for percentile stats.
+    pub latency_samples: usize,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        Self { max_batch: 32, max_wait: Duration::from_micros(500) }
+        Self {
+            max_batch: 32,
+            max_wait: Duration::from_micros(500),
+            workers: 2,
+            queue_depth: 256,
+            deadline: None,
+            max_inflight: 2,
+            latency_samples: DEFAULT_LATENCY_SAMPLES,
+        }
     }
 }
 
-struct Request {
-    /// One example (leading dim == 1).
-    x: HostTensor,
-    resp: mpsc::Sender<Result<Vec<f32>>>,
-    enqueued: Instant,
+/// Closes the submission queue when the last handle clone drops, so a
+/// leaked server cannot outlive its clients.
+struct HandleToken {
+    queue: Arc<SubmitQueue>,
 }
 
-/// Latency statistics collected by the server (microseconds).
-#[derive(Debug, Default, Clone)]
-pub struct ServeStats {
-    pub requests: usize,
-    pub batches: usize,
-    latencies_us: Vec<u64>,
-}
-
-impl ServeStats {
-    pub fn percentile_us(&self, p: f64) -> u64 {
-        if self.latencies_us.is_empty() {
-            return 0;
-        }
-        let mut v = self.latencies_us.clone();
-        v.sort_unstable();
-        let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
-        v[idx]
-    }
-
-    pub fn mean_us(&self) -> f64 {
-        if self.latencies_us.is_empty() {
-            return 0.0;
-        }
-        self.latencies_us.iter().sum::<u64>() as f64 / self.latencies_us.len() as f64
-    }
-
-    pub fn mean_batch_fill(&self) -> f64 {
-        if self.batches == 0 {
-            return 0.0;
-        }
-        self.requests as f64 / self.batches as f64
+impl Drop for HandleToken {
+    fn drop(&mut self) {
+        self.queue.close();
     }
 }
 
 /// Cloneable, thread-safe handle to a running server.
 #[derive(Clone)]
 pub struct ServerHandle {
-    tx: mpsc::Sender<Request>,
-    stats: Arc<Mutex<ServeStats>>,
+    queue: Arc<SubmitQueue>,
+    recorder: Arc<ServeRecorder>,
+    deadline: Option<Duration>,
+    shut: Arc<AtomicBool>,
+    _token: Arc<HandleToken>,
 }
 
 impl ServerHandle {
-    /// Submit one example; blocks until its predictions return.
+    /// Submit one example (leading dim == 1) with the server's default
+    /// deadline; blocks until its predictions (or an admission/deadline/
+    /// execution error) return.
     pub fn infer(&self, x: HostTensor) -> Result<Vec<f32>> {
+        self.infer_with_deadline(x, self.deadline)
+    }
+
+    /// Submit with an explicit deadline override (`None` = no deadline).
+    pub fn infer_with_deadline(
+        &self,
+        x: HostTensor,
+        deadline: Option<Duration>,
+    ) -> Result<Vec<f32>> {
         let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(Request { x, resp: tx, enqueued: Instant::now() })
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        let now = Instant::now();
+        self.queue.push(Request {
+            x,
+            resp: tx,
+            enqueued: now,
+            deadline: deadline.map(|d| now + d),
+        })?;
         rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))?
     }
 
+    /// Merged snapshot of serving statistics.
     pub fn stats(&self) -> ServeStats {
-        self.stats.lock().unwrap().clone()
+        let mut s = self.recorder.snapshot();
+        s.rejected = self.queue.rejected();
+        s.deadline_missed = self.queue.expired();
+        s.max_queue_depth = self.queue.max_depth();
+        s
+    }
+
+    /// Graceful shutdown: stop admissions and wake the dispatcher, which
+    /// drains already-admitted requests and in-flight batches, joins the
+    /// workers, and exits — making the `JoinHandle` from [`spawn`] return.
+    /// Idempotent; safe to call from any handle clone.
+    pub fn shutdown(&self) {
+        self.shut.store(true, Ordering::Relaxed);
+        self.queue.close();
+    }
+
+    /// Whether `shutdown` has been requested on any clone.
+    pub fn is_shutdown(&self) -> bool {
+        self.shut.load(Ordering::Relaxed)
     }
 }
 
-/// Spawn the server thread. `configure` runs on the freshly built pipeline
-/// (calibration, scale loading) before serving starts.
+/// Start the serving engine over an already-built backend. Exposed so
+/// integration tests and benches can drive the dispatcher against stub
+/// workers without artifacts or a PJRT device.
+pub fn serve_with_backend<B: ServingBackend>(
+    backend: B,
+    opts: &ServeOptions,
+) -> Result<(ServerHandle, std::thread::JoinHandle<()>)> {
+    let sizes = dispatch::normalize_batch_sizes(&backend.batch_sizes())?;
+    let workers = backend.num_workers().max(1);
+    let batch_cap = opts.max_batch.max(1).min(*sizes.last().expect("non-empty"));
+    let queue = Arc::new(SubmitQueue::new(opts.queue_depth));
+    let recorder = Arc::new(ServeRecorder::new(workers, opts.latency_samples));
+    let gate = Arc::new(InflightGate::new(workers, opts.max_inflight));
+    let dispatcher = Dispatcher {
+        backend,
+        queue: queue.clone(),
+        recorder: recorder.clone(),
+        gate,
+        sizes,
+        batch_cap,
+        max_wait: opts.max_wait,
+    };
+    let join = std::thread::Builder::new()
+        .name("mpq-serve-dispatch".into())
+        .spawn(move || dispatcher.run())?;
+    let handle = ServerHandle {
+        queue: queue.clone(),
+        recorder,
+        deadline: opts.deadline,
+        shut: Arc::new(AtomicBool::new(false)),
+        _token: Arc::new(HandleToken { queue }),
+    };
+    Ok((handle, join))
+}
+
+/// [`ServingBackend`] over a [`PipelinePool`]: one device pipeline per
+/// worker thread, batches executed via the pool's per-worker submission.
+struct PoolBackend {
+    pool: PipelinePool,
+    cfg: QuantConfig,
+}
+
+impl ServingBackend for PoolBackend {
+    fn num_workers(&self) -> usize {
+        self.pool.num_workers()
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.pool.logits_batch_sizes()
+    }
+
+    fn submit(&mut self, w: usize, job: BatchJob) {
+        let cfg = self.cfg.clone();
+        self.pool.run_on(w, move |p| match p {
+            Some(pipeline) => job.run_logits(pipeline, &cfg),
+            None => job.complete(Err(anyhow::anyhow!("serving worker exited"))),
+        });
+    }
+}
+
+/// Spawn the serving engine: build `opts.workers` pipelines for `model`
+/// (running `configure` — calibration, scale loading — then warming every
+/// compiled serving bucket on each), and start the dispatcher. Returns
+/// once all workers are ready; the `JoinHandle` is the dispatcher thread,
+/// joinable after [`ServerHandle::shutdown`].
 pub fn spawn(
     artifacts_dir: std::path::PathBuf,
     model: String,
     cfg: QuantConfig,
     opts: ServeOptions,
-    configure: impl FnOnce(&mut Pipeline) -> Result<()> + Send + 'static,
+    configure: impl Fn(&mut Pipeline) -> Result<()> + Send + Sync + 'static,
 ) -> Result<(ServerHandle, std::thread::JoinHandle<()>)> {
-    let (tx, rx) = mpsc::channel::<Request>();
-    let stats = Arc::new(Mutex::new(ServeStats::default()));
-    let stats2 = stats.clone();
-    let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-    let join = std::thread::spawn(move || {
-        let mut pipeline = match Pipeline::new(&artifacts_dir, &model) {
-            Ok(p) => p,
-            Err(e) => {
-                let _ = ready_tx.send(Err(e));
-                return;
-            }
-        };
-        if let Err(e) = configure(&mut pipeline) {
-            let _ = ready_tx.send(Err(e));
-            return;
-        }
-        // Warm every serving-batch executable before declaring readiness.
-        let warm = single_zero_example(&pipeline);
-        for batch in pipeline.logits_batch_sizes() {
-            if let Err(e) = pipeline.logits(&cfg, &pad_batch(&[warm.clone()], &pipeline, batch)) {
-                let _ = ready_tx.send(Err(e));
-                return;
-            }
-        }
-        let _ = ready_tx.send(Ok(()));
-        serve_loop(&mut pipeline, &cfg, &opts, &rx, &stats2);
-    });
-    ready_rx.recv().map_err(|_| anyhow::anyhow!("server thread died"))??;
-    Ok((ServerHandle { tx, stats }, join))
+    let warm_cfg = cfg.clone();
+    let pool = PipelinePool::new(&artifacts_dir, &model, opts.workers, move |p| {
+        configure(p)?;
+        // Warm every serving-batch executable before taking traffic.
+        p.warm_logits(&warm_cfg)
+    })?;
+    serve_with_backend(PoolBackend { pool, cfg }, &opts)
 }
 
-fn single_zero_example(pipeline: &Pipeline) -> HostTensor {
-    let m = &pipeline.artifacts.manifest;
-    let mut dims = vec![1usize];
-    dims.extend(&m.x_shape);
-    let numel: usize = dims.iter().product();
-    if m.x_dtype == "i32" {
-        HostTensor::i32(vec![0; numel], dims)
-    } else {
-        HostTensor::f32(vec![0.0; numel], dims)
-    }
-}
-
-/// Stack examples (leading dim 1 each) and zero-pad to `batch` rows.
-fn pad_batch(examples: &[HostTensor], pipeline: &Pipeline, batch: usize) -> HostTensor {
-    let m = &pipeline.artifacts.manifest;
-    debug_assert!(examples.len() <= batch);
-    let per: usize = m.x_shape.iter().product::<usize>().max(1);
+/// Stack examples (leading dim 1 each, trailing dims `x_shape`) and
+/// zero-pad to `batch` rows.
+pub(crate) fn pad_batch(examples: &[HostTensor], x_shape: &[usize], batch: usize) -> HostTensor {
+    debug_assert!(!examples.is_empty() && examples.len() <= batch);
+    let per: usize = x_shape.iter().product::<usize>().max(1);
     let mut dims = vec![batch];
-    dims.extend(&m.x_shape);
+    dims.extend(x_shape);
     match examples[0] {
         HostTensor::F32 { .. } => {
             let mut data = vec![0.0f32; batch * per];
@@ -178,75 +260,21 @@ fn pad_batch(examples: &[HostTensor], pipeline: &Pipeline, batch: usize) -> Host
     }
 }
 
-fn serve_loop(
-    pipeline: &mut Pipeline,
-    cfg: &QuantConfig,
-    opts: &ServeOptions,
-    rx: &mpsc::Receiver<Request>,
-    stats: &Arc<Mutex<ServeStats>>,
-) {
-    let sizes = pipeline.logits_batch_sizes();
-    let batch_cap = opts.max_batch.min(*sizes.last().unwrap());
-    while let Ok(first) = rx.recv() {
-        let mut pending = vec![first];
-        let deadline = Instant::now() + opts.max_wait;
-        while pending.len() < batch_cap {
-            match rx.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
-                Ok(r) => pending.push(r),
-                Err(_) => break,
-            }
-        }
-        // Smallest compiled batch covering the queue — padding a queue of 3
-        // to batch 8 costs far less than padding it to the eval batch.
-        let batch_size = *sizes
-            .iter()
-            .find(|&&s| s >= pending.len())
-            .unwrap_or(sizes.last().unwrap());
-        let xs: Vec<HostTensor> = pending.iter().map(|r| r.x.clone()).collect();
-        let batch = pad_batch(&xs, pipeline, batch_size);
-        let result = pipeline.logits(cfg, &batch);
-        let total_out = match &result {
-            Ok(v) => v.len(),
-            Err(_) => 0,
-        };
-        let per_out = total_out / batch_size.max(1);
-        let now = Instant::now();
-        {
-            let mut s = stats.lock().unwrap();
-            s.batches += 1;
-            s.requests += pending.len();
-            for r in &pending {
-                s.latencies_us.push(now.duration_since(r.enqueued).as_micros() as u64);
-            }
-        }
-        match result {
-            Ok(values) => {
-                for (i, r) in pending.into_iter().enumerate() {
-                    let out = values[i * per_out..(i + 1) * per_out].to_vec();
-                    let _ = r.resp.send(Ok(out));
-                }
-            }
-            Err(e) => {
-                let msg = format!("{e:#}");
-                for r in pending {
-                    let _ = r.resp.send(Err(anyhow::anyhow!("{msg}")));
-                }
-            }
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
-    fn stats_percentiles() {
-        let s = ServeStats { requests: 4, batches: 2, latencies_us: vec![10, 20, 30, 40] };
-        assert_eq!(s.percentile_us(0.0), 10);
-        assert_eq!(s.percentile_us(1.0), 40);
-        assert_eq!(s.percentile_us(0.5), 30); // round(1.5)=2 -> 30
-        assert_eq!(s.mean_us(), 25.0);
-        assert_eq!(s.mean_batch_fill(), 2.0);
+    fn pad_batch_zero_fills_tail_rows() {
+        let a = HostTensor::f32(vec![1.0, 2.0], vec![1, 2]);
+        let b = HostTensor::f32(vec![3.0, 4.0], vec![1, 2]);
+        let padded = pad_batch(&[a, b], &[2], 4);
+        assert_eq!(padded.dims(), &[4, 2]);
+        match padded {
+            HostTensor::F32 { data, .. } => {
+                assert_eq!(data, vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+            }
+            _ => panic!("dtype follows the examples"),
+        }
     }
 }

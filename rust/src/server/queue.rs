@@ -1,0 +1,264 @@
+//! Bounded submission queue with admission control and per-request
+//! deadlines.
+//!
+//! Producers ([`crate::server::ServerHandle::infer`]) push under a mutex
+//! and are *never* blocked by a full queue — admission control answers
+//! immediately with a queue-full error so callers can shed load or retry.
+//! The single dispatcher consumes via [`SubmitQueue::next_batch`], which
+//! blocks for the first live request and then gathers more until the
+//! batch cap or the formation wait elapses. Requests whose deadline has
+//! already passed are answered with a deadline error during the pop, so
+//! they never occupy a batch slot.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::runtime::HostTensor;
+use crate::Result;
+
+/// One queued inference request.
+pub(crate) struct Request {
+    /// One example, leading dim == 1.
+    pub x: HostTensor,
+    pub resp: mpsc::Sender<Result<Vec<f32>>>,
+    pub enqueued: Instant,
+    /// Absolute deadline; expired requests are answered with an error.
+    pub deadline: Option<Instant>,
+}
+
+#[derive(Default)]
+struct State {
+    queue: VecDeque<Request>,
+    closed: bool,
+    max_depth: usize,
+}
+
+/// Mutex+condvar bounded MPSC queue shared by all handle clones and the
+/// dispatcher.
+pub(crate) struct SubmitQueue {
+    state: Mutex<State>,
+    cond: Condvar,
+    capacity: usize,
+    rejected: AtomicUsize,
+    expired: AtomicUsize,
+}
+
+impl SubmitQueue {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            state: Mutex::new(State::default()),
+            cond: Condvar::new(),
+            capacity: capacity.max(1),
+            rejected: AtomicUsize::new(0),
+            expired: AtomicUsize::new(0),
+        }
+    }
+
+    /// Admit a request, or answer immediately: queue-full rejections and
+    /// submissions after shutdown never block the caller.
+    pub fn push(&self, req: Request) -> Result<()> {
+        let mut state = self.state.lock().unwrap();
+        if state.closed {
+            anyhow::bail!("server stopped");
+        }
+        if state.queue.len() >= self.capacity {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            anyhow::bail!("server queue full ({} pending)", state.queue.len());
+        }
+        state.queue.push_back(req);
+        state.max_depth = state.max_depth.max(state.queue.len());
+        drop(state);
+        self.cond.notify_one();
+        Ok(())
+    }
+
+    /// Close the queue: no new admissions, wake the dispatcher. Requests
+    /// already queued are still drained into batches.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cond.notify_all();
+    }
+
+    /// Close the queue AND answer everything still queued with `msg` —
+    /// the dispatcher's panic path. After a normal drain the queue is
+    /// empty and this reduces to [`SubmitQueue::close`]; after a panic it
+    /// turns would-be-forever hangs into immediate errors.
+    pub fn fail_pending(&self, msg: &str) {
+        let mut state = self.state.lock().unwrap();
+        state.closed = true;
+        while let Some(req) = state.queue.pop_front() {
+            let _ = req.resp.send(Err(anyhow::anyhow!("{msg}")));
+        }
+        drop(state);
+        self.cond.notify_all();
+    }
+
+    /// Count one deadline miss (the caller answers the request itself) —
+    /// used by [`crate::server::BatchJob`] when a deadline expires after
+    /// execution already started.
+    pub fn note_expired(&self) {
+        self.expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Answer `req` with a deadline error and count the miss. Used both by
+    /// the pop path and by the dispatcher's pre-submit sweep.
+    pub fn expire(&self, req: Request) {
+        self.note_expired();
+        let _ = req.resp.send(Err(anyhow::anyhow!(
+            "deadline exceeded before execution ({:?} in queue)",
+            req.enqueued.elapsed()
+        )));
+    }
+
+    /// Pop the oldest request whose deadline has not passed, expiring the
+    /// rest. `None` when the queue is momentarily empty.
+    fn pop_live(&self, state: &mut State) -> Option<Request> {
+        let now = Instant::now();
+        while let Some(req) = state.queue.pop_front() {
+            if req.deadline.is_some_and(|d| d <= now) {
+                self.expire(req);
+                continue;
+            }
+            return Some(req);
+        }
+        None
+    }
+
+    /// Block for the first live request, then gather up to `max` total
+    /// until `max_wait` elapses. Returns `None` once the queue is closed
+    /// *and* drained — the dispatcher's exit condition.
+    pub fn next_batch(&self, max: usize, max_wait: Duration) -> Option<Vec<Request>> {
+        let mut state = self.state.lock().unwrap();
+        let first = loop {
+            if let Some(req) = self.pop_live(&mut state) {
+                break req;
+            }
+            if state.closed {
+                return None;
+            }
+            state = self.cond.wait(state).unwrap();
+        };
+        let formed_by = Instant::now() + max_wait;
+        let mut batch = vec![first];
+        while batch.len() < max {
+            if let Some(req) = self.pop_live(&mut state) {
+                batch.push(req);
+                continue;
+            }
+            if state.closed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= formed_by {
+                break;
+            }
+            let (guard, timeout) = self.cond.wait_timeout(state, formed_by - now).unwrap();
+            state = guard;
+            if timeout.timed_out() {
+                // One final sweep for anything that raced the timeout.
+                while batch.len() < max {
+                    match self.pop_live(&mut state) {
+                        Some(req) => batch.push(req),
+                        None => break,
+                    }
+                }
+                break;
+            }
+        }
+        Some(batch)
+    }
+
+    /// Admissions rejected because the queue was full.
+    pub fn rejected(&self) -> usize {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Requests answered with a deadline error.
+    pub fn expired(&self) -> usize {
+        self.expired.load(Ordering::Relaxed)
+    }
+
+    /// Highest queue depth observed since startup.
+    pub fn max_depth(&self) -> usize {
+        self.state.lock().unwrap().max_depth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(deadline: Option<Instant>) -> (Request, mpsc::Receiver<Result<Vec<f32>>>) {
+        let (tx, rx) = mpsc::channel();
+        let r = Request {
+            x: HostTensor::f32(vec![0.0], vec![1, 1]),
+            resp: tx,
+            enqueued: Instant::now(),
+            deadline,
+        };
+        (r, rx)
+    }
+
+    #[test]
+    fn admission_rejects_when_full() {
+        let q = SubmitQueue::new(2);
+        let (a, _ra) = req(None);
+        let (b, _rb) = req(None);
+        let (c, _rc) = req(None);
+        q.push(a).unwrap();
+        q.push(b).unwrap();
+        let err = q.push(c).unwrap_err();
+        assert!(format!("{err:#}").contains("queue full"), "{err:#}");
+        assert_eq!(q.rejected(), 1);
+        assert_eq!(q.max_depth(), 2);
+    }
+
+    #[test]
+    fn push_after_close_errors_and_next_batch_drains() {
+        let q = SubmitQueue::new(8);
+        let (a, _ra) = req(None);
+        let (b, _rb) = req(None);
+        q.push(a).unwrap();
+        q.push(b).unwrap();
+        q.close();
+        let (c, _rc) = req(None);
+        assert!(format!("{:#}", q.push(c).unwrap_err()).contains("stopped"));
+        // Queued-before-close requests still come out, then None.
+        let batch = q.next_batch(8, Duration::from_millis(1)).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(q.next_batch(8, Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn expired_requests_are_answered_not_batched() {
+        let q = SubmitQueue::new(8);
+        let past = Instant::now() - Duration::from_millis(5);
+        let (a, ra) = req(Some(past));
+        let (b, _rb) = req(None);
+        q.push(a).unwrap();
+        q.push(b).unwrap();
+        let batch = q.next_batch(8, Duration::from_millis(1)).unwrap();
+        assert_eq!(batch.len(), 1, "expired request must not occupy a slot");
+        assert_eq!(q.expired(), 1);
+        let answer = ra.recv().unwrap();
+        assert!(format!("{:#}", answer.unwrap_err()).contains("deadline"));
+    }
+
+    #[test]
+    fn next_batch_caps_at_max() {
+        let q = SubmitQueue::new(16);
+        let mut rxs = Vec::new();
+        for _ in 0..5 {
+            let (r, rx) = req(None);
+            q.push(r).unwrap();
+            rxs.push(rx);
+        }
+        let batch = q.next_batch(3, Duration::from_millis(1)).unwrap();
+        assert_eq!(batch.len(), 3);
+        let batch = q.next_batch(3, Duration::from_millis(1)).unwrap();
+        assert_eq!(batch.len(), 2);
+    }
+}

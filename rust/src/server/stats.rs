@@ -1,0 +1,262 @@
+//! Bounded, sharded serving statistics.
+//!
+//! Each worker records into its own shard (no cross-worker contention on
+//! the hot path) and latency samples live in fixed-capacity rings, so a
+//! server under sustained heavy traffic holds O(capacity) memory instead
+//! of growing linearly with request count. [`ServeStats`] is a merged
+//! point-in-time snapshot; percentiles use linear interpolation between
+//! the two nearest ranks (p50 of `[10, 20, 30, 40]` is 25, not 30).
+
+use std::sync::Mutex;
+
+/// Default total latency-sample capacity across all shards.
+pub const DEFAULT_LATENCY_SAMPLES: usize = 4096;
+
+/// Fixed-capacity ring of the most recent latency samples.
+#[derive(Debug, Clone)]
+pub struct LatencyRing {
+    buf: Vec<u64>,
+    cap: usize,
+    next: usize,
+    total: usize,
+}
+
+impl LatencyRing {
+    pub fn new(cap: usize) -> Self {
+        Self { buf: Vec::new(), cap: cap.max(1), next: 0, total: 0 }
+    }
+
+    /// O(1) push; once full, overwrites the oldest sample.
+    pub fn push(&mut self, v: u64) {
+        if self.buf.len() < self.cap {
+            self.buf.push(v);
+        } else {
+            self.buf[self.next] = v;
+        }
+        self.next = (self.next + 1) % self.cap;
+        self.total += 1;
+    }
+
+    /// The retained samples, unordered.
+    pub fn samples(&self) -> &[u64] {
+        &self.buf
+    }
+
+    /// Samples ever pushed (retained or evicted).
+    pub fn total(&self) -> usize {
+        self.total
+    }
+}
+
+/// One worker's counters.
+#[derive(Debug)]
+struct Shard {
+    batches: usize,
+    requests: usize,
+    errors: usize,
+    latencies: LatencyRing,
+}
+
+/// Shard-per-worker recorder shared between the dispatcher, the workers
+/// and every [`crate::server::ServerHandle`] clone.
+#[derive(Debug)]
+pub struct ServeRecorder {
+    shards: Vec<Mutex<Shard>>,
+}
+
+impl ServeRecorder {
+    /// `latency_samples` is the total sample budget, split across shards;
+    /// each shard keeps at least 64 samples so percentiles stay usable,
+    /// which can stretch a very small budget to `64 * workers`.
+    pub fn new(workers: usize, latency_samples: usize) -> Self {
+        let workers = workers.max(1);
+        let per = (latency_samples / workers).max(64);
+        let shards = (0..workers)
+            .map(|_| {
+                Mutex::new(Shard {
+                    batches: 0,
+                    requests: 0,
+                    errors: 0,
+                    latencies: LatencyRing::new(per),
+                })
+            })
+            .collect();
+        Self { shards }
+    }
+
+    /// Record one completed batch on `worker`: per-request latencies plus
+    /// how many of its requests were answered with an error (execution
+    /// failure or a deadline that expired before delivery). A failed
+    /// batch still answers — and counts — every request in it.
+    pub fn record_batch(&self, worker: usize, latencies_us: &[u64], errors: usize) {
+        let mut s = self.shards[worker % self.shards.len()].lock().unwrap();
+        s.batches += 1;
+        s.requests += latencies_us.len();
+        s.errors += errors.min(latencies_us.len());
+        for &l in latencies_us {
+            s.latencies.push(l);
+        }
+    }
+
+    /// Merge all shards into a snapshot. Admission-side counters (rejects,
+    /// deadline misses, queue depth) are filled in by the caller.
+    pub fn snapshot(&self) -> ServeStats {
+        let mut stats = ServeStats::default();
+        for (i, shard) in self.shards.iter().enumerate() {
+            let s = shard.lock().unwrap();
+            stats.requests += s.requests;
+            stats.batches += s.batches;
+            stats.errors += s.errors;
+            stats.latencies_us.extend_from_slice(s.latencies.samples());
+            stats.per_worker.push(WorkerStats {
+                worker: i,
+                batches: s.batches,
+                requests: s.requests,
+            });
+        }
+        stats
+    }
+}
+
+/// Per-worker slice of a [`ServeStats`] snapshot.
+#[derive(Debug, Default, Clone)]
+pub struct WorkerStats {
+    pub worker: usize,
+    pub batches: usize,
+    pub requests: usize,
+}
+
+impl WorkerStats {
+    /// Mean requests per executed batch on this worker.
+    pub fn mean_batch_fill(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Point-in-time serving statistics (microsecond latencies).
+#[derive(Debug, Default, Clone)]
+pub struct ServeStats {
+    /// Requests answered through an executed batch (including ones
+    /// answered with an error — successes are `requests - errors`).
+    pub requests: usize,
+    /// Batches executed.
+    pub batches: usize,
+    /// Requests answered with an error through an executed batch: a batch
+    /// execution failure, or a deadline that expired before delivery.
+    pub errors: usize,
+    /// Admissions rejected because the submission queue was full.
+    pub rejected: usize,
+    /// Requests answered with a deadline error — usually before occupying
+    /// a batch slot; a batch finishing past a request's deadline counts
+    /// here too (and in `errors`).
+    pub deadline_missed: usize,
+    /// Highest submission-queue depth observed.
+    pub max_queue_depth: usize,
+    pub per_worker: Vec<WorkerStats>,
+    latencies_us: Vec<u64>,
+}
+
+impl ServeStats {
+    /// Linear-interpolation percentile over the retained latency samples.
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        percentile(&self.latencies_us, p)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.latencies_us.is_empty() {
+            return 0.0;
+        }
+        self.latencies_us.iter().sum::<u64>() as f64 / self.latencies_us.len() as f64
+    }
+
+    /// Mean requests per executed batch across all workers.
+    pub fn mean_batch_fill(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Percentile with linear interpolation between the two nearest ranks.
+pub(crate) fn percentile(samples: &[u64], p: f64) -> u64 {
+    if samples.is_empty() {
+        return 0;
+    }
+    let mut v = samples.to_vec();
+    v.sort_unstable();
+    let rank = (v.len() - 1) as f64 * p.clamp(0.0, 1.0);
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    (v[lo] as f64 + (v[hi] as f64 - v[lo] as f64) * frac).round() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_is_bounded() {
+        let mut r = LatencyRing::new(8);
+        for i in 0..10_000u64 {
+            r.push(i);
+        }
+        assert_eq!(r.samples().len(), 8);
+        assert_eq!(r.total(), 10_000);
+        // Retains exactly the most recent 8 samples.
+        let mut kept: Vec<u64> = r.samples().to_vec();
+        kept.sort_unstable();
+        assert_eq!(kept, (9992..10_000).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [10u64, 20, 30, 40];
+        assert_eq!(percentile(&v, 0.0), 10);
+        assert_eq!(percentile(&v, 1.0), 40);
+        // Rank 1.5 interpolates 20..30 — not the rounded-rank 30.
+        assert_eq!(percentile(&v, 0.5), 25);
+        assert_eq!(percentile(&v, 0.25), 18); // round(17.5)
+        assert_eq!(percentile(&[7], 0.99), 7);
+        assert_eq!(percentile(&[], 0.5), 0);
+    }
+
+    #[test]
+    fn recorder_shards_and_merges() {
+        let rec = ServeRecorder::new(2, 1024);
+        rec.record_batch(0, &[10, 20], 0);
+        rec.record_batch(1, &[30], 0);
+        rec.record_batch(1, &[40, 50, 60], 3);
+        let s = rec.snapshot();
+        assert_eq!(s.requests, 6);
+        assert_eq!(s.batches, 3);
+        assert_eq!(s.errors, 3);
+        assert_eq!(s.per_worker.len(), 2);
+        assert_eq!(s.per_worker[0].batches, 1);
+        assert_eq!(s.per_worker[1].batches, 2);
+        assert_eq!(s.per_worker[1].requests, 4);
+        assert!((s.per_worker[1].mean_batch_fill() - 2.0).abs() < 1e-12);
+        assert_eq!(s.percentile_us(0.0), 10);
+        assert_eq!(s.percentile_us(1.0), 60);
+        assert_eq!(s.mean_batch_fill(), 2.0);
+        assert!((s.mean_us() - 35.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stats_stay_bounded_under_load() {
+        let rec = ServeRecorder::new(1, 128);
+        for i in 0..100_000u64 {
+            rec.record_batch(0, &[i], 0);
+        }
+        let s = rec.snapshot();
+        assert_eq!(s.requests, 100_000);
+        // The snapshot's sample buffer is capped, not linear in traffic.
+        assert!(s.latencies_us.len() <= 128);
+    }
+}

@@ -1,5 +1,5 @@
 //! End-to-end driver (DESIGN.md §5): the paper's full pipeline on a real
-//! small workload, for both models.
+//! small workload, for both models, through the `SearchSpec` front door.
 //!
 //! For each model: calibrate → compute the Hessian sensitivity ordering →
 //! run greedy and bisection searches at a 99% relative accuracy target →
@@ -10,50 +10,47 @@
 //! make artifacts && cargo run --release --example mixed_precision_search
 //! ```
 
+use mpq::api::{SearchEvent, SearchSpec};
 use mpq::coordinator::SearchAlgo;
-use mpq::report::experiments::{run_cell, ExperimentCtx, METRIC_TRIALS};
-use mpq::sensitivity::{self, MetricKind};
+use mpq::sensitivity::MetricKind;
 
 fn main() -> mpq::Result<()> {
-    let dir = mpq::artifacts_dir()
-        .ok_or_else(|| anyhow::anyhow!("run `make artifacts` first"))?;
-    let target = 0.99;
-
     for model in ["resnet_s", "bert_s"] {
         println!("=== {model} ===");
-        let mut ctx = ExperimentCtx::new(&dir, model)?;
-        ctx.ensure_calibrated()?;
-
-        let t0 = std::time::Instant::now();
-        let sens =
-            sensitivity::compute(&mut ctx.pipeline, MetricKind::Hessian, METRIC_TRIALS, 0)?;
-        println!(
-            "hessian sensitivity over {} layers in {:.1}s (least sensitive: layer {})",
-            sens.order.len(),
-            t0.elapsed().as_secs_f64(),
-            sens.order[0]
-        );
+        // One session per model; both algorithms run inside it, sharing
+        // the pipeline, the calibrated scales, the disk-cached sensitivity
+        // scores and the persistent eval cache.
+        let mut session = SearchSpec::new(model)
+            .metric(MetricKind::Hessian)
+            .target(0.99)
+            .open()?;
+        session.on_event(|ev| {
+            if let SearchEvent::Started { algo, layers, objective } = ev {
+                eprintln!("[{algo}] searching {layers} layers under {objective}");
+            }
+        });
 
         for algo in [SearchAlgo::Greedy, SearchAlgo::Bisection] {
-            let cell = run_cell(&mut ctx, algo, &sens, 0, target)?;
+            let report = session.run_algo(algo)?;
+            let out = &report.outcome;
             println!(
-                "{:>9}: accuracy {:.2}% (target {:.2}%) -> size {:.2}%  latency {:.2}%  \
-                 [{} evals, {:.1}s, met={}]",
+                "{:>9}: accuracy {:.2}% (floor {:.2}%) -> size {:.2}%  latency {:.2}%  \
+                 [{} evals, {:.1}s, cost {}]",
                 algo.label(),
-                cell.accuracy * 100.0,
-                target * ctx.pipeline.float_val_acc() * 100.0,
-                cell.rel_size_pct,
-                cell.rel_latency_pct,
-                cell.evals,
-                cell.search_seconds,
-                cell.met_target,
+                out.accuracy * 100.0,
+                out.target * 100.0,
+                report.rel_size * 100.0,
+                report.rel_latency * 100.0,
+                out.evals,
+                report.search_seconds,
+                report.cost_provenance,
             );
-            let int4 = cell.config.count_at(4.0);
-            let int8 = cell.config.count_at(8.0);
-            let fp16 = cell.config.num_layers() - int4 - int8;
+            let int4 = out.config.count_at(4.0);
+            let int8 = out.config.count_at(8.0);
+            let fp16 = out.config.num_layers() - int4 - int8;
             println!("           bits histogram: {int4}x4b {int8}x8b {fp16}x16b");
         }
-        let stats = ctx.pipeline.stats;
+        let stats = session.ctx.pipeline.stats;
         println!(
             "pipeline totals: {} evals ({} cached), {} executions, {} early exits\n",
             stats.evals, stats.cache_hits, stats.batch_execs, stats.early_exits

@@ -1,20 +1,19 @@
-//! Quickstart: load an exported model, calibrate its quantizer scales, and
-//! compare the float baseline against uniform int8 / int4 quantization.
+//! Quickstart: load an exported model through the `SearchSpec` front
+//! door, calibrate its quantizer scales, and compare the float baseline
+//! against uniform int8 / int4 quantization.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
+use mpq::api::SearchSpec;
 use mpq::quant::QuantConfig;
-use mpq::report::experiments::ExperimentCtx;
 
 fn main() -> mpq::Result<()> {
-    let dir = mpq::artifacts_dir()
-        .ok_or_else(|| anyhow::anyhow!("run `make artifacts` first"))?;
-
-    // One ExperimentCtx = one model pipeline (PJRT engine, compiled AOT
-    // graphs, device-resident params + datasets) plus its cost models.
-    let mut ctx = ExperimentCtx::new(&dir, "resnet_s")?;
+    // One ModelContext = one model pipeline (PJRT engine, compiled AOT
+    // graphs, device-resident params + datasets) plus its cost model —
+    // every knob (cost backend, cache bounds, workers) hangs off the spec.
+    let mut ctx = SearchSpec::new("resnet_s").open_context()?;
 
     // Two-step scale estimation: max calibration, then backprop adjustment
     // of the scales only (model parameters are never touched — that is the
@@ -24,10 +23,11 @@ fn main() -> mpq::Result<()> {
     let n = ctx.pipeline.num_quant_layers();
     println!("model: resnet_s with {n} quantizable layers");
     println!(
-        "float baseline: {:.2}% accuracy, {:.2} MB, {:.3} ms",
+        "float baseline: {:.2}% accuracy, {:.2} MB, {:.3} ms ({})",
         ctx.pipeline.float_val_acc() * 100.0,
         ctx.cost.base_size_mb(),
-        ctx.cost.base_latency_ms()
+        ctx.cost.base_latency_ms(),
+        ctx.cost.provenance(),
     );
 
     for bits in [8.0f32, 4.0] {

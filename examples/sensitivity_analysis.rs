@@ -6,14 +6,14 @@
 //! cargo run --release --example sensitivity_analysis [-- bert_s]
 //! ```
 
-use mpq::report::experiments::{ExperimentCtx, METRIC_TRIALS};
+use mpq::api::SearchSpec;
 use mpq::sensitivity::{self, levenshtein, MetricKind, Sensitivity};
+
+const METRIC_TRIALS: usize = mpq::api::DEFAULT_TRIALS;
 
 fn main() -> mpq::Result<()> {
     let model = std::env::args().nth(1).unwrap_or_else(|| "resnet_s".to_string());
-    let dir = mpq::artifacts_dir()
-        .ok_or_else(|| anyhow::anyhow!("run `make artifacts` first"))?;
-    let mut ctx = ExperimentCtx::new(&dir, &model)?;
+    let mut ctx = SearchSpec::new(model.as_str()).open_context()?;
     ctx.ensure_calibrated()?;
 
     let names: Vec<String> = ctx

@@ -7,53 +7,42 @@
 //! cargo run --release --example serve_quantized
 //! ```
 
-use mpq::coordinator::SearchAlgo;
-use mpq::quant::Scales;
-use mpq::report::experiments::{run_cell, ExperimentCtx, METRIC_TRIALS};
-use mpq::sensitivity::{self, MetricKind};
-use mpq::server::{spawn, ServeOptions};
+use mpq::api::SearchSpec;
+use mpq::sensitivity::MetricKind;
+use mpq::server::ServeOptions;
 
 fn main() -> mpq::Result<()> {
     let model = "bert_s";
-    let dir = mpq::artifacts_dir()
-        .ok_or_else(|| anyhow::anyhow!("run `make artifacts` first"))?;
 
-    // 1. Find a deployable mixed-precision configuration (QE guidance is the
-    //    cheapest metric — fine for a demo).
-    let mut ctx = ExperimentCtx::new(&dir, model)?;
-    ctx.ensure_calibrated()?;
-    let sens = sensitivity::compute(&mut ctx.pipeline, MetricKind::Qe, METRIC_TRIALS, 0)?;
-    let cell = run_cell(&mut ctx, SearchAlgo::Greedy, &sens, 0, 0.99)?;
+    // 1. Find a deployable mixed-precision configuration under a latency
+    //    budget (QE guidance is the cheapest metric — fine for a demo):
+    //    stop quantizing once modeled latency reaches 80% of fp16, instead
+    //    of compressing to exhaustion.
+    let mut session = SearchSpec::new(model)
+        .metric(MetricKind::Qe)
+        .target(0.99)
+        .latency_budget(0.8)
+        .workers(2) // also the serving worker count below
+        .open()?;
+    let report = session.run()?;
     println!(
-        "serving config: accuracy {:.2}%, size {:.1}%, modeled latency {:.1}%",
-        cell.accuracy * 100.0,
-        cell.rel_size_pct,
-        cell.rel_latency_pct
+        "serving config: accuracy {:.2}%, size {:.1}%, modeled latency {:.1}% ({})",
+        report.outcome.accuracy * 100.0,
+        report.rel_size * 100.0,
+        report.rel_latency * 100.0,
+        report.cost_provenance,
     );
-    let examples: Vec<_> = (0..192)
-        .map(|i| ctx.pipeline.artifacts.val.x.slice_rows(i % ctx.pipeline.artifacts.val.count, 1))
-        .collect();
-    drop(ctx); // release the search pipeline before the server builds its own
+    let val = &session.ctx.pipeline.artifacts.val;
+    let examples: Vec<_> = (0..192).map(|i| val.x.slice_rows(i % val.count, 1)).collect();
 
-    // 2. Spawn the engine: two pipeline workers, bounded queue, 50 ms
-    //    per-request deadline.
-    let scales_path = dir.join(format!("{model}_scales.json"));
+    // 2. Turn the session into the engine: two pipeline workers, bounded
+    //    queue, 50 ms per-request deadline. The session's search pipeline
+    //    is dropped first; pool workers load the persisted scales.
     let opts = ServeOptions {
-        workers: 2,
         deadline: Some(std::time::Duration::from_millis(50)),
         ..ServeOptions::default()
     };
-    let (handle, join) = spawn(
-        dir.clone(),
-        model.to_string(),
-        cell.config.clone(),
-        opts,
-        move |p| {
-            p.scales = Scales::load(&scales_path)?;
-            p.sync_scales()?;
-            Ok(())
-        },
-    )?;
+    let (handle, join) = session.into_server(report.outcome.config.clone(), opts)?;
 
     // 3. Drive it with 8 concurrent clients (deadline misses and queue
     //    rejections are answered as errors, not hangs).

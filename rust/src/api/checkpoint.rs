@@ -1,0 +1,237 @@
+//! Atomic decision-log checkpoints for resumable searches.
+//!
+//! Both search algorithms are deterministic functions of their decision
+//! sequence: given (algorithm, ordering, bit widths, objective), the
+//! accept/reject outcomes alone reproduce the exact trajectory. A
+//! [`Checkpoint`] therefore persists just that boolean sequence (plus a
+//! fingerprint binding it to the search that wrote it). On resume, the
+//! search replays the recorded decisions without touching the environment
+//! — bit-identical, and counted as decision evaluations so a resumed run
+//! reports the same totals as an uninterrupted one — then continues live
+//! from the first unrecorded decision. Any configuration the interrupted
+//! run fully evaluated is answered by the persistent
+//! [`crate::coordinator::EvalCache`], so resumption also wastes no device
+//! work.
+//!
+//! Writes go to a temp file followed by an atomic rename (same discipline
+//! as the eval cache): a crash leaves either the old checkpoint or the new
+//! one, never a truncated log.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context as _};
+
+use crate::coordinator::SearchAlgo;
+use crate::util::json::{self, Value};
+use crate::Result;
+
+/// Schema version of the on-disk checkpoint format.
+pub const CHECKPOINT_VERSION: u64 = 1;
+
+/// Fingerprint binding a checkpoint to one exact search: algorithm, bit
+/// widths, objective description, layer ordering, and the environment
+/// context (e.g. [`crate::coordinator::Pipeline::eval_context`]). Resuming
+/// with a different fingerprint is rejected instead of silently replaying
+/// foreign decisions.
+pub fn checkpoint_fingerprint(
+    algo: SearchAlgo,
+    quant_bits: &[f32],
+    objective: &str,
+    order: &[usize],
+    env_context: &str,
+) -> String {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    for &b in quant_bits {
+        b.to_bits().hash(&mut h);
+    }
+    order.hash(&mut h);
+    format!("{}/bits+order-{:016x}/{objective}/{env_context}", algo.label(), h.finish())
+}
+
+/// A persistent, atomically written accept/reject decision log.
+#[derive(Debug)]
+pub struct Checkpoint {
+    path: PathBuf,
+    fingerprint: String,
+    decisions: Vec<bool>,
+    /// Next decision to replay; equals `decisions.len()` once live.
+    cursor: usize,
+    /// Decisions loaded from disk at attach time (for reporting).
+    loaded: usize,
+}
+
+impl Checkpoint {
+    /// Attach a checkpoint at `path`. With `resume == false` a fresh empty
+    /// log is written immediately (truncating any stale file). With
+    /// `resume == true` the existing file is loaded and its decisions are
+    /// replayed by the next search; a missing, corrupt, or
+    /// fingerprint-mismatched file is an error — resuming the wrong search
+    /// must fail loudly, not diverge quietly.
+    pub fn attach(path: &Path, fingerprint: &str, resume: bool) -> Result<Self> {
+        if !resume {
+            let ck = Self {
+                path: path.to_path_buf(),
+                fingerprint: fingerprint.to_string(),
+                decisions: Vec::new(),
+                cursor: 0,
+                loaded: 0,
+            };
+            ck.save()?;
+            return Ok(ck);
+        }
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading checkpoint {} for resume", path.display()))?;
+        let v = json::parse(&text)
+            .with_context(|| format!("parsing checkpoint {}", path.display()))?;
+        ensure!(
+            v.req("version")?.as_u64()? == CHECKPOINT_VERSION,
+            "unsupported checkpoint version in {}",
+            path.display()
+        );
+        let fp = v.req("fingerprint")?.as_str()?;
+        ensure!(
+            fp == fingerprint,
+            "checkpoint {} was written by a different search:\n  recorded: {fp}\n  \
+             expected: {fingerprint}",
+            path.display()
+        );
+        let decisions: Vec<bool> =
+            v.req("decisions")?.as_arr()?.iter().map(|d| d.as_bool()).collect::<Result<_>>()?;
+        let loaded = decisions.len();
+        Ok(Self {
+            path: path.to_path_buf(),
+            fingerprint: fingerprint.to_string(),
+            decisions,
+            cursor: 0,
+            loaded,
+        })
+    }
+
+    /// Total decisions in the log.
+    pub fn len(&self) -> usize {
+        self.decisions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.decisions.is_empty()
+    }
+
+    /// Decisions loaded from disk at attach time (the replayable prefix).
+    pub fn loaded(&self) -> usize {
+        self.loaded
+    }
+
+    /// Decisions actually replayed so far.
+    pub fn replayed(&self) -> usize {
+        self.cursor.min(self.loaded)
+    }
+
+    /// Next recorded decision to replay, if any.
+    pub(crate) fn take_replay(&mut self) -> Option<bool> {
+        if self.cursor < self.decisions.len() {
+            let pass = self.decisions[self.cursor];
+            self.cursor += 1;
+            Some(pass)
+        } else {
+            None
+        }
+    }
+
+    /// Append a live decision and persist the log atomically.
+    pub(crate) fn record(&mut self, pass: bool) -> Result<()> {
+        self.decisions.push(pass);
+        self.cursor = self.decisions.len();
+        self.save()
+    }
+
+    fn save(&self) -> Result<()> {
+        let v = Value::obj(vec![
+            ("version", Value::Num(CHECKPOINT_VERSION as f64)),
+            ("fingerprint", Value::Str(self.fingerprint.clone())),
+            ("decisions", Value::Arr(self.decisions.iter().map(|&d| Value::Bool(d)).collect())),
+        ]);
+        let file_name = self
+            .path
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "checkpoint".to_string());
+        let tmp = self.path.with_file_name(format!(".{file_name}.tmp.{}", std::process::id()));
+        std::fs::write(&tmp, v.to_string())
+            .with_context(|| format!("writing checkpoint temp {}", tmp.display()))?;
+        if let Err(e) = std::fs::rename(&tmp, &self.path) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(anyhow::Error::new(e)
+                .context(format!("committing checkpoint {}", self.path.display())));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("mpq_checkpoint_{name}.json"))
+    }
+
+    #[test]
+    fn fresh_record_resume_roundtrip() {
+        let path = tmp("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let mut ck = Checkpoint::attach(&path, "fp-a", false).unwrap();
+        assert!(ck.is_empty());
+        assert_eq!(ck.take_replay(), None);
+        ck.record(true).unwrap();
+        ck.record(false).unwrap();
+        ck.record(true).unwrap();
+
+        let mut re = Checkpoint::attach(&path, "fp-a", true).unwrap();
+        assert_eq!(re.len(), 3);
+        assert_eq!(re.loaded(), 3);
+        assert_eq!(re.take_replay(), Some(true));
+        assert_eq!(re.take_replay(), Some(false));
+        // Live decisions append after the replayed prefix.
+        re.record(false).unwrap();
+        assert_eq!(re.take_replay(), Some(true));
+        assert_eq!(re.take_replay(), None);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn resume_rejects_fingerprint_mismatch_and_missing_file() {
+        let path = tmp("mismatch");
+        let _ = std::fs::remove_file(&path);
+        assert!(Checkpoint::attach(&path, "fp-a", true).is_err());
+        let mut ck = Checkpoint::attach(&path, "fp-a", false).unwrap();
+        ck.record(true).unwrap();
+        let err = Checkpoint::attach(&path, "fp-b", true).unwrap_err();
+        assert!(err.to_string().contains("different search"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn fresh_attach_truncates_stale_log() {
+        let path = tmp("truncate");
+        let _ = std::fs::remove_file(&path);
+        let mut ck = Checkpoint::attach(&path, "fp-a", false).unwrap();
+        ck.record(true).unwrap();
+        let fresh = Checkpoint::attach(&path, "fp-a", false).unwrap();
+        assert!(fresh.is_empty());
+        let re = Checkpoint::attach(&path, "fp-a", true).unwrap();
+        assert_eq!(re.len(), 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn fingerprint_changes_with_inputs() {
+        let a = checkpoint_fingerprint(SearchAlgo::Greedy, &[8.0, 4.0], "obj", &[0, 1], "ctx");
+        let b = checkpoint_fingerprint(SearchAlgo::Bisection, &[8.0, 4.0], "obj", &[0, 1], "ctx");
+        let c = checkpoint_fingerprint(SearchAlgo::Greedy, &[8.0], "obj", &[0, 1], "ctx");
+        let d = checkpoint_fingerprint(SearchAlgo::Greedy, &[8.0, 4.0], "obj", &[1, 0], "ctx");
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(a, d);
+    }
+}

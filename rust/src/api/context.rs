@@ -1,0 +1,201 @@
+//! [`ModelContext`] — one model's pipeline + cost model + calibration
+//! state, built from a [`SearchSpec`].
+//!
+//! This is the former `report::experiments::ExperimentCtx`, moved behind
+//! the API front door so every entry point (CLI, reports, examples,
+//! serving startup) constructs pipelines, cost backends, and eval caches
+//! the same way. `report::experiments` re-exports it under its old name.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::Context as _;
+
+use crate::coordinator::Pipeline;
+use crate::latency::{AccelModel, CostModel, DeployScale, KernelTable};
+use crate::model::Manifest;
+use crate::quant::{CalibrationOptions, Scales};
+use crate::sensitivity::{self, MetricKind, Sensitivity};
+use crate::Result;
+
+use super::{BackendSpec, CacheSpec, ScaleSpec, SearchSpec};
+
+impl BackendSpec {
+    /// Build the cost model this backend describes for `manifest`.
+    pub fn cost_model(&self, manifest: &Manifest, scale: ScaleSpec) -> Result<CostModel> {
+        let deploy = match scale {
+            ScaleSpec::Reference => DeployScale::for_manifest(manifest),
+            ScaleSpec::Native => DeployScale::native(),
+        };
+        match self {
+            BackendSpec::A100Like => {
+                Ok(CostModel::with_scale(manifest, &AccelModel::a100_like(), deploy))
+            }
+            BackendSpec::TpuLike => {
+                Ok(CostModel::with_scale(manifest, &AccelModel::tpu_like(), deploy))
+            }
+            BackendSpec::MeasuredTable(path) => {
+                let text = std::fs::read_to_string(path)
+                    .with_context(|| format!("reading kernel table {}", path.display()))?;
+                let table = KernelTable::from_json(&text)
+                    .with_context(|| format!("parsing kernel table {}", path.display()))?;
+                let name = path
+                    .file_name()
+                    .map(|n| n.to_string_lossy().into_owned())
+                    .unwrap_or_else(|| path.display().to_string());
+                CostModel::with_table(manifest, table, deploy, format!("measured/{name}"))
+            }
+        }
+    }
+}
+
+/// A model pipeline + its cost model + calibration state.
+pub struct ModelContext {
+    pub pipeline: Pipeline,
+    pub cost: Arc<CostModel>,
+    cache: CacheSpec,
+    calibrated: bool,
+}
+
+impl ModelContext {
+    /// Context with default spec settings (A100-like analytical costing,
+    /// reference deploy scale, unbounded cache).
+    pub fn new(artifacts_dir: &Path, model: &str) -> Result<Self> {
+        Self::from_spec(&SearchSpec::new(model).artifacts_dir(artifacts_dir))
+    }
+
+    /// Build the context a [`SearchSpec`] describes.
+    pub fn from_spec(spec: &SearchSpec) -> Result<Self> {
+        spec.validate()?;
+        let dir = spec.resolved_artifacts_dir()?;
+        let pipeline = Pipeline::new(&dir, &spec.model)
+            .with_context(|| format!("building pipeline for {}", spec.model))?;
+        let cost =
+            Arc::new(spec.backend.cost_model(&pipeline.artifacts.manifest, spec.deploy_scale)?);
+        Ok(Self { pipeline, cost, cache: spec.cache.clone(), calibrated: false })
+    }
+
+    /// Where this context's persistent eval cache lives.
+    pub fn eval_cache_path(&self) -> PathBuf {
+        self.cache.path.clone().unwrap_or_else(|| {
+            self.pipeline
+                .artifacts
+                .dir
+                .join(format!("{}_evalcache.json", self.pipeline.artifacts.manifest.model))
+        })
+    }
+
+    /// The configured eval-cache entry bound, if any.
+    pub fn eval_cache_capacity(&self) -> Option<usize> {
+        self.cache.capacity
+    }
+
+    /// Whether the persistent eval cache is enabled for this context.
+    pub fn eval_cache_enabled(&self) -> bool {
+        self.cache.enabled
+    }
+
+    /// Calibrate scales once per context; reuse a cached scale file when
+    /// the artifacts directory already holds one from a previous run. Once
+    /// the scales are final, the persistent cross-run eval cache is
+    /// attached (honoring the spec's path/capacity), so repeated
+    /// table/ablation runs skip already-measured configurations entirely.
+    pub fn ensure_calibrated(&mut self) -> Result<()> {
+        if self.calibrated {
+            return Ok(());
+        }
+        let path = self
+            .pipeline
+            .artifacts
+            .dir
+            .join(format!("{}_scales.json", self.pipeline.artifacts.manifest.model));
+        let mut loaded = false;
+        if path.is_file() {
+            let scales = Scales::load(&path)?;
+            if scales.num_layers() == self.pipeline.num_quant_layers() {
+                self.pipeline.scales = scales;
+                self.pipeline.sync_scales()?;
+                eprintln!("[calibration] loaded cached scales from {}", path.display());
+                loaded = true;
+            }
+        }
+        if !loaded {
+            let report = self.pipeline.calibrate(&CalibrationOptions::default())?;
+            eprintln!(
+                "[calibration] adjusted scales over {} steps: loss {:.4} -> {:.4}",
+                report.steps, report.loss_before, report.loss_after
+            );
+            self.pipeline.scales.save(&path)?;
+        }
+        if self.cache.enabled {
+            let cache_path = self.eval_cache_path();
+            self.pipeline.attach_eval_cache_bounded(&cache_path, self.cache.capacity);
+            if let Some(cache) = self.pipeline.eval_cache() {
+                if !cache.is_empty() {
+                    eprintln!(
+                        "[eval-cache] loaded {} exact results from {}",
+                        cache.len(),
+                        cache_path.display()
+                    );
+                }
+            }
+        }
+        self.calibrated = true;
+        Ok(())
+    }
+
+    pub fn model(&self) -> String {
+        self.pipeline.artifacts.manifest.model.clone()
+    }
+
+    /// The sensitivity ordering a spec asks for (Random is seeded, not
+    /// disk-cached; informed metrics go through [`Self::cached_sensitivity`]).
+    pub fn sensitivity_for(&mut self, spec: &SearchSpec) -> Result<Sensitivity> {
+        if spec.metric == MetricKind::Random {
+            return Ok(Sensitivity::random(self.pipeline.num_quant_layers(), spec.seed));
+        }
+        self.cached_sensitivity(spec.metric, spec.trials, spec.seed)
+    }
+
+    /// Compute a sensitivity metric, caching scores on disk keyed by
+    /// (model, metric, trials, seed) — Hessian/Noise are the most expensive
+    /// steps of a table run and are identical across invocations (§Perf).
+    pub fn cached_sensitivity(
+        &mut self,
+        metric: MetricKind,
+        trials: usize,
+        seed: u64,
+    ) -> Result<Sensitivity> {
+        use crate::util::json::{self, Value};
+        let path = self.pipeline.artifacts.dir.join(format!(
+            "{}_sens_{}_{}_{}.json",
+            self.model(),
+            metric.label().to_lowercase(),
+            trials,
+            seed
+        ));
+        if metric != MetricKind::Random && path.is_file() {
+            if let Ok(v) = json::parse(&std::fs::read_to_string(&path)?) {
+                let scores: Option<Vec<f64>> = v
+                    .req("scores")
+                    .ok()
+                    .and_then(|s| s.as_arr().ok())
+                    .map(|arr| arr.iter().filter_map(|x| x.as_f64().ok()).collect());
+                if let Some(scores) = scores {
+                    if scores.len() == self.pipeline.num_quant_layers() {
+                        return Ok(Sensitivity::from_scores(metric, scores));
+                    }
+                }
+            }
+        }
+        let sens = sensitivity::compute(&mut self.pipeline, metric, trials, seed)?;
+        if metric != MetricKind::Random {
+            let v = Value::obj(vec![(
+                "scores",
+                Value::Arr(sens.scores.iter().map(|&s| Value::Num(s)).collect()),
+            )]);
+            let _ = std::fs::write(&path, v.to_string());
+        }
+        Ok(sens)
+    }
+}

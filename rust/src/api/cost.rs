@@ -1,0 +1,32 @@
+//! The deployment cost contract consumed by objectives and reports.
+
+use crate::quant::QuantConfig;
+
+/// Anything that can price a configuration for deployment.
+///
+/// The paper's methodology is two-phase: profile per-kernel latencies once,
+/// then *look up and compose* during search. This trait is the composed
+/// side of that contract, abstracted over where the per-kernel numbers come
+/// from — [`crate::latency::CostModel`] implements it for the analytical
+/// rooflines ([`crate::latency::AccelModel`]) and for measured
+/// [`crate::latency::KernelTable`] files alike, and synthetic
+/// implementations ([`super::SyntheticCost`]) let objective logic be tested
+/// without artifacts. [`provenance`](CostModel::provenance) travels into
+/// reports so every table says which cost source produced it.
+pub trait CostModel: Send + Sync {
+    /// End-to-end latency relative to the fp16 baseline (1.0 = baseline).
+    fn rel_latency(&self, cfg: &QuantConfig) -> f64;
+
+    /// Model size relative to the fp16 baseline (1.0 = baseline).
+    fn rel_size(&self, cfg: &QuantConfig) -> f64;
+
+    /// Absolute end-to-end latency, seconds (batch 1).
+    fn latency_s(&self, cfg: &QuantConfig) -> f64;
+
+    /// Absolute model size, bytes.
+    fn size_bytes(&self, cfg: &QuantConfig) -> f64;
+
+    /// Where the numbers come from: `analytical/a100-like`,
+    /// `measured/<file>`, `synthetic`, ... Recorded in reports.
+    fn provenance(&self) -> &str;
+}

@@ -1,0 +1,162 @@
+//! The objective-aware search driver: [`SearchCtl`] is the handle the two
+//! search algorithms consult at every decision point, and [`run_search`]
+//! wires an objective, an optional observer, and an optional checkpoint
+//! into one call usable with *any* [`SearchEnv`] — the artifact-backed
+//! [`crate::coordinator::Pipeline`]/[`crate::coordinator::PipelinePool`]
+//! or synthetic test environments.
+
+use crate::coordinator::{EvalResult, SearchAlgo, SearchEnv, SearchOutcome};
+use crate::quant::QuantConfig;
+use crate::Result;
+
+use super::{Checkpoint, Objective, SearchEvent};
+
+/// Per-run control surface handed to `greedy::search_with` /
+/// `bisection::search_with`: the objective deciding accept/reject and
+/// budget satisfaction, an optional [`SearchEvent`] observer, and an
+/// optional [`Checkpoint`] that records live decisions and replays
+/// recorded ones on resume.
+pub struct SearchCtl<'a> {
+    objective: &'a dyn Objective,
+    observer: Option<&'a mut dyn FnMut(&SearchEvent)>,
+    checkpoint: Option<&'a mut Checkpoint>,
+    satisfied_seen: bool,
+}
+
+impl<'a> SearchCtl<'a> {
+    pub fn new(objective: &'a dyn Objective) -> Self {
+        Self { objective, observer: None, checkpoint: None, satisfied_seen: false }
+    }
+
+    pub fn with_observer(mut self, observer: &'a mut dyn FnMut(&SearchEvent)) -> Self {
+        self.observer = Some(observer);
+        self
+    }
+
+    pub fn with_checkpoint(mut self, checkpoint: &'a mut Checkpoint) -> Self {
+        self.checkpoint = Some(checkpoint);
+        self
+    }
+
+    pub fn objective(&self) -> &dyn Objective {
+        self.objective
+    }
+
+    /// The early-exit target evaluations should be decisive against.
+    pub fn eval_target(&self) -> Option<f64> {
+        Some(self.objective.accuracy_floor())
+    }
+
+    /// Emit one event to the observer, if any.
+    pub fn emit(&mut self, ev: SearchEvent) {
+        if let Some(obs) = self.observer.as_mut() {
+            obs(&ev);
+        }
+    }
+
+    /// Next checkpointed decision to replay (without evaluating), if any.
+    pub fn take_replay(&mut self, bits: f32, index: usize) -> Option<bool> {
+        let pass = self.checkpoint.as_mut()?.take_replay()?;
+        self.emit(SearchEvent::Decision {
+            bits,
+            index,
+            accepted: pass,
+            accuracy: f64::NAN,
+            cost: None,
+            replayed: true,
+        });
+        Some(pass)
+    }
+
+    /// Decide one live candidate: ask the objective, record the decision
+    /// in the checkpoint (atomic write), emit the event.
+    pub fn decide(
+        &mut self,
+        bits: f32,
+        index: usize,
+        cfg: &QuantConfig,
+        result: &EvalResult,
+    ) -> Result<bool> {
+        let pass = self.objective.accept(cfg, result);
+        if let Some(ck) = self.checkpoint.as_mut() {
+            ck.record(pass)?;
+            let decisions = ck.len();
+            self.emit(SearchEvent::CheckpointWritten { decisions });
+        }
+        self.emit(SearchEvent::Decision {
+            bits,
+            index,
+            accepted: pass,
+            accuracy: result.accuracy,
+            cost: self.objective.cost_of(cfg),
+            replayed: false,
+        });
+        Ok(pass)
+    }
+
+    /// Whether the objective's budgets are met by `cfg`; emits
+    /// [`SearchEvent::BudgetSatisfied`] the first time it turns true.
+    pub fn satisfied(&mut self, cfg: &QuantConfig) -> bool {
+        if !self.objective.satisfied(cfg) {
+            return false;
+        }
+        if !self.satisfied_seen {
+            self.satisfied_seen = true;
+            let cost = self.objective.cost_of(cfg).unwrap_or(f64::NAN);
+            self.emit(SearchEvent::BudgetSatisfied { cost });
+        }
+        true
+    }
+
+    /// Shared baseline short-circuit: if the objective's budgets are
+    /// already met by `cfg` (e.g. a budget of 1.0 at the float baseline),
+    /// evaluate it exactly and return the finished outcome — there is
+    /// nothing to quantize. Never fires for accuracy-only objectives.
+    pub(crate) fn baseline_outcome<E: SearchEnv>(
+        &mut self,
+        env: &mut E,
+        cfg: &QuantConfig,
+    ) -> Result<Option<SearchOutcome>> {
+        if !self.satisfied(cfg) {
+            return Ok(None);
+        }
+        let r = env.eval(cfg, None)?;
+        Ok(Some(SearchOutcome {
+            config: cfg.clone(),
+            accuracy: r.accuracy,
+            evals: 1,
+            target: self.objective.accuracy_floor(),
+        }))
+    }
+}
+
+/// Run `algo` over `env` under `objective`, with optional event observer
+/// and checkpoint. With [`super::AccuracyTarget`] this produces outcomes
+/// bit-identical to [`SearchAlgo::run`] at every worker count; budgeted
+/// objectives stop early once satisfied. On resume, decisions already in
+/// `checkpoint` are replayed without touching the environment.
+pub fn run_search<E: SearchEnv>(
+    algo: SearchAlgo,
+    env: &mut E,
+    order: &[usize],
+    quant_bits: &[f32],
+    objective: &dyn Objective,
+    observer: Option<&mut dyn FnMut(&SearchEvent)>,
+    checkpoint: Option<&mut Checkpoint>,
+) -> Result<SearchOutcome> {
+    let mut ctl = SearchCtl::new(objective);
+    if let Some(obs) = observer {
+        ctl = ctl.with_observer(obs);
+    }
+    if let Some(ck) = checkpoint {
+        ctl = ctl.with_checkpoint(ck);
+    }
+    ctl.emit(SearchEvent::Started {
+        algo: algo.label(),
+        layers: env.num_layers(),
+        objective: objective.describe(),
+    });
+    let outcome = algo.run_with(env, order, quant_bits, &mut ctl)?;
+    ctl.emit(SearchEvent::Finished { accuracy: outcome.accuracy, evals: outcome.evals });
+    Ok(outcome)
+}

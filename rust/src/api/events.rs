@@ -1,0 +1,41 @@
+//! Typed observer stream for search progress.
+//!
+//! A [`SearchEvent`] is emitted at every externally meaningful step of a
+//! search — frontier submissions, accept/reject decisions with their
+//! objective scores, budget satisfaction, checkpoint writes — replacing
+//! ad-hoc stderr prints. Observers are plain `FnMut(&SearchEvent)`
+//! callbacks attached through [`super::SearchCtl`] or
+//! [`super::SearchSession::on_event`]; the default CLI observer renders
+//! them as progress lines, tests use them to assert trajectories.
+
+/// One step of a running search.
+#[derive(Debug, Clone)]
+pub enum SearchEvent {
+    /// A search started: algorithm, layer count, objective description.
+    Started { algo: &'static str, layers: usize, objective: String },
+    /// A speculative candidate frontier was submitted for evaluation.
+    FrontierSubmitted { bits: f32, size: usize },
+    /// One sequential decision was made. `index` is the layer id (greedy)
+    /// or the probed prefix length (bisection). `accuracy` is `NaN` for
+    /// decisions replayed from a checkpoint (nothing was evaluated);
+    /// `cost` is the objective's tracked relative cost, when it has one.
+    Decision {
+        bits: f32,
+        index: usize,
+        accepted: bool,
+        accuracy: f64,
+        cost: Option<f64>,
+        replayed: bool,
+    },
+    /// The objective's budgets are met; the search stops quantizing.
+    BudgetSatisfied { cost: f64 },
+    /// The decision log was checkpointed (`decisions` entries on disk).
+    CheckpointWritten { decisions: usize },
+    /// The search finished with its final exact evaluation.
+    Finished { accuracy: f64, evals: usize },
+    /// Cache effectiveness for the finished run (emitted after
+    /// [`SearchEvent::Finished`] by [`super::SearchSession`]): evaluations
+    /// answered by the in-memory memo and by the persistent cross-run
+    /// [`crate::coordinator::EvalCache`].
+    CacheReport { memo_hits: usize, persistent_hits: usize },
+}

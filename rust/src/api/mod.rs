@@ -1,0 +1,42 @@
+//! The unified constrained-search API — the single front door to the
+//! system.
+//!
+//! * [`SearchSpec`] — validated builder describing one search run (model,
+//!   algorithm, metric, workers, objective, cost backend, cache bounds,
+//!   checkpoint path).
+//! * [`Objective`] — pluggable constrained-optimization objectives:
+//!   [`AccuracyTarget`] (the paper's accuracy-floor search, bit-identical
+//!   to the historical behaviour), [`LatencyBudget`] and
+//!   [`FootprintBudget`] (stop quantizing once a deployment budget is
+//!   met).
+//! * [`CostModel`] — the deployment-cost contract objectives and reports
+//!   consume; implemented by the analytical rooflines, measured kernel
+//!   tables, and [`SyntheticCost`].
+//! * [`SearchSession`] — drives either algorithm through
+//!   [`crate::coordinator::SearchEnv`] (single pipeline or a worker
+//!   pool), emitting a typed [`SearchEvent`] stream and writing atomic
+//!   decision [`Checkpoint`]s so interrupted runs resume bit-identically.
+//! * [`ModelContext`] — pipeline + cost model + calibration state (the
+//!   former `ExperimentCtx`), shared by reports and the CLI.
+//! * [`SyntheticEnv`]/[`SyntheticCost`] — artifact-free environments so
+//!   the whole API (budgets, checkpoints, worker fan-out) runs in CI.
+
+mod checkpoint;
+mod context;
+mod cost;
+mod driver;
+mod events;
+mod objective;
+mod session;
+mod spec;
+mod synthetic;
+
+pub use checkpoint::{checkpoint_fingerprint, Checkpoint, CHECKPOINT_VERSION};
+pub use context::ModelContext;
+pub use cost::CostModel;
+pub use driver::{run_search, SearchCtl};
+pub use events::SearchEvent;
+pub use objective::{AccuracyTarget, FootprintBudget, LatencyBudget, Objective};
+pub use session::{SearchReport, SearchSession};
+pub use spec::{BackendSpec, CacheSpec, ObjectiveSpec, ScaleSpec, SearchSpec, DEFAULT_TRIALS};
+pub use synthetic::{SyntheticCost, SyntheticEnv};

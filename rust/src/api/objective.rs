@@ -1,0 +1,157 @@
+//! Pluggable search objectives — constrained optimization over
+//! configurations.
+//!
+//! The paper's searches maximize compression subject to a hard accuracy
+//! floor; that test used to be hard-coded as `accuracy >= target` inside
+//! both algorithms. [`Objective`] generalizes it: every candidate decision
+//! asks [`Objective::accept`], and after every accepted decision the search
+//! asks [`Objective::satisfied`] whether its budgets are already met — at
+//! which point it stops quantizing further, preserving maximal accuracy
+//! (Markovich-Golan et al., "time gained under a constrained loss").
+//!
+//! [`AccuracyTarget`] reproduces the historical behaviour bit-identically:
+//! `accept` is exactly the old accuracy test and `satisfied` is always
+//! false, so the search runs to exhaustion. [`LatencyBudget`] and
+//! [`FootprintBudget`] add a deployment budget from a [`CostModel`];
+//! quantization only ever lowers modeled cost, so the trajectory up to the
+//! stopping point is identical to the accuracy-only trajectory — budgets
+//! choose *where to stop*, never *which layer to accept*.
+
+use std::sync::Arc;
+
+use crate::coordinator::EvalResult;
+use crate::quant::QuantConfig;
+
+use super::CostModel;
+
+/// A constrained search objective: hard accuracy floor plus optional
+/// deployment budgets.
+pub trait Objective: Send + Sync {
+    /// The hard accuracy floor. Drives accept/reject decisions and is
+    /// passed to evaluations as the early-exit target, so results only
+    /// need to be decisive against this bound.
+    fn accuracy_floor(&self) -> f64;
+
+    /// Accept or reject a candidate configuration given its evaluation.
+    /// `result.accuracy` may be a bound from an early-exited evaluation;
+    /// it is guaranteed decisive against [`Objective::accuracy_floor`], so
+    /// implementations must compare against that floor only (any cost
+    /// terms must be deterministic functions of `cfg`).
+    fn accept(&self, cfg: &QuantConfig, result: &EvalResult) -> bool {
+        let _ = cfg;
+        result.accuracy >= self.accuracy_floor()
+    }
+
+    /// True once every budget is met by `cfg`; the search then stops
+    /// quantizing further. The default (no budgets) never stops early.
+    fn satisfied(&self, _cfg: &QuantConfig) -> bool {
+        false
+    }
+
+    /// The budgeted relative cost of `cfg`, if this objective tracks one
+    /// (for events and reports).
+    fn cost_of(&self, _cfg: &QuantConfig) -> Option<f64> {
+        None
+    }
+
+    /// Stable human-readable description; also part of checkpoint
+    /// fingerprints, so resumed runs reject objective changes.
+    fn describe(&self) -> String;
+}
+
+/// The paper's original objective: accuracy ≥ floor, compress to
+/// exhaustion. Reproduces pre-objective search decisions bit-identically.
+#[derive(Debug, Clone, Copy)]
+pub struct AccuracyTarget {
+    floor: f64,
+}
+
+impl AccuracyTarget {
+    pub fn new(floor: f64) -> Self {
+        Self { floor }
+    }
+}
+
+impl Objective for AccuracyTarget {
+    fn accuracy_floor(&self) -> f64 {
+        self.floor
+    }
+
+    fn describe(&self) -> String {
+        format!("accuracy>={}", self.floor)
+    }
+}
+
+/// Accuracy floor plus a relative-latency budget: stop quantizing as soon
+/// as modeled latency drops to `budget` × fp16 baseline.
+pub struct LatencyBudget {
+    floor: f64,
+    budget: f64,
+    cost: Arc<dyn CostModel>,
+}
+
+impl LatencyBudget {
+    pub fn new(floor: f64, budget: f64, cost: Arc<dyn CostModel>) -> Self {
+        Self { floor, budget, cost }
+    }
+}
+
+impl Objective for LatencyBudget {
+    fn accuracy_floor(&self) -> f64 {
+        self.floor
+    }
+
+    fn satisfied(&self, cfg: &QuantConfig) -> bool {
+        self.cost.rel_latency(cfg) <= self.budget
+    }
+
+    fn cost_of(&self, cfg: &QuantConfig) -> Option<f64> {
+        Some(self.cost.rel_latency(cfg))
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "accuracy>={} rel_latency<={} ({})",
+            self.floor,
+            self.budget,
+            self.cost.provenance()
+        )
+    }
+}
+
+/// Accuracy floor plus a relative-size budget: stop quantizing as soon as
+/// model size drops to `budget` × fp16 baseline.
+pub struct FootprintBudget {
+    floor: f64,
+    budget: f64,
+    cost: Arc<dyn CostModel>,
+}
+
+impl FootprintBudget {
+    pub fn new(floor: f64, budget: f64, cost: Arc<dyn CostModel>) -> Self {
+        Self { floor, budget, cost }
+    }
+}
+
+impl Objective for FootprintBudget {
+    fn accuracy_floor(&self) -> f64 {
+        self.floor
+    }
+
+    fn satisfied(&self, cfg: &QuantConfig) -> bool {
+        self.cost.rel_size(cfg) <= self.budget
+    }
+
+    fn cost_of(&self, cfg: &QuantConfig) -> Option<f64> {
+        Some(self.cost.rel_size(cfg))
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "accuracy>={} rel_size<={} ({})",
+            self.floor,
+            self.budget,
+            self.cost.provenance()
+        )
+    }
+}

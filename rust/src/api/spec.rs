@@ -1,0 +1,335 @@
+//! [`SearchSpec`] — the validated, declarative description of one search
+//! run, and the single front door to the system.
+//!
+//! Every entry point (CLI subcommands, report drivers, examples, serving
+//! startup) builds a `SearchSpec` and opens it into a
+//! [`super::ModelContext`] or [`super::SearchSession`] instead of
+//! hand-wiring `Pipeline`/`PipelinePool`/`EvalCache` combinations.
+//!
+//! ```no_run
+//! use mpq::api::SearchSpec;
+//! use mpq::coordinator::SearchAlgo;
+//!
+//! let report = SearchSpec::new("bert_s")
+//!     .algo(SearchAlgo::Greedy)
+//!     .target(0.99)
+//!     .latency_budget(0.7) // stop once modeled latency ≤ 70% of fp16
+//!     .workers(4)
+//!     .checkpoint("bert_s_search.ck.json")
+//!     .open()?
+//!     .run()?;
+//! println!("rel latency {:.1}%", report.rel_latency * 100.0);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::ensure;
+
+use crate::coordinator::SearchAlgo;
+use crate::sensitivity::MetricKind;
+use crate::Result;
+
+use super::{
+    AccuracyTarget, CostModel, FootprintBudget, LatencyBudget, ModelContext, Objective,
+    SearchSession,
+};
+
+/// Default Hutchinson/noise trials for metric computations (the paper's 5).
+pub const DEFAULT_TRIALS: usize = 5;
+
+/// Which objective drives the search (data form; built into a live
+/// [`Objective`] once the accuracy floor and cost model are known).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ObjectiveSpec {
+    /// Accuracy floor only; compress to exhaustion (the paper's setting).
+    AccuracyTarget,
+    /// Accuracy floor + relative latency budget; stop once met.
+    LatencyBudget { rel_latency: f64 },
+    /// Accuracy floor + relative size budget; stop once met.
+    FootprintBudget { rel_size: f64 },
+}
+
+impl ObjectiveSpec {
+    /// Instantiate with a concrete accuracy floor and cost model.
+    pub fn build(&self, floor: f64, cost: Arc<dyn CostModel>) -> Box<dyn Objective> {
+        match *self {
+            ObjectiveSpec::AccuracyTarget => Box::new(AccuracyTarget::new(floor)),
+            ObjectiveSpec::LatencyBudget { rel_latency } => {
+                Box::new(LatencyBudget::new(floor, rel_latency, cost))
+            }
+            ObjectiveSpec::FootprintBudget { rel_size } => {
+                Box::new(FootprintBudget::new(floor, rel_size, cost))
+            }
+        }
+    }
+}
+
+/// Where per-kernel latencies come from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BackendSpec {
+    /// Analytical A100-like roofline (the paper's profiled hardware).
+    A100Like,
+    /// Analytical TPU-v4-like roofline (no int4 math pipeline).
+    TpuLike,
+    /// A measured kernel table (JSON, see
+    /// [`crate::latency::KernelTable::from_json`]); validated at open time
+    /// against the model's layers.
+    MeasuredTable(PathBuf),
+}
+
+/// How stand-in models are scaled for costing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleSpec {
+    /// Scale to the reference deployment footprint
+    /// ([`crate::latency::DeployScale::for_manifest`]).
+    Reference,
+    /// Cost the stand-in architecture as-is.
+    Native,
+}
+
+/// Persistent eval-cache configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheSpec {
+    pub enabled: bool,
+    /// Override path; default `<artifacts>/<model>_evalcache.json`.
+    pub path: Option<PathBuf>,
+    /// Entry bound with last-used-ordered eviction; `None` = unbounded.
+    pub capacity: Option<usize>,
+}
+
+impl Default for CacheSpec {
+    fn default() -> Self {
+        Self { enabled: true, path: None, capacity: None }
+    }
+}
+
+/// A validated description of one search run.
+#[derive(Debug, Clone)]
+pub struct SearchSpec {
+    pub model: String,
+    pub artifacts_dir: Option<PathBuf>,
+    pub algo: SearchAlgo,
+    pub metric: MetricKind,
+    /// Accuracy floor as a fraction of the float baseline, in `(0, 1]`.
+    pub target: f64,
+    pub seed: u64,
+    pub trials: usize,
+    /// Worker pipelines; `1` = single-pipeline sequential-equivalent path.
+    pub workers: usize,
+    pub objective: ObjectiveSpec,
+    pub backend: BackendSpec,
+    pub deploy_scale: ScaleSpec,
+    pub cache: CacheSpec,
+    pub checkpoint: Option<PathBuf>,
+    pub resume: bool,
+}
+
+impl SearchSpec {
+    /// A spec with the paper's defaults: greedy, Hessian guidance, 99%
+    /// relative accuracy target, A100-like analytical costing.
+    pub fn new(model: impl Into<String>) -> Self {
+        Self {
+            model: model.into(),
+            artifacts_dir: None,
+            algo: SearchAlgo::Greedy,
+            metric: MetricKind::Hessian,
+            target: 0.99,
+            seed: 0,
+            trials: DEFAULT_TRIALS,
+            workers: 1,
+            objective: ObjectiveSpec::AccuracyTarget,
+            backend: BackendSpec::A100Like,
+            deploy_scale: ScaleSpec::Reference,
+            cache: CacheSpec::default(),
+            checkpoint: None,
+            resume: false,
+        }
+    }
+
+    pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts_dir = Some(dir.into());
+        self
+    }
+
+    pub fn algo(mut self, algo: SearchAlgo) -> Self {
+        self.algo = algo;
+        self
+    }
+
+    pub fn metric(mut self, metric: MetricKind) -> Self {
+        self.metric = metric;
+        self
+    }
+
+    pub fn target(mut self, target: f64) -> Self {
+        self.target = target;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn trials(mut self, trials: usize) -> Self {
+        self.trials = trials;
+        self
+    }
+
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    pub fn objective(mut self, objective: ObjectiveSpec) -> Self {
+        self.objective = objective;
+        self
+    }
+
+    /// Shorthand for [`ObjectiveSpec::LatencyBudget`].
+    pub fn latency_budget(self, rel_latency: f64) -> Self {
+        self.objective(ObjectiveSpec::LatencyBudget { rel_latency })
+    }
+
+    /// Shorthand for [`ObjectiveSpec::FootprintBudget`].
+    pub fn footprint_budget(self, rel_size: f64) -> Self {
+        self.objective(ObjectiveSpec::FootprintBudget { rel_size })
+    }
+
+    pub fn backend(mut self, backend: BackendSpec) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Use a measured kernel table instead of the analytical roofline.
+    pub fn measured_table(self, path: impl Into<PathBuf>) -> Self {
+        self.backend(BackendSpec::MeasuredTable(path.into()))
+    }
+
+    pub fn deploy_scale(mut self, scale: ScaleSpec) -> Self {
+        self.deploy_scale = scale;
+        self
+    }
+
+    pub fn cache_path(mut self, path: impl Into<PathBuf>) -> Self {
+        self.cache.path = Some(path.into());
+        self
+    }
+
+    /// Bound the persistent eval cache to `capacity` entries
+    /// (last-used-ordered eviction).
+    pub fn cache_capacity(mut self, capacity: usize) -> Self {
+        self.cache.capacity = Some(capacity);
+        self
+    }
+
+    /// Disable the persistent cross-run eval cache.
+    pub fn no_cache(mut self) -> Self {
+        self.cache.enabled = false;
+        self
+    }
+
+    /// Write decision checkpoints to `path` (enables `--resume`).
+    pub fn checkpoint(mut self, path: impl Into<PathBuf>) -> Self {
+        self.checkpoint = Some(path.into());
+        self
+    }
+
+    /// Resume from the checkpoint instead of starting fresh.
+    pub fn resume(mut self, resume: bool) -> Self {
+        self.resume = resume;
+        self
+    }
+
+    /// Check everything that can be checked without touching disk.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.model.is_empty(), "SearchSpec: model name must not be empty");
+        ensure!(
+            self.target.is_finite() && self.target > 0.0 && self.target <= 1.0,
+            "SearchSpec: target must be in (0, 1], got {}",
+            self.target
+        );
+        ensure!(self.workers >= 1, "SearchSpec: workers must be >= 1");
+        ensure!(self.trials >= 1, "SearchSpec: trials must be >= 1");
+        match self.objective {
+            ObjectiveSpec::AccuracyTarget => {}
+            ObjectiveSpec::LatencyBudget { rel_latency } => ensure!(
+                rel_latency.is_finite() && rel_latency > 0.0 && rel_latency <= 1.0,
+                "SearchSpec: latency budget must be in (0, 1], got {rel_latency}"
+            ),
+            ObjectiveSpec::FootprintBudget { rel_size } => ensure!(
+                rel_size.is_finite() && rel_size > 0.0 && rel_size <= 1.0,
+                "SearchSpec: footprint budget must be in (0, 1], got {rel_size}"
+            ),
+        }
+        ensure!(
+            self.cache.capacity != Some(0),
+            "SearchSpec: cache capacity must be >= 1 (use no_cache() to disable caching)"
+        );
+        ensure!(
+            !self.resume || self.checkpoint.is_some(),
+            "SearchSpec: resume requires a checkpoint path"
+        );
+        Ok(())
+    }
+
+    /// The artifacts directory this spec resolves to: the explicit one, or
+    /// the workspace discovery of [`crate::artifacts_dir`].
+    pub fn resolved_artifacts_dir(&self) -> Result<PathBuf> {
+        if let Some(dir) = &self.artifacts_dir {
+            return Ok(dir.clone());
+        }
+        crate::artifacts_dir()
+            .ok_or_else(|| anyhow::anyhow!("no artifacts directory found — run `make artifacts`"))
+    }
+
+    /// Open the model context this spec describes (pipeline + cost model +
+    /// cache configuration), without search bookkeeping.
+    pub fn open_context(self) -> Result<ModelContext> {
+        ModelContext::from_spec(&self)
+    }
+
+    /// Open a full [`SearchSession`].
+    pub fn open(self) -> Result<SearchSession> {
+        SearchSession::open(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        SearchSpec::new("resnet_s").validate().unwrap();
+        SearchSpec::new("resnet_s")
+            .latency_budget(0.7)
+            .workers(8)
+            .cache_capacity(1000)
+            .checkpoint("ck.json")
+            .resume(true)
+            .validate()
+            .unwrap();
+    }
+
+    #[test]
+    fn invalid_specs_are_rejected() {
+        for (spec, what) in [
+            (SearchSpec::new(""), "empty model"),
+            (SearchSpec::new("m").target(0.0), "target 0"),
+            (SearchSpec::new("m").target(1.5), "target > 1"),
+            (SearchSpec::new("m").target(f64::NAN), "NaN target"),
+            (SearchSpec::new("m").workers(0), "0 workers"),
+            (SearchSpec::new("m").trials(0), "0 trials"),
+            (SearchSpec::new("m").latency_budget(0.0), "0 latency budget"),
+            (SearchSpec::new("m").latency_budget(2.0), "latency budget > 1"),
+            (SearchSpec::new("m").footprint_budget(-0.5), "negative size budget"),
+            (SearchSpec::new("m").cache_capacity(0), "0 cache capacity"),
+            (SearchSpec::new("m").resume(true), "resume without checkpoint"),
+        ] {
+            assert!(spec.validate().is_err(), "{what} should be rejected");
+        }
+    }
+}

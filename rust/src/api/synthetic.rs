@@ -1,0 +1,178 @@
+//! Seeded synthetic search environment + cost model.
+//!
+//! Lets the full search API — objectives, budgets, checkpoints, worker
+//! fan-out — run with no artifacts and no device: `mpq search --synthetic
+//! N` uses it for CI smoke runs (including the kill-then-resume step), and
+//! the API tests use it for parity and monotonicity properties.
+//!
+//! The accuracy model is the separable monotone family from the engine's
+//! property tests: quantizing layer `i` to width `b` costs
+//! `penalty[i] * (16 - b) / 12`, accuracy is `1 - Σ cost`. A seeded mix of
+//! mostly-cheap and a few expensive layers produces realistic
+//! accept/reject patterns for both algorithms.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::coordinator::{EvalResult, SyncSearchEnv};
+use crate::quant::QuantConfig;
+use crate::util::rng::Rng;
+use crate::Result;
+
+use super::CostModel;
+
+/// Thread-safe synthetic environment with a known accuracy model.
+pub struct SyntheticEnv {
+    penalty: Vec<f64>,
+    evals: AtomicUsize,
+    /// Error out after this many raw evaluations (simulated interruption).
+    abort_after: Option<usize>,
+}
+
+impl SyntheticEnv {
+    /// `layers` layers with seeded penalties: ~30% expensive (up to 0.2),
+    /// the rest nearly free — the mix that exercises both accept and
+    /// reject chains.
+    pub fn new(layers: usize, seed: u64) -> Self {
+        let mut rng = Rng::seed_from(seed ^ 0x5e17_ca5e);
+        let penalty = (0..layers)
+            .map(|_| if rng.uniform() < 0.3 { rng.uniform() * 0.2 } else { rng.uniform() * 1e-3 })
+            .collect();
+        Self { penalty, evals: AtomicUsize::new(0), abort_after: None }
+    }
+
+    /// Make every evaluation past the `n`-th fail — a deterministic stand-in
+    /// for killing the process mid-search (checkpoint/resume testing).
+    pub fn abort_after(mut self, n: usize) -> Self {
+        self.abort_after = Some(n);
+        self
+    }
+
+    /// Raw evaluations issued so far (speculation included).
+    pub fn evals(&self) -> usize {
+        self.evals.load(Ordering::Relaxed)
+    }
+
+    /// Identity ordering (the synthetic penalties are not sorted, so this
+    /// behaves like a plausible — imperfect — sensitivity ranking).
+    pub fn order(&self) -> Vec<usize> {
+        (0..self.penalty.len()).collect()
+    }
+
+    fn accuracy(&self, cfg: &QuantConfig) -> f64 {
+        let cost: f64 = cfg
+            .bits_w
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| self.penalty[i] * f64::from(16.0 - b) / 12.0)
+            .sum();
+        1.0 - cost
+    }
+}
+
+impl SyncSearchEnv for SyntheticEnv {
+    fn num_layers(&self) -> usize {
+        self.penalty.len()
+    }
+
+    fn eval(&self, cfg: &QuantConfig, _target: Option<f64>) -> Result<EvalResult> {
+        let n = self.evals.fetch_add(1, Ordering::Relaxed);
+        if let Some(limit) = self.abort_after {
+            if n >= limit {
+                anyhow::bail!("synthetic environment aborted after {limit} evaluations");
+            }
+        }
+        let acc = self.accuracy(cfg);
+        Ok(EvalResult { loss: 1.0 - acc, accuracy: acc, exact: true })
+    }
+}
+
+/// Synthetic deployment cost: per-layer weighted mean of the configured
+/// bit widths relative to fp16. Strictly monotone — lowering any layer's
+/// precision lowers both costs — which is exactly the property budget
+/// objectives rely on.
+pub struct SyntheticCost {
+    weights: Vec<f64>,
+}
+
+impl SyntheticCost {
+    /// Seeded per-layer weights in `[0.5, 1.5)`.
+    pub fn new(layers: usize, seed: u64) -> Self {
+        let mut rng = Rng::seed_from(seed ^ 0xc0_57);
+        Self { weights: (0..layers).map(|_| 0.5 + rng.uniform()).collect() }
+    }
+
+    fn weighted_rel(&self, bits: impl Iterator<Item = f64>) -> f64 {
+        let total: f64 = self.weights.iter().sum();
+        if total <= 0.0 {
+            return 1.0;
+        }
+        let cost: f64 = bits.zip(&self.weights).map(|(b, &w)| w * b / 16.0).sum();
+        cost / total
+    }
+}
+
+impl CostModel for SyntheticCost {
+    fn rel_latency(&self, cfg: &QuantConfig) -> f64 {
+        // Latency sees both operand widths (weights stream + activations).
+        self.weighted_rel(
+            cfg.bits_w.iter().zip(&cfg.bits_a).map(|(&w, &a)| (f64::from(w) + f64::from(a)) / 2.0),
+        )
+    }
+
+    fn rel_size(&self, cfg: &QuantConfig) -> f64 {
+        // Size is weights only.
+        self.weighted_rel(cfg.bits_w.iter().map(|&w| f64::from(w)))
+    }
+
+    fn latency_s(&self, cfg: &QuantConfig) -> f64 {
+        self.rel_latency(cfg) * 1e-3
+    }
+
+    fn size_bytes(&self, cfg: &QuantConfig) -> f64 {
+        self.rel_size(cfg) * 1e6
+    }
+
+    fn provenance(&self) -> &str {
+        "synthetic"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_is_deterministic_and_monotone() {
+        let a = SyntheticEnv::new(12, 7);
+        let b = SyntheticEnv::new(12, 7);
+        let float = QuantConfig::float(12);
+        let q8 = QuantConfig::uniform(12, 8.0);
+        assert_eq!(a.eval(&float, None).unwrap(), b.eval(&float, None).unwrap());
+        assert!(a.eval(&q8, None).unwrap().accuracy <= a.eval(&float, None).unwrap().accuracy);
+        assert_eq!(a.evals(), 3);
+    }
+
+    #[test]
+    fn abort_after_fails_deterministically() {
+        let env = SyntheticEnv::new(4, 0).abort_after(2);
+        let cfg = QuantConfig::float(4);
+        assert!(env.eval(&cfg, None).is_ok());
+        assert!(env.eval(&cfg, None).is_ok());
+        assert!(env.eval(&cfg, None).is_err());
+    }
+
+    #[test]
+    fn cost_is_monotone_and_normalized() {
+        let cost = SyntheticCost::new(8, 3);
+        let float = QuantConfig::float(8);
+        assert!((cost.rel_latency(&float) - 1.0).abs() < 1e-12);
+        assert!((cost.rel_size(&float) - 1.0).abs() < 1e-12);
+        let mut one = float.clone();
+        one.set_layer(3, 4.0);
+        assert!(cost.rel_latency(&one) < 1.0);
+        assert!(cost.rel_size(&one) < 1.0);
+        let q4 = QuantConfig::uniform(8, 4.0);
+        assert!((cost.rel_size(&q4) - 0.25).abs() < 1e-12);
+        assert!(cost.rel_latency(&q4) < cost.rel_latency(&one));
+    }
+}

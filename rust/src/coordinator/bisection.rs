@@ -23,24 +23,50 @@
 
 use std::collections::HashMap;
 
+use crate::api::{AccuracyTarget, SearchCtl, SearchEvent};
 use crate::quant::QuantConfig;
 use crate::Result;
 
 use super::{SearchEnv, SearchOutcome};
 
+/// The paper's bisection search under a plain accuracy floor (the
+/// historical entry point — a thin wrapper over [`search_with`]).
 pub fn search<E: SearchEnv>(
     env: &mut E,
     order: &[usize],
     quant_bits: &[f32],
     target: f64,
 ) -> Result<SearchOutcome> {
+    let objective = AccuracyTarget::new(target);
+    let mut ctl = SearchCtl::new(&objective);
+    search_with(env, order, quant_bits, &mut ctl)
+}
+
+/// Bisection search under an arbitrary [`crate::api::Objective`].
+///
+/// Checkpointed probe decisions replay without evaluating; live probes go
+/// through `ctl.decide`. After every *passing* probe the committed prefix
+/// (`lo` only ever grows within a width) is checked against the
+/// objective's budgets, so a budgeted run stops the moment the budget is
+/// met instead of bisecting toward a larger, lower-accuracy prefix. With
+/// [`AccuracyTarget`] the trajectory is bit-identical to the
+/// pre-objective implementation.
+pub fn search_with<E: SearchEnv>(
+    env: &mut E,
+    order: &[usize],
+    quant_bits: &[f32],
+    ctl: &mut SearchCtl<'_>,
+) -> Result<SearchOutcome> {
     let n = env.num_layers();
     assert_eq!(order.len(), n, "ordering must cover every quant layer");
     let window = env.preferred_batch().max(1);
     let mut w = QuantConfig::float(n);
+    if let Some(done) = ctl.baseline_outcome(env, &w)? {
+        return Ok(done);
+    }
     let mut evals = 0usize;
     let mut ll: Vec<usize> = order.to_vec();
-    for &b in quant_bits {
+    'widths: for &b in quant_bits {
         if ll.is_empty() {
             break;
         }
@@ -52,6 +78,31 @@ pub fn search<E: SearchEnv>(
         let mut lo = 0usize;
         let mut hi = ll.len();
         while lo < hi {
+            // Checkpointed probes replay without evaluating; the bisection
+            // trajectory is a deterministic function of the pass/fail
+            // sequence, so replay reproduces (lo, hi) exactly.
+            {
+                let mid = lo + (hi - lo).div_ceil(2);
+                if let Some(pass) = ctl.take_replay(b, mid) {
+                    evals += 1;
+                    if pass {
+                        lo = mid;
+                        // `lo` only ever grows, so a passing prefix is
+                        // committed to the final config of this width; if
+                        // it already meets the budget, stop here rather
+                        // than bisect toward a larger (lower-accuracy)
+                        // prefix.
+                        let committed = with_prefix(&w, &ll, lo, b);
+                        if ctl.satisfied(&committed) {
+                            w = committed;
+                            break 'widths;
+                        }
+                    } else {
+                        hi = mid - 1;
+                    }
+                    continue;
+                }
+            }
             // Breadth-first frontier of the upcoming decision tree: the
             // sequential probe for (lo, hi) first, then the probes both of
             // its outcomes would lead to, and so on up to `window` nodes.
@@ -71,27 +122,28 @@ pub fn search<E: SearchEnv>(
                 states.push((mid, h)); // pass branch
                 states.push((l, mid - 1)); // fail branch
             }
-            let cfgs: Vec<QuantConfig> = mids
-                .iter()
-                .map(|&mid| {
-                    let mut lw = w.clone();
-                    for &layer in &ll[..mid] {
-                        lw.set_layer(layer, b);
-                    }
-                    lw
-                })
-                .collect();
-            let results = env.eval_many(&cfgs, Some(target));
-            let mut by_mid: HashMap<usize, _> = mids.into_iter().zip(results).collect();
+            let cfgs: Vec<QuantConfig> = mids.iter().map(|&m| with_prefix(&w, &ll, m, b)).collect();
+            ctl.emit(SearchEvent::FrontierSubmitted { bits: b, size: cfgs.len() });
+            let results = env.eval_many(&cfgs, ctl.eval_target());
+            let mut by_mid: HashMap<usize, _> =
+                mids.into_iter().zip(cfgs.into_iter().zip(results)).collect();
             // Replay the sequential bisection against the batch; stop when
             // it needs a probe the speculation did not cover.
             while lo < hi {
                 let mid = lo + (hi - lo).div_ceil(2);
-                let Some(r) = by_mid.remove(&mid) else { break };
+                let Some((cfg, r)) = by_mid.remove(&mid) else { break };
                 let r = r?;
                 evals += 1;
-                if r.accuracy >= target {
+                if ctl.decide(b, mid, &cfg, &r)? {
                     lo = mid;
+                    // `cfg` is exactly the current config plus the passing
+                    // prefix, which `lo`'s monotonicity commits to this
+                    // width's outcome — budget met means stop now instead
+                    // of bisecting toward a larger prefix.
+                    if ctl.satisfied(&cfg) {
+                        w = cfg;
+                        break 'widths;
+                    }
                 } else {
                     hi = mid - 1;
                 }
@@ -105,7 +157,22 @@ pub fn search<E: SearchEnv>(
     }
     let final_res = env.eval(&w, None)?;
     evals += 1;
-    Ok(SearchOutcome { config: w, accuracy: final_res.accuracy, evals, target })
+    Ok(SearchOutcome {
+        config: w,
+        accuracy: final_res.accuracy,
+        evals,
+        target: ctl.objective().accuracy_floor(),
+    })
+}
+
+/// `base` with the first `lo` layers of `ll` set to width `bits` — the
+/// prefix configuration bisection probes and commits.
+fn with_prefix(base: &QuantConfig, ll: &[usize], lo: usize, bits: f32) -> QuantConfig {
+    let mut c = base.clone();
+    for &layer in &ll[..lo] {
+        c.set_layer(layer, bits);
+    }
+    c
 }
 
 #[cfg(test)]

@@ -25,22 +25,46 @@ use crate::Result;
 
 use super::EvalResult;
 
-/// Schema version of the on-disk format.
+/// Schema version of the on-disk format. Version 1 files without
+/// recency/stats fields load fine (fields default to zero).
 pub const EVAL_CACHE_VERSION: u64 = 1;
 
-/// One `{key, loss, accuracy}` row of the on-disk entry array.
-fn parse_row(row: &Value) -> Result<(u64, f64, f64)> {
-    let key = u64::from_str_radix(row.req("key")?.as_str()?, 16).context("bad cache key")?;
-    Ok((key, row.req("loss")?.as_f64()?, row.req("accuracy")?.as_f64()?))
+/// One stored result with its last-used tick (for LRU eviction).
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    loss: f64,
+    accuracy: f64,
+    lu: u64,
 }
 
-/// A persistent config-key -> exact-[`EvalResult`] map.
+/// One `{key, loss, accuracy[, lu]}` row of the on-disk entry array.
+fn parse_row(row: &Value) -> Result<(u64, Entry)> {
+    let key = u64::from_str_radix(row.req("key")?.as_str()?, 16).context("bad cache key")?;
+    let lu = row.get("lu").and_then(|v| v.as_u64().ok()).unwrap_or(0);
+    let loss = row.req("loss")?.as_f64()?;
+    let accuracy = row.req("accuracy")?.as_f64()?;
+    Ok((key, Entry { loss, accuracy, lu }))
+}
+
+/// A persistent config-key -> exact-[`EvalResult`] map with an optional
+/// entry bound. When bounded, insertions beyond the capacity evict the
+/// least-recently-used entries (lookups refresh recency, and recency
+/// survives restarts via the persisted `lu` ticks). Cumulative hit and
+/// eviction counts are persisted alongside the entries.
 #[derive(Debug)]
 pub struct EvalCache {
     path: PathBuf,
     context: String,
-    entries: HashMap<u64, (f64, f64)>, // key -> (loss, accuracy)
+    entries: HashMap<u64, Entry>,
+    /// Monotone recency clock; next tick to assign.
+    tick: u64,
+    /// Entry bound; `None` = unbounded.
+    capacity: Option<usize>,
     hits: usize,
+    evictions: usize,
+    /// Lifetime counters loaded from disk (pre-this-process totals).
+    prior_hits: u64,
+    prior_evictions: u64,
     dirty: bool,
 }
 
@@ -49,40 +73,111 @@ impl EvalCache {
     /// missing, unreadable, corrupt or context-mismatched file yields an
     /// empty cache (never an error — the cache is an optimization).
     pub fn load(path: &Path, context: &str) -> Self {
+        Self::with_capacity(path, context, None)
+    }
+
+    /// [`EvalCache::load`] with an entry bound: the cache holds at most
+    /// `capacity` entries, evicting least-recently-used ones on insert
+    /// (applied immediately to an oversized loaded file too).
+    pub fn with_capacity(path: &Path, context: &str, capacity: Option<usize>) -> Self {
         let mut cache = Self {
             path: path.to_path_buf(),
             context: context.to_string(),
             entries: HashMap::new(),
+            tick: 1,
+            capacity: None,
             hits: 0,
+            evictions: 0,
+            prior_hits: 0,
+            prior_evictions: 0,
             dirty: false,
         };
-        let Ok(text) = std::fs::read_to_string(path) else {
-            return cache;
-        };
-        let Ok(v) = json::parse(&text) else {
-            return cache;
-        };
-        let version_ok = v.get("version").map(|x| x.as_u64().ok() == Some(EVAL_CACHE_VERSION));
-        let context_ok = v.get("context").map(|x| x.as_str().ok() == Some(context));
-        if version_ok != Some(true) || context_ok != Some(true) {
-            return cache;
-        }
-        let Some(Ok(rows)) = v.get("entries").map(|e| e.as_arr()) else {
-            return cache;
-        };
-        for row in rows {
-            if let Ok((key, loss, acc)) = parse_row(row) {
-                cache.entries.insert(key, (loss, acc));
+        'parse: {
+            let Ok(text) = std::fs::read_to_string(path) else {
+                break 'parse;
+            };
+            let Ok(v) = json::parse(&text) else {
+                break 'parse;
+            };
+            let version_ok = v.get("version").map(|x| x.as_u64().ok() == Some(EVAL_CACHE_VERSION));
+            let context_ok = v.get("context").map(|x| x.as_str().ok() == Some(context));
+            if version_ok != Some(true) || context_ok != Some(true) {
+                break 'parse;
+            }
+            if let Some(stats) = v.get("stats") {
+                cache.prior_hits = stats.get("hits").and_then(|x| x.as_u64().ok()).unwrap_or(0);
+                cache.prior_evictions =
+                    stats.get("evictions").and_then(|x| x.as_u64().ok()).unwrap_or(0);
+            }
+            let Some(Ok(rows)) = v.get("entries").map(|e| e.as_arr()) else {
+                break 'parse;
+            };
+            for row in rows {
+                if let Ok((key, entry)) = parse_row(row) {
+                    cache.tick = cache.tick.max(entry.lu + 1);
+                    cache.entries.insert(key, entry);
+                }
             }
         }
+        cache.set_capacity(capacity);
         cache
     }
 
+    /// (Re)bound the cache; an over-capacity cache evicts immediately.
+    pub fn set_capacity(&mut self, capacity: Option<usize>) {
+        self.capacity = capacity;
+        self.enforce_capacity();
+    }
+
+    /// The configured entry bound, if any.
+    pub fn capacity(&self) -> Option<usize> {
+        self.capacity
+    }
+
+    fn enforce_capacity(&mut self) {
+        let Some(cap) = self.capacity else {
+            return;
+        };
+        if self.entries.len() <= cap {
+            return;
+        }
+        // Evict least-recently-used first; key breaks tick ties so the
+        // result is deterministic for a given operation sequence.
+        let excess = self.entries.len() - cap;
+        if excess == 1 {
+            // Steady-state insert path: one min-scan, no sort/allocation.
+            if let Some((_, key)) = self.entries.iter().map(|(&k, e)| (e.lu, k)).min() {
+                self.entries.remove(&key);
+            }
+        } else {
+            // Bulk case (capacity applied to an oversized loaded file).
+            let mut by_age: Vec<(u64, u64)> =
+                self.entries.iter().map(|(&k, e)| (e.lu, k)).collect();
+            by_age.sort_unstable();
+            for &(_, key) in &by_age[..excess] {
+                self.entries.remove(&key);
+            }
+        }
+        self.evictions += excess;
+        self.dirty = true;
+    }
+
     /// Look up a configuration key; exact results satisfy any target.
+    /// Hits refresh the entry's recency; for *bounded* caches the refresh
+    /// is persisted (so cross-run LRU order survives restarts) — an
+    /// unbounded cache never consults recency, so a fully-cached run
+    /// stays clean and skips the file rewrite entirely.
     pub fn lookup(&mut self, key: u64) -> Option<EvalResult> {
-        let &(loss, accuracy) = self.entries.get(&key)?;
+        let tick = self.tick;
+        let bounded = self.capacity.is_some();
+        let entry = self.entries.get_mut(&key)?;
+        entry.lu = tick;
+        self.tick += 1;
         self.hits += 1;
-        Some(EvalResult { loss, accuracy, exact: true })
+        if bounded {
+            self.dirty = true;
+        }
+        Some(EvalResult { loss: entry.loss, accuracy: entry.accuracy, exact: true })
     }
 
     /// Record a result. Inexact (early-exited) results are ignored — their
@@ -91,9 +186,25 @@ impl EvalCache {
         if !result.exact {
             return;
         }
-        let entry = (result.loss, result.accuracy);
-        if self.entries.insert(key, entry) != Some(entry) {
-            self.dirty = true;
+        let tick = self.tick;
+        self.tick += 1;
+        let bounded = self.capacity.is_some();
+        match self.entries.get_mut(&key) {
+            // Identical re-insert only refreshes recency: the entry set is
+            // unchanged, so an unbounded cache stays clean (a bounded one
+            // persists the refresh — LRU order matters there).
+            Some(e) if e.loss == result.loss && e.accuracy == result.accuracy => {
+                e.lu = tick;
+                if bounded {
+                    self.dirty = true;
+                }
+            }
+            _ => {
+                let entry = Entry { loss: result.loss, accuracy: result.accuracy, lu: tick };
+                self.entries.insert(key, entry);
+                self.dirty = true;
+                self.enforce_capacity();
+            }
         }
     }
 
@@ -111,16 +222,31 @@ impl EvalCache {
         self.hits
     }
 
+    /// Entries evicted by the capacity bound since load.
+    pub fn evictions(&self) -> usize {
+        self.evictions
+    }
+
+    /// Lifetime hits across all runs (persisted stats + this run).
+    pub fn lifetime_hits(&self) -> u64 {
+        self.prior_hits + self.hits as u64
+    }
+
+    /// Lifetime evictions across all runs (persisted stats + this run).
+    pub fn lifetime_evictions(&self) -> u64 {
+        self.prior_evictions + self.evictions as u64
+    }
+
     /// The context fingerprint this cache is bound to.
     pub fn context(&self) -> &str {
         &self.context
     }
 
     /// Write back if anything changed. Keys are emitted in sorted order so
-    /// the file is deterministic for a given entry set. The write goes to
-    /// a temp file in the same directory followed by an atomic rename, so
-    /// a crash mid-write leaves either the old file or the new one —
-    /// never a truncated cache that poisons every later run.
+    /// the file is deterministic for a given operation sequence. The write
+    /// goes to a temp file in the same directory followed by an atomic
+    /// rename, so a crash mid-write leaves either the old file or the new
+    /// one — never a truncated cache that poisons every later run.
     pub fn save(&mut self) -> Result<()> {
         if !self.dirty {
             return Ok(());
@@ -130,17 +256,25 @@ impl EvalCache {
         let rows: Vec<Value> = keys
             .into_iter()
             .map(|k| {
-                let (loss, acc) = self.entries[&k];
+                let e = self.entries[&k];
                 Value::obj(vec![
                     ("key", Value::Str(format!("{k:016x}"))),
-                    ("loss", Value::Num(loss)),
-                    ("accuracy", Value::Num(acc)),
+                    ("loss", Value::Num(e.loss)),
+                    ("accuracy", Value::Num(e.accuracy)),
+                    ("lu", Value::Num(e.lu as f64)),
                 ])
             })
             .collect();
         let v = Value::obj(vec![
             ("version", Value::Num(EVAL_CACHE_VERSION as f64)),
             ("context", Value::Str(self.context.clone())),
+            (
+                "stats",
+                Value::obj(vec![
+                    ("hits", Value::Num(self.lifetime_hits() as f64)),
+                    ("evictions", Value::Num(self.lifetime_evictions() as f64)),
+                ]),
+            ),
             ("entries", Value::Arr(rows)),
         ]);
         let file_name = self
@@ -251,6 +385,69 @@ mod tests {
         std::fs::write(&path, "{not json").unwrap();
         let c = EvalCache::load(&path, "ctx");
         assert!(c.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn capacity_bound_evicts_least_recently_used() {
+        let path = tmp("lru");
+        let _ = std::fs::remove_file(&path);
+        let mut c = EvalCache::with_capacity(&path, "ctx", Some(2));
+        c.insert(1, &exact(0.1, 0.9));
+        c.insert(2, &exact(0.2, 0.8));
+        // Refresh 1, then insert 3: 2 is now the least recently used.
+        assert!(c.lookup(1).is_some());
+        c.insert(3, &exact(0.3, 0.7));
+        assert_eq!(c.len(), 2);
+        assert!(c.lookup(2).is_none(), "LRU entry should have been evicted");
+        assert!(c.lookup(1).is_some());
+        assert!(c.lookup(3).is_some());
+        assert_eq!(c.evictions(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn recency_and_stats_survive_reload() {
+        let path = tmp("lru_persist");
+        let _ = std::fs::remove_file(&path);
+        let mut c = EvalCache::with_capacity(&path, "ctx", Some(2));
+        c.insert(1, &exact(0.1, 0.9));
+        c.insert(2, &exact(0.2, 0.8));
+        assert!(c.lookup(1).is_some()); // 1 newer than 2 on disk
+        c.save().unwrap();
+        assert_eq!(c.lifetime_hits(), 1);
+
+        let mut re = EvalCache::with_capacity(&path, "ctx", Some(2));
+        assert_eq!(re.lifetime_hits(), 1, "persisted hit stats should reload");
+        re.insert(3, &exact(0.3, 0.7));
+        assert!(re.lookup(2).is_none(), "cross-run LRU order should evict 2");
+        assert!(re.lookup(1).is_some());
+        re.save().unwrap();
+
+        let re2 = EvalCache::load(&path, "ctx");
+        assert_eq!(re2.lifetime_evictions(), 1, "persisted eviction stats should reload");
+        assert_eq!(re2.lifetime_hits(), 2, "1 persisted + 1 from the second run");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn oversized_file_trimmed_at_load_and_unbounded_by_default() {
+        let path = tmp("trim");
+        let _ = std::fs::remove_file(&path);
+        let mut c = EvalCache::load(&path, "ctx");
+        for k in 0..10u64 {
+            c.insert(k, &exact(0.0, 1.0));
+        }
+        assert_eq!(c.len(), 10, "unbounded by default");
+        c.save().unwrap();
+        let trimmed = EvalCache::with_capacity(&path, "ctx", Some(4));
+        assert_eq!(trimmed.len(), 4);
+        assert_eq!(trimmed.evictions(), 6);
+        // The newest inserts survive (ticks 7..10 beat 1..6).
+        let mut trimmed = trimmed;
+        for k in 6..10u64 {
+            assert!(trimmed.lookup(k).is_some(), "key {k} should survive");
+        }
         let _ = std::fs::remove_file(&path);
     }
 

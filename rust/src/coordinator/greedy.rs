@@ -30,6 +30,7 @@
 //! accuracy and decision-eval count bit-identical at every worker count;
 //! only discarded speculative work varies.
 
+use crate::api::{AccuracyTarget, SearchCtl, SearchEvent};
 use crate::quant::QuantConfig;
 use crate::Result;
 
@@ -45,40 +46,87 @@ enum Spec {
     Independent,
 }
 
+/// The paper's greedy search under a plain accuracy floor (the historical
+/// entry point — a thin wrapper over [`search_with`]).
 pub fn search<E: SearchEnv>(
     env: &mut E,
     order: &[usize],
     quant_bits: &[f32],
     target: f64,
 ) -> Result<SearchOutcome> {
+    let objective = AccuracyTarget::new(target);
+    let mut ctl = SearchCtl::new(&objective);
+    search_with(env, order, quant_bits, &mut ctl)
+}
+
+/// Greedy search under an arbitrary [`crate::api::Objective`].
+///
+/// Every decision point consults the control surface: recorded checkpoint
+/// decisions are replayed without touching the environment, live decisions
+/// go through `ctl.decide` (objective accept test + checkpoint append +
+/// event), and after each accepted layer `ctl.satisfied` may stop the
+/// search once the objective's budgets are met. With
+/// [`AccuracyTarget`] (never satisfied, accept == the accuracy test) the
+/// trajectory is bit-identical to the pre-objective implementation.
+pub fn search_with<E: SearchEnv>(
+    env: &mut E,
+    order: &[usize],
+    quant_bits: &[f32],
+    ctl: &mut SearchCtl<'_>,
+) -> Result<SearchOutcome> {
     let n = env.num_layers();
     assert_eq!(order.len(), n, "ordering must cover every quant layer");
     let window = env.preferred_batch().max(1);
     let mut w = QuantConfig::float(n);
+    if let Some(done) = ctl.baseline_outcome(env, &w)? {
+        return Ok(done);
+    }
     let mut evals = 0usize;
     // ll: layers still eligible for further quantization, sensitivity order.
     let mut ll: Vec<usize> = order.to_vec();
     // Most layers survive the first (highest) width, so start optimistic.
     let mut mode = Spec::Cumulative;
-    for &b in quant_bits {
+    'widths: for &b in quant_bits {
         let mut ql = Vec::with_capacity(ll.len());
         let mut i = 0usize;
         while i < ll.len() {
+            // Checkpointed decisions replay without evaluating; they count
+            // as decision evals so resumed totals match uninterrupted runs.
+            if let Some(pass) = ctl.take_replay(b, ll[i]) {
+                evals += 1;
+                if pass {
+                    w.set_layer(ll[i], b);
+                    ql.push(ll[i]);
+                }
+                mode = if pass { Spec::Cumulative } else { Spec::Independent };
+                i += 1;
+                if pass && ctl.satisfied(&w) {
+                    break 'widths;
+                }
+                continue;
+            }
             let pending = &ll[i..(i + window).min(ll.len())];
             let cfgs = speculate(&w, pending, b, mode);
-            let results = env.eval_many(&cfgs, Some(target));
+            ctl.emit(SearchEvent::FrontierSubmitted { bits: b, size: cfgs.len() });
+            let results = env.eval_many(&cfgs, ctl.eval_target());
             let mut consumed = 0usize;
             for (j, r) in results.into_iter().enumerate() {
                 let r = r?;
                 evals += 1;
                 consumed = j + 1;
-                let pass = r.accuracy >= target;
+                // Consumed candidates are exactly the configurations the
+                // sequential search would have evaluated, so `cfgs[j]` is
+                // the sequential config at this decision.
+                let pass = ctl.decide(b, pending[j], &cfgs[j], &r)?;
                 if pass {
                     // The sequential config at this decision includes the
                     // layer (and, in cumulative mode, its predecessors —
                     // already applied on their own accepts).
                     w.set_layer(pending[j], b);
                     ql.push(pending[j]);
+                }
+                if pass && ctl.satisfied(&w) {
+                    break 'widths;
                 }
                 // A result at j+1 is only sequential-valid if decision j
                 // went the way the speculation mode assumed.
@@ -97,7 +145,12 @@ pub fn search<E: SearchEnv>(
     }
     let final_res: EvalResult = env.eval(&w, None)?;
     evals += 1;
-    Ok(SearchOutcome { config: w, accuracy: final_res.accuracy, evals, target })
+    Ok(SearchOutcome {
+        config: w,
+        accuracy: final_res.accuracy,
+        evals,
+        target: ctl.objective().accuracy_floor(),
+    })
 }
 
 /// Build one speculative frontier over `pending` layers at width `bits`.

@@ -101,7 +101,8 @@ impl SearchAlgo {
     }
 
     /// Run this algorithm with a sensitivity ordering (ascending — least
-    /// sensitive first) over the quantized bit widths.
+    /// sensitive first) over the quantized bit widths, under a plain
+    /// accuracy floor (the paper's objective).
     pub fn run<E: SearchEnv>(
         self,
         env: &mut E,
@@ -112,6 +113,34 @@ impl SearchAlgo {
         match self {
             SearchAlgo::Bisection => bisection::search(env, order, quant_bits, target),
             SearchAlgo::Greedy => greedy::search(env, order, quant_bits, target),
+        }
+    }
+
+    /// Run under an arbitrary objective/observer/checkpoint control
+    /// surface (see [`crate::api::SearchCtl`] and
+    /// [`crate::api::run_search`]).
+    pub fn run_with<E: SearchEnv>(
+        self,
+        env: &mut E,
+        order: &[usize],
+        quant_bits: &[f32],
+        ctl: &mut crate::api::SearchCtl<'_>,
+    ) -> Result<SearchOutcome> {
+        match self {
+            SearchAlgo::Bisection => bisection::search_with(env, order, quant_bits, ctl),
+            SearchAlgo::Greedy => greedy::search_with(env, order, quant_bits, ctl),
+        }
+    }
+}
+
+impl std::str::FromStr for SearchAlgo {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "greedy" => Ok(SearchAlgo::Greedy),
+            "bisection" => Ok(SearchAlgo::Bisection),
+            other => anyhow::bail!("unknown algo `{other}` (greedy|bisection)"),
         }
     }
 }

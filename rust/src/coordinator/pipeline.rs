@@ -199,13 +199,30 @@ impl Pipeline {
     /// touching the device and recorded after full evaluations; the cache
     /// is written back on [`Pipeline::flush_eval_cache`] and on drop.
     pub fn attach_eval_cache(&mut self, path: &Path) {
-        self.eval_cache = Some(EvalCache::load(path, &self.eval_context()));
+        self.attach_eval_cache_bounded(path, None);
+    }
+
+    /// [`Pipeline::attach_eval_cache`] with an entry bound: at most
+    /// `capacity` results are kept, evicting least-recently-used ones.
+    pub fn attach_eval_cache_bounded(&mut self, path: &Path, capacity: Option<usize>) {
+        self.eval_cache = Some(EvalCache::with_capacity(path, &self.eval_context(), capacity));
     }
 
     /// Persist the attached eval cache, if any.
     pub fn flush_eval_cache(&mut self) -> Result<()> {
         match self.eval_cache.as_mut() {
             Some(cache) => cache.save(),
+            None => Ok(()),
+        }
+    }
+
+    /// Flush and detach the persistent cache. Use while another component
+    /// (e.g. a [`super::PipelinePool`]) temporarily owns the cache file —
+    /// a detached pipeline can no longer clobber it with a stale copy on
+    /// flush or drop. Re-attach afterwards to pick the new contents up.
+    pub fn detach_eval_cache(&mut self) -> Result<()> {
+        match self.eval_cache.take() {
+            Some(mut cache) => cache.save(),
             None => Ok(()),
         }
     }

@@ -36,11 +36,15 @@ struct SharedCache {
     memo: Mutex<HashMap<u64, EvalResult>>,
     /// Optional cross-run cache (exact results only, context-guarded).
     persistent: Mutex<Option<EvalCache>>,
+    /// Lookups answered by the shared memo (persistent hits are counted
+    /// by the [`EvalCache`] itself).
+    memo_hits: std::sync::atomic::AtomicUsize,
 }
 
 impl SharedCache {
     fn lookup(&self, key: u64) -> Option<EvalResult> {
         if let Some(hit) = self.memo.lock().unwrap().get(&key).copied() {
+            self.memo_hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             return Some(hit);
         }
         let mut guard = self.persistent.lock().unwrap();
@@ -109,6 +113,7 @@ impl PipelinePool {
         let shared = Arc::new(SharedCache {
             memo: Mutex::new(HashMap::new()),
             persistent: Mutex::new(None),
+            memo_hits: std::sync::atomic::AtomicUsize::new(0),
         });
         let configure: Arc<dyn Fn(&mut Pipeline) -> Result<()> + Send + Sync> = Arc::new(configure);
         // Spawn every worker before waiting on any readiness signal, so the
@@ -186,12 +191,14 @@ impl PipelinePool {
         }
     }
 
-    /// Attach a persistent cross-run cache shared by all workers. The
-    /// context fingerprint must come from one of the (identically
-    /// configured) worker pipelines; use [`Pipeline::eval_context`] on a
-    /// scratch pipeline, or pass any stable string covering model + scales.
-    pub fn attach_eval_cache(&self, path: &Path, context: &str) {
-        *self.shared.persistent.lock().unwrap() = Some(EvalCache::load(path, context));
+    /// Attach a persistent cross-run cache shared by all workers, with an
+    /// optional entry bound (LRU eviction). The context fingerprint must
+    /// come from one of the (identically configured) worker pipelines; use
+    /// [`Pipeline::eval_context`] on a scratch pipeline, or pass any
+    /// stable string covering model + scales.
+    pub fn attach_eval_cache(&self, path: &Path, context: &str, capacity: Option<usize>) {
+        *self.shared.persistent.lock().unwrap() =
+            Some(EvalCache::with_capacity(path, context, capacity));
     }
 
     /// Persist the shared cache, if attached.
@@ -205,6 +212,15 @@ impl PipelinePool {
     /// Evaluations that actually reached a worker (cache misses).
     pub fn dispatched(&self) -> usize {
         self.dispatched
+    }
+
+    /// Lookups answered without touching a device:
+    /// `(shared memo hits, persistent cross-run cache hits)`.
+    pub fn cache_hits(&self) -> (usize, usize) {
+        let memo = self.shared.memo_hits.load(std::sync::atomic::Ordering::Relaxed);
+        let persistent =
+            self.shared.persistent.lock().unwrap().as_ref().map_or(0, EvalCache::hits);
+        (memo, persistent)
     }
 
     fn submit(&mut self, cfgs: &[QuantConfig], target: Option<f64>) -> Vec<Result<EvalResult>> {

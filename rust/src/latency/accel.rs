@@ -35,6 +35,8 @@ impl Precision {
 /// hardware the paper profiled with CUTLASS.
 #[derive(Debug, Clone)]
 pub struct AccelModel {
+    /// Stable backend name, recorded in cost-model provenance.
+    pub name: &'static str,
     /// Peak MACs/s at fp16 (A100: 312 TFLOPS ≈ 156e12 MAC/s dense).
     pub peak_mac_fp16: f64,
     /// Peak MACs/s at int8 (624 TOPS ≈ 312e12 MAC/s).
@@ -53,6 +55,7 @@ impl AccelModel {
     /// The default substitution target (see DESIGN.md §2).
     pub fn a100_like() -> Self {
         Self {
+            name: "a100-like",
             peak_mac_fp16: 156e12,
             peak_mac_int8: 312e12,
             peak_mac_int4: 624e12,
@@ -67,6 +70,7 @@ impl AccelModel {
     /// compute but still enjoys int4 memory traffic).
     pub fn tpu_like() -> Self {
         Self {
+            name: "tpu-like",
             peak_mac_fp16: 137.5e12,
             peak_mac_int8: 275e12,
             peak_mac_int4: 275e12,

@@ -81,6 +81,12 @@ impl DeployScale {
 
 /// Composes per-layer kernel latencies + parameter bytes into model-level
 /// latency/size, absolute and relative to the fp16 baseline.
+///
+/// The per-kernel numbers come either from the analytical roofline
+/// ([`CostModel::with_scale`], the paper's substituted profiler) or from a
+/// measured [`KernelTable`] file ([`CostModel::with_table`]); the
+/// provenance of whichever source built the model travels into reports.
+/// Implements [`crate::api::CostModel`], the trait objectives consume.
 pub struct CostModel {
     table: KernelTable,
     layers: Vec<LayerInfo>,
@@ -89,6 +95,9 @@ pub struct CostModel {
     /// fp16 baselines, computed once.
     base_latency_s: f64,
     base_size_bytes: f64,
+    /// Where the kernel latencies come from (`analytical/<accel>` or
+    /// `measured/<file>`).
+    provenance: String,
 }
 
 impl CostModel {
@@ -100,18 +109,55 @@ impl CostModel {
     pub fn with_scale(manifest: &Manifest, accel: &AccelModel, scale: DeployScale) -> Self {
         let layers: Vec<LayerInfo> = manifest.layers.iter().map(|l| scale.apply(l)).collect();
         let table = KernelTable::profile(accel, &layers);
+        Self::assemble(manifest, table, layers, scale, format!("analytical/{}", accel.name))
+    }
+
+    /// Cost model over a measured kernel table (e.g. loaded with
+    /// [`KernelTable::from_json`]). The table must cover every layer ×
+    /// [`crate::quant::BitWidth`] pair at deployment scale — validated up
+    /// front so a sparse file fails here, with the missing kernel named,
+    /// instead of panicking mid-search.
+    pub fn with_table(
+        manifest: &Manifest,
+        table: KernelTable,
+        scale: DeployScale,
+        provenance: impl Into<String>,
+    ) -> crate::Result<Self> {
+        let layers: Vec<LayerInfo> = manifest.layers.iter().map(|l| scale.apply(l)).collect();
+        table.validate_for(&layers)?;
+        Ok(Self::assemble(manifest, table, layers, scale, provenance.into()))
+    }
+
+    fn assemble(
+        manifest: &Manifest,
+        table: KernelTable,
+        layers: Vec<LayerInfo>,
+        scale: DeployScale,
+        provenance: String,
+    ) -> Self {
         // Non-layer parameters (biases, norms) scale like s; layer weights
         // like s^2 (already applied). Total = scaled weights + scaled rest.
         let weight_elems: u64 = manifest.layers.iter().map(|l| l.weight_numel).sum();
         let rest = manifest.total_param_elems() as f64 - weight_elems as f64;
         let scaled_weights: u64 = layers.iter().map(|l| l.weight_numel).sum();
         let total_param_elems = scaled_weights + (rest * scale.s) as u64;
-        let mut cm =
-            Self { table, layers, total_param_elems, base_latency_s: 0.0, base_size_bytes: 0.0 };
+        let mut cm = Self {
+            table,
+            layers,
+            total_param_elems,
+            base_latency_s: 0.0,
+            base_size_bytes: 0.0,
+            provenance,
+        };
         let float_cfg = QuantConfig::float(manifest.num_quant_layers);
         cm.base_latency_s = cm.latency_s(&float_cfg);
         cm.base_size_bytes = cm.size_bytes(&float_cfg);
         cm
+    }
+
+    /// Where this model's kernel latencies come from.
+    pub fn provenance(&self) -> &str {
+        &self.provenance
     }
 
     /// End-to-end model latency (seconds, batch 1) for a configuration.
@@ -166,6 +212,30 @@ impl CostModel {
 
     pub fn table(&self) -> &KernelTable {
         &self.table
+    }
+}
+
+impl crate::api::CostModel for CostModel {
+    fn rel_latency(&self, cfg: &QuantConfig) -> f64 {
+        // Inherent methods take precedence, so these delegate to the
+        // struct's own implementations above.
+        self.rel_latency(cfg)
+    }
+
+    fn rel_size(&self, cfg: &QuantConfig) -> f64 {
+        self.rel_size(cfg)
+    }
+
+    fn latency_s(&self, cfg: &QuantConfig) -> f64 {
+        self.latency_s(cfg)
+    }
+
+    fn size_bytes(&self, cfg: &QuantConfig) -> f64 {
+        self.size_bytes(cfg)
+    }
+
+    fn provenance(&self) -> &str {
+        self.provenance()
     }
 }
 
@@ -254,6 +324,42 @@ mod tests {
         let f = QuantConfig::float(2);
         assert!((cm.rel_latency(&f) - 1.0).abs() < 1e-12);
         assert!((cm.rel_size(&f) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn measured_table_drops_in_beside_analytical() {
+        let m = manifest();
+        let analytical = CostModel::new(&m, &AccelModel::a100_like());
+        assert_eq!(analytical.provenance(), "analytical/a100-like");
+        // Round-trip the analytical table through JSON and load it back as
+        // a "measured" table: costs must be identical, provenance must
+        // record the new source.
+        let json = analytical.table().to_json().unwrap();
+        let table = KernelTable::from_json(&json).unwrap();
+        let measured =
+            CostModel::with_table(&m, table, DeployScale::for_manifest(&m), "measured/t.json")
+                .unwrap();
+        assert_eq!(measured.provenance(), "measured/t.json");
+        for bits in [4.0f32, 8.0, 16.0] {
+            let cfg = QuantConfig::uniform(2, bits);
+            assert_eq!(measured.latency_s(&cfg), analytical.latency_s(&cfg), "{bits}b");
+            assert_eq!(measured.size_bytes(&cfg), analytical.size_bytes(&cfg), "{bits}b");
+        }
+    }
+
+    #[test]
+    fn sparse_measured_table_rejected_up_front() {
+        let m = manifest();
+        // A table profiled for a different kernel shape covers none of the
+        // manifest's layers; the error must name the first uncovered one.
+        let scale = DeployScale::for_manifest(&m);
+        let mut foreign = scale.apply(&m.layers[0]);
+        foreign.n += 1;
+        let sparse = KernelTable::profile(&AccelModel::a100_like(), &[foreign]);
+        let err = CostModel::with_table(&m, sparse, scale, "measured/sparse.json")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("`l0`"), "error should name the missing layer: {err}");
     }
 
     #[test]

@@ -101,7 +101,9 @@ impl KernelTable {
     }
 
     /// Serialize (e.g. to ship alongside artifacts, or to diff against a
-    /// future measured table).
+    /// measured table). Emits an object with `out_bytes_per_elem` and an
+    /// `entries` array; [`KernelTable::from_json`] reads this form and the
+    /// older bare-array form.
     pub fn to_json(&self) -> crate::Result<String> {
         use crate::util::json::Value;
         let mut rows: Vec<&KernelKey> = self.entries.keys().collect();
@@ -121,7 +123,95 @@ impl KernelTable {
                 })
                 .collect(),
         );
-        Ok(arr.to_string())
+        let v = Value::obj(vec![
+            ("out_bytes_per_elem", Value::Num(self.out_bytes_per_elem)),
+            ("entries", arr),
+        ]);
+        Ok(v.to_string())
+    }
+
+    /// Parse a serialized kernel table — the object form written by
+    /// [`KernelTable::to_json`], or a bare entry array (measured tables
+    /// produced by external profilers). Every row must carry the full key
+    /// plus a positive `latency_s`.
+    pub fn from_json(text: &str) -> crate::Result<Self> {
+        use crate::util::json;
+        let v = json::parse(text)?;
+        let (rows, out_bytes_per_elem) = match v.get("entries") {
+            Some(entries) => (
+                entries.as_arr()?,
+                v.get("out_bytes_per_elem").map_or(Ok(2.0), |b| b.as_f64())?,
+            ),
+            None => (v.as_arr()?, 2.0),
+        };
+        let mut entries = HashMap::new();
+        for row in rows {
+            let key = KernelKey {
+                kind: row.req("kind")?.as_str()?.to_string(),
+                m: row.req("m")?.as_u64()?,
+                n: row.req("n")?.as_u64()?,
+                k: row.req("k")?.as_u64()?,
+                weight_bits: row.req("weight_bits")?.as_u64()? as u32,
+                act_bits: row.req("act_bits")?.as_u64()? as u32,
+            };
+            let lat = row.req("latency_s")?.as_f64()?;
+            anyhow::ensure!(
+                lat.is_finite() && lat > 0.0,
+                "kernel table: non-positive latency {lat} for {} m={} n={} k={} w{}a{}",
+                key.kind,
+                key.m,
+                key.n,
+                key.k,
+                key.weight_bits,
+                key.act_bits
+            );
+            anyhow::ensure!(
+                entries.insert(key.clone(), lat).is_none(),
+                "kernel table: duplicate entry for {} m={} n={} k={} w{}a{}",
+                key.kind,
+                key.m,
+                key.n,
+                key.k,
+                key.weight_bits,
+                key.act_bits
+            );
+        }
+        Ok(Self { entries, out_bytes_per_elem })
+    }
+
+    /// Check that this table covers every `layers` kernel shape at every
+    /// supported [`BitWidth`] pair, with a clear error naming the first
+    /// missing kernel. Run before a measured table replaces the analytical
+    /// one, so a sparse file fails at load time instead of panicking
+    /// mid-search.
+    ///
+    /// The full weight × activation grid is required deliberately: the
+    /// searches assign `w == a` and the weight-only ablation prices
+    /// `(w, fp16)`, but hand-built configurations (CLI evals, benches)
+    /// may set any pair, and [`KernelTable::lookup`] panics on a miss —
+    /// a partially covered table would turn those into runtime panics.
+    pub fn validate_for(&self, layers: &[crate::model::LayerInfo]) -> crate::Result<()> {
+        let widths = [BitWidth::Int4, BitWidth::Int8, BitWidth::Fp16];
+        for layer in layers {
+            for w in widths {
+                for a in widths {
+                    let key = Self::key_for(layer, w, a);
+                    anyhow::ensure!(
+                        self.entries.contains_key(&key),
+                        "kernel table missing `{}` kernel for layer `{}` \
+                         (m={} n={} k={}) at weight_bits={} act_bits={}",
+                        key.kind,
+                        layer.name,
+                        key.m,
+                        key.n,
+                        key.k,
+                        key.weight_bits,
+                        key.act_bits
+                    );
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -169,9 +259,43 @@ mod tests {
     }
 
     #[test]
-    fn json_roundtrip_size() {
+    fn json_roundtrip_preserves_every_entry() {
         let t = KernelTable::profile(&AccelModel::a100_like(), &[gemm_layer()]);
         let s = t.to_json().unwrap();
         assert!(s.contains("gemm"));
+        let re = KernelTable::from_json(&s).unwrap();
+        assert_eq!(re.len(), t.len());
+        assert_eq!(re.out_bytes_per_elem, t.out_bytes_per_elem);
+        let l = gemm_layer();
+        for w in [BitWidth::Int4, BitWidth::Int8, BitWidth::Fp16] {
+            for a in [BitWidth::Int4, BitWidth::Int8, BitWidth::Fp16] {
+                assert_eq!(re.lookup(&l, w, a), t.lookup(&l, w, a), "{w:?}/{a:?}");
+            }
+        }
+        re.validate_for(&[gemm_layer()]).unwrap();
+    }
+
+    #[test]
+    fn from_json_accepts_bare_array_and_rejects_bad_rows() {
+        let row = r#"{"kind": "gemm", "m": 1, "n": 128, "k": 128,
+                      "weight_bits": 8, "act_bits": 8, "latency_s": 1e-6}"#;
+        let t = KernelTable::from_json(&format!("[{row}]")).unwrap();
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.out_bytes_per_elem, 2.0);
+        // Duplicate keys and non-positive latencies are rejected.
+        assert!(KernelTable::from_json(&format!("[{row},{row}]")).is_err());
+        let bad = row.replace("1e-6", "0.0");
+        assert!(KernelTable::from_json(&format!("[{bad}]")).is_err());
+    }
+
+    #[test]
+    fn validate_for_names_the_missing_kernel() {
+        let t = KernelTable::profile(&AccelModel::a100_like(), &[gemm_layer()]);
+        let mut other = gemm_layer();
+        other.name = "uncovered_layer".into();
+        other.n = 999;
+        let err = t.validate_for(&[gemm_layer(), other]).unwrap_err().to_string();
+        assert!(err.contains("uncovered_layer"), "error should name the layer: {err}");
+        assert!(err.contains("weight_bits"), "error should name the precision pair: {err}");
     }
 }

@@ -13,6 +13,9 @@
 //! * [`sensitivity`] — the paper's three metrics: ε_QE, ε_N, ε_Hessian.
 //! * [`coordinator`] — the evaluation pipeline plus the bisection (Alg. 1)
 //!   and greedy (Alg. 2) configuration searches.
+//! * [`api`] — the unified constrained-search front door: `SearchSpec` →
+//!   `SearchSession`, pluggable objectives and cost models, typed search
+//!   events, checkpoint/resume.
 //! * [`latency`] — the roofline accelerator model + kernel latency table
 //!   standing in for the paper's CUTLASS-profiled A100 measurements.
 //! * [`report`] — regenerates every table and figure of the paper.
@@ -22,6 +25,7 @@
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
 
+pub mod api;
 pub mod coordinator;
 pub mod latency;
 pub mod model;

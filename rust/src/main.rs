@@ -8,24 +8,36 @@
 //! mpq eval --model resnet_s --bits 8
 //! mpq sensitivity --model bert_s --metric hessian
 //! mpq search --model bert_s --algo greedy --metric hessian --target 0.99
+//! mpq search --synthetic 24 --budget-latency 0.7 --checkpoint ck.json
 //! mpq table --id 1|2|3 [--model M] [--out DIR]   # regenerate paper tables
 //! mpq figure --id 1|3|4 [--model M] [--out DIR]  # regenerate figure data
 //! mpq serve --model resnet_s --bits 8 --requests 256
 //! ```
+//!
+//! Each subcommand parses into a typed argument struct
+//! ([`SearchCmd`], [`ServeCmd`], ...) and runs through the
+//! [`mpq::api::SearchSpec`] front door — the only string matching left is
+//! the one `<command> -> struct` dispatch in [`Command::parse`].
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::Context;
 
-use mpq::coordinator::SearchAlgo;
+use mpq::api::{
+    run_search, BackendSpec, Checkpoint, CostModel, ObjectiveSpec, SearchEvent, SearchSpec,
+    SyntheticCost, SyntheticEnv,
+};
+use mpq::coordinator::{ParallelEnv, SearchAlgo};
 use mpq::model::ArtifactIndex;
-use mpq::quant::{CalibrationOptions, QuantConfig, Scales};
+use mpq::quant::{CalibrationOptions, QuantConfig, QUANT_BITS};
 use mpq::report::experiments::{
     self, render_search_table, search_grid, ExperimentCtx, METRIC_TRIALS,
 };
 use mpq::report::cells_to_json;
 use mpq::sensitivity::{self, MetricKind};
 use mpq::util::cli::Args;
+use mpq::util::json::Value;
 use mpq::Result;
 
 const USAGE: &str = "\
@@ -38,8 +50,13 @@ COMMANDS
   calibrate   --model M [--adjust-bits 8] [--lr 1e-5] [--epochs 2]
   eval        --model M [--bits 8]
   sensitivity --model M --metric random|qe|noise|hessian [--trials N] [--seed S]
-  search      --model M [--algo greedy|bisection] [--metric hessian]
-              [--target 0.99] [--seed 0]
+  search      --model M | --synthetic N
+              [--algo greedy|bisection] [--metric hessian] [--target 0.99]
+              [--seed 0] [--workers 1] [--trials 5]
+              [--budget-latency F | --budget-size F]
+              [--backend a100|tpu | --table kernels.json] [--native-scale]
+              [--checkpoint ck.json [--resume]] [--cache-capacity N]
+              [--no-cache] [--abort-after N (synthetic only)]
   table       --id 1|2|3 [--model M] [--out DIR]
   figure      --id 1|3|4 [--model M] [--out DIR]
   ablation    --model M [--target 0.99] [--out DIR]
@@ -69,11 +86,69 @@ fn all_models(dir: &Path, only: Option<&str>) -> Result<Vec<String>> {
         .collect())
 }
 
-fn parse_algo(s: &str) -> Result<SearchAlgo> {
-    match s.to_ascii_lowercase().as_str() {
-        "greedy" => Ok(SearchAlgo::Greedy),
-        "bisection" => Ok(SearchAlgo::Bisection),
-        other => anyhow::bail!("unknown algo `{other}` (greedy|bisection)"),
+/// One parsed invocation: typed per-subcommand argument structs.
+enum Command {
+    Info,
+    Calibrate(CalibrateCmd),
+    Eval(EvalCmd),
+    Sensitivity(SensitivityCmd),
+    Search(SearchCmd),
+    Table(TableCmd),
+    Figure(FigureCmd),
+    Ablation(AblationCmd),
+    Serve(ServeCmd),
+}
+
+impl Command {
+    fn parse(args: &Args) -> Result<Self> {
+        match args.cmd.as_str() {
+            "info" => Ok(Command::Info),
+            "calibrate" => Ok(Command::Calibrate(CalibrateCmd::parse(args)?)),
+            "eval" => Ok(Command::Eval(EvalCmd::parse(args)?)),
+            "sensitivity" => Ok(Command::Sensitivity(SensitivityCmd::parse(args)?)),
+            "search" => Ok(Command::Search(SearchCmd::parse(args)?)),
+            "table" => Ok(Command::Table(TableCmd::parse(args)?)),
+            "figure" => Ok(Command::Figure(FigureCmd::parse(args)?)),
+            "ablation" => Ok(Command::Ablation(AblationCmd::parse(args)?)),
+            "serve" => Ok(Command::Serve(ServeCmd::parse(args)?)),
+            other => anyhow::bail!("unknown command `{other}`"),
+        }
+    }
+
+    /// Whether `cmd` names a subcommand at all (usage errors exit 2,
+    /// run-time failures exit 1 — the historical contract).
+    fn is_known(cmd: &str) -> bool {
+        matches!(
+            cmd,
+            "info"
+                | "calibrate"
+                | "eval"
+                | "sensitivity"
+                | "search"
+                | "table"
+                | "figure"
+                | "ablation"
+                | "serve"
+        )
+    }
+
+    fn run(self, args: &Args) -> Result<()> {
+        match self {
+            Command::Info => cmd_info(&artifacts_dir(args)?),
+            Command::Calibrate(c) => c.run(&artifacts_dir(args)?),
+            Command::Eval(c) => c.run(&artifacts_dir(args)?),
+            Command::Sensitivity(c) => c.run(&artifacts_dir(args)?),
+            // Synthetic searches need no artifacts at all.
+            Command::Search(c) if c.synthetic.is_some() => c.run_synthetic(),
+            Command::Search(c) => {
+                let dir = artifacts_dir(args)?;
+                c.run_artifacts(&dir)
+            }
+            Command::Table(c) => c.run(&artifacts_dir(args)?),
+            Command::Figure(c) => c.run(&artifacts_dir(args)?),
+            Command::Ablation(c) => c.run(&artifacts_dir(args)?),
+            Command::Serve(c) => c.run(&artifacts_dir(args)?),
+        }
     }
 }
 
@@ -83,22 +158,11 @@ fn main() -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     }
-    let dir = artifacts_dir(&args)?;
-    match args.cmd.as_str() {
-        "info" => cmd_info(&dir),
-        "calibrate" => cmd_calibrate(&dir, &args),
-        "eval" => cmd_eval(&dir, &args),
-        "sensitivity" => cmd_sensitivity(&dir, &args),
-        "search" => cmd_search(&dir, &args),
-        "table" => cmd_table(&dir, &args),
-        "figure" => cmd_figure(&dir, &args),
-        "ablation" => cmd_ablation(&dir, &args),
-        "serve" => cmd_serve(&dir, &args),
-        other => {
-            eprint!("unknown command `{other}`\n\n{USAGE}");
-            std::process::exit(2);
-        }
+    if !Command::is_known(&args.cmd) {
+        eprint!("unknown command `{}`\n\n{USAGE}", args.cmd);
+        std::process::exit(2);
     }
+    Command::parse(&args)?.run(&args)
 }
 
 fn cmd_info(dir: &Path) -> Result<()> {
@@ -123,296 +187,641 @@ fn cmd_info(dir: &Path) -> Result<()> {
     Ok(())
 }
 
-fn cmd_calibrate(dir: &Path, args: &Args) -> Result<()> {
-    let model = args.req_str("model")?;
-    let mut ctx = ExperimentCtx::new(dir, model)?;
-    let opts = CalibrationOptions {
-        adjust_bits: args.get_or("adjust-bits", 8.0f32)?,
-        lr: args.get_or("lr", 1e-5f32)?,
-        epochs: args.get_or("epochs", 2usize)?,
-    };
-    let report = ctx.pipeline.calibrate(&opts)?;
-    ctx.pipeline
-        .scales
-        .save(&dir.join(format!("{model}_scales.json")))
-        .context("saving scales")?;
-    println!(
-        "calibrated {model}: adjustment loss {:.4} -> {:.4} over {} steps",
-        report.loss_before, report.loss_after, report.steps
-    );
-    Ok(())
+// ------------------------------------------------------------- calibrate
+
+struct CalibrateCmd {
+    model: String,
+    opts: CalibrationOptions,
 }
 
-fn cmd_eval(dir: &Path, args: &Args) -> Result<()> {
-    let model = args.req_str("model")?;
-    let bits = args.get_or("bits", 8.0f32)?;
-    let mut ctx = ExperimentCtx::new(dir, model)?;
-    ctx.ensure_calibrated()?;
-    let n = ctx.pipeline.num_quant_layers();
-    let cfg = QuantConfig::uniform(n, bits);
-    let r = ctx.pipeline.eval_config(&cfg, None)?;
-    println!(
-        "{model} @ uniform {bits}b: loss={:.4} accuracy={:.2}% (float {:.2}%) \
-         rel_size={:.2}% rel_latency={:.2}%",
-        r.loss,
-        r.accuracy * 100.0,
-        ctx.pipeline.float_val_acc() * 100.0,
-        ctx.cost.rel_size(&cfg) * 100.0,
-        ctx.cost.rel_latency(&cfg) * 100.0,
-    );
-    Ok(())
-}
-
-fn cmd_sensitivity(dir: &Path, args: &Args) -> Result<()> {
-    let model = args.req_str("model")?;
-    let metric: MetricKind = args.req("metric")?;
-    let trials = args.get_or("trials", METRIC_TRIALS)?;
-    let seed = args.get_or("seed", 0u64)?;
-    let mut ctx = ExperimentCtx::new(dir, model)?;
-    ctx.ensure_calibrated()?;
-    let sens = sensitivity::compute(&mut ctx.pipeline, metric, trials, seed)?;
-    let names: Vec<String> = ctx
-        .pipeline
-        .artifacts
-        .manifest
-        .quant_layers()
-        .iter()
-        .map(|l| l.name.clone())
-        .collect();
-    println!("{} sensitivity for {model} (least sensitive first):", metric.label());
-    for &layer in &sens.order {
-        println!("  {:>20}  score={:.4e}", names[layer], sens.scores[layer]);
+impl CalibrateCmd {
+    fn parse(args: &Args) -> Result<Self> {
+        Ok(Self {
+            model: args.req_str("model")?.to_string(),
+            opts: CalibrationOptions {
+                adjust_bits: args.get_or("adjust-bits", 8.0f32)?,
+                lr: args.get_or("lr", 1e-5f32)?,
+                epochs: args.get_or("epochs", 2usize)?,
+            },
+        })
     }
-    Ok(())
-}
 
-fn cmd_search(dir: &Path, args: &Args) -> Result<()> {
-    let model = args.req_str("model")?;
-    let algo = parse_algo(args.get_str("algo").unwrap_or("greedy"))?;
-    let metric: MetricKind = args.get_or("metric", MetricKind::Hessian)?;
-    let target = args.get_or("target", 0.99f64)?;
-    let seed = args.get_or("seed", 0u64)?;
-    let mut ctx = ExperimentCtx::new(dir, model)?;
-    ctx.ensure_calibrated()?;
-    let sens = ctx.cached_sensitivity(metric, METRIC_TRIALS, seed)?;
-    let cell = experiments::run_cell(&mut ctx, algo, &sens, seed, target)?;
-    println!(
-        "{model} {}/{} target {:.1}%: accuracy={:.2}% size={:.2}% latency={:.2}% \
-         ({} evals, {:.1}s)",
-        cell.algo.label(),
-        cell.metric.label(),
-        target * 100.0,
-        cell.accuracy * 100.0,
-        cell.rel_size_pct,
-        cell.rel_latency_pct,
-        cell.evals,
-        cell.search_seconds,
-    );
-    let bits: Vec<u32> = cell.config.bits_w.iter().map(|&b| b as u32).collect();
-    println!("per-layer bits: {bits:?}");
-    let stats = ctx.pipeline.stats;
-    println!(
-        "pipeline: {} evals, {} cache hits, {} batch execs, {} early exits",
-        stats.evals, stats.cache_hits, stats.batch_execs, stats.early_exits
-    );
-    Ok(())
-}
-
-fn cmd_table(dir: &Path, args: &Args) -> Result<()> {
-    let id = args.req::<u32>("id")?;
-    let out = args.get_str("out").map(PathBuf::from);
-    let models = all_models(dir, args.get_str("model"))?;
-    let mut rendered = String::new();
-    for m in &models {
-        let mut ctx = ExperimentCtx::new(dir, m)?;
-        let text = match id {
-            1 => experiments::table1(&mut ctx)?.render(),
-            2 | 3 => {
-                let targets: &[f64] = if id == 2 { &[0.99, 0.999] } else { &[0.90] };
-                let cells = search_grid(&mut ctx, targets, 0)?;
-                if let Some(dir_out) = &out {
-                    std::fs::create_dir_all(dir_out)?;
-                    let cell_path = dir_out.join(format!("table{id}_{m}.json"));
-                    std::fs::write(cell_path, cells_to_json(&cells))?;
-                }
-                render_search_table(
-                    &format!("Table {id} — {m} (relative to fp16 baseline)"),
-                    &cells,
-                    targets,
-                )
-                .render()
-            }
-            _ => anyhow::bail!("unknown table id {id} (1, 2 or 3)"),
-        };
-        println!("{text}");
-        rendered.push_str(&text);
-    }
-    if let Some(dir_out) = &out {
-        std::fs::create_dir_all(dir_out)?;
-        std::fs::write(dir_out.join(format!("table{id}.txt")), rendered)?;
-    }
-    Ok(())
-}
-
-fn cmd_figure(dir: &Path, args: &Args) -> Result<()> {
-    let id = args.req::<u32>("id")?;
-    let out = args.get_str("out").map(PathBuf::from);
-    let models = all_models(dir, args.get_str("model"))?;
-    let mut rendered = String::new();
-    for m in &models {
-        let mut ctx = ExperimentCtx::new(dir, m)?;
-        let text = match id {
-            1 => {
-                // Best (Hessian-greedy) cells at 99% and 99.9%.
-                let sens = ctx.cached_sensitivity(MetricKind::Hessian, METRIC_TRIALS, 0)?;
-                let mut cells = Vec::new();
-                for t in [0.99, 0.999] {
-                    cells.push(experiments::run_cell(&mut ctx, SearchAlgo::Greedy, &sens, 0, t)?);
-                }
-                let float_acc = vec![(m.clone(), ctx.pipeline.float_val_acc())];
-                experiments::fig1(&cells, &float_acc).render()
-            }
-            3 => {
-                let sensh = ctx.cached_sensitivity(MetricKind::Hessian, METRIC_TRIALS, 0)?;
-                let mut cells = Vec::new();
-                for algo in [SearchAlgo::Bisection, SearchAlgo::Greedy] {
-                    cells.push(experiments::run_cell(&mut ctx, algo, &sensh, 0, 0.99)?);
-                }
-                cells.push(experiments::run_cell(&mut ctx, SearchAlgo::Greedy, &sensh, 0, 0.999)?);
-                let names: Vec<String> = ctx
-                    .pipeline
-                    .artifacts
-                    .manifest
-                    .quant_layers()
-                    .iter()
-                    .map(|l| l.name.clone())
-                    .collect();
-                experiments::fig3(&cells, &names).render()
-            }
-            4 => {
-                let (curves, dist) = experiments::fig4(&mut ctx, 5)?;
-                format!("{}\n{}", curves.render(), dist.render())
-            }
-            _ => anyhow::bail!("unknown figure id {id} (1, 3 or 4)"),
-        };
-        println!("{text}");
-        rendered.push_str(&text);
-    }
-    if let Some(dir_out) = &out {
-        std::fs::create_dir_all(dir_out)?;
-        std::fs::write(dir_out.join(format!("figure{id}.txt")), rendered)?;
-    }
-    Ok(())
-}
-
-fn cmd_ablation(dir: &Path, args: &Args) -> Result<()> {
-    let model = args.req_str("model")?;
-    let target = args.get_or("target", 0.99f64)?;
-    let out = args.get_str("out").map(PathBuf::from);
-    let mut ctx = ExperimentCtx::new(dir, model)?;
-    let mut rendered = String::new();
-    for table in [
-        mpq::report::ablation::weight_only(&mut ctx, target)?,
-        mpq::report::ablation::accelerators(&mut ctx)?,
-        mpq::report::ablation::adjustment(dir, model)?,
-    ] {
-        let text = table.render();
-        println!("{text}");
-        rendered.push_str(&text);
-    }
-    if let Some(dir_out) = &out {
-        std::fs::create_dir_all(dir_out)?;
-        std::fs::write(dir_out.join(format!("ablation_{model}.txt")), rendered)?;
-    }
-    Ok(())
-}
-
-/// Drive the batched multi-worker server with concurrent clients and
-/// print latency percentiles — the QoS view the paper optimizes for.
-fn cmd_serve(dir: &Path, args: &Args) -> Result<()> {
-    let model = args.req_str("model")?.to_string();
-    let bits = args.get_or("bits", 8.0f32)?;
-    let requests = args.get_or("requests", 256usize)?;
-    let concurrency = args.get_or("concurrency", 8usize)?.max(1);
-    let deadline_ms = args.get_or("deadline-ms", 0u64)?;
-    let opts = mpq::server::ServeOptions {
-        max_batch: args.get_or("max-batch", 32usize)?,
-        max_wait: std::time::Duration::from_micros(args.get_or("wait-us", 500u64)?),
-        workers: args.get_or("workers", 2usize)?,
-        queue_depth: args.get_or("queue-depth", 256usize)?,
-        deadline: (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms)),
-        ..Default::default()
-    };
-
-    // Build a pipeline once to learn shapes, produce examples from val,
-    // and calibrate a single time (saving the scales file) — so the pool
-    // workers below all load the same scales instead of each re-running
-    // the full calibration pass.
-    let mut ctx = ExperimentCtx::new(dir, &model)?;
-    ctx.ensure_calibrated()?;
-    let n = ctx.pipeline.num_quant_layers();
-    let val_count = ctx.pipeline.artifacts.val.count;
-    let examples: Vec<mpq::runtime::HostTensor> =
-        (0..requests).map(|i| ctx.pipeline.artifacts.val.x.slice_rows(i % val_count, 1)).collect();
-    drop(ctx);
-
-    let cfg = QuantConfig::uniform(n, bits);
-    let scales_path = dir.join(format!("{model}_scales.json"));
-    let (handle, join) = mpq::server::spawn(
-        dir.to_path_buf(),
-        model.clone(),
-        cfg,
-        opts,
-        move |p| {
-            p.scales = Scales::load(&scales_path)?;
-            p.sync_scales()
-        },
-    )?;
-
-    let t0 = std::time::Instant::now();
-    std::thread::scope(|s| {
-        for c in 0..concurrency {
-            let handle = handle.clone();
-            let examples = &examples;
-            s.spawn(move || {
-                for (i, ex) in examples.iter().enumerate() {
-                    if i % concurrency == c {
-                        let _ = handle.infer(ex.clone());
-                    }
-                }
-            });
-        }
-    });
-    let wall = t0.elapsed().as_secs_f64();
-    let stats = handle.stats();
-    handle.shutdown();
-    join.join().map_err(|_| anyhow::anyhow!("serve dispatcher panicked"))?;
-    println!(
-        "served {} requests in {wall:.2}s ({:.1} req/s) @ uniform {bits}b \
-         x{concurrency} clients ({} batches)",
-        stats.requests,
-        stats.requests as f64 / wall,
-        stats.batches,
-    );
-    println!(
-        "latency: mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms",
-        stats.mean_us() / 1e3,
-        stats.percentile_us(0.5) as f64 / 1e3,
-        stats.percentile_us(0.95) as f64 / 1e3,
-        stats.percentile_us(0.99) as f64 / 1e3,
-    );
-    println!(
-        "admission: rejected={} deadline_missed={} errors={} max_queue_depth={}",
-        stats.rejected, stats.deadline_missed, stats.errors, stats.max_queue_depth
-    );
-    for w in &stats.per_worker {
+    fn run(self, dir: &Path) -> Result<()> {
+        let mut ctx = ExperimentCtx::new(dir, &self.model)?;
+        let report = ctx.pipeline.calibrate(&self.opts)?;
+        ctx.pipeline
+            .scales
+            .save(&dir.join(format!("{}_scales.json", self.model)))
+            .context("saving scales")?;
         println!(
-            "worker {}: {} batches, {} requests, mean fill {:.2}",
-            w.worker,
-            w.batches,
-            w.requests,
-            w.mean_batch_fill()
+            "calibrated {}: adjustment loss {:.4} -> {:.4} over {} steps",
+            self.model, report.loss_before, report.loss_after, report.steps
         );
+        Ok(())
     }
-    Ok(())
+}
+
+// ------------------------------------------------------------------ eval
+
+struct EvalCmd {
+    model: String,
+    bits: f32,
+}
+
+impl EvalCmd {
+    fn parse(args: &Args) -> Result<Self> {
+        Ok(Self {
+            model: args.req_str("model")?.to_string(),
+            bits: args.get_or("bits", 8.0f32)?,
+        })
+    }
+
+    fn run(self, dir: &Path) -> Result<()> {
+        let mut ctx = ExperimentCtx::new(dir, &self.model)?;
+        ctx.ensure_calibrated()?;
+        let n = ctx.pipeline.num_quant_layers();
+        let cfg = QuantConfig::uniform(n, self.bits);
+        let r = ctx.pipeline.eval_config(&cfg, None)?;
+        println!(
+            "{} @ uniform {}b: loss={:.4} accuracy={:.2}% (float {:.2}%) \
+             rel_size={:.2}% rel_latency={:.2}%",
+            self.model,
+            self.bits,
+            r.loss,
+            r.accuracy * 100.0,
+            ctx.pipeline.float_val_acc() * 100.0,
+            ctx.cost.rel_size(&cfg) * 100.0,
+            ctx.cost.rel_latency(&cfg) * 100.0,
+        );
+        Ok(())
+    }
+}
+
+// ----------------------------------------------------------- sensitivity
+
+struct SensitivityCmd {
+    model: String,
+    metric: MetricKind,
+    trials: usize,
+    seed: u64,
+}
+
+impl SensitivityCmd {
+    fn parse(args: &Args) -> Result<Self> {
+        Ok(Self {
+            model: args.req_str("model")?.to_string(),
+            metric: args.req("metric")?,
+            trials: args.get_or("trials", METRIC_TRIALS)?,
+            seed: args.get_or("seed", 0u64)?,
+        })
+    }
+
+    fn run(self, dir: &Path) -> Result<()> {
+        let mut ctx = ExperimentCtx::new(dir, &self.model)?;
+        ctx.ensure_calibrated()?;
+        let sens = sensitivity::compute(&mut ctx.pipeline, self.metric, self.trials, self.seed)?;
+        let names: Vec<String> = ctx
+            .pipeline
+            .artifacts
+            .manifest
+            .quant_layers()
+            .iter()
+            .map(|l| l.name.clone())
+            .collect();
+        println!(
+            "{} sensitivity for {} (least sensitive first):",
+            self.metric.label(),
+            self.model
+        );
+        for &layer in &sens.order {
+            println!("  {:>20}  score={:.4e}", names[layer], sens.scores[layer]);
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------- search
+
+struct SearchCmd {
+    model: Option<String>,
+    synthetic: Option<usize>,
+    algo: SearchAlgo,
+    metric: MetricKind,
+    target: f64,
+    seed: u64,
+    trials: usize,
+    workers: usize,
+    objective: ObjectiveSpec,
+    backend: BackendSpec,
+    native_scale: bool,
+    checkpoint: Option<PathBuf>,
+    resume: bool,
+    cache_capacity: Option<usize>,
+    no_cache: bool,
+    /// Synthetic only: error out after N raw evals (simulated kill).
+    abort_after: Option<usize>,
+}
+
+impl SearchCmd {
+    fn parse(args: &Args) -> Result<Self> {
+        let budget_latency = args.get_str("budget-latency").map(str::parse).transpose()?;
+        let budget_size = args.get_str("budget-size").map(str::parse).transpose()?;
+        let objective = match (budget_latency, budget_size) {
+            (Some(_), Some(_)) => {
+                anyhow::bail!("--budget-latency and --budget-size are mutually exclusive")
+            }
+            (Some(rel_latency), None) => ObjectiveSpec::LatencyBudget { rel_latency },
+            (None, Some(rel_size)) => ObjectiveSpec::FootprintBudget { rel_size },
+            (None, None) => ObjectiveSpec::AccuracyTarget,
+        };
+        let backend = match (args.get_str("backend"), args.get_str("table")) {
+            (Some(_), Some(_)) => anyhow::bail!("--backend and --table are mutually exclusive"),
+            (None, Some(path)) => BackendSpec::MeasuredTable(PathBuf::from(path)),
+            (Some("a100"), None) | (None, None) => BackendSpec::A100Like,
+            (Some("tpu"), None) => BackendSpec::TpuLike,
+            (Some(other), None) => anyhow::bail!("unknown backend `{other}` (a100|tpu)"),
+        };
+        let cmd = Self {
+            model: args.get_str("model").map(String::from),
+            synthetic: args.get_str("synthetic").map(str::parse).transpose()?,
+            algo: args.get_str("algo").unwrap_or("greedy").parse()?,
+            metric: args.get_or("metric", MetricKind::Hessian)?,
+            target: args.get_or("target", 0.99f64)?,
+            seed: args.get_or("seed", 0u64)?,
+            trials: args.get_or("trials", METRIC_TRIALS)?,
+            workers: args.get_or("workers", 1usize)?,
+            objective,
+            backend,
+            native_scale: args.flag("native-scale"),
+            checkpoint: args.get_str("checkpoint").map(PathBuf::from),
+            resume: args.flag("resume"),
+            cache_capacity: args.get_str("cache-capacity").map(str::parse).transpose()?,
+            no_cache: args.flag("no-cache"),
+            abort_after: args.get_str("abort-after").map(str::parse).transpose()?,
+        };
+        anyhow::ensure!(
+            cmd.model.is_some() != cmd.synthetic.is_some(),
+            "search needs exactly one of --model M or --synthetic N"
+        );
+        anyhow::ensure!(
+            cmd.abort_after.is_none() || cmd.synthetic.is_some(),
+            "--abort-after only applies to --synthetic runs"
+        );
+        if cmd.synthetic.is_some() {
+            // Reject flags the synthetic path would otherwise silently
+            // ignore (it has no sensitivity metrics, cost backends, or
+            // persistent eval cache).
+            for flag in ["metric", "trials", "backend", "table", "cache-capacity"] {
+                anyhow::ensure!(
+                    args.get_str(flag).is_none(),
+                    "--{flag} does not apply to --synthetic runs"
+                );
+            }
+            anyhow::ensure!(
+                !args.flag("no-cache") && !args.flag("native-scale"),
+                "--no-cache/--native-scale do not apply to --synthetic runs"
+            );
+        }
+        Ok(cmd)
+    }
+
+    /// The spec this invocation describes (synthetic runs use it for
+    /// validation and objective construction only).
+    fn to_spec(&self, model: &str) -> SearchSpec {
+        let mut spec = SearchSpec::new(model)
+            .algo(self.algo)
+            .metric(self.metric)
+            .target(self.target)
+            .seed(self.seed)
+            .trials(self.trials)
+            .workers(self.workers)
+            .objective(self.objective)
+            .backend(self.backend.clone())
+            .resume(self.resume);
+        if self.native_scale {
+            spec = spec.deploy_scale(mpq::api::ScaleSpec::Native);
+        }
+        if let Some(ck) = &self.checkpoint {
+            spec = spec.checkpoint(ck.clone());
+        }
+        if let Some(cap) = self.cache_capacity {
+            spec = spec.cache_capacity(cap);
+        }
+        if self.no_cache {
+            spec = spec.no_cache();
+        }
+        spec
+    }
+
+    /// Artifact-backed search through a [`mpq::api::SearchSession`].
+    fn run_artifacts(self, dir: &Path) -> Result<()> {
+        let model = self.model.clone().expect("checked in parse");
+        let spec = self.to_spec(&model).artifacts_dir(dir);
+        let mut session = spec.open()?;
+        session.on_event(print_event);
+        let report = session.run()?;
+        let out = &report.outcome;
+        println!(
+            "{model} {}/{} target {:.1}%: accuracy={:.2}% size={:.2}% latency={:.2}% \
+             ({} evals, {:.1}s, cost {})",
+            report.algo.label(),
+            report.metric.label(),
+            self.target * 100.0,
+            out.accuracy * 100.0,
+            report.rel_size * 100.0,
+            report.rel_latency * 100.0,
+            out.evals,
+            report.search_seconds,
+            report.cost_provenance,
+        );
+        let bits: Vec<u32> = out.config.bits_w.iter().map(|&b| b as u32).collect();
+        println!("per-layer bits: {bits:?}");
+        if report.checkpointed_decisions > 0 {
+            println!(
+                "checkpoint: {} decisions recorded ({} replayed on resume)",
+                report.checkpointed_decisions, report.replayed_decisions
+            );
+        }
+        if report.workers <= 1 {
+            let stats = session.ctx.pipeline.stats;
+            println!(
+                "pipeline: {} evals, {} cache hits, {} batch execs, {} early exits",
+                stats.evals, stats.cache_hits, stats.batch_execs, stats.early_exits
+            );
+        } else {
+            // With workers > 1 the search ran on a PipelinePool whose
+            // worker pipelines are gone; the context pipeline's counters
+            // only cover calibration/sensitivity, so don't present them
+            // as the search's stats.
+            println!(
+                "search ran on a {}-worker pipeline pool (shared eval cache persisted to disk)",
+                report.workers
+            );
+        }
+        Ok(())
+    }
+
+    /// Artifact-free search over the seeded synthetic environment — the
+    /// zero-setup path CI uses to smoke the full API (objectives, budgets,
+    /// worker fan-out, checkpoint kill/resume).
+    fn run_synthetic(self) -> Result<()> {
+        let n = self.synthetic.expect("checked in parse");
+        let spec = self.to_spec("synthetic").no_cache();
+        spec.validate()?;
+        let mut env = SyntheticEnv::new(n, self.seed);
+        if let Some(limit) = self.abort_after {
+            env = env.abort_after(limit);
+        }
+        let order = env.order();
+        let cost = Arc::new(SyntheticCost::new(n, self.seed));
+        // The synthetic float baseline is exactly 1.0, so the floor is the
+        // target itself.
+        let objective = self.objective.build(self.target, cost.clone());
+        let mut checkpoint = match &self.checkpoint {
+            Some(path) => {
+                let fp = mpq::api::checkpoint_fingerprint(
+                    self.algo,
+                    &QUANT_BITS,
+                    &objective.describe(),
+                    &order,
+                    &format!("synthetic/n{n}/seed{}", self.seed),
+                );
+                Some(Checkpoint::attach(path, &fp, self.resume)?)
+            }
+            None => None,
+        };
+        let mut penv = ParallelEnv::new(&env, self.workers);
+        let mut observer = print_event;
+        let outcome = run_search(
+            self.algo,
+            &mut penv,
+            &order,
+            &QUANT_BITS,
+            objective.as_ref(),
+            Some(&mut observer),
+            checkpoint.as_mut(),
+        )?;
+        let replayed = checkpoint.as_ref().map_or(0, Checkpoint::replayed);
+        eprintln!(
+            "[search] synthetic run: {} raw evals, {} decisions checkpointed, {} replayed",
+            env.evals(),
+            checkpoint.as_ref().map_or(0, Checkpoint::len),
+            replayed,
+        );
+        // Stable single-line summary for scripts (identical for a fresh
+        // run and a resumed one — resume state is reported on stderr).
+        let summary = Value::obj(vec![
+            ("accuracy", Value::Num(outcome.accuracy)),
+            ("config", Value::arr_f32(&outcome.config.bits_w)),
+            ("evals", Value::Num(outcome.evals as f64)),
+            ("rel_latency", Value::Num(cost.rel_latency(&outcome.config))),
+            ("rel_size", Value::Num(cost.rel_size(&outcome.config))),
+        ]);
+        println!("RESULT {summary}");
+        Ok(())
+    }
+}
+
+/// Render one [`SearchEvent`] as a stderr progress line (the typed
+/// replacement for the old ad-hoc prints).
+fn print_event(ev: &SearchEvent) {
+    match ev {
+        SearchEvent::Started { algo, layers, objective } => {
+            eprintln!("[search] {algo} over {layers} layers: {objective}");
+        }
+        SearchEvent::Decision { bits, index, accepted, accuracy, cost, replayed } => {
+            let verdict = if *accepted { "accept" } else { "reject" };
+            let mut line = format!("[search] {bits}b #{index}: {verdict}");
+            if !replayed {
+                line.push_str(&format!(" acc={:.2}%", accuracy * 100.0));
+            } else {
+                line.push_str(" (replayed)");
+            }
+            if let Some(c) = cost {
+                line.push_str(&format!(" cost={:.1}%", c * 100.0));
+            }
+            eprintln!("{line}");
+        }
+        SearchEvent::BudgetSatisfied { cost } => {
+            eprintln!("[search] budget satisfied at rel cost {:.1}% — stopping", cost * 100.0);
+        }
+        SearchEvent::Finished { accuracy, evals } => {
+            eprintln!(
+                "[search] finished: accuracy {:.2}% after {evals} decision evals",
+                accuracy * 100.0
+            );
+        }
+        SearchEvent::CacheReport { memo_hits, persistent_hits } => {
+            eprintln!("[search] cache: {memo_hits} memo hits, {persistent_hits} persistent hits");
+        }
+        SearchEvent::FrontierSubmitted { .. } | SearchEvent::CheckpointWritten { .. } => {}
+    }
+}
+
+// ----------------------------------------------------------------- table
+
+struct TableCmd {
+    id: u32,
+    model: Option<String>,
+    out: Option<PathBuf>,
+}
+
+impl TableCmd {
+    fn parse(args: &Args) -> Result<Self> {
+        Ok(Self {
+            id: args.req::<u32>("id")?,
+            model: args.get_str("model").map(String::from),
+            out: args.get_str("out").map(PathBuf::from),
+        })
+    }
+
+    fn run(self, dir: &Path) -> Result<()> {
+        let models = all_models(dir, self.model.as_deref())?;
+        let mut rendered = String::new();
+        for m in &models {
+            let mut ctx = ExperimentCtx::new(dir, m)?;
+            let text = match self.id {
+                1 => experiments::table1(&mut ctx)?.render(),
+                2 | 3 => {
+                    let targets: &[f64] = if self.id == 2 { &[0.99, 0.999] } else { &[0.90] };
+                    let cells = search_grid(&mut ctx, targets, 0)?;
+                    if let Some(dir_out) = &self.out {
+                        std::fs::create_dir_all(dir_out)?;
+                        let cell_path = dir_out.join(format!("table{}_{m}.json", self.id));
+                        std::fs::write(cell_path, cells_to_json(&cells))?;
+                    }
+                    render_search_table(
+                        &format!("Table {} — {m} (relative to fp16 baseline)", self.id),
+                        &cells,
+                        targets,
+                    )
+                    .render()
+                }
+                _ => anyhow::bail!("unknown table id {} (1, 2 or 3)", self.id),
+            };
+            println!("{text}");
+            rendered.push_str(&text);
+        }
+        if let Some(dir_out) = &self.out {
+            std::fs::create_dir_all(dir_out)?;
+            std::fs::write(dir_out.join(format!("table{}.txt", self.id)), rendered)?;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------- figure
+
+struct FigureCmd {
+    id: u32,
+    model: Option<String>,
+    out: Option<PathBuf>,
+}
+
+impl FigureCmd {
+    fn parse(args: &Args) -> Result<Self> {
+        Ok(Self {
+            id: args.req::<u32>("id")?,
+            model: args.get_str("model").map(String::from),
+            out: args.get_str("out").map(PathBuf::from),
+        })
+    }
+
+    fn run(self, dir: &Path) -> Result<()> {
+        let models = all_models(dir, self.model.as_deref())?;
+        let mut rendered = String::new();
+        for m in &models {
+            let mut ctx = ExperimentCtx::new(dir, m)?;
+            let text = match self.id {
+                1 => {
+                    // Best (Hessian-greedy) cells at 99% and 99.9%.
+                    let sens = ctx.cached_sensitivity(MetricKind::Hessian, METRIC_TRIALS, 0)?;
+                    let mut cells = Vec::new();
+                    for t in [0.99, 0.999] {
+                        cells.push(experiments::run_cell(
+                            &mut ctx,
+                            SearchAlgo::Greedy,
+                            &sens,
+                            0,
+                            t,
+                        )?);
+                    }
+                    let float_acc = vec![(m.clone(), ctx.pipeline.float_val_acc())];
+                    experiments::fig1(&cells, &float_acc).render()
+                }
+                3 => {
+                    let sensh = ctx.cached_sensitivity(MetricKind::Hessian, METRIC_TRIALS, 0)?;
+                    let mut cells = Vec::new();
+                    for algo in [SearchAlgo::Bisection, SearchAlgo::Greedy] {
+                        cells.push(experiments::run_cell(&mut ctx, algo, &sensh, 0, 0.99)?);
+                    }
+                    cells.push(experiments::run_cell(
+                        &mut ctx,
+                        SearchAlgo::Greedy,
+                        &sensh,
+                        0,
+                        0.999,
+                    )?);
+                    let names: Vec<String> = ctx
+                        .pipeline
+                        .artifacts
+                        .manifest
+                        .quant_layers()
+                        .iter()
+                        .map(|l| l.name.clone())
+                        .collect();
+                    experiments::fig3(&cells, &names).render()
+                }
+                4 => {
+                    let (curves, dist) = experiments::fig4(&mut ctx, 5)?;
+                    format!("{}\n{}", curves.render(), dist.render())
+                }
+                _ => anyhow::bail!("unknown figure id {} (1, 3 or 4)", self.id),
+            };
+            println!("{text}");
+            rendered.push_str(&text);
+        }
+        if let Some(dir_out) = &self.out {
+            std::fs::create_dir_all(dir_out)?;
+            std::fs::write(dir_out.join(format!("figure{}.txt", self.id)), rendered)?;
+        }
+        Ok(())
+    }
+}
+
+// -------------------------------------------------------------- ablation
+
+struct AblationCmd {
+    model: String,
+    target: f64,
+    out: Option<PathBuf>,
+}
+
+impl AblationCmd {
+    fn parse(args: &Args) -> Result<Self> {
+        Ok(Self {
+            model: args.req_str("model")?.to_string(),
+            target: args.get_or("target", 0.99f64)?,
+            out: args.get_str("out").map(PathBuf::from),
+        })
+    }
+
+    fn run(self, dir: &Path) -> Result<()> {
+        let mut ctx = ExperimentCtx::new(dir, &self.model)?;
+        let mut rendered = String::new();
+        for table in [
+            mpq::report::ablation::weight_only(&mut ctx, self.target)?,
+            mpq::report::ablation::accelerators(&mut ctx)?,
+            mpq::report::ablation::adjustment(dir, &self.model)?,
+        ] {
+            let text = table.render();
+            println!("{text}");
+            rendered.push_str(&text);
+        }
+        if let Some(dir_out) = &self.out {
+            std::fs::create_dir_all(dir_out)?;
+            std::fs::write(dir_out.join(format!("ablation_{}.txt", self.model)), rendered)?;
+        }
+        Ok(())
+    }
+}
+
+// ----------------------------------------------------------------- serve
+
+struct ServeCmd {
+    model: String,
+    bits: f32,
+    requests: usize,
+    concurrency: usize,
+    opts: mpq::server::ServeOptions,
+}
+
+impl ServeCmd {
+    fn parse(args: &Args) -> Result<Self> {
+        let deadline_ms = args.get_or("deadline-ms", 0u64)?;
+        Ok(Self {
+            model: args.req_str("model")?.to_string(),
+            bits: args.get_or("bits", 8.0f32)?,
+            requests: args.get_or("requests", 256usize)?,
+            concurrency: args.get_or("concurrency", 8usize)?.max(1),
+            opts: mpq::server::ServeOptions {
+                max_batch: args.get_or("max-batch", 32usize)?,
+                max_wait: std::time::Duration::from_micros(args.get_or("wait-us", 500u64)?),
+                workers: args.get_or("workers", 2usize)?,
+                queue_depth: args.get_or("queue-depth", 256usize)?,
+                deadline: (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms)),
+                ..Default::default()
+            },
+        })
+    }
+
+    /// Drive the batched multi-worker server with concurrent clients and
+    /// print latency percentiles — the QoS view the paper optimizes for.
+    fn run(self, dir: &Path) -> Result<()> {
+        let model = self.model.clone();
+        let concurrency = self.concurrency;
+        // Build the serving session through the front door: one context to
+        // learn shapes, produce examples from val, and calibrate a single
+        // time (persisting the scales) — the pool workers all load those
+        // scales instead of re-running calibration.
+        let spec = SearchSpec::new(model.as_str()).artifacts_dir(dir).workers(self.opts.workers);
+        let mut session = spec.open()?;
+        session.ctx.ensure_calibrated()?;
+        let n = session.ctx.pipeline.num_quant_layers();
+        let val = &session.ctx.pipeline.artifacts.val;
+        let val_count = val.count;
+        let examples: Vec<mpq::runtime::HostTensor> =
+            (0..self.requests).map(|i| val.x.slice_rows(i % val_count, 1)).collect();
+
+        let cfg = QuantConfig::uniform(n, self.bits);
+        let (handle, join) = session.into_server(cfg, self.opts)?;
+
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|s| {
+            for c in 0..concurrency {
+                let handle = handle.clone();
+                let examples = &examples;
+                s.spawn(move || {
+                    for (i, ex) in examples.iter().enumerate() {
+                        if i % concurrency == c {
+                            let _ = handle.infer(ex.clone());
+                        }
+                    }
+                });
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = handle.stats();
+        handle.shutdown();
+        join.join().map_err(|_| anyhow::anyhow!("serve dispatcher panicked"))?;
+        println!(
+            "served {} requests in {wall:.2}s ({:.1} req/s) @ uniform {}b \
+             x{concurrency} clients ({} batches)",
+            stats.requests,
+            stats.requests as f64 / wall,
+            self.bits,
+            stats.batches,
+        );
+        println!(
+            "latency: mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms",
+            stats.mean_us() / 1e3,
+            stats.percentile_us(0.5) as f64 / 1e3,
+            stats.percentile_us(0.95) as f64 / 1e3,
+            stats.percentile_us(0.99) as f64 / 1e3,
+        );
+        println!(
+            "admission: rejected={} deadline_missed={} errors={} max_queue_depth={}",
+            stats.rejected, stats.deadline_missed, stats.errors, stats.max_queue_depth
+        );
+        for w in &stats.per_worker {
+            println!(
+                "worker {}: {} batches, {} requests, mean fill {:.2}",
+                w.worker,
+                w.batches,
+                w.requests,
+                w.mean_batch_fill()
+            );
+        }
+        Ok(())
+    }
 }

@@ -1,137 +1,30 @@
 //! Experiment drivers — one per paper table/figure (DESIGN.md §5).
+//!
+//! Contexts are constructed through the [`crate::api`] front door:
+//! [`ExperimentCtx`] is a re-export of [`crate::api::ModelContext`], so
+//! every table/figure run shares the CLI's spec-driven pipeline, cost
+//! backend, and eval-cache wiring.
 
 use std::time::Instant;
 
-use anyhow::Context;
-
-use crate::coordinator::{Pipeline, SearchAlgo};
-use crate::latency::{AccelModel, CostModel};
-use crate::quant::{CalibrationOptions, QuantConfig, Scales, FLOAT_BITS, QUANT_BITS};
+use crate::coordinator::SearchAlgo;
+use crate::quant::{QuantConfig, FLOAT_BITS, QUANT_BITS};
 use crate::report::{aggregate, CellResult, Table};
 use crate::sensitivity::{self, MetricKind, Sensitivity};
 use crate::Result;
 
 use super::table::fmt_pct;
 
+/// The model context every experiment drives (pipeline + cost model +
+/// calibration state), re-exported under its historical name.
+pub use crate::api::ModelContext as ExperimentCtx;
+
 /// Seeds used for the Random (uninformed) baseline — 5 trials, as in the
 /// paper's Tables 2/3.
 pub const RANDOM_SEEDS: [u64; 5] = [11, 22, 33, 44, 55];
 
 /// Hutchinson / noise trials used by the metric computations.
-pub const METRIC_TRIALS: usize = 5;
-
-/// A model pipeline + its cost models + calibration state.
-pub struct ExperimentCtx {
-    pub pipeline: Pipeline,
-    pub cost: CostModel,
-    calibrated: bool,
-}
-
-impl ExperimentCtx {
-    pub fn new(artifacts_dir: &std::path::Path, model: &str) -> Result<Self> {
-        let pipeline = Pipeline::new(artifacts_dir, model)
-            .with_context(|| format!("building pipeline for {model}"))?;
-        let cost = CostModel::new(&pipeline.artifacts.manifest, &AccelModel::a100_like());
-        Ok(Self { pipeline, cost, calibrated: false })
-    }
-
-    /// Calibrate scales once per context; reuse a cached scale file when
-    /// the artifacts directory already holds one from a previous run. Once
-    /// the scales are final, the persistent cross-run eval cache is
-    /// attached, so repeated table/ablation runs skip already-measured
-    /// configurations entirely.
-    pub fn ensure_calibrated(&mut self) -> Result<()> {
-        if self.calibrated {
-            return Ok(());
-        }
-        let path = self
-            .pipeline
-            .artifacts
-            .dir
-            .join(format!("{}_scales.json", self.pipeline.artifacts.manifest.model));
-        let mut loaded = false;
-        if path.is_file() {
-            let scales = Scales::load(&path)?;
-            if scales.num_layers() == self.pipeline.num_quant_layers() {
-                self.pipeline.scales = scales;
-                self.pipeline.sync_scales()?;
-                eprintln!("[calibration] loaded cached scales from {}", path.display());
-                loaded = true;
-            }
-        }
-        if !loaded {
-            let report = self.pipeline.calibrate(&CalibrationOptions::default())?;
-            eprintln!(
-                "[calibration] adjusted scales over {} steps: loss {:.4} -> {:.4}",
-                report.steps, report.loss_before, report.loss_after
-            );
-            self.pipeline.scales.save(&path)?;
-        }
-        let cache_path = self
-            .pipeline
-            .artifacts
-            .dir
-            .join(format!("{}_evalcache.json", self.pipeline.artifacts.manifest.model));
-        self.pipeline.attach_eval_cache(&cache_path);
-        if let Some(cache) = self.pipeline.eval_cache() {
-            if !cache.is_empty() {
-                eprintln!(
-                    "[eval-cache] loaded {} exact results from {}",
-                    cache.len(),
-                    cache_path.display()
-                );
-            }
-        }
-        self.calibrated = true;
-        Ok(())
-    }
-
-    pub fn model(&self) -> String {
-        self.pipeline.artifacts.manifest.model.clone()
-    }
-
-    /// Compute a sensitivity metric, caching scores on disk keyed by
-    /// (model, metric, trials, seed) — Hessian/Noise are the most expensive
-    /// steps of a table run and are identical across invocations (§Perf).
-    pub fn cached_sensitivity(
-        &mut self,
-        metric: MetricKind,
-        trials: usize,
-        seed: u64,
-    ) -> Result<Sensitivity> {
-        use crate::util::json::{self, Value};
-        let path = self.pipeline.artifacts.dir.join(format!(
-            "{}_sens_{}_{}_{}.json",
-            self.model(),
-            metric.label().to_lowercase(),
-            trials,
-            seed
-        ));
-        if metric != MetricKind::Random && path.is_file() {
-            if let Ok(v) = json::parse(&std::fs::read_to_string(&path)?) {
-                let scores: Option<Vec<f64>> = v
-                    .req("scores")
-                    .ok()
-                    .and_then(|s| s.as_arr().ok())
-                    .map(|arr| arr.iter().filter_map(|x| x.as_f64().ok()).collect());
-                if let Some(scores) = scores {
-                    if scores.len() == self.pipeline.num_quant_layers() {
-                        return Ok(Sensitivity::from_scores(metric, scores));
-                    }
-                }
-            }
-        }
-        let sens = sensitivity::compute(&mut self.pipeline, metric, trials, seed)?;
-        if metric != MetricKind::Random {
-            let v = Value::obj(vec![(
-                "scores",
-                Value::Arr(sens.scores.iter().map(|&s| Value::Num(s)).collect()),
-            )]);
-            let _ = std::fs::write(&path, v.to_string());
-        }
-        Ok(sens)
-    }
-}
+pub const METRIC_TRIALS: usize = crate::api::DEFAULT_TRIALS;
 
 /// Run one search cell: sensitivity ordering + algorithm + accuracy target.
 pub fn run_cell(
@@ -154,6 +47,7 @@ pub fn run_cell(
         target_frac,
         rel_size_pct: ctx.cost.rel_size(&outcome.config) * 100.0,
         rel_latency_pct: ctx.cost.rel_latency(&outcome.config) * 100.0,
+        cost_provenance: ctx.cost.provenance().to_string(),
         accuracy: outcome.accuracy,
         met_target: outcome.accuracy >= target,
         evals: outcome.evals,

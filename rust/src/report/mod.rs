@@ -24,6 +24,9 @@ pub struct CellResult {
     pub rel_size_pct: f64,
     /// Latency relative to the fp16 baseline, percent.
     pub rel_latency_pct: f64,
+    /// Which cost source priced this cell (`analytical/<accel>` or
+    /// `measured/<file>`).
+    pub cost_provenance: String,
     /// Absolute validation accuracy of the final configuration.
     pub accuracy: f64,
     /// Whether the final configuration met the target.
@@ -46,6 +49,7 @@ impl CellResult {
             ("target_frac", Value::Num(self.target_frac)),
             ("rel_size_pct", Value::Num(self.rel_size_pct)),
             ("rel_latency_pct", Value::Num(self.rel_latency_pct)),
+            ("cost_provenance", Value::Str(self.cost_provenance.clone())),
             ("accuracy", Value::Num(self.accuracy)),
             ("met_target", Value::Bool(self.met_target)),
             ("evals", Value::Num(self.evals as f64)),
@@ -84,6 +88,7 @@ mod tests {
             target_frac: 0.99,
             rel_size_pct: size,
             rel_latency_pct: lat,
+            cost_provenance: "analytical/a100-like".into(),
             accuracy: 0.99,
             met_target: true,
             evals: 1,

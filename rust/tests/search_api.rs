@@ -1,0 +1,310 @@
+//! Properties of the unified search API (`mpq::api`), all artifact-free:
+//!
+//! * With `Objective = AccuracyTarget`, `run_search` is bit-identical to
+//!   the pre-redesign `SearchAlgo::run` path at 1/2/8 workers, for both
+//!   algorithms.
+//! * `LatencyBudget` is monotone: tighter budgets quantize further (never
+//!   less), and stop as soon as the budget is met.
+//! * Checkpoint/resume: a run killed mid-search resumes to the *exact*
+//!   final configuration and decision-eval count of an uninterrupted run.
+//! * The `SearchEvent` stream is consistent with the reported outcome.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use mpq::api::{
+    checkpoint_fingerprint, run_search, AccuracyTarget, Checkpoint, CostModel, FootprintBudget,
+    LatencyBudget, Objective, SearchEvent, SyntheticCost, SyntheticEnv,
+};
+use mpq::coordinator::{ParallelEnv, SearchAlgo, SearchOutcome};
+use mpq::quant::QUANT_BITS;
+
+const WORKER_COUNTS: [usize; 3] = [1, 2, 8];
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("mpq_search_api_{name}.json"))
+}
+
+fn assert_same(a: &SearchOutcome, b: &SearchOutcome, what: &str) {
+    assert_eq!(a.config, b.config, "{what}: config");
+    assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits(), "{what}: accuracy");
+    assert_eq!(a.evals, b.evals, "{what}: decision evals");
+}
+
+#[test]
+fn accuracy_target_matches_pre_redesign_path_at_all_worker_counts() {
+    for algo in [SearchAlgo::Greedy, SearchAlgo::Bisection] {
+        for seed in [1u64, 2, 3, 4, 5] {
+            let n = 8 + (seed as usize) * 5;
+            let env = SyntheticEnv::new(n, seed);
+            let order = env.order();
+            let target = 0.93;
+            // Pre-redesign entry point: plain accuracy floor, one worker.
+            let mut seq = ParallelEnv::new(&env, 1);
+            let baseline = algo.run(&mut seq, &order, &QUANT_BITS, target).unwrap();
+            assert!(baseline.accuracy >= target, "baseline should meet its floor");
+            // Objective-driven path at every worker count.
+            let objective = AccuracyTarget::new(target);
+            for workers in WORKER_COUNTS {
+                let env = SyntheticEnv::new(n, seed);
+                let mut penv = ParallelEnv::new(&env, workers);
+                let out =
+                    run_search(algo, &mut penv, &order, &QUANT_BITS, &objective, None, None)
+                        .unwrap();
+                assert_same(&out, &baseline, &format!("{algo:?} seed {seed} x{workers}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn latency_budget_is_monotone_and_stops_at_the_budget() {
+    let n = 24;
+    let seed = 11u64;
+    let cost: Arc<SyntheticCost> = Arc::new(SyntheticCost::new(n, seed));
+    let floor = 0.5; // permissive floor: most layers can quantize
+    let run = |objective: &dyn Objective| -> SearchOutcome {
+        let env = SyntheticEnv::new(n, seed);
+        let order = env.order();
+        let mut penv = ParallelEnv::new(&env, 1);
+        run_search(SearchAlgo::Greedy, &mut penv, &order, &QUANT_BITS, objective, None, None)
+            .unwrap()
+    };
+    let exhaustive = run(&AccuracyTarget::new(floor));
+    let exhaustive_lat = cost.rel_latency(&exhaustive.config);
+
+    let mut prev_lat = f64::INFINITY;
+    let mut prev_evals = 0usize;
+    for budget in [1.0, 0.85, 0.7, 0.55, 0.4] {
+        let out = run(&LatencyBudget::new(floor, budget, cost.clone()));
+        let lat = cost.rel_latency(&out.config);
+        // Tighter budgets quantize at least as far and never re-litigate
+        // earlier decisions: latency non-increasing, evals non-decreasing.
+        assert!(lat <= prev_lat + 1e-12, "budget {budget}: latency regressed {lat} > {prev_lat}");
+        assert!(out.evals >= prev_evals, "budget {budget}: evals shrank");
+        // Either the budget was met, or the search ran to exhaustion
+        // (identical to the accuracy-only outcome).
+        assert!(
+            lat <= budget || out.config == exhaustive.config,
+            "budget {budget}: ended at {lat} without exhausting the search"
+        );
+        // Budgeted runs never quantize beyond the exhaustive endpoint.
+        assert!(lat >= exhaustive_lat - 1e-12, "budget {budget}: beyond exhaustive endpoint");
+        assert!(out.accuracy >= floor, "budget {budget}: accuracy floor violated");
+        prev_lat = lat;
+        prev_evals = out.evals;
+    }
+    // A generous budget stops well before exhaustion.
+    let generous = run(&LatencyBudget::new(floor, 0.95, cost.clone()));
+    assert!(generous.evals < exhaustive.evals, "a near-free budget should stop early");
+}
+
+#[test]
+fn latency_budget_stops_bisection_mid_width() {
+    let n = 24;
+    let seed = 11u64;
+    let cost: Arc<SyntheticCost> = Arc::new(SyntheticCost::new(n, seed));
+    let floor = 0.5;
+    let run = |objective: &dyn Objective| -> SearchOutcome {
+        let env = SyntheticEnv::new(n, seed);
+        let order = env.order();
+        let mut penv = ParallelEnv::new(&env, 1);
+        run_search(SearchAlgo::Bisection, &mut penv, &order, &QUANT_BITS, objective, None, None)
+            .unwrap()
+    };
+    let exhaustive = run(&AccuracyTarget::new(floor));
+    for budget in [0.95, 0.8, 0.6] {
+        let out = run(&LatencyBudget::new(floor, budget, cost.clone()));
+        let lat = cost.rel_latency(&out.config);
+        assert!(
+            lat <= budget || out.config == exhaustive.config,
+            "budget {budget}: ended at {lat} without exhausting the search"
+        );
+        assert!(out.evals <= exhaustive.evals, "budget {budget}: more evals than exhaustive");
+        assert!(
+            lat >= cost.rel_latency(&exhaustive.config) - 1e-12,
+            "budget {budget}: quantized beyond the exhaustive endpoint"
+        );
+        assert!(out.accuracy >= floor, "budget {budget}: accuracy floor violated");
+    }
+}
+
+#[test]
+fn footprint_budget_stops_once_size_is_met() {
+    let n = 16;
+    let cost: Arc<SyntheticCost> = Arc::new(SyntheticCost::new(n, 5));
+    let env = SyntheticEnv::new(n, 5);
+    let order = env.order();
+    let objective = FootprintBudget::new(0.5, 0.6, cost.clone());
+    let mut penv = ParallelEnv::new(&env, 2);
+    let out =
+        run_search(SearchAlgo::Greedy, &mut penv, &order, &QUANT_BITS, &objective, None, None)
+            .unwrap();
+    assert!(cost.rel_size(&out.config) <= 0.6, "size budget not met");
+    assert!(out.accuracy >= 0.5);
+}
+
+#[test]
+fn checkpoint_resume_matches_uninterrupted_run() {
+    for algo in [SearchAlgo::Greedy, SearchAlgo::Bisection] {
+        for workers in [1usize, 2] {
+            for abort_at in [1usize, 3, 7, 15] {
+                let name = format!("resume_{algo:?}_{workers}_{abort_at}").to_lowercase();
+                let path = tmp(&name);
+                let _ = std::fs::remove_file(&path);
+                let n = 18;
+                let seed = 21u64;
+                let target = 0.9;
+                let objective = AccuracyTarget::new(target);
+                let order: Vec<usize> = (0..n).collect();
+                let fp = checkpoint_fingerprint(
+                    algo,
+                    &QUANT_BITS,
+                    &objective.describe(),
+                    &order,
+                    "search-api-test",
+                );
+
+                // Uninterrupted baseline.
+                let env = SyntheticEnv::new(n, seed);
+                let mut penv = ParallelEnv::new(&env, workers);
+                let baseline =
+                    run_search(algo, &mut penv, &order, &QUANT_BITS, &objective, None, None)
+                        .unwrap();
+
+                // Interrupted run: the environment dies after `abort_at`
+                // raw evaluations; whatever decisions were made are on
+                // disk.
+                let env = SyntheticEnv::new(n, seed).abort_after(abort_at);
+                let mut penv = ParallelEnv::new(&env, workers);
+                let mut ck = Checkpoint::attach(&path, &fp, false).unwrap();
+                let interrupted = run_search(
+                    algo,
+                    &mut penv,
+                    &order,
+                    &QUANT_BITS,
+                    &objective,
+                    None,
+                    Some(&mut ck),
+                );
+                if interrupted.is_ok() {
+                    // Tiny searches can finish before the abort fires;
+                    // resume below must still reproduce the outcome.
+                    assert_same(interrupted.as_ref().unwrap(), &baseline, &name);
+                }
+                let recorded = ck.len();
+                drop(ck);
+
+                // Resume: replays the recorded prefix without evaluating,
+                // then continues live on a healthy environment.
+                let env = SyntheticEnv::new(n, seed);
+                let mut penv = ParallelEnv::new(&env, workers);
+                let mut ck = Checkpoint::attach(&path, &fp, true).unwrap();
+                let resumed = run_search(
+                    algo,
+                    &mut penv,
+                    &order,
+                    &QUANT_BITS,
+                    &objective,
+                    None,
+                    Some(&mut ck),
+                )
+                .unwrap();
+                assert_same(&resumed, &baseline, &format!("{name}: resumed vs uninterrupted"));
+                assert_eq!(ck.replayed(), recorded, "{name}: full prefix should replay");
+                if workers == 1 {
+                    // Sequential raw evals are 1:1 with decisions, so the
+                    // resumed run evaluates exactly the unreplayed tail
+                    // (plus the final exact eval, already in `evals`).
+                    assert_eq!(
+                        env.evals(),
+                        baseline.evals - recorded,
+                        "{name}: replayed decisions must not touch the environment"
+                    );
+                }
+                let _ = std::fs::remove_file(&path);
+            }
+        }
+    }
+}
+
+#[test]
+fn resume_with_wrong_search_is_rejected() {
+    let path = tmp("wrong_fingerprint");
+    let _ = std::fs::remove_file(&path);
+    let objective = AccuracyTarget::new(0.9);
+    let order: Vec<usize> = (0..6).collect();
+    let fp_greedy = checkpoint_fingerprint(
+        SearchAlgo::Greedy,
+        &QUANT_BITS,
+        &objective.describe(),
+        &order,
+        "ctx",
+    );
+    let env = SyntheticEnv::new(6, 1);
+    let mut penv = ParallelEnv::new(&env, 1);
+    let mut ck = Checkpoint::attach(&path, &fp_greedy, false).unwrap();
+    run_search(
+        SearchAlgo::Greedy,
+        &mut penv,
+        &order,
+        &QUANT_BITS,
+        &objective,
+        None,
+        Some(&mut ck),
+    )
+    .unwrap();
+    drop(ck);
+    // Same file, different algorithm (or objective, or order) -> reject.
+    let fp_bisect = checkpoint_fingerprint(
+        SearchAlgo::Bisection,
+        &QUANT_BITS,
+        &objective.describe(),
+        &order,
+        "ctx",
+    );
+    assert!(Checkpoint::attach(&path, &fp_bisect, true).is_err());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn event_stream_is_consistent_with_the_outcome() {
+    let n = 14;
+    let env = SyntheticEnv::new(n, 9);
+    let order = env.order();
+    let cost: Arc<SyntheticCost> = Arc::new(SyntheticCost::new(n, 9));
+    let objective = LatencyBudget::new(0.6, 0.75, cost);
+    let mut events: Vec<SearchEvent> = Vec::new();
+    let mut obs = |ev: &SearchEvent| events.push(ev.clone());
+    let mut penv = ParallelEnv::new(&env, 4);
+    let out = run_search(
+        SearchAlgo::Greedy,
+        &mut penv,
+        &order,
+        &QUANT_BITS,
+        &objective,
+        Some(&mut obs),
+        None,
+    )
+    .unwrap();
+
+    assert!(matches!(events.first(), Some(SearchEvent::Started { .. })));
+    assert!(matches!(events.last(), Some(SearchEvent::Finished { .. })));
+    let decisions = events
+        .iter()
+        .filter(|e| matches!(e, SearchEvent::Decision { replayed: false, .. }))
+        .count();
+    assert_eq!(decisions, out.evals - 1, "one Decision per eval, plus the final exact eval");
+    // The budget stop is visible in the stream, with the cost recorded.
+    let satisfied = events.iter().any(|e| match e {
+        SearchEvent::BudgetSatisfied { cost } => *cost <= 0.75,
+        _ => false,
+    });
+    assert!(satisfied, "budget satisfaction should be announced");
+    // Every live decision carries the objective's tracked cost.
+    for e in &events {
+        if let SearchEvent::Decision { cost, replayed: false, .. } = e {
+            assert!(cost.is_some(), "latency objectives report cost per decision");
+        }
+    }
+}

@@ -2,18 +2,24 @@
 //! metrics for one model, print the per-layer scores and orderings, and the
 //! pairwise Levenshtein distances between orderings.
 //!
+//! With a worker count, calibration and the Hessian trials fan across a
+//! pipeline pool through the sharded stage driver — scores are
+//! bit-identical at any worker count, only wall-clock changes.
+//!
 //! ```sh
-//! cargo run --release --example sensitivity_analysis [-- bert_s]
+//! cargo run --release --example sensitivity_analysis [-- bert_s [workers]]
 //! ```
 
 use mpq::api::SearchSpec;
-use mpq::sensitivity::{self, levenshtein, MetricKind, Sensitivity};
+use mpq::sensitivity::{levenshtein, MetricKind, Sensitivity};
 
 const METRIC_TRIALS: usize = mpq::api::DEFAULT_TRIALS;
 
 fn main() -> mpq::Result<()> {
     let model = std::env::args().nth(1).unwrap_or_else(|| "resnet_s".to_string());
-    let mut ctx = SearchSpec::new(model.as_str()).open_context()?;
+    let workers: usize =
+        std::env::args().nth(2).and_then(|w| w.parse().ok()).unwrap_or(1).max(1);
+    let mut ctx = SearchSpec::new(model.as_str()).workers(workers).open_context()?;
     ctx.ensure_calibrated()?;
 
     let names: Vec<String> = ctx
@@ -29,8 +35,14 @@ fn main() -> mpq::Result<()> {
     let mut results: Vec<Sensitivity> = Vec::new();
     for mk in metrics {
         let t0 = std::time::Instant::now();
-        let s = sensitivity::compute(&mut ctx.pipeline, mk, METRIC_TRIALS, 0)?;
-        println!("{} computed in {:.1}s", mk.label(), t0.elapsed().as_secs_f64());
+        // Disk-cached by (model, metric, trials, seed); Hessian shards its
+        // trials across the context's pool when workers > 1.
+        let s = ctx.cached_sensitivity(mk, METRIC_TRIALS, 0)?;
+        println!(
+            "{} computed in {:.1}s ({workers} worker(s))",
+            mk.label(),
+            t0.elapsed().as_secs_f64()
+        );
         results.push(s);
     }
 

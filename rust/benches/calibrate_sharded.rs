@@ -1,0 +1,131 @@
+//! Sharded calibration & Hessian-trace benchmark over the synthetic stage
+//! runner.
+//!
+//! Runs the real sharded driver — [`calibrate_sharded`] /
+//! [`hessian_trace_sharded`] with scatter over scoped threads and
+//! fixed-order host reduction — at 1/2/8 workers, with a deterministic
+//! CPU spin per batch/probe standing in for the device round-trip, so
+//! multi-worker scaling is real parallel work. Every configuration is
+//! asserted bit-identical to the 1-worker reference before timing (the
+//! sharded-determinism contract), and per-worker-count wall-clock fields
+//! land in `BENCH_calib.json` (or `$MPQ_BENCH_CALIB_OUT`) next to
+//! `BENCH_search.json` / `BENCH_serve.json`. `MPQ_BENCH_FAST=1` shrinks
+//! the measurement budget for CI smoke runs.
+
+mod harness;
+
+use harness::{black_box, fmt_ns, Bench};
+use mpq::api::SyntheticStage;
+use mpq::coordinator::{calibrate_sharded, hessian_trace_sharded};
+use mpq::quant::{CalibrationOptions, Scales};
+use mpq::util::json::Value;
+
+const LAYERS: usize = 24;
+const BATCHES: usize = 32;
+const TRIALS: usize = 16;
+const SEED: u64 = 42;
+
+fn opts() -> CalibrationOptions {
+    CalibrationOptions { epochs: 2, grad_batches: 8, ..Default::default() }
+}
+
+fn stage(workers: usize, work: u32) -> SyntheticStage {
+    SyntheticStage::new(LAYERS, BATCHES, workers, SEED).with_work(work)
+}
+
+fn scales_bits(s: &Scales) -> Vec<u32> {
+    s.alpha_w
+        .iter()
+        .chain(&s.gamma_w)
+        .chain(&s.alpha_a)
+        .chain(&s.gamma_a)
+        .map(|x| x.to_bits())
+        .collect()
+}
+
+fn main() {
+    let fast = std::env::var_os("MPQ_BENCH_FAST").is_some();
+    let work: u32 = std::env::var("MPQ_CALIB_WORK")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if fast { 40_000 } else { 400_000 });
+    let reps = if fast { 2 } else { 5 };
+    let b = Bench::new("calibrate_sharded");
+
+    // Spin-free references: parity must hold on the pure math.
+    let (ref_scales, ref_report) =
+        calibrate_sharded(&mut stage(1, 0), &opts(), None).expect("reference calibration");
+    let ref_traces =
+        hessian_trace_sharded(&mut stage(1, 0), TRIALS, SEED).expect("reference traces");
+
+    let mut json_rows = Vec::new();
+    let mut calib_base_ns = 0.0f64;
+    let mut hvp_base_ns = 0.0f64;
+    for workers in [1usize, 2, 8] {
+        // Bit-identity at this worker count before timing anything.
+        let (scales, report) =
+            calibrate_sharded(&mut stage(workers, 0), &opts(), None).expect("calibration");
+        assert_eq!(
+            scales_bits(&scales),
+            scales_bits(&ref_scales),
+            "workers {workers}: scales drifted from the 1-worker reference"
+        );
+        assert_eq!(report.steps, ref_report.steps, "workers {workers}: steps drifted");
+        let traces =
+            hessian_trace_sharded(&mut stage(workers, 0), TRIALS, SEED).expect("traces");
+        let tb = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(
+            tb(&traces),
+            tb(&ref_traces),
+            "workers {workers}: traces drifted from the 1-worker reference"
+        );
+
+        let calib = b.bench_n(&format!("calibrate_n{LAYERS}_b{BATCHES}_w{workers}"), reps, || {
+            let mut s = stage(workers, work);
+            black_box(calibrate_sharded(&mut s, &opts(), None).expect("calibration"));
+        });
+        let hvp = b.bench_n(&format!("hessian_t{TRIALS}_w{workers}"), reps, || {
+            let mut s = stage(workers, work);
+            black_box(hessian_trace_sharded(&mut s, TRIALS, SEED).expect("traces"));
+        });
+        if workers == 1 {
+            calib_base_ns = calib.mean_ns;
+            hvp_base_ns = hvp.mean_ns;
+        }
+        let calib_speedup = calib_base_ns / calib.mean_ns;
+        let hvp_speedup = hvp_base_ns / hvp.mean_ns;
+        println!(
+            "    -> {workers} worker(s): calibrate {} ({calib_speedup:.2}x), \
+             hessian {} ({hvp_speedup:.2}x)",
+            fmt_ns(calib.mean_ns),
+            fmt_ns(hvp.mean_ns),
+        );
+        json_rows.push(Value::obj(vec![
+            ("workers", Value::Num(workers as f64)),
+            ("calibrate_wall_ns", Value::Num(calib.mean_ns)),
+            ("calibrate_spread_ns", Value::Num(calib.spread_ns)),
+            ("calibrate_speedup_vs_1", Value::Num(calib_speedup)),
+            ("hessian_wall_ns", Value::Num(hvp.mean_ns)),
+            ("hessian_spread_ns", Value::Num(hvp.spread_ns)),
+            ("hessian_speedup_vs_1", Value::Num(hvp_speedup)),
+            ("adam_steps", Value::Num(report.steps as f64)),
+            ("scales_match_reference", Value::Bool(true)),
+            ("traces_match_reference", Value::Bool(true)),
+        ]));
+    }
+
+    let out_path =
+        std::env::var("MPQ_BENCH_CALIB_OUT").unwrap_or_else(|_| "BENCH_calib.json".into());
+    let doc = Value::obj(vec![
+        ("suite", Value::Str("calibrate_sharded".into())),
+        ("layers", Value::Num(LAYERS as f64)),
+        ("batches", Value::Num(BATCHES as f64)),
+        ("trials", Value::Num(TRIALS as f64)),
+        ("spin_work", Value::Num(f64::from(work))),
+        ("results", Value::Arr(json_rows)),
+    ]);
+    match std::fs::write(&out_path, doc.to_string()) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+}

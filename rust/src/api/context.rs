@@ -5,20 +5,29 @@
 //! the API front door so every entry point (CLI, reports, examples,
 //! serving startup) constructs pipelines, cost backends, and eval caches
 //! the same way. `report::experiments` re-exports it under its old name.
+//!
+//! With `workers > 1` the context owns a shared [`PipelinePool`]: sharded
+//! calibration and Hessian-trace jobs run on it through
+//! [`crate::coordinator::shard`], and the context's [`SearchEnv`] impl
+//! evaluates through it — so searches, report grids, and `mpq
+//! calibrate`/`mpq sensitivity` all acquire scales and results from one
+//! pool, built once.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::Context as _;
 
-use crate::coordinator::Pipeline;
+use crate::coordinator::{
+    shard, EvalCache, EvalResult, Pipeline, PipelinePool, SearchEnv, StageRunner,
+};
 use crate::latency::{AccelModel, CostModel, DeployScale, KernelTable};
 use crate::model::Manifest;
-use crate::quant::{CalibrationOptions, Scales};
+use crate::quant::{AdjustReport, CalibrationOptions, QuantConfig, Scales};
 use crate::sensitivity::{self, MetricKind, Sensitivity};
 use crate::Result;
 
-use super::{BackendSpec, CacheSpec, ScaleSpec, SearchSpec};
+use super::{log_event, BackendSpec, CacheSpec, ObjectiveSpec, ScaleSpec, SearchEvent, SearchSpec};
 
 impl BackendSpec {
     /// Build the cost model this backend describes for `manifest`.
@@ -49,22 +58,34 @@ impl BackendSpec {
     }
 }
 
-/// A model pipeline + its cost model + calibration state.
+/// A model pipeline + its cost model + calibration state (and, at
+/// `workers > 1`, the shared worker pool every stage fans across).
 pub struct ModelContext {
     pub pipeline: Pipeline,
     pub cost: Arc<CostModel>,
+    /// Objective the spec asked for; report cells build it per target.
+    pub objective: ObjectiveSpec,
     cache: CacheSpec,
     calibrated: bool,
+    workers: usize,
+    pool: Option<PipelinePool>,
 }
 
 impl ModelContext {
+    /// On-disk sensitivity cache schema version. Bumped to 2 when Hessian
+    /// probes became trial-addressable (`probe_seed(seed, trial)`): v1
+    /// files were produced by a sequentially shared RNG and would order
+    /// layers differently, so they are recomputed rather than trusted.
+    pub const SENS_CACHE_VERSION: usize = 2;
+
     /// Context with default spec settings (A100-like analytical costing,
-    /// reference deploy scale, unbounded cache).
+    /// reference deploy scale, unbounded cache, one worker).
     pub fn new(artifacts_dir: &Path, model: &str) -> Result<Self> {
         Self::from_spec(&SearchSpec::new(model).artifacts_dir(artifacts_dir))
     }
 
-    /// Build the context a [`SearchSpec`] describes.
+    /// Build the context a [`SearchSpec`] describes. The worker pool (for
+    /// `workers > 1`) is built lazily on first calibration.
     pub fn from_spec(spec: &SearchSpec) -> Result<Self> {
         spec.validate()?;
         let dir = spec.resolved_artifacts_dir()?;
@@ -72,7 +93,27 @@ impl ModelContext {
             .with_context(|| format!("building pipeline for {}", spec.model))?;
         let cost =
             Arc::new(spec.backend.cost_model(&pipeline.artifacts.manifest, spec.deploy_scale)?);
-        Ok(Self { pipeline, cost, cache: spec.cache.clone(), calibrated: false })
+        Ok(Self {
+            pipeline,
+            cost,
+            objective: spec.objective,
+            cache: spec.cache.clone(),
+            calibrated: false,
+            workers: spec.workers.max(1),
+            pool: None,
+        })
+    }
+
+    /// Worker pipelines evaluation and calibration fan across (1 = the
+    /// single context pipeline).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The shared worker pool, if one has been built (`workers > 1` and
+    /// calibration has run).
+    pub fn pool(&self) -> Option<&PipelinePool> {
+        self.pool.as_ref()
     }
 
     /// Where this context's persistent eval cache lives.
@@ -95,53 +136,179 @@ impl ModelContext {
         self.cache.enabled
     }
 
+    /// Where this context persists calibrated scales.
+    pub fn scales_path(&self) -> PathBuf {
+        self.pipeline
+            .artifacts
+            .dir
+            .join(format!("{}_scales.json", self.pipeline.artifacts.manifest.model))
+    }
+
+    /// Build the shared pool on first use (`workers > 1`). Workers load
+    /// persisted scales when present; otherwise they start at identity
+    /// and receive the calibrated scales by broadcast.
+    fn ensure_pool(&mut self) -> Result<()> {
+        if self.workers <= 1 || self.pool.is_some() {
+            return Ok(());
+        }
+        let dir = self.pipeline.artifacts.dir.clone();
+        let model = self.pipeline.artifacts.manifest.model.clone();
+        let scales_path = self.scales_path();
+        let pool = PipelinePool::new(&dir, &model, self.workers, move |p| {
+            if scales_path.is_file() {
+                let scales = Scales::load(&scales_path)?;
+                if scales.num_layers() == p.num_quant_layers() {
+                    p.scales = scales;
+                    return p.sync_scales();
+                }
+            }
+            Ok(())
+        })?;
+        self.pool = Some(pool);
+        Ok(())
+    }
+
     /// Calibrate scales once per context; reuse a cached scale file when
-    /// the artifacts directory already holds one from a previous run. Once
-    /// the scales are final, the persistent cross-run eval cache is
-    /// attached (honoring the spec's path/capacity), so repeated
-    /// table/ablation runs skip already-measured configurations entirely.
+    /// the artifacts directory already holds one from a previous run.
+    /// Calibration runs through the sharded stage driver — on the shared
+    /// [`PipelinePool`] when `workers > 1`, on the context pipeline
+    /// otherwise; both are bit-identical. Once the scales are final, the
+    /// persistent cross-run eval cache is attached wherever evaluations
+    /// run (pool or pipeline, honoring the spec's path/capacity), so
+    /// repeated table/ablation runs skip already-measured configurations
+    /// entirely.
     pub fn ensure_calibrated(&mut self) -> Result<()> {
+        self.ensure_calibrated_with(None)
+    }
+
+    /// [`Self::ensure_calibrated`] with a typed [`SearchEvent`] observer;
+    /// `None` falls back to the stderr renderer
+    /// [`crate::api::log_event`].
+    pub fn ensure_calibrated_with(
+        &mut self,
+        observer: Option<&mut dyn FnMut(&SearchEvent)>,
+    ) -> Result<()> {
         if self.calibrated {
             return Ok(());
         }
-        let path = self
-            .pipeline
-            .artifacts
-            .dir
-            .join(format!("{}_scales.json", self.pipeline.artifacts.manifest.model));
+        let mut fallback = log_event;
+        let obs: &mut dyn FnMut(&SearchEvent) = match observer {
+            Some(o) => o,
+            None => &mut fallback,
+        };
+        self.ensure_pool()?;
+        let path = self.scales_path();
         let mut loaded = false;
         if path.is_file() {
             let scales = Scales::load(&path)?;
             if scales.num_layers() == self.pipeline.num_quant_layers() {
                 self.pipeline.scales = scales;
                 self.pipeline.sync_scales()?;
-                eprintln!("[calibration] loaded cached scales from {}", path.display());
+                // Pool workers load the same file at construction; the
+                // re-broadcast covers a pool built before the file existed.
+                if let Some(pool) = self.pool.as_mut() {
+                    pool.broadcast_scales(&self.pipeline.scales)?;
+                }
+                obs(&SearchEvent::ScalesLoaded { path: path.display().to_string() });
                 loaded = true;
             }
         }
         if !loaded {
-            let report = self.pipeline.calibrate(&CalibrationOptions::default())?;
-            eprintln!(
-                "[calibration] adjusted scales over {} steps: loss {:.4} -> {:.4}",
-                report.steps, report.loss_before, report.loss_after
-            );
-            self.pipeline.scales.save(&path)?;
+            self.calibrate_now(&CalibrationOptions::default(), &mut *obs)?;
         }
         if self.cache.enabled {
             let cache_path = self.eval_cache_path();
-            self.pipeline.attach_eval_cache_bounded(&cache_path, self.cache.capacity);
-            if let Some(cache) = self.pipeline.eval_cache() {
-                if !cache.is_empty() {
-                    eprintln!(
-                        "[eval-cache] loaded {} exact results from {}",
-                        cache.len(),
-                        cache_path.display()
-                    );
-                }
+            match self.pool.as_mut() {
+                Some(pool) => pool.attach_eval_cache(
+                    &cache_path,
+                    &self.pipeline.eval_context(),
+                    self.cache.capacity,
+                ),
+                None => self.pipeline.attach_eval_cache_bounded(&cache_path, self.cache.capacity),
+            }
+            let entries = match self.pool.as_ref() {
+                Some(pool) => pool.eval_cache_len(),
+                None => self.pipeline.eval_cache().map_or(0, EvalCache::len),
+            };
+            if entries > 0 {
+                obs(&SearchEvent::EvalCacheAttached {
+                    entries,
+                    path: cache_path.display().to_string(),
+                });
             }
         }
         self.calibrated = true;
         Ok(())
+    }
+
+    /// Force a fresh two-step scale estimation through the sharded driver
+    /// (ignoring any cached scale file), install the final scales on the
+    /// context pipeline and every pool worker, and persist them next to
+    /// the artifacts — the `mpq calibrate` entry point.
+    pub fn calibrate_with(
+        &mut self,
+        opts: &CalibrationOptions,
+        observer: Option<&mut dyn FnMut(&SearchEvent)>,
+    ) -> Result<AdjustReport> {
+        let mut fallback = log_event;
+        let obs: &mut dyn FnMut(&SearchEvent) = match observer {
+            Some(o) => o,
+            None => &mut fallback,
+        };
+        self.ensure_pool()?;
+        self.calibrate_now(opts, obs)
+    }
+
+    fn calibrate_now(
+        &mut self,
+        opts: &CalibrationOptions,
+        obs: &mut dyn FnMut(&SearchEvent),
+    ) -> Result<AdjustReport> {
+        let (scales, report) = match self.pool.as_mut() {
+            Some(pool) => shard::calibrate_sharded(pool, opts, Some(obs))?,
+            None => shard::calibrate_sharded(&mut self.pipeline, opts, Some(obs))?,
+        };
+        if self.pool.is_some() {
+            // The pool workers received the final scales by broadcast;
+            // mirror them onto the context pipeline.
+            self.pipeline.scales = scales;
+            self.pipeline.sync_scales()?;
+        }
+        self.pipeline.scales.save(&self.scales_path()).context("saving scales")?;
+        if self.calibrated && self.cache.enabled {
+            // Recalibration after ensure_calibrated: the scale change
+            // flushed and detached the previously attached eval cache
+            // (its context fingerprint no longer matched). Re-attach it
+            // under the new scales so the session keeps its cross-run
+            // caching.
+            let cache_path = self.eval_cache_path();
+            match self.pool.as_mut() {
+                Some(pool) => pool.attach_eval_cache(
+                    &cache_path,
+                    &self.pipeline.eval_context(),
+                    self.cache.capacity,
+                ),
+                None => self.pipeline.attach_eval_cache_bounded(&cache_path, self.cache.capacity),
+            }
+        }
+        Ok(report)
+    }
+
+    /// Persist whatever eval cache the active environment holds.
+    pub fn flush_eval_cache(&mut self) -> Result<()> {
+        match self.pool.as_ref() {
+            Some(pool) => pool.flush_eval_cache(),
+            None => self.pipeline.flush_eval_cache(),
+        }
+    }
+
+    /// Lookups the active environment answered without touching a device:
+    /// `(memo hits, persistent cross-run cache hits)`.
+    pub fn cache_hits(&self) -> (usize, usize) {
+        match self.pool.as_ref() {
+            Some(pool) => pool.cache_hits(),
+            None => (self.pipeline.stats.cache_hits, self.pipeline.stats.persistent_hits),
+        }
     }
 
     pub fn model(&self) -> String {
@@ -160,6 +327,12 @@ impl ModelContext {
     /// Compute a sensitivity metric, caching scores on disk keyed by
     /// (model, metric, trials, seed) — Hessian/Noise are the most expensive
     /// steps of a table run and are identical across invocations (§Perf).
+    /// Hessian runs through the sharded stage driver (pool when present):
+    /// both paths draw per-trial-seeded probes, so the cached scores are
+    /// worker-count independent. Cache files carry
+    /// [`Self::SENS_CACHE_VERSION`]; files written under an older probe
+    /// scheme (v1: sequentially shared Hessian RNG) are recomputed, so a
+    /// stale cache can never break cross-machine determinism.
     pub fn cached_sensitivity(
         &mut self,
         metric: MetricKind,
@@ -176,26 +349,62 @@ impl ModelContext {
         ));
         if metric != MetricKind::Random && path.is_file() {
             if let Ok(v) = json::parse(&std::fs::read_to_string(&path)?) {
+                let version =
+                    v.req("version").ok().and_then(|x| x.as_usize().ok()).unwrap_or(1);
                 let scores: Option<Vec<f64>> = v
                     .req("scores")
                     .ok()
                     .and_then(|s| s.as_arr().ok())
                     .map(|arr| arr.iter().filter_map(|x| x.as_f64().ok()).collect());
                 if let Some(scores) = scores {
-                    if scores.len() == self.pipeline.num_quant_layers() {
+                    if version == Self::SENS_CACHE_VERSION
+                        && scores.len() == self.pipeline.num_quant_layers()
+                    {
                         return Ok(Sensitivity::from_scores(metric, scores));
                     }
                 }
             }
         }
-        let sens = sensitivity::compute(&mut self.pipeline, metric, trials, seed)?;
+        let sens = match (metric, self.pool.as_mut()) {
+            (MetricKind::Hessian, Some(pool)) => {
+                sensitivity::hessian_sensitivity_pooled(pool, trials, seed)?
+            }
+            _ => sensitivity::compute(&mut self.pipeline, metric, trials, seed)?,
+        };
         if metric != MetricKind::Random {
-            let v = Value::obj(vec![(
-                "scores",
-                Value::Arr(sens.scores.iter().map(|&s| Value::Num(s)).collect()),
-            )]);
+            let v = Value::obj(vec![
+                ("version", Value::Num(Self::SENS_CACHE_VERSION as f64)),
+                ("scores", Value::Arr(sens.scores.iter().map(|&s| Value::Num(s)).collect())),
+            ]);
             let _ = std::fs::write(&path, v.to_string());
         }
         Ok(sens)
+    }
+}
+
+/// Evaluation routes through the shared pool when one exists, the context
+/// pipeline otherwise — so searches and report grids use the pool path
+/// end to end simply by driving the context.
+impl SearchEnv for ModelContext {
+    fn num_layers(&self) -> usize {
+        self.pipeline.num_quant_layers()
+    }
+
+    fn eval(&mut self, cfg: &QuantConfig, target: Option<f64>) -> Result<EvalResult> {
+        match self.pool.as_mut() {
+            Some(pool) => pool.eval(cfg, target),
+            None => self.pipeline.eval_config(cfg, target),
+        }
+    }
+
+    fn eval_many(&mut self, cfgs: &[QuantConfig], target: Option<f64>) -> Vec<Result<EvalResult>> {
+        match self.pool.as_mut() {
+            Some(pool) => pool.eval_many(cfgs, target),
+            None => self.pipeline.eval_many(cfgs, target),
+        }
+    }
+
+    fn preferred_batch(&self) -> usize {
+        self.pool.as_ref().map_or(1, |pool| pool.preferred_batch())
     }
 }

@@ -1,14 +1,15 @@
-//! Typed observer stream for search progress.
+//! Typed observer stream for search + calibration progress.
 //!
 //! A [`SearchEvent`] is emitted at every externally meaningful step of a
 //! search — frontier submissions, accept/reject decisions with their
-//! objective scores, budget satisfaction, checkpoint writes — replacing
-//! ad-hoc stderr prints. Observers are plain `FnMut(&SearchEvent)`
-//! callbacks attached through [`super::SearchCtl`] or
-//! [`super::SearchSession::on_event`]; the default CLI observer renders
-//! them as progress lines, tests use them to assert trajectories.
+//! objective scores, budget satisfaction, checkpoint writes — and of the
+//! sharded calibration driver (stage start, per-epoch adjustment loss,
+//! final report), replacing ad-hoc stderr prints. Observers are plain
+//! `FnMut(&SearchEvent)` callbacks attached through [`super::SearchCtl`]
+//! or [`super::SearchSession::on_event`]; the default CLI observer is
+//! [`log_event`], tests use observers to assert trajectories.
 
-/// One step of a running search.
+/// One step of a running search or calibration.
 #[derive(Debug, Clone)]
 pub enum SearchEvent {
     /// A search started: algorithm, layer count, objective description.
@@ -38,4 +39,75 @@ pub enum SearchEvent {
     /// answered by the in-memory memo and by the persistent cross-run
     /// [`crate::coordinator::EvalCache`].
     CacheReport { memo_hits: usize, persistent_hits: usize },
+    /// Sharded two-step calibration started: adjustment-split batch count,
+    /// sync-group size (batches averaged per Adam step), and the worker
+    /// count the batches are fanned across.
+    CalibrationStarted { workers: usize, batches: usize, grad_batches: usize, epochs: usize },
+    /// One adjustment epoch finished: mean sync-group loss over the epoch
+    /// and total Adam steps taken so far.
+    AdjustEpoch { epoch: usize, loss: f64, steps: usize },
+    /// Calibration finished; fields mirror [`crate::quant::AdjustReport`].
+    CalibrationFinished { loss_before: f64, loss_after: f64, steps: usize },
+    /// Cached scales were loaded from disk instead of calibrating.
+    ScalesLoaded { path: String },
+    /// The persistent eval cache was attached with `entries` prior results.
+    EvalCacheAttached { entries: usize, path: String },
+}
+
+/// Render one [`SearchEvent`] as a stderr progress line — the default
+/// observer used by the CLI and by
+/// [`super::ModelContext::ensure_calibrated`] when no observer is given.
+pub fn log_event(ev: &SearchEvent) {
+    match ev {
+        SearchEvent::Started { algo, layers, objective } => {
+            eprintln!("[search] {algo} over {layers} layers: {objective}");
+        }
+        SearchEvent::Decision { bits, index, accepted, accuracy, cost, replayed } => {
+            let verdict = if *accepted { "accept" } else { "reject" };
+            let mut line = format!("[search] {bits}b #{index}: {verdict}");
+            if *replayed {
+                line.push_str(" (replayed)");
+            } else {
+                line.push_str(&format!(" acc={:.2}%", accuracy * 100.0));
+            }
+            if let Some(c) = cost {
+                line.push_str(&format!(" cost={:.1}%", c * 100.0));
+            }
+            eprintln!("{line}");
+        }
+        SearchEvent::BudgetSatisfied { cost } => {
+            eprintln!("[search] budget satisfied at rel cost {:.1}% — stopping", cost * 100.0);
+        }
+        SearchEvent::Finished { accuracy, evals } => {
+            eprintln!(
+                "[search] finished: accuracy {:.2}% after {evals} decision evals",
+                accuracy * 100.0
+            );
+        }
+        SearchEvent::CacheReport { memo_hits, persistent_hits } => {
+            eprintln!("[search] cache: {memo_hits} memo hits, {persistent_hits} persistent hits");
+        }
+        SearchEvent::CalibrationStarted { workers, batches, grad_batches, epochs } => {
+            eprintln!(
+                "[calibration] adjusting scales: {batches} batches x {epochs} epochs in \
+                 {grad_batches}-batch sync groups across {workers} worker(s)"
+            );
+        }
+        SearchEvent::AdjustEpoch { epoch, loss, steps } => {
+            eprintln!("[calibration] epoch {epoch}: mean loss {loss:.4} ({steps} steps so far)");
+        }
+        SearchEvent::CalibrationFinished { loss_before, loss_after, steps } => {
+            eprintln!(
+                "[calibration] adjusted scales over {steps} steps: loss \
+                 {loss_before:.4} -> {loss_after:.4}"
+            );
+        }
+        SearchEvent::ScalesLoaded { path } => {
+            eprintln!("[calibration] loaded cached scales from {path}");
+        }
+        SearchEvent::EvalCacheAttached { entries, path } => {
+            eprintln!("[eval-cache] loaded {entries} exact results from {path}");
+        }
+        SearchEvent::FrontierSubmitted { .. } | SearchEvent::CheckpointWritten { .. } => {}
+    }
 }

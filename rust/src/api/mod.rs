@@ -35,8 +35,8 @@ pub use checkpoint::{checkpoint_fingerprint, Checkpoint, CHECKPOINT_VERSION};
 pub use context::ModelContext;
 pub use cost::CostModel;
 pub use driver::{run_search, SearchCtl};
-pub use events::SearchEvent;
+pub use events::{log_event, SearchEvent};
 pub use objective::{AccuracyTarget, FootprintBudget, LatencyBudget, Objective};
 pub use session::{SearchReport, SearchSession};
 pub use spec::{BackendSpec, CacheSpec, ObjectiveSpec, ScaleSpec, SearchSpec, DEFAULT_TRIALS};
-pub use synthetic::{SyntheticCost, SyntheticEnv};
+pub use synthetic::{SyntheticCost, SyntheticEnv, SyntheticStage};

@@ -1,15 +1,18 @@
 //! [`SearchSession`] — a [`SearchSpec`] opened against real artifacts.
 //!
 //! The session owns the [`ModelContext`], multiplexes [`SearchEvent`]
-//! observers, builds the objective over the context's cost model, drives
-//! either algorithm through [`crate::coordinator::SearchEnv`] (one
-//! pipeline, or a [`PipelinePool`] when `workers > 1`), and wires atomic
-//! decision checkpoints + the persistent eval cache so interrupted runs
+//! observers (calibration progress included), builds the objective over
+//! the context's cost model, and drives either algorithm through the
+//! context's [`crate::coordinator::SearchEnv`] impl — the context's
+//! shared [`crate::coordinator::PipelinePool`] when `workers > 1`, its
+//! single pipeline otherwise. Sharded calibration, sensitivity, and the
+//! search itself all run on that one pool (built once), and atomic
+//! decision checkpoints + the persistent eval cache make interrupted runs
 //! resume bit-identically.
 
 use std::time::Instant;
 
-use crate::coordinator::{PipelinePool, SearchAlgo, SearchOutcome};
+use crate::coordinator::{SearchAlgo, SearchOutcome};
 use crate::quant::{QuantConfig, Scales, QUANT_BITS};
 use crate::sensitivity::MetricKind;
 use crate::server::{ServeOptions, ServerHandle};
@@ -68,134 +71,25 @@ impl SearchSession {
         self.run_algo(self.spec.algo)
     }
 
-    /// Run with `algo` overriding the spec (same objective, metric, and
-    /// caches) — lets one session compare algorithms without rebuilding
-    /// the pipeline.
+    /// Run with `algo` overriding the spec (same objective, metric,
+    /// caches, and worker pool) — lets one session compare algorithms
+    /// without rebuilding pipelines.
     pub fn run_algo(&mut self, algo: SearchAlgo) -> Result<SearchReport> {
-        self.ctx.ensure_calibrated()?;
         let spec = self.spec.clone();
-        let sens = self.ctx.sensitivity_for(&spec)?;
-        let floor = spec.target * self.ctx.pipeline.float_val_acc();
-        let objective = spec.objective.build(floor, self.ctx.cost.clone());
-
-        let mut checkpoint = match &spec.checkpoint {
-            Some(path) => {
-                let fp = checkpoint_fingerprint(
-                    algo,
-                    &QUANT_BITS,
-                    &objective.describe(),
-                    &sens.order,
-                    &self.ctx.pipeline.eval_context(),
-                );
-                Some(Checkpoint::attach(path, &fp, spec.resume)?)
-            }
-            None => None,
-        };
-        let replayable = checkpoint.as_ref().map_or(0, Checkpoint::loaded);
-
-        // Build the worker pool up front — every fallible step stays
-        // before the observer list is taken, so an error here cannot lose
-        // registered observers. The pool owns the cache file for the
-        // duration of the run: the context pipeline's copy is detached
-        // first so its stale state can never overwrite the pool's results,
-        // and re-attached (reloading the pool's writes) after teardown.
-        let mut pool = None;
-        if spec.workers > 1 {
-            let dir = self.ctx.pipeline.artifacts.dir.clone();
-            let model = spec.model.clone();
-            let scales_path = dir.join(format!("{model}_scales.json"));
-            let p = PipelinePool::new(&dir, &model, spec.workers, move |p| {
-                p.scales = Scales::load(&scales_path)?;
-                p.sync_scales()
-            })?;
-            if self.ctx.eval_cache_enabled() {
-                self.ctx.pipeline.detach_eval_cache()?;
-                p.attach_eval_cache(
-                    &self.ctx.eval_cache_path(),
-                    &self.ctx.pipeline.eval_context(),
-                    self.ctx.eval_cache_capacity(),
-                );
-            }
-            pool = Some(p);
-        }
-
+        // Observers are taken for the whole run — calibration events
+        // included — and restored before returning, error or not.
         let mut observers = std::mem::take(&mut self.observers);
-        let mut fan = |ev: &SearchEvent| {
-            for obs in observers.iter_mut() {
-                obs(ev);
-            }
-        };
-        let t0 = Instant::now();
-        let outcome = match pool.as_mut() {
-            None => run_search(
-                algo,
-                &mut self.ctx.pipeline,
-                &sens.order,
-                &QUANT_BITS,
-                objective.as_ref(),
-                Some(&mut fan),
-                checkpoint.as_mut(),
-            ),
-            Some(pool) => run_search(
-                algo,
-                pool,
-                &sens.order,
-                &QUANT_BITS,
-                objective.as_ref(),
-                Some(&mut fan),
-                checkpoint.as_mut(),
-            ),
-        };
-        let search_seconds = t0.elapsed().as_secs_f64();
-        if outcome.is_ok() {
-            let (memo_hits, persistent_hits) = match pool.as_ref() {
-                Some(pool) => pool.cache_hits(),
-                None => {
-                    let stats = self.ctx.pipeline.stats;
-                    (stats.cache_hits, stats.persistent_hits)
-                }
-            };
-            fan(&SearchEvent::CacheReport { memo_hits, persistent_hits });
-        }
-        drop(fan);
+        let result = run_session(&mut self.ctx, &spec, algo, &mut observers);
         self.observers = observers;
-        // Pool teardown (fallible, but observers are already restored):
-        // persist its shared cache, then re-attach the pipeline's copy.
-        let teardown = match pool {
-            Some(pool) => {
-                let flushed = pool.flush_eval_cache();
-                drop(pool);
-                if self.ctx.eval_cache_enabled() {
-                    let cache_path = self.ctx.eval_cache_path();
-                    let capacity = self.ctx.eval_cache_capacity();
-                    self.ctx.pipeline.attach_eval_cache_bounded(&cache_path, capacity);
-                }
-                flushed
-            }
-            None => Ok(()),
-        };
-        let outcome = outcome?;
-        teardown?;
-        self.ctx.pipeline.flush_eval_cache()?;
-        Ok(SearchReport {
-            rel_size: self.ctx.cost.rel_size(&outcome.config),
-            rel_latency: self.ctx.cost.rel_latency(&outcome.config),
-            cost_provenance: self.ctx.cost.provenance().to_string(),
-            algo,
-            metric: spec.metric,
-            search_seconds,
-            workers: spec.workers,
-            replayed_decisions: checkpoint.as_ref().map_or(replayable, Checkpoint::replayed),
-            checkpointed_decisions: checkpoint.as_ref().map_or(0, Checkpoint::len),
-            outcome,
-        })
+        result
     }
 
     /// Consume the session into a running inference server over `cfg`:
-    /// calibration is ensured (and persisted) first, the session's search
-    /// pipeline is dropped to free its device state, then a
-    /// [`PipelinePool`]-backed server is spawned with `spec.workers`
-    /// workers loading the persisted scales.
+    /// calibration is ensured (and persisted) first — sharded across the
+    /// context's pool when `workers > 1` — then the session's device state
+    /// is dropped and a fresh [`crate::coordinator::PipelinePool`]-backed
+    /// server is spawned with `spec.workers` workers loading the persisted
+    /// scales.
     pub fn into_server(
         mut self,
         cfg: QuantConfig,
@@ -212,4 +106,68 @@ impl SearchSession {
             p.sync_scales()
         })
     }
+}
+
+/// The body of [`SearchSession::run_algo`], with observers already taken
+/// so an error cannot lose registered observers.
+fn run_session(
+    ctx: &mut ModelContext,
+    spec: &SearchSpec,
+    algo: SearchAlgo,
+    observers: &mut Vec<Box<dyn FnMut(&SearchEvent)>>,
+) -> Result<SearchReport> {
+    let mut fan = |ev: &SearchEvent| {
+        for obs in observers.iter_mut() {
+            obs(ev);
+        }
+    };
+    // Calibration (sharded across the context pool at workers > 1),
+    // sensitivity, and eval-cache attachment all report through the same
+    // observer stream the search uses.
+    ctx.ensure_calibrated_with(Some(&mut fan))?;
+    let sens = ctx.sensitivity_for(spec)?;
+    let floor = spec.target * ctx.pipeline.float_val_acc();
+    let objective = spec.objective.build(floor, ctx.cost.clone());
+
+    let mut checkpoint = match &spec.checkpoint {
+        Some(path) => {
+            let fp = checkpoint_fingerprint(
+                algo,
+                &QUANT_BITS,
+                &objective.describe(),
+                &sens.order,
+                &ctx.pipeline.eval_context(),
+            );
+            Some(Checkpoint::attach(path, &fp, spec.resume)?)
+        }
+        None => None,
+    };
+    let replayable = checkpoint.as_ref().map_or(0, Checkpoint::loaded);
+
+    let t0 = Instant::now();
+    let outcome = run_search(
+        algo,
+        ctx,
+        &sens.order,
+        &QUANT_BITS,
+        objective.as_ref(),
+        Some(&mut fan),
+        checkpoint.as_mut(),
+    )?;
+    let search_seconds = t0.elapsed().as_secs_f64();
+    let (memo_hits, persistent_hits) = ctx.cache_hits();
+    fan(&SearchEvent::CacheReport { memo_hits, persistent_hits });
+    ctx.flush_eval_cache()?;
+    Ok(SearchReport {
+        rel_size: ctx.cost.rel_size(&outcome.config),
+        rel_latency: ctx.cost.rel_latency(&outcome.config),
+        cost_provenance: ctx.cost.provenance().to_string(),
+        algo,
+        metric: spec.metric,
+        search_seconds,
+        workers: spec.workers,
+        replayed_decisions: checkpoint.as_ref().map_or(replayable, Checkpoint::replayed),
+        checkpointed_decisions: checkpoint.as_ref().map_or(0, Checkpoint::len),
+        outcome,
+    })
 }

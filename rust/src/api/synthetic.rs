@@ -1,9 +1,12 @@
-//! Seeded synthetic search environment + cost model.
+//! Seeded synthetic search environment, cost model, and calibration stage
+//! runner.
 //!
-//! Lets the full search API — objectives, budgets, checkpoints, worker
-//! fan-out — run with no artifacts and no device: `mpq search --synthetic
-//! N` uses it for CI smoke runs (including the kill-then-resume step), and
-//! the API tests use it for parity and monotonicity properties.
+//! Lets the full search + calibration API — objectives, budgets,
+//! checkpoints, worker fan-out, sharded calibration — run with no
+//! artifacts and no device: `mpq search --synthetic N` uses it for CI
+//! smoke runs (including the kill-then-resume step), `mpq calibrate
+//! --synthetic N` for the 1- vs 2-worker scale-parity smoke, and the
+//! API/parity tests for their properties.
 //!
 //! The accuracy model is the separable monotone family from the engine's
 //! property tests: quantizing layer `i` to width `b` costs
@@ -13,9 +16,10 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use crate::coordinator::{EvalResult, SyncSearchEnv};
-use crate::quant::QuantConfig;
-use crate::util::rng::Rng;
+use crate::coordinator::{EvalResult, StageRunner, SyncSearchEnv};
+use crate::quant::calibrate::{merge_act_stats, BatchGrad, TraceSample};
+use crate::quant::{QuantConfig, Scales};
+use crate::util::rng::{probe_seed, Rng};
 use crate::Result;
 
 use super::CostModel;
@@ -134,6 +138,186 @@ impl CostModel for SyntheticCost {
 
     fn provenance(&self) -> &str {
         "synthetic"
+    }
+}
+
+/// Device-free [`StageRunner`]: deterministic per-batch / per-trial math
+/// fanned over real scoped threads — the synthetic mirror of
+/// [`crate::coordinator::PipelinePool`]'s stage path. Powers the
+/// `rust/tests/sharded_calibration.rs` parity suite,
+/// `benches/calibrate_sharded.rs`, and `mpq calibrate --synthetic` (the CI
+/// smoke that diffs 1- vs 2-worker scales). Every kernel is a pure
+/// function of `(seed, global item index, inputs)`, so — exactly like the
+/// device path — any worker count produces bit-identical results; an
+/// optional CPU spin per batch/probe stands in for device latency so
+/// multi-worker speedups are real parallel work.
+pub struct SyntheticStage {
+    layers: usize,
+    batches: usize,
+    workers: usize,
+    seed: u64,
+    /// Spin iterations per simulated batch/probe (0 = pure math).
+    work: u32,
+    /// Quadratic targets for the four scale vectors (seeded, fixed).
+    targets: Vec<f32>,
+    /// Scales installed by the last broadcast.
+    current: Scales,
+    broadcasts: usize,
+}
+
+impl SyntheticStage {
+    pub fn new(layers: usize, batches: usize, workers: usize, seed: u64) -> Self {
+        let mut rng = Rng::seed_from(probe_seed(seed ^ 0x7A26, 0));
+        let targets = (0..layers * 4).map(|_| (0.5 + 2.0 * rng.uniform()) as f32).collect();
+        Self {
+            layers,
+            batches,
+            workers: workers.max(1),
+            seed,
+            work: 0,
+            targets,
+            current: Scales::identity(layers),
+            broadcasts: 0,
+        }
+    }
+
+    /// Burn `work` deterministic spin iterations per simulated
+    /// batch/probe (benchmark mode).
+    pub fn with_work(mut self, work: u32) -> Self {
+        self.work = work;
+        self
+    }
+
+    /// Broadcasts received so far (one per Adam step plus the step-1
+    /// install).
+    pub fn broadcasts(&self) -> usize {
+        self.broadcasts
+    }
+
+    /// Scales installed by the last broadcast.
+    pub fn current_scales(&self) -> &Scales {
+        &self.current
+    }
+
+    fn spin(work: u32) {
+        let mut x = 0.0f64;
+        for i in 0..work {
+            x += f64::from(i ^ 0xA5A5).sqrt();
+        }
+        std::hint::black_box(x);
+    }
+
+    /// Fan `f` over the shards with one scoped thread per shard, gathering
+    /// per-item results in shard order.
+    fn fan<T: Send>(
+        &self,
+        shards: &[Vec<usize>],
+        f: impl Fn(usize) -> T + Sync,
+    ) -> Vec<Vec<T>> {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = shards
+                .iter()
+                .map(|shard| {
+                    let f = &f;
+                    s.spawn(move || shard.iter().map(|&i| f(i)).collect::<Vec<T>>())
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("synthetic stage shard panicked"))
+                .collect()
+        })
+    }
+
+    /// Per-batch activation maxima — pure in `(seed, batch)`.
+    fn act_batch(&self, batch: usize) -> Vec<f32> {
+        Self::spin(self.work);
+        let mut rng = Rng::seed_from(probe_seed(self.seed ^ 0xAC7, batch as u64));
+        (0..self.layers).map(|_| (0.25 + 4.0 * rng.uniform()) as f32).collect()
+    }
+
+    /// Per-batch gradient of a jittered quadratic `w_b * Σ (s - t)^2` —
+    /// pure in `(seed, batch, scales, bits)`.
+    fn grad_batch(&self, scales: &Scales, bits: f32, batch: usize) -> BatchGrad {
+        Self::spin(self.work);
+        let mut rng = Rng::seed_from(probe_seed(self.seed ^ 0x96AD, batch as u64));
+        // Harsher probed widths sharpen the curvature slightly, keeping
+        // the kernel sensitive to `bits` like the real scale_grad graph.
+        let w = (1.0 + 0.25 * rng.uniform()) as f32 * (1.0 + (16.0 - bits) / 64.0);
+        let n = self.layers;
+        let views = [&scales.alpha_w, &scales.gamma_w, &scales.alpha_a, &scales.gamma_a];
+        let mut grads = Vec::with_capacity(n * 4);
+        let mut loss = 0.0f64;
+        for (vi, vec) in views.into_iter().enumerate() {
+            for (i, &s) in vec.iter().enumerate() {
+                let t = self.targets[vi * n + i];
+                grads.push(w * 2.0 * (s - t));
+                loss += f64::from(w * (s - t) * (s - t));
+            }
+        }
+        BatchGrad { batch, loss, grads }
+    }
+
+    /// Per-trial probe sample — pure in `(seed, trial)`.
+    fn hvp_trial(&self, seed: u64, trial: usize) -> TraceSample {
+        Self::spin(self.work);
+        let mut rng = Rng::seed_from(probe_seed(seed, trial as u64));
+        let vhv = (0..self.layers).map(|l| rng.gaussian().abs() * (1.0 + l as f64)).collect();
+        TraceSample { trial, vhv }
+    }
+}
+
+impl StageRunner for SyntheticStage {
+    fn shard_workers(&self) -> usize {
+        self.workers
+    }
+
+    fn shard_layers(&self) -> usize {
+        self.layers
+    }
+
+    fn adjust_batches(&self) -> usize {
+        self.batches
+    }
+
+    fn weight_numels(&self) -> Vec<u64> {
+        (0..self.layers).map(|l| 16 * (l as u64 + 1)).collect()
+    }
+
+    fn stage_weight_scales(&mut self) -> Result<Scales> {
+        let mut scales = Scales::identity(self.layers);
+        let mut rng = Rng::seed_from(probe_seed(self.seed ^ 0x57A7E, 0));
+        for qi in 0..self.layers {
+            let maxabs = (0.5 + rng.uniform()) as f32;
+            scales.alpha_w[qi] = 1.0 / maxabs;
+            scales.gamma_w[qi] = maxabs;
+        }
+        Ok(scales)
+    }
+
+    fn stage_act_stats(&mut self, shards: &[Vec<usize>]) -> Result<Vec<Vec<f32>>> {
+        let per_batch = self.fan(shards, |b| self.act_batch(b));
+        // Mirror the device kernel: each shard returns its merged maxima.
+        Ok(per_batch.into_iter().map(|stats| merge_act_stats(&stats)).collect())
+    }
+
+    fn stage_adjust_grads(
+        &mut self,
+        scales: &Scales,
+        bits: f32,
+        shards: &[Vec<usize>],
+    ) -> Result<Vec<Vec<BatchGrad>>> {
+        Ok(self.fan(shards, |b| self.grad_batch(scales, bits, b)))
+    }
+
+    fn stage_hvp(&mut self, seed: u64, shards: &[Vec<usize>]) -> Result<Vec<Vec<TraceSample>>> {
+        Ok(self.fan(shards, |t| self.hvp_trial(seed, t)))
+    }
+
+    fn broadcast_scales(&mut self, scales: &Scales) -> Result<()> {
+        self.current = scales.clone();
+        self.broadcasts += 1;
+        Ok(())
     }
 }
 

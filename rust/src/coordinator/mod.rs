@@ -17,6 +17,12 @@
 //! their speculative frontiers to [`SearchEnv::preferred_batch`] and replay
 //! the sequential decision sequence against the batched results, so the
 //! final configuration is bit-identical at every worker count.
+//!
+//! Sharded calibration & sensitivity: the two-step scale estimation and
+//! the Hutchinson Hessian trace run as stage jobs over the same worker
+//! pool through [`shard`] — per-shard kernels on [`Pipeline`], fixed-order
+//! host reduction in [`crate::quant::calibrate`] — with the same
+//! guarantee: bit-identical results at every worker count.
 
 pub mod bisection;
 mod cache;
@@ -24,11 +30,15 @@ pub mod greedy;
 mod parallel;
 mod pipeline;
 mod pool;
+pub mod shard;
 
 pub use cache::EvalCache;
 pub use parallel::{ParallelEnv, SyncSearchEnv};
 pub use pipeline::{Pipeline, PipelineStats};
 pub use pool::PipelinePool;
+pub use shard::{
+    act_stats_sharded, calibrate_sharded, hessian_trace_sharded, shard_indices, StageRunner,
+};
 
 use crate::quant::QuantConfig;
 use crate::Result;

@@ -10,6 +10,9 @@
 //! The device [`super::Pipeline`] is *not* `Sync` (PJRT handles are
 //! single-threaded); its multi-worker counterpart is
 //! [`super::PipelinePool`], which owns one pipeline per worker thread.
+//! This adapter parallelizes *independent candidates*; the other shape of
+//! fan-out — shards of one dataset with deterministic reduction
+//! (calibration, Hessian probes) — lives in [`super::shard`].
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 

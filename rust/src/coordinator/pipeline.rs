@@ -14,11 +14,13 @@ use std::path::Path;
 use anyhow::{ensure, Context};
 
 use crate::model::ModelArtifacts;
+use crate::quant::calibrate::{BatchGrad, TraceSample};
 use crate::quant::{self, AdjustReport, CalibrationOptions, QuantConfig, Scales};
 use crate::runtime::{scalar_f32, vec_f32, Engine, Executable, HostTensor};
-use crate::util::rng::Rng;
+use crate::util::rng::{probe_seed, Rng};
 use crate::Result;
 
+use super::shard::{self, StageRunner};
 use super::{EvalCache, EvalResult, SearchEnv};
 
 /// Counters for reports and the §Perf log.
@@ -383,12 +385,27 @@ impl Pipeline {
     }
 
     // ---------------------------------------------------------- calibration
+    //
+    // The calibration/sensitivity path is split into pure per-shard
+    // kernels (`*_shard`, below) driven by [`super::shard`]: this pipeline
+    // is the one-worker [`StageRunner`], [`super::PipelinePool`] fans the
+    // same shards across its workers. Host-side reduction is fixed-order
+    // ([`crate::quant::calibrate`]), so both produce bit-identical scales
+    // and traces.
 
-    /// Per-layer max|activation| over the adjustment split (float model).
+    /// Batches in the adjustment split — the shard domain for calibration.
+    pub fn num_adjust_batches(&self) -> usize {
+        self.calib_adj_batches.len()
+    }
+
+    /// Per-layer max|activation| over the listed adjustment batches
+    /// (float model) — the pure act-stats shard kernel.
     // Indexing (not iterating) the batch list keeps `self` free for the
     // mutable stats updates inside the loop.
-    #[allow(clippy::needless_range_loop)]
-    pub fn act_stats(&mut self) -> Result<Vec<f32>> {
+    pub fn act_stats_shard(&mut self, batches: &[usize]) -> Result<Vec<f32>> {
+        for &bi in batches {
+            ensure!(bi < self.calib_adj_batches.len(), "adjustment batch {bi} out of range");
+        }
         if self.actstats_exe.is_none() {
             self.actstats_exe =
                 Some(self.engine.compile_hlo_file(&self.artifacts.graph_path("actstats")?)?);
@@ -396,7 +413,7 @@ impl Pipeline {
         let exe = self.actstats_exe.take().unwrap();
         let n = self.num_quant_layers();
         let mut maxabs = vec![0.0f32; n];
-        for bi in 0..self.calib_adj_batches.len() {
+        for &bi in batches {
             let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.param_bufs.len() + 1);
             args.extend(self.param_bufs.iter());
             args.push(&self.calib_adj_batches[bi].0);
@@ -411,71 +428,85 @@ impl Pipeline {
         Ok(maxabs)
     }
 
-    /// The paper's two-step scale estimation: max calibration for weights
-    /// (host-side) and activations (`actstats` graph), then backprop
-    /// adjustment of the four scale vectors on the calibration loss.
-    #[allow(clippy::needless_range_loop)]
-    pub fn calibrate(&mut self, opts: &CalibrationOptions) -> Result<AdjustReport> {
-        // Step 1: max calibration.
-        self.scales =
-            quant::calibrate::weight_scales(&self.artifacts.manifest, &self.artifacts.params);
-        let acts = self.act_stats()?;
-        quant::calibrate::apply_act_stats(&mut self.scales, &acts);
-        self.sync_scales()?;
+    /// Per-layer max|activation| over the whole adjustment split.
+    pub fn act_stats(&mut self) -> Result<Vec<f32>> {
+        shard::act_stats_sharded(self)
+    }
 
-        // Step 2: adjustment via the scale_grad graph.
+    /// Per-batch scale gradients at fixed `scales` (quantization active at
+    /// `bits`) for the listed adjustment batches — the pure shard kernel
+    /// of calibration step 2. Does not touch `self.scales`: the driver
+    /// owns the optimizer state and pushes updates via the
+    /// [`StageRunner::broadcast_scales`] channel.
+    pub fn adjust_grads_shard(
+        &mut self,
+        scales: &Scales,
+        bits: f32,
+        batches: &[usize],
+    ) -> Result<Vec<BatchGrad>> {
+        for &bi in batches {
+            ensure!(bi < self.calib_adj_batches.len(), "adjustment batch {bi} out of range");
+        }
         if self.scale_grad_exe.is_none() {
             self.scale_grad_exe =
                 Some(self.engine.compile_hlo_file(&self.artifacts.graph_path("scale_grad")?)?);
         }
-        let exe = self.scale_grad_exe.take().unwrap();
         let n = self.num_quant_layers();
-        let cfg = QuantConfig::uniform(n, opts.adjust_bits);
+        let cfg = QuantConfig::uniform(n, bits);
         let (bw, ba) = self.bits_bufs(&cfg)?;
-        let mut opt = quant::calibrate::ScaleAdam::new(n, opts.lr);
-        let mut first_loss = None;
-        let mut last_loss = 0.0f64;
-        let mut steps = 0usize;
-        for _epoch in 0..opts.epochs {
-            for bi in 0..self.calib_adj_batches.len() {
-                let sb = [
-                    self.engine.upload_f32(&self.scales.alpha_w, &[n])?,
-                    self.engine.upload_f32(&self.scales.gamma_w, &[n])?,
-                    self.engine.upload_f32(&self.scales.alpha_a, &[n])?,
-                    self.engine.upload_f32(&self.scales.gamma_a, &[n])?,
-                ];
-                let mut args: Vec<&xla::PjRtBuffer> =
-                    Vec::with_capacity(self.param_bufs.len() + 8);
-                args.extend(self.param_bufs.iter());
-                args.extend(sb.iter());
-                args.push(&bw);
-                args.push(&ba);
-                args.push(&self.calib_adj_batches[bi].0);
-                args.push(&self.calib_adj_batches[bi].1);
-                let out = exe.run(&args)?;
-                self.stats.batch_execs += 1;
-                let loss = scalar_f32(&out[0])? as f64;
-                first_loss.get_or_insert(loss);
-                last_loss = loss;
-                let mut grads = Vec::with_capacity(n * 4);
-                for g in &out[1..5] {
-                    grads.extend(vec_f32(g)?);
-                }
-                opt.step(&mut self.scales, &grads);
-                steps += 1;
+        // One upload of the (fixed) scales covers the whole shard.
+        let sb = [
+            self.engine.upload_f32(&scales.alpha_w, &[n])?,
+            self.engine.upload_f32(&scales.gamma_w, &[n])?,
+            self.engine.upload_f32(&scales.alpha_a, &[n])?,
+            self.engine.upload_f32(&scales.gamma_a, &[n])?,
+        ];
+        let exe = self.scale_grad_exe.take().unwrap();
+        let mut out_grads = Vec::with_capacity(batches.len());
+        for &bi in batches {
+            let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.param_bufs.len() + 8);
+            args.extend(self.param_bufs.iter());
+            args.extend(sb.iter());
+            args.push(&bw);
+            args.push(&ba);
+            args.push(&self.calib_adj_batches[bi].0);
+            args.push(&self.calib_adj_batches[bi].1);
+            let out = exe.run(&args)?;
+            self.stats.batch_execs += 1;
+            let loss = scalar_f32(&out[0])? as f64;
+            let mut grads = Vec::with_capacity(n * 4);
+            for g in &out[1..5] {
+                grads.extend(vec_f32(g)?);
             }
+            out_grads.push(BatchGrad { batch: bi, loss, grads });
         }
         self.scale_grad_exe = Some(exe);
-        self.sync_scales()?;
-        Ok(AdjustReport { loss_before: first_loss.unwrap_or(0.0), loss_after: last_loss, steps })
+        Ok(out_grads)
+    }
+
+    /// The paper's two-step scale estimation: max calibration for weights
+    /// (host-side) and activations (`actstats` graph), then synchronous
+    /// data-parallel backprop adjustment of the four scale vectors —
+    /// driven through [`super::shard::calibrate_sharded`] at one worker,
+    /// so the result is bit-identical to a [`super::PipelinePool`] run at
+    /// any worker count.
+    pub fn calibrate(&mut self, opts: &CalibrationOptions) -> Result<AdjustReport> {
+        let (_scales, report) = shard::calibrate_sharded(self, opts, None)?;
+        Ok(report)
     }
 
     // -------------------------------------------------------------- hessian
 
-    /// Hutchinson estimate of the per-layer mean Hessian trace of the float
-    /// loss: `E[v^T H v] / numel` with Rademacher probes, averaged over
-    /// `trials` probes and the adjustment batches.
-    pub fn hessian_trace(&mut self, trials: usize, seed: u64) -> Result<Vec<f64>> {
+    /// Per-trial Hutchinson probes for the listed trial indices — the pure
+    /// HVP shard kernel. Each trial's Rademacher probe is drawn from an
+    /// RNG seeded by [`probe_seed`]`(seed, trial)` and runs on adjustment
+    /// batch `trial % num_batches` (rotating through the split keeps the
+    /// estimator unbiased at 1/nb the HVP cost of the full cross product —
+    /// HVPs are the most expensive graph in the system, §Perf), so a
+    /// sample depends only on `(seed, trial)`, never on shard layout.
+    pub fn hvp_shard(&mut self, seed: u64, trials: &[usize]) -> Result<Vec<TraceSample>> {
+        let nb = self.calib_adj_batches.len();
+        ensure!(nb > 0, "no adjustment batches for Hessian probes");
         if self.hvp_exe.is_none() {
             self.hvp_exe = Some(self.engine.compile_hlo_file(&self.artifacts.graph_path("hvp")?)?);
         }
@@ -483,23 +514,24 @@ impl Pipeline {
         let m = self.artifacts.manifest.clone();
         let qlayers = m.quant_layers();
         let n = qlayers.len();
-        let mut acc = vec![0.0f64; n];
-        let mut rng = Rng::seed_from(seed);
-        let nb = self.calib_adj_batches.len();
-        for trial in 0..trials {
+        let mut samples = Vec::with_capacity(trials.len());
+        for &trial in trials {
             // One full Rademacher probe across all quantizable tensors.
+            let mut rng = Rng::seed_from(probe_seed(seed, trial as u64));
             let mut probe_bufs = Vec::with_capacity(n);
             for l in qlayers.iter() {
-                let pi = self.artifacts.params.index_of(&l.param).unwrap();
+                let pi = self.artifacts.params.index_of(&l.param).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "hvp probe: param `{}` (quant layer `{}`) missing",
+                        l.param,
+                        l.name
+                    )
+                })?;
                 let dims = self.artifacts.params.dims(pi).to_vec();
                 let numel: usize = dims.iter().product();
                 let v: Vec<f32> = (0..numel).map(|_| rng.rademacher()).collect();
                 probe_bufs.push(self.engine.upload_f32(&v, &dims)?);
             }
-            // One batch per probe, rotating through the calibration split:
-            // across `trials` probes the estimator still sees every batch,
-            // at 1/nb the HVP cost of the full cross product (HVPs are the
-            // most expensive graph in the system — §Perf).
             let bi = trial % nb;
             let mut args: Vec<&xla::PjRtBuffer> =
                 Vec::with_capacity(self.param_bufs.len() + 2 + n);
@@ -510,17 +542,18 @@ impl Pipeline {
             let out = exe.run(&args)?;
             self.stats.batch_execs += 1;
             let vhv = vec_f32(&out[0])?;
-            for (a, v) in acc.iter_mut().zip(vhv) {
-                *a += v as f64;
-            }
+            samples.push(TraceSample { trial, vhv: vhv.into_iter().map(f64::from).collect() });
         }
         self.hvp_exe = Some(exe);
-        let denom = trials as f64;
-        Ok(qlayers
-            .iter()
-            .zip(acc)
-            .map(|(l, a)| a / denom / l.weight_numel as f64)
-            .collect())
+        Ok(samples)
+    }
+
+    /// Hutchinson estimate of the per-layer mean Hessian trace of the float
+    /// loss: `E[v^T H v] / numel` with per-trial-seeded Rademacher probes,
+    /// averaged over `trials` probes — the one-worker instance of
+    /// [`super::shard::hessian_trace_sharded`].
+    pub fn hessian_trace(&mut self, trials: usize, seed: u64) -> Result<Vec<f64>> {
+        shard::hessian_trace_sharded(self, trials, seed)
     }
 
     // --------------------------------------------------------------- logits
@@ -623,6 +656,54 @@ impl Pipeline {
         let perturbed: Vec<f32> =
             w.iter().map(|&v| v + (rng.gaussian() * sigma) as f32).collect();
         Ok((pi, perturbed))
+    }
+}
+
+/// The one-worker stage backend: every shard runs back-to-back on this
+/// pipeline's device. [`super::PipelinePool`] implements the same trait
+/// with genuinely concurrent shards; the shared fixed-order reducers make
+/// both bit-identical.
+impl StageRunner for Pipeline {
+    fn shard_workers(&self) -> usize {
+        1
+    }
+
+    fn shard_layers(&self) -> usize {
+        self.num_quant_layers()
+    }
+
+    fn adjust_batches(&self) -> usize {
+        self.calib_adj_batches.len()
+    }
+
+    fn weight_numels(&self) -> Vec<u64> {
+        self.artifacts.manifest.quant_layers().iter().map(|l| l.weight_numel).collect()
+    }
+
+    fn stage_weight_scales(&mut self) -> Result<Scales> {
+        quant::calibrate::weight_scales(&self.artifacts.manifest, &self.artifacts.params)
+    }
+
+    fn stage_act_stats(&mut self, shards: &[Vec<usize>]) -> Result<Vec<Vec<f32>>> {
+        shards.iter().map(|s| self.act_stats_shard(s)).collect()
+    }
+
+    fn stage_adjust_grads(
+        &mut self,
+        scales: &Scales,
+        bits: f32,
+        shards: &[Vec<usize>],
+    ) -> Result<Vec<Vec<BatchGrad>>> {
+        shards.iter().map(|s| self.adjust_grads_shard(scales, bits, s)).collect()
+    }
+
+    fn stage_hvp(&mut self, seed: u64, shards: &[Vec<usize>]) -> Result<Vec<Vec<TraceSample>>> {
+        shards.iter().map(|s| self.hvp_shard(seed, s)).collect()
+    }
+
+    fn broadcast_scales(&mut self, scales: &Scales) -> Result<()> {
+        self.scales = scales.clone();
+        self.sync_scales()
     }
 }
 

@@ -18,6 +18,13 @@
 //! target decisively, so sharing never changes a decision. Memory cost is
 //! one full device pipeline per worker; worth it when candidate evaluation
 //! dominates search wall-clock (every model in this repo).
+//!
+//! Beyond candidate evaluation, the pool is a [`StageRunner`]: sharded
+//! calibration and Hessian-trace jobs ([`WorkerJob::ActStats`],
+//! [`WorkerJob::AdjustGrads`], [`WorkerJob::Hvp`]) scatter over the same
+//! worker pipelines and gather in shard order, with scale updates pushed
+//! to every worker via [`WorkerJob::SetScales`] — see
+//! [`super::shard`] for the drivers and the determinism guarantee.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -25,9 +32,11 @@ use std::sync::{mpsc, Arc, Mutex};
 
 use anyhow::{anyhow, Context as _};
 
-use crate::quant::QuantConfig;
+use crate::quant::calibrate::{self, BatchGrad, TraceSample};
+use crate::quant::{QuantConfig, Scales};
 use crate::Result;
 
+use super::shard::StageRunner;
 use super::{EvalCache, EvalResult, Pipeline, SearchEnv};
 
 /// Shared state all workers consult before touching their device.
@@ -79,11 +88,39 @@ enum WorkerJob {
     /// engine submits formed batches this way. Called with `None` if the
     /// worker is gone, so the task can answer its callers with an error.
     Task(Box<dyn FnOnce(Option<&mut Pipeline>) + Send>),
+    /// Sharded-calibration stage: per-layer max|activation| over the
+    /// listed adjustment batches ([`Pipeline::act_stats_shard`]).
+    ActStats { batches: Vec<usize>, resp: mpsc::Sender<Result<Vec<f32>>> },
+    /// Sharded-calibration stage: per-batch scale gradients at fixed
+    /// scales ([`Pipeline::adjust_grads_shard`]).
+    AdjustGrads {
+        scales: Scales,
+        bits: f32,
+        batches: Vec<usize>,
+        resp: mpsc::Sender<Result<Vec<BatchGrad>>>,
+    },
+    /// Sharded-sensitivity stage: per-trial Hutchinson probes
+    /// ([`Pipeline::hvp_shard`]).
+    Hvp { seed: u64, trials: Vec<usize>, resp: mpsc::Sender<Result<Vec<TraceSample>>> },
+    /// Install updated scales on the worker's pipeline (broadcast between
+    /// Adam steps and after calibration).
+    SetScales { scales: Scales, resp: mpsc::Sender<Result<()>> },
+    /// Step-1 weight scales from the worker's (identical) parameters.
+    WeightScales { resp: mpsc::Sender<Result<Scales>> },
 }
 
 struct Worker {
     tx: mpsc::Sender<WorkerJob>,
     join: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Facts gathered from each worker pipeline at construction (identical on
+/// every worker — same artifacts).
+struct WorkerInfo {
+    num_layers: usize,
+    batch_sizes: Vec<usize>,
+    adjust_batches: usize,
+    weight_numels: Vec<u64>,
 }
 
 /// A pool of `workers` device pipelines implementing [`SearchEnv`] with
@@ -95,6 +132,10 @@ pub struct PipelinePool {
     /// Compiled serving batch sizes, ascending (identical on every
     /// worker — same artifacts), gathered at construction.
     batch_sizes: Vec<usize>,
+    /// Adjustment-split batch count (shard domain for calibration).
+    adjust_batches: usize,
+    /// Per-quant-layer weight element counts (trace normalization).
+    weight_numels: Vec<u64>,
     /// Evaluations dispatched to workers (shared-cache hits excluded).
     dispatched: usize,
 }
@@ -123,7 +164,7 @@ impl PipelinePool {
         let mut readies = Vec::with_capacity(workers);
         for wi in 0..workers {
             let (tx, rx) = mpsc::channel::<WorkerJob>();
-            let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, Vec<usize>)>>();
+            let (ready_tx, ready_rx) = mpsc::channel::<Result<WorkerInfo>>();
             let dir: PathBuf = artifacts_dir.to_path_buf();
             let model = model.to_string();
             let shared = shared.clone();
@@ -140,22 +181,37 @@ impl PipelinePool {
                     let _ = ready_tx.send(Err(e.context(format!("configuring pool worker {wi}"))));
                     return;
                 }
-                let info = (pipeline.num_quant_layers(), pipeline.logits_batch_sizes());
+                let info = WorkerInfo {
+                    num_layers: pipeline.num_quant_layers(),
+                    batch_sizes: pipeline.logits_batch_sizes(),
+                    adjust_batches: pipeline.num_adjust_batches(),
+                    weight_numels: pipeline.weight_numels(),
+                };
                 let _ = ready_tx.send(Ok(info));
                 worker_loop(&mut pipeline, &shared, &rx);
             });
             built.push(Worker { tx, join: Some(join) });
             readies.push((wi, ready_rx));
         }
-        let mut num_layers = 0usize;
-        let mut batch_sizes = Vec::new();
+        let mut info: Option<WorkerInfo> = None;
         for (wi, ready_rx) in readies {
-            (num_layers, batch_sizes) = ready_rx
-                .recv()
-                .map_err(|_| anyhow!("pool worker {wi} died during construction"))?
-                .with_context(|| format!("building pipeline pool for {model}"))?;
+            info = Some(
+                ready_rx
+                    .recv()
+                    .map_err(|_| anyhow!("pool worker {wi} died during construction"))?
+                    .with_context(|| format!("building pipeline pool for {model}"))?,
+            );
         }
-        Ok(Self { workers: built, shared, num_layers, batch_sizes, dispatched: 0 })
+        let info = info.expect("workers >= 1");
+        Ok(Self {
+            workers: built,
+            shared,
+            num_layers: info.num_layers,
+            batch_sizes: info.batch_sizes,
+            adjust_batches: info.adjust_batches,
+            weight_numels: info.weight_numels,
+            dispatched: 0,
+        })
     }
 
     /// Number of worker pipelines in the pool.
@@ -207,6 +263,41 @@ impl PipelinePool {
             Some(cache) => cache.save(),
             None => Ok(()),
         }
+    }
+
+    /// Entries currently in the shared persistent cache (0 if detached).
+    pub fn eval_cache_len(&self) -> usize {
+        self.shared.persistent.lock().unwrap().as_ref().map_or(0, EvalCache::len)
+    }
+
+    /// Scatter one calibration/sensitivity stage over the workers —
+    /// `make(shard, resp)` builds the [`WorkerJob`] for each shard, shard
+    /// `i` goes to worker `i` — and gather the per-shard results in shard
+    /// (worker-index) order.
+    fn scatter_stage<T: Send + 'static>(
+        &self,
+        what: &str,
+        shards: &[Vec<usize>],
+        make: impl Fn(Vec<usize>, mpsc::Sender<Result<T>>) -> WorkerJob,
+    ) -> Result<Vec<T>> {
+        let mut rxs = Vec::with_capacity(shards.len());
+        for (i, shard) in shards.iter().enumerate() {
+            let wi = i % self.workers.len();
+            let (tx, rx) = mpsc::channel();
+            self.workers[wi]
+                .tx
+                .send(make(shard.clone(), tx))
+                .map_err(|_| anyhow!("pool worker {wi} exited during {what}"))?;
+            rxs.push(rx);
+        }
+        rxs.into_iter()
+            .enumerate()
+            .map(|(i, rx)| {
+                rx.recv()
+                    .map_err(|_| anyhow!("pool worker died during {what} (shard {i})"))?
+                    .with_context(|| format!("{what} shard {i}"))
+            })
+            .collect()
     }
 
     /// Evaluations that actually reached a worker (cache misses).
@@ -277,7 +368,107 @@ fn worker_loop(pipeline: &mut Pipeline, shared: &SharedCache, rx: &mpsc::Receive
                 let _ = job.resp.send((job.slot, result));
             }
             WorkerJob::Task(task) => task(Some(pipeline)),
+            WorkerJob::ActStats { batches, resp } => {
+                let _ = resp.send(pipeline.act_stats_shard(&batches));
+            }
+            WorkerJob::AdjustGrads { scales, bits, batches, resp } => {
+                let _ = resp.send(pipeline.adjust_grads_shard(&scales, bits, &batches));
+            }
+            WorkerJob::Hvp { seed, trials, resp } => {
+                let _ = resp.send(pipeline.hvp_shard(seed, &trials));
+            }
+            WorkerJob::SetScales { scales, resp } => {
+                pipeline.scales = scales;
+                let _ = resp.send(pipeline.sync_scales());
+            }
+            WorkerJob::WeightScales { resp } => {
+                let _ = resp.send(calibrate::weight_scales(
+                    &pipeline.artifacts.manifest,
+                    &pipeline.artifacts.params,
+                ));
+            }
         }
+    }
+}
+
+/// The multi-worker stage backend: shards run concurrently, one per
+/// worker pipeline, gathered in shard order. Combined with the
+/// fixed-order host reducers this is bit-identical to the one-worker
+/// [`Pipeline`] backend at every pool size.
+impl StageRunner for PipelinePool {
+    fn shard_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn shard_layers(&self) -> usize {
+        self.num_layers
+    }
+
+    fn adjust_batches(&self) -> usize {
+        self.adjust_batches
+    }
+
+    fn weight_numels(&self) -> Vec<u64> {
+        self.weight_numels.clone()
+    }
+
+    fn stage_weight_scales(&mut self) -> Result<Scales> {
+        let (tx, rx) = mpsc::channel();
+        self.workers[0]
+            .tx
+            .send(WorkerJob::WeightScales { resp: tx })
+            .map_err(|_| anyhow!("pool worker 0 exited during weight calibration"))?;
+        rx.recv().map_err(|_| anyhow!("pool worker 0 died during weight calibration"))?
+    }
+
+    fn stage_act_stats(&mut self, shards: &[Vec<usize>]) -> Result<Vec<Vec<f32>>> {
+        self.scatter_stage("act stats", shards, |batches, resp| WorkerJob::ActStats {
+            batches,
+            resp,
+        })
+    }
+
+    fn stage_adjust_grads(
+        &mut self,
+        scales: &Scales,
+        bits: f32,
+        shards: &[Vec<usize>],
+    ) -> Result<Vec<Vec<BatchGrad>>> {
+        self.scatter_stage("scale adjustment", shards, |batches, resp| {
+            WorkerJob::AdjustGrads { scales: scales.clone(), bits, batches, resp }
+        })
+    }
+
+    fn stage_hvp(&mut self, seed: u64, shards: &[Vec<usize>]) -> Result<Vec<Vec<TraceSample>>> {
+        self.scatter_stage("hessian probes", shards, |trials, resp| WorkerJob::Hvp {
+            seed,
+            trials,
+            resp,
+        })
+    }
+
+    fn broadcast_scales(&mut self, scales: &Scales) -> Result<()> {
+        // Results depend on scales: invalidate the shared caches exactly
+        // like [`Pipeline::sync_scales`] invalidates its per-pipeline
+        // ones — the memo is cleared, a persistent cache (whose context
+        // fingerprint no longer matches) is flushed and detached. The
+        // owner re-attaches once the new scales are final
+        // (`ModelContext` does so after calibration).
+        self.shared.memo.lock().unwrap().clear();
+        if let Some(mut cache) = self.shared.persistent.lock().unwrap().take() {
+            let _ = cache.save();
+        }
+        let mut rxs = Vec::with_capacity(self.workers.len());
+        for (wi, w) in self.workers.iter().enumerate() {
+            let (tx, rx) = mpsc::channel();
+            w.tx.send(WorkerJob::SetScales { scales: scales.clone(), resp: tx })
+                .map_err(|_| anyhow!("pool worker {wi} exited during scale broadcast"))?;
+            rxs.push(rx);
+        }
+        for (wi, rx) in rxs.into_iter().enumerate() {
+            rx.recv().map_err(|_| anyhow!("pool worker {wi} died during scale broadcast"))??;
+        }
+        Ok(())
     }
 }
 

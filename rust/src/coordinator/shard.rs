@@ -1,0 +1,256 @@
+//! Sharded data-parallel calibration & sensitivity: stage jobs fanned
+//! across workers with deterministic host-side reduction.
+//!
+//! The paper's two-step scale estimation and the Hutchinson Hessian trace
+//! used to be monolithic single-device loops inside
+//! [`Pipeline`](super::Pipeline). They are now split into *pure per-shard
+//! kernels* (`Pipeline::{act_stats_shard, adjust_grads_shard, hvp_shard}`)
+//! plus the host-side reducers in [`crate::quant::calibrate`], driven by
+//! the functions in this module over anything implementing
+//! [`StageRunner`]:
+//!
+//! * [`Pipeline`](super::Pipeline) — one device; shards run back-to-back.
+//! * [`PipelinePool`](super::PipelinePool) — one device pipeline per
+//!   worker; shards run concurrently via dedicated `WorkerJob` variants,
+//!   with updated [`Scales`] broadcast to every worker between Adam steps.
+//! * [`crate::api::SyntheticStage`] — device-free math fanned over scoped
+//!   threads, so the driver runs in CI, tests and benches with no
+//!   artifacts.
+//!
+//! **Determinism guarantee:** for a fixed model and
+//! [`CalibrationOptions`], results are bit-identical at every worker
+//! count. Shard kernels return *per-item* (per-batch / per-trial) results
+//! tagged with their global index; all cross-shard reduction happens
+//! host-side in global-index order (max-merge for act stats, fixed-order
+//! f64 gradient averaging feeding a single
+//! [`ScaleAdam`](crate::quant::calibrate::ScaleAdam), trial-ordered trace
+//! accumulation); and Hutchinson probes are seeded per trial
+//! ([`crate::util::rng::probe_seed`]), not from a sequentially shared RNG.
+//! Nothing in the math depends on which worker computed what.
+
+use anyhow::ensure;
+
+use crate::api::SearchEvent;
+use crate::quant::calibrate::{
+    self, merge_act_stats, reduce_grads, reduce_traces, sync_groups, BatchGrad, ScaleAdam,
+    TraceSample,
+};
+use crate::quant::{AdjustReport, CalibrationOptions, Scales};
+use crate::Result;
+
+/// A backend able to run calibration/sensitivity stage jobs across
+/// `shard_workers()` workers. Kernels are *pure* with respect to the
+/// optimizer state: they evaluate at the scales they are handed and never
+/// mutate them; the driver owns the optimizer and pushes updates through
+/// [`StageRunner::broadcast_scales`].
+pub trait StageRunner {
+    /// Workers stage jobs can be fanned across (>= 1).
+    fn shard_workers(&self) -> usize;
+    /// Quantizable layers (the scale-vector dimension).
+    fn shard_layers(&self) -> usize;
+    /// Batches in the adjustment split — the shard domain for activation
+    /// statistics and gradient jobs.
+    fn adjust_batches(&self) -> usize;
+    /// Per-quant-layer weight element counts (Hessian trace
+    /// normalization).
+    fn weight_numels(&self) -> Vec<u64>;
+    /// Step-1 weight scales from the model parameters (host-side math; on
+    /// a pool this runs on worker 0 — every worker holds identical
+    /// parameters).
+    fn stage_weight_scales(&mut self) -> Result<Scales>;
+    /// Per-shard `max |activation|` over the given adjustment batches;
+    /// one merged vector per input shard, gathered in shard order.
+    fn stage_act_stats(&mut self, shards: &[Vec<usize>]) -> Result<Vec<Vec<f32>>>;
+    /// Per-batch scale gradients at fixed `scales`, quantization active at
+    /// `bits`; shard `i` covers the global batch indices in `shards[i]`.
+    fn stage_adjust_grads(
+        &mut self,
+        scales: &Scales,
+        bits: f32,
+        shards: &[Vec<usize>],
+    ) -> Result<Vec<Vec<BatchGrad>>>;
+    /// Per-trial Hutchinson probes; shard `i` covers the trial indices in
+    /// `shards[i]`, each probe seeded by
+    /// [`crate::util::rng::probe_seed`]`(seed, trial)`.
+    fn stage_hvp(&mut self, seed: u64, shards: &[Vec<usize>]) -> Result<Vec<Vec<TraceSample>>>;
+    /// Install `scales` on every worker pipeline (device sync included).
+    fn broadcast_scales(&mut self, scales: &Scales) -> Result<()>;
+}
+
+/// Contiguous partition of `items` into at most `shards` non-empty chunks
+/// (fewer when there are fewer items than shards). Deterministic: depends
+/// only on the item list and the shard count.
+pub fn shard_indices(items: &[usize], shards: usize) -> Vec<Vec<usize>> {
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let shards = shards.max(1).min(items.len());
+    let base = items.len() / shards;
+    let rem = items.len() % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut start = 0usize;
+    for s in 0..shards {
+        let len = base + usize::from(s < rem);
+        out.push(items[start..start + len].to_vec());
+        start += len;
+    }
+    out
+}
+
+/// Per-layer `max |activation|` over the whole adjustment split, sharded
+/// across the runner's workers and max-merged host-side. Bit-identical to
+/// the historical single-device loop at any worker count (max is exact
+/// and order-independent).
+pub fn act_stats_sharded<R: StageRunner + ?Sized>(runner: &mut R) -> Result<Vec<f32>> {
+    let all: Vec<usize> = (0..runner.adjust_batches()).collect();
+    let shards = shard_indices(&all, runner.shard_workers());
+    if shards.is_empty() {
+        return Ok(vec![0.0; runner.shard_layers()]);
+    }
+    let per_shard = runner.stage_act_stats(&shards)?;
+    let merged = merge_act_stats(&per_shard);
+    ensure!(
+        merged.len() == runner.shard_layers(),
+        "act stats returned {} layers, expected {}",
+        merged.len(),
+        runner.shard_layers()
+    );
+    Ok(merged)
+}
+
+/// The paper's two-step scale estimation as a sharded stage pipeline:
+/// max calibration (weights host-side, activation stats sharded +
+/// max-merged), then synchronous data-parallel adjustment — each Adam
+/// step averages the gradients of one [`sync_groups`] batch group
+/// (computed shard-parallel at fixed scales, reduced in batch order) and
+/// broadcasts the updated scales to every worker. Returns the final
+/// scales (already broadcast) and the adjustment report.
+pub fn calibrate_sharded<R: StageRunner + ?Sized>(
+    runner: &mut R,
+    opts: &CalibrationOptions,
+    mut observer: Option<&mut dyn FnMut(&SearchEvent)>,
+) -> Result<(Scales, AdjustReport)> {
+    let n = runner.shard_layers();
+    let nb = runner.adjust_batches();
+    let workers = runner.shard_workers();
+    let mut emit = |ev: SearchEvent| {
+        if let Some(obs) = observer.as_mut() {
+            obs(&ev);
+        }
+    };
+    emit(SearchEvent::CalibrationStarted {
+        workers,
+        batches: nb,
+        grad_batches: opts.grad_batches.max(1),
+        epochs: opts.epochs,
+    });
+
+    // Step 1: max calibration.
+    let mut scales = runner.stage_weight_scales()?;
+    ensure!(
+        scales.num_layers() == n,
+        "weight scales cover {} layers, expected {}",
+        scales.num_layers(),
+        n
+    );
+    let acts = act_stats_sharded(runner)?;
+    calibrate::apply_act_stats(&mut scales, &acts);
+    runner.broadcast_scales(&scales)?;
+
+    // Step 2: synchronous data-parallel adjustment.
+    let mut opt = ScaleAdam::new(n, opts.lr);
+    let mut first_loss = None;
+    let mut last_loss = 0.0f64;
+    let mut steps = 0usize;
+    if nb > 0 {
+        for epoch in 0..opts.epochs {
+            let mut epoch_loss = 0.0f64;
+            let groups = sync_groups(nb, opts.grad_batches);
+            for group in &groups {
+                let shards = shard_indices(group, workers);
+                let mut grads: Vec<BatchGrad> = runner
+                    .stage_adjust_grads(&scales, opts.adjust_bits, &shards)?
+                    .into_iter()
+                    .flatten()
+                    .collect();
+                ensure!(
+                    grads.len() == group.len(),
+                    "adjustment shards returned {} gradients for a {}-batch group",
+                    grads.len(),
+                    group.len()
+                );
+                let (loss, mean) = reduce_grads(n, &mut grads)?;
+                first_loss.get_or_insert(loss);
+                last_loss = loss;
+                epoch_loss += loss;
+                opt.step(&mut scales, &mean);
+                steps += 1;
+                runner.broadcast_scales(&scales)?;
+            }
+            emit(SearchEvent::AdjustEpoch {
+                epoch,
+                loss: epoch_loss / groups.len().max(1) as f64,
+                steps,
+            });
+        }
+    }
+    let report =
+        AdjustReport { loss_before: first_loss.unwrap_or(0.0), loss_after: last_loss, steps };
+    emit(SearchEvent::CalibrationFinished {
+        loss_before: report.loss_before,
+        loss_after: report.loss_after,
+        steps: report.steps,
+    });
+    Ok((scales, report))
+}
+
+/// Hutchinson estimate of the per-layer mean Hessian trace, trials
+/// sharded across workers. Each trial's Rademacher probe depends only on
+/// `(seed, trial)`, and accumulation is host-side in trial order, so
+/// every worker count produces bit-identical traces.
+pub fn hessian_trace_sharded<R: StageRunner + ?Sized>(
+    runner: &mut R,
+    trials: usize,
+    seed: u64,
+) -> Result<Vec<f64>> {
+    let trials = trials.max(1);
+    let idx: Vec<usize> = (0..trials).collect();
+    let shards = shard_indices(&idx, runner.shard_workers());
+    let mut samples: Vec<TraceSample> =
+        runner.stage_hvp(seed, &shards)?.into_iter().flatten().collect();
+    ensure!(
+        samples.len() == trials,
+        "hvp shards returned {} samples for {} trials",
+        samples.len(),
+        trials
+    );
+    let numels = runner.weight_numels();
+    ensure!(
+        numels.len() == runner.shard_layers(),
+        "weight numels cover {} layers, expected {}",
+        numels.len(),
+        runner.shard_layers()
+    );
+    reduce_traces(&mut samples, trials, &numels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_indices_partition_contiguously() {
+        let items: Vec<usize> = (0..10).collect();
+        let shards = shard_indices(&items, 3);
+        assert_eq!(shards, vec![vec![0, 1, 2, 3], vec![4, 5, 6], vec![7, 8, 9]]);
+        // Never more shards than items; zero items -> zero shards.
+        assert_eq!(shard_indices(&items[..2], 8).len(), 2);
+        assert!(shard_indices(&[], 4).is_empty());
+        // Flattening restores the original order at any worker count.
+        for workers in [1usize, 2, 4, 7, 16] {
+            let flat: Vec<usize> =
+                shard_indices(&items, workers).into_iter().flatten().collect();
+            assert_eq!(flat, items, "workers {workers}");
+        }
+    }
+}

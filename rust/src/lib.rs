@@ -11,8 +11,9 @@
 //! * [`quant`] — Eq. 1 quantizer mirror, per-layer configurations, scale
 //!   calibration + backprop adjustment drivers.
 //! * [`sensitivity`] — the paper's three metrics: ε_QE, ε_N, ε_Hessian.
-//! * [`coordinator`] — the evaluation pipeline plus the bisection (Alg. 1)
-//!   and greedy (Alg. 2) configuration searches.
+//! * [`coordinator`] — the evaluation pipeline, the bisection (Alg. 1)
+//!   and greedy (Alg. 2) configuration searches, and the sharded
+//!   calibration/sensitivity stage driver (`coordinator::shard`).
 //! * [`api`] — the unified constrained-search front door: `SearchSpec` →
 //!   `SearchSession`, pluggable objectives and cost models, typed search
 //!   events, checkpoint/resume.

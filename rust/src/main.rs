@@ -4,7 +4,8 @@
 //!
 //! ```text
 //! mpq info                         # list exported models + baselines
-//! mpq calibrate --model resnet_s   # two-step scale estimation
+//! mpq calibrate --model resnet_s --workers 4   # sharded two-step scale estimation
+//! mpq calibrate --synthetic 12 --workers 2     # device-free parity smoke (CI)
 //! mpq eval --model resnet_s --bits 8
 //! mpq sensitivity --model bert_s --metric hessian
 //! mpq search --model bert_s --algo greedy --metric hessian --target 0.99
@@ -22,20 +23,18 @@
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use anyhow::Context;
-
 use mpq::api::{
-    run_search, BackendSpec, Checkpoint, CostModel, ObjectiveSpec, SearchEvent, SearchSpec,
-    SyntheticCost, SyntheticEnv,
+    log_event, run_search, BackendSpec, Checkpoint, CostModel, ObjectiveSpec, SearchSpec,
+    SyntheticCost, SyntheticEnv, SyntheticStage,
 };
-use mpq::coordinator::{ParallelEnv, SearchAlgo};
+use mpq::coordinator::{calibrate_sharded, hessian_trace_sharded, ParallelEnv, SearchAlgo};
 use mpq::model::ArtifactIndex;
 use mpq::quant::{CalibrationOptions, QuantConfig, QUANT_BITS};
 use mpq::report::experiments::{
     self, render_search_table, search_grid, ExperimentCtx, METRIC_TRIALS,
 };
 use mpq::report::cells_to_json;
-use mpq::sensitivity::{self, MetricKind};
+use mpq::sensitivity::MetricKind;
 use mpq::util::cli::Args;
 use mpq::util::json::Value;
 use mpq::Result;
@@ -47,9 +46,13 @@ USAGE: mpq <command> [options]
 
 COMMANDS
   info                                       list exported models
-  calibrate   --model M [--adjust-bits 8] [--lr 1e-5] [--epochs 2]
+  calibrate   --model M | --synthetic N
+              [--workers 1] [--adjust-bits 8] [--lr 1e-5] [--epochs 2]
+              [--grad-batches 8] [--seed 0]
+              [--batches 16] [--trials 8]  (synthetic only)
   eval        --model M [--bits 8]
   sensitivity --model M --metric random|qe|noise|hessian [--trials N] [--seed S]
+              [--workers 1]
   search      --model M | --synthetic N
               [--algo greedy|bisection] [--metric hessian] [--target 0.99]
               [--seed 0] [--workers 1] [--trials 5]
@@ -57,7 +60,8 @@ COMMANDS
               [--backend a100|tpu | --table kernels.json] [--native-scale]
               [--checkpoint ck.json [--resume]] [--cache-capacity N]
               [--no-cache] [--abort-after N (synthetic only)]
-  table       --id 1|2|3 [--model M] [--out DIR]
+  table       --id 1|2|3 [--model M] [--out DIR] [--workers 1]
+              [--budget-latency F | --budget-size F]
   figure      --id 1|3|4 [--model M] [--out DIR]
   ablation    --model M [--target 0.99] [--out DIR]
   serve       --model M [--bits 8] [--requests 256] [--concurrency 8]
@@ -135,6 +139,8 @@ impl Command {
     fn run(self, args: &Args) -> Result<()> {
         match self {
             Command::Info => cmd_info(&artifacts_dir(args)?),
+            // Synthetic calibration needs no artifacts at all.
+            Command::Calibrate(c) if c.synthetic.is_some() => c.run_synthetic(),
             Command::Calibrate(c) => c.run(&artifacts_dir(args)?),
             Command::Eval(c) => c.run(&artifacts_dir(args)?),
             Command::Sensitivity(c) => c.run(&artifacts_dir(args)?),
@@ -190,33 +196,95 @@ fn cmd_info(dir: &Path) -> Result<()> {
 // ------------------------------------------------------------- calibrate
 
 struct CalibrateCmd {
-    model: String,
+    model: Option<String>,
+    synthetic: Option<usize>,
+    workers: usize,
+    seed: u64,
+    /// Synthetic only: Hutchinson trials for the trace parity line.
+    trials: usize,
+    /// Synthetic only: simulated adjustment-split batches.
+    batches: usize,
     opts: CalibrationOptions,
 }
 
 impl CalibrateCmd {
     fn parse(args: &Args) -> Result<Self> {
-        Ok(Self {
-            model: args.req_str("model")?.to_string(),
+        let defaults = CalibrationOptions::default();
+        let cmd = Self {
+            model: args.get_str("model").map(String::from),
+            synthetic: args.get_str("synthetic").map(str::parse).transpose()?,
+            workers: args.get_or("workers", 1usize)?.max(1),
+            seed: args.get_or("seed", 0u64)?,
+            trials: args.get_or("trials", 8usize)?,
+            batches: args.get_or("batches", 16usize)?,
             opts: CalibrationOptions {
-                adjust_bits: args.get_or("adjust-bits", 8.0f32)?,
-                lr: args.get_or("lr", 1e-5f32)?,
-                epochs: args.get_or("epochs", 2usize)?,
+                adjust_bits: args.get_or("adjust-bits", defaults.adjust_bits)?,
+                lr: args.get_or("lr", defaults.lr)?,
+                epochs: args.get_or("epochs", defaults.epochs)?,
+                grad_batches: args.get_or("grad-batches", defaults.grad_batches)?,
             },
-        })
+        };
+        anyhow::ensure!(
+            cmd.model.is_some() != cmd.synthetic.is_some(),
+            "calibrate needs exactly one of --model M or --synthetic N"
+        );
+        if cmd.synthetic.is_none() {
+            for flag in ["trials", "batches"] {
+                anyhow::ensure!(
+                    args.get_str(flag).is_none(),
+                    "--{flag} only applies to --synthetic calibration"
+                );
+            }
+        }
+        Ok(cmd)
     }
 
+    /// Artifact-backed calibration through the sharded stage driver (pool
+    /// fan-out at `--workers > 1`); persists the scales for later runs.
     fn run(self, dir: &Path) -> Result<()> {
-        let mut ctx = ExperimentCtx::new(dir, &self.model)?;
-        let report = ctx.pipeline.calibrate(&self.opts)?;
-        ctx.pipeline
-            .scales
-            .save(&dir.join(format!("{}_scales.json", self.model)))
-            .context("saving scales")?;
+        let model = self.model.clone().expect("checked in parse");
+        let spec = SearchSpec::new(model.as_str()).artifacts_dir(dir).workers(self.workers);
+        let mut ctx = spec.open_context()?;
+        let report = ctx.calibrate_with(&self.opts, None)?;
         println!(
-            "calibrated {}: adjustment loss {:.4} -> {:.4} over {} steps",
-            self.model, report.loss_before, report.loss_after, report.steps
+            "calibrated {model} ({} worker(s)): adjustment loss {:.4} -> {:.4} over {} steps",
+            ctx.workers(),
+            report.loss_before,
+            report.loss_after,
+            report.steps
         );
+        Ok(())
+    }
+
+    /// Artifact-free sharded calibration + Hessian trace over the seeded
+    /// synthetic stage runner — CI runs this at 1 and 2 workers and diffs
+    /// the RESULT lines (they must be byte-identical).
+    fn run_synthetic(self) -> Result<()> {
+        let layers = self.synthetic.expect("checked in parse");
+        let mut stage = SyntheticStage::new(layers, self.batches, self.workers, self.seed);
+        let mut obs = log_event;
+        let (scales, report) = calibrate_sharded(&mut stage, &self.opts, Some(&mut obs))?;
+        let traces = hessian_trace_sharded(&mut stage, self.trials, self.seed)?;
+        eprintln!(
+            "[calibration] synthetic run: {} layers x {} batches, {} worker(s), {} broadcasts",
+            layers,
+            self.batches,
+            self.workers,
+            stage.broadcasts(),
+        );
+        // Stable single-line summary for scripts: identical at every
+        // worker count (the sharded-determinism contract).
+        let summary = Value::obj(vec![
+            ("alpha_w", Value::arr_f32(&scales.alpha_w)),
+            ("gamma_w", Value::arr_f32(&scales.gamma_w)),
+            ("alpha_a", Value::arr_f32(&scales.alpha_a)),
+            ("gamma_a", Value::arr_f32(&scales.gamma_a)),
+            ("hessian", Value::Arr(traces.iter().map(|&t| Value::Num(t)).collect())),
+            ("loss_before", Value::Num(report.loss_before)),
+            ("loss_after", Value::Num(report.loss_after)),
+            ("steps", Value::Num(report.steps as f64)),
+        ]);
+        println!("RESULT {summary}");
         Ok(())
     }
 }
@@ -264,6 +332,7 @@ struct SensitivityCmd {
     metric: MetricKind,
     trials: usize,
     seed: u64,
+    workers: usize,
 }
 
 impl SensitivityCmd {
@@ -273,13 +342,23 @@ impl SensitivityCmd {
             metric: args.req("metric")?,
             trials: args.get_or("trials", METRIC_TRIALS)?,
             seed: args.get_or("seed", 0u64)?,
+            workers: args.get_or("workers", 1usize)?.max(1),
         })
     }
 
+    /// Calibrate (sharded at `--workers > 1`), then compute the metric
+    /// through the context — Hessian trials fan across the same pool, and
+    /// informed scores land in the on-disk sensitivity cache.
     fn run(self, dir: &Path) -> Result<()> {
-        let mut ctx = ExperimentCtx::new(dir, &self.model)?;
+        let spec = SearchSpec::new(self.model.as_str())
+            .artifacts_dir(dir)
+            .workers(self.workers)
+            .metric(self.metric)
+            .trials(self.trials.max(1))
+            .seed(self.seed);
+        let mut ctx = spec.open_context()?;
         ctx.ensure_calibrated()?;
-        let sens = sensitivity::compute(&mut ctx.pipeline, self.metric, self.trials, self.seed)?;
+        let sens = ctx.cached_sensitivity(self.metric, self.trials, self.seed)?;
         let names: Vec<String> = ctx
             .pipeline
             .artifacts
@@ -322,18 +401,24 @@ struct SearchCmd {
     abort_after: Option<usize>,
 }
 
+/// Parse the shared `--budget-latency`/`--budget-size` flags (mutually
+/// exclusive) into an objective.
+fn parse_objective(args: &Args) -> Result<ObjectiveSpec> {
+    let budget_latency = args.get_str("budget-latency").map(str::parse).transpose()?;
+    let budget_size = args.get_str("budget-size").map(str::parse).transpose()?;
+    match (budget_latency, budget_size) {
+        (Some(_), Some(_)) => {
+            anyhow::bail!("--budget-latency and --budget-size are mutually exclusive")
+        }
+        (Some(rel_latency), None) => Ok(ObjectiveSpec::LatencyBudget { rel_latency }),
+        (None, Some(rel_size)) => Ok(ObjectiveSpec::FootprintBudget { rel_size }),
+        (None, None) => Ok(ObjectiveSpec::AccuracyTarget),
+    }
+}
+
 impl SearchCmd {
     fn parse(args: &Args) -> Result<Self> {
-        let budget_latency = args.get_str("budget-latency").map(str::parse).transpose()?;
-        let budget_size = args.get_str("budget-size").map(str::parse).transpose()?;
-        let objective = match (budget_latency, budget_size) {
-            (Some(_), Some(_)) => {
-                anyhow::bail!("--budget-latency and --budget-size are mutually exclusive")
-            }
-            (Some(rel_latency), None) => ObjectiveSpec::LatencyBudget { rel_latency },
-            (None, Some(rel_size)) => ObjectiveSpec::FootprintBudget { rel_size },
-            (None, None) => ObjectiveSpec::AccuracyTarget,
-        };
+        let objective = parse_objective(args)?;
         let backend = match (args.get_str("backend"), args.get_str("table")) {
             (Some(_), Some(_)) => anyhow::bail!("--backend and --table are mutually exclusive"),
             (None, Some(path)) => BackendSpec::MeasuredTable(PathBuf::from(path)),
@@ -418,7 +503,7 @@ impl SearchCmd {
         let model = self.model.clone().expect("checked in parse");
         let spec = self.to_spec(&model).artifacts_dir(dir);
         let mut session = spec.open()?;
-        session.on_event(print_event);
+        session.on_event(log_event);
         let report = session.run()?;
         let out = &report.outcome;
         println!(
@@ -449,12 +534,14 @@ impl SearchCmd {
                 stats.evals, stats.cache_hits, stats.batch_execs, stats.early_exits
             );
         } else {
-            // With workers > 1 the search ran on a PipelinePool whose
-            // worker pipelines are gone; the context pipeline's counters
-            // only cover calibration/sensitivity, so don't present them
-            // as the search's stats.
+            // With workers > 1 the search ran on the context's shared
+            // PipelinePool; the context pipeline's counters only cover
+            // calibration/sensitivity, so don't present them as the
+            // search's stats (cache hits arrive via the CacheReport
+            // event).
             println!(
-                "search ran on a {}-worker pipeline pool (shared eval cache persisted to disk)",
+                "search ran on the context's {}-worker pipeline pool \
+                 (shared eval cache persisted to disk)",
                 report.workers
             );
         }
@@ -491,7 +578,7 @@ impl SearchCmd {
             None => None,
         };
         let mut penv = ParallelEnv::new(&env, self.workers);
-        let mut observer = print_event;
+        let mut observer = log_event;
         let outcome = run_search(
             self.algo,
             &mut penv,
@@ -522,48 +609,14 @@ impl SearchCmd {
     }
 }
 
-/// Render one [`SearchEvent`] as a stderr progress line (the typed
-/// replacement for the old ad-hoc prints).
-fn print_event(ev: &SearchEvent) {
-    match ev {
-        SearchEvent::Started { algo, layers, objective } => {
-            eprintln!("[search] {algo} over {layers} layers: {objective}");
-        }
-        SearchEvent::Decision { bits, index, accepted, accuracy, cost, replayed } => {
-            let verdict = if *accepted { "accept" } else { "reject" };
-            let mut line = format!("[search] {bits}b #{index}: {verdict}");
-            if !replayed {
-                line.push_str(&format!(" acc={:.2}%", accuracy * 100.0));
-            } else {
-                line.push_str(" (replayed)");
-            }
-            if let Some(c) = cost {
-                line.push_str(&format!(" cost={:.1}%", c * 100.0));
-            }
-            eprintln!("{line}");
-        }
-        SearchEvent::BudgetSatisfied { cost } => {
-            eprintln!("[search] budget satisfied at rel cost {:.1}% — stopping", cost * 100.0);
-        }
-        SearchEvent::Finished { accuracy, evals } => {
-            eprintln!(
-                "[search] finished: accuracy {:.2}% after {evals} decision evals",
-                accuracy * 100.0
-            );
-        }
-        SearchEvent::CacheReport { memo_hits, persistent_hits } => {
-            eprintln!("[search] cache: {memo_hits} memo hits, {persistent_hits} persistent hits");
-        }
-        SearchEvent::FrontierSubmitted { .. } | SearchEvent::CheckpointWritten { .. } => {}
-    }
-}
-
 // ----------------------------------------------------------------- table
 
 struct TableCmd {
     id: u32,
     model: Option<String>,
     out: Option<PathBuf>,
+    workers: usize,
+    objective: ObjectiveSpec,
 }
 
 impl TableCmd {
@@ -572,14 +625,24 @@ impl TableCmd {
             id: args.req::<u32>("id")?,
             model: args.get_str("model").map(String::from),
             out: args.get_str("out").map(PathBuf::from),
+            workers: args.get_or("workers", 1usize)?.max(1),
+            objective: parse_objective(args)?,
         })
     }
 
+    /// Regenerate paper tables through the spec front door: with
+    /// `--workers > 1` every grid cell calibrates and evaluates on the
+    /// shared pipeline pool, and `--budget-latency`/`--budget-size` turn
+    /// the grid into its latency-budgeted variant.
     fn run(self, dir: &Path) -> Result<()> {
         let models = all_models(dir, self.model.as_deref())?;
         let mut rendered = String::new();
         for m in &models {
-            let mut ctx = ExperimentCtx::new(dir, m)?;
+            let spec = SearchSpec::new(m.as_str())
+                .artifacts_dir(dir)
+                .workers(self.workers)
+                .objective(self.objective);
+            let mut ctx = spec.open_context()?;
             let text = match self.id {
                 1 => experiments::table1(&mut ctx)?.render(),
                 2 | 3 => {

@@ -1,12 +1,20 @@
-//! Calibration math: max-based scale initialization (the paper's step 1)
-//! and the Adam machinery for backprop scale adjustment (step 2).
+//! Calibration math: max-based scale initialization (the paper's step 1),
+//! the Adam machinery for backprop scale adjustment (step 2), and the
+//! host-side shard reducers of the data-parallel calibration driver.
 //!
-//! Graph execution lives in the coordinator's [`crate::coordinator::Pipeline`];
-//! this module holds the pure host-side pieces so they are unit-testable
-//! without a PJRT device.
+//! Graph execution lives in the coordinator's [`crate::coordinator::Pipeline`]
+//! shard kernels and is fanned across workers by
+//! [`crate::coordinator::shard`]; this module holds the pure host-side
+//! pieces — per-shard result types, fixed-order reductions, the optimizer —
+//! so the math is unit-testable without a PJRT device. Every reduction here
+//! is ordered by *global* batch/trial index, never by worker, which is what
+//! makes sharded results bit-identical at any worker count.
+
+use anyhow::{anyhow, ensure};
 
 use crate::model::{Manifest, ParamStore};
 use crate::quant::Scales;
+use crate::Result;
 
 /// Options for the two-step scale estimation.
 #[derive(Debug, Clone)]
@@ -18,11 +26,17 @@ pub struct CalibrationOptions {
     pub lr: f32,
     /// Passes over the calibration split.
     pub epochs: usize,
+    /// Adjustment batches averaged into one Adam step — the data-parallel
+    /// sync group. Grouping is part of the math, not of the execution plan:
+    /// it depends only on this value and the batch ordering, never on how
+    /// many workers computed the gradients, so any worker count reproduces
+    /// the same scales bit-for-bit.
+    pub grad_batches: usize,
 }
 
 impl Default for CalibrationOptions {
     fn default() -> Self {
-        Self { adjust_bits: 8.0, lr: 1e-5, epochs: 2 }
+        Self { adjust_bits: 8.0, lr: 1e-5, epochs: 2, grad_batches: 8 }
     }
 }
 
@@ -34,21 +48,49 @@ pub struct AdjustReport {
     pub steps: usize,
 }
 
+/// One adjustment batch's output from a shard kernel, evaluated at *fixed*
+/// scales: the batch's mean loss and the four concatenated scale-gradient
+/// vectors (layout as in [`ScaleAdam::step`]). Tagged with the global
+/// batch index so host reduction is independent of shard layout.
+#[derive(Debug, Clone)]
+pub struct BatchGrad {
+    /// Global batch index within the adjustment split.
+    pub batch: usize,
+    pub loss: f64,
+    pub grads: Vec<f32>,
+}
+
+/// One Hutchinson probe's per-layer `v^T H v` samples, tagged with the
+/// trial index that seeded the probe (see
+/// [`crate::util::rng::probe_seed`]) so host reduction is independent of
+/// shard layout.
+#[derive(Debug, Clone)]
+pub struct TraceSample {
+    pub trial: usize,
+    pub vhv: Vec<f64>,
+}
+
 /// Step 1 (weights): `alpha = 1/max|w|`, `gamma = max|w|` per quant layer.
-/// Activation scales start at identity and are filled in by the pipeline
-/// from the `actstats` graph.
-pub fn weight_scales(manifest: &Manifest, params: &ParamStore) -> Scales {
+/// Activation scales start at identity and are filled in from the
+/// `actstats` graph via [`apply_act_stats`]. Errors (rather than panics)
+/// on a manifest/parameter-store mismatch, naming the missing param.
+pub fn weight_scales(manifest: &Manifest, params: &ParamStore) -> Result<Scales> {
     let layers = manifest.quant_layers();
     let mut scales = Scales::identity(layers.len());
     for (qi, layer) in layers.iter().enumerate() {
-        let pi = params
-            .index_of(&layer.param)
-            .unwrap_or_else(|| panic!("param {} missing", layer.param));
+        let pi = params.index_of(&layer.param).ok_or_else(|| {
+            anyhow!(
+                "weight calibration: param `{}` (quant layer `{}`) missing from the \
+                 parameter store",
+                layer.param,
+                layer.name
+            )
+        })?;
         let maxabs = params.max_abs(pi).max(1e-12);
         scales.alpha_w[qi] = 1.0 / maxabs;
         scales.gamma_w[qi] = maxabs;
     }
-    scales
+    Ok(scales)
 }
 
 /// Fill activation scales from per-layer `max |a|` statistics.
@@ -59,6 +101,89 @@ pub fn apply_act_stats(scales: &mut Scales, act_maxabs: &[f32]) {
         scales.alpha_a[qi] = 1.0 / m;
         scales.gamma_a[qi] = m;
     }
+}
+
+// ------------------------------------------------------------- reducers
+
+/// Max-merge per-shard activation maxima, elementwise. `max` is exact and
+/// order-independent, so any shard layout reproduces the single-device
+/// full-split loop bit-for-bit.
+pub fn merge_act_stats(shards: &[Vec<f32>]) -> Vec<f32> {
+    let mut out = match shards.first() {
+        Some(first) => first.clone(),
+        None => return Vec::new(),
+    };
+    for shard in &shards[1..] {
+        assert_eq!(shard.len(), out.len(), "act-stat shards disagree on layer count");
+        for (o, &v) in out.iter_mut().zip(shard) {
+            *o = o.max(v);
+        }
+    }
+    out
+}
+
+/// Fixed-order gradient reduction: sort by global batch index, accumulate
+/// loss and gradients in f64, return the means. The reduction order
+/// depends only on batch indices — never on which worker produced a
+/// gradient or in what order shards were gathered — so every worker count
+/// yields bit-identical means.
+pub fn reduce_grads(dim: usize, batch_grads: &mut [BatchGrad]) -> Result<(f64, Vec<f32>)> {
+    ensure!(!batch_grads.is_empty(), "gradient reduction over zero batches");
+    batch_grads.sort_by_key(|g| g.batch);
+    let mut loss = 0.0f64;
+    let mut acc = vec![0.0f64; dim * 4];
+    for g in batch_grads.iter() {
+        ensure!(
+            g.grads.len() == dim * 4,
+            "batch {}: expected {} gradient components, got {}",
+            g.batch,
+            dim * 4,
+            g.grads.len()
+        );
+        loss += g.loss;
+        for (a, &v) in acc.iter_mut().zip(&g.grads) {
+            *a += f64::from(v);
+        }
+    }
+    let inv = 1.0 / batch_grads.len() as f64;
+    Ok((loss * inv, acc.into_iter().map(|a| (a * inv) as f32).collect()))
+}
+
+/// Fixed-order Hutchinson trace reduction: sort samples by trial index,
+/// accumulate in trial order, normalize by `trials` and the per-layer
+/// weight element counts — the host half of
+/// [`crate::coordinator::Pipeline::hessian_trace`].
+pub fn reduce_traces(
+    samples: &mut [TraceSample],
+    trials: usize,
+    weight_numels: &[u64],
+) -> Result<Vec<f64>> {
+    ensure!(trials > 0, "trace reduction over zero trials");
+    samples.sort_by_key(|s| s.trial);
+    let n = weight_numels.len();
+    let mut acc = vec![0.0f64; n];
+    for s in samples.iter() {
+        ensure!(
+            s.vhv.len() == n,
+            "trial {}: expected {} per-layer samples, got {}",
+            s.trial,
+            n,
+            s.vhv.len()
+        );
+        for (a, &v) in acc.iter_mut().zip(&s.vhv) {
+            *a += v;
+        }
+    }
+    let denom = trials as f64;
+    Ok(acc.iter().zip(weight_numels).map(|(a, &m)| a / denom / m as f64).collect())
+}
+
+/// The data-parallel sync groups of one adjustment epoch: consecutive runs
+/// of `grad_batches` global batch indices (the last group may be short).
+pub fn sync_groups(num_batches: usize, grad_batches: usize) -> Vec<Vec<usize>> {
+    let group = grad_batches.max(1);
+    let all: Vec<usize> = (0..num_batches).collect();
+    all.chunks(group).map(<[usize]>::to_vec).collect()
 }
 
 /// Minimal Adam over the four scale vectors (the only trainable state in
@@ -140,5 +265,140 @@ mod tests {
         assert_eq!(s.alpha_a, vec![0.5, 0.25, 2.0]);
         // weight side untouched
         assert_eq!(s.alpha_w, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn act_stat_merge_is_elementwise_max_and_shard_independent() {
+        let a = vec![1.0f32, 0.5, 3.0];
+        let b = vec![2.0f32, 0.25, 1.0];
+        let c = vec![0.5f32, 4.0, 2.0];
+        let merged = merge_act_stats(&[a.clone(), b.clone(), c.clone()]);
+        assert_eq!(merged, vec![2.0, 4.0, 3.0]);
+        // Any shard layout (here: pre-merged pairs, reversed order) agrees.
+        let ab = merge_act_stats(&[a, b]);
+        let again = merge_act_stats(&[c, ab]);
+        assert_eq!(merged, again);
+        assert!(merge_act_stats(&[]).is_empty());
+    }
+
+    /// Per-batch gradient of the synthetic quadratic
+    /// `L_b(s) = w_b * sum((s - t)^2)` at `scales`.
+    fn quad_grad(batch: usize, scales: &Scales, targets: &[f32]) -> BatchGrad {
+        let w = 1.0 + 0.125 * batch as f32; // per-batch curvature jitter
+        let dim = scales.num_layers();
+        let mut grads = Vec::with_capacity(dim * 4);
+        let mut loss = 0.0f64;
+        let views = [&scales.alpha_w, &scales.gamma_w, &scales.alpha_a, &scales.gamma_a];
+        for (vi, vec) in views.into_iter().enumerate() {
+            for (i, &s) in vec.iter().enumerate() {
+                let t = targets[vi * dim + i];
+                grads.push(w * 2.0 * (s - t));
+                loss += f64::from(w * (s - t) * (s - t));
+            }
+        }
+        BatchGrad { batch, loss, grads }
+    }
+
+    #[test]
+    fn gradient_reduction_is_shard_layout_independent() {
+        // The same eight per-batch gradients, delivered whole / split into
+        // shards of every size / in scrambled gather order, must reduce to
+        // bit-identical means — the property the pool driver relies on.
+        let dim = 3;
+        let scales = Scales::identity(dim);
+        let targets: Vec<f32> = (0..dim * 4).map(|i| 0.25 * i as f32).collect();
+        let mut whole: Vec<BatchGrad> =
+            (0..8).map(|b| quad_grad(b, &scales, &targets)).collect();
+        let (loss_ref, grads_ref) = reduce_grads(dim, &mut whole).unwrap();
+        for order in [vec![4, 5, 6, 7, 0, 1, 2, 3], vec![7, 2, 5, 0, 3, 6, 1, 4]] {
+            let mut scrambled: Vec<BatchGrad> =
+                order.iter().map(|&b| quad_grad(b, &scales, &targets)).collect();
+            let (loss, grads) = reduce_grads(dim, &mut scrambled).unwrap();
+            assert_eq!(loss.to_bits(), loss_ref.to_bits());
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&grads), bits(&grads_ref));
+        }
+    }
+
+    #[test]
+    fn gradient_average_matches_analytic_mean_on_quadratic() {
+        // On the quadratic, the fixed-order average must equal the gradient
+        // of the mean loss: mean_b(w_b) * 2 * (s - t), up to f32 rounding of
+        // the final cast.
+        let dim = 2;
+        let scales = Scales::identity(dim);
+        let targets = vec![3.0f32; dim * 4];
+        let nb = 4usize;
+        let mut grads: Vec<BatchGrad> =
+            (0..nb).map(|b| quad_grad(b, &scales, &targets)).collect();
+        let (_, mean) = reduce_grads(dim, &mut grads).unwrap();
+        let w_mean: f64 =
+            (0..nb).map(|b| 1.0 + 0.125 * b as f64).sum::<f64>() / nb as f64;
+        for &g in &mean {
+            let expect = (w_mean * 2.0 * (1.0 - 3.0)) as f32;
+            assert!((g - expect).abs() < 1e-5, "got {g}, expected {expect}");
+        }
+    }
+
+    #[test]
+    fn adam_trajectory_identical_across_shard_layouts() {
+        // Run the full grouped adjustment loop twice: once reducing grads
+        // delivered in batch order, once in a scrambled shard order. The
+        // final scales must be bit-identical (reduction sorts by batch).
+        let dim = 3;
+        let targets: Vec<f32> = (0..dim * 4).map(|i| 1.0 + 0.1 * i as f32).collect();
+        let nb = 10usize;
+        let run = |scramble: bool| -> Scales {
+            let mut scales = Scales::identity(dim);
+            let mut opt = ScaleAdam::new(dim, 0.01);
+            for _epoch in 0..2 {
+                for group in sync_groups(nb, 4) {
+                    let mut grads: Vec<BatchGrad> = if scramble {
+                        group.iter().rev().map(|&b| quad_grad(b, &scales, &targets)).collect()
+                    } else {
+                        group.iter().map(|&b| quad_grad(b, &scales, &targets)).collect()
+                    };
+                    let (_, mean) = reduce_grads(dim, &mut grads).unwrap();
+                    opt.step(&mut scales, &mean);
+                }
+            }
+            scales
+        };
+        let a = run(false);
+        let b = run(true);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.alpha_w), bits(&b.alpha_w));
+        assert_eq!(bits(&a.gamma_w), bits(&b.gamma_w));
+        assert_eq!(bits(&a.alpha_a), bits(&b.alpha_a));
+        assert_eq!(bits(&a.gamma_a), bits(&b.gamma_a));
+    }
+
+    #[test]
+    fn trace_reduction_sorts_and_normalizes() {
+        let numels = vec![4u64, 2];
+        let mut samples = vec![
+            TraceSample { trial: 1, vhv: vec![2.0, 8.0] },
+            TraceSample { trial: 0, vhv: vec![6.0, 4.0] },
+        ];
+        let traces = reduce_traces(&mut samples, 2, &numels).unwrap();
+        // (6 + 2) / 2 trials / 4 elems = 1.0; (4 + 8) / 2 / 2 = 3.0.
+        assert_eq!(traces, vec![1.0, 3.0]);
+        assert!(reduce_traces(&mut [], 0, &numels).is_err());
+    }
+
+    #[test]
+    fn sync_groups_cover_all_batches_in_order() {
+        let groups = sync_groups(10, 4);
+        assert_eq!(groups, vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7], vec![8, 9]]);
+        assert!(sync_groups(0, 4).is_empty());
+        // grad_batches = 0 is clamped to single-batch groups.
+        assert_eq!(sync_groups(2, 0), vec![vec![0], vec![1]]);
+    }
+
+    #[test]
+    fn grad_reduction_rejects_malformed_shards() {
+        assert!(reduce_grads(2, &mut []).is_err());
+        let mut bad = vec![BatchGrad { batch: 0, loss: 0.0, grads: vec![0.0; 3] }];
+        assert!(reduce_grads(2, &mut bad).is_err());
     }
 }

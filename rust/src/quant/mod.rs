@@ -5,7 +5,7 @@ pub mod calibrate;
 mod config;
 mod quantizer;
 
-pub use calibrate::{AdjustReport, CalibrationOptions};
+pub use calibrate::{AdjustReport, BatchGrad, CalibrationOptions, TraceSample};
 pub use config::{BitWidth, QuantConfig, FLOAT_BITS, QUANT_BITS};
 pub use quantizer::{eps_qe, quantize, quantize_into, quantize_scalar};
 

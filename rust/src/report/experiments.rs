@@ -3,11 +3,15 @@
 //! Contexts are constructed through the [`crate::api`] front door:
 //! [`ExperimentCtx`] is a re-export of [`crate::api::ModelContext`], so
 //! every table/figure run shares the CLI's spec-driven pipeline, cost
-//! backend, and eval-cache wiring.
+//! backend, and eval-cache wiring — and, when the spec asks for
+//! `workers > 1`, the context's shared pipeline pool: calibration,
+//! Hessian orderings, and every grid cell's evaluations all fan across
+//! it (`mpq table --workers N`).
 
 use std::time::Instant;
 
-use crate::coordinator::SearchAlgo;
+use crate::api::run_search;
+use crate::coordinator::{SearchAlgo, SearchEnv};
 use crate::quant::{QuantConfig, FLOAT_BITS, QUANT_BITS};
 use crate::report::{aggregate, CellResult, Table};
 use crate::sensitivity::{self, MetricKind, Sensitivity};
@@ -26,7 +30,12 @@ pub const RANDOM_SEEDS: [u64; 5] = [11, 22, 33, 44, 55];
 /// Hutchinson / noise trials used by the metric computations.
 pub const METRIC_TRIALS: usize = crate::api::DEFAULT_TRIALS;
 
-/// Run one search cell: sensitivity ordering + algorithm + accuracy target.
+/// Run one search cell: sensitivity ordering + algorithm + accuracy
+/// target, under the context's configured objective (the paper's plain
+/// accuracy floor by default, a latency/footprint budget when the spec
+/// asks). The context itself is the evaluation environment, so with
+/// `workers > 1` the cell's frontier fans across the shared pipeline
+/// pool.
 pub fn run_cell(
     ctx: &mut ExperimentCtx,
     algo: SearchAlgo,
@@ -35,9 +44,11 @@ pub fn run_cell(
     target_frac: f64,
 ) -> Result<CellResult> {
     ctx.ensure_calibrated()?;
-    let target = target_frac * ctx.pipeline.float_val_acc();
+    let floor = target_frac * ctx.pipeline.float_val_acc();
+    let objective = ctx.objective.build(floor, ctx.cost.clone());
     let t0 = Instant::now();
-    let outcome = algo.run(&mut ctx.pipeline, &sens.order, &QUANT_BITS, target)?;
+    let outcome =
+        run_search(algo, ctx, &sens.order, &QUANT_BITS, objective.as_ref(), None, None)?;
     let search_seconds = t0.elapsed().as_secs_f64();
     Ok(CellResult {
         model: ctx.model(),
@@ -49,7 +60,7 @@ pub fn run_cell(
         rel_latency_pct: ctx.cost.rel_latency(&outcome.config) * 100.0,
         cost_provenance: ctx.cost.provenance().to_string(),
         accuracy: outcome.accuracy,
-        met_target: outcome.accuracy >= target,
+        met_target: outcome.accuracy >= floor,
         evals: outcome.evals,
         search_seconds,
         config: outcome.config,
@@ -71,10 +82,9 @@ pub fn table1(ctx: &mut ExperimentCtx) -> Result<Table> {
     );
     let all_bits = [4.0f32, 8.0, FLOAT_BITS];
     let cfgs: Vec<QuantConfig> = all_bits.iter().map(|&b| QuantConfig::uniform(n, b)).collect();
-    let results: Vec<crate::coordinator::EvalResult> = {
-        use crate::coordinator::SearchEnv;
-        ctx.pipeline.eval_many(&cfgs, None).into_iter().collect::<Result<_>>()?
-    };
+    // The context env routes through the pool when one exists.
+    let results: Vec<crate::coordinator::EvalResult> =
+        ctx.eval_many(&cfgs, None).into_iter().collect::<Result<_>>()?;
     // fp16 is the relative-accuracy baseline (== QuantConfig::float).
     let base_acc = results[all_bits.len() - 1].accuracy;
     for ((bits, cfg), r) in all_bits.iter().zip(&cfgs).zip(&results) {

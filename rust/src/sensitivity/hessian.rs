@@ -1,21 +1,38 @@
 //! ε_Hessian (Eq. 6): per-layer mean Hessian trace via Hutchinson probes.
 //!
 //! The heavy lifting (the Hessian-vector products) happens in the AOT
-//! `hvp` graph — `grad` composed with `jvp` over the float loss — driven by
-//! [`Pipeline::hessian_trace`]. This wrapper just shapes the result into a
-//! [`Sensitivity`] ordering. Larger trace ⇒ sharper local curvature ⇒ more
-//! sensitive to quantization (Dong et al., 2019; 2020).
+//! `hvp` graph — `grad` composed with `jvp` over the float loss — driven
+//! by the sharded stage driver [`crate::coordinator::shard`]: probes are
+//! seeded per trial, fanned across workers, and reduced host-side in
+//! trial order. These wrappers just shape the result into a
+//! [`Sensitivity`] ordering. Larger trace ⇒ sharper local curvature ⇒
+//! more sensitive to quantization (Dong et al., 2019; 2020).
 
-use crate::coordinator::Pipeline;
+use crate::coordinator::{hessian_trace_sharded, Pipeline, PipelinePool};
 use crate::Result;
 
 use super::{MetricKind, Sensitivity};
 
+/// Single-pipeline estimate (one worker; HVPs run back-to-back).
 pub fn hessian_sensitivity(
     pipeline: &mut Pipeline,
     trials: usize,
     seed: u64,
 ) -> Result<Sensitivity> {
     let scores = pipeline.hessian_trace(trials.max(1), seed)?;
+    Ok(Sensitivity::from_scores(MetricKind::Hessian, scores))
+}
+
+/// Pool-sharded estimate: trials fan across the pool's worker pipelines —
+/// HVPs are the most expensive graph in the system, so this is where
+/// sensitivity-guided search gains the most from `--workers`. Bit-identical
+/// to [`hessian_sensitivity`] at every worker count (both run through the
+/// sharded driver's trial-addressed probes).
+pub fn hessian_sensitivity_pooled(
+    pool: &mut PipelinePool,
+    trials: usize,
+    seed: u64,
+) -> Result<Sensitivity> {
+    let scores = hessian_trace_sharded(pool, trials.max(1), seed)?;
     Ok(Sensitivity::from_scores(MetricKind::Hessian, scores))
 }

@@ -1,12 +1,20 @@
 //! The paper's three sensitivity metrics (§3.2) plus the uninformed
 //! (random) baseline, each producing per-layer scores and an ascending
 //! ordering (least sensitive first) for the configuration searches.
+//!
+//! ε_Hessian — the most expensive metric — runs through the sharded stage
+//! driver ([`crate::coordinator::shard`]): [`hessian_sensitivity_pooled`]
+//! fans Hutchinson trials across a [`crate::coordinator::PipelinePool`]
+//! and is bit-identical to the single-pipeline [`hessian_sensitivity`] at
+//! every worker count. ε_QE is host-side math and ε_N remains a
+//! single-pipeline loop (its perturbed-weight uploads serialize on the
+//! parameter store; sharding it is an open ROADMAP residual).
 
 mod hessian;
 mod noise;
 mod qe;
 
-pub use hessian::hessian_sensitivity;
+pub use hessian::{hessian_sensitivity, hessian_sensitivity_pooled};
 pub use noise::{noise_sensitivity, NoiseOptions};
 pub use qe::qe_sensitivity;
 

@@ -35,9 +35,9 @@ fn main() -> mpq::Result<()> {
     let val = &session.ctx.pipeline.artifacts.val;
     let examples: Vec<_> = (0..192).map(|i| val.x.slice_rows(i % val.count, 1)).collect();
 
-    // 2. Turn the session into the engine: two pipeline workers, bounded
-    //    queue, 50 ms per-request deadline. The session's search pipeline
-    //    is dropped first; pool workers load the persisted scales.
+    // 2. Turn the session into the engine: the session's already-warm
+    //    two-worker pool becomes the serving backend (no second pool
+    //    build), behind a bounded queue with a 50 ms per-request deadline.
     let opts = ServeOptions {
         deadline: Some(std::time::Duration::from_millis(50)),
         ..ServeOptions::default()

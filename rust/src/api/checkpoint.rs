@@ -151,20 +151,8 @@ impl Checkpoint {
             ("fingerprint", Value::Str(self.fingerprint.clone())),
             ("decisions", Value::Arr(self.decisions.iter().map(|&d| Value::Bool(d)).collect())),
         ]);
-        let file_name = self
-            .path
-            .file_name()
-            .map(|n| n.to_string_lossy().into_owned())
-            .unwrap_or_else(|| "checkpoint".to_string());
-        let tmp = self.path.with_file_name(format!(".{file_name}.tmp.{}", std::process::id()));
-        std::fs::write(&tmp, v.to_string())
-            .with_context(|| format!("writing checkpoint temp {}", tmp.display()))?;
-        if let Err(e) = std::fs::rename(&tmp, &self.path) {
-            let _ = std::fs::remove_file(&tmp);
-            return Err(anyhow::Error::new(e)
-                .context(format!("committing checkpoint {}", self.path.display())));
-        }
-        Ok(())
+        crate::util::fs::atomic_write_text(&self.path, &v.to_string())
+            .with_context(|| format!("saving checkpoint {}", self.path.display()))
     }
 }
 

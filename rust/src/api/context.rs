@@ -7,11 +7,12 @@
 //! the same way. `report::experiments` re-exports it under its old name.
 //!
 //! With `workers > 1` the context owns a shared [`PipelinePool`]: sharded
-//! calibration and Hessian-trace jobs run on it through
+//! calibration, Hessian-trace, and ε_N noise jobs run on it through
 //! [`crate::coordinator::shard`], and the context's [`SearchEnv`] impl
 //! evaluates through it — so searches, report grids, and `mpq
 //! calibrate`/`mpq sensitivity` all acquire scales and results from one
-//! pool, built once.
+//! pool, built once. [`ModelContext::take_pool`] hands that same warm
+//! pool to the serving engine at `mpq serve` startup.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -24,7 +25,7 @@ use crate::coordinator::{
 use crate::latency::{AccelModel, CostModel, DeployScale, KernelTable};
 use crate::model::Manifest;
 use crate::quant::{AdjustReport, CalibrationOptions, QuantConfig, Scales};
-use crate::sensitivity::{self, MetricKind, Sensitivity};
+use crate::sensitivity::{self, MetricKind, NoiseOptions, Sensitivity};
 use crate::Result;
 
 use super::{log_event, BackendSpec, CacheSpec, ObjectiveSpec, ScaleSpec, SearchEvent, SearchSpec};
@@ -73,10 +74,13 @@ pub struct ModelContext {
 
 impl ModelContext {
     /// On-disk sensitivity cache schema version. Bumped to 2 when Hessian
-    /// probes became trial-addressable (`probe_seed(seed, trial)`): v1
-    /// files were produced by a sequentially shared RNG and would order
-    /// layers differently, so they are recomputed rather than trusted.
-    pub const SENS_CACHE_VERSION: usize = 2;
+    /// probes became trial-addressable (`probe_seed(seed, trial)`), and to
+    /// 3 when ε_N perturbations became (layer, trial)-addressable
+    /// (`noise_seed(seed, layer, trial)`): v1/v2 files carry scores drawn
+    /// from a sequentially shared RNG and would order layers differently,
+    /// so they are recomputed rather than trusted — v3 sharded noise
+    /// scores are never mixed with serial-loop files.
+    pub const SENS_CACHE_VERSION: usize = 3;
 
     /// Context with default spec settings (A100-like analytical costing,
     /// reference deploy scale, unbounded cache, one worker).
@@ -114,6 +118,16 @@ impl ModelContext {
     /// calibration has run).
     pub fn pool(&self) -> Option<&PipelinePool> {
         self.pool.as_ref()
+    }
+
+    /// Move the shared worker pool out of the context — the warm-pool
+    /// handover [`crate::api::SearchSession::into_server`] uses so serving
+    /// reuses the already-built, already-calibrated worker pipelines
+    /// instead of constructing a second pool (and re-uploading every
+    /// weight). The context falls back to its single pipeline for any
+    /// later evaluation.
+    pub fn take_pool(&mut self) -> Option<PipelinePool> {
+        self.pool.take()
     }
 
     /// Where this context's persistent eval cache lives.
@@ -327,11 +341,12 @@ impl ModelContext {
     /// Compute a sensitivity metric, caching scores on disk keyed by
     /// (model, metric, trials, seed) — Hessian/Noise are the most expensive
     /// steps of a table run and are identical across invocations (§Perf).
-    /// Hessian runs through the sharded stage driver (pool when present):
-    /// both paths draw per-trial-seeded probes, so the cached scores are
-    /// worker-count independent. Cache files carry
-    /// [`Self::SENS_CACHE_VERSION`]; files written under an older probe
-    /// scheme (v1: sequentially shared Hessian RNG) are recomputed, so a
+    /// Both device-driven metrics run through the sharded stage driver
+    /// (pool when present): every path draws item-seeded probes/
+    /// perturbations, so the cached scores are worker-count independent.
+    /// Cache files carry [`Self::SENS_CACHE_VERSION`]; files written under
+    /// an older draw scheme (v1: shared Hessian RNG; v2: serial shared-RNG
+    /// noise) are recomputed via [`sensitivity::load_score_cache`], so a
     /// stale cache can never break cross-machine determinism.
     pub fn cached_sensitivity(
         &mut self,
@@ -339,7 +354,6 @@ impl ModelContext {
         trials: usize,
         seed: u64,
     ) -> Result<Sensitivity> {
-        use crate::util::json::{self, Value};
         let path = self.pipeline.artifacts.dir.join(format!(
             "{}_sens_{}_{}_{}.json",
             self.model(),
@@ -347,36 +361,28 @@ impl ModelContext {
             trials,
             seed
         ));
-        if metric != MetricKind::Random && path.is_file() {
-            if let Ok(v) = json::parse(&std::fs::read_to_string(&path)?) {
-                let version =
-                    v.req("version").ok().and_then(|x| x.as_usize().ok()).unwrap_or(1);
-                let scores: Option<Vec<f64>> = v
-                    .req("scores")
-                    .ok()
-                    .and_then(|s| s.as_arr().ok())
-                    .map(|arr| arr.iter().filter_map(|x| x.as_f64().ok()).collect());
-                if let Some(scores) = scores {
-                    if version == Self::SENS_CACHE_VERSION
-                        && scores.len() == self.pipeline.num_quant_layers()
-                    {
-                        return Ok(Sensitivity::from_scores(metric, scores));
-                    }
-                }
+        if metric != MetricKind::Random {
+            if let Some(scores) = sensitivity::load_score_cache(
+                &path,
+                Self::SENS_CACHE_VERSION,
+                self.pipeline.num_quant_layers(),
+            ) {
+                return Ok(Sensitivity::from_scores(metric, scores));
             }
         }
         let sens = match (metric, self.pool.as_mut()) {
             (MetricKind::Hessian, Some(pool)) => {
                 sensitivity::hessian_sensitivity_pooled(pool, trials, seed)?
             }
+            (MetricKind::Noise, Some(pool)) => sensitivity::noise_sensitivity_pooled(
+                pool,
+                &NoiseOptions { trials: trials.max(1), ..Default::default() },
+                seed,
+            )?,
             _ => sensitivity::compute(&mut self.pipeline, metric, trials, seed)?,
         };
         if metric != MetricKind::Random {
-            let v = Value::obj(vec![
-                ("version", Value::Num(Self::SENS_CACHE_VERSION as f64)),
-                ("scores", Value::Arr(sens.scores.iter().map(|&s| Value::Num(s)).collect())),
-            ]);
-            let _ = std::fs::write(&path, v.to_string());
+            sensitivity::save_score_cache(&path, Self::SENS_CACHE_VERSION, &sens.scores);
         }
         Ok(sens)
     }

@@ -86,19 +86,32 @@ impl SearchSession {
 
     /// Consume the session into a running inference server over `cfg`:
     /// calibration is ensured (and persisted) first — sharded across the
-    /// context's pool when `workers > 1` — then the session's device state
-    /// is dropped and a fresh [`crate::coordinator::PipelinePool`]-backed
-    /// server is spawned with `spec.workers` workers loading the persisted
-    /// scales.
+    /// context's pool when `workers > 1` — then the context's already-warm
+    /// [`crate::coordinator::PipelinePool`] is handed to the serving
+    /// engine ([`crate::server::serve_with_pool`]): the calibrated worker
+    /// pipelines serve directly, with no second pool build and no
+    /// duplicate weight upload. At `workers == 1` no pool exists yet, so
+    /// the process's single pool is spawned fresh with the persisted
+    /// scales — either way, `mpq serve` builds exactly one pool per
+    /// process.
     pub fn into_server(
         mut self,
         cfg: QuantConfig,
         mut opts: ServeOptions,
     ) -> Result<(ServerHandle, std::thread::JoinHandle<()>)> {
         self.ctx.ensure_calibrated()?;
+        opts.workers = self.spec.workers.max(1);
+        if let Some(pool) = self.ctx.take_pool() {
+            // Write back any calibration-time eval-cache state before the
+            // pool changes hands; serving never touches the eval cache.
+            pool.flush_eval_cache()?;
+            // Drop the context pipeline's device state before warmup: the
+            // pool is this process's one remaining device owner.
+            drop(self);
+            return crate::server::serve_with_pool(pool, cfg, opts);
+        }
         let dir = self.ctx.pipeline.artifacts.dir.clone();
         let model = self.spec.model.clone();
-        opts.workers = self.spec.workers.max(1);
         drop(self);
         let scales_path = dir.join(format!("{model}_scales.json"));
         crate::server::spawn(dir, model, cfg, opts, move |p| {

@@ -17,9 +17,9 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::coordinator::{EvalResult, StageRunner, SyncSearchEnv};
-use crate::quant::calibrate::{merge_act_stats, BatchGrad, TraceSample};
+use crate::quant::calibrate::{merge_act_stats, BatchGrad, NoiseSample, TraceSample};
 use crate::quant::{QuantConfig, Scales};
-use crate::util::rng::{probe_seed, Rng};
+use crate::util::rng::{noise_seed, probe_seed, Rng};
 use crate::Result;
 
 use super::CostModel;
@@ -265,6 +265,24 @@ impl SyntheticStage {
         let vhv = (0..self.layers).map(|l| rng.gaussian().abs() * (1.0 + l as f64)).collect();
         TraceSample { trial, vhv }
     }
+
+    /// The unperturbed model's pseudo calibration loss — pure in `seed`,
+    /// shared by [`StageRunner::stage_clean_loss`] and every noise item.
+    fn clean_loss(&self) -> f64 {
+        let mut rng = Rng::seed_from(probe_seed(self.seed ^ 0xC1EA, 0));
+        1.0 + rng.uniform()
+    }
+
+    /// One ε_N perturbation trial — pure in `(seed, layer, trial)`, with a
+    /// per-layer curvature so scores order the layers deterministically.
+    fn noise_item(&self, lambda: f64, trials: usize, seed: u64, item: usize) -> NoiseSample {
+        Self::spin(self.work);
+        let trials = trials.max(1);
+        let (layer, trial) = (item / trials, item % trials);
+        let mut rng = Rng::seed_from(noise_seed(seed, layer as u64, trial as u64));
+        let degradation = lambda * (1.0 + layer as f64) * rng.gaussian().abs();
+        NoiseSample { item, loss: self.clean_loss() + degradation }
+    }
 }
 
 impl StageRunner for SyntheticStage {
@@ -312,6 +330,20 @@ impl StageRunner for SyntheticStage {
 
     fn stage_hvp(&mut self, seed: u64, shards: &[Vec<usize>]) -> Result<Vec<Vec<TraceSample>>> {
         Ok(self.fan(shards, |t| self.hvp_trial(seed, t)))
+    }
+
+    fn stage_clean_loss(&mut self) -> Result<f64> {
+        Ok(self.clean_loss())
+    }
+
+    fn stage_noise(
+        &mut self,
+        lambda: f64,
+        trials: usize,
+        seed: u64,
+        shards: &[Vec<usize>],
+    ) -> Result<Vec<Vec<NoiseSample>>> {
+        Ok(self.fan(shards, |item| self.noise_item(lambda, trials, seed, item)))
     }
 
     fn broadcast_scales(&mut self, scales: &Scales) -> Result<()> {

@@ -277,19 +277,8 @@ impl EvalCache {
             ),
             ("entries", Value::Arr(rows)),
         ]);
-        let file_name = self
-            .path
-            .file_name()
-            .map(|n| n.to_string_lossy().into_owned())
-            .unwrap_or_else(|| "evalcache".to_string());
-        let tmp = self.path.with_file_name(format!(".{file_name}.tmp.{}", std::process::id()));
-        std::fs::write(&tmp, v.to_string())
-            .with_context(|| format!("writing eval cache temp {}", tmp.display()))?;
-        if let Err(e) = std::fs::rename(&tmp, &self.path) {
-            let _ = std::fs::remove_file(&tmp);
-            return Err(anyhow::Error::new(e)
-                .context(format!("committing eval cache {}", self.path.display())));
-        }
+        crate::util::fs::atomic_write_text(&self.path, &v.to_string())
+            .with_context(|| format!("saving eval cache {}", self.path.display()))?;
         self.dirty = false;
         Ok(())
     }

@@ -14,10 +14,10 @@ use std::path::Path;
 use anyhow::{ensure, Context};
 
 use crate::model::ModelArtifacts;
-use crate::quant::calibrate::{BatchGrad, TraceSample};
+use crate::quant::calibrate::{BatchGrad, NoiseSample, TraceSample};
 use crate::quant::{self, AdjustReport, CalibrationOptions, QuantConfig, Scales};
 use crate::runtime::{scalar_f32, vec_f32, Engine, Executable, HostTensor};
-use crate::util::rng::{probe_seed, Rng};
+use crate::util::rng::{noise_seed, probe_seed, Rng};
 use crate::Result;
 
 use super::shard::{self, StageRunner};
@@ -556,6 +556,35 @@ impl Pipeline {
         shard::hessian_trace_sharded(self, trials, seed)
     }
 
+    // ---------------------------------------------------------------- noise
+
+    /// ε_N perturbation trials for the listed flattened `layer * trials +
+    /// trial` items — the pure noise shard kernel. Each item draws its own
+    /// ν ~ N(0, λ·max|w|) from an RNG seeded by
+    /// [`noise_seed`]`(seed, layer, trial)`, uploads only the perturbed
+    /// tensor, and measures the float calibration loss, so a sample
+    /// depends only on `(seed, layer, trial)`, never on shard layout.
+    pub fn noise_shard(
+        &mut self,
+        lambda: f64,
+        trials: usize,
+        seed: u64,
+        items: &[usize],
+    ) -> Result<Vec<NoiseSample>> {
+        let trials = trials.max(1);
+        let n = self.num_quant_layers();
+        let mut samples = Vec::with_capacity(items.len());
+        for &item in items {
+            let (qi, trial) = (item / trials, item % trials);
+            ensure!(qi < n, "noise item {item} outside the {n} x {trials} trial grid");
+            let mut rng = Rng::seed_from(noise_seed(seed, qi as u64, trial as u64));
+            let (pi, perturbed) = self.gaussian_perturbation(qi, lambda, &mut rng)?;
+            let loss = self.calib_loss_with_perturbed(pi, &perturbed)?;
+            samples.push(NoiseSample { item, loss });
+        }
+        Ok(samples)
+    }
+
     // --------------------------------------------------------------- logits
 
     /// Serving batch sizes available in the artifacts, ascending. Always
@@ -699,6 +728,20 @@ impl StageRunner for Pipeline {
 
     fn stage_hvp(&mut self, seed: u64, shards: &[Vec<usize>]) -> Result<Vec<Vec<TraceSample>>> {
         shards.iter().map(|s| self.hvp_shard(seed, s)).collect()
+    }
+
+    fn stage_clean_loss(&mut self) -> Result<f64> {
+        self.calib_loss_float()
+    }
+
+    fn stage_noise(
+        &mut self,
+        lambda: f64,
+        trials: usize,
+        seed: u64,
+        shards: &[Vec<usize>],
+    ) -> Result<Vec<Vec<NoiseSample>>> {
+        shards.iter().map(|s| self.noise_shard(lambda, trials, seed, s)).collect()
     }
 
     fn broadcast_scales(&mut self, scales: &Scales) -> Result<()> {

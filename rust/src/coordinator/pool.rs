@@ -20,11 +20,12 @@
 //! dominates search wall-clock (every model in this repo).
 //!
 //! Beyond candidate evaluation, the pool is a [`StageRunner`]: sharded
-//! calibration and Hessian-trace jobs ([`WorkerJob::ActStats`],
-//! [`WorkerJob::AdjustGrads`], [`WorkerJob::Hvp`]) scatter over the same
-//! worker pipelines and gather in shard order, with scale updates pushed
-//! to every worker via [`WorkerJob::SetScales`] — see
-//! [`super::shard`] for the drivers and the determinism guarantee.
+//! calibration, Hessian-trace, and ε_N noise jobs ([`WorkerJob::ActStats`],
+//! [`WorkerJob::AdjustGrads`], [`WorkerJob::Hvp`],
+//! [`WorkerJob::NoisePerturb`]) scatter over the same worker pipelines and
+//! gather in shard order, with scale updates pushed to every worker via
+//! [`WorkerJob::SetScales`] — see [`super::shard`] for the drivers and the
+//! determinism guarantee.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -32,7 +33,7 @@ use std::sync::{mpsc, Arc, Mutex};
 
 use anyhow::{anyhow, Context as _};
 
-use crate::quant::calibrate::{self, BatchGrad, TraceSample};
+use crate::quant::calibrate::{self, BatchGrad, NoiseSample, TraceSample};
 use crate::quant::{QuantConfig, Scales};
 use crate::Result;
 
@@ -102,6 +103,18 @@ enum WorkerJob {
     /// Sharded-sensitivity stage: per-trial Hutchinson probes
     /// ([`Pipeline::hvp_shard`]).
     Hvp { seed: u64, trials: Vec<usize>, resp: mpsc::Sender<Result<Vec<TraceSample>>> },
+    /// Sharded-sensitivity stage: ε_N perturbation trials for the listed
+    /// flattened (layer, trial) items ([`Pipeline::noise_shard`]).
+    NoisePerturb {
+        lambda: f64,
+        trials: usize,
+        seed: u64,
+        items: Vec<usize>,
+        resp: mpsc::Sender<Result<Vec<NoiseSample>>>,
+    },
+    /// ε_N baseline: float calibration loss of the unperturbed model
+    /// ([`Pipeline::calib_loss_float`]; identical on every worker).
+    CleanLoss { resp: mpsc::Sender<Result<f64>> },
     /// Install updated scales on the worker's pipeline (broadcast between
     /// Adam steps and after calibration).
     SetScales { scales: Scales, resp: mpsc::Sender<Result<()>> },
@@ -377,6 +390,12 @@ fn worker_loop(pipeline: &mut Pipeline, shared: &SharedCache, rx: &mpsc::Receive
             WorkerJob::Hvp { seed, trials, resp } => {
                 let _ = resp.send(pipeline.hvp_shard(seed, &trials));
             }
+            WorkerJob::NoisePerturb { lambda, trials, seed, items, resp } => {
+                let _ = resp.send(pipeline.noise_shard(lambda, trials, seed, &items));
+            }
+            WorkerJob::CleanLoss { resp } => {
+                let _ = resp.send(pipeline.calib_loss_float());
+            }
             WorkerJob::SetScales { scales, resp } => {
                 pipeline.scales = scales;
                 let _ = resp.send(pipeline.sync_scales());
@@ -444,6 +463,28 @@ impl StageRunner for PipelinePool {
             seed,
             trials,
             resp,
+        })
+    }
+
+    fn stage_clean_loss(&mut self) -> Result<f64> {
+        // Identical on every worker (same parameters and splits); run on 0.
+        let (tx, rx) = mpsc::channel();
+        self.workers[0]
+            .tx
+            .send(WorkerJob::CleanLoss { resp: tx })
+            .map_err(|_| anyhow!("pool worker 0 exited during noise baseline"))?;
+        rx.recv().map_err(|_| anyhow!("pool worker 0 died during noise baseline"))?
+    }
+
+    fn stage_noise(
+        &mut self,
+        lambda: f64,
+        trials: usize,
+        seed: u64,
+        shards: &[Vec<usize>],
+    ) -> Result<Vec<Vec<NoiseSample>>> {
+        self.scatter_stage("noise perturbations", shards, |items, resp| {
+            WorkerJob::NoisePerturb { lambda, trials, seed, items, resp }
         })
     }
 

@@ -1,13 +1,13 @@
 //! Sharded data-parallel calibration & sensitivity: stage jobs fanned
 //! across workers with deterministic host-side reduction.
 //!
-//! The paper's two-step scale estimation and the Hutchinson Hessian trace
-//! used to be monolithic single-device loops inside
-//! [`Pipeline`](super::Pipeline). They are now split into *pure per-shard
-//! kernels* (`Pipeline::{act_stats_shard, adjust_grads_shard, hvp_shard}`)
-//! plus the host-side reducers in [`crate::quant::calibrate`], driven by
-//! the functions in this module over anything implementing
-//! [`StageRunner`]:
+//! The paper's two-step scale estimation, the Hutchinson Hessian trace,
+//! and the ε_N noise metric used to be monolithic single-device loops
+//! inside [`Pipeline`](super::Pipeline). They are now split into *pure
+//! per-shard kernels* (`Pipeline::{act_stats_shard, adjust_grads_shard,
+//! hvp_shard, noise_shard}`) plus the host-side reducers in
+//! [`crate::quant::calibrate`], driven by the functions in this module
+//! over anything implementing [`StageRunner`]:
 //!
 //! * [`Pipeline`](super::Pipeline) — one device; shards run back-to-back.
 //! * [`PipelinePool`](super::PipelinePool) — one device pipeline per
@@ -24,16 +24,18 @@
 //! host-side in global-index order (max-merge for act stats, fixed-order
 //! f64 gradient averaging feeding a single
 //! [`ScaleAdam`](crate::quant::calibrate::ScaleAdam), trial-ordered trace
-//! accumulation); and Hutchinson probes are seeded per trial
-//! ([`crate::util::rng::probe_seed`]), not from a sequentially shared RNG.
-//! Nothing in the math depends on which worker computed what.
+//! and noise accumulation); and Monte-Carlo draws are item-seeded —
+//! Hutchinson probes per trial ([`crate::util::rng::probe_seed`]), ε_N
+//! perturbations per (layer, trial) ([`crate::util::rng::noise_seed`]) —
+//! not from a sequentially shared RNG. Nothing in the math depends on
+//! which worker computed what.
 
 use anyhow::ensure;
 
 use crate::api::SearchEvent;
 use crate::quant::calibrate::{
-    self, merge_act_stats, reduce_grads, reduce_traces, sync_groups, BatchGrad, ScaleAdam,
-    TraceSample,
+    self, merge_act_stats, reduce_grads, reduce_noise, reduce_traces, sync_groups, BatchGrad,
+    NoiseSample, ScaleAdam, TraceSample,
 };
 use crate::quant::{AdjustReport, CalibrationOptions, Scales};
 use crate::Result;
@@ -73,6 +75,20 @@ pub trait StageRunner {
     /// `shards[i]`, each probe seeded by
     /// [`crate::util::rng::probe_seed`]`(seed, trial)`.
     fn stage_hvp(&mut self, seed: u64, shards: &[Vec<usize>]) -> Result<Vec<Vec<TraceSample>>>;
+    /// Mean float calibration loss of the *unperturbed* model — the ε_N
+    /// baseline (Eq. 3). Identical on every worker; on a pool this runs on
+    /// worker 0.
+    fn stage_clean_loss(&mut self) -> Result<f64>;
+    /// Per-item ε_N perturbation trials; shard `i` covers the flattened
+    /// `layer * trials + trial` indices in `shards[i]`, each draw seeded by
+    /// [`crate::util::rng::noise_seed`]`(seed, layer, trial)`.
+    fn stage_noise(
+        &mut self,
+        lambda: f64,
+        trials: usize,
+        seed: u64,
+        shards: &[Vec<usize>],
+    ) -> Result<Vec<Vec<NoiseSample>>>;
     /// Install `scales` on every worker pipeline (device sync included).
     fn broadcast_scales(&mut self, scales: &Scales) -> Result<()>;
 }
@@ -232,6 +248,33 @@ pub fn hessian_trace_sharded<R: StageRunner + ?Sized>(
         runner.shard_layers()
     );
     reduce_traces(&mut samples, trials, &numels)
+}
+
+/// ε_N (Eqs. 3–5) as a sharded stage job: the `layer × trial` grid of
+/// Gaussian perturbation trials is flattened layer-major, fanned across
+/// the runner's workers, and reduced host-side in global item order
+/// against the (worker-0) clean-model baseline loss. Each trial's draw is
+/// seeded by [`crate::util::rng::noise_seed`]`(seed, layer, trial)`, so
+/// scores are bit-identical at every worker count.
+pub fn noise_scores_sharded<R: StageRunner + ?Sized>(
+    runner: &mut R,
+    lambda: f64,
+    trials: usize,
+    seed: u64,
+) -> Result<Vec<f64>> {
+    let trials = trials.max(1);
+    let n = runner.shard_layers();
+    let clean_loss = runner.stage_clean_loss()?;
+    let items: Vec<usize> = (0..n * trials).collect();
+    let shards = shard_indices(&items, runner.shard_workers());
+    let mut samples: Vec<NoiseSample> =
+        runner.stage_noise(lambda, trials, seed, &shards)?.into_iter().flatten().collect();
+    ensure!(
+        samples.len() == n * trials,
+        "noise shards returned {} samples for a {n} x {trials} trial grid",
+        samples.len()
+    );
+    reduce_noise(&mut samples, n, trials, clean_loss)
 }
 
 #[cfg(test)]

@@ -12,6 +12,8 @@
 //! mpq search --synthetic 24 --budget-latency 0.7 --checkpoint ck.json
 //! mpq table --id 1|2|3 [--model M] [--out DIR]   # regenerate paper tables
 //! mpq figure --id 1|3|4 [--model M] [--out DIR]  # regenerate figure data
+//! mpq report --sweep --model M --budgets 0.5,0.7 --floors 0.99,0.999
+//! mpq report --sweep --synthetic 24 --checkpoint sweep.ck.json --resume
 //! mpq serve --model resnet_s --bits 8 --requests 256
 //! ```
 //!
@@ -27,14 +29,19 @@ use mpq::api::{
     log_event, run_search, BackendSpec, Checkpoint, CostModel, ObjectiveSpec, SearchSpec,
     SyntheticCost, SyntheticEnv, SyntheticStage,
 };
-use mpq::coordinator::{calibrate_sharded, hessian_trace_sharded, ParallelEnv, SearchAlgo};
+use mpq::coordinator::{
+    calibrate_sharded, hessian_trace_sharded, noise_scores_sharded, ParallelEnv, SearchAlgo,
+};
 use mpq::model::ArtifactIndex;
 use mpq::quant::{CalibrationOptions, QuantConfig, QUANT_BITS};
 use mpq::report::experiments::{
     self, render_search_table, search_grid, ExperimentCtx, METRIC_TRIALS,
 };
-use mpq::report::cells_to_json;
-use mpq::sensitivity::MetricKind;
+use mpq::report::{
+    budget_sweep_ctx, budget_sweep_synthetic, cells_to_json, render_sweep, sweep_cells_json,
+    sweep_fingerprint, BudgetKind, SweepCheckpoint, SweepGrid,
+};
+use mpq::sensitivity::{MetricKind, NoiseOptions};
 use mpq::util::cli::Args;
 use mpq::util::json::Value;
 use mpq::Result;
@@ -62,6 +69,13 @@ COMMANDS
               [--no-cache] [--abort-after N (synthetic only)]
   table       --id 1|2|3 [--model M] [--out DIR] [--workers 1]
               [--budget-latency F | --budget-size F]
+  report      --sweep (--model M | --synthetic N)
+              [--budget-kind latency|size] [--budgets 0.5,0.7,0.9]
+              [--floors 0.9,0.99] [--algo greedy|bisection]
+              [--metric hessian] [--seed 0] [--trials 5] [--workers 1]
+              [--backend a100|tpu | --table kernels.json]
+              [--checkpoint sweep.ck.json [--resume]] [--out DIR]
+              [--abort-after N (synthetic only)]
   figure      --id 1|3|4 [--model M] [--out DIR]
   ablation    --model M [--target 0.99] [--out DIR]
   serve       --model M [--bits 8] [--requests 256] [--concurrency 8]
@@ -98,6 +112,7 @@ enum Command {
     Sensitivity(SensitivityCmd),
     Search(SearchCmd),
     Table(TableCmd),
+    Report(ReportCmd),
     Figure(FigureCmd),
     Ablation(AblationCmd),
     Serve(ServeCmd),
@@ -112,6 +127,7 @@ impl Command {
             "sensitivity" => Ok(Command::Sensitivity(SensitivityCmd::parse(args)?)),
             "search" => Ok(Command::Search(SearchCmd::parse(args)?)),
             "table" => Ok(Command::Table(TableCmd::parse(args)?)),
+            "report" => Ok(Command::Report(ReportCmd::parse(args)?)),
             "figure" => Ok(Command::Figure(FigureCmd::parse(args)?)),
             "ablation" => Ok(Command::Ablation(AblationCmd::parse(args)?)),
             "serve" => Ok(Command::Serve(ServeCmd::parse(args)?)),
@@ -130,6 +146,7 @@ impl Command {
                 | "sensitivity"
                 | "search"
                 | "table"
+                | "report"
                 | "figure"
                 | "ablation"
                 | "serve"
@@ -151,6 +168,9 @@ impl Command {
                 c.run_artifacts(&dir)
             }
             Command::Table(c) => c.run(&artifacts_dir(args)?),
+            // Synthetic sweeps need no artifacts at all.
+            Command::Report(c) if c.synthetic.is_some() => c.run_synthetic(),
+            Command::Report(c) => c.run(&artifacts_dir(args)?),
             Command::Figure(c) => c.run(&artifacts_dir(args)?),
             Command::Ablation(c) => c.run(&artifacts_dir(args)?),
             Command::Serve(c) => c.run(&artifacts_dir(args)?),
@@ -256,15 +276,21 @@ impl CalibrateCmd {
         Ok(())
     }
 
-    /// Artifact-free sharded calibration + Hessian trace over the seeded
-    /// synthetic stage runner — CI runs this at 1 and 2 workers and diffs
-    /// the RESULT lines (they must be byte-identical).
+    /// Artifact-free sharded calibration + Hessian trace + ε_N noise over
+    /// the seeded synthetic stage runner — CI runs this at 1 and 2 workers
+    /// and diffs the RESULT lines (they must be byte-identical).
     fn run_synthetic(self) -> Result<()> {
         let layers = self.synthetic.expect("checked in parse");
         let mut stage = SyntheticStage::new(layers, self.batches, self.workers, self.seed);
         let mut obs = log_event;
         let (scales, report) = calibrate_sharded(&mut stage, &self.opts, Some(&mut obs))?;
         let traces = hessian_trace_sharded(&mut stage, self.trials, self.seed)?;
+        let noise = noise_scores_sharded(
+            &mut stage,
+            NoiseOptions::default().lambda,
+            self.trials,
+            self.seed,
+        )?;
         eprintln!(
             "[calibration] synthetic run: {} layers x {} batches, {} worker(s), {} broadcasts",
             layers,
@@ -280,6 +306,7 @@ impl CalibrateCmd {
             ("alpha_a", Value::arr_f32(&scales.alpha_a)),
             ("gamma_a", Value::arr_f32(&scales.gamma_a)),
             ("hessian", Value::Arr(traces.iter().map(|&t| Value::Num(t)).collect())),
+            ("noise", Value::Arr(noise.iter().map(|&s| Value::Num(s)).collect())),
             ("loss_before", Value::Num(report.loss_before)),
             ("loss_after", Value::Num(report.loss_after)),
             ("steps", Value::Num(report.steps as f64)),
@@ -347,8 +374,9 @@ impl SensitivityCmd {
     }
 
     /// Calibrate (sharded at `--workers > 1`), then compute the metric
-    /// through the context — Hessian trials fan across the same pool, and
-    /// informed scores land in the on-disk sensitivity cache.
+    /// through the context — Hessian trials and ε_N perturbations fan
+    /// across the same pool, and informed scores land in the on-disk
+    /// sensitivity cache.
     fn run(self, dir: &Path) -> Result<()> {
         let spec = SearchSpec::new(self.model.as_str())
             .artifacts_dir(dir)
@@ -401,6 +429,33 @@ struct SearchCmd {
     abort_after: Option<usize>,
 }
 
+/// Parse the shared `--backend a100|tpu` / `--table kernels.json` flags
+/// (mutually exclusive) into a cost backend.
+fn parse_backend(args: &Args) -> Result<BackendSpec> {
+    match (args.get_str("backend"), args.get_str("table")) {
+        (Some(_), Some(_)) => anyhow::bail!("--backend and --table are mutually exclusive"),
+        (None, Some(path)) => Ok(BackendSpec::MeasuredTable(PathBuf::from(path))),
+        (Some("a100"), None) | (None, None) => Ok(BackendSpec::A100Like),
+        (Some("tpu"), None) => Ok(BackendSpec::TpuLike),
+        (Some(other), None) => anyhow::bail!("unknown backend `{other}` (a100|tpu)"),
+    }
+}
+
+/// Parse a `--budgets 0.5,0.7`-style comma-separated fraction list.
+fn parse_f64_list(args: &Args, name: &str, default: &[f64]) -> Result<Vec<f64>> {
+    match args.get_str(name) {
+        None => Ok(default.to_vec()),
+        Some(s) => s
+            .split(',')
+            .map(|part| {
+                part.trim()
+                    .parse::<f64>()
+                    .map_err(|e| anyhow::anyhow!("bad --{name} entry `{part}`: {e}"))
+            })
+            .collect(),
+    }
+}
+
 /// Parse the shared `--budget-latency`/`--budget-size` flags (mutually
 /// exclusive) into an objective.
 fn parse_objective(args: &Args) -> Result<ObjectiveSpec> {
@@ -419,13 +474,7 @@ fn parse_objective(args: &Args) -> Result<ObjectiveSpec> {
 impl SearchCmd {
     fn parse(args: &Args) -> Result<Self> {
         let objective = parse_objective(args)?;
-        let backend = match (args.get_str("backend"), args.get_str("table")) {
-            (Some(_), Some(_)) => anyhow::bail!("--backend and --table are mutually exclusive"),
-            (None, Some(path)) => BackendSpec::MeasuredTable(PathBuf::from(path)),
-            (Some("a100"), None) | (None, None) => BackendSpec::A100Like,
-            (Some("tpu"), None) => BackendSpec::TpuLike,
-            (Some(other), None) => anyhow::bail!("unknown backend `{other}` (a100|tpu)"),
-        };
+        let backend = parse_backend(args)?;
         let cmd = Self {
             model: args.get_str("model").map(String::from),
             synthetic: args.get_str("synthetic").map(str::parse).transpose()?,
@@ -673,6 +722,170 @@ impl TableCmd {
     }
 }
 
+// ---------------------------------------------------------------- report
+
+struct ReportCmd {
+    model: Option<String>,
+    synthetic: Option<usize>,
+    grid: SweepGrid,
+    algo: SearchAlgo,
+    metric: MetricKind,
+    seed: u64,
+    trials: usize,
+    workers: usize,
+    backend: BackendSpec,
+    checkpoint: Option<PathBuf>,
+    resume: bool,
+    out: Option<PathBuf>,
+    /// Synthetic only: error out after N freshly computed cells.
+    abort_after: Option<usize>,
+}
+
+impl ReportCmd {
+    fn parse(args: &Args) -> Result<Self> {
+        anyhow::ensure!(
+            args.flag("sweep"),
+            "report currently has one mode: pass --sweep for the budget x accuracy-floor grid"
+        );
+        let cmd = Self {
+            model: args.get_str("model").map(String::from),
+            synthetic: args.get_str("synthetic").map(str::parse).transpose()?,
+            grid: SweepGrid {
+                kind: args.get_or("budget-kind", BudgetKind::Latency)?,
+                budgets: parse_f64_list(args, "budgets", &[0.5, 0.7, 0.9])?,
+                floors: parse_f64_list(args, "floors", &[0.9, 0.99])?,
+            },
+            algo: args.get_str("algo").unwrap_or("greedy").parse()?,
+            metric: args.get_or("metric", MetricKind::Hessian)?,
+            seed: args.get_or("seed", 0u64)?,
+            trials: args.get_or("trials", METRIC_TRIALS)?,
+            workers: args.get_or("workers", 1usize)?.max(1),
+            backend: parse_backend(args)?,
+            checkpoint: args.get_str("checkpoint").map(PathBuf::from),
+            resume: args.flag("resume"),
+            out: args.get_str("out").map(PathBuf::from),
+            abort_after: args.get_str("abort-after").map(str::parse).transpose()?,
+        };
+        cmd.grid.validate()?;
+        anyhow::ensure!(
+            cmd.model.is_some() != cmd.synthetic.is_some(),
+            "report --sweep needs exactly one of --model M or --synthetic N"
+        );
+        anyhow::ensure!(
+            cmd.abort_after.is_none() || cmd.synthetic.is_some(),
+            "--abort-after only applies to --synthetic sweeps"
+        );
+        anyhow::ensure!(
+            !cmd.resume || cmd.checkpoint.is_some(),
+            "--resume requires a --checkpoint path"
+        );
+        if cmd.synthetic.is_some() {
+            for flag in ["metric", "trials", "backend", "table"] {
+                anyhow::ensure!(
+                    args.get_str(flag).is_none(),
+                    "--{flag} does not apply to --synthetic sweeps"
+                );
+            }
+        }
+        Ok(cmd)
+    }
+
+    /// Render + emit one finished sweep: the Table-2-style grid on stdout,
+    /// a stable `RESULT` line for scripts (byte-identical across worker
+    /// counts and across kill/resume), and optional `--out` artifacts.
+    fn emit(&self, label: &str, cells: &[mpq::report::SweepCell]) -> Result<()> {
+        let title = format!(
+            "Budget x accuracy-floor sweep — {label} ({} budgets, {} guided)",
+            self.grid.kind.label(),
+            self.algo.label()
+        );
+        let table = render_sweep(&title, &self.grid, cells);
+        println!("{}", table.render());
+        println!("RESULT {}", sweep_cells_json(cells));
+        if let Some(dir_out) = &self.out {
+            std::fs::create_dir_all(dir_out)?;
+            std::fs::write(dir_out.join(format!("sweep_{label}.txt")), table.render())?;
+            std::fs::write(dir_out.join(format!("sweep_{label}.json")), sweep_cells_json(cells))?;
+        }
+        Ok(())
+    }
+
+    /// Attach the sweep checkpoint, fingerprint-bound to everything a
+    /// cell result depends on: the algorithm/kind/grid/ordering (hashed in
+    /// [`sweep_fingerprint`]) plus the caller-supplied environment context
+    /// — resuming under a different metric, seed, cost backend, or model
+    /// state must fail loudly, not mix incompatible cells.
+    fn attach_checkpoint(
+        &self,
+        order: &[usize],
+        env_context: &str,
+    ) -> Result<Option<SweepCheckpoint>> {
+        match &self.checkpoint {
+            Some(path) => {
+                let fp = sweep_fingerprint(self.algo, &self.grid, order, env_context);
+                let ck = SweepCheckpoint::attach(path, &fp, self.resume)?;
+                if ck.loaded() > 0 {
+                    eprintln!("[sweep] resuming: {} cells already completed", ck.loaded());
+                }
+                Ok(Some(ck))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// Artifact-backed sweep through the spec front door: calibration,
+    /// sensitivity ordering, and every cell's search all run on the
+    /// context (its shared pool at `--workers > 1`).
+    fn run(self, dir: &Path) -> Result<()> {
+        let model = self.model.clone().expect("checked in parse");
+        let spec = SearchSpec::new(model.as_str())
+            .artifacts_dir(dir)
+            .workers(self.workers)
+            .algo(self.algo)
+            .metric(self.metric)
+            .trials(self.trials.max(1))
+            .seed(self.seed)
+            .backend(self.backend.clone());
+        let mut ctx = spec.clone().open_context()?;
+        ctx.ensure_calibrated()?;
+        let sens = ctx.sensitivity_for(&spec)?;
+        let env_context = format!(
+            "{}/{}/{}/t{}/seed{}",
+            ctx.pipeline.eval_context(),
+            ctx.cost.provenance(),
+            self.metric.label(),
+            self.trials.max(1),
+            self.seed,
+        );
+        let mut ck = self.attach_checkpoint(&sens.order, &env_context)?;
+        let cells = budget_sweep_ctx(&mut ctx, self.algo, &sens, &self.grid, ck.as_mut())?;
+        ctx.flush_eval_cache()?;
+        self.emit(&model, &cells)
+    }
+
+    /// Artifact-free sweep over the seeded synthetic environment — the CI
+    /// smoke path, including the kill (`--abort-after`) / `--resume` loop.
+    fn run_synthetic(self) -> Result<()> {
+        let layers = self.synthetic.expect("checked in parse");
+        // The synthetic ordering is the identity permutation; layer count
+        // and seed (which fully determine the environment) are in the
+        // context string.
+        let order: Vec<usize> = (0..layers).collect();
+        let mut ck =
+            self.attach_checkpoint(&order, &format!("synthetic/n{layers}/seed{}", self.seed))?;
+        let cells = budget_sweep_synthetic(
+            layers,
+            self.seed,
+            self.workers,
+            self.algo,
+            &self.grid,
+            ck.as_mut(),
+            self.abort_after,
+        )?;
+        self.emit("synthetic", &cells)
+    }
+}
+
 // ---------------------------------------------------------------- figure
 
 struct FigureCmd {
@@ -825,8 +1038,9 @@ impl ServeCmd {
         let concurrency = self.concurrency;
         // Build the serving session through the front door: one context to
         // learn shapes, produce examples from val, and calibrate a single
-        // time (persisting the scales) — the pool workers all load those
-        // scales instead of re-running calibration.
+        // time (persisting the scales). At --workers > 1 the calibrated
+        // pool itself becomes the serving backend (no second pool build);
+        // at 1 worker the single serving pool loads the persisted scales.
         let spec = SearchSpec::new(model.as_str()).artifacts_dir(dir).workers(self.opts.workers);
         let mut session = spec.open()?;
         session.ctx.ensure_calibrated()?;

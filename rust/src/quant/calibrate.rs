@@ -70,6 +70,20 @@ pub struct TraceSample {
     pub vhv: Vec<f64>,
 }
 
+/// One ε_N perturbation trial's calibration loss, tagged with its global
+/// `item` index in the flattened (layer-major) `layer × trial` grid. The
+/// perturbation that produced it depends only on
+/// [`crate::util::rng::noise_seed`]`(seed, layer, trial)`, so — like
+/// [`BatchGrad`] and [`TraceSample`] — host reduction is independent of
+/// which worker ran the trial.
+#[derive(Debug, Clone)]
+pub struct NoiseSample {
+    /// `layer * trials + trial` — the flattened shard-domain index.
+    pub item: usize,
+    /// Mean calibration loss under this trial's perturbed weights.
+    pub loss: f64,
+}
+
 /// Step 1 (weights): `alpha = 1/max|w|`, `gamma = max|w|` per quant layer.
 /// Activation scales start at identity and are filled in from the
 /// `actstats` graph via [`apply_act_stats`]. Errors (rather than panics)
@@ -176,6 +190,36 @@ pub fn reduce_traces(
     }
     let denom = trials as f64;
     Ok(acc.iter().zip(weight_numels).map(|(a, &m)| a / denom / m as f64).collect())
+}
+
+/// Fixed-order ε_N reduction: sort samples by global item index, then
+/// average each layer's `loss - clean_loss` degradations in trial order
+/// (Eqs. 3–5). Layer-major item addressing means the per-layer
+/// accumulation visits trials exactly as the historical serial loop did,
+/// so any shard layout yields bit-identical scores.
+pub fn reduce_noise(
+    samples: &mut [NoiseSample],
+    layers: usize,
+    trials: usize,
+    clean_loss: f64,
+) -> Result<Vec<f64>> {
+    ensure!(trials > 0, "noise reduction over zero trials");
+    ensure!(
+        samples.len() == layers * trials,
+        "noise reduction expected {} samples ({layers} layers x {trials} trials), got {}",
+        layers * trials,
+        samples.len()
+    );
+    samples.sort_by_key(|s| s.item);
+    let mut scores = vec![0.0f64; layers];
+    for (pos, s) in samples.iter().enumerate() {
+        ensure!(s.item == pos, "noise samples are not a permutation of the trial grid");
+        scores[s.item / trials] += s.loss - clean_loss;
+    }
+    for s in &mut scores {
+        *s /= trials as f64;
+    }
+    Ok(scores)
 }
 
 /// The data-parallel sync groups of one adjustment epoch: consecutive runs
@@ -384,6 +428,44 @@ mod tests {
         // (6 + 2) / 2 trials / 4 elems = 1.0; (4 + 8) / 2 / 2 = 3.0.
         assert_eq!(traces, vec![1.0, 3.0]);
         assert!(reduce_traces(&mut [], 0, &numels).is_err());
+    }
+
+    #[test]
+    fn noise_reduction_sorts_subtracts_and_averages() {
+        // 2 layers x 2 trials, delivered in scrambled gather order.
+        let mut samples = vec![
+            NoiseSample { item: 3, loss: 1.8 },
+            NoiseSample { item: 0, loss: 1.2 },
+            NoiseSample { item: 2, loss: 1.4 },
+            NoiseSample { item: 1, loss: 1.6 },
+        ];
+        let scores = reduce_noise(&mut samples, 2, 2, 1.0).unwrap();
+        // Layer 0: ((1.2 - 1) + (1.6 - 1)) / 2; layer 1: ((1.4-1)+(1.8-1))/2.
+        assert!((scores[0] - 0.4).abs() < 1e-12);
+        assert!((scores[1] - 0.6).abs() < 1e-12);
+        // Identical samples in a different order reduce bit-identically.
+        let mut reordered = vec![
+            NoiseSample { item: 1, loss: 1.6 },
+            NoiseSample { item: 2, loss: 1.4 },
+            NoiseSample { item: 3, loss: 1.8 },
+            NoiseSample { item: 0, loss: 1.2 },
+        ];
+        let again = reduce_noise(&mut reordered, 2, 2, 1.0).unwrap();
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&scores), bits(&again));
+    }
+
+    #[test]
+    fn noise_reduction_rejects_malformed_grids() {
+        assert!(reduce_noise(&mut [], 2, 0, 1.0).is_err());
+        let mut short = vec![NoiseSample { item: 0, loss: 1.0 }];
+        assert!(reduce_noise(&mut short, 2, 2, 1.0).is_err());
+        // Duplicate item indices are not a permutation of the grid.
+        let mut dup = vec![
+            NoiseSample { item: 0, loss: 1.0 },
+            NoiseSample { item: 0, loss: 2.0 },
+        ];
+        assert!(reduce_noise(&mut dup, 1, 2, 1.0).is_err());
     }
 
     #[test]

@@ -2,8 +2,13 @@
 
 pub mod ablation;
 pub mod experiments;
+pub mod sweep;
 mod table;
 
+pub use sweep::{
+    budget_sweep, budget_sweep_ctx, budget_sweep_synthetic, render_sweep, sweep_cells_json,
+    sweep_fingerprint, BudgetKind, SweepCell, SweepCheckpoint, SweepGrid,
+};
 pub use table::Table;
 
 use crate::coordinator::SearchAlgo;

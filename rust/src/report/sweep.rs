@@ -1,0 +1,571 @@
+//! Budget × accuracy-floor sweep — the paper's headline grid as a
+//! first-class report.
+//!
+//! The paper's result is a *trade-off*: how much latency (or footprint)
+//! the sensitivity-guided search sheds at each accuracy guarantee (up to
+//! 27.59%/34.31% latency reduction at ≤1% degradation). [`budget_sweep`]
+//! makes that grid reproducible: every (budget, floor) cell runs the
+//! configured search under the matching [`ObjectiveSpec`] budget
+//! objective, records the achieved accuracy, both relative costs, whether
+//! each constraint held, and the cost-model provenance that priced it.
+//!
+//! Cells complete independently and are persisted one-by-one through an
+//! atomic [`SweepCheckpoint`] (temp file + rename, fingerprint-guarded —
+//! same discipline as the search decision log), so a sweep killed at any
+//! grid point resumes into a byte-identical report. A synthetic driver
+//! ([`budget_sweep_synthetic`]) runs the whole machinery — grid order,
+//! checkpointing, worker fan-out — with no artifacts, which is what the
+//! CI smoke and the resume tests exercise.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context as _};
+
+use crate::api::{
+    run_search, CostModel, ModelContext, ObjectiveSpec, SyntheticCost, SyntheticEnv,
+};
+use crate::coordinator::{ParallelEnv, SearchAlgo};
+use crate::quant::QUANT_BITS;
+use crate::report::Table;
+use crate::sensitivity::Sensitivity;
+use crate::util::json::{self, Value};
+use crate::Result;
+
+/// Schema version of the on-disk sweep checkpoint format.
+pub const SWEEP_CHECKPOINT_VERSION: u64 = 1;
+
+/// Which deployment budget the sweep varies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BudgetKind {
+    /// Relative-latency budgets ([`ObjectiveSpec::LatencyBudget`]).
+    Latency,
+    /// Relative-size budgets ([`ObjectiveSpec::FootprintBudget`]).
+    Size,
+}
+
+impl BudgetKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            BudgetKind::Latency => "latency",
+            BudgetKind::Size => "size",
+        }
+    }
+
+    /// The objective one cell of this sweep runs under.
+    pub fn objective(self, budget: f64) -> ObjectiveSpec {
+        match self {
+            BudgetKind::Latency => ObjectiveSpec::LatencyBudget { rel_latency: budget },
+            BudgetKind::Size => ObjectiveSpec::FootprintBudget { rel_size: budget },
+        }
+    }
+}
+
+impl std::str::FromStr for BudgetKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "latency" => Ok(BudgetKind::Latency),
+            "size" => Ok(BudgetKind::Size),
+            other => bail!("unknown budget kind `{other}` (latency|size)"),
+        }
+    }
+}
+
+/// The sweep grid: every (budget, floor) pair, visited in fixed
+/// budget-major order — the order cells are checkpointed and rendered in,
+/// independent of workers or resumption.
+#[derive(Debug, Clone)]
+pub struct SweepGrid {
+    pub kind: BudgetKind,
+    /// Relative budgets in `(0, 1]`, e.g. `[0.5, 0.7, 0.9]`.
+    pub budgets: Vec<f64>,
+    /// Accuracy floors as fractions of the float baseline, in `(0, 1]`.
+    pub floors: Vec<f64>,
+}
+
+impl SweepGrid {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.budgets.is_empty(), "sweep: at least one budget required");
+        ensure!(!self.floors.is_empty(), "sweep: at least one accuracy floor required");
+        for &b in &self.budgets {
+            ensure!(
+                b.is_finite() && b > 0.0 && b <= 1.0,
+                "sweep: budgets must be in (0, 1], got {b}"
+            );
+        }
+        for &f in &self.floors {
+            ensure!(
+                f.is_finite() && f > 0.0 && f <= 1.0,
+                "sweep: accuracy floors must be in (0, 1], got {f}"
+            );
+        }
+        Ok(())
+    }
+
+    /// All (budget, floor) cells in fixed visiting order.
+    pub fn cells(&self) -> Vec<(f64, f64)> {
+        let mut out = Vec::with_capacity(self.budgets.len() * self.floors.len());
+        for &b in &self.budgets {
+            for &f in &self.floors {
+                out.push((b, f));
+            }
+        }
+        out
+    }
+}
+
+/// One finished sweep cell: the search outcome under
+/// `kind(budget) + floor`, priced with its provenance.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    pub budget: f64,
+    /// Accuracy floor as a fraction of the float baseline.
+    pub floor: f64,
+    /// Exact validation accuracy of the final configuration.
+    pub accuracy: f64,
+    /// Final modeled latency relative to fp16 (fraction).
+    pub rel_latency: f64,
+    /// Final size relative to fp16 (fraction).
+    pub rel_size: f64,
+    /// Whether the final configuration held the accuracy floor.
+    pub met_floor: bool,
+    /// Whether the final configuration met the swept budget.
+    pub met_budget: bool,
+    /// Decision evaluations the cell's search consumed.
+    pub evals: usize,
+    /// Which cost source priced this cell (`analytical/<accel>`,
+    /// `measured/<file>`, `synthetic`).
+    pub cost_provenance: String,
+}
+
+impl SweepCell {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("budget", Value::Num(self.budget)),
+            ("floor", Value::Num(self.floor)),
+            ("accuracy", Value::Num(self.accuracy)),
+            ("rel_latency", Value::Num(self.rel_latency)),
+            ("rel_size", Value::Num(self.rel_size)),
+            ("met_floor", Value::Bool(self.met_floor)),
+            ("met_budget", Value::Bool(self.met_budget)),
+            ("evals", Value::Num(self.evals as f64)),
+            ("cost_provenance", Value::Str(self.cost_provenance.clone())),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            budget: v.req("budget")?.as_f64()?,
+            floor: v.req("floor")?.as_f64()?,
+            accuracy: v.req("accuracy")?.as_f64()?,
+            rel_latency: v.req("rel_latency")?.as_f64()?,
+            rel_size: v.req("rel_size")?.as_f64()?,
+            met_floor: v.req("met_floor")?.as_bool()?,
+            met_budget: v.req("met_budget")?.as_bool()?,
+            evals: v.req("evals")?.as_usize()?,
+            cost_provenance: v.req("cost_provenance")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// Serialize finished cells as one JSON array — the stable machine-facing
+/// report (`RESULT` line, `--out` artifact). Numbers round-trip through
+/// [`crate::util::json`] exactly, so a resumed sweep re-emitting
+/// checkpointed cells is byte-identical to an uninterrupted run.
+pub fn sweep_cells_json(cells: &[SweepCell]) -> String {
+    Value::Arr(cells.iter().map(SweepCell::to_json).collect()).to_string()
+}
+
+/// Fingerprint binding a sweep checkpoint to one exact sweep: algorithm,
+/// budget kind, the bit-exact grid, the sensitivity ordering every cell
+/// searches under, and the environment context — which must cover
+/// everything else a cell result depends on (model + scales fingerprint,
+/// cost provenance, metric/trials/seed; or the synthetic layer count +
+/// seed). Resuming with a different fingerprint is rejected instead of
+/// silently reusing foreign cells. Budget and floor lists are hashed with
+/// length separators, so reshaping the grid (`[0.5, 0.7] × [0.9]` vs
+/// `[0.5] × [0.7, 0.9]`) can never collide.
+pub fn sweep_fingerprint(
+    algo: SearchAlgo,
+    grid: &SweepGrid,
+    order: &[usize],
+    env_context: &str,
+) -> String {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    grid.budgets.len().hash(&mut h);
+    for &b in &grid.budgets {
+        b.to_bits().hash(&mut h);
+    }
+    grid.floors.len().hash(&mut h);
+    for &f in &grid.floors {
+        f.to_bits().hash(&mut h);
+    }
+    order.hash(&mut h);
+    format!(
+        "sweep/{}/{}/grid+order-{:016x}/{env_context}",
+        algo.label(),
+        grid.kind.label(),
+        h.finish()
+    )
+}
+
+/// A persistent, atomically written per-cell result log. Completed cells
+/// survive a kill at any grid point; [`budget_sweep`] answers them from
+/// here on resume without re-running the search.
+#[derive(Debug)]
+pub struct SweepCheckpoint {
+    path: PathBuf,
+    fingerprint: String,
+    cells: Vec<SweepCell>,
+    /// Cells loaded from disk at attach time (for reporting).
+    loaded: usize,
+}
+
+impl SweepCheckpoint {
+    /// Attach a checkpoint at `path`. With `resume == false` a fresh empty
+    /// log is written immediately (truncating any stale file); with
+    /// `resume == true` the existing file is loaded — a missing, corrupt,
+    /// or fingerprint-mismatched file is an error, exactly like the search
+    /// decision log.
+    pub fn attach(path: &Path, fingerprint: &str, resume: bool) -> Result<Self> {
+        if !resume {
+            let ck = Self {
+                path: path.to_path_buf(),
+                fingerprint: fingerprint.to_string(),
+                cells: Vec::new(),
+                loaded: 0,
+            };
+            ck.save()?;
+            return Ok(ck);
+        }
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading sweep checkpoint {} for resume", path.display()))?;
+        let v = json::parse(&text)
+            .with_context(|| format!("parsing sweep checkpoint {}", path.display()))?;
+        ensure!(
+            v.req("version")?.as_u64()? == SWEEP_CHECKPOINT_VERSION,
+            "unsupported sweep checkpoint version in {}",
+            path.display()
+        );
+        let fp = v.req("fingerprint")?.as_str()?;
+        ensure!(
+            fp == fingerprint,
+            "sweep checkpoint {} was written by a different sweep:\n  recorded: {fp}\n  \
+             expected: {fingerprint}",
+            path.display()
+        );
+        let cells: Vec<SweepCell> =
+            v.req("cells")?.as_arr()?.iter().map(SweepCell::from_json).collect::<Result<_>>()?;
+        let loaded = cells.len();
+        Ok(Self { path: path.to_path_buf(), fingerprint: fingerprint.to_string(), cells, loaded })
+    }
+
+    /// Completed cells currently in the log.
+    pub fn completed(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Cells loaded from disk at attach time (the resumable prefix).
+    pub fn loaded(&self) -> usize {
+        self.loaded
+    }
+
+    /// The recorded result for a (budget, floor) cell, if any. Grid values
+    /// are compared bit-exactly — they come from the same parsed arguments
+    /// on both runs.
+    pub fn lookup(&self, budget: f64, floor: f64) -> Option<&SweepCell> {
+        self.cells.iter().find(|c| {
+            c.budget.to_bits() == budget.to_bits() && c.floor.to_bits() == floor.to_bits()
+        })
+    }
+
+    /// Append a finished cell and persist the log atomically.
+    pub fn record(&mut self, cell: SweepCell) -> Result<()> {
+        self.cells.push(cell);
+        self.save()
+    }
+
+    fn save(&self) -> Result<()> {
+        let v = Value::obj(vec![
+            ("version", Value::Num(SWEEP_CHECKPOINT_VERSION as f64)),
+            ("fingerprint", Value::Str(self.fingerprint.clone())),
+            ("cells", Value::Arr(self.cells.iter().map(SweepCell::to_json).collect())),
+        ]);
+        crate::util::fs::atomic_write_text(&self.path, &v.to_string())
+            .with_context(|| format!("saving sweep checkpoint {}", self.path.display()))
+    }
+}
+
+/// Run the grid cell-by-cell in fixed order: completed cells are answered
+/// from the checkpoint (when attached), fresh cells run through `run_cell`
+/// and are recorded atomically before the sweep advances — so a kill at
+/// any grid point loses at most the in-flight cell, and the resumed
+/// report is byte-identical to an uninterrupted one.
+pub fn budget_sweep(
+    grid: &SweepGrid,
+    mut checkpoint: Option<&mut SweepCheckpoint>,
+    mut run_cell: impl FnMut(f64, f64, ObjectiveSpec) -> Result<SweepCell>,
+) -> Result<Vec<SweepCell>> {
+    grid.validate()?;
+    let mut out = Vec::new();
+    for (budget, floor) in grid.cells() {
+        if let Some(hit) = checkpoint.as_ref().and_then(|ck| ck.lookup(budget, floor)) {
+            out.push(hit.clone());
+            continue;
+        }
+        let cell = run_cell(budget, floor, grid.kind.objective(budget))?;
+        if let Some(ck) = checkpoint.as_mut() {
+            ck.record(cell.clone())?;
+        }
+        out.push(cell);
+    }
+    Ok(out)
+}
+
+/// [`budget_sweep`] over a real [`ModelContext`]: every cell runs `algo`
+/// under the grid's budget objective with the floor scaled by the float
+/// baseline, evaluating through the context (the shared pool at
+/// `workers > 1`), priced by the context's cost backend.
+pub fn budget_sweep_ctx(
+    ctx: &mut ModelContext,
+    algo: SearchAlgo,
+    sens: &Sensitivity,
+    grid: &SweepGrid,
+    checkpoint: Option<&mut SweepCheckpoint>,
+) -> Result<Vec<SweepCell>> {
+    ctx.ensure_calibrated()?;
+    let float_acc = ctx.pipeline.float_val_acc();
+    let cost = ctx.cost.clone();
+    let kind = grid.kind;
+    budget_sweep(grid, checkpoint, |budget, floor, ospec| {
+        let objective = ospec.build(floor * float_acc, cost.clone());
+        let outcome =
+            run_search(algo, ctx, &sens.order, &QUANT_BITS, objective.as_ref(), None, None)?;
+        Ok(finish_cell(kind, budget, floor, floor * float_acc, &outcome, cost.as_ref()))
+    })
+}
+
+/// Artifact-free [`budget_sweep`] over the seeded synthetic environment
+/// and cost model — the CI smoke and resume-test path. Every cell builds
+/// a *fresh* [`SyntheticEnv`], so its result depends only on
+/// `(layers, seed, budget, floor)`, never on process history: the
+/// property that makes kill-and-resume byte-identical. `abort_after`
+/// fails the run after N freshly computed cells — a deterministic
+/// stand-in for killing the process at a grid point.
+pub fn budget_sweep_synthetic(
+    layers: usize,
+    seed: u64,
+    workers: usize,
+    algo: SearchAlgo,
+    grid: &SweepGrid,
+    checkpoint: Option<&mut SweepCheckpoint>,
+    abort_after: Option<usize>,
+) -> Result<Vec<SweepCell>> {
+    let cost = Arc::new(SyntheticCost::new(layers, seed));
+    let kind = grid.kind;
+    let mut fresh = 0usize;
+    budget_sweep(grid, checkpoint, |budget, floor, ospec| {
+        if let Some(limit) = abort_after {
+            if fresh >= limit {
+                bail!("synthetic sweep aborted after {limit} cells");
+            }
+        }
+        fresh += 1;
+        let env = SyntheticEnv::new(layers, seed);
+        let order = env.order();
+        let mut penv = ParallelEnv::new(&env, workers.max(1));
+        // The synthetic float baseline is exactly 1.0: the floor is itself.
+        let objective = ospec.build(floor, cost.clone());
+        let outcome =
+            run_search(algo, &mut penv, &order, &QUANT_BITS, objective.as_ref(), None, None)?;
+        Ok(finish_cell(kind, budget, floor, floor, &outcome, cost.as_ref()))
+    })
+}
+
+/// Price one finished search outcome into a [`SweepCell`].
+fn finish_cell(
+    kind: BudgetKind,
+    budget: f64,
+    floor: f64,
+    abs_floor: f64,
+    outcome: &crate::coordinator::SearchOutcome,
+    cost: &dyn CostModel,
+) -> SweepCell {
+    let rel_latency = cost.rel_latency(&outcome.config);
+    let rel_size = cost.rel_size(&outcome.config);
+    let met_budget = match kind {
+        BudgetKind::Latency => rel_latency <= budget + 1e-12,
+        BudgetKind::Size => rel_size <= budget + 1e-12,
+    };
+    SweepCell {
+        budget,
+        floor,
+        accuracy: outcome.accuracy,
+        rel_latency,
+        rel_size,
+        met_floor: outcome.accuracy >= abs_floor - 1e-12,
+        met_budget,
+        evals: outcome.evals,
+        cost_provenance: cost.provenance().to_string(),
+    }
+}
+
+/// Render the sweep like Table 2: one row per budget, a column group per
+/// accuracy floor (achieved accuracy, both relative costs, and whether
+/// both constraints held), plus each row's cost provenance. The full
+/// per-cell record — provenance included — is in
+/// [`sweep_cells_json`]/`--out` artifacts.
+pub fn render_sweep(title: &str, grid: &SweepGrid, cells: &[SweepCell]) -> Table {
+    let mut headers: Vec<String> = vec![format!("{} budget", grid.kind.label())];
+    for f in &grid.floors {
+        let pct = format!("{:.1}", f * 100.0);
+        headers.push(format!("{pct}% acc"));
+        headers.push(format!("{pct}% lat"));
+        headers.push(format!("{pct}% size"));
+        headers.push(format!("{pct}% ok"));
+    }
+    headers.push("cost source".to_string());
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(title, &hdr_refs);
+    for &b in &grid.budgets {
+        let mut row = vec![format!("{:.1}%", b * 100.0)];
+        let mut provenance: Vec<String> = Vec::new();
+        for &f in &grid.floors {
+            match cells.iter().find(|c| {
+                c.budget.to_bits() == b.to_bits() && c.floor.to_bits() == f.to_bits()
+            }) {
+                Some(c) => {
+                    row.push(format!("{:.2}%", c.accuracy * 100.0));
+                    row.push(format!("{:.2}%", c.rel_latency * 100.0));
+                    row.push(format!("{:.2}%", c.rel_size * 100.0));
+                    row.push(
+                        match (c.met_floor, c.met_budget) {
+                            (true, true) => "yes",
+                            (true, false) => "floor only",
+                            (false, true) => "budget only",
+                            (false, false) => "no",
+                        }
+                        .to_string(),
+                    );
+                    if !provenance.contains(&c.cost_provenance) {
+                        provenance.push(c.cost_provenance.clone());
+                    }
+                }
+                None => row.extend(["-", "-", "-", "-"].map(String::from)),
+            }
+        }
+        row.push(provenance.join(" + "));
+        table.push_row(row);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid() -> SweepGrid {
+        SweepGrid { kind: BudgetKind::Latency, budgets: vec![0.5, 0.8], floors: vec![0.9, 0.99] }
+    }
+
+    #[test]
+    fn grid_cells_are_budget_major_and_validated() {
+        let g = grid();
+        g.validate().unwrap();
+        assert_eq!(g.cells(), vec![(0.5, 0.9), (0.5, 0.99), (0.8, 0.9), (0.8, 0.99)]);
+        for bad in [
+            SweepGrid { kind: BudgetKind::Size, budgets: vec![], floors: vec![0.9] },
+            SweepGrid { kind: BudgetKind::Size, budgets: vec![0.5], floors: vec![] },
+            SweepGrid { kind: BudgetKind::Size, budgets: vec![0.0], floors: vec![0.9] },
+            SweepGrid { kind: BudgetKind::Size, budgets: vec![0.5], floors: vec![1.5] },
+            SweepGrid { kind: BudgetKind::Size, budgets: vec![f64::NAN], floors: vec![0.9] },
+        ] {
+            assert!(bad.validate().is_err());
+        }
+    }
+
+    #[test]
+    fn budget_kind_parses_and_builds_objectives() {
+        assert_eq!("latency".parse::<BudgetKind>().unwrap(), BudgetKind::Latency);
+        assert_eq!("SIZE".parse::<BudgetKind>().unwrap(), BudgetKind::Size);
+        assert!("speed".parse::<BudgetKind>().is_err());
+        assert_eq!(
+            BudgetKind::Latency.objective(0.7),
+            ObjectiveSpec::LatencyBudget { rel_latency: 0.7 }
+        );
+        assert_eq!(
+            BudgetKind::Size.objective(0.5),
+            ObjectiveSpec::FootprintBudget { rel_size: 0.5 }
+        );
+    }
+
+    #[test]
+    fn fingerprint_separates_grid_shapes_orders_and_context() {
+        let order = vec![0usize, 1, 2];
+        let fp = |budgets: Vec<f64>, floors: Vec<f64>, ord: &[usize], env: &str| {
+            let g = SweepGrid { kind: BudgetKind::Latency, budgets, floors };
+            sweep_fingerprint(SearchAlgo::Greedy, &g, ord, env)
+        };
+        let a = fp(vec![0.5, 0.7], vec![0.9], &order, "env");
+        // Same flattened value sequence, different grid shape: must differ.
+        let b = fp(vec![0.5], vec![0.7, 0.9], &order, "env");
+        assert_ne!(a, b, "grid shape must be part of the fingerprint");
+        // Ordering and environment context must both bind the checkpoint.
+        assert_ne!(a, fp(vec![0.5, 0.7], vec![0.9], &[2, 1, 0], "env"));
+        assert_ne!(a, fp(vec![0.5, 0.7], vec![0.9], &order, "env/other-seed"));
+        // And identical inputs reproduce the fingerprint exactly.
+        assert_eq!(a, fp(vec![0.5, 0.7], vec![0.9], &order, "env"));
+    }
+
+    #[test]
+    fn cell_json_roundtrip_is_exact() {
+        let cell = SweepCell {
+            budget: 0.7,
+            floor: 0.99,
+            accuracy: 0.987_654_321,
+            rel_latency: 0.693_147,
+            rel_size: 0.25,
+            met_floor: true,
+            met_budget: false,
+            evals: 42,
+            cost_provenance: "synthetic".into(),
+        };
+        let text = cell.to_json().to_string();
+        let re = SweepCell::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(re.to_json().to_string(), text, "round-trip must be byte-stable");
+        assert_eq!(re.accuracy.to_bits(), cell.accuracy.to_bits());
+    }
+
+    #[test]
+    fn synthetic_sweep_is_deterministic_and_worker_independent() {
+        let g = grid();
+        let a = budget_sweep_synthetic(16, 5, 1, SearchAlgo::Greedy, &g, None, None).unwrap();
+        let b = budget_sweep_synthetic(16, 5, 2, SearchAlgo::Greedy, &g, None, None).unwrap();
+        assert_eq!(sweep_cells_json(&a), sweep_cells_json(&b));
+        assert_eq!(a.len(), 4);
+        // Budgets are honored: met_budget cells sit at or under budget.
+        for c in &a {
+            if c.met_budget {
+                assert!(c.rel_latency <= c.budget + 1e-12);
+            }
+        }
+        // A different seed changes the grid's outcomes.
+        let c = budget_sweep_synthetic(16, 6, 1, SearchAlgo::Greedy, &g, None, None).unwrap();
+        assert_ne!(sweep_cells_json(&a), sweep_cells_json(&c));
+    }
+
+    #[test]
+    fn render_includes_provenance_and_every_budget_row() {
+        let g = grid();
+        let cells =
+            budget_sweep_synthetic(12, 3, 1, SearchAlgo::Bisection, &g, None, None).unwrap();
+        let table = render_sweep("sweep", &g, &cells);
+        assert_eq!(table.rows.len(), g.budgets.len());
+        for row in &table.rows {
+            assert_eq!(row.last().unwrap(), "synthetic");
+        }
+    }
+}

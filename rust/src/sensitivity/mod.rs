@@ -2,23 +2,27 @@
 //! (random) baseline, each producing per-layer scores and an ascending
 //! ordering (least sensitive first) for the configuration searches.
 //!
-//! ε_Hessian — the most expensive metric — runs through the sharded stage
-//! driver ([`crate::coordinator::shard`]): [`hessian_sensitivity_pooled`]
-//! fans Hutchinson trials across a [`crate::coordinator::PipelinePool`]
-//! and is bit-identical to the single-pipeline [`hessian_sensitivity`] at
-//! every worker count. ε_QE is host-side math and ε_N remains a
-//! single-pipeline loop (its perturbed-weight uploads serialize on the
-//! parameter store; sharding it is an open ROADMAP residual).
+//! The two device-driven metrics run through the sharded stage driver
+//! ([`crate::coordinator::shard`]): [`hessian_sensitivity_pooled`] fans
+//! Hutchinson trials and [`noise_sensitivity_pooled`] fans the ε_N
+//! (layer, trial) perturbation grid across a
+//! [`crate::coordinator::PipelinePool`]; both are bit-identical to their
+//! single-pipeline counterparts at every worker count because every
+//! Monte-Carlo draw is item-seeded and reduction is host-side in global
+//! item order. ε_QE is host-side math.
 
 mod hessian;
 mod noise;
 mod qe;
 
 pub use hessian::{hessian_sensitivity, hessian_sensitivity_pooled};
-pub use noise::{noise_sensitivity, NoiseOptions};
+pub use noise::{noise_sensitivity, noise_sensitivity_pooled, NoiseOptions};
 pub use qe::qe_sensitivity;
 
+use std::path::Path;
+
 use crate::coordinator::Pipeline;
+use crate::util::json::{self, Value};
 use crate::util::rng::Rng;
 use crate::Result;
 
@@ -111,6 +115,34 @@ pub fn compute(
         }
         MetricKind::Hessian => hessian_sensitivity(pipeline, trials, seed),
     }
+}
+
+/// Read an on-disk sensitivity score cache, returning the scores only when
+/// the file's schema `version` and layer count match. Anything else —
+/// missing file, unparsable JSON, an unversioned v1 file, a score vector
+/// for a different model shape — yields `None` so stale scores are
+/// recomputed, never trusted (v1: sequentially shared Hessian RNG; v2:
+/// trial-seeded Hessian but serial shared-RNG noise).
+pub fn load_score_cache(path: &Path, version: usize, layers: usize) -> Option<Vec<f64>> {
+    let v = json::parse(&std::fs::read_to_string(path).ok()?).ok()?;
+    let file_version = v.req("version").ok().and_then(|x| x.as_usize().ok()).unwrap_or(1);
+    if file_version != version {
+        return None;
+    }
+    let scores: Vec<f64> =
+        v.req("scores").ok()?.as_arr().ok()?.iter().filter_map(|x| x.as_f64().ok()).collect();
+    (scores.len() == layers).then_some(scores)
+}
+
+/// Write a sensitivity score cache `load_score_cache` will accept back.
+/// Best-effort: the cache is an optimization, so write failures are
+/// swallowed.
+pub fn save_score_cache(path: &Path, version: usize, scores: &[f64]) {
+    let v = Value::obj(vec![
+        ("version", Value::Num(version as f64)),
+        ("scores", Value::Arr(scores.iter().map(|&s| Value::Num(s)).collect())),
+    ]);
+    let _ = std::fs::write(path, v.to_string());
 }
 
 /// Levenshtein (edit) distance between two orderings — the paper's measure

@@ -4,9 +4,15 @@
 //! w_i by w_i + ν, and measure the calibration loss increase relative to
 //! the clean model. Averaged over `trials` draws; the per-trial scatter is
 //! the source of this metric's instability the paper highlights in Fig. 4.
+//!
+//! The `layer × trial` grid runs through the sharded stage driver
+//! ([`crate::coordinator::shard::noise_scores_sharded`]): every draw is
+//! seeded by [`crate::util::rng::noise_seed`]`(seed, layer, trial)` and
+//! reduction is host-side in item order, so [`noise_sensitivity`] (one
+//! pipeline) and [`noise_sensitivity_pooled`] (trials fanned across a
+//! [`PipelinePool`]) are bit-identical at every worker count.
 
-use crate::coordinator::Pipeline;
-use crate::util::rng::Rng;
+use crate::coordinator::{noise_scores_sharded, Pipeline, PipelinePool};
 use crate::Result;
 
 use super::{MetricKind, Sensitivity};
@@ -25,25 +31,27 @@ impl Default for NoiseOptions {
     }
 }
 
+/// Single-pipeline estimate (one worker; perturbation trials run
+/// back-to-back).
 pub fn noise_sensitivity(
     pipeline: &mut Pipeline,
     opts: &NoiseOptions,
     seed: u64,
 ) -> Result<Sensitivity> {
-    let n = pipeline.num_quant_layers();
-    // ε_N isolates parameter perturbation from quantization: the model
-    // itself stays unquantized (Eq. 3).
-    let clean_loss = pipeline.calib_loss_float()?;
-    let mut rng = Rng::seed_from(seed);
-    let mut scores = vec![0.0f64; n];
-    for qi in 0..n {
-        let mut acc = 0.0f64;
-        for _ in 0..opts.trials {
-            let (pi, perturbed) = pipeline.gaussian_perturbation(qi, opts.lambda, &mut rng)?;
-            let loss = pipeline.calib_loss_with_perturbed(pi, &perturbed)?;
-            acc += loss - clean_loss;
-        }
-        scores[qi] = acc / opts.trials as f64;
-    }
+    let scores = noise_scores_sharded(pipeline, opts.lambda, opts.trials.max(1), seed)?;
+    Ok(Sensitivity::from_scores(MetricKind::Noise, scores))
+}
+
+/// Pool-sharded estimate: the (layer, trial) perturbation grid fans
+/// across the pool's worker pipelines — each worker uploads only its own
+/// perturbed tensors, closing the last serial sensitivity loop.
+/// Bit-identical to [`noise_sensitivity`] at every worker count (both run
+/// through the sharded driver's (layer, trial)-addressed draws).
+pub fn noise_sensitivity_pooled(
+    pool: &mut PipelinePool,
+    opts: &NoiseOptions,
+    seed: u64,
+) -> Result<Sensitivity> {
+    let scores = noise_scores_sharded(pool, opts.lambda, opts.trials.max(1), seed)?;
     Ok(Sensitivity::from_scores(MetricKind::Noise, scores))
 }

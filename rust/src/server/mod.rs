@@ -210,11 +210,45 @@ impl ServingBackend for PoolBackend {
     }
 }
 
+/// Start the serving engine over an already-built (and already
+/// calibrated) [`PipelinePool`] — the warm-pool handover path
+/// [`crate::api::SearchSession::into_server`] uses. Every compiled
+/// serving bucket is warmed on each worker before the dispatcher takes
+/// traffic, exactly like [`spawn`], but no second pool is constructed and
+/// no weights are re-uploaded: the process keeps exactly one pool.
+pub fn serve_with_pool(
+    pool: PipelinePool,
+    cfg: QuantConfig,
+    opts: ServeOptions,
+) -> Result<(ServerHandle, std::thread::JoinHandle<()>)> {
+    let (tx, rx) = mpsc::channel::<Result<()>>();
+    for w in 0..pool.num_workers() {
+        let tx = tx.clone();
+        let warm_cfg = cfg.clone();
+        pool.run_on(w, move |p| {
+            let result = match p {
+                Some(pipeline) => pipeline
+                    .warm_logits(&warm_cfg)
+                    .map_err(|e| e.context(format!("warming serving worker {w}"))),
+                None => Err(anyhow::anyhow!("serving worker {w} exited before warmup")),
+            };
+            let _ = tx.send(result);
+        });
+    }
+    drop(tx);
+    for result in rx {
+        result?;
+    }
+    serve_with_backend(PoolBackend { pool, cfg }, &opts)
+}
+
 /// Spawn the serving engine: build `opts.workers` pipelines for `model`
 /// (running `configure` — calibration, scale loading — then warming every
 /// compiled serving bucket on each), and start the dispatcher. Returns
 /// once all workers are ready; the `JoinHandle` is the dispatcher thread,
-/// joinable after [`ServerHandle::shutdown`].
+/// joinable after [`ServerHandle::shutdown`]. Callers holding an
+/// already-built pool should hand it to [`serve_with_pool`] instead of
+/// paying a second construction.
 pub fn spawn(
     artifacts_dir: std::path::PathBuf,
     model: String,

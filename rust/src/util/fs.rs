@@ -1,0 +1,61 @@
+//! Crash-safe file writes shared by every persistent store.
+
+use std::path::Path;
+
+use anyhow::Context as _;
+
+use crate::Result;
+
+/// Write `text` to `path` atomically: the bytes go to a
+/// `.<name>.tmp.<pid>` sibling first, then an atomic rename commits them.
+/// A crash mid-write leaves either the old file or the new one — never a
+/// truncated file that poisons every later load. Used by the eval cache,
+/// the search decision log, and the sweep checkpoint.
+pub fn atomic_write_text(path: &Path, text: &str) -> Result<()> {
+    let file_name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "file".to_string());
+    let tmp = path.with_file_name(format!(".{file_name}.tmp.{}", std::process::id()));
+    std::fs::write(&tmp, text).with_context(|| format!("writing temp file {}", tmp.display()))?;
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(anyhow::Error::new(e).context(format!("committing {}", path.display())));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_replaces_without_temp_droppings() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("mpq_atomic_write_test.json");
+        let _ = std::fs::remove_file(&path);
+        atomic_write_text(&path, "one").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "one");
+        atomic_write_text(&path, "two").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "two");
+        let leftovers = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                let n = e.file_name().to_string_lossy().into_owned();
+                n.contains("mpq_atomic_write_test") && n.contains(".tmp.")
+            })
+            .count();
+        assert_eq!(leftovers, 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rename_failure_cleans_up_the_temp() {
+        // Committing into a missing directory fails at rename (the temp
+        // write targets the same missing dir, so it fails first there) —
+        // either way no temp file survives and the error names the path.
+        let path = std::env::temp_dir().join("mpq_no_such_dir").join("x.json");
+        assert!(atomic_write_text(&path, "data").is_err());
+    }
+}

@@ -3,5 +3,6 @@
 //! scoped to exactly what the coordinator needs.
 
 pub mod cli;
+pub mod fs;
 pub mod json;
 pub mod rng;

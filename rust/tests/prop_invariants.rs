@@ -3,9 +3,10 @@
 //! evaluation environments with known structure, using the in-tree seeded
 //! RNG for reproducible case generation.
 
-use mpq::coordinator::{EvalResult, SearchAlgo, SearchEnv};
+use mpq::coordinator::{EvalCache, EvalResult, SearchAlgo, SearchEnv};
 use mpq::quant::{eps_qe, quantize, QuantConfig, FLOAT_BITS, QUANT_BITS};
 use mpq::sensitivity::{levenshtein, Sensitivity, MetricKind};
+use mpq::server::{LatencyRing, ServeRecorder};
 use mpq::util::json::{self, Value};
 use mpq::util::rng::Rng;
 
@@ -291,6 +292,174 @@ fn prop_json_roundtrip_random_values() {
         let re = json::parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
         assert_eq!(re, v, "roundtrip failed for {text}");
     }
+}
+
+// --------------------------------------------------- serving statistics
+
+#[test]
+fn prop_serve_percentiles_stay_within_observed_bounds() {
+    // Random shard layouts, batch sizes, and latencies: every percentile
+    // of the merged snapshot must sit inside the observed min/max, with
+    // p=0 and p=1 hitting the retained extremes exactly.
+    let mut rng = Rng::seed_from(1111);
+    for case in 0..CASES {
+        let workers = 1 + rng.below(4);
+        let recorder = ServeRecorder::new(workers, 64 * workers);
+        let mut min = u64::MAX;
+        let mut max = 0u64;
+        let batches = 1 + rng.below(40);
+        for _ in 0..batches {
+            let n = 1 + rng.below(6);
+            let lats: Vec<u64> = (0..n).map(|_| rng.below(1_000_000) as u64).collect();
+            min = min.min(*lats.iter().min().unwrap());
+            max = max.max(*lats.iter().max().unwrap());
+            recorder.record_batch(rng.below(workers), &lats, 0);
+        }
+        let stats = recorder.snapshot();
+        for _ in 0..16 {
+            let p = rng.uniform();
+            let v = stats.percentile_us(p);
+            assert!(v >= min && v <= max, "case {case}: p{p} = {v} outside [{min}, {max}]");
+        }
+        assert!(stats.percentile_us(0.0) >= min);
+        assert!(stats.percentile_us(1.0) <= max);
+        // Out-of-range p clamps instead of panicking.
+        assert_eq!(stats.percentile_us(-0.5), stats.percentile_us(0.0));
+        assert_eq!(stats.percentile_us(1.5), stats.percentile_us(1.0));
+        let mean = stats.mean_us();
+        assert!(mean >= min as f64 && mean <= max as f64, "case {case}: mean {mean}");
+    }
+}
+
+#[test]
+fn serve_percentiles_empty_single_and_exact_boundaries() {
+    // Empty recorder: every percentile (and the mean) is 0, not a panic.
+    let empty = ServeRecorder::new(2, 128).snapshot();
+    for p in [0.0, 0.5, 0.99, 1.0] {
+        assert_eq!(empty.percentile_us(p), 0);
+    }
+    assert_eq!(empty.mean_us(), 0.0);
+
+    // A single sample answers every quantile with itself.
+    let one = ServeRecorder::new(1, 64);
+    one.record_batch(0, &[1234], 0);
+    let s = one.snapshot();
+    for p in [0.0, 0.25, 0.5, 0.999, 1.0] {
+        assert_eq!(s.percentile_us(p), 1234);
+    }
+
+    // Exact-boundary quantiles on a known ladder: rank interpolation, not
+    // rounded ranks (p50 of [10, 20, 30, 40] is 25).
+    let rec = ServeRecorder::new(1, 64);
+    rec.record_batch(0, &[10, 20, 30, 40], 0);
+    let s = rec.snapshot();
+    assert_eq!(s.percentile_us(0.0), 10);
+    assert_eq!(s.percentile_us(0.5), 25);
+    assert_eq!(s.percentile_us(1.0), 40);
+    // Quantiles landing exactly on a rank return that sample unchanged.
+    assert_eq!(s.percentile_us(1.0 / 3.0), 20);
+    assert_eq!(s.percentile_us(2.0 / 3.0), 30);
+}
+
+#[test]
+fn serve_percentiles_survive_latency_ring_wraparound() {
+    // Push far more samples than the ring retains: percentiles must come
+    // from the retained (most recent) window and stay within its bounds.
+    let rec = ServeRecorder::new(1, 64); // one shard, 64-sample ring
+    for i in 0..10_000u64 {
+        rec.record_batch(0, &[i], 0);
+    }
+    let s = rec.snapshot();
+    assert_eq!(s.requests, 10_000);
+    let (lo, hi) = (s.percentile_us(0.0), s.percentile_us(1.0));
+    assert!(lo >= 9_936 && hi <= 9_999, "retained window is the newest 64: [{lo}, {hi}]");
+    for p in [0.1, 0.5, 0.9, 0.99] {
+        let v = s.percentile_us(p);
+        assert!(v >= lo && v <= hi, "p{p} = {v} escaped [{lo}, {hi}]");
+    }
+    // The ring itself reports both retained and lifetime counts.
+    let mut ring = LatencyRing::new(8);
+    for i in 0..100u64 {
+        ring.push(i);
+    }
+    assert_eq!(ring.samples().len(), 8);
+    assert_eq!(ring.total(), 100);
+}
+
+// ------------------------------------------------------------ eval cache
+
+fn cache_tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("mpq_prop_evalcache_{name}.json"))
+}
+
+fn exact(loss: f64, acc: f64) -> EvalResult {
+    EvalResult { loss, accuracy: acc, exact: true }
+}
+
+#[test]
+fn eval_cache_lru_order_survives_roundtrip_and_stats_accumulate() {
+    let path = cache_tmp("roundtrip");
+    let _ = std::fs::remove_file(&path);
+
+    // Session 1: fill a bounded cache and establish a recency order by
+    // touching entries 1 and 3 after inserting 1..=4.
+    let mut c = EvalCache::with_capacity(&path, "ctx", Some(4));
+    for k in 1..=4u64 {
+        c.insert(k, &exact(k as f64 * 0.1, 1.0 - k as f64 * 0.1));
+    }
+    assert!(c.lookup(1).is_some());
+    assert!(c.lookup(3).is_some());
+    c.save().unwrap();
+    let session1_hits = c.hits();
+    assert_eq!(session1_hits, 2);
+    drop(c);
+
+    // Session 2: the persisted recency order decides eviction — inserting
+    // two fresh keys must evict exactly the least-recently-used 2 and 4.
+    let mut re = EvalCache::with_capacity(&path, "ctx", Some(4));
+    assert_eq!(re.len(), 4);
+    assert_eq!(re.lifetime_hits(), session1_hits as u64);
+    re.insert(5, &exact(0.5, 0.5));
+    re.insert(6, &exact(0.6, 0.4));
+    assert!(re.lookup(2).is_none(), "oldest entry must be evicted first");
+    assert!(re.lookup(4).is_none(), "second-oldest goes next");
+    for k in [1u64, 3, 5, 6] {
+        assert!(re.lookup(k).is_some(), "key {k} must survive");
+    }
+    assert_eq!(re.evictions(), 2);
+    re.save().unwrap();
+    drop(re);
+
+    // Session 3: cumulative hit/evict stats accumulated across sessions.
+    let third = EvalCache::load(&path, "ctx");
+    assert_eq!(third.lifetime_hits(), 2 + 4, "2 hits (s1) + 4 hits (s2); misses don't count");
+    assert_eq!(third.lifetime_evictions(), 2);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn eval_cache_capacity_shrink_evicts_in_recency_order() {
+    let path = cache_tmp("shrink");
+    let _ = std::fs::remove_file(&path);
+    let mut c = EvalCache::load(&path, "ctx"); // unbounded
+    for k in 1..=5u64 {
+        c.insert(k, &exact(0.1, 0.9));
+    }
+    // Refresh 2 then 1: recency order is now 3 < 4 < 5 < 2 < 1.
+    assert!(c.lookup(2).is_some());
+    assert!(c.lookup(1).is_some());
+    c.set_capacity(Some(2));
+    assert_eq!(c.len(), 2);
+    assert_eq!(c.evictions(), 3);
+    assert!(c.lookup(1).is_some(), "most recent survives");
+    assert!(c.lookup(2).is_some(), "second most recent survives");
+    for k in [3u64, 4, 5] {
+        assert!(c.lookup(k).is_none(), "key {k} should have been evicted");
+    }
+    // Shrinking below an already-met bound is a no-op.
+    c.set_capacity(Some(2));
+    assert_eq!(c.len(), 2);
+    let _ = std::fs::remove_file(&path);
 }
 
 #[test]

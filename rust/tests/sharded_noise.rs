@@ -1,0 +1,131 @@
+//! Parity properties for the sharded ε_N noise metric: at 1, 2 and 8
+//! workers, [`noise_scores_sharded`] must produce *bit-identical* scores
+//! — the same contract `sharded_calibration.rs` asserts for calibration
+//! and the Hessian trace. No artifacts or PJRT device needed:
+//! [`SyntheticStage`] runs the real driver (grid flattening, scatter over
+//! scoped threads, fixed-order host reduction against the worker-0 clean
+//! loss) over deterministic per-item math. Also covers the (layer, trial)
+//! seed addressing and the stale sensitivity-cache recompute gate.
+
+use mpq::api::{ModelContext, SyntheticStage};
+use mpq::coordinator::{noise_scores_sharded, StageRunner};
+use mpq::sensitivity::{load_score_cache, save_score_cache};
+use mpq::util::json::{self, Value};
+use mpq::util::rng::noise_seed;
+
+const WORKER_COUNTS: [usize; 3] = [1, 2, 8];
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn noise_scores_bit_identical_across_worker_counts() {
+    // Grid shapes chosen so the flattened (layer, trial) items split
+    // unevenly across workers — including fewer items than workers.
+    for (layers, trials) in [(6usize, 3usize), (4, 1), (9, 5), (1, 2), (2, 16)] {
+        let mut reference: Option<Vec<f64>> = None;
+        for workers in WORKER_COUNTS {
+            let mut stage = SyntheticStage::new(layers, 8, workers, 42);
+            let scores = noise_scores_sharded(&mut stage, 0.05, trials, 7).unwrap();
+            assert_eq!(scores.len(), layers);
+            match &reference {
+                None => reference = Some(scores),
+                Some(r) => {
+                    let what = format!("layers {layers} trials {trials} workers {workers}");
+                    assert_eq!(bits(&scores), bits(r), "{what}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn noise_draws_are_trial_seed_addressed() {
+    // Different base seeds must perturb differently...
+    let mut a = SyntheticStage::new(5, 8, 2, 13);
+    let mut b = SyntheticStage::new(5, 8, 2, 13);
+    let sa = noise_scores_sharded(&mut a, 0.05, 3, 1).unwrap();
+    let sb = noise_scores_sharded(&mut b, 0.05, 3, 2).unwrap();
+    assert_ne!(sa, sb, "different seeds must give different scores");
+    // ...and more trials must change the per-layer average (the grid is
+    // (layer, trial)-addressed, not a shared stream that happens to
+    // coincide on a prefix).
+    let mut c = SyntheticStage::new(5, 8, 2, 13);
+    let sc = noise_scores_sharded(&mut c, 0.05, 4, 1).unwrap();
+    assert_ne!(sa, sc, "trial count is part of the addressing");
+    // The underlying per-(layer, trial) seeds are stable and unique.
+    assert_eq!(noise_seed(1, 2, 3), noise_seed(1, 2, 3));
+    assert_ne!(noise_seed(1, 2, 3), noise_seed(1, 3, 2));
+}
+
+#[test]
+fn noise_scores_deterministic_per_stage_seed() {
+    let run = |stage_seed: u64| {
+        let mut stage = SyntheticStage::new(7, 8, 3, stage_seed);
+        noise_scores_sharded(&mut stage, 0.05, 3, 99).unwrap()
+    };
+    assert_eq!(bits(&run(11)), bits(&run(11)));
+    assert_ne!(bits(&run(11)), bits(&run(12)));
+}
+
+#[test]
+fn driver_accepts_dyn_stage_runner() {
+    let mut stage = SyntheticStage::new(3, 6, 2, 21);
+    let dyn_stage: &mut dyn StageRunner = &mut stage;
+    let scores = noise_scores_sharded(dyn_stage, 0.05, 2, 5).unwrap();
+    assert_eq!(scores.len(), 3);
+}
+
+// ---------------------------------------------------- stale-cache recompute
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("mpq_sens_cache_{name}.json"))
+}
+
+#[test]
+fn stale_v1_and_v2_sensitivity_caches_are_recomputed() {
+    let version = ModelContext::SENS_CACHE_VERSION;
+    assert!(version >= 3, "sharded noise requires the v3 cache bump");
+    let path = tmp("stale");
+    let scores = vec![0.25f64, 0.5, 0.75];
+
+    // An unversioned v1 file (serial shared-RNG era) must be rejected.
+    let v1 = Value::obj(vec![(
+        "scores",
+        Value::Arr(scores.iter().map(|&s| Value::Num(s)).collect()),
+    )]);
+    std::fs::write(&path, v1.to_string()).unwrap();
+    assert_eq!(load_score_cache(&path, version, 3), None, "v1 file must recompute");
+
+    // A v2 file (trial-seeded Hessian, serial noise) must be rejected too.
+    let v2 = Value::obj(vec![
+        ("version", Value::Num(2.0)),
+        ("scores", Value::Arr(scores.iter().map(|&s| Value::Num(s)).collect())),
+    ]);
+    std::fs::write(&path, v2.to_string()).unwrap();
+    assert_eq!(load_score_cache(&path, version, 3), None, "v2 file must recompute");
+
+    // The current version round-trips exactly...
+    save_score_cache(&path, version, &scores);
+    let loaded = load_score_cache(&path, version, 3).expect("current version must load");
+    assert_eq!(bits(&loaded), bits(&scores));
+    // ...but only for the layer count it was written for.
+    assert_eq!(load_score_cache(&path, version, 4), None, "layer mismatch must recompute");
+
+    // Corrupt files degrade to a recompute, never an error.
+    std::fs::write(&path, "{not json").unwrap();
+    assert_eq!(load_score_cache(&path, version, 3), None);
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(load_score_cache(&path, version, 3), None, "missing file recomputes");
+}
+
+#[test]
+fn score_cache_files_are_valid_json_with_version() {
+    let path = tmp("roundtrip");
+    save_score_cache(&path, ModelContext::SENS_CACHE_VERSION, &[1.0, 2.0]);
+    let v = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(v.req("version").unwrap().as_usize().unwrap(), ModelContext::SENS_CACHE_VERSION);
+    assert_eq!(v.req("scores").unwrap().as_arr().unwrap().len(), 2);
+    let _ = std::fs::remove_file(&path);
+}

@@ -1,0 +1,128 @@
+//! Kill-and-resume properties of the budget × accuracy-floor sweep: a
+//! synthetic sweep aborted at a grid point and resumed from its
+//! checkpoint must emit a report *byte-identical* to an uninterrupted
+//! run — at 1 and 2 workers — because every cell is answered either from
+//! the atomically written per-cell log or by a deterministic fresh
+//! search. Mirrors what the CI `mpq report --sweep` smoke does end to
+//! end through the binary.
+
+use mpq::coordinator::SearchAlgo;
+use mpq::report::{
+    budget_sweep_synthetic, render_sweep, sweep_cells_json, sweep_fingerprint, BudgetKind,
+    SweepCheckpoint, SweepGrid,
+};
+
+const LAYERS: usize = 20;
+const SEED: u64 = 7;
+
+fn grid() -> SweepGrid {
+    SweepGrid {
+        kind: BudgetKind::Latency,
+        budgets: vec![0.55, 0.7, 0.9],
+        floors: vec![0.9, 0.99],
+    }
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("mpq_sweep_ck_{name}.json"))
+}
+
+fn fingerprint(g: &SweepGrid) -> String {
+    let order: Vec<usize> = (0..LAYERS).collect();
+    sweep_fingerprint(SearchAlgo::Greedy, g, &order, &format!("synthetic/n{LAYERS}/seed{SEED}"))
+}
+
+#[test]
+fn aborted_sweep_resumes_byte_identically_at_1_and_2_workers() {
+    let g = grid();
+    for workers in [1usize, 2] {
+        // Uninterrupted reference run (no checkpoint at all).
+        let full =
+            budget_sweep_synthetic(LAYERS, SEED, workers, SearchAlgo::Greedy, &g, None, None)
+                .unwrap();
+        assert_eq!(full.len(), 6);
+        let full_json = sweep_cells_json(&full);
+        let full_render = render_sweep("sweep", &g, &full).render();
+
+        // Kill the sweep after two completed grid points.
+        let path = tmp(&format!("abort_w{workers}"));
+        let _ = std::fs::remove_file(&path);
+        let mut ck = SweepCheckpoint::attach(&path, &fingerprint(&g), false).unwrap();
+        let err = budget_sweep_synthetic(
+            LAYERS,
+            SEED,
+            workers,
+            SearchAlgo::Greedy,
+            &g,
+            Some(&mut ck),
+            Some(2),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("aborted after 2"), "{err}");
+        assert_eq!(ck.completed(), 2, "both finished cells must be persisted");
+        drop(ck);
+
+        // Resume: the two recorded cells are answered from the log, the
+        // remaining four run fresh — and the final report byte-matches.
+        let mut re = SweepCheckpoint::attach(&path, &fingerprint(&g), true).unwrap();
+        assert_eq!(re.loaded(), 2);
+        let resumed = budget_sweep_synthetic(
+            LAYERS,
+            SEED,
+            workers,
+            SearchAlgo::Greedy,
+            &g,
+            Some(&mut re),
+            None,
+        )
+        .unwrap();
+        assert_eq!(re.completed(), 6, "resume must append only the missing cells");
+        assert_eq!(sweep_cells_json(&resumed), full_json, "workers {workers}: RESULT diff");
+        assert_eq!(
+            render_sweep("sweep", &g, &resumed).render(),
+            full_render,
+            "workers {workers}: rendered report diff"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+#[test]
+fn worker_count_never_changes_the_report() {
+    let g = grid();
+    let w1 = budget_sweep_synthetic(LAYERS, SEED, 1, SearchAlgo::Greedy, &g, None, None).unwrap();
+    let w2 = budget_sweep_synthetic(LAYERS, SEED, 2, SearchAlgo::Greedy, &g, None, None).unwrap();
+    assert_eq!(sweep_cells_json(&w1), sweep_cells_json(&w2));
+}
+
+#[test]
+fn resume_rejects_mismatched_or_missing_checkpoints() {
+    let g = grid();
+    let path = tmp("mismatch");
+    let _ = std::fs::remove_file(&path);
+    // Missing file cannot be resumed.
+    assert!(SweepCheckpoint::attach(&path, &fingerprint(&g), true).is_err());
+    // A checkpoint from a different grid is rejected loudly.
+    let mut ck = SweepCheckpoint::attach(&path, &fingerprint(&g), false).unwrap();
+    let _ = budget_sweep_synthetic(LAYERS, SEED, 1, SearchAlgo::Greedy, &g, Some(&mut ck), None)
+        .unwrap();
+    drop(ck);
+    let other = SweepGrid { kind: BudgetKind::Size, ..grid() };
+    let err = SweepCheckpoint::attach(&path, &fingerprint(&other), true).unwrap_err();
+    assert!(err.to_string().contains("different sweep"), "{err}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn fresh_attach_truncates_a_stale_sweep_log() {
+    let g = grid();
+    let path = tmp("truncate");
+    let _ = std::fs::remove_file(&path);
+    let mut ck = SweepCheckpoint::attach(&path, &fingerprint(&g), false).unwrap();
+    let _ = budget_sweep_synthetic(LAYERS, SEED, 1, SearchAlgo::Greedy, &g, Some(&mut ck), None)
+        .unwrap();
+    assert_eq!(ck.completed(), 6);
+    drop(ck);
+    let fresh = SweepCheckpoint::attach(&path, &fingerprint(&g), false).unwrap();
+    assert_eq!(fresh.completed(), 0, "non-resume attach must start clean");
+}

@@ -79,8 +79,10 @@ impl ModelContext {
     /// (`noise_seed(seed, layer, trial)`): v1/v2 files carry scores drawn
     /// from a sequentially shared RNG and would order layers differently,
     /// so they are recomputed rather than trusted — v3 sharded noise
-    /// scores are never mixed with serial-loop files.
-    pub const SENS_CACHE_VERSION: usize = 3;
+    /// scores are never mixed with serial-loop files. The version itself
+    /// lives with the cache type ([`sensitivity::ScoreCache::VERSION`]);
+    /// this alias keeps the long-standing `ModelContext` spelling.
+    pub const SENS_CACHE_VERSION: usize = sensitivity::ScoreCache::VERSION;
 
     /// Context with default spec settings (A100-like analytical costing,
     /// reference deploy scale, unbounded cache, one worker).
@@ -346,7 +348,7 @@ impl ModelContext {
     /// perturbations, so the cached scores are worker-count independent.
     /// Cache files carry [`Self::SENS_CACHE_VERSION`]; files written under
     /// an older draw scheme (v1: shared Hessian RNG; v2: serial shared-RNG
-    /// noise) are recomputed via [`sensitivity::load_score_cache`], so a
+    /// noise) are recomputed via [`sensitivity::ScoreCache`], so a
     /// stale cache can never break cross-machine determinism.
     pub fn cached_sensitivity(
         &mut self,
@@ -354,19 +356,15 @@ impl ModelContext {
         trials: usize,
         seed: u64,
     ) -> Result<Sensitivity> {
-        let path = self.pipeline.artifacts.dir.join(format!(
-            "{}_sens_{}_{}_{}.json",
-            self.model(),
-            metric.label().to_lowercase(),
+        let cache = sensitivity::ScoreCache::for_model(
+            &self.pipeline.artifacts.dir,
+            &self.model(),
+            metric,
             trials,
-            seed
-        ));
+            seed,
+        );
         if metric != MetricKind::Random {
-            if let Some(scores) = sensitivity::load_score_cache(
-                &path,
-                Self::SENS_CACHE_VERSION,
-                self.pipeline.num_quant_layers(),
-            ) {
+            if let Some(scores) = cache.load(self.pipeline.num_quant_layers()) {
                 return Ok(Sensitivity::from_scores(metric, scores));
             }
         }
@@ -382,7 +380,7 @@ impl ModelContext {
             _ => sensitivity::compute(&mut self.pipeline, metric, trials, seed)?,
         };
         if metric != MetricKind::Random {
-            sensitivity::save_score_cache(&path, Self::SENS_CACHE_VERSION, &sens.scores);
+            cache.save(&sens.scores);
         }
         Ok(sens)
     }

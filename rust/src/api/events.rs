@@ -52,6 +52,14 @@ pub enum SearchEvent {
     ScalesLoaded { path: String },
     /// The persistent eval cache was attached with `entries` prior results.
     EvalCacheAttached { entries: usize, path: String },
+    /// A frontier build started the exhaustion search for one accuracy
+    /// floor (`index` of `total`). Unrelated to
+    /// [`SearchEvent::FrontierSubmitted`], which reports a speculative
+    /// *evaluation* frontier inside a single search.
+    FrontierFloor { floor: f64, index: usize, total: usize },
+    /// A Pareto-frontier artifact was persisted: `points` trail points,
+    /// of which `pareto` survive dominated-filtering.
+    FrontierWritten { points: usize, pareto: usize, path: String },
 }
 
 /// Render one [`SearchEvent`] as a stderr progress line — the default
@@ -107,6 +115,16 @@ pub fn log_event(ev: &SearchEvent) {
         }
         SearchEvent::EvalCacheAttached { entries, path } => {
             eprintln!("[eval-cache] loaded {entries} exact results from {path}");
+        }
+        SearchEvent::FrontierFloor { floor, index, total } => {
+            eprintln!(
+                "[frontier] floor {}/{total}: accuracy >= {:.2}% of baseline",
+                index + 1,
+                floor * 100.0
+            );
+        }
+        SearchEvent::FrontierWritten { points, pareto, path } => {
+            eprintln!("[frontier] {points} points ({pareto} Pareto-optimal) -> {path}");
         }
         SearchEvent::FrontierSubmitted { .. } | SearchEvent::CheckpointWritten { .. } => {}
     }

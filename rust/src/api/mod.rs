@@ -18,6 +18,10 @@
 //!   decision [`Checkpoint`]s so interrupted runs resume bit-identically.
 //! * [`ModelContext`] — pipeline + cost model + calibration state (the
 //!   former `ExperimentCtx`), shared by reports and the CLI.
+//! * [`ParetoFront`] — one-pass frontier builder: one exhaustion search
+//!   per accuracy floor yields a serializable [`FrontierArtifact`] that
+//!   answers every (budget, floor) sweep cell and serve-time
+//!   [`PickSpec`] selection without another search.
 //! * [`SyntheticEnv`]/[`SyntheticCost`] — artifact-free environments so
 //!   the whole API (budgets, checkpoints, worker fan-out) runs in CI.
 
@@ -27,6 +31,7 @@ mod cost;
 mod driver;
 mod events;
 mod objective;
+mod pareto;
 mod session;
 mod spec;
 mod synthetic;
@@ -36,7 +41,16 @@ pub use context::ModelContext;
 pub use cost::CostModel;
 pub use driver::{run_search, SearchCtl};
 pub use events::{log_event, SearchEvent};
-pub use objective::{AccuracyTarget, FootprintBudget, LatencyBudget, Objective};
+pub use objective::{AccuracyTarget, CellMetrics, FootprintBudget, LatencyBudget, Objective};
+pub use pareto::{
+    build_frontier_synthetic, frontier_fingerprint, FloorTrail, FrontierArtifact, FrontierPoint,
+    FrontierReport, ParetoFront, PickSpec, FRONTIER_VERSION,
+};
 pub use session::{SearchReport, SearchSession};
 pub use spec::{BackendSpec, CacheSpec, ObjectiveSpec, ScaleSpec, SearchSpec, DEFAULT_TRIALS};
 pub use synthetic::{SyntheticCost, SyntheticEnv, SyntheticStage};
+
+/// The versioned sensitivity score cache lives with the metric code but
+/// is part of the API's cache surface (same idiom as the frontier
+/// artifact and the decision-log checkpoint).
+pub use crate::sensitivity::ScoreCache;

@@ -24,6 +24,21 @@ use crate::quant::QuantConfig;
 
 use super::CostModel;
 
+/// The realized metrics of a finished configuration — what a frontier
+/// point or a sweep cell knows about itself. [`Objective::score`] ranks
+/// these without re-running any search, which is how
+/// [`super::FrontierArtifact::best_for`] selects from a Pareto set
+/// without downcasting the objective.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CellMetrics {
+    /// Exact accuracy of the configuration.
+    pub accuracy: f64,
+    /// Modeled latency relative to the float baseline.
+    pub rel_latency: f64,
+    /// Modeled size relative to the float baseline.
+    pub rel_size: f64,
+}
+
 /// A constrained search objective: hard accuracy floor plus optional
 /// deployment budgets.
 pub trait Objective: Send + Sync {
@@ -54,6 +69,17 @@ pub trait Objective: Send + Sync {
         None
     }
 
+    /// Scalarize a finished configuration's metrics: `Some(score)` when
+    /// the metrics satisfy this objective's constraints (higher is
+    /// better), `None` when they are infeasible. This is the ranking
+    /// half of the constraint/score split — it never influences search
+    /// decisions (those go through [`Objective::accept`] and
+    /// [`Objective::satisfied`]), only post-hoc selection over already
+    /// evaluated candidates. The default objective ranks nothing.
+    fn score(&self, _metrics: &CellMetrics) -> Option<f64> {
+        None
+    }
+
     /// Stable human-readable description; also part of checkpoint
     /// fingerprints, so resumed runs reject objective changes.
     fn describe(&self) -> String;
@@ -75,6 +101,10 @@ impl AccuracyTarget {
 impl Objective for AccuracyTarget {
     fn accuracy_floor(&self) -> f64 {
         self.floor
+    }
+
+    fn score(&self, metrics: &CellMetrics) -> Option<f64> {
+        (metrics.accuracy >= self.floor).then_some(metrics.accuracy)
     }
 
     fn describe(&self) -> String {
@@ -107,6 +137,11 @@ impl Objective for LatencyBudget {
 
     fn cost_of(&self, cfg: &QuantConfig) -> Option<f64> {
         Some(self.cost.rel_latency(cfg))
+    }
+
+    fn score(&self, metrics: &CellMetrics) -> Option<f64> {
+        (metrics.accuracy >= self.floor && metrics.rel_latency <= self.budget)
+            .then_some(metrics.accuracy)
     }
 
     fn describe(&self) -> String {
@@ -144,6 +179,11 @@ impl Objective for FootprintBudget {
 
     fn cost_of(&self, cfg: &QuantConfig) -> Option<f64> {
         Some(self.cost.rel_size(cfg))
+    }
+
+    fn score(&self, metrics: &CellMetrics) -> Option<f64> {
+        (metrics.accuracy >= self.floor && metrics.rel_size <= self.budget)
+            .then_some(metrics.accuracy)
     }
 
     fn describe(&self) -> String {

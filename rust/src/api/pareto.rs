@@ -1,0 +1,772 @@
+//! One-pass Pareto frontier over the bit-assignment space.
+//!
+//! Every cell of `mpq report --sweep` used to re-run a full constrained
+//! search. [`ParetoFront`] exploits the monotonicity baked into the
+//! budgeted objectives (see `objective.rs`: quantization only ever
+//! lowers modeled cost, so budgets choose *where to stop*, never *which
+//! layer to accept*) to answer the whole budget × accuracy-floor grid
+//! from one search per floor:
+//!
+//! 1. For each accuracy floor, run the search to *accuracy exhaustion*
+//!    under a recording objective that never reports a budget as
+//!    satisfied. The trail of committed configurations — float baseline
+//!    included — is exactly the trajectory every budgeted search at that
+//!    floor walks before stopping.
+//! 2. Re-evaluate each trail point exactly (decision evals can be
+//!    early-exited and replayed decisions carry no accuracy), attach
+//!    modeled costs, and persist everything as a fingerprint-guarded
+//!    `<model>_frontier.json` artifact.
+//! 3. Any (budget, floor) cell is then the *first* trail point whose
+//!    relative cost meets the budget — an O(1) read
+//!    ([`crate::report::budget_sweep_from_frontier`]) that reproduces
+//!    the re-searching sweep byte for byte.
+//!
+//! The driver shares the whole `api/` control surface with
+//! [`super::run_search`]: the same [`SearchEvent`] stream, the same
+//! per-floor decision-log [`Checkpoint`]s (so a killed build resumes
+//! bit-identically), and — through [`super::SearchSession::run_pareto`]
+//! — the same `EvalCache`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Context as _};
+
+use crate::coordinator::{ParallelEnv, SearchAlgo, SearchEnv};
+use crate::quant::{QuantConfig, QUANT_BITS};
+use crate::util::json::{self, Value};
+use crate::Result;
+
+use super::checkpoint::{checkpoint_fingerprint, Checkpoint};
+use super::cost::CostModel;
+use super::driver::run_search;
+use super::events::SearchEvent;
+use super::objective::{CellMetrics, Objective};
+use super::synthetic::{SyntheticCost, SyntheticEnv};
+
+/// Version gate for `<model>_frontier.json`. Bump when the schema or the
+/// trail semantics change so stale artifacts are rejected, not misread.
+pub const FRONTIER_VERSION: u64 = 1;
+
+// ------------------------------------------------------------- artifact
+
+/// One configuration on a floor's search trajectory, with its exact
+/// accuracy and modeled costs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrontierPoint {
+    /// The committed bit assignment.
+    pub config: QuantConfig,
+    /// Exact accuracy of `config` (full evaluation, no early exit).
+    pub accuracy: f64,
+    /// Modeled latency relative to the float baseline.
+    pub rel_latency: f64,
+    /// Modeled size relative to the float baseline.
+    pub rel_size: f64,
+    /// Where the cost numbers came from (mirrors
+    /// [`CostModel::provenance`]).
+    pub cost_provenance: String,
+    /// Decision evaluations consumed up to (and including) committing
+    /// this point. A budgeted search stopping here reports
+    /// `decisions + 1` evals (the `+1` is its final exact evaluation).
+    pub decisions: usize,
+}
+
+impl FrontierPoint {
+    /// True when `self` is at least as good as `other` on every axis and
+    /// strictly better on at least one.
+    pub fn dominates(&self, other: &FrontierPoint) -> bool {
+        let no_worse = self.accuracy >= other.accuracy
+            && self.rel_latency <= other.rel_latency
+            && self.rel_size <= other.rel_size;
+        let better = self.accuracy > other.accuracy
+            || self.rel_latency < other.rel_latency
+            || self.rel_size < other.rel_size;
+        no_worse && better
+    }
+
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("bits_w", Value::arr_f32(&self.config.bits_w)),
+            ("bits_a", Value::arr_f32(&self.config.bits_a)),
+            ("accuracy", Value::Num(self.accuracy)),
+            ("rel_latency", Value::Num(self.rel_latency)),
+            ("rel_size", Value::Num(self.rel_size)),
+            ("cost_provenance", Value::Str(self.cost_provenance.clone())),
+            ("decisions", Value::Num(self.decisions as f64)),
+        ])
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let bits_w = v.req("bits_w")?.as_f32_vec()?;
+        let bits_a = v.req("bits_a")?.as_f32_vec()?;
+        ensure!(bits_w.len() == bits_a.len(), "bits_w/bits_a length mismatch");
+        Ok(FrontierPoint {
+            config: QuantConfig { bits_w, bits_a },
+            accuracy: v.req("accuracy")?.as_f64()?,
+            rel_latency: v.req("rel_latency")?.as_f64()?,
+            rel_size: v.req("rel_size")?.as_f64()?,
+            cost_provenance: v.req("cost_provenance")?.as_str()?.to_string(),
+            decisions: v.req("decisions")?.as_usize()?,
+        })
+    }
+}
+
+/// The full committed-configuration trajectory of one accuracy floor's
+/// exhaustion search, float baseline first.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FloorTrail {
+    /// The floor as a fraction of the float baseline accuracy.
+    pub floor: f64,
+    /// The absolute accuracy floor the search guaranteed.
+    pub abs_floor: f64,
+    /// Total decision evaluations the exhaustion search consumed.
+    pub decisions: usize,
+    /// Committed configurations in commit order.
+    pub points: Vec<FrontierPoint>,
+}
+
+impl FloorTrail {
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("floor", Value::Num(self.floor)),
+            ("abs_floor", Value::Num(self.abs_floor)),
+            ("decisions", Value::Num(self.decisions as f64)),
+            ("points", Value::Arr(self.points.iter().map(FrontierPoint::to_json).collect())),
+        ])
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let points = v
+            .req("points")?
+            .as_arr()?
+            .iter()
+            .map(FrontierPoint::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        ensure!(!points.is_empty(), "empty frontier trail");
+        Ok(FloorTrail {
+            floor: v.req("floor")?.as_f64()?,
+            abs_floor: v.req("abs_floor")?.as_f64()?,
+            decisions: v.req("decisions")?.as_usize()?,
+            points,
+        })
+    }
+}
+
+/// The serializable frontier: per-floor trails plus enough provenance to
+/// refuse lookups against the wrong search. Written atomically via
+/// [`crate::util::fs::atomic_write_text`] and version/fingerprint-gated
+/// like the decision-log checkpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrontierArtifact {
+    /// Algorithm that produced every trail.
+    pub algo: SearchAlgo,
+    /// Build fingerprint (see [`frontier_fingerprint`]).
+    pub fingerprint: String,
+    /// Float baseline accuracy all floors are relative to.
+    pub float_accuracy: f64,
+    /// Cost-model provenance shared by every point.
+    pub cost_provenance: String,
+    /// One trail per requested floor, in build order.
+    pub trails: Vec<FloorTrail>,
+}
+
+impl FrontierArtifact {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("version", Value::Num(FRONTIER_VERSION as f64)),
+            ("algo", Value::Str(self.algo.label().to_string())),
+            ("fingerprint", Value::Str(self.fingerprint.clone())),
+            ("float_accuracy", Value::Num(self.float_accuracy)),
+            ("cost_provenance", Value::Str(self.cost_provenance.clone())),
+            ("trails", Value::Arr(self.trails.iter().map(FloorTrail::to_json).collect())),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let trails = v
+            .req("trails")?
+            .as_arr()?
+            .iter()
+            .map(FloorTrail::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        ensure!(!trails.is_empty(), "frontier artifact has no trails");
+        Ok(FrontierArtifact {
+            algo: v.req("algo")?.as_str()?.parse()?,
+            fingerprint: v.req("fingerprint")?.as_str()?.to_string(),
+            float_accuracy: v.req("float_accuracy")?.as_f64()?,
+            cost_provenance: v.req("cost_provenance")?.as_str()?.to_string(),
+            trails,
+        })
+    }
+
+    /// Write the artifact atomically (crash leaves old or new, never a
+    /// truncated file).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        crate::util::fs::atomic_write_text(path, &self.to_json().to_string())
+            .with_context(|| format!("saving frontier artifact {}", path.display()))
+    }
+
+    /// Load and version-gate an artifact.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading frontier artifact {}", path.display()))?;
+        let v = json::parse(&text)
+            .with_context(|| format!("parsing frontier artifact {}", path.display()))?;
+        let version = v.req("version")?.as_u64()?;
+        ensure!(
+            version == FRONTIER_VERSION,
+            "frontier artifact {} is version {version}, this build reads {FRONTIER_VERSION}",
+            path.display()
+        );
+        Self::from_json(&v)
+            .with_context(|| format!("decoding frontier artifact {}", path.display()))
+    }
+
+    /// Refuse to serve lookups for a different search: the artifact must
+    /// have been built by the same algorithm over the same floors, layer
+    /// order, and evaluation environment.
+    pub fn verify(&self, algo: SearchAlgo, order: &[usize], env_context: &str) -> Result<()> {
+        let expected = frontier_fingerprint(algo, &self.floors(), order, env_context);
+        ensure!(
+            self.fingerprint == expected,
+            "frontier artifact was built by a different search:\n  recorded: {}\n  expected: \
+             {expected}",
+            self.fingerprint
+        );
+        Ok(())
+    }
+
+    /// The floors this artifact has trails for, in build order.
+    pub fn floors(&self) -> Vec<f64> {
+        self.trails.iter().map(|t| t.floor).collect()
+    }
+
+    /// The trail built for exactly this floor (bit-exact match — floors
+    /// come from the same parsed CLI/grid values on both sides).
+    pub fn trail_for(&self, floor: f64) -> Option<&FloorTrail> {
+        self.trails.iter().find(|t| t.floor.to_bits() == floor.to_bits())
+    }
+
+    /// Total number of recorded trail points across all floors.
+    pub fn num_points(&self) -> usize {
+        self.trails.iter().map(|t| t.points.len()).sum()
+    }
+
+    /// The dominated-filtered frontier: every distinct configuration no
+    /// other recorded configuration beats on accuracy, latency, *and*
+    /// size at once.
+    pub fn pareto(&self) -> Vec<&FrontierPoint> {
+        let mut seen = std::collections::HashSet::new();
+        let mut distinct: Vec<&FrontierPoint> = Vec::new();
+        for trail in &self.trails {
+            for p in &trail.points {
+                if seen.insert(p.config.key()) {
+                    distinct.push(p);
+                }
+            }
+        }
+        distinct.iter().filter(|p| !distinct.iter().any(|q| q.dominates(p))).copied().collect()
+    }
+
+    /// Select the most accurate Pareto point satisfying `spec` (ties
+    /// broken by lower latency, then lower size). Errors when no point
+    /// qualifies — the caller should relax the constraints or rebuild
+    /// the frontier with more floors.
+    pub fn pick(&self, spec: &PickSpec) -> Result<&FrontierPoint> {
+        self.pareto()
+            .into_iter()
+            .filter(|p| {
+                spec.max_rel_latency.is_none_or(|b| p.rel_latency <= b)
+                    && spec.max_rel_size.is_none_or(|b| p.rel_size <= b)
+                    && spec.min_accuracy.is_none_or(|f| p.accuracy >= f * self.float_accuracy)
+            })
+            .max_by(|a, b| {
+                let eq = std::cmp::Ordering::Equal;
+                a.accuracy
+                    .partial_cmp(&b.accuracy)
+                    .unwrap_or(eq)
+                    .then(b.rel_latency.partial_cmp(&a.rel_latency).unwrap_or(eq))
+                    .then(b.rel_size.partial_cmp(&a.rel_size).unwrap_or(eq))
+            })
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no frontier point satisfies --pick {} ({} Pareto points recorded)",
+                    spec.describe(),
+                    self.pareto().len()
+                )
+            })
+    }
+
+    /// Rank the Pareto set with an [`Objective`]'s scalarized
+    /// [`Objective::score`] — `None` scores are infeasible and skipped.
+    pub fn best_for(&self, objective: &dyn Objective) -> Option<&FrontierPoint> {
+        self.pareto()
+            .into_iter()
+            .filter_map(|p| {
+                let metrics = CellMetrics {
+                    accuracy: p.accuracy,
+                    rel_latency: p.rel_latency,
+                    rel_size: p.rel_size,
+                };
+                objective.score(&metrics).map(|s| (p, s))
+            })
+            .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(p, _)| p)
+    }
+}
+
+/// Identity of a frontier build: algorithm, floors (bit-exact), layer
+/// order, and evaluation environment. Same scheme as
+/// [`checkpoint_fingerprint`]; a lookup against a mismatching artifact
+/// fails loudly instead of silently serving another model's trade-off.
+pub fn frontier_fingerprint(
+    algo: SearchAlgo,
+    floors: &[f64],
+    order: &[usize],
+    env_context: &str,
+) -> String {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    floors.len().hash(&mut h);
+    for &f in floors {
+        f.to_bits().hash(&mut h);
+    }
+    order.hash(&mut h);
+    format!("frontier/{}/floors+order-{:016x}/{env_context}", algo.label(), h.finish())
+}
+
+// ------------------------------------------------------------- pick spec
+
+/// Serve-time constraints for [`FrontierArtifact::pick`], parsed from
+/// `--pick latency<=B,size<=B,acc>=F`. The accuracy bound is a fraction
+/// of the artifact's float baseline, matching how sweep floors are
+/// specified everywhere else.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct PickSpec {
+    pub max_rel_latency: Option<f64>,
+    pub max_rel_size: Option<f64>,
+    pub min_accuracy: Option<f64>,
+}
+
+impl PickSpec {
+    /// Human-readable round-trip of the constraint terms.
+    pub fn describe(&self) -> String {
+        let mut terms = Vec::new();
+        if let Some(b) = self.max_rel_latency {
+            terms.push(format!("latency<={b}"));
+        }
+        if let Some(b) = self.max_rel_size {
+            terms.push(format!("size<={b}"));
+        }
+        if let Some(f) = self.min_accuracy {
+            terms.push(format!("acc>={f}"));
+        }
+        if terms.is_empty() {
+            "(unconstrained)".to_string()
+        } else {
+            terms.join(",")
+        }
+    }
+}
+
+impl std::str::FromStr for PickSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let mut spec = PickSpec::default();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            if let Some(v) = part.strip_prefix("latency<=") {
+                spec.max_rel_latency = Some(v.trim().parse()?);
+            } else if let Some(v) = part.strip_prefix("size<=") {
+                spec.max_rel_size = Some(v.trim().parse()?);
+            } else if let Some(v) = part.strip_prefix("acc>=") {
+                spec.min_accuracy = Some(v.trim().parse()?);
+            } else {
+                bail!("bad --pick term `{part}` (latency<=F, size<=F, acc>=F)");
+            }
+        }
+        Ok(spec)
+    }
+}
+
+// -------------------------------------------------------------- recorder
+
+/// The exhaustion objective: an accuracy floor whose `satisfied` records
+/// every committed configuration (with the decision count at that
+/// instant) and always answers "keep going" — so the search walks the
+/// full accuracy-only trajectory every budgeted objective at this floor
+/// shares a prefix of. `satisfied` fires on replayed decisions too (the
+/// `Decision` event precedes the check), so resumed builds record the
+/// same trail.
+struct FrontierRecorder {
+    abs_floor: f64,
+    decisions: Arc<AtomicUsize>,
+    trail: Mutex<Vec<(QuantConfig, usize)>>,
+}
+
+impl Objective for FrontierRecorder {
+    fn accuracy_floor(&self) -> f64 {
+        self.abs_floor
+    }
+
+    fn satisfied(&self, cfg: &QuantConfig) -> bool {
+        let mut trail = self.trail.lock().expect("frontier trail poisoned");
+        if trail.last().is_none_or(|(c, _)| c.key() != cfg.key()) {
+            trail.push((cfg.clone(), self.decisions.load(Ordering::Relaxed)));
+        }
+        false
+    }
+
+    fn describe(&self) -> String {
+        format!("frontier accuracy>={}", self.abs_floor)
+    }
+}
+
+// ---------------------------------------------------------------- driver
+
+/// One-pass frontier builder. Configure with [`ParetoFront::new`] (plus
+/// the optional per-floor [`ParetoFront::checkpoint`] prefix), then
+/// [`ParetoFront::build`] against any [`SearchEnv`].
+pub struct ParetoFront {
+    algo: SearchAlgo,
+    order: Vec<usize>,
+    floors: Vec<f64>,
+    float_accuracy: f64,
+    cost: Arc<dyn CostModel>,
+    env_context: String,
+    checkpoint_prefix: Option<PathBuf>,
+    resume: bool,
+}
+
+/// What [`ParetoFront::build`] hands back: the serializable artifact
+/// plus build accounting (exactly one exhaustion search per floor).
+#[derive(Debug, Clone)]
+pub struct FrontierReport {
+    pub artifact: FrontierArtifact,
+    /// Where the artifact was persisted, when the caller saved it.
+    pub path: Option<PathBuf>,
+    /// Total decision evaluations across all floors — "one search's
+    /// worth" per floor; frontier lookups afterwards consume zero.
+    pub decision_evals: usize,
+    /// Decisions answered from per-floor checkpoints instead of evals.
+    pub replayed_decisions: usize,
+    pub build_seconds: f64,
+}
+
+impl ParetoFront {
+    pub fn new(
+        algo: SearchAlgo,
+        order: Vec<usize>,
+        floors: Vec<f64>,
+        float_accuracy: f64,
+        cost: Arc<dyn CostModel>,
+        env_context: String,
+    ) -> Self {
+        ParetoFront {
+            algo,
+            order,
+            floors,
+            float_accuracy,
+            cost,
+            env_context,
+            checkpoint_prefix: None,
+            resume: false,
+        }
+    }
+
+    /// Persist each floor's decision log to `<prefix>.floor<i>` so a
+    /// killed build resumes bit-identically.
+    pub fn checkpoint(mut self, prefix: impl Into<PathBuf>) -> Self {
+        self.checkpoint_prefix = Some(prefix.into());
+        self
+    }
+
+    /// Replay existing per-floor logs instead of starting clean. Floors
+    /// the interrupted build never reached have no log yet and attach
+    /// fresh.
+    pub fn resume(mut self, resume: bool) -> Self {
+        self.resume = resume;
+        self
+    }
+
+    /// Run one exhaustion search per floor and assemble the artifact.
+    /// Every [`SearchEvent`] is forwarded to `observer`, prefixed per
+    /// floor with [`SearchEvent::FrontierFloor`].
+    pub fn build<E: SearchEnv>(
+        &self,
+        env: &mut E,
+        mut observer: Option<&mut dyn FnMut(&SearchEvent)>,
+    ) -> Result<FrontierReport> {
+        ensure!(!self.floors.is_empty(), "frontier needs at least one accuracy floor");
+        ensure!(self.float_accuracy > 0.0, "float baseline accuracy must be positive");
+        for (i, &f) in self.floors.iter().enumerate() {
+            ensure!(f.is_finite() && f > 0.0 && f <= 1.0, "floor {f} out of (0, 1]");
+            ensure!(
+                !self.floors[..i].iter().any(|&g| g.to_bits() == f.to_bits()),
+                "duplicate floor {f} would re-run an identical search"
+            );
+        }
+
+        let t0 = Instant::now();
+        let total = self.floors.len();
+        let mut trails = Vec::with_capacity(total);
+        let mut decision_evals = 0usize;
+        let mut replayed_decisions = 0usize;
+        // Exact accuracies are pure functions of the config, so dedupe
+        // them across floors (the float baseline opens every trail).
+        let mut exact: HashMap<u64, f64> = HashMap::new();
+
+        for (i, &floor) in self.floors.iter().enumerate() {
+            let abs_floor = floor * self.float_accuracy;
+            if let Some(obs) = observer.as_mut() {
+                obs(&SearchEvent::FrontierFloor { floor, index: i, total });
+            }
+            let decisions = Arc::new(AtomicUsize::new(0));
+            let recorder = FrontierRecorder {
+                abs_floor,
+                decisions: decisions.clone(),
+                trail: Mutex::new(Vec::new()),
+            };
+            let mut checkpoint = match &self.checkpoint_prefix {
+                Some(prefix) => {
+                    let path = PathBuf::from(format!("{}.floor{i}", prefix.display()));
+                    let fp = checkpoint_fingerprint(
+                        self.algo,
+                        &QUANT_BITS,
+                        &recorder.describe(),
+                        &self.order,
+                        &self.env_context,
+                    );
+                    let resume = self.resume && path.is_file();
+                    Some(Checkpoint::attach(&path, &fp, resume)?)
+                }
+                None => None,
+            };
+            let counter = decisions.clone();
+            let mut counting = |ev: &SearchEvent| {
+                if matches!(ev, SearchEvent::Decision { .. }) {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }
+                if let Some(obs) = observer.as_mut() {
+                    obs(ev);
+                }
+            };
+            let outcome = run_search(
+                self.algo,
+                env,
+                &self.order,
+                &QUANT_BITS,
+                &recorder,
+                Some(&mut counting),
+                checkpoint.as_mut(),
+            )?;
+            drop(counting);
+            replayed_decisions += checkpoint.as_ref().map_or(0, |ck| ck.replayed());
+            let floor_decisions = decisions.load(Ordering::Relaxed);
+            decision_evals += floor_decisions;
+            ensure!(
+                floor_decisions + 1 == outcome.evals,
+                "frontier decision count out of sync at floor {floor}: {floor_decisions} \
+                 decisions vs {} evals",
+                outcome.evals
+            );
+
+            let trail = recorder.trail.into_inner().expect("frontier trail poisoned");
+            ensure!(
+                trail.last().is_some_and(|(c, _)| c.key() == outcome.config.key()),
+                "frontier trail out of sync with the search outcome at floor {floor}"
+            );
+            let last = trail.len() - 1;
+            let mut points = Vec::with_capacity(trail.len());
+            for (j, (config, dec)) in trail.into_iter().enumerate() {
+                let accuracy = if j == last {
+                    // The search's own final evaluation is already exact.
+                    exact.insert(config.key(), outcome.accuracy);
+                    outcome.accuracy
+                } else {
+                    match exact.get(&config.key()) {
+                        Some(&a) => a,
+                        None => {
+                            let a = env.eval(&config, None)?.accuracy;
+                            exact.insert(config.key(), a);
+                            a
+                        }
+                    }
+                };
+                points.push(FrontierPoint {
+                    accuracy,
+                    rel_latency: self.cost.rel_latency(&config),
+                    rel_size: self.cost.rel_size(&config),
+                    cost_provenance: self.cost.provenance().to_string(),
+                    decisions: dec,
+                    config,
+                });
+            }
+            trails.push(FloorTrail { floor, abs_floor, decisions: floor_decisions, points });
+        }
+
+        let artifact = FrontierArtifact {
+            algo: self.algo,
+            fingerprint: frontier_fingerprint(
+                self.algo,
+                &self.floors,
+                &self.order,
+                &self.env_context,
+            ),
+            float_accuracy: self.float_accuracy,
+            cost_provenance: self.cost.provenance().to_string(),
+            trails,
+        };
+        Ok(FrontierReport {
+            artifact,
+            path: None,
+            decision_evals,
+            replayed_decisions,
+            build_seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// Build a frontier over the seeded [`SyntheticEnv`] — the same harness
+/// `mpq pareto --synthetic` and the CI smoke use. One environment serves
+/// every floor (evaluation is pure, so this matches per-floor fresh
+/// environments bit for bit).
+#[allow(clippy::too_many_arguments)]
+pub fn build_frontier_synthetic(
+    layers: usize,
+    seed: u64,
+    workers: usize,
+    algo: SearchAlgo,
+    floors: &[f64],
+    checkpoint_prefix: Option<&Path>,
+    resume: bool,
+    abort_after: Option<usize>,
+    observer: Option<&mut dyn FnMut(&SearchEvent)>,
+) -> Result<FrontierReport> {
+    let mut env = SyntheticEnv::new(layers, seed);
+    if let Some(n) = abort_after {
+        env = env.abort_after(n);
+    }
+    let order = env.order();
+    let mut front = ParetoFront::new(
+        algo,
+        order,
+        floors.to_vec(),
+        1.0,
+        Arc::new(SyntheticCost::new(layers, seed)),
+        format!("synthetic/n{layers}/seed{seed}"),
+    )
+    .resume(resume);
+    if let Some(prefix) = checkpoint_prefix {
+        front = front.checkpoint(prefix);
+    }
+    let mut penv = ParallelEnv::new(&env, workers.max(1));
+    front.build(&mut penv, observer)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(acc: f64, lat: f64, size: f64) -> FrontierPoint {
+        FrontierPoint {
+            config: QuantConfig::uniform(2, (acc * 1000.0) as f32),
+            accuracy: acc,
+            rel_latency: lat,
+            rel_size: size,
+            cost_provenance: "test".to_string(),
+            decisions: 0,
+        }
+    }
+
+    #[test]
+    fn dominance_needs_no_worse_everywhere_and_better_somewhere() {
+        let a = point(0.9, 0.5, 0.5);
+        assert!(point(0.9, 0.4, 0.5).dominates(&a));
+        assert!(point(0.95, 0.5, 0.5).dominates(&a));
+        assert!(!a.dominates(&a), "equal points never dominate");
+        assert!(!point(0.95, 0.6, 0.5).dominates(&a), "trade-offs are incomparable");
+        assert!(!point(0.8, 0.4, 0.4).dominates(&a));
+    }
+
+    #[test]
+    fn pick_spec_parses_and_round_trips() {
+        let spec: PickSpec = "latency<=0.7, acc>=0.99".parse().unwrap();
+        assert_eq!(spec.max_rel_latency, Some(0.7));
+        assert_eq!(spec.min_accuracy, Some(0.99));
+        assert_eq!(spec.max_rel_size, None);
+        let full: PickSpec = "latency<=0.7,size<=0.8,acc>=0.9".parse().unwrap();
+        assert_eq!(full.describe(), "latency<=0.7,size<=0.8,acc>=0.9");
+        assert_eq!(full.describe().parse::<PickSpec>().unwrap(), full);
+        assert_eq!("".parse::<PickSpec>().unwrap(), PickSpec::default());
+        assert!("latency<0.7".parse::<PickSpec>().is_err());
+        assert!("acc>=fast".parse::<PickSpec>().is_err());
+    }
+
+    #[test]
+    fn fingerprint_separates_algo_floors_order_and_env() {
+        let base = frontier_fingerprint(SearchAlgo::Greedy, &[0.9, 0.99], &[0, 1, 2], "env/a");
+        assert_eq!(
+            base,
+            frontier_fingerprint(SearchAlgo::Greedy, &[0.9, 0.99], &[0, 1, 2], "env/a")
+        );
+        for other in [
+            frontier_fingerprint(SearchAlgo::Bisection, &[0.9, 0.99], &[0, 1, 2], "env/a"),
+            frontier_fingerprint(SearchAlgo::Greedy, &[0.9], &[0, 1, 2], "env/a"),
+            frontier_fingerprint(SearchAlgo::Greedy, &[0.99, 0.9], &[0, 1, 2], "env/a"),
+            frontier_fingerprint(SearchAlgo::Greedy, &[0.9, 0.99], &[2, 1, 0], "env/a"),
+            frontier_fingerprint(SearchAlgo::Greedy, &[0.9, 0.99], &[0, 1, 2], "env/b"),
+        ] {
+            assert_ne!(base, other);
+        }
+    }
+
+    fn sample_artifact() -> FrontierArtifact {
+        let points = vec![point(1.0, 1.0, 1.0), point(0.97, 0.6, 0.55), point(0.91, 0.45, 0.4)];
+        FrontierArtifact {
+            algo: SearchAlgo::Greedy,
+            fingerprint: frontier_fingerprint(SearchAlgo::Greedy, &[0.9], &[0, 1], "env/t"),
+            float_accuracy: 1.0,
+            cost_provenance: "test".to_string(),
+            trails: vec![FloorTrail { floor: 0.9, abs_floor: 0.9, decisions: 4, points }],
+        }
+    }
+
+    #[test]
+    fn artifact_json_round_trip_is_byte_stable() {
+        let a = sample_artifact();
+        let text = a.to_json().to_string();
+        let b = FrontierArtifact::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(b.to_json().to_string(), text, "re-serialization must be byte-identical");
+    }
+
+    #[test]
+    fn verify_accepts_matching_and_rejects_mismatched_builds() {
+        let a = sample_artifact();
+        a.verify(SearchAlgo::Greedy, &[0, 1], "env/t").unwrap();
+        for err in [
+            a.verify(SearchAlgo::Bisection, &[0, 1], "env/t").unwrap_err(),
+            a.verify(SearchAlgo::Greedy, &[1, 0], "env/t").unwrap_err(),
+            a.verify(SearchAlgo::Greedy, &[0, 1], "env/other").unwrap_err(),
+        ] {
+            assert!(err.to_string().contains("different search"), "{err}");
+        }
+    }
+
+    #[test]
+    fn pareto_filters_dominated_and_pick_respects_constraints() {
+        let mut a = sample_artifact();
+        // A strictly dominated extra point must be filtered out.
+        a.trails[0].points.push(point(0.90, 0.6, 0.6));
+        assert_eq!(a.pareto().len(), 3);
+        let picked = a.pick(&"latency<=0.7".parse().unwrap()).unwrap();
+        assert_eq!(picked.accuracy, 0.97, "most accurate point within budget");
+        let tight = a.pick(&"latency<=0.5,acc>=0.99".parse().unwrap());
+        assert!(tight.unwrap_err().to_string().contains("no frontier point"));
+        assert_eq!(a.pick(&PickSpec::default()).unwrap().accuracy, 1.0);
+    }
+}

@@ -19,7 +19,8 @@ use crate::server::{ServeOptions, ServerHandle};
 use crate::Result;
 
 use super::{
-    checkpoint_fingerprint, run_search, Checkpoint, ModelContext, SearchEvent, SearchSpec,
+    checkpoint_fingerprint, run_search, Checkpoint, FrontierReport, ModelContext, ParetoFront,
+    SearchEvent, SearchSpec,
 };
 
 /// Everything a finished search run reports.
@@ -84,6 +85,22 @@ impl SearchSession {
         result
     }
 
+    /// Build the one-pass Pareto frontier over `floors` (fractions of
+    /// the float baseline) with the spec's algorithm, metric, caches,
+    /// and worker pool — one accuracy-exhaustion search per floor, then
+    /// every (budget, floor) sweep cell is an O(1) artifact read. The
+    /// artifact is persisted as `<model>_frontier.json` next to the
+    /// other artifacts; the spec's `checkpoint` path doubles as the
+    /// per-floor decision-log prefix so killed builds resume
+    /// bit-identically.
+    pub fn run_pareto(&mut self, floors: &[f64]) -> Result<FrontierReport> {
+        let spec = self.spec.clone();
+        let mut observers = std::mem::take(&mut self.observers);
+        let result = run_pareto_session(&mut self.ctx, &spec, floors, &mut observers);
+        self.observers = observers;
+        result
+    }
+
     /// Consume the session into a running inference server over `cfg`:
     /// calibration is ensured (and persisted) first — sharded across the
     /// context's pool when `workers > 1` — then the context's already-warm
@@ -119,6 +136,49 @@ impl SearchSession {
             p.sync_scales()
         })
     }
+}
+
+/// The body of [`SearchSession::run_pareto`], with observers already
+/// taken so an error cannot lose registered observers.
+fn run_pareto_session(
+    ctx: &mut ModelContext,
+    spec: &SearchSpec,
+    floors: &[f64],
+    observers: &mut Vec<Box<dyn FnMut(&SearchEvent)>>,
+) -> Result<FrontierReport> {
+    let mut fan = |ev: &SearchEvent| {
+        for obs in observers.iter_mut() {
+            obs(ev);
+        }
+    };
+    ctx.ensure_calibrated_with(Some(&mut fan))?;
+    let sens = ctx.sensitivity_for(spec)?;
+    let float_accuracy = ctx.pipeline.float_val_acc();
+    let mut front = ParetoFront::new(
+        spec.algo,
+        sens.order.clone(),
+        floors.to_vec(),
+        float_accuracy,
+        ctx.cost.clone(),
+        ctx.pipeline.eval_context(),
+    )
+    .resume(spec.resume);
+    if let Some(prefix) = &spec.checkpoint {
+        front = front.checkpoint(prefix);
+    }
+    let mut report = front.build(ctx, Some(&mut fan))?;
+    let (memo_hits, persistent_hits) = ctx.cache_hits();
+    fan(&SearchEvent::CacheReport { memo_hits, persistent_hits });
+    ctx.flush_eval_cache()?;
+    let path = ctx.pipeline.artifacts.dir.join(format!("{}_frontier.json", ctx.model()));
+    report.artifact.save(&path)?;
+    fan(&SearchEvent::FrontierWritten {
+        points: report.artifact.num_points(),
+        pareto: report.artifact.pareto().len(),
+        path: path.display().to_string(),
+    });
+    report.path = Some(path);
+    Ok(report)
 }
 
 /// The body of [`SearchSession::run_algo`], with observers already taken

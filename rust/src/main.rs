@@ -14,7 +14,10 @@
 //! mpq figure --id 1|3|4 [--model M] [--out DIR]  # regenerate figure data
 //! mpq report --sweep --model M --budgets 0.5,0.7 --floors 0.99,0.999
 //! mpq report --sweep --synthetic 24 --checkpoint sweep.ck.json --resume
+//! mpq pareto --model M --floors 0.9,0.99       # one-pass frontier -> <M>_frontier.json
+//! mpq report --sweep --model M --from-frontier artifacts/M_frontier.json
 //! mpq serve --model resnet_s --bits 8 --requests 256
+//! mpq serve --model M --frontier artifacts/M_frontier.json --pick latency<=0.7,acc>=0.99
 //! ```
 //!
 //! Each subcommand parses into a typed argument struct
@@ -26,20 +29,19 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use mpq::api::{
-    log_event, run_search, BackendSpec, Checkpoint, CostModel, ObjectiveSpec, SearchSpec,
-    SyntheticCost, SyntheticEnv, SyntheticStage,
+    build_frontier_synthetic, log_event, run_search, BackendSpec, Checkpoint, CostModel,
+    FrontierArtifact, FrontierReport, ObjectiveSpec, PickSpec, SearchSpec, SyntheticCost,
+    SyntheticEnv, SyntheticStage,
 };
 use mpq::coordinator::{
     calibrate_sharded, hessian_trace_sharded, noise_scores_sharded, ParallelEnv, SearchAlgo,
 };
 use mpq::model::ArtifactIndex;
 use mpq::quant::{CalibrationOptions, QuantConfig, QUANT_BITS};
-use mpq::report::experiments::{
-    self, render_search_table, search_grid, ExperimentCtx, METRIC_TRIALS,
-};
+use mpq::report::experiments::{self, ExperimentCtx, METRIC_TRIALS};
 use mpq::report::{
-    budget_sweep_ctx, budget_sweep_synthetic, cells_to_json, render_sweep, sweep_cells_json,
-    sweep_fingerprint, BudgetKind, SweepCheckpoint, SweepGrid,
+    budget_sweep_from_frontier, budget_sweep_synthetic, cells_to_json, render_sweep,
+    sweep_cells_json, sweep_fingerprint, BudgetKind, Driver, SweepCheckpoint, SweepGrid,
 };
 use mpq::sensitivity::{MetricKind, NoiseOptions};
 use mpq::util::cli::Args;
@@ -75,12 +77,20 @@ COMMANDS
               [--metric hessian] [--seed 0] [--trials 5] [--workers 1]
               [--backend a100|tpu | --table kernels.json]
               [--checkpoint sweep.ck.json [--resume]] [--out DIR]
+              [--from-frontier frontier.json]  (O(1) lookups, no searches)
+              [--abort-after N (synthetic only)]
+  pareto      --model M | --synthetic N
+              [--floors 0.9,0.99] [--algo greedy|bisection]
+              [--metric hessian] [--seed 0] [--trials 5] [--workers 1]
+              [--backend a100|tpu | --table kernels.json]
+              [--checkpoint front.ck [--resume]] [--out frontier.json]
               [--abort-after N (synthetic only)]
   figure      --id 1|3|4 [--model M] [--out DIR]
   ablation    --model M [--target 0.99] [--out DIR]
   serve       --model M [--bits 8] [--requests 256] [--concurrency 8]
               [--workers 2] [--queue-depth 256] [--deadline-ms 0]
               [--max-batch 32] [--wait-us 500]
+              [--frontier frontier.json [--pick latency<=B,size<=B,acc>=F]]
 
 GLOBAL
   --artifacts DIR    artifacts directory (default: $MPQ_ARTIFACTS or ./artifacts)
@@ -113,6 +123,7 @@ enum Command {
     Search(SearchCmd),
     Table(TableCmd),
     Report(ReportCmd),
+    Pareto(ParetoCmd),
     Figure(FigureCmd),
     Ablation(AblationCmd),
     Serve(ServeCmd),
@@ -128,6 +139,7 @@ impl Command {
             "search" => Ok(Command::Search(SearchCmd::parse(args)?)),
             "table" => Ok(Command::Table(TableCmd::parse(args)?)),
             "report" => Ok(Command::Report(ReportCmd::parse(args)?)),
+            "pareto" => Ok(Command::Pareto(ParetoCmd::parse(args)?)),
             "figure" => Ok(Command::Figure(FigureCmd::parse(args)?)),
             "ablation" => Ok(Command::Ablation(AblationCmd::parse(args)?)),
             "serve" => Ok(Command::Serve(ServeCmd::parse(args)?)),
@@ -147,6 +159,7 @@ impl Command {
                 | "search"
                 | "table"
                 | "report"
+                | "pareto"
                 | "figure"
                 | "ablation"
                 | "serve"
@@ -171,6 +184,9 @@ impl Command {
             // Synthetic sweeps need no artifacts at all.
             Command::Report(c) if c.synthetic.is_some() => c.run_synthetic(),
             Command::Report(c) => c.run(&artifacts_dir(args)?),
+            // Synthetic frontier builds need no artifacts at all.
+            Command::Pareto(c) if c.synthetic.is_some() => c.run_synthetic(),
+            Command::Pareto(c) => c.run(&artifacts_dir(args)?),
             Command::Figure(c) => c.run(&artifacts_dir(args)?),
             Command::Ablation(c) => c.run(&artifacts_dir(args)?),
             Command::Serve(c) => c.run(&artifacts_dir(args)?),
@@ -679,35 +695,35 @@ impl TableCmd {
         })
     }
 
-    /// Regenerate paper tables through the spec front door: with
-    /// `--workers > 1` every grid cell calibrates and evaluates on the
-    /// shared pipeline pool, and `--budget-latency`/`--budget-size` turn
-    /// the grid into its latency-budgeted variant.
+    /// Regenerate paper tables through the [`Driver`] front door: one
+    /// open [`mpq::api::SearchSession`] per model supplies the context,
+    /// pool, and caches; with `--workers > 1` every grid cell calibrates
+    /// and evaluates on the shared pipeline pool, and
+    /// `--budget-latency`/`--budget-size` turn the grid into its
+    /// latency-budgeted variant.
     fn run(self, dir: &Path) -> Result<()> {
         let models = all_models(dir, self.model.as_deref())?;
         let mut rendered = String::new();
         for m in &models {
-            let spec = SearchSpec::new(m.as_str())
+            let mut session = SearchSpec::new(m.as_str())
                 .artifacts_dir(dir)
                 .workers(self.workers)
-                .objective(self.objective);
-            let mut ctx = spec.open_context()?;
+                .objective(self.objective)
+                .open()?;
+            let mut driver = Driver::new(&mut session);
+            if let Some(dir_out) = &self.out {
+                driver = driver.sink(dir_out);
+            }
             let text = match self.id {
-                1 => experiments::table1(&mut ctx)?.render(),
+                1 => driver.table1()?.render(),
                 2 | 3 => {
                     let targets: &[f64] = if self.id == 2 { &[0.99, 0.999] } else { &[0.90] };
-                    let cells = search_grid(&mut ctx, targets, 0)?;
-                    if let Some(dir_out) = &self.out {
-                        std::fs::create_dir_all(dir_out)?;
-                        let cell_path = dir_out.join(format!("table{}_{m}.json", self.id));
-                        std::fs::write(cell_path, cells_to_json(&cells))?;
-                    }
-                    render_search_table(
-                        &format!("Table {} — {m} (relative to fp16 baseline)", self.id),
-                        &cells,
-                        targets,
-                    )
-                    .render()
+                    let (table, cells) = driver.search_table(self.id, targets, 0)?;
+                    driver.write_artifact(
+                        &format!("table{}_{m}.json", self.id),
+                        &cells_to_json(&cells),
+                    )?;
+                    table.render()
                 }
                 _ => anyhow::bail!("unknown table id {} (1, 2 or 3)", self.id),
             };
@@ -739,6 +755,11 @@ struct ReportCmd {
     out: Option<PathBuf>,
     /// Synthetic only: error out after N freshly computed cells.
     abort_after: Option<usize>,
+    /// Answer every cell from a prebuilt frontier artifact — no searches.
+    from_frontier: Option<PathBuf>,
+    /// Whether `--algo` was given explicitly (a frontier lookup defaults
+    /// to the artifact's own algorithm instead of greedy).
+    algo_explicit: bool,
 }
 
 impl ReportCmd {
@@ -765,6 +786,8 @@ impl ReportCmd {
             resume: args.flag("resume"),
             out: args.get_str("out").map(PathBuf::from),
             abort_after: args.get_str("abort-after").map(str::parse).transpose()?,
+            from_frontier: args.get_str("from-frontier").map(PathBuf::from),
+            algo_explicit: args.get_str("algo").is_some(),
         };
         cmd.grid.validate()?;
         anyhow::ensure!(
@@ -774,6 +797,10 @@ impl ReportCmd {
         anyhow::ensure!(
             cmd.abort_after.is_none() || cmd.synthetic.is_some(),
             "--abort-after only applies to --synthetic sweeps"
+        );
+        anyhow::ensure!(
+            cmd.abort_after.is_none() || cmd.from_frontier.is_none(),
+            "--abort-after does not apply to --from-frontier lookups (no cell runs a search)"
         );
         anyhow::ensure!(
             !cmd.resume || cmd.checkpoint.is_some(),
@@ -788,6 +815,33 @@ impl ReportCmd {
             }
         }
         Ok(cmd)
+    }
+
+    /// The algorithm a `--from-frontier` sweep reports under: the
+    /// artifact's own, with an explicit `--algo` acting as an assertion.
+    fn frontier_algo(&self, artifact: &FrontierArtifact) -> Result<SearchAlgo> {
+        if self.algo_explicit {
+            anyhow::ensure!(
+                self.algo == artifact.algo,
+                "--algo {} does not match the frontier artifact (built with {})",
+                self.algo.label(),
+                artifact.algo.label()
+            );
+        }
+        Ok(artifact.algo)
+    }
+
+    /// Answer the grid from a frontier artifact: zero searches, byte-
+    /// identical output. The sweep checkpoint (if any) is fingerprinted
+    /// on the *artifact's* fingerprint — which already pins the
+    /// algorithm, floors, layer order, and environment — so frontier
+    /// sweep logs never mix with re-searching sweep logs.
+    fn run_from_frontier(mut self, artifact: &FrontierArtifact, label: &str) -> Result<()> {
+        self.algo = self.frontier_algo(artifact)?;
+        let mut ck = self.attach_checkpoint(&[], &artifact.fingerprint)?;
+        let cells = budget_sweep_from_frontier(artifact, &self.grid, ck.as_mut())?;
+        eprintln!("[sweep] answered {} cells from the frontier artifact (0 searches)", cells.len());
+        self.emit(label, &cells)
     }
 
     /// Render + emit one finished sweep: the Table-2-style grid on stdout,
@@ -833,44 +887,48 @@ impl ReportCmd {
         }
     }
 
-    /// Artifact-backed sweep through the spec front door: calibration,
-    /// sensitivity ordering, and every cell's search all run on the
-    /// context (its shared pool at `--workers > 1`).
+    /// Artifact-backed sweep through the [`Driver`] front door:
+    /// calibration, sensitivity ordering, and every cell's search all run
+    /// on the session's context (its shared pool at `--workers > 1`).
+    /// With `--from-frontier` no context is even opened: the grid is
+    /// answered entirely from the artifact.
     fn run(self, dir: &Path) -> Result<()> {
         let model = self.model.clone().expect("checked in parse");
-        let spec = SearchSpec::new(model.as_str())
+        if let Some(path) = self.from_frontier.clone() {
+            let artifact = FrontierArtifact::load(&path)?;
+            return self.run_from_frontier(&artifact, &model);
+        }
+        let mut session = SearchSpec::new(model.as_str())
             .artifacts_dir(dir)
             .workers(self.workers)
             .algo(self.algo)
             .metric(self.metric)
             .trials(self.trials.max(1))
             .seed(self.seed)
-            .backend(self.backend.clone());
-        let mut ctx = spec.clone().open_context()?;
-        ctx.ensure_calibrated()?;
-        let sens = ctx.sensitivity_for(&spec)?;
-        let env_context = format!(
-            "{}/{}/{}/t{}/seed{}",
-            ctx.pipeline.eval_context(),
-            ctx.cost.provenance(),
-            self.metric.label(),
-            self.trials.max(1),
-            self.seed,
-        );
-        let mut ck = self.attach_checkpoint(&sens.order, &env_context)?;
-        let cells = budget_sweep_ctx(&mut ctx, self.algo, &sens, &self.grid, ck.as_mut())?;
-        ctx.flush_eval_cache()?;
+            .backend(self.backend.clone())
+            .open()?;
+        let mut driver = Driver::new(&mut session);
+        let cells = driver.sweep_with(&self.grid, |order, env_context| {
+            self.attach_checkpoint(order, env_context)
+        })?;
         self.emit(&model, &cells)
     }
 
     /// Artifact-free sweep over the seeded synthetic environment — the CI
-    /// smoke path, including the kill (`--abort-after`) / `--resume` loop.
+    /// smoke path, including the kill (`--abort-after`) / `--resume` loop
+    /// and the `--from-frontier` byte-identity check.
     fn run_synthetic(self) -> Result<()> {
         let layers = self.synthetic.expect("checked in parse");
         // The synthetic ordering is the identity permutation; layer count
         // and seed (which fully determine the environment) are in the
         // context string.
         let order: Vec<usize> = (0..layers).collect();
+        if let Some(path) = self.from_frontier.clone() {
+            let artifact = FrontierArtifact::load(&path)?;
+            let algo = self.frontier_algo(&artifact)?;
+            artifact.verify(algo, &order, &format!("synthetic/n{layers}/seed{}", self.seed))?;
+            return self.run_from_frontier(&artifact, "synthetic");
+        }
         let mut ck =
             self.attach_checkpoint(&order, &format!("synthetic/n{layers}/seed{}", self.seed))?;
         let cells = budget_sweep_synthetic(
@@ -883,6 +941,149 @@ impl ReportCmd {
             self.abort_after,
         )?;
         self.emit("synthetic", &cells)
+    }
+}
+
+// ---------------------------------------------------------------- pareto
+
+/// `mpq pareto` — build the one-pass Pareto frontier artifact: one
+/// accuracy-exhaustion search per `--floors` entry, emitted as
+/// `<model>_frontier.json` so every later `report --sweep
+/// --from-frontier` cell and `serve --frontier --pick` selection is an
+/// O(1) read.
+struct ParetoCmd {
+    model: Option<String>,
+    synthetic: Option<usize>,
+    floors: Vec<f64>,
+    algo: SearchAlgo,
+    metric: MetricKind,
+    seed: u64,
+    trials: usize,
+    workers: usize,
+    backend: BackendSpec,
+    checkpoint: Option<PathBuf>,
+    resume: bool,
+    out: Option<PathBuf>,
+    /// Synthetic only: error out after N decision evaluations (the CI
+    /// kill/resume smoke).
+    abort_after: Option<usize>,
+}
+
+impl ParetoCmd {
+    fn parse(args: &Args) -> Result<Self> {
+        let cmd = Self {
+            model: args.get_str("model").map(String::from),
+            synthetic: args.get_str("synthetic").map(str::parse).transpose()?,
+            floors: parse_f64_list(args, "floors", &[0.9, 0.99])?,
+            algo: args.get_str("algo").unwrap_or("greedy").parse()?,
+            metric: args.get_or("metric", MetricKind::Hessian)?,
+            seed: args.get_or("seed", 0u64)?,
+            trials: args.get_or("trials", METRIC_TRIALS)?,
+            workers: args.get_or("workers", 1usize)?.max(1),
+            backend: parse_backend(args)?,
+            checkpoint: args.get_str("checkpoint").map(PathBuf::from),
+            resume: args.flag("resume"),
+            out: args.get_str("out").map(PathBuf::from),
+            abort_after: args.get_str("abort-after").map(str::parse).transpose()?,
+        };
+        anyhow::ensure!(
+            cmd.model.is_some() != cmd.synthetic.is_some(),
+            "pareto needs exactly one of --model M or --synthetic N"
+        );
+        anyhow::ensure!(
+            cmd.abort_after.is_none() || cmd.synthetic.is_some(),
+            "--abort-after only applies to --synthetic frontier builds"
+        );
+        anyhow::ensure!(
+            !cmd.resume || cmd.checkpoint.is_some(),
+            "--resume requires a --checkpoint path"
+        );
+        if cmd.synthetic.is_some() {
+            for flag in ["metric", "trials", "backend"] {
+                anyhow::ensure!(
+                    args.get_str(flag).is_none(),
+                    "--{flag} does not apply to --synthetic frontier builds"
+                );
+            }
+        }
+        Ok(cmd)
+    }
+
+    /// Stable single-line summary for scripts: artifact-derived fields
+    /// only, so a fresh build and a kill/resumed one print the same
+    /// `RESULT` line (build stats go to stderr).
+    fn emit(&self, report: &FrontierReport, path: &Path) {
+        eprintln!(
+            "[frontier] built in {:.2}s: {} decision evals ({} replayed from checkpoint) -> {}",
+            report.build_seconds,
+            report.decision_evals,
+            report.replayed_decisions,
+            path.display()
+        );
+        let summary = Value::obj(vec![
+            ("fingerprint", Value::Str(report.artifact.fingerprint.clone())),
+            ("floors", Value::Num(report.artifact.trails.len() as f64)),
+            ("points", Value::Num(report.artifact.num_points() as f64)),
+            ("pareto", Value::Num(report.artifact.pareto().len() as f64)),
+        ]);
+        println!("RESULT {summary}");
+    }
+
+    /// Artifact-backed frontier build through
+    /// [`mpq::api::SearchSession::run_pareto`]: calibration, sensitivity,
+    /// and every floor's exhaustion search share the session's context,
+    /// pool, and eval cache.
+    fn run(self, dir: &Path) -> Result<()> {
+        let model = self.model.clone().expect("checked in parse");
+        let mut spec = SearchSpec::new(model.as_str())
+            .artifacts_dir(dir)
+            .workers(self.workers)
+            .algo(self.algo)
+            .metric(self.metric)
+            .trials(self.trials.max(1))
+            .seed(self.seed)
+            .backend(self.backend.clone())
+            .resume(self.resume);
+        if let Some(ck) = &self.checkpoint {
+            spec = spec.checkpoint(ck);
+        }
+        let mut session = spec.open()?;
+        session.on_event(log_event);
+        let report = session.run_pareto(&self.floors)?;
+        let path = match &self.out {
+            // --out re-saves the identical artifact at the requested path
+            // (the canonical copy stays next to the model artifacts).
+            Some(out) => {
+                report.artifact.save(out)?;
+                out.clone()
+            }
+            None => report.path.clone().expect("run_pareto always persists"),
+        };
+        self.emit(&report, &path);
+        Ok(())
+    }
+
+    /// Artifact-free frontier build over the seeded synthetic
+    /// environment — the CI smoke path, including the kill
+    /// (`--abort-after`) / `--resume` loop.
+    fn run_synthetic(self) -> Result<()> {
+        let layers = self.synthetic.expect("checked in parse");
+        let mut observer = log_event;
+        let report = build_frontier_synthetic(
+            layers,
+            self.seed,
+            self.workers,
+            self.algo,
+            &self.floors,
+            self.checkpoint.as_deref(),
+            self.resume,
+            self.abort_after,
+            Some(&mut observer),
+        )?;
+        let path = self.out.clone().unwrap_or_else(|| PathBuf::from("synthetic_frontier.json"));
+        report.artifact.save(&path)?;
+        self.emit(&report, &path);
+        Ok(())
     }
 }
 
@@ -983,13 +1184,10 @@ impl AblationCmd {
     }
 
     fn run(self, dir: &Path) -> Result<()> {
-        let mut ctx = ExperimentCtx::new(dir, &self.model)?;
+        let mut session = SearchSpec::new(self.model.as_str()).artifacts_dir(dir).open()?;
+        let mut driver = Driver::new(&mut session);
         let mut rendered = String::new();
-        for table in [
-            mpq::report::ablation::weight_only(&mut ctx, self.target)?,
-            mpq::report::ablation::accelerators(&mut ctx)?,
-            mpq::report::ablation::adjustment(dir, &self.model)?,
-        ] {
+        for table in driver.ablation(self.target)? {
             let text = table.render();
             println!("{text}");
             rendered.push_str(&text);
@@ -1009,17 +1207,23 @@ struct ServeCmd {
     bits: f32,
     requests: usize,
     concurrency: usize,
+    /// Serve a frontier-picked mixed-precision config instead of a
+    /// uniform bit-width.
+    frontier: Option<PathBuf>,
+    pick: Option<PickSpec>,
     opts: mpq::server::ServeOptions,
 }
 
 impl ServeCmd {
     fn parse(args: &Args) -> Result<Self> {
         let deadline_ms = args.get_or("deadline-ms", 0u64)?;
-        Ok(Self {
+        let cmd = Self {
             model: args.req_str("model")?.to_string(),
             bits: args.get_or("bits", 8.0f32)?,
             requests: args.get_or("requests", 256usize)?,
             concurrency: args.get_or("concurrency", 8usize)?.max(1),
+            frontier: args.get_str("frontier").map(PathBuf::from),
+            pick: args.get_str("pick").map(str::parse).transpose()?,
             opts: mpq::server::ServeOptions {
                 max_batch: args.get_or("max-batch", 32usize)?,
                 max_wait: std::time::Duration::from_micros(args.get_or("wait-us", 500u64)?),
@@ -1028,7 +1232,16 @@ impl ServeCmd {
                 deadline: (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms)),
                 ..Default::default()
             },
-        })
+        };
+        anyhow::ensure!(
+            cmd.pick.is_none() || cmd.frontier.is_some(),
+            "--pick requires --frontier frontier.json"
+        );
+        anyhow::ensure!(
+            args.get_str("bits").is_none() || cmd.frontier.is_none(),
+            "--bits and --frontier are mutually exclusive (the frontier picks the config)"
+        );
+        Ok(cmd)
     }
 
     /// Drive the batched multi-worker server with concurrent clients and
@@ -1050,7 +1263,32 @@ impl ServeCmd {
         let examples: Vec<mpq::runtime::HostTensor> =
             (0..self.requests).map(|i| val.x.slice_rows(i % val_count, 1)).collect();
 
-        let cfg = QuantConfig::uniform(n, self.bits);
+        // Config selection: a frontier pick (best accuracy under the
+        // --pick constraints, straight from the artifact — no search at
+        // serve time) or the uniform --bits fallback.
+        let (cfg, cfg_desc) = match &self.frontier {
+            Some(path) => {
+                let artifact = FrontierArtifact::load(path)?;
+                let pick = self.pick.unwrap_or_default();
+                let point = artifact.pick(&pick)?;
+                anyhow::ensure!(
+                    point.config.bits_w.len() == n,
+                    "frontier config has {} layers but {model} has {n}",
+                    point.config.bits_w.len()
+                );
+                eprintln!(
+                    "[serve] frontier pick {}: accuracy={:.2}% rel_latency={:.2}% \
+                     rel_size={:.2}% ({})",
+                    pick.describe(),
+                    point.accuracy * 100.0,
+                    point.rel_latency * 100.0,
+                    point.rel_size * 100.0,
+                    point.cost_provenance,
+                );
+                (point.config.clone(), "frontier pick".to_string())
+            }
+            None => (QuantConfig::uniform(n, self.bits), format!("uniform {}b", self.bits)),
+        };
         let (handle, join) = session.into_server(cfg, self.opts)?;
 
         let t0 = std::time::Instant::now();
@@ -1072,11 +1310,10 @@ impl ServeCmd {
         handle.shutdown();
         join.join().map_err(|_| anyhow::anyhow!("serve dispatcher panicked"))?;
         println!(
-            "served {} requests in {wall:.2}s ({:.1} req/s) @ uniform {}b \
+            "served {} requests in {wall:.2}s ({:.1} req/s) @ {cfg_desc} \
              x{concurrency} clients ({} batches)",
             stats.requests,
             stats.requests as f64 / wall,
-            self.bits,
             stats.batches,
         );
         println!(

@@ -6,15 +6,128 @@ pub mod sweep;
 mod table;
 
 pub use sweep::{
-    budget_sweep, budget_sweep_ctx, budget_sweep_synthetic, render_sweep, sweep_cells_json,
-    sweep_fingerprint, BudgetKind, SweepCell, SweepCheckpoint, SweepGrid,
+    budget_sweep, budget_sweep_ctx, budget_sweep_from_frontier, budget_sweep_synthetic,
+    render_sweep, sweep_cells_json, sweep_fingerprint, BudgetKind, SweepCell, SweepCheckpoint,
+    SweepGrid,
 };
 pub use table::Table;
 
+use std::path::PathBuf;
+
+use crate::api::SearchSession;
 use crate::coordinator::SearchAlgo;
 use crate::quant::QuantConfig;
 use crate::sensitivity::MetricKind;
 use crate::util::json::Value;
+use crate::Result;
+
+/// One front door for every report: tables, ablations, and sweeps all
+/// drive the *same* open [`SearchSession`] — its calibrated context,
+/// worker pool, eval cache, and spec — instead of each entry point
+/// re-building its own context. An optional `sink` directory collects
+/// rendered artifacts via [`Driver::write_artifact`].
+pub struct Driver<'s> {
+    session: &'s mut SearchSession,
+    sink: Option<PathBuf>,
+}
+
+impl<'s> Driver<'s> {
+    pub fn new(session: &'s mut SearchSession) -> Self {
+        Self { session, sink: None }
+    }
+
+    /// Collect rendered artifacts under `dir`.
+    pub fn sink(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.sink = Some(dir.into());
+        self
+    }
+
+    /// The driven session (reports may inspect `session.ctx` directly).
+    pub fn session(&mut self) -> &mut SearchSession {
+        self.session
+    }
+
+    /// Write `text` as `<sink>/<name>` when a sink directory is set; a
+    /// no-op otherwise.
+    pub fn write_artifact(&self, name: &str, text: &str) -> Result<()> {
+        if let Some(dir) = &self.sink {
+            std::fs::create_dir_all(dir)?;
+            std::fs::write(dir.join(name), text)?;
+        }
+        Ok(())
+    }
+
+    /// Table 1 — sensitivity metric agreement (see
+    /// [`experiments::table1`]).
+    pub fn table1(&mut self) -> Result<Table> {
+        experiments::table1(&mut self.session.ctx)
+    }
+
+    /// Table 2/3 — the (algo × metric) search grid at `targets`,
+    /// rendered with the session's model in the title.
+    pub fn search_table(
+        &mut self,
+        id: u32,
+        targets: &[f64],
+        seed: u64,
+    ) -> Result<(Table, Vec<CellResult>)> {
+        let model = self.session.ctx.model();
+        let cells = experiments::search_grid(&mut self.session.ctx, targets, seed)?;
+        let table = experiments::render_search_table(
+            &format!("Table {id} — {model} (relative to fp16 baseline)"),
+            &cells,
+            targets,
+        );
+        Ok((table, cells))
+    }
+
+    /// The ablation triple: weight-only quantization, accelerator cost
+    /// models, and scale adjustment.
+    pub fn ablation(&mut self, target_frac: f64) -> Result<Vec<Table>> {
+        let ctx = &mut self.session.ctx;
+        let dir = ctx.pipeline.artifacts.dir.clone();
+        let model = ctx.model();
+        Ok(vec![
+            ablation::weight_only(ctx, target_frac)?,
+            ablation::accelerators(ctx)?,
+            ablation::adjustment(&dir, &model)?,
+        ])
+    }
+
+    /// The budget × accuracy-floor sweep over the session's spec
+    /// (algorithm, metric, seed, cost backend). `attach` is handed the
+    /// sensitivity order and the full environment context and may return
+    /// a [`SweepCheckpoint`] to make the sweep kill/resumable — this is
+    /// where the env-context assembly every sweep caller used to
+    /// duplicate now lives.
+    pub fn sweep_with(
+        &mut self,
+        grid: &SweepGrid,
+        attach: impl FnOnce(&[usize], &str) -> Result<Option<SweepCheckpoint>>,
+    ) -> Result<Vec<SweepCell>> {
+        let spec = self.session.spec().clone();
+        let ctx = &mut self.session.ctx;
+        ctx.ensure_calibrated()?;
+        let sens = ctx.sensitivity_for(&spec)?;
+        let env_context = format!(
+            "{}/{}/{}/t{}/seed{}",
+            ctx.pipeline.eval_context(),
+            ctx.cost.provenance(),
+            spec.metric.label(),
+            spec.trials.max(1),
+            spec.seed,
+        );
+        let mut ck = attach(&sens.order, &env_context)?;
+        let cells = sweep::budget_sweep_ctx(ctx, spec.algo, &sens, grid, ck.as_mut())?;
+        ctx.flush_eval_cache()?;
+        Ok(cells)
+    }
+
+    /// [`Driver::sweep_with`] without a checkpoint.
+    pub fn sweep(&mut self, grid: &SweepGrid) -> Result<Vec<SweepCell>> {
+        self.sweep_with(grid, |_, _| Ok(None))
+    }
+}
 
 /// One cell of Table 2/3: a (model, target, search, metric) combination.
 #[derive(Debug, Clone)]

@@ -23,7 +23,8 @@ use std::sync::Arc;
 use anyhow::{bail, ensure, Context as _};
 
 use crate::api::{
-    run_search, CostModel, ModelContext, ObjectiveSpec, SyntheticCost, SyntheticEnv,
+    run_search, CostModel, FrontierArtifact, ModelContext, ObjectiveSpec, SyntheticCost,
+    SyntheticEnv,
 };
 use crate::coordinator::{ParallelEnv, SearchAlgo};
 use crate::quant::QUANT_BITS;
@@ -394,8 +395,35 @@ fn finish_cell(
     outcome: &crate::coordinator::SearchOutcome,
     cost: &dyn CostModel,
 ) -> SweepCell {
-    let rel_latency = cost.rel_latency(&outcome.config);
-    let rel_size = cost.rel_size(&outcome.config);
+    cell_from_metrics(
+        kind,
+        budget,
+        floor,
+        abs_floor,
+        outcome.accuracy,
+        cost.rel_latency(&outcome.config),
+        cost.rel_size(&outcome.config),
+        outcome.evals,
+        cost.provenance().to_string(),
+    )
+}
+
+/// Synthesize a [`SweepCell`] from already-known metrics — the one place
+/// the met-floor/met-budget display tolerances live, shared by the
+/// re-searching path ([`finish_cell`]) and the frontier lookup so both
+/// produce identical cells from identical numbers.
+#[allow(clippy::too_many_arguments)]
+fn cell_from_metrics(
+    kind: BudgetKind,
+    budget: f64,
+    floor: f64,
+    abs_floor: f64,
+    accuracy: f64,
+    rel_latency: f64,
+    rel_size: f64,
+    evals: usize,
+    cost_provenance: String,
+) -> SweepCell {
     let met_budget = match kind {
         BudgetKind::Latency => rel_latency <= budget + 1e-12,
         BudgetKind::Size => rel_size <= budget + 1e-12,
@@ -403,14 +431,63 @@ fn finish_cell(
     SweepCell {
         budget,
         floor,
-        accuracy: outcome.accuracy,
+        accuracy,
         rel_latency,
         rel_size,
-        met_floor: outcome.accuracy >= abs_floor - 1e-12,
+        met_floor: accuracy >= abs_floor - 1e-12,
         met_budget,
-        evals: outcome.evals,
-        cost_provenance: cost.provenance().to_string(),
+        evals,
+        cost_provenance,
     }
+}
+
+/// Answer the whole grid from a prebuilt [`FrontierArtifact`] — no
+/// searches at all. Because budgets only choose *where to stop* on a
+/// floor's accuracy-exhaustion trajectory (see `api/objective.rs`), the
+/// cell a budgeted search would produce is exactly the *first* trail
+/// point whose swept relative cost meets the budget (the same exact `<=`
+/// the budget objective's `satisfied` uses), with
+/// `evals = point.decisions + 1` for the search's final evaluation; a
+/// never-met budget runs to exhaustion and lands on the trail's last
+/// point. Cells come out byte-identical to the re-searching
+/// [`budget_sweep_ctx`]/[`budget_sweep_synthetic`] — at any worker count
+/// — and the ordinary [`SweepCheckpoint`] kill/resume discipline still
+/// applies, so the two paths are interchangeable mid-sweep.
+pub fn budget_sweep_from_frontier(
+    artifact: &FrontierArtifact,
+    grid: &SweepGrid,
+    checkpoint: Option<&mut SweepCheckpoint>,
+) -> Result<Vec<SweepCell>> {
+    let kind = grid.kind;
+    budget_sweep(grid, checkpoint, |budget, floor, _ospec| {
+        let trail = artifact.trail_for(floor).ok_or_else(|| {
+            anyhow::anyhow!(
+                "frontier artifact has no trail for floor {floor} (available: {:?}); rebuild \
+                 the frontier with this floor",
+                artifact.floors()
+            )
+        })?;
+        let rel = |p: &crate::api::FrontierPoint| match kind {
+            BudgetKind::Latency => p.rel_latency,
+            BudgetKind::Size => p.rel_size,
+        };
+        let (point, evals) = match trail.points.iter().find(|p| rel(p) <= budget) {
+            Some(p) => (p, p.decisions + 1),
+            // Budget never met: the search ran to exhaustion.
+            None => (trail.points.last().expect("non-empty trail"), trail.decisions + 1),
+        };
+        Ok(cell_from_metrics(
+            kind,
+            budget,
+            floor,
+            trail.abs_floor,
+            point.accuracy,
+            point.rel_latency,
+            point.rel_size,
+            evals,
+            point.cost_provenance.clone(),
+        ))
+    })
 }
 
 /// Render the sweep like Table 2: one row per budget, a column group per

@@ -117,32 +117,73 @@ pub fn compute(
     }
 }
 
-/// Read an on-disk sensitivity score cache, returning the scores only when
-/// the file's schema `version` and layer count match. Anything else —
-/// missing file, unparsable JSON, an unversioned v1 file, a score vector
-/// for a different model shape — yields `None` so stale scores are
-/// recomputed, never trusted (v1: sequentially shared Hessian RNG; v2:
-/// trial-seeded Hessian but serial shared-RNG noise).
-pub fn load_score_cache(path: &Path, version: usize, layers: usize) -> Option<Vec<f64>> {
-    let v = json::parse(&std::fs::read_to_string(path).ok()?).ok()?;
-    let file_version = v.req("version").ok().and_then(|x| x.as_usize().ok()).unwrap_or(1);
-    if file_version != version {
-        return None;
-    }
-    let scores: Vec<f64> =
-        v.req("scores").ok()?.as_arr().ok()?.iter().filter_map(|x| x.as_f64().ok()).collect();
-    (scores.len() == layers).then_some(scores)
+/// A versioned on-disk sensitivity score cache: one struct owns the path
+/// layout and the schema gating that used to live in free
+/// `load_score_cache`/`save_score_cache` helpers, so the sensitivity
+/// cache and the frontier artifact share one versioned-cache idiom.
+#[derive(Debug, Clone)]
+pub struct ScoreCache {
+    path: std::path::PathBuf,
+    version: usize,
 }
 
-/// Write a sensitivity score cache `load_score_cache` will accept back.
-/// Best-effort: the cache is an optimization, so write failures are
-/// swallowed.
-pub fn save_score_cache(path: &Path, version: usize, scores: &[f64]) {
-    let v = Value::obj(vec![
-        ("version", Value::Num(version as f64)),
-        ("scores", Value::Arr(scores.iter().map(|&s| Value::Num(s)).collect())),
-    ]);
-    let _ = std::fs::write(path, v.to_string());
+impl ScoreCache {
+    /// Current schema version. History: v1 wrote unversioned files from
+    /// the sequentially shared Hessian RNG; v2 moved the Hessian to
+    /// trial-addressed seeds but kept serial shared-RNG noise; v3 is the
+    /// sharded (layer, trial)-addressed noise metric. Older files are
+    /// rejected on load and recomputed.
+    pub const VERSION: usize = 3;
+
+    /// A cache at an explicit `path` gated on `version` (tests use this
+    /// to fabricate stale files; production callers want
+    /// [`ScoreCache::for_model`]).
+    pub fn new(path: impl Into<std::path::PathBuf>, version: usize) -> Self {
+        Self { path: path.into(), version }
+    }
+
+    /// The canonical per-model layout at the current version:
+    /// `<dir>/<model>_sens_<metric>_<trials>_<seed>.json`.
+    pub fn for_model(
+        dir: &Path,
+        model: &str,
+        metric: MetricKind,
+        trials: usize,
+        seed: u64,
+    ) -> Self {
+        let name = format!("{model}_sens_{}_{trials}_{seed}.json", metric.label().to_lowercase());
+        Self::new(dir.join(name), Self::VERSION)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Read the cached scores, returning them only when the file's schema
+    /// version and layer count match. Anything else — missing file,
+    /// unparsable JSON, an unversioned v1 file, a score vector for a
+    /// different model shape — yields `None` so stale scores are
+    /// recomputed, never trusted.
+    pub fn load(&self, layers: usize) -> Option<Vec<f64>> {
+        let v = json::parse(&std::fs::read_to_string(&self.path).ok()?).ok()?;
+        let file_version = v.req("version").ok().and_then(|x| x.as_usize().ok()).unwrap_or(1);
+        if file_version != self.version {
+            return None;
+        }
+        let scores: Vec<f64> =
+            v.req("scores").ok()?.as_arr().ok()?.iter().filter_map(|x| x.as_f64().ok()).collect();
+        (scores.len() == layers).then_some(scores)
+    }
+
+    /// Write scores [`ScoreCache::load`] will accept back. Best-effort:
+    /// the cache is an optimization, so write failures are swallowed.
+    pub fn save(&self, scores: &[f64]) {
+        let v = Value::obj(vec![
+            ("version", Value::Num(self.version as f64)),
+            ("scores", Value::Arr(scores.iter().map(|&s| Value::Num(s)).collect())),
+        ]);
+        let _ = std::fs::write(&self.path, v.to_string());
+    }
 }
 
 /// Levenshtein (edit) distance between two orderings — the paper's measure

@@ -25,6 +25,13 @@
 //! closes the queue; the dispatcher drains everything already admitted,
 //! then drops the worker pool — which joins the worker threads — and the
 //! `JoinHandle` returned by [`spawn`] becomes joinable.
+//!
+//! Config selection at startup is the caller's job: `mpq serve` either
+//! takes a uniform `--bits` width or resolves `--frontier f.json --pick
+//! latency<=B,acc>=F` through [`crate::api::FrontierArtifact::pick`] —
+//! the best Pareto point under the constraints, read straight from the
+//! frontier artifact with no search at serve time. The engine itself is
+//! config-agnostic: it serves whatever [`QuantConfig`] it is handed.
 
 mod dispatch;
 mod queue;

@@ -1,0 +1,268 @@
+//! End-to-end properties of the one-pass Pareto frontier: the
+//! `<model>_frontier.json` artifact built by one accuracy-exhaustion
+//! search per floor must answer every budget × accuracy-floor sweep cell
+//! *byte-identically* to re-searching it — at 1, 2, and 8 workers, for
+//! both budget kinds — while a killed build resumes from its per-floor
+//! decision logs into the exact same artifact. Mirrors what the CI
+//! `mpq pareto` / `mpq report --sweep --from-frontier` smoke does end to
+//! end through the binary.
+
+use mpq::api::{
+    build_frontier_synthetic, run_search, AccuracyTarget, FrontierArtifact, FrontierPoint,
+    FrontierReport, PickSpec, SearchEvent, SyntheticEnv,
+};
+use mpq::coordinator::{ParallelEnv, SearchAlgo};
+use mpq::quant::QUANT_BITS;
+use mpq::report::{
+    budget_sweep_from_frontier, budget_sweep_synthetic, render_sweep, sweep_cells_json,
+    BudgetKind, SweepGrid,
+};
+
+const LAYERS: usize = 20;
+const SEED: u64 = 7;
+const FLOORS: [f64; 3] = [0.9, 0.97, 0.99];
+
+fn grid(kind: BudgetKind) -> SweepGrid {
+    SweepGrid { kind, budgets: vec![0.55, 0.7, 0.9], floors: FLOORS.to_vec() }
+}
+
+fn build(workers: usize) -> FrontierReport {
+    build_frontier_synthetic(
+        LAYERS,
+        SEED,
+        workers,
+        SearchAlgo::Greedy,
+        &FLOORS,
+        None,
+        false,
+        None,
+        None,
+    )
+    .unwrap()
+}
+
+#[test]
+fn frontier_lookup_reproduces_the_sweep_cell_for_cell() {
+    // One artifact answers both budget kinds: the trails record both
+    // relative costs for every committed configuration.
+    let artifact = build(1).artifact;
+    for kind in [BudgetKind::Latency, BudgetKind::Size] {
+        let g = grid(kind);
+        // `budget_sweep_from_frontier` takes no environment at all — the
+        // zero-searches claim is structural, not just asserted.
+        let looked_up = budget_sweep_from_frontier(&artifact, &g, None).unwrap();
+        assert_eq!(looked_up.len(), 9);
+        for workers in [1usize, 2, 8] {
+            let searched =
+                budget_sweep_synthetic(LAYERS, SEED, workers, SearchAlgo::Greedy, &g, None, None)
+                    .unwrap();
+            assert_eq!(
+                sweep_cells_json(&looked_up),
+                sweep_cells_json(&searched),
+                "{} sweep at {workers} workers: RESULT diff",
+                g.kind.label()
+            );
+            assert_eq!(
+                render_sweep("sweep", &g, &looked_up).render(),
+                render_sweep("sweep", &g, &searched).render(),
+                "{} sweep at {workers} workers: rendered report diff",
+                g.kind.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn worker_count_never_changes_the_artifact() {
+    let one = build(1).artifact.to_json().to_string();
+    let two = build(2).artifact.to_json().to_string();
+    assert_eq!(one, two, "frontier artifact must be byte-identical across worker counts");
+}
+
+#[test]
+fn frontier_build_costs_one_exhaustion_search_per_floor() {
+    // Count Decision events in the build's own stream and check them
+    // against the report and against standalone accuracy-only searches.
+    let mut streamed = 0usize;
+    let mut obs = |ev: &SearchEvent| {
+        if matches!(ev, SearchEvent::Decision { .. }) {
+            streamed += 1;
+        }
+    };
+    let report = build_frontier_synthetic(
+        LAYERS,
+        SEED,
+        1,
+        SearchAlgo::Greedy,
+        &FLOORS,
+        None,
+        false,
+        None,
+        Some(&mut obs),
+    )
+    .unwrap();
+    assert_eq!(report.decision_evals, streamed, "event stream and report disagree");
+    assert_eq!(report.replayed_decisions, 0);
+    let per_floor: usize = report.artifact.trails.iter().map(|t| t.decisions).sum();
+    assert_eq!(report.decision_evals, per_floor);
+
+    for trail in &report.artifact.trails {
+        // The same floor as a standalone accuracy-exhaustion search: the
+        // frontier build must have spent exactly this search's decision
+        // evals on it, ending at the same configuration and accuracy.
+        let env = SyntheticEnv::new(LAYERS, SEED);
+        let order = env.order();
+        let mut penv = ParallelEnv::new(&env, 1);
+        // The synthetic float baseline is exactly 1.0: floor = abs floor.
+        let objective = AccuracyTarget::new(trail.floor);
+        let outcome = run_search(
+            SearchAlgo::Greedy,
+            &mut penv,
+            &order,
+            &QUANT_BITS,
+            &objective,
+            None,
+            None,
+        )
+        .unwrap();
+        assert_eq!(outcome.evals, trail.decisions + 1, "floor {}", trail.floor);
+        let last = trail.points.last().unwrap();
+        assert_eq!(outcome.config, last.config, "floor {}", trail.floor);
+        assert_eq!(outcome.accuracy, last.accuracy, "floor {}", trail.floor);
+    }
+}
+
+#[test]
+fn aborted_frontier_build_resumes_byte_identically() {
+    let full = build(1);
+    let full_json = full.artifact.to_json().to_string();
+
+    let prefix = std::env::temp_dir().join("mpq_frontier_ck_resume");
+    let cleanup = || {
+        for i in 0..FLOORS.len() {
+            let _ = std::fs::remove_file(format!("{}.floor{i}", prefix.display()));
+        }
+    };
+    cleanup();
+
+    // Kill the build mid-floor: the synthetic env errors after 10 raw
+    // evaluations, well inside floor 0's exhaustion search.
+    let err = build_frontier_synthetic(
+        LAYERS,
+        SEED,
+        1,
+        SearchAlgo::Greedy,
+        &FLOORS,
+        Some(&prefix),
+        false,
+        Some(10),
+        None,
+    )
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("abort"), "{err:#}");
+
+    // Resume: recorded decisions replay from the per-floor logs, the
+    // rest run fresh — and the artifact byte-matches the uninterrupted
+    // build.
+    let resumed = build_frontier_synthetic(
+        LAYERS,
+        SEED,
+        1,
+        SearchAlgo::Greedy,
+        &FLOORS,
+        Some(&prefix),
+        true,
+        None,
+        None,
+    )
+    .unwrap();
+    assert!(resumed.replayed_decisions > 0, "the killed build's decisions must replay");
+    assert_eq!(resumed.artifact.to_json().to_string(), full_json, "resumed artifact diff");
+    cleanup();
+}
+
+#[test]
+fn pareto_set_matches_a_brute_force_filter() {
+    let artifact = build(1).artifact;
+    assert!(artifact.num_points() > FLOORS.len(), "trails should record intermediate points");
+
+    // Independent brute force: keep the first point per distinct config,
+    // then drop everything some other recorded point dominates.
+    let mut seen = std::collections::HashSet::new();
+    let mut distinct: Vec<&FrontierPoint> = Vec::new();
+    for trail in &artifact.trails {
+        for p in &trail.points {
+            if seen.insert(p.config.key()) {
+                distinct.push(p);
+            }
+        }
+    }
+    let brute: Vec<&FrontierPoint> = distinct
+        .iter()
+        .filter(|p| !distinct.iter().any(|q| q.dominates(p)))
+        .copied()
+        .collect();
+
+    let pareto = artifact.pareto();
+    assert!(!pareto.is_empty());
+    assert_eq!(
+        pareto.iter().map(|p| p.config.key()).collect::<Vec<_>>(),
+        brute.iter().map(|p| p.config.key()).collect::<Vec<_>>(),
+    );
+    // And the defining property, point by point.
+    for p in &distinct {
+        let dominated = distinct.iter().any(|q| q.dominates(p));
+        let kept = pareto.iter().any(|q| q.config.key() == p.config.key());
+        assert_eq!(kept, !dominated);
+    }
+}
+
+#[test]
+fn frontier_pick_selects_the_most_accurate_point_within_budget() {
+    let artifact = build(1).artifact;
+    let spec: PickSpec = "latency<=0.7".parse().unwrap();
+    let picked = artifact.pick(&spec).unwrap();
+    assert!(picked.rel_latency <= 0.7);
+    for p in artifact.pareto() {
+        if p.rel_latency <= 0.7 {
+            assert!(p.accuracy <= picked.accuracy, "pick must maximize accuracy");
+        }
+    }
+    // An unsatisfiable constraint fails loudly instead of degrading.
+    let impossible = artifact.pick(&"latency<=0.0001".parse().unwrap());
+    assert!(impossible.unwrap_err().to_string().contains("no frontier point"));
+}
+
+#[test]
+fn mismatched_or_stale_artifacts_are_rejected() {
+    let artifact = build(1).artifact;
+    let order: Vec<usize> = (0..LAYERS).collect();
+    let env = format!("synthetic/n{LAYERS}/seed{SEED}");
+    artifact.verify(SearchAlgo::Greedy, &order, &env).unwrap();
+    // Wrong algorithm, order, or environment (e.g. another seed) all
+    // change the fingerprint.
+    for err in [
+        artifact.verify(SearchAlgo::Bisection, &order, &env).unwrap_err(),
+        artifact.verify(SearchAlgo::Greedy, &order, "synthetic/n20/seed8").unwrap_err(),
+    ] {
+        assert!(err.to_string().contains("different search"), "{err}");
+    }
+
+    // Save/load round-trips byte-identically; a tampered version is
+    // refused at load.
+    let path = std::env::temp_dir().join("mpq_frontier_roundtrip.json");
+    artifact.save(&path).unwrap();
+    let loaded = FrontierArtifact::load(&path).unwrap();
+    assert_eq!(loaded.to_json().to_string(), artifact.to_json().to_string());
+    let mut text = std::fs::read_to_string(&path).unwrap();
+    text = text.replacen("\"version\":1", "\"version\":999", 1);
+    std::fs::write(&path, text).unwrap();
+    let err = FrontierArtifact::load(&path).unwrap_err();
+    assert!(format!("{err:#}").contains("version"), "{err:#}");
+    let _ = std::fs::remove_file(&path);
+
+    // A floor the artifact never searched cannot be looked up.
+    let g = SweepGrid { kind: BudgetKind::Latency, budgets: vec![0.7], floors: vec![0.95] };
+    let err = budget_sweep_from_frontier(&artifact, &g, None).unwrap_err();
+    assert!(err.to_string().contains("no trail for floor"), "{err}");
+}

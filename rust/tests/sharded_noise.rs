@@ -9,7 +9,7 @@
 
 use mpq::api::{ModelContext, SyntheticStage};
 use mpq::coordinator::{noise_scores_sharded, StageRunner};
-use mpq::sensitivity::{load_score_cache, save_score_cache};
+use mpq::sensitivity::ScoreCache;
 use mpq::util::json::{self, Value};
 use mpq::util::rng::noise_seed;
 
@@ -87,7 +87,9 @@ fn tmp(name: &str) -> std::path::PathBuf {
 fn stale_v1_and_v2_sensitivity_caches_are_recomputed() {
     let version = ModelContext::SENS_CACHE_VERSION;
     assert!(version >= 3, "sharded noise requires the v3 cache bump");
+    assert_eq!(version, ScoreCache::VERSION, "ModelContext aliases the cache's own version");
     let path = tmp("stale");
+    let cache = ScoreCache::new(&path, version);
     let scores = vec![0.25f64, 0.5, 0.75];
 
     // An unversioned v1 file (serial shared-RNG era) must be rejected.
@@ -96,7 +98,7 @@ fn stale_v1_and_v2_sensitivity_caches_are_recomputed() {
         Value::Arr(scores.iter().map(|&s| Value::Num(s)).collect()),
     )]);
     std::fs::write(&path, v1.to_string()).unwrap();
-    assert_eq!(load_score_cache(&path, version, 3), None, "v1 file must recompute");
+    assert_eq!(cache.load(3), None, "v1 file must recompute");
 
     // A v2 file (trial-seeded Hessian, serial noise) must be rejected too.
     let v2 = Value::obj(vec![
@@ -104,26 +106,28 @@ fn stale_v1_and_v2_sensitivity_caches_are_recomputed() {
         ("scores", Value::Arr(scores.iter().map(|&s| Value::Num(s)).collect())),
     ]);
     std::fs::write(&path, v2.to_string()).unwrap();
-    assert_eq!(load_score_cache(&path, version, 3), None, "v2 file must recompute");
+    assert_eq!(cache.load(3), None, "v2 file must recompute");
 
     // The current version round-trips exactly...
-    save_score_cache(&path, version, &scores);
-    let loaded = load_score_cache(&path, version, 3).expect("current version must load");
+    cache.save(&scores);
+    let loaded = cache.load(3).expect("current version must load");
     assert_eq!(bits(&loaded), bits(&scores));
     // ...but only for the layer count it was written for.
-    assert_eq!(load_score_cache(&path, version, 4), None, "layer mismatch must recompute");
+    assert_eq!(cache.load(4), None, "layer mismatch must recompute");
 
     // Corrupt files degrade to a recompute, never an error.
     std::fs::write(&path, "{not json").unwrap();
-    assert_eq!(load_score_cache(&path, version, 3), None);
+    assert_eq!(cache.load(3), None);
     let _ = std::fs::remove_file(&path);
-    assert_eq!(load_score_cache(&path, version, 3), None, "missing file recomputes");
+    assert_eq!(cache.load(3), None, "missing file recomputes");
 }
 
 #[test]
 fn score_cache_files_are_valid_json_with_version() {
     let path = tmp("roundtrip");
-    save_score_cache(&path, ModelContext::SENS_CACHE_VERSION, &[1.0, 2.0]);
+    let cache = ScoreCache::new(&path, ModelContext::SENS_CACHE_VERSION);
+    cache.save(&[1.0, 2.0]);
+    assert_eq!(cache.path(), path.as_path());
     let v = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
     assert_eq!(v.req("version").unwrap().as_usize().unwrap(), ModelContext::SENS_CACHE_VERSION);
     assert_eq!(v.req("scores").unwrap().as_arr().unwrap().len(), 2);

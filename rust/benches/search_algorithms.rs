@@ -10,6 +10,11 @@
 //!    searches through [`ParallelEnv`] at 1/2/8 workers, measuring the
 //!    wall-clock speedup of speculative frontier batching and asserting
 //!    the final configurations are bit-identical at every worker count.
+//! 3. **Partitioned vs monolithic** (simulated-latency evals): the same
+//!    budgeted search on a deep model through [`PartitionedDriver`] at
+//!    K ∈ {1, 2, 4} segments, comparing decision-eval counts and wall
+//!    time — segments search concurrently, so wall time falls with K
+//!    while the per-decision accounting stays visible.
 //!
 //! The report is also written as JSON (`BENCH_search.json` in the current
 //! directory, or `$MPQ_BENCH_OUT`) so CI can archive baselines.
@@ -17,8 +22,10 @@
 mod harness;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use harness::{black_box, fmt_ns, Bench};
+use mpq::api::{ObjectiveSpec, Partition, PartitionedDriver, SharedSegmentEval, SyntheticCost};
 use mpq::coordinator::{EvalResult, ParallelEnv, SearchAlgo, SyncSearchEnv};
 use mpq::quant::QuantConfig;
 use mpq::util::json::Value;
@@ -154,6 +161,62 @@ fn main() {
                 ("speedup_vs_sequential", Value::Num(speedup)),
                 ("decision_evals", Value::Num(out.evals as f64)),
                 ("config_matches_sequential", Value::Bool(true)),
+            ]));
+        }
+    }
+
+    // ---- 3. partitioned vs monolithic (simulated device latency) ---------
+    // A deep model, one latency-budget objective: K segments search their
+    // slice of the order concurrently (one thread each), then one global
+    // reconciliation eval composes the result.
+    let n = 256;
+    let spec = ObjectiveSpec::LatencyBudget { rel_latency: 0.7 };
+    for algo in [SearchAlgo::Greedy, SearchAlgo::Bisection] {
+        let mut monolithic_ns = 0.0f64;
+        for k in [1usize, 2, 4] {
+            // Decision-eval accounting on instant evals (deterministic,
+            // identical to what the timed runs below decide).
+            let env = SynthEnv::new(n, 42, 0);
+            let order = env.order();
+            let cost = Arc::new(SyntheticCost::new(n, 42));
+            let driver = PartitionedDriver::new(
+                algo,
+                Partition::split(&order, k),
+                1.0,
+                cost.clone(),
+                "bench/synthetic",
+            );
+            let out = driver.run(&SharedSegmentEval(&env), &spec, 0.99, None).unwrap();
+            let decision_evals = out.outcome.evals;
+
+            let label = format!("{}_part_n{n}_k{k}", algo.label().to_lowercase());
+            let slow = SynthEnv::new(n, 42, work);
+            let slow_driver = PartitionedDriver::new(
+                algo,
+                Partition::split(&order, k),
+                1.0,
+                cost,
+                "bench/synthetic",
+            );
+            let report = b.bench_n(&label, 3, || {
+                let out = slow_driver.run(&SharedSegmentEval(&slow), &spec, 0.99, None).unwrap();
+                black_box(out);
+            });
+            if k == 1 {
+                monolithic_ns = report.mean_ns;
+            }
+            let speedup = monolithic_ns / report.mean_ns;
+            println!(
+                "    -> K={k}: {} ({speedup:.2}x vs monolithic, {decision_evals} decision evals)",
+                fmt_ns(report.mean_ns),
+            );
+            json_rows.push(Value::obj(vec![
+                ("name", Value::Str(report.name.clone())),
+                ("mean_ns", Value::Num(report.mean_ns)),
+                ("spread_ns", Value::Num(report.spread_ns)),
+                ("partitions", Value::Num(k as f64)),
+                ("speedup_vs_monolithic", Value::Num(speedup)),
+                ("decision_evals", Value::Num(decision_evals as f64)),
             ]));
         }
     }

@@ -132,14 +132,31 @@ impl ModelContext {
         self.pool.take()
     }
 
-    /// Where this context's persistent eval cache lives.
+    /// Where this context's persistent eval cache lives: the spec's
+    /// explicit override, or the shared multi-model store layout
+    /// `<artifacts>/<model>/evalcache.json`
+    /// ([`EvalCache::store_path`]). A legacy flat
+    /// `<model>_evalcache.json` file is migrated into the store when the
+    /// cache is attached.
     pub fn eval_cache_path(&self) -> PathBuf {
         self.cache.path.clone().unwrap_or_else(|| {
-            self.pipeline
-                .artifacts
-                .dir
-                .join(format!("{}_evalcache.json", self.pipeline.artifacts.manifest.model))
+            EvalCache::store_path(
+                &self.pipeline.artifacts.dir,
+                &self.pipeline.artifacts.manifest.model,
+            )
         })
+    }
+
+    /// [`Self::eval_cache_path`] with the legacy flat layout migrated into
+    /// the store (attach-time only — path resolution itself stays pure).
+    fn eval_cache_attach_path(&self) -> PathBuf {
+        match &self.cache.path {
+            Some(path) => path.clone(),
+            None => EvalCache::migrate_flat_layout(
+                &self.pipeline.artifacts.dir,
+                &self.pipeline.artifacts.manifest.model,
+            ),
+        }
     }
 
     /// The configured eval-cache entry bound, if any.
@@ -233,7 +250,7 @@ impl ModelContext {
             self.calibrate_now(&CalibrationOptions::default(), &mut *obs)?;
         }
         if self.cache.enabled {
-            let cache_path = self.eval_cache_path();
+            let cache_path = self.eval_cache_attach_path();
             match self.pool.as_mut() {
                 Some(pool) => pool.attach_eval_cache(
                     &cache_path,
@@ -297,7 +314,7 @@ impl ModelContext {
             // (its context fingerprint no longer matched). Re-attach it
             // under the new scales so the session keeps its cross-run
             // caching.
-            let cache_path = self.eval_cache_path();
+            let cache_path = self.eval_cache_attach_path();
             match self.pool.as_mut() {
                 Some(pool) => pool.attach_eval_cache(
                     &cache_path,

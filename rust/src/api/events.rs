@@ -60,6 +60,18 @@ pub enum SearchEvent {
     /// A Pareto-frontier artifact was persisted: `points` trail points,
     /// of which `pareto` survive dominated-filtering.
     FrontierWritten { points: usize, pareto: usize, path: String },
+    /// A partitioned run started searching one segment of the layer order
+    /// (`segment` of `segments`, owning `layers` layers). Segment events
+    /// are replayed in fixed segment order after the concurrent searches
+    /// finish, so the stream is deterministic at every worker count.
+    SegmentStarted { segment: usize, segments: usize, layers: usize },
+    /// One segment's scoped search finished.
+    SegmentFinished { segment: usize, accuracy: f64, evals: usize },
+    /// The global budget reconciliation pass composed the per-segment
+    /// results into one whole-model configuration and evaluated it
+    /// exactly; `cost` is the composed relative cost under a budgeted
+    /// objective.
+    Reconciled { segments: usize, accuracy: f64, cost: Option<f64>, evals: usize },
 }
 
 /// Render one [`SearchEvent`] as a stderr progress line — the default
@@ -125,6 +137,27 @@ pub fn log_event(ev: &SearchEvent) {
         }
         SearchEvent::FrontierWritten { points, pareto, path } => {
             eprintln!("[frontier] {points} points ({pareto} Pareto-optimal) -> {path}");
+        }
+        SearchEvent::SegmentStarted { segment, segments, layers } => {
+            eprintln!("[partition] segment {}/{segments}: {layers} layers", segment + 1);
+        }
+        SearchEvent::SegmentFinished { segment, accuracy, evals } => {
+            eprintln!(
+                "[partition] segment {} done: accuracy {:.2}% after {evals} decision evals",
+                segment + 1,
+                accuracy * 100.0
+            );
+        }
+        SearchEvent::Reconciled { segments, accuracy, cost, evals } => {
+            let mut line = format!(
+                "[partition] reconciled {segments} segments: accuracy {:.2}%",
+                accuracy * 100.0
+            );
+            if let Some(c) = cost {
+                line.push_str(&format!(" cost={:.1}%", c * 100.0));
+            }
+            line.push_str(&format!(" ({evals} decision evals)"));
+            eprintln!("{line}");
         }
         SearchEvent::FrontierSubmitted { .. } | SearchEvent::CheckpointWritten { .. } => {}
     }

@@ -22,6 +22,12 @@
 //!   per accuracy floor yields a serializable [`FrontierArtifact`] that
 //!   answers every (budget, floor) sweep cell and serve-time
 //!   [`PickSpec`] selection without another search.
+//! * [`PartitionedDriver`] — subgraph-partitioned search:
+//!   [`Partition::split`] cuts the sensitivity order into `K` contiguous
+//!   segments with pro-rated budgets/accuracy slack, segments search
+//!   concurrently (each pool worker owns one), and a deterministic global
+//!   budget reconciliation pass composes the per-segment results — or
+//!   per-segment frontier trails — into one whole-model answer.
 //! * [`SyntheticEnv`]/[`SyntheticCost`] — artifact-free environments so
 //!   the whole API (budgets, checkpoints, worker fan-out) runs in CI.
 
@@ -32,6 +38,7 @@ mod driver;
 mod events;
 mod objective;
 mod pareto;
+mod partition;
 mod session;
 mod spec;
 mod synthetic;
@@ -43,8 +50,13 @@ pub use driver::{run_search, SearchCtl};
 pub use events::{log_event, SearchEvent};
 pub use objective::{AccuracyTarget, CellMetrics, FootprintBudget, LatencyBudget, Objective};
 pub use pareto::{
-    build_frontier_synthetic, frontier_fingerprint, FloorTrail, FrontierArtifact, FrontierPoint,
-    FrontierReport, ParetoFront, PickSpec, FRONTIER_VERSION,
+    build_frontier_synthetic, frontier_fingerprint, partitioned_frontier_fingerprint, FloorTrail,
+    FrontierArtifact, FrontierPoint, FrontierReport, ParetoFront, PickSpec, FRONTIER_VERSION,
+};
+pub use partition::{
+    build_frontier_synthetic_partitioned, partitioned_search_synthetic, scoped_budget,
+    scoped_floor, Partition, PartitionedDriver, PartitionedOutcome, SegmentEval, SegmentView,
+    SharedSegmentEval,
 };
 pub use session::{SearchReport, SearchSession};
 pub use spec::{BackendSpec, CacheSpec, ObjectiveSpec, ScaleSpec, SearchSpec, DEFAULT_TRIALS};

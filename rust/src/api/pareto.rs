@@ -169,20 +169,29 @@ pub struct FrontierArtifact {
     pub float_accuracy: f64,
     /// Cost-model provenance shared by every point.
     pub cost_provenance: String,
+    /// How many segments the layer order was partitioned into when the
+    /// trails were built (1 = the monolithic whole-model search). K=1
+    /// artifacts serialize without the field, so pre-partition artifacts
+    /// load unchanged and K=1 builds stay byte-identical to them.
+    pub partitions: usize,
     /// One trail per requested floor, in build order.
     pub trails: Vec<FloorTrail>,
 }
 
 impl FrontierArtifact {
     pub fn to_json(&self) -> Value {
-        Value::obj(vec![
+        let mut fields = vec![
             ("version", Value::Num(FRONTIER_VERSION as f64)),
             ("algo", Value::Str(self.algo.label().to_string())),
             ("fingerprint", Value::Str(self.fingerprint.clone())),
             ("float_accuracy", Value::Num(self.float_accuracy)),
             ("cost_provenance", Value::Str(self.cost_provenance.clone())),
-            ("trails", Value::Arr(self.trails.iter().map(FloorTrail::to_json).collect())),
-        ])
+        ];
+        if self.partitions > 1 {
+            fields.push(("partitions", Value::Num(self.partitions as f64)));
+        }
+        fields.push(("trails", Value::Arr(self.trails.iter().map(FloorTrail::to_json).collect())));
+        Value::obj(fields)
     }
 
     pub fn from_json(v: &Value) -> Result<Self> {
@@ -193,11 +202,17 @@ impl FrontierArtifact {
             .map(FloorTrail::from_json)
             .collect::<Result<Vec<_>>>()?;
         ensure!(!trails.is_empty(), "frontier artifact has no trails");
+        let partitions = match v.get("partitions") {
+            Some(p) => p.as_usize()?,
+            None => 1,
+        };
+        ensure!(partitions >= 1, "frontier artifact has zero partitions");
         Ok(FrontierArtifact {
             algo: v.req("algo")?.as_str()?.parse()?,
             fingerprint: v.req("fingerprint")?.as_str()?.to_string(),
             float_accuracy: v.req("float_accuracy")?.as_f64()?,
             cost_provenance: v.req("cost_provenance")?.as_str()?.to_string(),
+            partitions,
             trails,
         })
     }
@@ -229,7 +244,13 @@ impl FrontierArtifact {
     /// have been built by the same algorithm over the same floors, layer
     /// order, and evaluation environment.
     pub fn verify(&self, algo: SearchAlgo, order: &[usize], env_context: &str) -> Result<()> {
-        let expected = frontier_fingerprint(algo, &self.floors(), order, env_context);
+        let expected = partitioned_frontier_fingerprint(
+            algo,
+            &self.floors(),
+            order,
+            env_context,
+            self.partitions,
+        );
         ensure!(
             self.fingerprint == expected,
             "frontier artifact was built by a different search:\n  recorded: {}\n  expected: \
@@ -338,6 +359,23 @@ pub fn frontier_fingerprint(
     format!("frontier/{}/floors+order-{:016x}/{env_context}", algo.label(), h.finish())
 }
 
+/// [`frontier_fingerprint`] extended with the partition count: a composed
+/// K>1 frontier must never be mistaken for (or resumed against) the
+/// monolithic build, while K=1 keeps the exact historical fingerprint.
+pub fn partitioned_frontier_fingerprint(
+    algo: SearchAlgo,
+    floors: &[f64],
+    order: &[usize],
+    env_context: &str,
+    partitions: usize,
+) -> String {
+    let mut fp = frontier_fingerprint(algo, floors, order, env_context);
+    if partitions > 1 {
+        fp.push_str(&format!("/K{partitions}"));
+    }
+    fp
+}
+
 // ------------------------------------------------------------- pick spec
 
 /// Serve-time constraints for [`FrontierArtifact::pick`], parsed from
@@ -401,10 +439,10 @@ impl std::str::FromStr for PickSpec {
 /// shares a prefix of. `satisfied` fires on replayed decisions too (the
 /// `Decision` event precedes the check), so resumed builds record the
 /// same trail.
-struct FrontierRecorder {
-    abs_floor: f64,
-    decisions: Arc<AtomicUsize>,
-    trail: Mutex<Vec<(QuantConfig, usize)>>,
+pub(crate) struct FrontierRecorder {
+    pub(crate) abs_floor: f64,
+    pub(crate) decisions: Arc<AtomicUsize>,
+    pub(crate) trail: Mutex<Vec<(QuantConfig, usize)>>,
 }
 
 impl Objective for FrontierRecorder {
@@ -618,6 +656,7 @@ impl ParetoFront {
             ),
             float_accuracy: self.float_accuracy,
             cost_provenance: self.cost.provenance().to_string(),
+            partitions: 1,
             trails,
         };
         Ok(FrontierReport {
@@ -731,6 +770,7 @@ mod tests {
             fingerprint: frontier_fingerprint(SearchAlgo::Greedy, &[0.9], &[0, 1], "env/t"),
             float_accuracy: 1.0,
             cost_provenance: "test".to_string(),
+            partitions: 1,
             trails: vec![FloorTrail { floor: 0.9, abs_floor: 0.9, decisions: 4, points }],
         }
     }
@@ -742,6 +782,24 @@ mod tests {
         let b = FrontierArtifact::from_json(&json::parse(&text).unwrap()).unwrap();
         assert_eq!(a, b);
         assert_eq!(b.to_json().to_string(), text, "re-serialization must be byte-identical");
+    }
+
+    #[test]
+    fn partitions_field_round_trips_and_defaults_to_one() {
+        let mut a = sample_artifact();
+        assert!(!a.to_json().to_string().contains("partitions"), "K=1 omits the field");
+        a.partitions = 3;
+        a.fingerprint =
+            partitioned_frontier_fingerprint(SearchAlgo::Greedy, &[0.9], &[0, 1], "env/t", 3);
+        let text = a.to_json().to_string();
+        let b = FrontierArtifact::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(b.partitions, 3);
+        assert_eq!(b.to_json().to_string(), text, "re-serialization must be byte-identical");
+        b.verify(SearchAlgo::Greedy, &[0, 1], "env/t").unwrap();
+        // A K=1 verify against the same inputs must reject the composed
+        // artifact (and vice versa): the /K suffix separates them.
+        let mono = sample_artifact();
+        assert_ne!(mono.fingerprint, b.fingerprint);
     }
 
     #[test]

@@ -1,0 +1,1224 @@
+//! Subgraph-partitioned search: segment-scoped drivers, concurrent
+//! per-segment frontiers, and global budget reconciliation.
+//!
+//! Big models make even the one-pass frontier expensive: every decision
+//! still evaluates the *whole* model, and the decision sequence is as long
+//! as the layer order. Following the sequential sub-graph evaluation of
+//! Markovich-Golan et al. and the loss-budget splitting of Pandey et al.,
+//! [`Partition::split`] cuts the sensitivity-sorted order into `K`
+//! contiguous segments and [`PartitionedDriver`] searches them
+//! *concurrently* — each segment scoped by [`SearchAlgo::run_scoped`] with
+//! the complement frozen at reference (float) precision and a pro-rated
+//! share of the budget and accuracy slack:
+//!
+//! * scoped budget `B_s = 1 − (1 − B)·w_s` where `w_s` is the segment's
+//!   layer-count share — modeled costs are per-layer sums, so if every
+//!   segment meets its scoped budget the composed config meets `B`;
+//! * scoped floor `F_s = A0 − (A0 − F)·w_s` — accuracy degradation is
+//!   additive on the synthetic model and approximately additive on real
+//!   ones (Pandey et al.), so per-segment slack shares compose.
+//!
+//! A deterministic **global budget reconciliation** pass then composes the
+//! per-segment results into one whole-model configuration, evaluates it
+//! exactly once, and reports the composed cost
+//! ([`SearchEvent::Reconciled`]). Per-segment event streams are buffered
+//! and replayed in fixed segment order, per-segment decision logs
+//! checkpoint to `<prefix>.seg<s>` (`<prefix>.floor<i>.seg<s>` for
+//! frontier builds), and `K = 1` delegates to the monolithic driver — so
+//! `--partitions 1` is bit-identical to the whole-model search and a
+//! killed `K > 1` run resumes byte-identically.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure};
+
+use crate::coordinator::{
+    EvalResult, PipelinePool, SearchAlgo, SearchEnv, SearchOutcome, SyncSearchEnv,
+};
+use crate::quant::{QuantConfig, QUANT_BITS};
+use crate::Result;
+
+use super::checkpoint::{checkpoint_fingerprint, Checkpoint};
+use super::cost::CostModel;
+use super::driver::{run_search, SearchCtl};
+use super::events::SearchEvent;
+use super::objective::{AccuracyTarget, FootprintBudget, LatencyBudget, Objective};
+use super::pareto::{
+    partitioned_frontier_fingerprint, FloorTrail, FrontierArtifact, FrontierPoint,
+    FrontierRecorder, FrontierReport, ParetoFront,
+};
+use super::spec::ObjectiveSpec;
+use super::synthetic::{SyntheticCost, SyntheticEnv};
+
+// ------------------------------------------------------------- partition
+
+/// One contiguous segment of the sensitivity-sorted layer order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SegmentView {
+    /// Position in the partition — also the pool worker that owns the
+    /// segment in a concurrent run.
+    pub index: usize,
+    /// Global layer ids, in sensitivity order.
+    pub layers: Vec<usize>,
+    /// This segment's layer-count share of the whole order, in `(0, 1]`.
+    pub share: f64,
+}
+
+/// The sensitivity order split into `K` contiguous segments. Segments
+/// cover the order exactly once, in order; the first `len % K` segments
+/// are one layer longer, so shares differ by at most one layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Partition {
+    segments: Vec<SegmentView>,
+}
+
+impl Partition {
+    /// Split `order` into `k` contiguous segments (`k` is clamped to
+    /// `[1, order.len()]` so no segment is ever empty).
+    pub fn split(order: &[usize], k: usize) -> Self {
+        let n = order.len();
+        let k = k.clamp(1, n.max(1));
+        let base = n / k;
+        let extra = n % k;
+        let mut segments = Vec::with_capacity(k);
+        let mut start = 0usize;
+        for index in 0..k {
+            let len = base + usize::from(index < extra);
+            let layers = order[start..start + len].to_vec();
+            start += len;
+            segments.push(SegmentView { index, layers, share: len as f64 / n.max(1) as f64 });
+        }
+        debug_assert_eq!(start, n, "segments must cover the order exactly");
+        Partition { segments }
+    }
+
+    pub fn segments(&self) -> &[SegmentView] {
+        &self.segments
+    }
+
+    pub fn num_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Total layers across all segments (== the original order length).
+    pub fn num_layers(&self) -> usize {
+        self.segments.iter().map(|s| s.layers.len()).sum()
+    }
+
+    /// The original order, reassembled from the segments.
+    pub fn order(&self) -> Vec<usize> {
+        self.segments.iter().flat_map(|s| s.layers.iter().copied()).collect()
+    }
+}
+
+/// Pro-rate a relative cost budget by a segment's layer share: the
+/// complement stays at reference cost, so the segment may spend
+/// `(1 − B)·w_s` of the global headroom. Costs are per-layer sums, so if
+/// every segment satisfies its scoped budget the composed configuration
+/// satisfies `B` exactly.
+pub fn scoped_budget(budget: f64, share: f64) -> f64 {
+    1.0 - (1.0 - budget) * share
+}
+
+/// Pro-rate an absolute accuracy floor by a segment's layer share: the
+/// segment may spend `(A0 − F)·w_s` of the global accuracy slack.
+pub fn scoped_floor(float_accuracy: f64, abs_floor: f64, share: f64) -> f64 {
+    float_accuracy - (float_accuracy - abs_floor) * share
+}
+
+/// Build the segment-scoped instance of a global objective.
+fn scoped_objective(
+    spec: &ObjectiveSpec,
+    floor_s: f64,
+    share: f64,
+    cost: Arc<dyn CostModel>,
+) -> Box<dyn Objective> {
+    match *spec {
+        ObjectiveSpec::AccuracyTarget => Box::new(AccuracyTarget::new(floor_s)),
+        ObjectiveSpec::LatencyBudget { rel_latency } => {
+            Box::new(LatencyBudget::new(floor_s, scoped_budget(rel_latency, share), cost))
+        }
+        ObjectiveSpec::FootprintBudget { rel_size } => {
+            Box::new(FootprintBudget::new(floor_s, scoped_budget(rel_size, share), cost))
+        }
+    }
+}
+
+// ----------------------------------------------------------- environment
+
+/// A search environment whose evaluations can be shared by several
+/// concurrent segment searches through `&self`. Implementations must
+/// answer each segment's evaluations deterministically — shared caches are
+/// fine because exact results are target-independent, so a cache hit never
+/// changes a decision.
+pub trait SegmentEval {
+    fn num_layers(&self) -> usize;
+
+    /// Evaluate a batch on behalf of `segment`'s scoped search, one result
+    /// per config in order.
+    fn eval_segment(
+        &self,
+        segment: usize,
+        cfgs: &[QuantConfig],
+        target: Option<f64>,
+    ) -> Vec<Result<EvalResult>>;
+
+    /// Speculation window for one segment's search (its
+    /// [`SearchEnv::preferred_batch`]). Decisions are window-independent,
+    /// so this only affects wasted speculative work, never the outcome.
+    fn segment_window(&self) -> usize {
+        1
+    }
+}
+
+/// Share one thread-safe environment across all segments (each segment
+/// evaluates sequentially on its own thread).
+pub struct SharedSegmentEval<'a, E: SyncSearchEnv>(pub &'a E);
+
+impl<E: SyncSearchEnv> SegmentEval for SharedSegmentEval<'_, E> {
+    fn num_layers(&self) -> usize {
+        self.0.num_layers()
+    }
+
+    fn eval_segment(
+        &self,
+        _segment: usize,
+        cfgs: &[QuantConfig],
+        target: Option<f64>,
+    ) -> Vec<Result<EvalResult>> {
+        cfgs.iter().map(|c| self.0.eval(c, target)).collect()
+    }
+}
+
+/// Each segment owns one pool worker: segment `s` pins its evaluations to
+/// worker `s % workers` ([`PipelinePool::eval_on`]), so concurrent segment
+/// searches never contend for the same device pipeline. The shared
+/// memo/persistent caches stay safe — they publish exact results only.
+impl SegmentEval for PipelinePool {
+    fn num_layers(&self) -> usize {
+        SearchEnv::num_layers(self)
+    }
+
+    fn eval_segment(
+        &self,
+        segment: usize,
+        cfgs: &[QuantConfig],
+        target: Option<f64>,
+    ) -> Vec<Result<EvalResult>> {
+        self.eval_on(segment, cfgs, target)
+    }
+}
+
+/// Adapter presenting one segment's slice of a [`SegmentEval`] as a
+/// [`SearchEnv`], so the scoped search algorithms run unchanged.
+struct SegmentEnv<'a, E: SegmentEval + ?Sized> {
+    eval: &'a E,
+    segment: usize,
+}
+
+impl<E: SegmentEval + ?Sized> SearchEnv for SegmentEnv<'_, E> {
+    fn num_layers(&self) -> usize {
+        self.eval.num_layers()
+    }
+
+    fn eval(&mut self, cfg: &QuantConfig, target: Option<f64>) -> Result<EvalResult> {
+        self.eval
+            .eval_segment(self.segment, std::slice::from_ref(cfg), target)
+            .pop()
+            .unwrap_or_else(|| Err(anyhow!("segment evaluation returned no result")))
+    }
+
+    fn eval_many(&mut self, cfgs: &[QuantConfig], target: Option<f64>) -> Vec<Result<EvalResult>> {
+        self.eval.eval_segment(self.segment, cfgs, target)
+    }
+
+    fn preferred_batch(&self) -> usize {
+        self.eval.segment_window().max(1)
+    }
+}
+
+// -------------------------------------------------------- segment worker
+
+/// Everything one segment's scoped search needs, prepared deterministically
+/// (checkpoint attaches happen in segment order before any search runs).
+struct SegTask<'a> {
+    seg: &'a SegmentView,
+    objective: &'a dyn Objective,
+    /// Live decision counter for frontier recorders (must tick *during*
+    /// the search — trail entries snapshot it at commit time).
+    counter: Option<Arc<AtomicUsize>>,
+    checkpoint: Option<Checkpoint>,
+}
+
+/// One segment search's results: outcome, buffered event stream (replayed
+/// later in fixed segment order), and checkpoint-replay accounting.
+struct SegRun {
+    outcome: SearchOutcome,
+    events: Vec<SearchEvent>,
+    replayed: usize,
+    checkpointed: usize,
+}
+
+fn run_segment<E: SearchEnv>(
+    algo: SearchAlgo,
+    env: &mut E,
+    base: &QuantConfig,
+    task: SegTask<'_>,
+) -> Result<SegRun> {
+    let mut events: Vec<SearchEvent> = Vec::new();
+    let mut checkpoint = task.checkpoint;
+    let outcome = {
+        let counter = task.counter;
+        let mut buffer = |ev: &SearchEvent| {
+            if let Some(c) = &counter {
+                if matches!(ev, SearchEvent::Decision { .. }) {
+                    c.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            events.push(ev.clone());
+        };
+        let mut ctl = SearchCtl::new(task.objective).with_observer(&mut buffer);
+        if let Some(ck) = checkpoint.as_mut() {
+            ctl = ctl.with_checkpoint(ck);
+        }
+        algo.run_scoped(env, &task.seg.layers, base, &QUANT_BITS, &mut ctl)?
+    };
+    let replayed = checkpoint.as_ref().map_or(0, |ck| ck.replayed());
+    let checkpointed = checkpoint.as_ref().map_or(0, |ck| ck.len());
+    Ok(SegRun { outcome, events, replayed, checkpointed })
+}
+
+/// How segment searches actually execute: concurrently over a shared
+/// [`SegmentEval`] (one scoped thread per segment) or sequentially over a
+/// single-owner [`SearchEnv`] (e.g. a `!Send` device context). Decisions
+/// are identical either way — each segment's search depends only on its
+/// own configurations.
+trait SegmentExec {
+    fn run_tasks(
+        &mut self,
+        algo: SearchAlgo,
+        base: &QuantConfig,
+        tasks: Vec<SegTask<'_>>,
+    ) -> Vec<Result<SegRun>>;
+
+    fn eval_exact(&mut self, cfg: &QuantConfig) -> Result<EvalResult>;
+
+    fn monolithic_search(
+        &mut self,
+        algo: SearchAlgo,
+        order: &[usize],
+        objective: &dyn Objective,
+        observer: Option<&mut dyn FnMut(&SearchEvent)>,
+        checkpoint: Option<&mut Checkpoint>,
+    ) -> Result<SearchOutcome>;
+
+    fn monolithic_frontier(
+        &mut self,
+        front: &ParetoFront,
+        observer: Option<&mut dyn FnMut(&SearchEvent)>,
+    ) -> Result<FrontierReport>;
+}
+
+struct ConcurrentExec<'a, E: SegmentEval + Sync + ?Sized>(&'a E);
+
+impl<E: SegmentEval + Sync + ?Sized> SegmentExec for ConcurrentExec<'_, E> {
+    fn run_tasks(
+        &mut self,
+        algo: SearchAlgo,
+        base: &QuantConfig,
+        tasks: Vec<SegTask<'_>>,
+    ) -> Vec<Result<SegRun>> {
+        let env = self.0;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = tasks
+                .into_iter()
+                .map(|task| {
+                    s.spawn(move || {
+                        let mut senv = SegmentEnv { eval: env, segment: task.seg.index };
+                        run_segment(algo, &mut senv, base, task)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| Err(anyhow!("segment search thread panicked")))
+                })
+                .collect()
+        })
+    }
+
+    fn eval_exact(&mut self, cfg: &QuantConfig) -> Result<EvalResult> {
+        self.0
+            .eval_segment(0, std::slice::from_ref(cfg), None)
+            .pop()
+            .unwrap_or_else(|| Err(anyhow!("segment evaluation returned no result")))
+    }
+
+    fn monolithic_search(
+        &mut self,
+        algo: SearchAlgo,
+        order: &[usize],
+        objective: &dyn Objective,
+        observer: Option<&mut dyn FnMut(&SearchEvent)>,
+        checkpoint: Option<&mut Checkpoint>,
+    ) -> Result<SearchOutcome> {
+        let mut senv = SegmentEnv { eval: self.0, segment: 0 };
+        run_search(algo, &mut senv, order, &QUANT_BITS, objective, observer, checkpoint)
+    }
+
+    fn monolithic_frontier(
+        &mut self,
+        front: &ParetoFront,
+        observer: Option<&mut dyn FnMut(&SearchEvent)>,
+    ) -> Result<FrontierReport> {
+        let mut senv = SegmentEnv { eval: self.0, segment: 0 };
+        front.build(&mut senv, observer)
+    }
+}
+
+struct SerialExec<'a, E: SearchEnv>(&'a mut E);
+
+impl<E: SearchEnv> SegmentExec for SerialExec<'_, E> {
+    fn run_tasks(
+        &mut self,
+        algo: SearchAlgo,
+        base: &QuantConfig,
+        tasks: Vec<SegTask<'_>>,
+    ) -> Vec<Result<SegRun>> {
+        tasks.into_iter().map(|task| run_segment(algo, self.0, base, task)).collect()
+    }
+
+    fn eval_exact(&mut self, cfg: &QuantConfig) -> Result<EvalResult> {
+        self.0.eval(cfg, None)
+    }
+
+    fn monolithic_search(
+        &mut self,
+        algo: SearchAlgo,
+        order: &[usize],
+        objective: &dyn Objective,
+        observer: Option<&mut dyn FnMut(&SearchEvent)>,
+        checkpoint: Option<&mut Checkpoint>,
+    ) -> Result<SearchOutcome> {
+        run_search(algo, self.0, order, &QUANT_BITS, objective, observer, checkpoint)
+    }
+
+    fn monolithic_frontier(
+        &mut self,
+        front: &ParetoFront,
+        observer: Option<&mut dyn FnMut(&SearchEvent)>,
+    ) -> Result<FrontierReport> {
+        front.build(self.0, observer)
+    }
+}
+
+fn emit(observer: &mut Option<&mut dyn FnMut(&SearchEvent)>, ev: SearchEvent) {
+    if let Some(obs) = observer.as_mut() {
+        obs(&ev);
+    }
+}
+
+// ---------------------------------------------------------------- driver
+
+/// Drives `K` concurrent segment-scoped searches and reconciles them into
+/// one whole-model result. `K = 1` delegates to the monolithic
+/// [`run_search`] / [`ParetoFront`] drivers — same decisions, same
+/// checkpoint files, byte-identical artifacts.
+pub struct PartitionedDriver {
+    algo: SearchAlgo,
+    partition: Partition,
+    float_accuracy: f64,
+    cost: Arc<dyn CostModel>,
+    env_context: String,
+    checkpoint_prefix: Option<PathBuf>,
+    resume: bool,
+}
+
+/// What a partitioned constrained search hands back.
+#[derive(Debug, Clone)]
+pub struct PartitionedOutcome {
+    /// The reconciled whole-model result; `evals` sums every segment's
+    /// decision evaluations plus the one reconciliation evaluation.
+    pub outcome: SearchOutcome,
+    /// Per-segment outcomes in segment order (empty for `K = 1`, where the
+    /// run *was* the monolithic search).
+    pub segments: Vec<SearchOutcome>,
+    /// Whether each segment met its scoped budget (for `K = 1`, the global
+    /// objective's own `satisfied`). Always `false` under a pure accuracy
+    /// target — exhaustion searches have no budget to meet.
+    pub satisfied: Vec<bool>,
+    /// Decisions answered from per-segment checkpoints instead of evals.
+    pub replayed_decisions: usize,
+    /// Total decisions on disk across all segment checkpoints after the
+    /// run (0 if no checkpoint prefix was configured).
+    pub checkpointed_decisions: usize,
+}
+
+impl PartitionedOutcome {
+    /// True when every segment met its scoped budget — the precondition
+    /// under which the composed configuration provably meets the global
+    /// budget (cost additivity).
+    pub fn all_satisfied(&self) -> bool {
+        !self.satisfied.is_empty() && self.satisfied.iter().all(|&s| s)
+    }
+}
+
+impl PartitionedDriver {
+    pub fn new(
+        algo: SearchAlgo,
+        partition: Partition,
+        float_accuracy: f64,
+        cost: Arc<dyn CostModel>,
+        env_context: impl Into<String>,
+    ) -> Self {
+        PartitionedDriver {
+            algo,
+            partition,
+            float_accuracy,
+            cost,
+            env_context: env_context.into(),
+            checkpoint_prefix: None,
+            resume: false,
+        }
+    }
+
+    /// Persist per-segment decision logs to `<prefix>.seg<s>`
+    /// (`<prefix>.floor<i>.seg<s>` for frontier builds; the bare `<prefix>`
+    /// for `K = 1`, matching the monolithic drivers).
+    pub fn checkpoint(mut self, prefix: impl Into<PathBuf>) -> Self {
+        self.checkpoint_prefix = Some(prefix.into());
+        self
+    }
+
+    /// Replay existing decision logs instead of starting clean. Segments
+    /// (or floors) the interrupted run never reached attach fresh.
+    pub fn resume(mut self, resume: bool) -> Self {
+        self.resume = resume;
+        self
+    }
+
+    pub fn partition(&self) -> &Partition {
+        &self.partition
+    }
+
+    fn attach(
+        &self,
+        suffix: &str,
+        describe: &str,
+        order: &[usize],
+    ) -> Result<Option<Checkpoint>> {
+        let Some(prefix) = &self.checkpoint_prefix else { return Ok(None) };
+        let path = PathBuf::from(format!("{}{suffix}", prefix.display()));
+        let fp =
+            checkpoint_fingerprint(self.algo, &QUANT_BITS, describe, order, &self.env_context);
+        let resume = self.resume && path.is_file();
+        Ok(Some(Checkpoint::attach(&path, &fp, resume)?))
+    }
+
+    /// Run one constrained search per segment concurrently and reconcile.
+    /// `floor` is the *absolute* accuracy floor of the global objective.
+    pub fn run<E: SegmentEval + Sync + ?Sized>(
+        &self,
+        env: &E,
+        spec: &ObjectiveSpec,
+        floor: f64,
+        observer: Option<&mut dyn FnMut(&SearchEvent)>,
+    ) -> Result<PartitionedOutcome> {
+        let layers = env.num_layers();
+        self.run_exec(&mut ConcurrentExec(env), layers, spec, floor, observer)
+    }
+
+    /// Sequential variant for single-owner environments (no worker pool /
+    /// `!Send` device contexts). Segment searches depend only on their own
+    /// configurations, so the results are identical to [`Self::run`].
+    pub fn run_serial<E: SearchEnv>(
+        &self,
+        env: &mut E,
+        spec: &ObjectiveSpec,
+        floor: f64,
+        observer: Option<&mut dyn FnMut(&SearchEvent)>,
+    ) -> Result<PartitionedOutcome> {
+        let layers = env.num_layers();
+        self.run_exec(&mut SerialExec(env), layers, spec, floor, observer)
+    }
+
+    fn run_exec<X: SegmentExec>(
+        &self,
+        x: &mut X,
+        num_layers: usize,
+        spec: &ObjectiveSpec,
+        floor: f64,
+        mut observer: Option<&mut dyn FnMut(&SearchEvent)>,
+    ) -> Result<PartitionedOutcome> {
+        ensure!(
+            self.partition.num_layers() == num_layers,
+            "partition covers {} layers, environment has {num_layers}",
+            self.partition.num_layers()
+        );
+        let k = self.partition.num_segments();
+        let global = spec.build(floor, self.cost.clone());
+
+        if k == 1 {
+            let seg = &self.partition.segments[0];
+            let fp_describe = global.describe();
+            let mut checkpoint = self.attach("", &fp_describe, &seg.layers)?;
+            let outcome = x.monolithic_search(
+                self.algo,
+                &seg.layers,
+                global.as_ref(),
+                observer,
+                checkpoint.as_mut(),
+            )?;
+            let replayed_decisions = checkpoint.as_ref().map_or(0, |ck| ck.replayed());
+            let checkpointed_decisions = checkpoint.as_ref().map_or(0, |ck| ck.len());
+            let satisfied = vec![global.satisfied(&outcome.config)];
+            return Ok(PartitionedOutcome {
+                outcome,
+                segments: Vec::new(),
+                satisfied,
+                replayed_decisions,
+                checkpointed_decisions,
+            });
+        }
+
+        emit(
+            &mut observer,
+            SearchEvent::Started {
+                algo: self.algo.label(),
+                layers: num_layers,
+                objective: global.describe(),
+            },
+        );
+        let base = QuantConfig::float(num_layers);
+        let objectives: Vec<Box<dyn Objective>> = self
+            .partition
+            .segments()
+            .iter()
+            .map(|seg| {
+                scoped_objective(
+                    spec,
+                    scoped_floor(self.float_accuracy, floor, seg.share),
+                    seg.share,
+                    self.cost.clone(),
+                )
+            })
+            .collect();
+        let mut tasks = Vec::with_capacity(k);
+        for (seg, objective) in self.partition.segments().iter().zip(&objectives) {
+            let checkpoint =
+                self.attach(&format!(".seg{}", seg.index), &objective.describe(), &seg.layers)?;
+            tasks.push(SegTask { seg, objective: objective.as_ref(), counter: None, checkpoint });
+        }
+        let runs = x.run_tasks(self.algo, &base, tasks);
+        let mut outs = Vec::with_capacity(k);
+        let mut replayed_decisions = 0usize;
+        let mut checkpointed_decisions = 0usize;
+        for run in runs {
+            // Propagate the first failure in segment order — deterministic
+            // even when several concurrent segments abort at once.
+            let run = run?;
+            replayed_decisions += run.replayed;
+            checkpointed_decisions += run.checkpointed;
+            outs.push(run);
+        }
+
+        for (seg, run) in self.partition.segments().iter().zip(&outs) {
+            emit(
+                &mut observer,
+                SearchEvent::SegmentStarted {
+                    segment: seg.index,
+                    segments: k,
+                    layers: seg.layers.len(),
+                },
+            );
+            if let Some(obs) = observer.as_mut() {
+                for ev in &run.events {
+                    obs(ev);
+                }
+            }
+            emit(
+                &mut observer,
+                SearchEvent::SegmentFinished {
+                    segment: seg.index,
+                    accuracy: run.outcome.accuracy,
+                    evals: run.outcome.evals,
+                },
+            );
+        }
+
+        // Global budget reconciliation: compose the per-segment bit
+        // assignments and evaluate the whole-model config exactly once.
+        let mut composed = base.clone();
+        for (seg, run) in self.partition.segments().iter().zip(&outs) {
+            for &l in &seg.layers {
+                composed.set_layer(l, run.outcome.config.layer_bits(l));
+            }
+        }
+        let final_res = x.eval_exact(&composed)?;
+        let evals = outs.iter().map(|r| r.outcome.evals).sum::<usize>() + 1;
+        emit(
+            &mut observer,
+            SearchEvent::Reconciled {
+                segments: k,
+                accuracy: final_res.accuracy,
+                cost: global.cost_of(&composed),
+                evals,
+            },
+        );
+        emit(&mut observer, SearchEvent::Finished { accuracy: final_res.accuracy, evals });
+
+        let satisfied =
+            objectives.iter().zip(&outs).map(|(o, r)| o.satisfied(&r.outcome.config)).collect();
+        let segments: Vec<SearchOutcome> = outs.into_iter().map(|r| r.outcome).collect();
+        Ok(PartitionedOutcome {
+            outcome: SearchOutcome {
+                config: composed,
+                accuracy: final_res.accuracy,
+                evals,
+                target: floor,
+            },
+            segments,
+            satisfied,
+            replayed_decisions,
+            checkpointed_decisions,
+        })
+    }
+
+    /// Build a composed Pareto frontier: per floor, one concurrent
+    /// exhaustion search per segment, then a deterministic composition of
+    /// the per-segment trails into one whole-model trail (prefix segments
+    /// at their final bits, the current segment walking its trail).
+    pub fn build_frontier<E: SegmentEval + Sync + ?Sized>(
+        &self,
+        env: &E,
+        floors: &[f64],
+        observer: Option<&mut dyn FnMut(&SearchEvent)>,
+    ) -> Result<FrontierReport> {
+        let layers = env.num_layers();
+        self.frontier_exec(&mut ConcurrentExec(env), layers, floors, observer)
+    }
+
+    /// Sequential variant of [`Self::build_frontier`] (see
+    /// [`Self::run_serial`]).
+    pub fn build_frontier_serial<E: SearchEnv>(
+        &self,
+        env: &mut E,
+        floors: &[f64],
+        observer: Option<&mut dyn FnMut(&SearchEvent)>,
+    ) -> Result<FrontierReport> {
+        let layers = env.num_layers();
+        self.frontier_exec(&mut SerialExec(env), layers, floors, observer)
+    }
+
+    fn frontier_exec<X: SegmentExec>(
+        &self,
+        x: &mut X,
+        num_layers: usize,
+        floors: &[f64],
+        mut observer: Option<&mut dyn FnMut(&SearchEvent)>,
+    ) -> Result<FrontierReport> {
+        ensure!(
+            self.partition.num_layers() == num_layers,
+            "partition covers {} layers, environment has {num_layers}",
+            self.partition.num_layers()
+        );
+        let order = self.partition.order();
+        if self.partition.num_segments() == 1 {
+            let mut front = ParetoFront::new(
+                self.algo,
+                order,
+                floors.to_vec(),
+                self.float_accuracy,
+                self.cost.clone(),
+                self.env_context.clone(),
+            )
+            .resume(self.resume);
+            if let Some(prefix) = &self.checkpoint_prefix {
+                front = front.checkpoint(prefix);
+            }
+            return x.monolithic_frontier(&front, observer);
+        }
+
+        ensure!(!floors.is_empty(), "frontier needs at least one accuracy floor");
+        ensure!(self.float_accuracy > 0.0, "float baseline accuracy must be positive");
+        for (i, &f) in floors.iter().enumerate() {
+            ensure!(f.is_finite() && f > 0.0 && f <= 1.0, "floor {f} out of (0, 1]");
+            ensure!(
+                !floors[..i].iter().any(|&g| g.to_bits() == f.to_bits()),
+                "duplicate floor {f} would re-run an identical search"
+            );
+        }
+
+        let t0 = Instant::now();
+        let k = self.partition.num_segments();
+        let total = floors.len();
+        let base = QuantConfig::float(num_layers);
+        let mut trails = Vec::with_capacity(total);
+        let mut decision_evals = 0usize;
+        let mut replayed_decisions = 0usize;
+        // Exact accuracies are pure functions of the config; dedupe across
+        // floors and composed points.
+        let mut exact: HashMap<u64, f64> = HashMap::new();
+
+        for (i, &floor) in floors.iter().enumerate() {
+            let abs_floor = floor * self.float_accuracy;
+            emit(&mut observer, SearchEvent::FrontierFloor { floor, index: i, total });
+            let recorders: Vec<FrontierRecorder> = self
+                .partition
+                .segments()
+                .iter()
+                .map(|seg| FrontierRecorder {
+                    abs_floor: scoped_floor(self.float_accuracy, abs_floor, seg.share),
+                    decisions: Arc::new(AtomicUsize::new(0)),
+                    trail: Mutex::new(Vec::new()),
+                })
+                .collect();
+            let mut tasks = Vec::with_capacity(k);
+            for (seg, recorder) in self.partition.segments().iter().zip(&recorders) {
+                let checkpoint = self.attach(
+                    &format!(".floor{i}.seg{}", seg.index),
+                    &recorder.describe(),
+                    &seg.layers,
+                )?;
+                tasks.push(SegTask {
+                    seg,
+                    objective: recorder,
+                    counter: Some(recorder.decisions.clone()),
+                    checkpoint,
+                });
+            }
+            let runs = x.run_tasks(self.algo, &base, tasks);
+            let mut outs = Vec::with_capacity(k);
+            for run in runs {
+                let run = run?;
+                replayed_decisions += run.replayed;
+                outs.push(run);
+            }
+
+            for (seg, run) in self.partition.segments().iter().zip(&outs) {
+                emit(
+                    &mut observer,
+                    SearchEvent::SegmentStarted {
+                        segment: seg.index,
+                        segments: k,
+                        layers: seg.layers.len(),
+                    },
+                );
+                if let Some(obs) = observer.as_mut() {
+                    for ev in &run.events {
+                        obs(ev);
+                    }
+                }
+                emit(
+                    &mut observer,
+                    SearchEvent::SegmentFinished {
+                        segment: seg.index,
+                        accuracy: run.outcome.accuracy,
+                        evals: run.outcome.evals,
+                    },
+                );
+            }
+
+            // Compose: walk the segments in order; earlier segments sit at
+            // their final bits while the current one replays its trail.
+            // This is exactly the trajectory a sequential whole-model
+            // search over the scoped floors would commit.
+            let mut prefix_cfg = base.clone();
+            let mut prefix_decisions = 0usize;
+            let mut raw: Vec<(QuantConfig, usize)> = Vec::new();
+            for ((seg, recorder), run) in
+                self.partition.segments().iter().zip(recorders).zip(&outs)
+            {
+                let seg_decisions = recorder.decisions.load(Ordering::Relaxed);
+                ensure!(
+                    seg_decisions + 1 == run.outcome.evals,
+                    "segment decision count out of sync at floor {floor}, segment {}: \
+                     {seg_decisions} decisions vs {} evals",
+                    seg.index,
+                    run.outcome.evals
+                );
+                let trail = recorder.trail.into_inner().expect("frontier trail poisoned");
+                ensure!(
+                    trail.last().is_some_and(|(c, _)| c.key() == run.outcome.config.key()),
+                    "segment trail out of sync with its outcome at floor {floor}, segment {}",
+                    seg.index
+                );
+                // The segment's own final evaluation is already exact; for
+                // segment 0 its configs coincide with the composed ones.
+                exact.insert(run.outcome.config.key(), run.outcome.accuracy);
+                for (cfg_s, dec) in trail {
+                    let mut point = prefix_cfg.clone();
+                    for &l in &seg.layers {
+                        point.set_layer(l, cfg_s.layer_bits(l));
+                    }
+                    if raw.last().is_none_or(|(c, _)| c.key() != point.key()) {
+                        raw.push((point, prefix_decisions + dec));
+                    }
+                }
+                for &l in &seg.layers {
+                    prefix_cfg.set_layer(l, run.outcome.config.layer_bits(l));
+                }
+                prefix_decisions += seg_decisions;
+            }
+            let floor_decisions = prefix_decisions;
+            decision_evals += floor_decisions;
+
+            let mut points = Vec::with_capacity(raw.len());
+            for (config, dec) in raw {
+                let accuracy = match exact.get(&config.key()) {
+                    Some(&a) => a,
+                    None => {
+                        let a = x.eval_exact(&config)?.accuracy;
+                        exact.insert(config.key(), a);
+                        a
+                    }
+                };
+                points.push(FrontierPoint {
+                    accuracy,
+                    rel_latency: self.cost.rel_latency(&config),
+                    rel_size: self.cost.rel_size(&config),
+                    cost_provenance: self.cost.provenance().to_string(),
+                    decisions: dec,
+                    config,
+                });
+            }
+            let last = points.last().expect("composed trail cannot be empty");
+            emit(
+                &mut observer,
+                SearchEvent::Reconciled {
+                    segments: k,
+                    accuracy: last.accuracy,
+                    cost: None,
+                    evals: floor_decisions,
+                },
+            );
+            trails.push(FloorTrail { floor, abs_floor, decisions: floor_decisions, points });
+        }
+
+        let artifact = FrontierArtifact {
+            algo: self.algo,
+            fingerprint: partitioned_frontier_fingerprint(
+                self.algo,
+                floors,
+                &order,
+                &self.env_context,
+                k,
+            ),
+            float_accuracy: self.float_accuracy,
+            cost_provenance: self.cost.provenance().to_string(),
+            partitions: k,
+            trails,
+        };
+        Ok(FrontierReport {
+            artifact,
+            path: None,
+            decision_evals,
+            replayed_decisions,
+            build_seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+// -------------------------------------------------------- synthetic glue
+
+/// Partitioned variant of [`super::build_frontier_synthetic`] — the
+/// harness behind `mpq pareto --synthetic --partitions K` and the CI
+/// kill/resume smoke. `partitions <= 1` delegates to the monolithic
+/// builder (bit-identical artifact); for `K > 1` the build runs one scoped
+/// thread per segment, so `workers` only affects the delegated case.
+#[allow(clippy::too_many_arguments)]
+pub fn build_frontier_synthetic_partitioned(
+    layers: usize,
+    seed: u64,
+    workers: usize,
+    algo: SearchAlgo,
+    floors: &[f64],
+    partitions: usize,
+    checkpoint_prefix: Option<&std::path::Path>,
+    resume: bool,
+    abort_after: Option<usize>,
+    observer: Option<&mut dyn FnMut(&SearchEvent)>,
+) -> Result<FrontierReport> {
+    if partitions <= 1 {
+        return super::pareto::build_frontier_synthetic(
+            layers,
+            seed,
+            workers,
+            algo,
+            floors,
+            checkpoint_prefix,
+            resume,
+            abort_after,
+            observer,
+        );
+    }
+    let mut env = SyntheticEnv::new(layers, seed);
+    if let Some(n) = abort_after {
+        env = env.abort_after(n);
+    }
+    let order = env.order();
+    let mut driver = PartitionedDriver::new(
+        algo,
+        Partition::split(&order, partitions),
+        1.0,
+        Arc::new(SyntheticCost::new(layers, seed)),
+        format!("synthetic/n{layers}/seed{seed}"),
+    )
+    .resume(resume);
+    if let Some(prefix) = checkpoint_prefix {
+        driver = driver.checkpoint(prefix);
+    }
+    driver.build_frontier(&SharedSegmentEval(&env), floors, observer)
+}
+
+/// Partitioned constrained search over the seeded [`SyntheticEnv`] — the
+/// harness behind `mpq search --synthetic --partitions K`. The returned
+/// outcome's `target` is the absolute floor (`target` itself — the
+/// synthetic float baseline is exactly 1.0).
+#[allow(clippy::too_many_arguments)]
+pub fn partitioned_search_synthetic(
+    layers: usize,
+    seed: u64,
+    algo: SearchAlgo,
+    spec: &ObjectiveSpec,
+    target: f64,
+    partitions: usize,
+    checkpoint: Option<&std::path::Path>,
+    resume: bool,
+    abort_after: Option<usize>,
+    observer: Option<&mut dyn FnMut(&SearchEvent)>,
+) -> Result<PartitionedOutcome> {
+    let mut env = SyntheticEnv::new(layers, seed);
+    if let Some(n) = abort_after {
+        env = env.abort_after(n);
+    }
+    let order = env.order();
+    let mut driver = PartitionedDriver::new(
+        algo,
+        Partition::split(&order, partitions),
+        1.0,
+        Arc::new(SyntheticCost::new(layers, seed)),
+        format!("synthetic/n{layers}/seed{seed}"),
+    )
+    .resume(resume);
+    if let Some(path) = checkpoint {
+        driver = driver.checkpoint(path);
+    }
+    driver.run(&SharedSegmentEval(&env), spec, target, observer)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_covers_the_order_exactly_once_and_stays_contiguous() {
+        let order: Vec<usize> = vec![4, 2, 7, 0, 1, 6, 3, 5];
+        for k in 1..=10 {
+            let p = Partition::split(&order, k);
+            assert_eq!(p.num_segments(), k.min(order.len()));
+            assert_eq!(p.order(), order, "K={k} must reassemble the order");
+            assert_eq!(p.num_layers(), order.len());
+            let share: f64 = p.segments().iter().map(|s| s.share).sum();
+            assert!((share - 1.0).abs() < 1e-12, "shares must sum to 1, got {share}");
+            let max = p.segments().iter().map(|s| s.layers.len()).max().unwrap();
+            let min = p.segments().iter().map(|s| s.layers.len()).min().unwrap();
+            assert!(max - min <= 1, "balanced split: {min}..{max}");
+        }
+    }
+
+    #[test]
+    fn split_clamps_k_and_handles_empty_orders() {
+        let p = Partition::split(&[3, 1], 5);
+        assert_eq!(p.num_segments(), 2);
+        let empty = Partition::split(&[], 4);
+        assert_eq!(empty.num_segments(), 1);
+        assert_eq!(empty.num_layers(), 0);
+    }
+
+    #[test]
+    fn scoped_budgets_compose_exactly() {
+        // Full share reproduces the global budget; shares sum the headroom.
+        assert!((scoped_budget(0.7, 1.0) - 0.7).abs() < 1e-12);
+        assert!((scoped_budget(0.7, 0.5) - 0.85).abs() < 1e-12);
+        let spent: f64 = [0.5, 0.25, 0.25].iter().map(|&w| 1.0 - scoped_budget(0.7, w)).sum();
+        assert!((spent - 0.3).abs() < 1e-12, "scoped headroom must sum to the global headroom");
+        assert!((scoped_floor(1.0, 0.9, 1.0) - 0.9).abs() < 1e-12);
+        let slack: f64 = [0.5, 0.5].iter().map(|&w| 1.0 - scoped_floor(1.0, 0.9, w)).sum();
+        assert!((slack - 0.1).abs() < 1e-12, "scoped slack must sum to the global slack");
+    }
+
+    #[test]
+    fn k1_run_matches_the_monolithic_search() {
+        let layers = 16;
+        for algo in [SearchAlgo::Greedy, SearchAlgo::Bisection] {
+            let env = SyntheticEnv::new(layers, 11);
+            let order = env.order();
+            let target = 0.9;
+            let mono = {
+                let mut env = SyntheticEnv::new(layers, 11);
+                algo.run(&mut env, &order, &QUANT_BITS, target).unwrap()
+            };
+            let cost: Arc<dyn CostModel> = Arc::new(SyntheticCost::new(layers, 11));
+            let driver = PartitionedDriver::new(
+                algo,
+                Partition::split(&order, 1),
+                1.0,
+                cost,
+                "synthetic/test",
+            );
+            let out = driver
+                .run(&SharedSegmentEval(&env), &ObjectiveSpec::AccuracyTarget, target, None)
+                .unwrap();
+            assert_eq!(out.outcome.config, mono.config, "{algo:?}");
+            assert_eq!(out.outcome.evals, mono.evals, "{algo:?}");
+            assert!(out.segments.is_empty());
+        }
+    }
+
+    #[test]
+    fn partitioned_run_reconciles_and_respects_scoped_budgets() {
+        let layers = 24;
+        let env = SyntheticEnv::new(layers, 7);
+        let order = env.order();
+        let cost = Arc::new(SyntheticCost::new(layers, 7));
+        let budget = 0.7;
+        let driver = PartitionedDriver::new(
+            SearchAlgo::Greedy,
+            Partition::split(&order, 3),
+            1.0,
+            cost.clone(),
+            "synthetic/test",
+        );
+        let mut events = Vec::new();
+        let mut obs = |ev: &SearchEvent| events.push(ev.clone());
+        let out = driver
+            .run(
+                &SharedSegmentEval(&env),
+                &ObjectiveSpec::LatencyBudget { rel_latency: budget },
+                0.5,
+                Some(&mut obs),
+            )
+            .unwrap();
+        assert_eq!(out.segments.len(), 3);
+        assert_eq!(out.satisfied.len(), 3);
+        let seg_evals: usize = out.segments.iter().map(|s| s.evals).sum();
+        assert_eq!(out.outcome.evals, seg_evals + 1, "reconciliation adds exactly one eval");
+        if out.all_satisfied() {
+            assert!(
+                cost.rel_latency(&out.outcome.config) <= budget + 1e-12,
+                "scoped budgets must compose into the global budget"
+            );
+        }
+        let starts = events
+            .iter()
+            .filter_map(|e| match e {
+                SearchEvent::SegmentStarted { segment, .. } => Some(*segment),
+                _ => None,
+            })
+            .collect::<Vec<_>>();
+        assert_eq!(starts, vec![0, 1, 2], "segment events replay in fixed order");
+        assert!(
+            events.iter().any(|e| matches!(e, SearchEvent::Reconciled { segments: 3, .. })),
+            "reconciliation must be announced"
+        );
+    }
+
+    #[test]
+    fn serial_and_concurrent_partitioned_runs_agree() {
+        let layers = 20;
+        for algo in [SearchAlgo::Greedy, SearchAlgo::Bisection] {
+            let env = SyntheticEnv::new(layers, 3);
+            let order = env.order();
+            let cost: Arc<dyn CostModel> = Arc::new(SyntheticCost::new(layers, 3));
+            let driver = PartitionedDriver::new(
+                algo,
+                Partition::split(&order, 4),
+                1.0,
+                cost,
+                "synthetic/test",
+            );
+            let spec = ObjectiveSpec::FootprintBudget { rel_size: 0.6 };
+            let conc =
+                driver.run(&SharedSegmentEval(&env), &spec, 0.5, None).unwrap();
+            let mut serial_env = SyntheticEnv::new(layers, 3);
+            let serial = driver.run_serial(&mut serial_env, &spec, 0.5, None).unwrap();
+            assert_eq!(conc.outcome.config, serial.outcome.config, "{algo:?}");
+            assert_eq!(conc.outcome.evals, serial.outcome.evals, "{algo:?}");
+            assert_eq!(conc.satisfied, serial.satisfied, "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn k1_frontier_delegates_byte_identically() {
+        let layers = 12;
+        let floors = [0.9, 0.99];
+        let mono = super::super::pareto::build_frontier_synthetic(
+            layers,
+            5,
+            1,
+            SearchAlgo::Greedy,
+            &floors,
+            None,
+            false,
+            None,
+            None,
+        )
+        .unwrap();
+        let part = build_frontier_synthetic_partitioned(
+            layers,
+            5,
+            1,
+            SearchAlgo::Greedy,
+            &floors,
+            1,
+            None,
+            false,
+            None,
+            None,
+        )
+        .unwrap();
+        assert_eq!(
+            part.artifact.to_json().to_string(),
+            mono.artifact.to_json().to_string(),
+            "K=1 must reproduce the monolithic artifact byte for byte"
+        );
+    }
+
+    #[test]
+    fn composed_frontier_is_deterministic_and_monotone() {
+        let layers = 24;
+        let floors = [0.9, 0.99];
+        let a = build_frontier_synthetic_partitioned(
+            layers, 7, 1, SearchAlgo::Greedy, &floors, 4, None, false, None, None,
+        )
+        .unwrap();
+        let b = build_frontier_synthetic_partitioned(
+            layers, 7, 2, SearchAlgo::Greedy, &floors, 4, None, false, None, None,
+        )
+        .unwrap();
+        assert_eq!(
+            a.artifact.to_json().to_string(),
+            b.artifact.to_json().to_string(),
+            "composed artifact must not depend on concurrency"
+        );
+        assert_eq!(a.artifact.partitions, 4);
+        for trail in &a.artifact.trails {
+            let first = &trail.points[0];
+            assert_eq!(first.decisions, 0, "trail opens with the float baseline");
+            assert!((first.rel_latency - 1.0).abs() < 1e-12);
+            for pair in trail.points.windows(2) {
+                assert!(pair[0].decisions < pair[1].decisions, "decision counts must increase");
+                assert!(
+                    pair[1].rel_size <= pair[0].rel_size + 1e-12,
+                    "composed trail walks toward smaller configs"
+                );
+            }
+        }
+    }
+}

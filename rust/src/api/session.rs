@@ -20,7 +20,7 @@ use crate::Result;
 
 use super::{
     checkpoint_fingerprint, run_search, Checkpoint, FrontierReport, ModelContext, ParetoFront,
-    SearchEvent, SearchSpec,
+    Partition, PartitionedDriver, SearchEvent, SearchSpec,
 };
 
 /// Everything a finished search run reports.
@@ -154,19 +154,40 @@ fn run_pareto_session(
     ctx.ensure_calibrated_with(Some(&mut fan))?;
     let sens = ctx.sensitivity_for(spec)?;
     let float_accuracy = ctx.pipeline.float_val_acc();
-    let mut front = ParetoFront::new(
-        spec.algo,
-        sens.order.clone(),
-        floors.to_vec(),
-        float_accuracy,
-        ctx.cost.clone(),
-        ctx.pipeline.eval_context(),
-    )
-    .resume(spec.resume);
-    if let Some(prefix) = &spec.checkpoint {
-        front = front.checkpoint(prefix);
-    }
-    let mut report = front.build(ctx, Some(&mut fan))?;
+    let mut report = if spec.partitions > 1 {
+        // Partitioned build: per floor, one scoped exhaustion search per
+        // segment (fanned across the pool when one exists, each worker
+        // owning a segment), composed into one whole-model trail.
+        let mut driver = PartitionedDriver::new(
+            spec.algo,
+            Partition::split(&sens.order, spec.partitions),
+            float_accuracy,
+            ctx.cost.clone(),
+            ctx.pipeline.eval_context(),
+        )
+        .resume(spec.resume);
+        if let Some(prefix) = &spec.checkpoint {
+            driver = driver.checkpoint(prefix);
+        }
+        match ctx.pool() {
+            Some(pool) => driver.build_frontier(pool, floors, Some(&mut fan))?,
+            None => driver.build_frontier_serial(ctx, floors, Some(&mut fan))?,
+        }
+    } else {
+        let mut front = ParetoFront::new(
+            spec.algo,
+            sens.order.clone(),
+            floors.to_vec(),
+            float_accuracy,
+            ctx.cost.clone(),
+            ctx.pipeline.eval_context(),
+        )
+        .resume(spec.resume);
+        if let Some(prefix) = &spec.checkpoint {
+            front = front.checkpoint(prefix);
+        }
+        front.build(ctx, Some(&mut fan))?
+    };
     let (memo_hits, persistent_hits) = ctx.cache_hits();
     fan(&SearchEvent::CacheReport { memo_hits, persistent_hits });
     ctx.flush_eval_cache()?;
@@ -200,6 +221,9 @@ fn run_session(
     ctx.ensure_calibrated_with(Some(&mut fan))?;
     let sens = ctx.sensitivity_for(spec)?;
     let floor = spec.target * ctx.pipeline.float_val_acc();
+    if spec.partitions > 1 {
+        return run_partitioned_session(ctx, spec, algo, floor, &sens.order, &mut fan);
+    }
     let objective = spec.objective.build(floor, ctx.cost.clone());
 
     let mut checkpoint = match &spec.checkpoint {
@@ -242,5 +266,53 @@ fn run_session(
         replayed_decisions: checkpoint.as_ref().map_or(replayable, Checkpoint::replayed),
         checkpointed_decisions: checkpoint.as_ref().map_or(0, Checkpoint::len),
         outcome,
+    })
+}
+
+/// The `--partitions K > 1` body of [`SearchSession::run_algo`]: the
+/// sensitivity order is split into `K` contiguous segments searched under
+/// pro-rated budgets — fanned across the context's worker pool when one
+/// exists (each worker owns a segment), sequentially on the context
+/// otherwise (identical decisions either way) — then reconciled into one
+/// whole-model configuration.
+fn run_partitioned_session(
+    ctx: &mut ModelContext,
+    spec: &SearchSpec,
+    algo: SearchAlgo,
+    floor: f64,
+    order: &[usize],
+    fan: &mut dyn FnMut(&SearchEvent),
+) -> Result<SearchReport> {
+    let mut driver = PartitionedDriver::new(
+        algo,
+        Partition::split(order, spec.partitions),
+        ctx.pipeline.float_val_acc(),
+        ctx.cost.clone(),
+        ctx.pipeline.eval_context(),
+    )
+    .resume(spec.resume);
+    if let Some(prefix) = &spec.checkpoint {
+        driver = driver.checkpoint(prefix);
+    }
+    let t0 = Instant::now();
+    let out = match ctx.pool() {
+        Some(pool) => driver.run(pool, &spec.objective, floor, Some(&mut *fan))?,
+        None => driver.run_serial(ctx, &spec.objective, floor, Some(&mut *fan))?,
+    };
+    let search_seconds = t0.elapsed().as_secs_f64();
+    let (memo_hits, persistent_hits) = ctx.cache_hits();
+    fan(&SearchEvent::CacheReport { memo_hits, persistent_hits });
+    ctx.flush_eval_cache()?;
+    Ok(SearchReport {
+        rel_size: ctx.cost.rel_size(&out.outcome.config),
+        rel_latency: ctx.cost.rel_latency(&out.outcome.config),
+        cost_provenance: ctx.cost.provenance().to_string(),
+        algo,
+        metric: spec.metric,
+        search_seconds,
+        workers: spec.workers,
+        replayed_decisions: out.replayed_decisions,
+        checkpointed_decisions: out.checkpointed_decisions,
+        outcome: out.outcome,
     })
 }

@@ -93,7 +93,9 @@ pub enum ScaleSpec {
 #[derive(Debug, Clone, PartialEq)]
 pub struct CacheSpec {
     pub enabled: bool,
-    /// Override path; default `<artifacts>/<model>_evalcache.json`.
+    /// Override path; default is the shared multi-model store layout
+    /// `<artifacts>/<model>/evalcache.json` (legacy flat
+    /// `<model>_evalcache.json` files migrate in on first attach).
     pub path: Option<PathBuf>,
     /// Entry bound with last-used-ordered eviction; `None` = unbounded.
     pub capacity: Option<usize>,
@@ -124,6 +126,11 @@ pub struct SearchSpec {
     pub cache: CacheSpec,
     pub checkpoint: Option<PathBuf>,
     pub resume: bool,
+    /// Contiguous segments the sensitivity order is split into; `1` = the
+    /// monolithic whole-model search (bit-identical to the pre-partition
+    /// behaviour), `K>1` searches segments concurrently and composes the
+    /// results with a global budget reconciliation pass.
+    pub partitions: usize,
 }
 
 impl SearchSpec {
@@ -145,6 +152,7 @@ impl SearchSpec {
             cache: CacheSpec::default(),
             checkpoint: None,
             resume: false,
+            partitions: 1,
         }
     }
 
@@ -243,6 +251,13 @@ impl SearchSpec {
         self
     }
 
+    /// Split the sensitivity order into `partitions` contiguous segments
+    /// searched concurrently (see [`crate::api::PartitionedDriver`]).
+    pub fn partitions(mut self, partitions: usize) -> Self {
+        self.partitions = partitions;
+        self
+    }
+
     /// Check everything that can be checked without touching disk.
     pub fn validate(&self) -> Result<()> {
         ensure!(!self.model.is_empty(), "SearchSpec: model name must not be empty");
@@ -272,6 +287,7 @@ impl SearchSpec {
             !self.resume || self.checkpoint.is_some(),
             "SearchSpec: resume requires a checkpoint path"
         );
+        ensure!(self.partitions >= 1, "SearchSpec: partitions must be >= 1");
         Ok(())
     }
 
@@ -328,6 +344,7 @@ mod tests {
             (SearchSpec::new("m").footprint_budget(-0.5), "negative size budget"),
             (SearchSpec::new("m").cache_capacity(0), "0 cache capacity"),
             (SearchSpec::new("m").resume(true), "resume without checkpoint"),
+            (SearchSpec::new("m").partitions(0), "0 partitions"),
         ] {
             assert!(spec.validate().is_err(), "{what} should be rejected");
         }

@@ -57,10 +57,32 @@ pub fn search_with<E: SearchEnv>(
     quant_bits: &[f32],
     ctl: &mut SearchCtl<'_>,
 ) -> Result<SearchOutcome> {
+    assert_eq!(order.len(), env.num_layers(), "ordering must cover every quant layer");
+    let base = QuantConfig::float(env.num_layers());
+    search_scoped(env, order, &base, quant_bits, ctl)
+}
+
+/// Bisection search restricted to the layers in `order`, starting from
+/// `base`.
+///
+/// Layers outside `order` keep whatever width `base` assigns them (the
+/// partitioned driver freezes the complement at reference precision), so a
+/// segment's probes depend only on its own prefix plus the fixed base.
+/// With the full order and an all-float base this is exactly
+/// [`search_with`] — the whole-model search is the K=1 special case.
+pub fn search_scoped<E: SearchEnv>(
+    env: &mut E,
+    order: &[usize],
+    base: &QuantConfig,
+    quant_bits: &[f32],
+    ctl: &mut SearchCtl<'_>,
+) -> Result<SearchOutcome> {
     let n = env.num_layers();
-    assert_eq!(order.len(), n, "ordering must cover every quant layer");
+    assert_eq!(base.num_layers(), n, "base config must cover every quant layer");
+    assert!(order.len() <= n, "segment cannot exceed the layer count");
+    assert!(order.iter().all(|&l| l < n), "segment layer out of range");
     let window = env.preferred_batch().max(1);
-    let mut w = QuantConfig::float(n);
+    let mut w = base.clone();
     if let Some(done) = ctl.baseline_outcome(env, &w)? {
         return Ok(done);
     }

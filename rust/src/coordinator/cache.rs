@@ -69,6 +69,38 @@ pub struct EvalCache {
 }
 
 impl EvalCache {
+    /// Canonical location of one model's cache inside the shared
+    /// multi-model store layout: `<dir>/<model>/evalcache.json`. Grouping
+    /// per-model state under one directory keeps a model's cached results
+    /// enumerable (and removable) as a unit when several models share a
+    /// cache directory.
+    pub fn store_path(dir: &Path, model: &str) -> PathBuf {
+        dir.join(model).join("evalcache.json")
+    }
+
+    /// Resolve the store path for `model` under `dir`, migrating the
+    /// legacy flat layout (`<dir>/<model>_evalcache.json`) into the store
+    /// on first use. The on-disk schema is unchanged (same
+    /// [`EVAL_CACHE_VERSION`], same context guard) — only the location
+    /// moves, so a migrated file loads exactly as it would have from the
+    /// flat path. Best-effort: the store directory is created, an existing
+    /// store file always wins (a stale flat file is left untouched), and
+    /// any filesystem failure simply yields the store path — the loader
+    /// degrades to an empty cache rather than erroring.
+    pub fn migrate_flat_layout(dir: &Path, model: &str) -> PathBuf {
+        let store = Self::store_path(dir, model);
+        if let Some(parent) = store.parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        if !store.exists() {
+            let flat = dir.join(format!("{model}_evalcache.json"));
+            if flat.is_file() {
+                let _ = std::fs::rename(&flat, &store);
+            }
+        }
+        store
+    }
+
     /// Open the cache at `path` for the given context fingerprint. A
     /// missing, unreadable, corrupt or context-mismatched file yields an
     /// empty cache (never an error — the cache is an optimization).
@@ -438,6 +470,53 @@ mod tests {
             assert!(trimmed.lookup(k).is_some(), "key {k} should survive");
         }
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn store_layout_migrates_the_flat_file_once() {
+        let dir = std::env::temp_dir().join("mpq_evalcache_store_migrate");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // Seed a legacy flat-layout cache with one entry.
+        let flat = dir.join("bert_s_evalcache.json");
+        let mut old = EvalCache::load(&flat, "ctx");
+        old.insert(42, &exact(0.5, 0.9));
+        old.save().unwrap();
+
+        let store = EvalCache::migrate_flat_layout(&dir, "bert_s");
+        assert_eq!(store, EvalCache::store_path(&dir, "bert_s"));
+        assert_eq!(store, dir.join("bert_s").join("evalcache.json"));
+        assert!(store.is_file(), "flat file should move into the store");
+        assert!(!flat.exists(), "flat file should be gone after migration");
+        let mut migrated = EvalCache::load(&store, "ctx");
+        assert_eq!(migrated.lookup(42).unwrap(), exact(0.5, 0.9));
+
+        // Idempotent: a second resolve keeps the store file as-is, and a
+        // freshly appearing flat file never overwrites an existing store.
+        std::fs::write(&flat, "{stale}").unwrap();
+        let again = EvalCache::migrate_flat_layout(&dir, "bert_s");
+        assert_eq!(again, store);
+        assert!(flat.is_file(), "existing store must win over a flat file");
+        let mut re = EvalCache::load(&store, "ctx");
+        assert!(re.lookup(42).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn store_layout_resolves_without_a_flat_file() {
+        let dir = std::env::temp_dir().join("mpq_evalcache_store_fresh");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let store = EvalCache::migrate_flat_layout(&dir, "resnet_s");
+        assert!(!store.exists(), "nothing to migrate");
+        assert!(store.parent().unwrap().is_dir(), "store dir is created for the first save");
+        // A cache saved at the resolved path loads back from the store.
+        let mut c = EvalCache::load(&store, "ctx");
+        c.insert(7, &exact(0.25, 0.5));
+        c.save().unwrap();
+        let mut re = EvalCache::load(&EvalCache::store_path(&dir, "resnet_s"), "ctx");
+        assert_eq!(re.lookup(7).unwrap(), exact(0.25, 0.5));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -142,6 +142,25 @@ impl SearchAlgo {
             SearchAlgo::Greedy => greedy::search_with(env, order, quant_bits, ctl),
         }
     }
+
+    /// Run scoped to a segment of the layer order, starting from `base`
+    /// instead of the all-float config; layers outside `order` keep their
+    /// `base` width (see `greedy::search_scoped` /
+    /// `bisection::search_scoped`). With the full order and a float base
+    /// this is exactly [`SearchAlgo::run_with`].
+    pub fn run_scoped<E: SearchEnv>(
+        self,
+        env: &mut E,
+        order: &[usize],
+        base: &QuantConfig,
+        quant_bits: &[f32],
+        ctl: &mut crate::api::SearchCtl<'_>,
+    ) -> Result<SearchOutcome> {
+        match self {
+            SearchAlgo::Bisection => bisection::search_scoped(env, order, base, quant_bits, ctl),
+            SearchAlgo::Greedy => greedy::search_scoped(env, order, base, quant_bits, ctl),
+        }
+    }
 }
 
 impl std::str::FromStr for SearchAlgo {

@@ -150,7 +150,8 @@ pub struct PipelinePool {
     /// Per-quant-layer weight element counts (trace normalization).
     weight_numels: Vec<u64>,
     /// Evaluations dispatched to workers (shared-cache hits excluded).
-    dispatched: usize,
+    /// Atomic so concurrent segment drivers can submit through `&self`.
+    dispatched: std::sync::atomic::AtomicUsize,
 }
 
 impl PipelinePool {
@@ -223,7 +224,7 @@ impl PipelinePool {
             batch_sizes: info.batch_sizes,
             adjust_batches: info.adjust_batches,
             weight_numels: info.weight_numels,
-            dispatched: 0,
+            dispatched: std::sync::atomic::AtomicUsize::new(0),
         })
     }
 
@@ -315,7 +316,7 @@ impl PipelinePool {
 
     /// Evaluations that actually reached a worker (cache misses).
     pub fn dispatched(&self) -> usize {
-        self.dispatched
+        self.dispatched.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     /// Lookups answered without touching a device:
@@ -327,7 +328,31 @@ impl PipelinePool {
         (memo, persistent)
     }
 
-    fn submit(&mut self, cfgs: &[QuantConfig], target: Option<f64>) -> Vec<Result<EvalResult>> {
+    /// Evaluate a batch on one specific worker pipeline
+    /// (`worker % num_workers()`) instead of scattering slots round-robin.
+    /// The partitioned driver pins each segment to its own worker this
+    /// way, so segments proceed concurrently without interleaving on a
+    /// single pipeline. Shared-cache hits still short-circuit, and exact
+    /// hits are target-independent, so affinity never changes a decision.
+    pub fn eval_on(
+        &self,
+        worker: usize,
+        cfgs: &[QuantConfig],
+        target: Option<f64>,
+    ) -> Vec<Result<EvalResult>> {
+        self.submit_inner(cfgs, target, Some(worker))
+    }
+
+    fn submit(&self, cfgs: &[QuantConfig], target: Option<f64>) -> Vec<Result<EvalResult>> {
+        self.submit_inner(cfgs, target, None)
+    }
+
+    fn submit_inner(
+        &self,
+        cfgs: &[QuantConfig],
+        target: Option<f64>,
+        affinity: Option<usize>,
+    ) -> Vec<Result<EvalResult>> {
         let mut slots: Vec<Option<Result<EvalResult>>> = Vec::new();
         slots.resize_with(cfgs.len(), || None);
         let (resp_tx, resp_rx) = mpsc::channel();
@@ -340,13 +365,13 @@ impl PipelinePool {
                 slots[slot] = Some(Ok(hit));
                 continue;
             }
-            let worker = &self.workers[slot % self.workers.len()];
+            let worker = &self.workers[affinity.unwrap_or(slot) % self.workers.len()];
             let job = Job { cfg: cfg.clone(), target, slot, resp: resp_tx.clone() };
             if worker.tx.send(WorkerJob::Eval(job)).is_err() {
                 slots[slot] = Some(Err(anyhow!("pool worker exited")));
                 continue;
             }
-            self.dispatched += 1;
+            self.dispatched.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             outstanding += 1;
         }
         drop(resp_tx);

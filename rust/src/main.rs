@@ -29,9 +29,9 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use mpq::api::{
-    build_frontier_synthetic, log_event, run_search, BackendSpec, Checkpoint, CostModel,
-    FrontierArtifact, FrontierReport, ObjectiveSpec, PickSpec, SearchSpec, SyntheticCost,
-    SyntheticEnv, SyntheticStage,
+    build_frontier_synthetic_partitioned, log_event, run_search, BackendSpec, Checkpoint,
+    CostModel, FrontierArtifact, FrontierReport, ObjectiveSpec, PickSpec, SearchSpec,
+    SyntheticCost, SyntheticEnv, SyntheticStage,
 };
 use mpq::coordinator::{
     calibrate_sharded, hessian_trace_sharded, noise_scores_sharded, ParallelEnv, SearchAlgo,
@@ -40,8 +40,9 @@ use mpq::model::ArtifactIndex;
 use mpq::quant::{CalibrationOptions, QuantConfig, QUANT_BITS};
 use mpq::report::experiments::{self, ExperimentCtx, METRIC_TRIALS};
 use mpq::report::{
-    budget_sweep_from_frontier, budget_sweep_synthetic, cells_to_json, render_sweep,
-    sweep_cells_json, sweep_fingerprint, BudgetKind, Driver, SweepCheckpoint, SweepGrid,
+    budget_sweep_from_frontier, budget_sweep_synthetic, budget_sweep_synthetic_costed,
+    cells_to_json, render_sweep, sweep_cells_json, sweep_fingerprint, synthetic_table_cost,
+    BudgetKind, Driver, SweepCheckpoint, SweepGrid,
 };
 use mpq::sensitivity::{MetricKind, NoiseOptions};
 use mpq::util::cli::Args;
@@ -67,6 +68,7 @@ COMMANDS
               [--seed 0] [--workers 1] [--trials 5]
               [--budget-latency F | --budget-size F]
               [--backend a100|tpu | --table kernels.json] [--native-scale]
+              [--partitions K]  (segment-scoped search + reconciliation)
               [--checkpoint ck.json [--resume]] [--cache-capacity N]
               [--no-cache] [--abort-after N (synthetic only)]
   table       --id 1|2|3 [--model M] [--out DIR] [--workers 1]
@@ -76,6 +78,7 @@ COMMANDS
               [--floors 0.9,0.99] [--algo greedy|bisection]
               [--metric hessian] [--seed 0] [--trials 5] [--workers 1]
               [--backend a100|tpu | --table kernels.json]
+                (--table also works with --synthetic: per-backend variant)
               [--checkpoint sweep.ck.json [--resume]] [--out DIR]
               [--from-frontier frontier.json]  (O(1) lookups, no searches)
               [--abort-after N (synthetic only)]
@@ -83,6 +86,7 @@ COMMANDS
               [--floors 0.9,0.99] [--algo greedy|bisection]
               [--metric hessian] [--seed 0] [--trials 5] [--workers 1]
               [--backend a100|tpu | --table kernels.json]
+              [--partitions K]  (concurrent per-segment frontiers)
               [--checkpoint front.ck [--resume]] [--out frontier.json]
               [--abort-after N (synthetic only)]
   figure      --id 1|3|4 [--model M] [--out DIR]
@@ -441,6 +445,9 @@ struct SearchCmd {
     resume: bool,
     cache_capacity: Option<usize>,
     no_cache: bool,
+    /// Split the sensitivity order into K segments searched concurrently
+    /// with pro-rated budgets, then reconciled (1 = whole-model search).
+    partitions: usize,
     /// Synthetic only: error out after N raw evals (simulated kill).
     abort_after: Option<usize>,
 }
@@ -507,6 +514,7 @@ impl SearchCmd {
             resume: args.flag("resume"),
             cache_capacity: args.get_str("cache-capacity").map(str::parse).transpose()?,
             no_cache: args.flag("no-cache"),
+            partitions: args.get_or("partitions", 1usize)?.max(1),
             abort_after: args.get_str("abort-after").map(str::parse).transpose()?,
         };
         anyhow::ensure!(
@@ -547,6 +555,7 @@ impl SearchCmd {
             .workers(self.workers)
             .objective(self.objective)
             .backend(self.backend.clone())
+            .partitions(self.partitions)
             .resume(self.resume);
         if self.native_scale {
             spec = spec.deploy_scale(mpq::api::ScaleSpec::Native);
@@ -620,6 +629,11 @@ impl SearchCmd {
         let n = self.synthetic.expect("checked in parse");
         let spec = self.to_spec("synthetic").no_cache();
         spec.validate()?;
+        // `--partitions 1` stays on the monolithic code path below, so the
+        // default CLI behaviour is literally unchanged.
+        if self.partitions > 1 {
+            return self.run_synthetic_partitioned(n);
+        }
         let mut env = SyntheticEnv::new(n, self.seed);
         if let Some(limit) = self.abort_after {
             env = env.abort_after(limit);
@@ -668,6 +682,46 @@ impl SearchCmd {
             ("evals", Value::Num(outcome.evals as f64)),
             ("rel_latency", Value::Num(cost.rel_latency(&outcome.config))),
             ("rel_size", Value::Num(cost.rel_size(&outcome.config))),
+        ]);
+        println!("RESULT {summary}");
+        Ok(())
+    }
+
+    /// Synthetic search split into `--partitions K` segments: each segment
+    /// searches under a pro-rated budget concurrently, then one global
+    /// reconciliation evaluation prices and validates the composed
+    /// configuration (see `api/partition.rs`).
+    fn run_synthetic_partitioned(self, n: usize) -> Result<()> {
+        let mut observer = log_event;
+        let out = mpq::api::partitioned_search_synthetic(
+            n,
+            self.seed,
+            self.algo,
+            &self.objective,
+            self.target,
+            self.partitions,
+            self.checkpoint.as_deref(),
+            self.resume,
+            self.abort_after,
+            Some(&mut observer),
+        )?;
+        let cost = SyntheticCost::new(n, self.seed);
+        eprintln!(
+            "[search] partitioned synthetic run: {} segments, {} decisions checkpointed, \
+             {} replayed, scoped budgets satisfied: {:?}",
+            out.segments.len(),
+            out.checkpointed_decisions,
+            out.replayed_decisions,
+            out.satisfied,
+        );
+        // Same RESULT shape as the monolithic synthetic run, so scripts
+        // parse both uniformly (segment detail goes to stderr).
+        let summary = Value::obj(vec![
+            ("accuracy", Value::Num(out.outcome.accuracy)),
+            ("config", Value::arr_f32(&out.outcome.config.bits_w)),
+            ("evals", Value::Num(out.outcome.evals as f64)),
+            ("rel_latency", Value::Num(cost.rel_latency(&out.outcome.config))),
+            ("rel_size", Value::Num(cost.rel_size(&out.outcome.config))),
         ]);
         println!("RESULT {summary}");
         Ok(())
@@ -806,8 +860,15 @@ impl ReportCmd {
             !cmd.resume || cmd.checkpoint.is_some(),
             "--resume requires a --checkpoint path"
         );
+        anyhow::ensure!(
+            cmd.from_frontier.is_none() || args.get_str("table").is_none(),
+            "--table does not apply to --from-frontier lookups (cells are priced by the artifact)"
+        );
         if cmd.synthetic.is_some() {
-            for flag in ["metric", "trials", "backend", "table"] {
+            // --table IS allowed with --synthetic: it prices the synthetic
+            // model's shapes with a measured kernel table (the per-backend
+            // Table-2 variant).
+            for flag in ["metric", "trials", "backend"] {
                 anyhow::ensure!(
                     args.get_str(flag).is_none(),
                     "--{flag} does not apply to --synthetic sweeps"
@@ -929,6 +990,27 @@ impl ReportCmd {
             artifact.verify(algo, &order, &format!("synthetic/n{layers}/seed{}", self.seed))?;
             return self.run_from_frontier(&artifact, "synthetic");
         }
+        // `--table kernels.json` swaps the synthetic roofline for a
+        // measured kernel table over the synthetic manifest's shapes: the
+        // per-backend Table-2 variant (see the checked-in `tables/`).
+        if let BackendSpec::MeasuredTable(path) = self.backend.clone() {
+            let cost = synthetic_table_cost(layers, &path)?;
+            let backend = path.file_stem().and_then(|s| s.to_str()).unwrap_or("table").to_string();
+            let env_context =
+                format!("synthetic/n{layers}/seed{}/{}", self.seed, cost.provenance());
+            let mut ck = self.attach_checkpoint(&order, &env_context)?;
+            let cells = budget_sweep_synthetic_costed(
+                layers,
+                self.seed,
+                self.workers,
+                self.algo,
+                &self.grid,
+                cost,
+                ck.as_mut(),
+                self.abort_after,
+            )?;
+            return self.emit(&format!("synthetic_{backend}"), &cells);
+        }
         let mut ck =
             self.attach_checkpoint(&order, &format!("synthetic/n{layers}/seed{}", self.seed))?;
         let cells = budget_sweep_synthetic(
@@ -964,6 +1046,9 @@ struct ParetoCmd {
     checkpoint: Option<PathBuf>,
     resume: bool,
     out: Option<PathBuf>,
+    /// Split each floor's search into K concurrently searched segments,
+    /// composing per-segment trails into one frontier (1 = whole-model).
+    partitions: usize,
     /// Synthetic only: error out after N decision evaluations (the CI
     /// kill/resume smoke).
     abort_after: Option<usize>,
@@ -984,6 +1069,7 @@ impl ParetoCmd {
             checkpoint: args.get_str("checkpoint").map(PathBuf::from),
             resume: args.flag("resume"),
             out: args.get_str("out").map(PathBuf::from),
+            partitions: args.get_or("partitions", 1usize)?.max(1),
             abort_after: args.get_str("abort-after").map(str::parse).transpose()?,
         };
         anyhow::ensure!(
@@ -1043,6 +1129,7 @@ impl ParetoCmd {
             .trials(self.trials.max(1))
             .seed(self.seed)
             .backend(self.backend.clone())
+            .partitions(self.partitions)
             .resume(self.resume);
         if let Some(ck) = &self.checkpoint {
             spec = spec.checkpoint(ck);
@@ -1069,12 +1156,15 @@ impl ParetoCmd {
     fn run_synthetic(self) -> Result<()> {
         let layers = self.synthetic.expect("checked in parse");
         let mut observer = log_event;
-        let report = build_frontier_synthetic(
+        // `--partitions 1` delegates straight to the monolithic builder
+        // inside, so the default path (and its artifacts) are unchanged.
+        let report = build_frontier_synthetic_partitioned(
             layers,
             self.seed,
             self.workers,
             self.algo,
             &self.floors,
+            self.partitions,
             self.checkpoint.as_deref(),
             self.resume,
             self.abort_after,

@@ -207,6 +207,75 @@ impl Manifest {
         Ok(())
     }
 
+    /// A schema-valid synthetic manifest with `layers` quantizable layers
+    /// cycling through four GEMM-equivalent shape classes — the costing
+    /// counterpart of the artifact-free synthetic search environment. No
+    /// parameter blob, graphs, or data files exist on disk; the manifest is
+    /// only ever consumed by cost models and kernel-table validation (the
+    /// checked-in example tables under `rust/tables/` cover exactly these
+    /// shape classes).
+    pub fn synthetic(layers: usize) -> Self {
+        const CLASSES: [(&str, u64, u64, u64); 4] = [
+            ("gemm", 64, 256, 256),
+            ("gemm", 64, 512, 256),
+            ("attn_gemm", 64, 256, 64),
+            ("conv2d", 196, 128, 576),
+        ];
+        let mut params = Vec::with_capacity(layers);
+        let mut quant_layers = Vec::with_capacity(layers);
+        let mut offset = 0usize;
+        for i in 0..layers {
+            let (kind, m, n, k) = CLASSES[i % CLASSES.len()];
+            let weight_numel = (n * k) as usize;
+            let param = format!("syn{i}_w");
+            params.push(ParamInfo {
+                name: param.clone(),
+                shape: vec![k as usize, n as usize],
+                numel: weight_numel,
+                offset,
+            });
+            offset += weight_numel;
+            quant_layers.push(LayerInfo {
+                name: format!("syn{i}"),
+                param,
+                kind: kind.to_string(),
+                quantizable: true,
+                macs: m * n * k,
+                weight_numel: weight_numel as u64,
+                act_in_numel: m * k,
+                out_numel: m * n,
+                m,
+                n,
+                k,
+                quant_index: i as i64,
+            });
+        }
+        let graphs = ["eval", "logits", "actstats", "scale_grad", "hvp"]
+            .into_iter()
+            .map(|g| (g.to_string(), format!("synthetic_{g}.hlo.txt")))
+            .collect();
+        let m = Manifest {
+            version: SUPPORTED_VERSION,
+            model: "synthetic".to_string(),
+            task: "synthetic".to_string(),
+            num_quant_layers: layers,
+            eval_batch: 8,
+            calib_batch: 8,
+            x_dtype: "f32".to_string(),
+            x_shape: vec![64],
+            y_shape: Vec::new(),
+            params_bin: "synthetic_params.bin".to_string(),
+            params,
+            layers: quant_layers,
+            graphs,
+            data: HashMap::new(),
+            float_val_loss: 0.0,
+            float_val_acc: 1.0,
+        };
+        debug_assert!(m.validate().is_ok(), "synthetic manifest must validate");
+        m
+    }
+
     /// Total parameter elements (f32 blob length).
     pub fn total_param_elems(&self) -> usize {
         self.params.iter().map(|p| p.numel).sum()
@@ -279,6 +348,24 @@ mod tests {
         assert_eq!(m.quant_layers()[1].name, "l1");
         assert_eq!(m.param_index("l1_w"), Some(2));
         assert_eq!(m.data["val"].count, 8);
+    }
+
+    #[test]
+    fn synthetic_manifest_validates_and_cycles_shape_classes() {
+        for layers in [1, 4, 6, 13] {
+            let m = Manifest::synthetic(layers);
+            m.validate().unwrap();
+            assert_eq!(m.num_quant_layers, layers);
+            assert_eq!(m.quant_layers().len(), layers);
+            assert!((m.float_val_acc - 1.0).abs() < 1e-12);
+        }
+        let m = Manifest::synthetic(6);
+        // Layers 0 and 4 share a shape class; 0..4 are all distinct.
+        assert_eq!(m.layers[0].kind, m.layers[4].kind);
+        assert_eq!(m.layers[0].n, m.layers[4].n);
+        let classes: std::collections::HashSet<_> =
+            m.layers[..4].iter().map(|l| (l.kind.clone(), l.m, l.n, l.k)).collect();
+        assert_eq!(classes.len(), 4, "first four layers span four shape classes");
     }
 
     #[test]

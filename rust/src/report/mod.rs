@@ -7,8 +7,8 @@ mod table;
 
 pub use sweep::{
     budget_sweep, budget_sweep_ctx, budget_sweep_from_frontier, budget_sweep_synthetic,
-    render_sweep, sweep_cells_json, sweep_fingerprint, BudgetKind, SweepCell, SweepCheckpoint,
-    SweepGrid,
+    budget_sweep_synthetic_costed, render_sweep, sweep_cells_json, sweep_fingerprint,
+    synthetic_table_cost, BudgetKind, SweepCell, SweepCheckpoint, SweepGrid,
 };
 pub use table::Table;
 

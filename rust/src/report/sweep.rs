@@ -366,6 +366,52 @@ pub fn budget_sweep_synthetic(
     abort_after: Option<usize>,
 ) -> Result<Vec<SweepCell>> {
     let cost = Arc::new(SyntheticCost::new(layers, seed));
+    budget_sweep_synthetic_costed(layers, seed, workers, algo, grid, cost, checkpoint, abort_after)
+}
+
+/// Build the cost model that prices the synthetic environment with a
+/// *measured* kernel table: [`crate::model::Manifest::synthetic`] supplies
+/// the layer shapes (at [`crate::latency::DeployScale::native`], so the
+/// table's entries
+/// must match the authored `m`/`n`/`k` exactly), and the table is
+/// schema-validated against them up front. This is how the checked-in
+/// example tables under `tables/` turn into per-backend Table-2 variants
+/// without any model artifacts.
+pub fn synthetic_table_cost(
+    layers: usize,
+    table_path: &Path,
+) -> Result<Arc<crate::latency::CostModel>> {
+    let text = std::fs::read_to_string(table_path)
+        .with_context(|| format!("reading kernel table {}", table_path.display()))?;
+    let table = crate::latency::KernelTable::from_json(&text)
+        .with_context(|| format!("parsing kernel table {}", table_path.display()))?;
+    let name = table_path.file_name().and_then(|s| s.to_str()).unwrap_or("table");
+    let manifest = crate::model::Manifest::synthetic(layers);
+    let cost = crate::latency::CostModel::with_table(
+        &manifest,
+        table,
+        crate::latency::DeployScale::native(),
+        format!("measured/{name}"),
+    )?;
+    Ok(Arc::new(cost))
+}
+
+/// [`budget_sweep_synthetic`] with the cost model swapped out — same
+/// seeded environment, same grid discipline, but every cell is priced (and
+/// budget-constrained) by `cost` instead of the synthetic roofline. With a
+/// measured-table cost (see [`synthetic_table_cost`]) this renders
+/// per-backend Table-2 variants from the same accuracy surface.
+#[allow(clippy::too_many_arguments)]
+pub fn budget_sweep_synthetic_costed(
+    layers: usize,
+    seed: u64,
+    workers: usize,
+    algo: SearchAlgo,
+    grid: &SweepGrid,
+    cost: Arc<dyn CostModel>,
+    checkpoint: Option<&mut SweepCheckpoint>,
+    abort_after: Option<usize>,
+) -> Result<Vec<SweepCell>> {
     let kind = grid.kind;
     let mut fresh = 0usize;
     budget_sweep(grid, checkpoint, |budget, floor, ospec| {
@@ -632,6 +678,60 @@ mod tests {
         // A different seed changes the grid's outcomes.
         let c = budget_sweep_synthetic(16, 6, 1, SearchAlgo::Greedy, &g, None, None).unwrap();
         assert_ne!(sweep_cells_json(&a), sweep_cells_json(&c));
+    }
+
+    #[test]
+    fn checked_in_tables_price_the_synthetic_sweep() {
+        let g = grid();
+        let mut latencies: Vec<Vec<u64>> = Vec::new();
+        for file in ["a100.json", "tpu.json"] {
+            let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tables").join(file);
+            let cost = synthetic_table_cost(12, &path).unwrap();
+            assert_eq!(cost.provenance(), format!("measured/{file}"));
+            let a = budget_sweep_synthetic_costed(
+                12,
+                3,
+                1,
+                SearchAlgo::Greedy,
+                &g,
+                cost.clone(),
+                None,
+                None,
+            )
+            .unwrap();
+            let b = budget_sweep_synthetic_costed(
+                12,
+                3,
+                2,
+                SearchAlgo::Greedy,
+                &g,
+                cost,
+                None,
+                None,
+            )
+            .unwrap();
+            assert_eq!(
+                sweep_cells_json(&a),
+                sweep_cells_json(&b),
+                "table-priced sweep must be worker-independent"
+            );
+            for c in &a {
+                assert_eq!(c.cost_provenance, format!("measured/{file}"));
+                assert!(c.rel_latency > 0.0 && c.rel_latency <= 1.0);
+            }
+            latencies.push(a.iter().map(|c| c.rel_latency.to_bits()).collect());
+        }
+        assert_ne!(
+            latencies[0], latencies[1],
+            "the two backends must price the grid differently"
+        );
+    }
+
+    #[test]
+    fn table_cost_errors_name_the_table_path() {
+        let missing = Path::new(env!("CARGO_MANIFEST_DIR")).join("tables").join("nope.json");
+        let err = synthetic_table_cost(4, &missing).unwrap_err().to_string();
+        assert!(err.contains("nope.json"), "error should name the table path: {err}");
     }
 
     #[test]

@@ -1,0 +1,384 @@
+//! End-to-end properties of the subgraph-partitioned search: `K = 1`
+//! must be byte-identical to the whole-model search (both algorithms, at
+//! every worker count), segment splits must cover the sensitivity order
+//! exactly once, reconciliation must never exceed the global budget when
+//! every segment met its scoped one, composed `K > 1` frontiers must
+//! survive brute-force re-evaluation of every point they claim, and a
+//! killed partitioned run must resume into a byte-identical result.
+
+use std::sync::Arc;
+
+use mpq::api::{
+    build_frontier_synthetic, build_frontier_synthetic_partitioned, partitioned_search_synthetic,
+    run_search, CostModel, ObjectiveSpec, Partition, SearchEvent, SyntheticCost, SyntheticEnv,
+};
+use mpq::coordinator::{ParallelEnv, SearchAlgo, SyncSearchEnv};
+use mpq::quant::QUANT_BITS;
+use mpq::report::{budget_sweep_from_frontier, BudgetKind, SweepGrid};
+
+const LAYERS: usize = 20;
+const SEED: u64 = 7;
+const FLOORS: [f64; 3] = [0.9, 0.97, 0.99];
+
+/// A comparable key for one `Decision` event (bit-exact on the floats).
+type DecisionKey = (u32, usize, bool, u64, Option<u64>, bool);
+
+fn decision_key(ev: &SearchEvent) -> Option<DecisionKey> {
+    match *ev {
+        SearchEvent::Decision { bits, index, accepted, accuracy, cost, replayed } => Some((
+            bits.to_bits(),
+            index,
+            accepted,
+            accuracy.to_bits(),
+            cost.map(f64::to_bits),
+            replayed,
+        )),
+        _ => None,
+    }
+}
+
+#[test]
+fn k1_matches_the_monolithic_search_at_every_worker_count() {
+    for algo in [SearchAlgo::Greedy, SearchAlgo::Bisection] {
+        for spec in [
+            ObjectiveSpec::AccuracyTarget,
+            ObjectiveSpec::LatencyBudget { rel_latency: 0.7 },
+            ObjectiveSpec::FootprintBudget { rel_size: 0.6 },
+        ] {
+            let mut part_decisions: Vec<DecisionKey> = Vec::new();
+            let mut obs = |ev: &SearchEvent| part_decisions.extend(decision_key(ev));
+            let part = partitioned_search_synthetic(
+                LAYERS,
+                SEED,
+                algo,
+                &spec,
+                0.95,
+                1,
+                None,
+                false,
+                None,
+                Some(&mut obs),
+            )
+            .unwrap();
+            assert!(part.segments.is_empty(), "K=1 runs the monolithic search itself");
+
+            for workers in [1usize, 2, 8] {
+                let env = SyntheticEnv::new(LAYERS, SEED);
+                let order = env.order();
+                let objective = spec.build(0.95, Arc::new(SyntheticCost::new(LAYERS, SEED)));
+                let mut mono_decisions: Vec<DecisionKey> = Vec::new();
+                let mut mobs = |ev: &SearchEvent| mono_decisions.extend(decision_key(ev));
+                let mut penv = ParallelEnv::new(&env, workers);
+                let mono = run_search(
+                    algo,
+                    &mut penv,
+                    &order,
+                    &QUANT_BITS,
+                    objective.as_ref(),
+                    Some(&mut mobs),
+                    None,
+                )
+                .unwrap();
+                let label = format!("{} {spec:?} at {workers} workers", algo.label());
+                assert_eq!(part.outcome.config, mono.config, "config diff: {label}");
+                assert_eq!(
+                    part.outcome.accuracy.to_bits(),
+                    mono.accuracy.to_bits(),
+                    "accuracy diff: {label}"
+                );
+                assert_eq!(part.outcome.evals, mono.evals, "evals diff: {label}");
+                assert_eq!(part_decisions, mono_decisions, "decision stream diff: {label}");
+            }
+        }
+    }
+}
+
+#[test]
+fn segment_splits_cover_every_order_exactly_once() {
+    for n in [1usize, 2, 3, 5, 8, 13, 21, 34] {
+        // A deterministic pseudo-shuffled order (no rand dependency).
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut state = 0x9e37_79b9_7f4a_7c15u64 ^ n as u64;
+        for i in (1..n).rev() {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            order.swap(i, (state >> 33) as usize % (i + 1));
+        }
+        for k in 1..=12 {
+            let p = Partition::split(&order, k);
+            assert_eq!(p.num_segments(), k.min(n.max(1)));
+            assert_eq!(p.num_layers(), n);
+            // Concatenating the segments reassembles the order: every
+            // layer appears exactly once, contiguously, in order.
+            let covered: Vec<usize> =
+                p.segments().iter().flat_map(|s| s.layers.iter().copied()).collect();
+            assert_eq!(covered, order, "n={n} k={k}: segments must tile the order");
+            let share: f64 = p.segments().iter().map(|s| s.share).sum();
+            assert!((share - 1.0).abs() < 1e-9, "n={n} k={k}: shares sum to {share}");
+            let sizes: Vec<usize> = p.segments().iter().map(|s| s.layers.len()).collect();
+            let spread = sizes.iter().max().unwrap() - sizes.iter().min().unwrap();
+            assert!(spread <= 1, "n={n} k={k}: unbalanced segment sizes {sizes:?}");
+            assert!(sizes.iter().all(|&s| s > 0), "n={n} k={k}: empty segment");
+        }
+    }
+}
+
+#[test]
+fn reconciliation_never_exceeds_a_satisfied_global_budget() {
+    let cost = SyntheticCost::new(LAYERS, SEED);
+    let mut any_satisfied = false;
+    for algo in [SearchAlgo::Greedy, SearchAlgo::Bisection] {
+        for spec in [
+            ObjectiveSpec::LatencyBudget { rel_latency: 0.7 },
+            ObjectiveSpec::FootprintBudget { rel_size: 0.7 },
+        ] {
+            for k in [2usize, 3, 4] {
+                let out = partitioned_search_synthetic(
+                    LAYERS, SEED, algo, &spec, 0.9, k, None, false, None, None,
+                )
+                .unwrap();
+                let label = format!("{} {spec:?} K={k}", algo.label());
+                assert_eq!(out.segments.len(), k, "{label}");
+                assert_eq!(out.satisfied.len(), k, "{label}");
+
+                // Brute force: the reconciled accuracy is the exact
+                // re-evaluated accuracy of the composed configuration.
+                let env = SyntheticEnv::new(LAYERS, SEED);
+                let fresh = SyncSearchEnv::eval(&env, &out.outcome.config, None).unwrap();
+                assert!(fresh.exact, "{label}");
+                assert_eq!(
+                    fresh.accuracy.to_bits(),
+                    out.outcome.accuracy.to_bits(),
+                    "reconciled accuracy must be the exact re-evaluated value: {label}"
+                );
+
+                // The conditional composition guarantee: if every segment
+                // met its scoped budget, the composed configuration meets
+                // the global one (cost additivity).
+                if out.all_satisfied() {
+                    any_satisfied = true;
+                    let (rel, budget) = match spec {
+                        ObjectiveSpec::LatencyBudget { rel_latency } => {
+                            (cost.rel_latency(&out.outcome.config), rel_latency)
+                        }
+                        ObjectiveSpec::FootprintBudget { rel_size } => {
+                            (cost.rel_size(&out.outcome.config), rel_size)
+                        }
+                        ObjectiveSpec::AccuracyTarget => unreachable!(),
+                    };
+                    assert!(
+                        rel <= budget + 1e-12,
+                        "composed cost {rel} exceeds global budget {budget}: {label}"
+                    );
+                }
+            }
+        }
+    }
+    assert!(any_satisfied, "property never exercised: no run satisfied all scoped budgets");
+}
+
+#[test]
+fn composed_frontier_survives_brute_force_re_evaluation() {
+    let report = build_frontier_synthetic_partitioned(
+        LAYERS,
+        SEED,
+        1,
+        SearchAlgo::Greedy,
+        &FLOORS,
+        4,
+        None,
+        false,
+        None,
+        None,
+    )
+    .unwrap();
+    let artifact = &report.artifact;
+    assert_eq!(artifact.partitions, 4);
+    assert!(artifact.fingerprint.ends_with("/K4"), "{}", artifact.fingerprint);
+
+    let env = SyntheticEnv::new(LAYERS, SEED);
+    let cost = SyntheticCost::new(LAYERS, SEED);
+    for trail in &artifact.trails {
+        assert!(!trail.points.is_empty(), "floor {}", trail.floor);
+        for p in &trail.points {
+            let fresh = SyncSearchEnv::eval(&env, &p.config, None).unwrap();
+            assert!(fresh.exact);
+            assert_eq!(
+                fresh.accuracy.to_bits(),
+                p.accuracy.to_bits(),
+                "floor {}: recorded accuracy must be the exact re-evaluated value",
+                trail.floor
+            );
+            assert!(
+                p.accuracy >= trail.abs_floor - 1e-12,
+                "floor {}: composed point breaks its floor ({} < {})",
+                trail.floor,
+                p.accuracy,
+                trail.abs_floor
+            );
+            assert_eq!(cost.rel_latency(&p.config).to_bits(), p.rel_latency.to_bits());
+            assert_eq!(cost.rel_size(&p.config).to_bits(), p.rel_size.to_bits());
+        }
+        // The composition walk only deepens quantization, so both
+        // relative costs fall monotonically along the trail.
+        for w in trail.points.windows(2) {
+            assert!(w[1].rel_latency <= w[0].rel_latency + 1e-12, "floor {}", trail.floor);
+            assert!(w[1].rel_size <= w[0].rel_size + 1e-12, "floor {}", trail.floor);
+        }
+    }
+
+    // Every sweep cell the composed frontier claims holds under
+    // brute-force re-evaluation of the backing configuration.
+    for kind in [BudgetKind::Latency, BudgetKind::Size] {
+        let g = SweepGrid { kind, budgets: vec![0.55, 0.7, 0.9], floors: FLOORS.to_vec() };
+        let cells = budget_sweep_from_frontier(artifact, &g, None).unwrap();
+        assert_eq!(cells.len(), 9);
+        for c in &cells {
+            let trail = artifact
+                .trails
+                .iter()
+                .find(|t| t.floor.to_bits() == c.floor.to_bits())
+                .expect("cell floor must come from a trail");
+            let point = trail
+                .points
+                .iter()
+                .find(|p| {
+                    p.accuracy.to_bits() == c.accuracy.to_bits()
+                        && p.rel_latency.to_bits() == c.rel_latency.to_bits()
+                        && p.rel_size.to_bits() == c.rel_size.to_bits()
+                })
+                .expect("every cell must be backed by a recorded trail point");
+            let fresh = SyncSearchEnv::eval(&env, &point.config, None).unwrap();
+            assert_eq!(fresh.accuracy.to_bits(), c.accuracy.to_bits());
+            if c.met_floor {
+                assert!(fresh.accuracy >= trail.abs_floor - 1e-12);
+            }
+            if c.met_budget {
+                let rel = match kind {
+                    BudgetKind::Latency => cost.rel_latency(&point.config),
+                    BudgetKind::Size => cost.rel_size(&point.config),
+                };
+                assert!(rel <= c.budget + 1e-12, "claimed cell exceeds its budget");
+            }
+        }
+    }
+}
+
+#[test]
+fn k1_partitioned_frontier_is_byte_identical_to_the_monolithic_builder() {
+    let mono = build_frontier_synthetic(
+        LAYERS,
+        SEED,
+        2,
+        SearchAlgo::Greedy,
+        &FLOORS,
+        None,
+        false,
+        None,
+        None,
+    )
+    .unwrap();
+    let part = build_frontier_synthetic_partitioned(
+        LAYERS,
+        SEED,
+        2,
+        SearchAlgo::Greedy,
+        &FLOORS,
+        1,
+        None,
+        false,
+        None,
+        None,
+    )
+    .unwrap();
+    assert_eq!(
+        part.artifact.to_json().to_string(),
+        mono.artifact.to_json().to_string(),
+        "K=1 must delegate byte-identically (artifact, fingerprint, and all)"
+    );
+}
+
+#[test]
+fn aborted_partitioned_search_resumes_byte_identically() {
+    let spec = ObjectiveSpec::LatencyBudget { rel_latency: 0.7 };
+    let run = |checkpoint: Option<&std::path::Path>, resume, abort| {
+        partitioned_search_synthetic(
+            LAYERS,
+            SEED,
+            SearchAlgo::Greedy,
+            &spec,
+            0.9,
+            4,
+            checkpoint,
+            resume,
+            abort,
+            None,
+        )
+    };
+    let full = run(None, false, None).unwrap();
+
+    let prefix = std::env::temp_dir().join("mpq_part_search_ck");
+    let cleanup = || {
+        for s in 0..4 {
+            let _ = std::fs::remove_file(format!("{}.seg{s}", prefix.display()));
+        }
+    };
+    cleanup();
+
+    // Kill mid-run: the shared synthetic env errors after 8 raw
+    // evaluations, somewhere inside the concurrent segment searches.
+    let err = run(Some(&prefix), false, Some(8)).unwrap_err();
+    assert!(format!("{err:#}").contains("abort"), "{err:#}");
+
+    // Resume: whatever each segment committed before the kill replays
+    // from its own decision log; the rest runs fresh.
+    let resumed = run(Some(&prefix), true, None).unwrap();
+    assert!(resumed.replayed_decisions > 0, "the killed run's decisions must replay");
+    assert_eq!(resumed.outcome.config, full.outcome.config);
+    assert_eq!(resumed.outcome.accuracy.to_bits(), full.outcome.accuracy.to_bits());
+    assert_eq!(resumed.outcome.evals, full.outcome.evals);
+    assert_eq!(resumed.satisfied, full.satisfied);
+    assert!(resumed.checkpointed_decisions > 0);
+    cleanup();
+}
+
+#[test]
+fn aborted_partitioned_frontier_resumes_byte_identically() {
+    let floors = [0.9, 0.99];
+    let build = |checkpoint: Option<&std::path::Path>, resume, abort| {
+        build_frontier_synthetic_partitioned(
+            LAYERS,
+            SEED,
+            1,
+            SearchAlgo::Greedy,
+            &floors,
+            4,
+            checkpoint,
+            resume,
+            abort,
+            None,
+        )
+    };
+    let full_json = build(None, false, None).unwrap().artifact.to_json().to_string();
+
+    let prefix = std::env::temp_dir().join("mpq_part_frontier_ck");
+    let cleanup = || {
+        for i in 0..floors.len() {
+            for s in 0..4 {
+                let _ = std::fs::remove_file(format!("{}.floor{i}.seg{s}", prefix.display()));
+            }
+        }
+    };
+    cleanup();
+
+    let err = build(Some(&prefix), false, Some(10)).unwrap_err();
+    assert!(format!("{err:#}").contains("abort"), "{err:#}");
+
+    let resumed = build(Some(&prefix), true, None).unwrap();
+    assert!(resumed.replayed_decisions > 0, "the killed build's decisions must replay");
+    assert_eq!(
+        resumed.artifact.to_json().to_string(),
+        full_json,
+        "resumed composed frontier must byte-match the uninterrupted build"
+    );
+    cleanup();
+}

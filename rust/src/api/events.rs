@@ -8,6 +8,19 @@
 //! `FnMut(&SearchEvent)` callbacks attached through [`super::SearchCtl`]
 //! or [`super::SearchSession::on_event`]; the default CLI observer is
 //! [`log_event`], tests use observers to assert trajectories.
+//!
+//! Two renderers share the stream: [`log_event`] writes the human stderr
+//! line, and [`event_json`] is the one machine serializer — the
+//! `--events-out events.jsonl` sink ([`EventSink`]) and the experiment
+//! harness's metric extractor both consume it, so structured tools never
+//! scrape stderr text.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Value;
+use crate::Result;
 
 /// One step of a running search or calibration.
 #[derive(Debug, Clone)]
@@ -162,3 +175,280 @@ pub fn log_event(ev: &SearchEvent) {
         SearchEvent::FrontierSubmitted { .. } | SearchEvent::CheckpointWritten { .. } => {}
     }
 }
+
+/// `NaN`/infinite floats have no JSON representation; they only occur on
+/// replayed decisions (nothing was evaluated), so serialize them as null.
+fn finite(x: f64) -> Value {
+    if x.is_finite() {
+        Value::Num(x)
+    } else {
+        Value::Null
+    }
+}
+
+fn opt(x: Option<f64>) -> Value {
+    x.map_or(Value::Null, finite)
+}
+
+/// Serialize one [`SearchEvent`] as a JSON object — the machine twin of
+/// [`log_event`]. Every variant carries an `event` tag (snake_case) plus
+/// its fields under their Rust names; keys come out sorted (see
+/// [`Value`]), so a given event always serializes to the same bytes.
+pub fn event_json(ev: &SearchEvent) -> Value {
+    match ev {
+        SearchEvent::Started { algo, layers, objective } => Value::obj(vec![
+            ("event", Value::Str("started".into())),
+            ("algo", Value::Str((*algo).to_string())),
+            ("layers", Value::Num(*layers as f64)),
+            ("objective", Value::Str(objective.clone())),
+        ]),
+        SearchEvent::FrontierSubmitted { bits, size } => Value::obj(vec![
+            ("event", Value::Str("frontier_submitted".into())),
+            ("bits", Value::Num(f64::from(*bits))),
+            ("size", Value::Num(*size as f64)),
+        ]),
+        SearchEvent::Decision { bits, index, accepted, accuracy, cost, replayed } => {
+            Value::obj(vec![
+                ("event", Value::Str("decision".into())),
+                ("bits", Value::Num(f64::from(*bits))),
+                ("index", Value::Num(*index as f64)),
+                ("accepted", Value::Bool(*accepted)),
+                ("accuracy", finite(*accuracy)),
+                ("cost", opt(*cost)),
+                ("replayed", Value::Bool(*replayed)),
+            ])
+        }
+        SearchEvent::BudgetSatisfied { cost } => Value::obj(vec![
+            ("event", Value::Str("budget_satisfied".into())),
+            ("cost", finite(*cost)),
+        ]),
+        SearchEvent::CheckpointWritten { decisions } => Value::obj(vec![
+            ("event", Value::Str("checkpoint_written".into())),
+            ("decisions", Value::Num(*decisions as f64)),
+        ]),
+        SearchEvent::Finished { accuracy, evals } => Value::obj(vec![
+            ("event", Value::Str("finished".into())),
+            ("accuracy", finite(*accuracy)),
+            ("evals", Value::Num(*evals as f64)),
+        ]),
+        SearchEvent::CacheReport { memo_hits, persistent_hits } => Value::obj(vec![
+            ("event", Value::Str("cache_report".into())),
+            ("memo_hits", Value::Num(*memo_hits as f64)),
+            ("persistent_hits", Value::Num(*persistent_hits as f64)),
+        ]),
+        SearchEvent::CalibrationStarted { workers, batches, grad_batches, epochs } => {
+            Value::obj(vec![
+                ("event", Value::Str("calibration_started".into())),
+                ("workers", Value::Num(*workers as f64)),
+                ("batches", Value::Num(*batches as f64)),
+                ("grad_batches", Value::Num(*grad_batches as f64)),
+                ("epochs", Value::Num(*epochs as f64)),
+            ])
+        }
+        SearchEvent::AdjustEpoch { epoch, loss, steps } => Value::obj(vec![
+            ("event", Value::Str("adjust_epoch".into())),
+            ("epoch", Value::Num(*epoch as f64)),
+            ("loss", finite(*loss)),
+            ("steps", Value::Num(*steps as f64)),
+        ]),
+        SearchEvent::CalibrationFinished { loss_before, loss_after, steps } => Value::obj(vec![
+            ("event", Value::Str("calibration_finished".into())),
+            ("loss_before", finite(*loss_before)),
+            ("loss_after", finite(*loss_after)),
+            ("steps", Value::Num(*steps as f64)),
+        ]),
+        SearchEvent::ScalesLoaded { path } => Value::obj(vec![
+            ("event", Value::Str("scales_loaded".into())),
+            ("path", Value::Str(path.clone())),
+        ]),
+        SearchEvent::EvalCacheAttached { entries, path } => Value::obj(vec![
+            ("event", Value::Str("eval_cache_attached".into())),
+            ("entries", Value::Num(*entries as f64)),
+            ("path", Value::Str(path.clone())),
+        ]),
+        SearchEvent::FrontierFloor { floor, index, total } => Value::obj(vec![
+            ("event", Value::Str("frontier_floor".into())),
+            ("floor", finite(*floor)),
+            ("index", Value::Num(*index as f64)),
+            ("total", Value::Num(*total as f64)),
+        ]),
+        SearchEvent::FrontierWritten { points, pareto, path } => Value::obj(vec![
+            ("event", Value::Str("frontier_written".into())),
+            ("points", Value::Num(*points as f64)),
+            ("pareto", Value::Num(*pareto as f64)),
+            ("path", Value::Str(path.clone())),
+        ]),
+        SearchEvent::SegmentStarted { segment, segments, layers } => Value::obj(vec![
+            ("event", Value::Str("segment_started".into())),
+            ("segment", Value::Num(*segment as f64)),
+            ("segments", Value::Num(*segments as f64)),
+            ("layers", Value::Num(*layers as f64)),
+        ]),
+        SearchEvent::SegmentFinished { segment, accuracy, evals } => Value::obj(vec![
+            ("event", Value::Str("segment_finished".into())),
+            ("segment", Value::Num(*segment as f64)),
+            ("accuracy", finite(*accuracy)),
+            ("evals", Value::Num(*evals as f64)),
+        ]),
+        SearchEvent::Reconciled { segments, accuracy, cost, evals } => Value::obj(vec![
+            ("event", Value::Str("reconciled".into())),
+            ("segments", Value::Num(*segments as f64)),
+            ("accuracy", finite(*accuracy)),
+            ("cost", opt(*cost)),
+            ("evals", Value::Num(*evals as f64)),
+        ]),
+    }
+}
+
+struct SinkInner {
+    out: std::io::BufWriter<std::fs::File>,
+    path: PathBuf,
+    error: Option<String>,
+    events: usize,
+}
+
+/// A JSONL file sink for the [`SearchEvent`] stream (`--events-out`):
+/// one [`event_json`] object per line, in emission order.
+///
+/// Observers are `'static` closures on some paths
+/// ([`super::SearchSession::on_event`]), so the sink is clonable and
+/// internally locked; any clone can record. Write errors are deferred —
+/// recording never panics mid-search — and surfaced by [`EventSink::finish`].
+#[derive(Clone)]
+pub struct EventSink {
+    inner: Arc<Mutex<SinkInner>>,
+}
+
+impl EventSink {
+    /// Create (truncate) the JSONL file at `path`.
+    pub fn create(path: &Path) -> Result<Self> {
+        if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+            std::fs::create_dir_all(parent)?;
+        }
+        let file = std::fs::File::create(path)?;
+        Ok(Self {
+            inner: Arc::new(Mutex::new(SinkInner {
+                out: std::io::BufWriter::new(file),
+                path: path.to_path_buf(),
+                error: None,
+                events: 0,
+            })),
+        })
+    }
+
+    /// Append one event line. Errors are held until [`EventSink::finish`].
+    pub fn record(&self, ev: &SearchEvent) {
+        let mut inner = self.inner.lock().expect("event sink poisoned");
+        if inner.error.is_some() {
+            return;
+        }
+        let line = event_json(ev).to_string();
+        if let Err(e) = writeln!(inner.out, "{line}") {
+            inner.error = Some(e.to_string());
+        } else {
+            inner.events += 1;
+        }
+    }
+
+    /// A `'static` observer closure writing into this sink — compose it
+    /// with [`log_event`] or attach it directly.
+    pub fn observer(&self) -> impl FnMut(&SearchEvent) + Send + 'static {
+        let sink = self.clone();
+        move |ev: &SearchEvent| sink.record(ev)
+    }
+
+    /// The JSONL file this sink writes to.
+    pub fn path(&self) -> PathBuf {
+        self.inner.lock().expect("event sink poisoned").path.clone()
+    }
+
+    /// Flush and surface any deferred write error, reporting how many
+    /// events landed in the file.
+    pub fn finish(&self) -> Result<usize> {
+        let mut inner = self.inner.lock().expect("event sink poisoned");
+        if let Some(e) = &inner.error {
+            anyhow::bail!("event sink {}: {e}", inner.path.display());
+        }
+        inner.out.flush()?;
+        Ok(inner.events)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replayed_decisions_serialize_nan_as_null() {
+        let v = event_json(&SearchEvent::Decision {
+            bits: 4.0,
+            index: 3,
+            accepted: true,
+            accuracy: f64::NAN,
+            cost: None,
+            replayed: true,
+        });
+        assert_eq!(
+            v.to_string(),
+            "{\"accepted\":true,\"accuracy\":null,\"bits\":4,\"cost\":null,\
+             \"event\":\"decision\",\"index\":3,\"replayed\":true}"
+        );
+    }
+
+    #[test]
+    fn every_variant_serializes_with_an_event_tag() {
+        let events = vec![
+            SearchEvent::Started { algo: "Greedy", layers: 4, objective: "acc".into() },
+            SearchEvent::FrontierSubmitted { bits: 8.0, size: 2 },
+            SearchEvent::Decision {
+                bits: 8.0,
+                index: 0,
+                accepted: false,
+                accuracy: 0.5,
+                cost: Some(0.25),
+                replayed: false,
+            },
+            SearchEvent::BudgetSatisfied { cost: 0.7 },
+            SearchEvent::CheckpointWritten { decisions: 9 },
+            SearchEvent::Finished { accuracy: 0.99, evals: 12 },
+            SearchEvent::CacheReport { memo_hits: 1, persistent_hits: 2 },
+            SearchEvent::CalibrationStarted { workers: 2, batches: 4, grad_batches: 2, epochs: 1 },
+            SearchEvent::AdjustEpoch { epoch: 0, loss: 1.5, steps: 2 },
+            SearchEvent::CalibrationFinished { loss_before: 2.0, loss_after: 1.0, steps: 4 },
+            SearchEvent::ScalesLoaded { path: "p".into() },
+            SearchEvent::EvalCacheAttached { entries: 3, path: "q".into() },
+            SearchEvent::FrontierFloor { floor: 0.9, index: 0, total: 2 },
+            SearchEvent::FrontierWritten { points: 5, pareto: 3, path: "f".into() },
+            SearchEvent::SegmentStarted { segment: 0, segments: 2, layers: 12 },
+            SearchEvent::SegmentFinished { segment: 0, accuracy: 0.95, evals: 7 },
+            SearchEvent::Reconciled { segments: 2, accuracy: 0.94, cost: None, evals: 15 },
+        ];
+        let mut tags = std::collections::BTreeSet::new();
+        for ev in &events {
+            let v = event_json(ev);
+            let tag = v.req("event").unwrap().as_str().unwrap().to_string();
+            // Serialization is stable: same event -> same bytes.
+            assert_eq!(v.to_string(), event_json(ev).to_string());
+            tags.insert(tag);
+        }
+        assert_eq!(tags.len(), events.len(), "every variant has a distinct tag");
+    }
+
+    #[test]
+    fn sink_writes_one_line_per_event() {
+        let dir = std::env::temp_dir().join(format!("mpq_sink_{}", std::process::id()));
+        let path = dir.join("events.jsonl");
+        let sink = EventSink::create(&path).unwrap();
+        let mut obs = sink.observer();
+        obs(&SearchEvent::Finished { accuracy: 1.0, evals: 3 });
+        sink.record(&SearchEvent::BudgetSatisfied { cost: 0.5 });
+        assert_eq!(sink.finish().unwrap(), 2);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = crate::util::json::parse(lines[0]).unwrap();
+        assert_eq!(first.req("event").unwrap().as_str().unwrap(), "finished");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+

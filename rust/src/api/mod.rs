@@ -47,7 +47,7 @@ pub use checkpoint::{checkpoint_fingerprint, Checkpoint, CHECKPOINT_VERSION};
 pub use context::ModelContext;
 pub use cost::CostModel;
 pub use driver::{run_search, SearchCtl};
-pub use events::{log_event, SearchEvent};
+pub use events::{event_json, log_event, EventSink, SearchEvent};
 pub use objective::{AccuracyTarget, CellMetrics, FootprintBudget, LatencyBudget, Objective};
 pub use pareto::{
     build_frontier_synthetic, frontier_fingerprint, partitioned_frontier_fingerprint, FloorTrail,

@@ -1,0 +1,575 @@
+//! Variant comparison and the baseline regression gate.
+//!
+//! [`Comparison`] renders a finished suite run two ways: a human table
+//! ([`Comparison::render`]) and a deterministic JSON artifact
+//! ([`Comparison::deterministic_json`]) that contains *only*
+//! bit-reproducible fields — CI byte-diffs it across reruns and across
+//! 1/2-worker executions. Measured numbers (wall-clock, bench JSON)
+//! live in the table and in the [`Baseline`], never in the
+//! deterministic artifact.
+//!
+//! [`gate`] diffs a run against a checked-in baseline with per-metric
+//! tolerance classes:
+//!
+//! * deterministic fields — exact match; any drift is a violation
+//!   naming the variant and metric;
+//! * measured fields (`wall_ms`, bench numbers) — pass inside a ratio
+//!   band `[1/band, band]`, inclusive at the boundary;
+//! * `null` baseline values — pass with a flag (the checked-in
+//!   baselines are null schemas until a real run records them with
+//!   `--update-baseline --record-measured`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::fs::atomic_write_text;
+use crate::util::json::{self, Value};
+
+use super::metrics::VariantMetrics;
+
+/// Baseline schema version (bump on incompatible layout changes).
+pub const BASELINE_VERSION: u64 = 1;
+
+/// One executed variant: identity, a human summary of its resolved
+/// configuration, and the extracted metrics.
+#[derive(Debug, Clone)]
+pub struct VariantRow {
+    pub name: String,
+    /// Resolved-config summary (algo/metric/objective/seed), deterministic.
+    pub describe: String,
+    pub metrics: VariantMetrics,
+}
+
+/// A finished suite run, ready to render, persist, and gate.
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    pub suite: String,
+    /// Worker counts every variant was executed (and parity-checked) at.
+    pub worker_counts: Vec<usize>,
+    pub rows: Vec<VariantRow>,
+    /// Flattened bench JSON metrics (measured), when bench files were given.
+    pub bench: BTreeMap<String, Value>,
+}
+
+impl Comparison {
+    /// The byte-stable comparison artifact: deterministic fields only,
+    /// sorted keys, no timings. Identical across reruns and worker counts.
+    pub fn deterministic_json(&self) -> String {
+        let variants: BTreeMap<String, Value> = self
+            .rows
+            .iter()
+            .map(|r| {
+                let mut m = r.metrics.fields.clone();
+                m.insert("describe".to_string(), Value::Str(r.describe.clone()));
+                (r.name.clone(), Value::Obj(m))
+            })
+            .collect();
+        Value::obj(vec![
+            ("version", Value::Num(BASELINE_VERSION as f64)),
+            ("suite", Value::Str(self.suite.clone())),
+            (
+                "worker_counts",
+                Value::Arr(self.worker_counts.iter().map(|&w| Value::Num(w as f64)).collect()),
+            ),
+            ("measured_fields", Value::arr_str(&["wall_ms".to_string()])),
+            ("variants", Value::Obj(variants)),
+        ])
+        .to_string()
+    }
+
+    /// FNV-1a digest of [`Self::deterministic_json`] — a short fingerprint
+    /// for RESULT lines and logs.
+    pub fn digest(&self) -> String {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for &b in self.deterministic_json().as_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        format!("{h:016x}")
+    }
+
+    /// The human comparison table.
+    pub fn render(&self) -> String {
+        let num = |m: &VariantMetrics, k: &str| -> f64 {
+            m.fields.get(k).and_then(|v| v.as_f64().ok()).unwrap_or(f64::NAN)
+        };
+        let mut out = format!(
+            "experiment suite `{}` — {} variants @ workers {:?} (digest {})\n",
+            self.suite,
+            self.rows.len(),
+            self.worker_counts,
+            self.digest()
+        );
+        out.push_str(&format!(
+            "{:<24} {:>9} {:>6} {:>5} {:>5} {:>8} {:>8} {:>9}  {}\n",
+            "variant", "accuracy", "evals", "dec", "acc", "rel_lat", "rel_size", "wall_ms",
+            "configuration"
+        ));
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:<24} {:>9.4} {:>6} {:>5} {:>5} {:>8.4} {:>8.4} {:>9.2}  {}\n",
+                r.name,
+                num(&r.metrics, "accuracy"),
+                num(&r.metrics, "decision_evals") as u64,
+                num(&r.metrics, "decisions") as u64,
+                num(&r.metrics, "accepted") as u64,
+                num(&r.metrics, "rel_latency"),
+                num(&r.metrics, "rel_size"),
+                r.metrics.wall_ms,
+                r.describe,
+            ));
+        }
+        if !self.bench.is_empty() {
+            out.push_str(&format!("bench metrics: {} measured\n", self.bench.len()));
+        }
+        out
+    }
+
+    /// Fold this run into a baseline. Deterministic fields are recorded
+    /// as-is (they are machine-independent). Measured fields (`wall_ms`,
+    /// bench values) keep the previous baseline's value — or stay null —
+    /// unless `record_measured` pins this run's numbers; that keeps
+    /// `--update-baseline` byte-stable on machines whose timings differ.
+    pub fn to_baseline(&self, prev: Option<&Baseline>, record_measured: bool) -> Baseline {
+        let mut variants = BTreeMap::new();
+        for r in &self.rows {
+            let mut m = r.metrics.fields.clone();
+            let wall = if record_measured {
+                Value::Num(r.metrics.wall_ms)
+            } else {
+                prev.and_then(|b| b.variants.get(&r.name))
+                    .and_then(|f| f.get("wall_ms"))
+                    .cloned()
+                    .unwrap_or(Value::Null)
+            };
+            m.insert("wall_ms".to_string(), wall);
+            variants.insert(r.name.clone(), m);
+        }
+        let mut bench: BTreeMap<String, Value> =
+            prev.map(|b| b.bench.clone()).unwrap_or_default();
+        for (k, v) in &self.bench {
+            if record_measured {
+                bench.insert(k.clone(), v.clone());
+            } else {
+                bench.entry(k.clone()).or_insert(Value::Null);
+            }
+        }
+        Baseline { version: BASELINE_VERSION, suite: self.suite.clone(), variants, bench }
+    }
+}
+
+/// The checked-in regression baseline: per-variant metric values (null =
+/// not yet recorded) plus guarded bench metrics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Baseline {
+    pub version: u64,
+    pub suite: String,
+    pub variants: BTreeMap<String, BTreeMap<String, Value>>,
+    pub bench: BTreeMap<String, Value>,
+}
+
+impl Baseline {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let version = v.req("version")?.as_u64()?;
+        ensure!(
+            version == BASELINE_VERSION,
+            "baseline schema v{version}, this build expects v{BASELINE_VERSION}"
+        );
+        let suite = v.req("suite")?.as_str()?.to_string();
+        let mut variants = BTreeMap::new();
+        if let Value::Obj(vs) = v.req("variants")? {
+            for (name, fields) in vs {
+                match fields {
+                    Value::Obj(m) => {
+                        variants.insert(name.clone(), m.clone());
+                    }
+                    other => anyhow::bail!("baseline variant `{name}` is not an object: {other}"),
+                }
+            }
+        } else {
+            anyhow::bail!("baseline `variants` must be an object");
+        }
+        let bench = match v.get("bench") {
+            None | Some(Value::Null) => BTreeMap::new(),
+            Some(Value::Obj(m)) => m.clone(),
+            Some(other) => anyhow::bail!("baseline `bench` must be an object, got {other}"),
+        };
+        Ok(Self { version, suite, variants, bench })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading baseline {}", path.display()))?;
+        Self::from_json(&json::parse(&text)?)
+            .with_context(|| format!("parsing baseline {}", path.display()))
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("version", Value::Num(self.version as f64)),
+            ("suite", Value::Str(self.suite.clone())),
+            (
+                "variants",
+                Value::Obj(
+                    self.variants
+                        .iter()
+                        .map(|(k, m)| (k.clone(), Value::Obj(m.clone())))
+                        .collect(),
+                ),
+            ),
+            ("bench", Value::Obj(self.bench.clone())),
+        ])
+    }
+
+    /// Canonical on-disk form: stable pretty-printed JSON + newline, so
+    /// `--update-baseline` round-trips byte-identically.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        pretty(&self.to_json(), 0, &mut out);
+        out.push('\n');
+        out
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+            std::fs::create_dir_all(parent)?;
+        }
+        atomic_write_text(path, &self.render())
+    }
+}
+
+/// Deterministic two-space pretty printer (objects multiline, arrays and
+/// scalars inline) — readable checked-in baselines with byte-stable
+/// round-trips.
+fn pretty(v: &Value, depth: usize, out: &mut String) {
+    match v {
+        Value::Obj(m) if !m.is_empty() => {
+            out.push_str("{\n");
+            for (i, (k, val)) in m.iter().enumerate() {
+                out.push_str(&"  ".repeat(depth + 1));
+                out.push_str(&Value::Str(k.clone()).to_string());
+                out.push_str(": ");
+                pretty(val, depth + 1, out);
+                if i + 1 < m.len() {
+                    out.push(',');
+                }
+                out.push('\n');
+            }
+            out.push_str(&"  ".repeat(depth));
+            out.push('}');
+        }
+        other => out.push_str(&other.to_string()),
+    }
+}
+
+/// One hard gate failure: the offending variant (or bench scope) and
+/// metric, with what diverged.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub variant: String,
+    pub metric: String,
+    pub detail: String,
+}
+
+/// A non-fatal note: null baselines, unrecorded metrics, new variants.
+#[derive(Debug, Clone)]
+pub struct Flag {
+    pub variant: String,
+    pub metric: String,
+    pub note: String,
+}
+
+/// The gate verdict.
+#[derive(Debug, Clone, Default)]
+pub struct GateReport {
+    pub violations: Vec<Violation>,
+    pub flags: Vec<Flag>,
+    /// Metric values actually compared against a non-null baseline.
+    pub checked: usize,
+}
+
+impl GateReport {
+    pub fn passed(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Human rendering, one line per violation/flag.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for v in &self.violations {
+            out.push_str(&format!("VIOLATION {}/{}: {}\n", v.variant, v.metric, v.detail));
+        }
+        for f in &self.flags {
+            out.push_str(&format!("flag {}/{}: {}\n", f.variant, f.metric, f.note));
+        }
+        out.push_str(&format!(
+            "gate: {} checked, {} violations, {} flags -> {}\n",
+            self.checked,
+            self.violations.len(),
+            self.flags.len(),
+            if self.passed() { "PASS" } else { "FAIL" }
+        ));
+        out
+    }
+}
+
+/// `cur` within `[base/band, base*band]`, boundaries inclusive.
+fn within_band(cur: f64, base: f64, band: f64) -> bool {
+    let ratio = cur.max(1e-12) / base.max(1e-12);
+    ratio <= band && ratio >= 1.0 / band
+}
+
+/// Diff a finished run against the baseline. `band` is the measured-metric
+/// tolerance (e.g. `2.0` = half to double the baseline passes).
+pub fn gate(cmp: &Comparison, baseline: &Baseline, band: f64) -> GateReport {
+    let mut report = GateReport::default();
+    let mut violate = |variant: &str, metric: &str, detail: String| {
+        report.violations.push(Violation {
+            variant: variant.to_string(),
+            metric: metric.to_string(),
+            detail,
+        });
+    };
+    if baseline.suite != cmp.suite {
+        violate(
+            &cmp.suite,
+            "suite",
+            format!("baseline is for suite `{}`, this run is `{}`", baseline.suite, cmp.suite),
+        );
+        return report;
+    }
+    let rows: BTreeMap<&str, &VariantRow> =
+        cmp.rows.iter().map(|r| (r.name.as_str(), r)).collect();
+    for (name, base_fields) in &baseline.variants {
+        let Some(row) = rows.get(name.as_str()) else {
+            report.violations.push(Violation {
+                variant: name.clone(),
+                metric: "presence".to_string(),
+                detail: "variant in baseline but missing from this run".to_string(),
+            });
+            continue;
+        };
+        for (metric, base_val) in base_fields {
+            if matches!(base_val, Value::Null) {
+                report.flags.push(Flag {
+                    variant: name.clone(),
+                    metric: metric.clone(),
+                    note: "baseline value is null (not yet recorded) — passing".to_string(),
+                });
+                continue;
+            }
+            report.checked += 1;
+            if metric == "wall_ms" {
+                let cur = row.metrics.wall_ms;
+                match base_val.as_f64() {
+                    Ok(base) if within_band(cur, base, band) => {}
+                    Ok(base) => {
+                        report.violations.push(Violation {
+                            variant: name.clone(),
+                            metric: metric.clone(),
+                            detail: format!(
+                                "wall {cur:.3}ms outside band x{band} of baseline {base:.3}ms"
+                            ),
+                        });
+                    }
+                    Err(_) => {
+                        report.violations.push(Violation {
+                            variant: name.clone(),
+                            metric: metric.clone(),
+                            detail: format!("baseline wall_ms is not a number: {base_val}"),
+                        });
+                    }
+                }
+                continue;
+            }
+            match row.metrics.fields.get(metric) {
+                None => report.violations.push(Violation {
+                    variant: name.clone(),
+                    metric: metric.clone(),
+                    detail: "metric in baseline but missing from this run".to_string(),
+                }),
+                Some(cur) if cur == base_val => {}
+                Some(cur) => report.violations.push(Violation {
+                    variant: name.clone(),
+                    metric: metric.clone(),
+                    detail: format!("baseline {base_val}, this run {cur}"),
+                }),
+            }
+        }
+        // New metrics this build produces but the baseline has no opinion
+        // on yet: flag so `--update-baseline` gets run, don't fail.
+        for metric in row.metrics.fields.keys() {
+            if !base_fields.contains_key(metric) {
+                report.flags.push(Flag {
+                    variant: name.clone(),
+                    metric: metric.clone(),
+                    note: "new metric not in baseline (run --update-baseline)".to_string(),
+                });
+            }
+        }
+    }
+    for row in &cmp.rows {
+        if !baseline.variants.contains_key(&row.name) {
+            report.flags.push(Flag {
+                variant: row.name.clone(),
+                metric: "presence".to_string(),
+                note: "variant not in baseline (run --update-baseline)".to_string(),
+            });
+        }
+    }
+    for (key, base_val) in &baseline.bench {
+        if matches!(base_val, Value::Null) {
+            report.flags.push(Flag {
+                variant: "bench".to_string(),
+                metric: key.clone(),
+                note: "baseline value is null (not yet recorded) — passing".to_string(),
+            });
+            continue;
+        }
+        match cmp.bench.get(key) {
+            None | Some(Value::Null) => report.flags.push(Flag {
+                variant: "bench".to_string(),
+                metric: key.clone(),
+                note: "not measured in this run — passing".to_string(),
+            }),
+            Some(Value::Num(cur)) => {
+                report.checked += 1;
+                match base_val.as_f64() {
+                    Ok(base) if within_band(*cur, base, band) => {}
+                    _ => report.violations.push(Violation {
+                        variant: "bench".to_string(),
+                        metric: key.clone(),
+                        detail: format!("measured {cur} outside band x{band} of {base_val}"),
+                    }),
+                }
+            }
+            Some(cur) => {
+                report.checked += 1;
+                if cur != base_val {
+                    report.violations.push(Violation {
+                        variant: "bench".to_string(),
+                        metric: key.clone(),
+                        detail: format!("baseline {base_val}, measured {cur}"),
+                    });
+                }
+            }
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics(evals: f64, wall: f64) -> VariantMetrics {
+        let mut fields = BTreeMap::new();
+        fields.insert("decision_evals".to_string(), Value::Num(evals));
+        fields.insert("accuracy".to_string(), Value::Num(0.95));
+        VariantMetrics { fields, wall_ms: wall }
+    }
+
+    fn comparison(evals: f64, wall: f64) -> Comparison {
+        Comparison {
+            suite: "s".to_string(),
+            worker_counts: vec![1, 2],
+            rows: vec![VariantRow {
+                name: "v".to_string(),
+                describe: "greedy/hessian".to_string(),
+                metrics: metrics(evals, wall),
+            }],
+            bench: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn null_baseline_passes_with_flags() {
+        let cmp = comparison(10.0, 5.0);
+        let mut base = cmp.to_baseline(None, false);
+        // A freshly derived baseline without --record-measured keeps
+        // wall_ms null; null deterministic fields also pass-with-flag.
+        base.variants.get_mut("v").unwrap().insert("accuracy".to_string(), Value::Null);
+        let report = gate(&cmp, &base, 2.0);
+        assert!(report.passed(), "{}", report.render());
+        assert!(report.flags.iter().any(|f| f.metric == "wall_ms"));
+        assert!(report.flags.iter().any(|f| f.metric == "accuracy"));
+    }
+
+    #[test]
+    fn deterministic_mismatch_names_variant_and_metric() {
+        let cmp = comparison(10.0, 5.0);
+        let mut base = cmp.to_baseline(None, false);
+        base.variants.get_mut("v").unwrap().insert("decision_evals".into(), Value::Num(11.0));
+        let report = gate(&cmp, &base, 2.0);
+        assert!(!report.passed());
+        let v = &report.violations[0];
+        assert_eq!((v.variant.as_str(), v.metric.as_str()), ("v", "decision_evals"));
+        assert!(v.detail.contains("11") && v.detail.contains("10"), "{}", v.detail);
+    }
+
+    #[test]
+    fn ratio_band_boundary_is_inclusive() {
+        let cmp = comparison(10.0, 200.0);
+        let mut base = cmp.to_baseline(None, true);
+        base.variants.get_mut("v").unwrap().insert("wall_ms".into(), Value::Num(100.0));
+        // Exactly at the x2 band: passes.
+        assert!(gate(&cmp, &base, 2.0).passed());
+        // Epsilon over: fails, naming the variant and metric.
+        let over = comparison(10.0, 200.0 * (1.0 + 1e-9));
+        let report = gate(&over, &base, 2.0);
+        assert!(!report.passed());
+        assert_eq!(report.violations[0].metric, "wall_ms");
+        // Exactly at the lower boundary too.
+        assert!(gate(&comparison(10.0, 50.0), &base, 2.0).passed());
+        assert!(!gate(&comparison(10.0, 50.0 / (1.0 + 1e-9)), &base, 2.0).passed());
+    }
+
+    #[test]
+    fn missing_variant_is_a_violation_and_new_variant_a_flag() {
+        let cmp = comparison(10.0, 5.0);
+        let mut base = cmp.to_baseline(None, false);
+        base.variants.insert("gone".to_string(), BTreeMap::new());
+        let report = gate(&cmp, &base, 2.0);
+        assert!(report
+            .violations
+            .iter()
+            .any(|v| v.variant == "gone" && v.metric == "presence"));
+        let mut base2 = cmp.to_baseline(None, false);
+        base2.variants.remove("v");
+        let report2 = gate(&cmp, &base2, 2.0);
+        assert!(report2.passed());
+        assert!(report2.flags.iter().any(|f| f.variant == "v" && f.metric == "presence"));
+    }
+
+    #[test]
+    fn baseline_save_load_roundtrips_byte_identically() {
+        let cmp = comparison(10.0, 5.0);
+        let base = cmp.to_baseline(None, false);
+        let dir = std::env::temp_dir().join(format!("mpq_base_{}", std::process::id()));
+        let path = dir.join("baseline.json");
+        base.save(&path).unwrap();
+        let text1 = std::fs::read_to_string(&path).unwrap();
+        let loaded = Baseline::load(&path).unwrap();
+        assert_eq!(loaded, base);
+        loaded.save(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), text1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bench_gate_bands_numbers_and_flags_unmeasured() {
+        let mut cmp = comparison(10.0, 5.0);
+        cmp.bench.insert("s.fast.mean_ns".to_string(), Value::Num(100.0));
+        let mut base = cmp.to_baseline(None, true);
+        assert_eq!(base.bench["s.fast.mean_ns"], Value::Num(100.0));
+        base.bench.insert("s.other.mean_ns".to_string(), Value::Num(50.0));
+        let report = gate(&cmp, &base, 2.0);
+        assert!(report.passed(), "{}", report.render());
+        assert!(report.flags.iter().any(|f| f.metric == "s.other.mean_ns"));
+        // Drift far outside the band fails.
+        cmp.bench.insert("s.fast.mean_ns".to_string(), Value::Num(500.0));
+        assert!(!gate(&cmp, &base, 2.0).passed());
+    }
+}

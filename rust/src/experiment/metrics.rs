@@ -1,0 +1,223 @@
+//! Metric extraction for experiment variants: typed [`SearchEvent`]
+//! streams and bench JSON in, comparable field maps out — never stderr
+//! text.
+//!
+//! A variant's metrics split into two classes the comparison gate treats
+//! differently (see [`super::compare`]):
+//!
+//! * **Deterministic** fields — decision-eval counts, decision/accept
+//!   tallies, achieved accuracy, the final per-layer config, relative
+//!   deployment costs, cache hits. Bit-identical across reruns and
+//!   worker counts (the repo-wide sharded-determinism contract), so the
+//!   gate exact-matches them and the runner asserts cross-worker parity
+//!   on exactly this map.
+//! * **Measured** fields — wall-clock (`wall_ms` here, bench JSON
+//!   numbers from [`bench_metrics`]). Machine-dependent; the gate allows
+//!   a ratio band.
+
+use std::collections::BTreeMap;
+
+use crate::api::{CostModel, SearchEvent};
+use crate::quant::QuantConfig;
+use crate::util::json::Value;
+use crate::Result;
+
+/// One variant run's extracted metrics.
+#[derive(Debug, Clone)]
+pub struct VariantMetrics {
+    /// Deterministic fields, exact-matched by the gate and byte-stable
+    /// in the comparison JSON (sorted map of [`Value`]s).
+    pub fields: BTreeMap<String, Value>,
+    /// Wall-clock of the search, milliseconds (measured, ratio-banded).
+    pub wall_ms: f64,
+}
+
+impl VariantMetrics {
+    /// First deterministic field differing from `other`, if any — the
+    /// runner's cross-worker-parity probe.
+    pub fn first_mismatch(&self, other: &VariantMetrics) -> Option<String> {
+        for (k, v) in &self.fields {
+            match other.fields.get(k) {
+                Some(o) if o == v => {}
+                _ => return Some(k.clone()),
+            }
+        }
+        other.fields.keys().find(|k| !self.fields.contains_key(*k)).cloned()
+    }
+}
+
+/// Pull a variant's metrics out of its event stream plus the final
+/// config. `events` must contain the run's terminal
+/// [`SearchEvent::Finished`]; decision tallies count live and replayed
+/// decisions separately so a resumed run is distinguishable.
+pub fn extract(
+    events: &[SearchEvent],
+    config: &QuantConfig,
+    cost: &dyn CostModel,
+    segments: usize,
+    wall_ms: f64,
+) -> Result<VariantMetrics> {
+    let mut decisions = 0usize;
+    let mut accepted = 0usize;
+    let mut replayed = 0usize;
+    let mut budget_satisfied = false;
+    let mut finished: Option<(f64, usize)> = None;
+    let mut cache: Option<(usize, usize)> = None;
+    for ev in events {
+        match ev {
+            SearchEvent::Decision { accepted: acc, replayed: rep, .. } => {
+                decisions += 1;
+                if *acc {
+                    accepted += 1;
+                }
+                if *rep {
+                    replayed += 1;
+                }
+            }
+            SearchEvent::BudgetSatisfied { .. } => budget_satisfied = true,
+            SearchEvent::Finished { accuracy, evals } => finished = Some((*accuracy, *evals)),
+            SearchEvent::CacheReport { memo_hits, persistent_hits } => {
+                cache = Some((*memo_hits, *persistent_hits));
+            }
+            _ => {}
+        }
+    }
+    let (accuracy, evals) = finished
+        .ok_or_else(|| anyhow::anyhow!("event stream has no Finished event — search died?"))?;
+    let mut fields = BTreeMap::new();
+    let mut put = |k: &str, v: Value| fields.insert(k.to_string(), v);
+    put("accuracy", Value::Num(accuracy));
+    put("decision_evals", Value::Num(evals as f64));
+    put("decisions", Value::Num(decisions as f64));
+    put("accepted", Value::Num(accepted as f64));
+    put("replayed", Value::Num(replayed as f64));
+    put("budget_satisfied", Value::Bool(budget_satisfied));
+    put("config", Value::arr_f32(&config.bits_w));
+    put("layers", Value::Num(config.bits_w.len() as f64));
+    put("rel_latency", Value::Num(cost.rel_latency(config)));
+    put("rel_size", Value::Num(cost.rel_size(config)));
+    put("segments", Value::Num(segments as f64));
+    if let Some((memo, persistent)) = cache {
+        put("cache_memo_hits", Value::Num(memo as f64));
+        put("cache_persistent_hits", Value::Num(persistent as f64));
+    }
+    Ok(VariantMetrics { fields, wall_ms })
+}
+
+/// Flatten one `BENCH_*.json` file into `suite.entry.field` keys over
+/// its numeric/bool/null result leaves — the measured metrics the gate
+/// ratio-bands against the checked-in (initially null) baselines.
+///
+/// Entries are keyed by their `name` field when present (`::` becomes
+/// `.`), else by `w<workers>`, else by their index. Top-level scalar
+/// fields flatten as `suite.<field>`.
+pub fn bench_metrics(bench: &Value) -> Result<BTreeMap<String, Value>> {
+    let suite = bench.req("suite")?.as_str()?.to_string();
+    let mut out = BTreeMap::new();
+    if let Value::Obj(top) = bench {
+        for (k, v) in top {
+            if matches!(k.as_str(), "suite" | "note" | "results") {
+                continue;
+            }
+            if matches!(v, Value::Num(_) | Value::Bool(_) | Value::Null) {
+                out.insert(format!("{suite}.{k}"), v.clone());
+            }
+        }
+    }
+    for (i, entry) in bench.req("results")?.as_arr()?.iter().enumerate() {
+        let label = match entry.get("name") {
+            Some(Value::Str(name)) => name.replace("::", "."),
+            _ => match entry.get("workers") {
+                Some(w) => format!("{suite}.w{}", w.as_usize()?),
+                None => format!("{suite}.{i}"),
+            },
+        };
+        if let Value::Obj(fields) = entry {
+            for (k, v) in fields {
+                if matches!(k.as_str(), "name" | "workers") {
+                    continue;
+                }
+                if matches!(v, Value::Num(_) | Value::Bool(_) | Value::Null) {
+                    out.insert(format!("{label}.{k}"), v.clone());
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::SyntheticCost;
+
+    #[test]
+    fn extract_tallies_the_event_stream() {
+        let cfg = QuantConfig::uniform(4, 8.0);
+        let cost = SyntheticCost::new(4, 1);
+        let events = vec![
+            SearchEvent::Started { algo: "Greedy", layers: 4, objective: "o".into() },
+            SearchEvent::Decision {
+                bits: 8.0,
+                index: 0,
+                accepted: true,
+                accuracy: 0.99,
+                cost: None,
+                replayed: false,
+            },
+            SearchEvent::Decision {
+                bits: 8.0,
+                index: 1,
+                accepted: false,
+                accuracy: f64::NAN,
+                cost: None,
+                replayed: true,
+            },
+            SearchEvent::BudgetSatisfied { cost: 0.6 },
+            SearchEvent::Finished { accuracy: 0.97, evals: 9 },
+        ];
+        let m = extract(&events, &cfg, &cost, 1, 12.5).unwrap();
+        assert_eq!(m.fields["decisions"], Value::Num(2.0));
+        assert_eq!(m.fields["accepted"], Value::Num(1.0));
+        assert_eq!(m.fields["replayed"], Value::Num(1.0));
+        assert_eq!(m.fields["decision_evals"], Value::Num(9.0));
+        assert_eq!(m.fields["accuracy"], Value::Num(0.97));
+        assert_eq!(m.fields["budget_satisfied"], Value::Bool(true));
+        assert_eq!(m.fields["segments"], Value::Num(1.0));
+        assert!(m.fields.contains_key("rel_latency"));
+        assert!(!m.fields.contains_key("cache_memo_hits"));
+        assert_eq!(m.wall_ms, 12.5);
+        // No Finished event -> extraction fails loudly.
+        assert!(extract(&events[..2], &cfg, &cost, 1, 0.0).is_err());
+    }
+
+    #[test]
+    fn first_mismatch_names_the_field() {
+        let cfg = QuantConfig::uniform(2, 8.0);
+        let cost = SyntheticCost::new(2, 1);
+        let ev = |evals| vec![SearchEvent::Finished { accuracy: 0.9, evals }];
+        let a = extract(&ev(5), &cfg, &cost, 1, 1.0).unwrap();
+        let b = extract(&ev(6), &cfg, &cost, 1, 2.0).unwrap();
+        assert_eq!(a.first_mismatch(&b), Some("decision_evals".to_string()));
+        let c = extract(&ev(5), &cfg, &cost, 1, 9.0).unwrap();
+        assert_eq!(a.first_mismatch(&c), None, "wall_ms is measured, not deterministic");
+    }
+
+    #[test]
+    fn bench_flattening_keys_by_name_or_workers() {
+        let bench = crate::util::json::parse(
+            r#"{"suite": "s", "note": "n", "base_work": 5,
+                "results": [
+                  {"name": "s::fast_w1", "mean_ns": 10, "ok": true, "skipped": null},
+                  {"workers": 2, "speedup": 1.5}
+                ]}"#,
+        )
+        .unwrap();
+        let m = bench_metrics(&bench).unwrap();
+        assert_eq!(m["s.base_work"], Value::Num(5.0));
+        assert_eq!(m["s.fast_w1.mean_ns"], Value::Num(10.0));
+        assert_eq!(m["s.fast_w1.ok"], Value::Bool(true));
+        assert_eq!(m["s.fast_w1.skipped"], Value::Null);
+        assert_eq!(m["s.w2.speedup"], Value::Num(1.5));
+    }
+}

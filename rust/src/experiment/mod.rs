@@ -1,0 +1,36 @@
+//! The declarative experiment harness (`mpq experiment run`).
+//!
+//! Reproduction runs were shell scripts pinning algo/metric/seed flags —
+//! unreviewable and drift-prone. This subsystem makes the comparative
+//! grid *data*:
+//!
+//! 1. [`suite`] — a YAML-subset loader turning `experiments/*.yaml` into
+//!    a typed [`ExperimentSuite`] (shared defaults + sparse per-variant
+//!    overrides, unknown keys rejected with line context, canonical
+//!    serialization with a parse→serialize→parse fixed point).
+//! 2. [`runner`] — executes every resolved variant through the existing
+//!    search front door in an isolated fresh artifacts directory, at ≥2
+//!    worker counts with cross-worker bit-identity asserted, streaming
+//!    typed [`crate::api::SearchEvent`]s to per-run JSONL files.
+//! 3. [`metrics`] — extracts decision-eval counts, accept/replay tallies,
+//!    accuracy, deployment costs, cache hit rates, and wall-time from the
+//!    typed event stream and `BENCH_*.json` files — never stderr text.
+//! 4. [`compare`] — renders the variant-comparison table (text + a
+//!    byte-stable deterministic JSON artifact) and diffs a run against a
+//!    checked-in [`Baseline`] with per-metric tolerances: exact match for
+//!    deterministic fields, a ratio band for wall-time and bench numbers,
+//!    pass-with-flag when the baseline value is null.
+//!
+//! CI runs `mpq experiment run experiments/paper_repro.yaml` as a
+//! blocking regression gate; `--update-baseline` refreshes the pinned
+//! baseline in a byte-stable round-trip.
+
+pub mod compare;
+pub mod metrics;
+pub mod runner;
+pub mod suite;
+
+pub use compare::{gate, Baseline, Comparison, GateReport, VariantRow, BASELINE_VERSION};
+pub use metrics::{bench_metrics, extract, VariantMetrics};
+pub use runner::{load_bench, run_suite, RunOptions};
+pub use suite::{ExperimentSuite, ObjKind, ResolvedVariant, Variant, VariantCfg};

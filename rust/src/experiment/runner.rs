@@ -1,0 +1,399 @@
+//! Suite execution: every resolved variant runs through the existing
+//! search front door in its own fresh artifacts directory, at **at least
+//! two worker counts**, with cross-worker bit-identity asserted on the
+//! extracted deterministic metrics before anything is reported.
+//!
+//! Per `(variant, workers)` run the harness writes `events_w<N>.jsonl`
+//! (the [`EventSink`] JSONL stream) and a decision checkpoint
+//! `ck_w<N>.json` under `<out>/<variant>/`, so a failed gate leaves the
+//! full typed trajectory behind for diffing. Metrics come from the typed
+//! [`SearchEvent`] stream via [`super::metrics::extract`] — never from
+//! stderr text.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::api::{
+    checkpoint_fingerprint, run_search, Checkpoint, EventSink, ObjectiveSpec, Partition,
+    PartitionedDriver, SearchEvent, SearchSpec, SharedSegmentEval, SyntheticCost, SyntheticEnv,
+    SyntheticStage,
+};
+use crate::coordinator::{hessian_trace_sharded, noise_scores_sharded, ParallelEnv};
+use crate::quant::{eps_qe, QUANT_BITS};
+use crate::sensitivity::{MetricKind, NoiseOptions, Sensitivity};
+use crate::util::json::Value;
+use crate::util::rng::{probe_seed, Rng};
+
+use super::compare::{Comparison, VariantRow};
+use super::metrics::{self, VariantMetrics};
+use super::suite::{ExperimentSuite, ResolvedVariant};
+
+/// Calibration batches behind the synthetic stage runner (sensitivity
+/// probes); results are worker-count-independent, so this is a fixed
+/// harness constant rather than a suite knob.
+const STAGE_BATCHES: usize = 8;
+
+/// Domain tag for the synthetic ε_QE probe weights, so they never share
+/// a splitmix64 stream with the env/cost/stage constructions.
+const QE_SALT: u64 = 0x9e5a_17_e5;
+
+/// Probe tensor length per layer for the synthetic ε_QE stand-in.
+const QE_PROBE_LEN: usize = 256;
+
+/// How a suite run executes.
+#[derive(Debug, Clone)]
+pub struct RunOptions {
+    /// Root output directory; each variant owns `<out>/<name>/`, recreated
+    /// fresh (isolation: no cross-variant or cross-run cache reuse).
+    pub out_dir: PathBuf,
+    /// Replace every variant's `workers:` setting (the CI A/B lever; the
+    /// deterministic comparison must not change with it).
+    pub workers_override: Option<usize>,
+}
+
+/// Union of worker counts a variant runs at: always `{1, 2}` so parity is
+/// asserted between serial and fanned-out execution, plus the variant's
+/// own (possibly overridden) count.
+fn worker_counts(v: &ResolvedVariant, opts: &RunOptions) -> Vec<usize> {
+    let base = opts.workers_override.unwrap_or(v.workers).max(1);
+    let mut counts = vec![1, 2, base];
+    counts.sort_unstable();
+    counts.dedup();
+    counts
+}
+
+/// Deterministic one-line summary of a resolved variant (no worker count:
+/// the comparison artifact must be byte-identical across `--workers`).
+fn describe(v: &ResolvedVariant) -> String {
+    let obj = match &v.objective {
+        ObjectiveSpec::AccuracyTarget => "accuracy".to_string(),
+        ObjectiveSpec::LatencyBudget { rel_latency } => {
+            format!("latency<={}", Value::Num(*rel_latency))
+        }
+        ObjectiveSpec::FootprintBudget { rel_size } => {
+            format!("size<={}", Value::Num(*rel_size))
+        }
+    };
+    format!(
+        "{}/{} obj={obj} target={} model={} layers={} seed={} trials={} partitions={}",
+        v.algo.label(),
+        v.metric.label(),
+        Value::Num(v.target),
+        v.model,
+        v.layers,
+        v.seed,
+        v.trials,
+        v.partitions,
+    )
+}
+
+/// The sensitivity ordering a synthetic variant searches in. Hessian and
+/// noise run the real sharded metric drivers over [`SyntheticStage`]
+/// (bit-identical at every worker count); ε_QE scores seeded per-layer
+/// probe tensors with [`eps_qe`] at the harshest candidate width; random
+/// is the paper's uninformed baseline.
+fn synthetic_order(v: &ResolvedVariant, workers: usize) -> Result<Vec<usize>> {
+    let sens = match v.metric {
+        MetricKind::Random => Sensitivity::random(v.layers, v.seed),
+        MetricKind::Hessian => {
+            let mut stage = SyntheticStage::new(v.layers, STAGE_BATCHES, workers, v.seed);
+            let scores = hessian_trace_sharded(&mut stage, v.trials, v.seed)?;
+            Sensitivity::from_scores(MetricKind::Hessian, scores)
+        }
+        MetricKind::Noise => {
+            let mut stage = SyntheticStage::new(v.layers, STAGE_BATCHES, workers, v.seed);
+            let lambda = NoiseOptions::default().lambda;
+            let scores = noise_scores_sharded(&mut stage, lambda, v.trials, v.seed)?;
+            Sensitivity::from_scores(MetricKind::Noise, scores)
+        }
+        MetricKind::Qe => {
+            let probe_bits = QUANT_BITS[QUANT_BITS.len() - 1];
+            let scores = (0..v.layers)
+                .map(|layer| {
+                    let mut rng = Rng::seed_from(probe_seed(v.seed ^ QE_SALT, layer as u64));
+                    let w: Vec<f32> =
+                        (0..QE_PROBE_LEN).map(|_| rng.gaussian() as f32).collect();
+                    eps_qe(&w, probe_bits)
+                })
+                .collect();
+            Sensitivity::from_scores(MetricKind::Qe, scores)
+        }
+    };
+    Ok(sens.order)
+}
+
+/// One synthetic `(variant, workers)` execution: metric ordering, the
+/// constrained search (monolithic or partitioned), events to
+/// `events_w<N>.jsonl`, decisions to `ck_w<N>`, metrics from the stream.
+fn run_synthetic_variant(
+    v: &ResolvedVariant,
+    workers: usize,
+    dir: &Path,
+) -> Result<VariantMetrics> {
+    let order = synthetic_order(v, workers)?;
+    let env = SyntheticEnv::new(v.layers, v.seed);
+    let cost = Arc::new(SyntheticCost::new(v.layers, v.seed));
+    let env_context = format!("experiment/{}/n{}/seed{}", v.name, v.layers, v.seed);
+
+    let sink = EventSink::create(&dir.join(format!("events_w{workers}.jsonl")))?;
+    let mut events: Vec<SearchEvent> = Vec::new();
+    let mut sink_obs = sink.observer();
+    let mut observer = |ev: &SearchEvent| {
+        events.push(ev.clone());
+        sink_obs(ev);
+    };
+
+    let started = Instant::now();
+    let (config, segments) = if v.partitions > 1 {
+        let driver = PartitionedDriver::new(
+            v.algo,
+            Partition::split(&order, v.partitions),
+            1.0,
+            cost.clone(),
+            env_context,
+        )
+        .checkpoint(dir.join(format!("ck_w{workers}")));
+        // The synthetic float baseline is exactly 1.0: the absolute floor
+        // is the target itself.
+        let out = if workers > 1 {
+            driver.run(&SharedSegmentEval(&env), &v.objective, v.target, Some(&mut observer))?
+        } else {
+            let mut penv = ParallelEnv::new(&env, 1);
+            driver.run_serial(&mut penv, &v.objective, v.target, Some(&mut observer))?
+        };
+        (out.outcome.config, out.segments.len())
+    } else {
+        let objective = v.objective.build(v.target, cost.clone());
+        let fp = checkpoint_fingerprint(
+            v.algo,
+            &QUANT_BITS,
+            &objective.describe(),
+            &order,
+            &env_context,
+        );
+        let mut checkpoint =
+            Checkpoint::attach(&dir.join(format!("ck_w{workers}.json")), &fp, false)?;
+        let mut penv = ParallelEnv::new(&env, workers);
+        let outcome = run_search(
+            v.algo,
+            &mut penv,
+            &order,
+            &QUANT_BITS,
+            objective.as_ref(),
+            Some(&mut observer),
+            Some(&mut checkpoint),
+        )?;
+        (outcome.config, 1)
+    };
+    let wall_ms = started.elapsed().as_secs_f64() * 1e3;
+    sink.finish()?;
+    metrics::extract(&events, &config, cost.as_ref(), segments, wall_ms)
+}
+
+/// One artifact-backed `(variant, workers)` execution through
+/// [`SearchSpec`] — the same front door the `search` subcommand uses —
+/// with cache and checkpoint isolated into the variant directory.
+/// Requires exported model artifacts (`MPQ_ARTIFACTS` / `./artifacts`).
+fn run_model_variant(v: &ResolvedVariant, workers: usize, dir: &Path) -> Result<VariantMetrics> {
+    let artifacts = crate::artifacts_dir().ok_or_else(|| {
+        anyhow::anyhow!(
+            "variant `{}` targets model `{}` but no artifacts directory was found \
+             (set MPQ_ARTIFACTS or run from the repo root)",
+            v.name,
+            v.model
+        )
+    })?;
+    let spec = SearchSpec::new(v.model.as_str())
+        .artifacts_dir(&artifacts)
+        .algo(v.algo)
+        .metric(v.metric)
+        .objective(v.objective)
+        .target(v.target)
+        .seed(v.seed)
+        .trials(v.trials)
+        .workers(workers)
+        .cache_path(dir.join(format!("eval_cache_w{workers}.json")))
+        .checkpoint(dir.join(format!("ck_w{workers}.json")));
+    let mut session = spec.open()?;
+    let sink = EventSink::create(&dir.join(format!("events_w{workers}.jsonl")))?;
+    let events = Arc::new(std::sync::Mutex::new(Vec::<SearchEvent>::new()));
+    let captured = events.clone();
+    let mut sink_obs = sink.observer();
+    session.on_event(move |ev: &SearchEvent| {
+        captured.lock().expect("event capture poisoned").push(ev.clone());
+        sink_obs(ev);
+    });
+    let started = Instant::now();
+    let report = session.run()?;
+    let wall_ms = started.elapsed().as_secs_f64() * 1e3;
+    sink.finish()?;
+    let events = events.lock().expect("event capture poisoned");
+    let cost: &dyn crate::api::CostModel = session.ctx.cost.as_ref();
+    metrics::extract(&events, &report.outcome.config, cost, 1, wall_ms)
+}
+
+fn run_variant(v: &ResolvedVariant, workers: usize, dir: &Path) -> Result<VariantMetrics> {
+    if v.model == "synthetic" {
+        run_synthetic_variant(v, workers, dir)
+    } else {
+        run_model_variant(v, workers, dir)
+    }
+}
+
+/// Execute every variant of `suite` at every required worker count,
+/// assert cross-worker bit-identity of the deterministic metrics, and
+/// assemble the [`Comparison`]. The reported wall-clock is the run at the
+/// highest worker count.
+pub fn run_suite(suite: &ExperimentSuite, opts: &RunOptions) -> Result<Comparison> {
+    let resolved = suite.resolve()?;
+    let mut all_counts: Vec<usize> = Vec::new();
+    let mut rows = Vec::with_capacity(resolved.len());
+    for v in &resolved {
+        let counts = worker_counts(v, opts);
+        let dir = opts.out_dir.join(&v.name);
+        if dir.exists() {
+            std::fs::remove_dir_all(&dir)
+                .with_context(|| format!("clearing variant dir {}", dir.display()))?;
+        }
+        std::fs::create_dir_all(&dir)?;
+        let mut primary: Option<VariantMetrics> = None;
+        for &w in &counts {
+            let m = run_variant(v, w, &dir)
+                .with_context(|| format!("variant `{}` at {w} worker(s)", v.name))?;
+            if let Some(first) = &primary {
+                if let Some(field) = first.first_mismatch(&m) {
+                    bail!(
+                        "variant `{}`: metric `{field}` differs between {} and {w} worker(s) — \
+                         the sharded-determinism contract is broken \
+                         (see {}/events_w*.jsonl)",
+                        v.name,
+                        counts[0],
+                        dir.display()
+                    );
+                }
+            }
+            // Deterministic fields are parity-checked identical; keep the
+            // highest-worker-count run's wall-clock as the reported one.
+            primary = Some(m);
+        }
+        all_counts.extend(&counts);
+        rows.push(VariantRow {
+            name: v.name.clone(),
+            describe: describe(v),
+            metrics: primary.expect("counts is never empty"),
+        });
+    }
+    all_counts.sort_unstable();
+    all_counts.dedup();
+    Ok(Comparison {
+        suite: suite.name.clone(),
+        worker_counts: all_counts,
+        rows,
+        bench: BTreeMap::new(),
+    })
+}
+
+/// Load and flatten `BENCH_*.json` files into the measured metric map
+/// (see [`metrics::bench_metrics`]).
+pub fn load_bench(paths: &[PathBuf]) -> Result<BTreeMap<String, Value>> {
+    let mut out = BTreeMap::new();
+    for path in paths {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading bench file {}", path.display()))?;
+        let parsed = crate::util::json::parse(&text)
+            .with_context(|| format!("parsing bench file {}", path.display()))?;
+        out.append(&mut metrics::bench_metrics(&parsed)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiment::suite::ExperimentSuite;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("mpq_runner_{tag}_{}", std::process::id()))
+    }
+
+    const MINI: &str = "\
+name: mini
+defaults:
+  model: synthetic
+  layers: 10
+  seed: 11
+  trials: 3
+  workers: 2
+variants:
+  - name: g_hessian
+  - name: b_noise
+    algo: bisection
+    metric: noise
+  - name: g_qe_latency
+    metric: qe
+    objective: latency
+    budget: 0.8
+  - name: g_random_parts
+    metric: random
+    partitions: 3
+";
+
+    #[test]
+    fn suite_runs_are_deterministic_and_worker_invariant() {
+        let suite = ExperimentSuite::parse(MINI).unwrap();
+        let dir = tmp("det");
+        // Two full runs at different override levers: the deterministic
+        // comparison artifact must come out byte-identical (the runner
+        // itself already asserts 1-vs-2-worker parity inside each run).
+        let a = run_suite(
+            &suite,
+            &RunOptions { out_dir: dir.join("a"), workers_override: Some(1) },
+        )
+        .unwrap();
+        let b = run_suite(
+            &suite,
+            &RunOptions { out_dir: dir.join("b"), workers_override: Some(2) },
+        )
+        .unwrap();
+        assert_eq!(a.deterministic_json(), b.deterministic_json());
+        assert_eq!(a.digest(), b.digest());
+        // Every (variant, workers) run left its JSONL event stream behind.
+        for v in ["g_hessian", "b_noise", "g_qe_latency", "g_random_parts"] {
+            for w in [1, 2] {
+                let p = dir.join("a").join(v).join(format!("events_w{w}.jsonl"));
+                assert!(p.is_file(), "missing {}", p.display());
+                let text = std::fs::read_to_string(&p).unwrap();
+                assert!(
+                    text.lines().any(|l| l.contains("\"event\":\"finished\"")),
+                    "{} has no finished event",
+                    p.display()
+                );
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn budgeted_variant_satisfies_its_budget_and_partitions_report_segments() {
+        let suite = ExperimentSuite::parse(MINI).unwrap();
+        let dir = tmp("budget");
+        let cmp =
+            run_suite(&suite, &RunOptions { out_dir: dir.clone(), workers_override: None })
+                .unwrap();
+        let row = |name: &str| cmp.rows.iter().find(|r| r.name == name).unwrap();
+        let lat = row("g_qe_latency");
+        // The satisfaction flag and the priced cost must agree: a satisfied
+        // budget means the final config actually fits it (the search may
+        // also legitimately exhaust without reaching the budget).
+        let sat = lat.metrics.fields["budget_satisfied"] == Value::Bool(true);
+        let rel = lat.metrics.fields["rel_latency"].as_f64().unwrap();
+        assert!(!sat || rel <= 0.8 + 1e-12, "satisfied at rel_latency {rel} > budget");
+        assert_eq!(row("g_random_parts").metrics.fields["segments"], Value::Num(3.0));
+        assert_eq!(row("g_hessian").metrics.fields["segments"], Value::Num(1.0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,502 @@
+//! Declarative experiment suites: a vendored-dependency-free YAML-subset
+//! loader.
+//!
+//! A suite file pins a comparative grid — the paper's algo × metric ×
+//! objective matrix — as data:
+//!
+//! ```yaml
+//! name: paper_repro
+//! defaults:
+//!   model: synthetic
+//!   layers: 24
+//!   seed: 7
+//! variants:
+//!   - name: greedy_hessian
+//!   - name: bisection_noise
+//!     algo: bisection
+//!     metric: noise
+//! ```
+//!
+//! The accepted grammar is deliberately small (the same spirit as
+//! `util::json`): `key: value` scalar pairs, a two-space-indented
+//! `defaults:` block, a `variants:` list of `- name: <id>` items with
+//! four-space-indented overrides, full-line `#` comments, and nothing
+//! else — no anchors, no nested maps, no flow syntax. Unknown keys and
+//! malformed lines fail with their line number and text, and
+//! [`ExperimentSuite::serialize`] emits a canonical form that
+//! parse→serialize→parse fixes (asserted over the checked-in
+//! `experiments/paper_repro.yaml`).
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::api::{ObjectiveSpec, DEFAULT_TRIALS};
+use crate::coordinator::SearchAlgo;
+use crate::sensitivity::MetricKind;
+use crate::util::json::Value;
+
+/// Which budget family a variant optimizes under (the `objective:` key;
+/// `budget:` supplies the bound for the non-accuracy kinds).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ObjKind {
+    /// Accuracy floor only — compress to exhaustion (the paper's setting).
+    Accuracy,
+    /// Accuracy floor + relative latency budget.
+    Latency,
+    /// Accuracy floor + relative size budget.
+    Size,
+}
+
+impl ObjKind {
+    fn label(self) -> &'static str {
+        match self {
+            ObjKind::Accuracy => "accuracy",
+            ObjKind::Latency => "latency",
+            ObjKind::Size => "size",
+        }
+    }
+}
+
+impl std::str::FromStr for ObjKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "accuracy" => Ok(ObjKind::Accuracy),
+            "latency" => Ok(ObjKind::Latency),
+            "size" => Ok(ObjKind::Size),
+            other => bail!("unknown objective `{other}` (accuracy|latency|size)"),
+        }
+    }
+}
+
+/// One block of `key: value` settings — the `defaults:` block or one
+/// variant's overrides. Every field is optional; [`ResolvedVariant`]
+/// supplies the final fallbacks.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct VariantCfg {
+    pub model: Option<String>,
+    pub layers: Option<usize>,
+    pub algo: Option<SearchAlgo>,
+    pub metric: Option<MetricKind>,
+    pub objective: Option<ObjKind>,
+    pub target: Option<f64>,
+    pub budget: Option<f64>,
+    pub seed: Option<u64>,
+    pub trials: Option<usize>,
+    pub workers: Option<usize>,
+    pub partitions: Option<usize>,
+}
+
+/// The accepted setting keys, in canonical serialization order.
+const CFG_KEYS: [&str; 11] = [
+    "model",
+    "layers",
+    "algo",
+    "metric",
+    "objective",
+    "target",
+    "budget",
+    "seed",
+    "trials",
+    "workers",
+    "partitions",
+];
+
+impl VariantCfg {
+    /// Apply one parsed `key: value` pair; unknown keys and unparsable
+    /// values fail with the offending line's number and text.
+    fn set(&mut self, key: &str, value: &str, line_no: usize, raw: &str) -> Result<()> {
+        let at = || format!("line {line_no}: `{}`", raw.trim());
+        ensure!(!value.is_empty(), "{}: key `{key}` has no value", at());
+        match key {
+            "model" => self.model = Some(value.to_string()),
+            "layers" => self.layers = Some(value.parse().with_context(at)?),
+            "algo" => self.algo = Some(value.parse().with_context(at)?),
+            "metric" => self.metric = Some(value.parse().with_context(at)?),
+            "objective" => self.objective = Some(value.parse().with_context(at)?),
+            "target" => self.target = Some(value.parse().with_context(at)?),
+            "budget" => self.budget = Some(value.parse().with_context(at)?),
+            "seed" => self.seed = Some(value.parse().with_context(at)?),
+            "trials" => self.trials = Some(value.parse().with_context(at)?),
+            "workers" => self.workers = Some(value.parse().with_context(at)?),
+            "partitions" => self.partitions = Some(value.parse().with_context(at)?),
+            other => bail!(
+                "{}: unknown key `{other}` (expected one of: {})",
+                at(),
+                CFG_KEYS.join(", ")
+            ),
+        }
+        Ok(())
+    }
+
+    /// This block's overrides on top of `base` (variant over defaults).
+    fn merged_over(&self, base: &VariantCfg) -> VariantCfg {
+        VariantCfg {
+            model: self.model.clone().or_else(|| base.model.clone()),
+            layers: self.layers.or(base.layers),
+            algo: self.algo.or(base.algo),
+            metric: self.metric.or(base.metric),
+            objective: self.objective.or(base.objective),
+            target: self.target.or(base.target),
+            budget: self.budget.or(base.budget),
+            seed: self.seed.or(base.seed),
+            trials: self.trials.or(base.trials),
+            workers: self.workers.or(base.workers),
+            partitions: self.partitions.or(base.partitions),
+        }
+    }
+
+    /// Canonical `key: value` lines for the set fields, in [`CFG_KEYS`]
+    /// order, each prefixed with `indent`.
+    fn emit(&self, out: &mut String, indent: &str) {
+        let fmt_f = |x: f64| Value::Num(x).to_string();
+        let pairs: Vec<(&str, Option<String>)> = vec![
+            ("model", self.model.clone()),
+            ("layers", self.layers.map(|v| v.to_string())),
+            ("algo", self.algo.map(|a| a.label().to_ascii_lowercase())),
+            ("metric", self.metric.map(|m| m.label().to_ascii_lowercase())),
+            ("objective", self.objective.map(|o| o.label().to_string())),
+            ("target", self.target.map(fmt_f)),
+            ("budget", self.budget.map(fmt_f)),
+            ("seed", self.seed.map(|v| v.to_string())),
+            ("trials", self.trials.map(|v| v.to_string())),
+            ("workers", self.workers.map(|v| v.to_string())),
+            ("partitions", self.partitions.map(|v| v.to_string())),
+        ];
+        for (key, value) in pairs {
+            if let Some(v) = value {
+                out.push_str(indent);
+                out.push_str(key);
+                out.push_str(": ");
+                out.push_str(&v);
+                out.push('\n');
+            }
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        *self == VariantCfg::default()
+    }
+}
+
+/// One named variant: its identity plus the fields it overrides.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Variant {
+    pub name: String,
+    pub cfg: VariantCfg,
+}
+
+/// A parsed suite: shared defaults plus the variant list, exactly as
+/// written (overrides are kept sparse so serialization is faithful).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentSuite {
+    pub name: String,
+    pub defaults: VariantCfg,
+    pub variants: Vec<Variant>,
+}
+
+/// A variant with defaults merged in and every fallback applied — what
+/// the runner executes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResolvedVariant {
+    pub name: String,
+    pub model: String,
+    pub layers: usize,
+    pub algo: SearchAlgo,
+    pub metric: MetricKind,
+    pub objective: ObjectiveSpec,
+    /// Accuracy floor as a fraction of the float baseline.
+    pub target: f64,
+    pub seed: u64,
+    pub trials: usize,
+    pub workers: usize,
+    pub partitions: usize,
+}
+
+fn split_kv<'a>(s: &'a str, line_no: usize, raw: &str) -> Result<(&'a str, &'a str)> {
+    let Some((k, v)) = s.split_once(':') else {
+        bail!("line {line_no}: `{}` is not a `key: value` pair", raw.trim());
+    };
+    let key = k.trim();
+    ensure!(
+        !key.is_empty() && !key.contains(char::is_whitespace),
+        "line {line_no}: `{}` has a malformed key",
+        raw.trim()
+    );
+    Ok((key, v.trim()))
+}
+
+impl ExperimentSuite {
+    /// Parse a suite from YAML-subset text. See the module docs for the
+    /// grammar; every rejection carries the offending line.
+    pub fn parse(text: &str) -> Result<Self> {
+        #[derive(PartialEq)]
+        enum Sect {
+            Top,
+            Defaults,
+            Variants,
+        }
+        let mut sect = Sect::Top;
+        let mut name: Option<String> = None;
+        let mut defaults = VariantCfg::default();
+        let mut variants: Vec<Variant> = Vec::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line_no = i + 1;
+            let trimmed = raw.trim();
+            if trimmed.is_empty() || trimmed.starts_with('#') {
+                continue;
+            }
+            let indent = raw.len() - raw.trim_start().len();
+            ensure!(
+                !raw[..indent].contains('\t'),
+                "line {line_no}: tabs are not allowed in indentation"
+            );
+            match indent {
+                0 => {
+                    let (key, value) = split_kv(trimmed, line_no, raw)?;
+                    match key {
+                        "name" => {
+                            ensure!(!value.is_empty(), "line {line_no}: `name:` needs a value");
+                            ensure!(name.is_none(), "line {line_no}: duplicate `name:`");
+                            name = Some(value.to_string());
+                            sect = Sect::Top;
+                        }
+                        "defaults" => {
+                            ensure!(
+                                value.is_empty(),
+                                "line {line_no}: `defaults:` opens a block, it takes no value"
+                            );
+                            sect = Sect::Defaults;
+                        }
+                        "variants" => {
+                            ensure!(
+                                value.is_empty(),
+                                "line {line_no}: `variants:` opens a list, it takes no value"
+                            );
+                            sect = Sect::Variants;
+                        }
+                        other => bail!(
+                            "line {line_no}: unknown top-level key `{other}` \
+                             (expected name, defaults, variants)"
+                        ),
+                    }
+                }
+                2 => match sect {
+                    Sect::Defaults => {
+                        let (key, value) = split_kv(trimmed, line_no, raw)?;
+                        defaults.set(key, value, line_no, raw)?;
+                    }
+                    Sect::Variants => {
+                        let Some(item) = trimmed.strip_prefix("- ") else {
+                            bail!(
+                                "line {line_no}: `{trimmed}` — a variant starts with \
+                                 `- name: <id>`"
+                            );
+                        };
+                        let (key, value) = split_kv(item, line_no, raw)?;
+                        ensure!(
+                            key == "name",
+                            "line {line_no}: a variant item must start with `- name: <id>`, \
+                             got `- {key}: ...`"
+                        );
+                        ensure!(
+                            !value.is_empty()
+                                && value
+                                    .chars()
+                                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-'),
+                            "line {line_no}: variant name `{value}` must be a non-empty \
+                             [A-Za-z0-9_-] identifier (it names an output directory)"
+                        );
+                        variants
+                            .push(Variant { name: value.to_string(), cfg: VariantCfg::default() });
+                    }
+                    Sect::Top => bail!(
+                        "line {line_no}: indented line outside a `defaults:`/`variants:` block"
+                    ),
+                },
+                4 if sect == Sect::Variants && !variants.is_empty() => {
+                    let (key, value) = split_kv(trimmed, line_no, raw)?;
+                    ensure!(
+                        key != "name",
+                        "line {line_no}: `name` belongs on the `- name:` item line"
+                    );
+                    let last = variants.last_mut().expect("non-empty checked above");
+                    last.cfg.set(key, value, line_no, raw)?;
+                }
+                other => bail!(
+                    "line {line_no}: unsupported indentation ({other} spaces) — use 0, 2 \
+                     (defaults / `- name:` items) or 4 (variant overrides)"
+                ),
+            }
+        }
+        let name = name.ok_or_else(|| anyhow::anyhow!("suite is missing a top-level `name:`"))?;
+        ensure!(!variants.is_empty(), "suite `{name}` declares no variants");
+        let mut seen = std::collections::BTreeSet::new();
+        for v in &variants {
+            ensure!(seen.insert(v.name.as_str()), "duplicate variant name `{}`", v.name);
+        }
+        Ok(Self { name, defaults, variants })
+    }
+
+    /// Load + parse a suite file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading suite {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing suite {}", path.display()))
+    }
+
+    /// Canonical serialization: fixed key order, two/four-space indents,
+    /// no comments. `parse(serialize(s)) == s` for every parsed suite.
+    pub fn serialize(&self) -> String {
+        let mut out = String::new();
+        out.push_str("name: ");
+        out.push_str(&self.name);
+        out.push('\n');
+        if !self.defaults.is_empty() {
+            out.push_str("defaults:\n");
+            self.defaults.emit(&mut out, "  ");
+        }
+        out.push_str("variants:\n");
+        for v in &self.variants {
+            out.push_str("  - name: ");
+            out.push_str(&v.name);
+            out.push('\n');
+            v.cfg.emit(&mut out, "    ");
+        }
+        out
+    }
+
+    /// Merge defaults into every variant and apply the final fallbacks,
+    /// validating the result (budget bounds, objective/budget pairing).
+    pub fn resolve(&self) -> Result<Vec<ResolvedVariant>> {
+        self.variants.iter().map(|v| self.resolve_one(v)).collect()
+    }
+
+    fn resolve_one(&self, v: &Variant) -> Result<ResolvedVariant> {
+        let cfg = v.cfg.merged_over(&self.defaults);
+        let at = || format!("variant `{}`", v.name);
+        let kind = cfg.objective.unwrap_or(ObjKind::Accuracy);
+        let objective = match kind {
+            ObjKind::Accuracy => ObjectiveSpec::AccuracyTarget,
+            ObjKind::Latency | ObjKind::Size => {
+                let budget = cfg.budget.ok_or_else(|| {
+                    anyhow::anyhow!("{}: objective `{}` needs a `budget:`", at(), kind.label())
+                })?;
+                ensure!(
+                    budget > 0.0 && budget <= 1.0,
+                    "{}: budget {budget} must be in (0, 1]",
+                    at()
+                );
+                match kind {
+                    ObjKind::Latency => ObjectiveSpec::LatencyBudget { rel_latency: budget },
+                    _ => ObjectiveSpec::FootprintBudget { rel_size: budget },
+                }
+            }
+        };
+        let target = cfg.target.unwrap_or(0.99);
+        ensure!(target > 0.0 && target <= 1.0, "{}: target {target} must be in (0, 1]", at());
+        let layers = cfg.layers.unwrap_or(24);
+        ensure!(layers >= 2, "{}: layers {layers} must be >= 2", at());
+        Ok(ResolvedVariant {
+            name: v.name.clone(),
+            model: cfg.model.unwrap_or_else(|| "synthetic".to_string()),
+            layers,
+            algo: cfg.algo.unwrap_or(SearchAlgo::Greedy),
+            metric: cfg.metric.unwrap_or(MetricKind::Hessian),
+            objective,
+            target,
+            seed: cfg.seed.unwrap_or(0),
+            trials: cfg.trials.unwrap_or(DEFAULT_TRIALS).max(1),
+            workers: cfg.workers.unwrap_or(2).max(1),
+            partitions: cfg.partitions.unwrap_or(1).max(1),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SUITE: &str = "\
+# comment line
+name: demo
+
+defaults:
+  model: synthetic
+  layers: 12
+  seed: 7
+  objective: latency
+  budget: 0.7
+
+variants:
+  - name: base
+  - name: bisect_noise
+    algo: bisection
+    metric: noise
+    budget: 0.8
+  - name: exhaustive
+    objective: accuracy
+    target: 0.95
+";
+
+    #[test]
+    fn defaults_merge_under_variant_overrides() {
+        let suite = ExperimentSuite::parse(SUITE).unwrap();
+        assert_eq!(suite.name, "demo");
+        let resolved = suite.resolve().unwrap();
+        assert_eq!(resolved.len(), 3);
+        let base = &resolved[0];
+        assert_eq!(base.layers, 12);
+        assert_eq!(base.seed, 7);
+        assert_eq!(base.algo, SearchAlgo::Greedy);
+        assert_eq!(base.objective, ObjectiveSpec::LatencyBudget { rel_latency: 0.7 });
+        let b = &resolved[1];
+        assert_eq!(b.algo, SearchAlgo::Bisection);
+        assert_eq!(b.metric, MetricKind::Noise);
+        assert_eq!(b.objective, ObjectiveSpec::LatencyBudget { rel_latency: 0.8 });
+        // objective: accuracy ignores the inherited budget.
+        let e = &resolved[2];
+        assert_eq!(e.objective, ObjectiveSpec::AccuracyTarget);
+        assert_eq!(e.target, 0.95);
+    }
+
+    #[test]
+    fn unknown_keys_fail_with_line_context() {
+        let bad = "name: x\ndefaults:\n  model: synthetic\n  wrokers: 2\nvariants:\n  - name: a\n";
+        let err = ExperimentSuite::parse(bad).unwrap_err().to_string();
+        assert!(err.contains("line 4"), "{err}");
+        assert!(err.contains("wrokers"), "{err}");
+        let bad_variant = "name: x\nvariants:\n  - name: a\n    algo: magic\n";
+        let err = format!("{:#}", ExperimentSuite::parse(bad_variant).unwrap_err());
+        assert!(err.contains("line 4"), "{err}");
+        assert!(err.contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn structural_errors_name_their_line() {
+        for (text, needle) in [
+            ("name: x\nvariants:\n  oops: 1\n", "line 3"),
+            ("name: x\nvariants:\n  - algo: greedy\n", "`- name:"),
+            ("name: x\n   weird: 1\n", "indentation"),
+            ("name: x\nvariants:\n  - name: a\n  - name: a\n", "duplicate variant name"),
+            ("name: x\nvariants:\n  - name: bad/slash\n", "identifier"),
+            ("variants:\n  - name: a\n", "missing a top-level `name:`"),
+            ("name: x\nvariants:\n", "no variants"),
+        ] {
+            let err = format!("{:#}", ExperimentSuite::parse(text).unwrap_err());
+            assert!(err.contains(needle), "`{text}` -> `{err}` (wanted `{needle}`)");
+        }
+    }
+
+    #[test]
+    fn parse_serialize_parse_is_a_fixed_point() {
+        let suite = ExperimentSuite::parse(SUITE).unwrap();
+        let canon = suite.serialize();
+        let reparsed = ExperimentSuite::parse(&canon).unwrap();
+        assert_eq!(reparsed, suite);
+        // And the canonical form itself is stable byte for byte.
+        assert_eq!(reparsed.serialize(), canon);
+    }
+}

@@ -17,6 +17,9 @@
 //! * [`api`] — the unified constrained-search front door: `SearchSpec` →
 //!   `SearchSession`, pluggable objectives and cost models, typed search
 //!   events, checkpoint/resume.
+//! * [`experiment`] — the declarative experiment harness: YAML-subset
+//!   suites, isolated multi-worker-count variant execution, typed-event
+//!   metric extraction, and the baseline regression gate.
 //! * [`latency`] — the roofline accelerator model + kernel latency table
 //!   standing in for the paper's CUTLASS-profiled A100 measurements.
 //! * [`report`] — regenerates every table and figure of the paper.
@@ -28,6 +31,7 @@
 
 pub mod api;
 pub mod coordinator;
+pub mod experiment;
 pub mod latency;
 pub mod model;
 pub mod quant;

@@ -18,6 +18,7 @@
 //! mpq report --sweep --model M --from-frontier artifacts/M_frontier.json
 //! mpq serve --model resnet_s --bits 8 --requests 256
 //! mpq serve --model M --frontier artifacts/M_frontier.json --pick latency<=0.7,acc>=0.99
+//! mpq experiment run experiments/paper_repro.yaml --baseline experiments/baseline.json
 //! ```
 //!
 //! Each subcommand parses into a typed argument struct
@@ -30,8 +31,8 @@ use std::sync::Arc;
 
 use mpq::api::{
     build_frontier_synthetic_partitioned, log_event, run_search, BackendSpec, Checkpoint,
-    CostModel, FrontierArtifact, FrontierReport, ObjectiveSpec, PickSpec, SearchSpec,
-    SyntheticCost, SyntheticEnv, SyntheticStage,
+    CostModel, EventSink, FrontierArtifact, FrontierReport, ObjectiveSpec, PickSpec, SearchEvent,
+    SearchSpec, SyntheticCost, SyntheticEnv, SyntheticStage,
 };
 use mpq::coordinator::{
     calibrate_sharded, hessian_trace_sharded, noise_scores_sharded, ParallelEnv, SearchAlgo,
@@ -44,9 +45,11 @@ use mpq::report::{
     cells_to_json, render_sweep, sweep_cells_json, sweep_fingerprint, synthetic_table_cost,
     BudgetKind, Driver, SweepCheckpoint, SweepGrid,
 };
+use mpq::experiment::{gate, load_bench, run_suite, Baseline, ExperimentSuite, RunOptions};
 use mpq::sensitivity::{MetricKind, NoiseOptions};
 use mpq::util::cli::Args;
 use mpq::util::json::Value;
+use mpq::util::result::ResultLine;
 use mpq::Result;
 
 const USAGE: &str = "\
@@ -95,9 +98,14 @@ COMMANDS
               [--workers 2] [--queue-depth 256] [--deadline-ms 0]
               [--max-batch 32] [--wait-us 500]
               [--frontier frontier.json [--pick latency<=B,size<=B,acc>=F]]
+  experiment  run <suite.yaml> [--out DIR] [--workers N]
+              [--baseline baseline.json [--update-baseline [--record-measured]]]
+              [--bench BENCH_a.json,BENCH_b.json] [--band 2.0]
 
 GLOBAL
   --artifacts DIR    artifacts directory (default: $MPQ_ARTIFACTS or ./artifacts)
+  --events-out F     stream typed search events to F as JSONL
+                     (search / calibrate --synthetic / pareto)
 ";
 
 fn artifacts_dir(args: &Args) -> Result<PathBuf> {
@@ -131,10 +139,16 @@ enum Command {
     Figure(FigureCmd),
     Ablation(AblationCmd),
     Serve(ServeCmd),
+    Experiment(ExperimentCmd),
 }
 
 impl Command {
     fn parse(args: &Args) -> Result<Self> {
+        // Only `experiment` takes positional operands (`run <suite.yaml>`);
+        // everywhere else a stray operand is a usage error.
+        if args.cmd != "experiment" {
+            args.reject_positionals()?;
+        }
         match args.cmd.as_str() {
             "info" => Ok(Command::Info),
             "calibrate" => Ok(Command::Calibrate(CalibrateCmd::parse(args)?)),
@@ -147,6 +161,7 @@ impl Command {
             "figure" => Ok(Command::Figure(FigureCmd::parse(args)?)),
             "ablation" => Ok(Command::Ablation(AblationCmd::parse(args)?)),
             "serve" => Ok(Command::Serve(ServeCmd::parse(args)?)),
+            "experiment" => Ok(Command::Experiment(ExperimentCmd::parse(args)?)),
             other => anyhow::bail!("unknown command `{other}`"),
         }
     }
@@ -167,6 +182,7 @@ impl Command {
                 | "figure"
                 | "ablation"
                 | "serve"
+                | "experiment"
         )
     }
 
@@ -194,6 +210,8 @@ impl Command {
             Command::Figure(c) => c.run(&artifacts_dir(args)?),
             Command::Ablation(c) => c.run(&artifacts_dir(args)?),
             Command::Serve(c) => c.run(&artifacts_dir(args)?),
+            // Experiment suites manage their own per-variant artifact dirs.
+            Command::Experiment(c) => c.run(),
         }
     }
 }
@@ -245,6 +263,8 @@ struct CalibrateCmd {
     /// Synthetic only: simulated adjustment-split batches.
     batches: usize,
     opts: CalibrationOptions,
+    /// Stream typed calibration events to this JSONL file (synthetic only).
+    events_out: Option<PathBuf>,
 }
 
 impl CalibrateCmd {
@@ -263,13 +283,14 @@ impl CalibrateCmd {
                 epochs: args.get_or("epochs", defaults.epochs)?,
                 grad_batches: args.get_or("grad-batches", defaults.grad_batches)?,
             },
+            events_out: args.get_str("events-out").map(PathBuf::from),
         };
         anyhow::ensure!(
             cmd.model.is_some() != cmd.synthetic.is_some(),
             "calibrate needs exactly one of --model M or --synthetic N"
         );
         if cmd.synthetic.is_none() {
-            for flag in ["trials", "batches"] {
+            for flag in ["trials", "batches", "events-out"] {
                 anyhow::ensure!(
                     args.get_str(flag).is_none(),
                     "--{flag} only applies to --synthetic calibration"
@@ -302,7 +323,17 @@ impl CalibrateCmd {
     fn run_synthetic(self) -> Result<()> {
         let layers = self.synthetic.expect("checked in parse");
         let mut stage = SyntheticStage::new(layers, self.batches, self.workers, self.seed);
-        let mut obs = log_event;
+        let sink = match &self.events_out {
+            Some(path) => Some(EventSink::create(path)?),
+            None => None,
+        };
+        let mut sink_obs = sink.as_ref().map(|s| s.observer());
+        let mut obs = |ev: &SearchEvent| {
+            log_event(ev);
+            if let Some(record) = sink_obs.as_mut() {
+                record(ev);
+            }
+        };
         let (scales, report) = calibrate_sharded(&mut stage, &self.opts, Some(&mut obs))?;
         let traces = hessian_trace_sharded(&mut stage, self.trials, self.seed)?;
         let noise = noise_scores_sharded(
@@ -331,7 +362,15 @@ impl CalibrateCmd {
             ("loss_after", Value::Num(report.loss_after)),
             ("steps", Value::Num(report.steps as f64)),
         ]);
-        println!("RESULT {summary}");
+        if let Some(sink) = &sink {
+            let events = sink.finish()?;
+            eprintln!("[events] {events} events -> {}", sink.path().display());
+        }
+        ResultLine::new("calibrate")
+            .seed(self.seed)
+            .workers(self.workers)
+            .payload(summary)
+            .emit();
         Ok(())
     }
 }
@@ -450,6 +489,8 @@ struct SearchCmd {
     partitions: usize,
     /// Synthetic only: error out after N raw evals (simulated kill).
     abort_after: Option<usize>,
+    /// Stream the typed search-event stream to this JSONL file.
+    events_out: Option<PathBuf>,
 }
 
 /// Parse the shared `--backend a100|tpu` / `--table kernels.json` flags
@@ -516,6 +557,7 @@ impl SearchCmd {
             no_cache: args.flag("no-cache"),
             partitions: args.get_or("partitions", 1usize)?.max(1),
             abort_after: args.get_str("abort-after").map(str::parse).transpose()?,
+            events_out: args.get_str("events-out").map(PathBuf::from),
         };
         anyhow::ensure!(
             cmd.model.is_some() != cmd.synthetic.is_some(),
@@ -578,7 +620,19 @@ impl SearchCmd {
         let spec = self.to_spec(&model).artifacts_dir(dir);
         let mut session = spec.open()?;
         session.on_event(log_event);
+        let sink = match &self.events_out {
+            Some(path) => {
+                let sink = EventSink::create(path)?;
+                session.on_event(sink.observer());
+                Some(sink)
+            }
+            None => None,
+        };
         let report = session.run()?;
+        if let Some(sink) = &sink {
+            let events = sink.finish()?;
+            eprintln!("[events] {events} events -> {}", sink.path().display());
+        }
         let out = &report.outcome;
         println!(
             "{model} {}/{} target {:.1}%: accuracy={:.2}% size={:.2}% latency={:.2}% \
@@ -657,7 +711,17 @@ impl SearchCmd {
             None => None,
         };
         let mut penv = ParallelEnv::new(&env, self.workers);
-        let mut observer = log_event;
+        let sink = match &self.events_out {
+            Some(path) => Some(EventSink::create(path)?),
+            None => None,
+        };
+        let mut sink_obs = sink.as_ref().map(|s| s.observer());
+        let mut observer = |ev: &SearchEvent| {
+            log_event(ev);
+            if let Some(record) = sink_obs.as_mut() {
+                record(ev);
+            }
+        };
         let outcome = run_search(
             self.algo,
             &mut penv,
@@ -683,7 +747,16 @@ impl SearchCmd {
             ("rel_latency", Value::Num(cost.rel_latency(&outcome.config))),
             ("rel_size", Value::Num(cost.rel_size(&outcome.config))),
         ]);
-        println!("RESULT {summary}");
+        if let Some(sink) = &sink {
+            let events = sink.finish()?;
+            eprintln!("[events] {events} events -> {}", sink.path().display());
+        }
+        ResultLine::new("search")
+            .seed(self.seed)
+            .algo(self.algo.label())
+            .workers(self.workers)
+            .payload(summary)
+            .emit();
         Ok(())
     }
 
@@ -692,7 +765,17 @@ impl SearchCmd {
     /// reconciliation evaluation prices and validates the composed
     /// configuration (see `api/partition.rs`).
     fn run_synthetic_partitioned(self, n: usize) -> Result<()> {
-        let mut observer = log_event;
+        let sink = match &self.events_out {
+            Some(path) => Some(EventSink::create(path)?),
+            None => None,
+        };
+        let mut sink_obs = sink.as_ref().map(|s| s.observer());
+        let mut observer = |ev: &SearchEvent| {
+            log_event(ev);
+            if let Some(record) = sink_obs.as_mut() {
+                record(ev);
+            }
+        };
         let out = mpq::api::partitioned_search_synthetic(
             n,
             self.seed,
@@ -723,7 +806,16 @@ impl SearchCmd {
             ("rel_latency", Value::Num(cost.rel_latency(&out.outcome.config))),
             ("rel_size", Value::Num(cost.rel_size(&out.outcome.config))),
         ]);
-        println!("RESULT {summary}");
+        if let Some(sink) = &sink {
+            let events = sink.finish()?;
+            eprintln!("[events] {events} events -> {}", sink.path().display());
+        }
+        ResultLine::new("search")
+            .seed(self.seed)
+            .algo(self.algo.label())
+            .workers(self.workers)
+            .payload(summary)
+            .emit();
         Ok(())
     }
 }
@@ -916,7 +1008,12 @@ impl ReportCmd {
         );
         let table = render_sweep(&title, &self.grid, cells);
         println!("{}", table.render());
-        println!("RESULT {}", sweep_cells_json(cells));
+        ResultLine::new("report")
+            .seed(self.seed)
+            .algo(self.algo.label())
+            .workers(self.workers)
+            .payload(Value::Arr(cells.iter().map(|c| c.to_json()).collect()))
+            .emit();
         if let Some(dir_out) = &self.out {
             std::fs::create_dir_all(dir_out)?;
             std::fs::write(dir_out.join(format!("sweep_{label}.txt")), table.render())?;
@@ -1052,6 +1149,8 @@ struct ParetoCmd {
     /// Synthetic only: error out after N decision evaluations (the CI
     /// kill/resume smoke).
     abort_after: Option<usize>,
+    /// Stream the typed search-event stream to this JSONL file.
+    events_out: Option<PathBuf>,
 }
 
 impl ParetoCmd {
@@ -1071,6 +1170,7 @@ impl ParetoCmd {
             out: args.get_str("out").map(PathBuf::from),
             partitions: args.get_or("partitions", 1usize)?.max(1),
             abort_after: args.get_str("abort-after").map(str::parse).transpose()?,
+            events_out: args.get_str("events-out").map(PathBuf::from),
         };
         anyhow::ensure!(
             cmd.model.is_some() != cmd.synthetic.is_some(),
@@ -1112,7 +1212,12 @@ impl ParetoCmd {
             ("points", Value::Num(report.artifact.num_points() as f64)),
             ("pareto", Value::Num(report.artifact.pareto().len() as f64)),
         ]);
-        println!("RESULT {summary}");
+        ResultLine::new("pareto")
+            .seed(self.seed)
+            .algo(self.algo.label())
+            .workers(self.workers)
+            .payload(summary)
+            .emit();
     }
 
     /// Artifact-backed frontier build through
@@ -1136,7 +1241,19 @@ impl ParetoCmd {
         }
         let mut session = spec.open()?;
         session.on_event(log_event);
+        let sink = match &self.events_out {
+            Some(path) => {
+                let sink = EventSink::create(path)?;
+                session.on_event(sink.observer());
+                Some(sink)
+            }
+            None => None,
+        };
         let report = session.run_pareto(&self.floors)?;
+        if let Some(sink) = &sink {
+            let events = sink.finish()?;
+            eprintln!("[events] {events} events -> {}", sink.path().display());
+        }
         let path = match &self.out {
             // --out re-saves the identical artifact at the requested path
             // (the canonical copy stays next to the model artifacts).
@@ -1155,7 +1272,17 @@ impl ParetoCmd {
     /// (`--abort-after`) / `--resume` loop.
     fn run_synthetic(self) -> Result<()> {
         let layers = self.synthetic.expect("checked in parse");
-        let mut observer = log_event;
+        let sink = match &self.events_out {
+            Some(path) => Some(EventSink::create(path)?),
+            None => None,
+        };
+        let mut sink_obs = sink.as_ref().map(|s| s.observer());
+        let mut observer = |ev: &SearchEvent| {
+            log_event(ev);
+            if let Some(record) = sink_obs.as_mut() {
+                record(ev);
+            }
+        };
         // `--partitions 1` delegates straight to the monolithic builder
         // inside, so the default path (and its artifacts) are unchanged.
         let report = build_frontier_synthetic_partitioned(
@@ -1172,6 +1299,10 @@ impl ParetoCmd {
         )?;
         let path = self.out.clone().unwrap_or_else(|| PathBuf::from("synthetic_frontier.json"));
         report.artifact.save(&path)?;
+        if let Some(sink) = &sink {
+            let events = sink.finish()?;
+            eprintln!("[events] {events} events -> {}", sink.path().display());
+        }
         self.emit(&report, &path);
         Ok(())
     }
@@ -1424,6 +1555,127 @@ impl ServeCmd {
                 w.batches,
                 w.requests,
                 w.mean_batch_fill()
+            );
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------ experiment
+
+/// `mpq experiment run suite.yaml` — the declarative harness: execute
+/// every suite variant through the search front door in isolated
+/// artifact dirs (at ≥2 worker counts, bit-identity asserted), render
+/// the comparison table, and gate against a checked-in baseline.
+struct ExperimentCmd {
+    suite: PathBuf,
+    out: PathBuf,
+    baseline: Option<PathBuf>,
+    update_baseline: bool,
+    record_measured: bool,
+    bench: Vec<PathBuf>,
+    band: f64,
+    workers: Option<usize>,
+}
+
+impl ExperimentCmd {
+    fn parse(args: &Args) -> Result<Self> {
+        match args.positional(0) {
+            Some("run") => {}
+            Some(other) => {
+                anyhow::bail!("unknown experiment subcommand `{other}` (expected `run`)")
+            }
+            None => {
+                anyhow::bail!("usage: mpq experiment run <suite.yaml> [--out DIR] [--baseline FILE]")
+            }
+        }
+        let suite = args
+            .positional(1)
+            .map(PathBuf::from)
+            .ok_or_else(|| anyhow::anyhow!("experiment run needs a suite file operand"))?;
+        if let Some(extra) = args.positional(2) {
+            anyhow::bail!("unexpected operand `{extra}` after the suite file");
+        }
+        let cmd = Self {
+            suite,
+            out: PathBuf::from(args.get_str("out").unwrap_or("experiments_out")),
+            baseline: args.get_str("baseline").map(PathBuf::from),
+            update_baseline: args.flag("update-baseline"),
+            record_measured: args.flag("record-measured"),
+            bench: args
+                .get_str("bench")
+                .map(|s| s.split(',').filter(|p| !p.is_empty()).map(PathBuf::from).collect())
+                .unwrap_or_default(),
+            band: args.get_or("band", 2.0f64)?,
+            workers: args.get_str("workers").map(str::parse).transpose()?,
+        };
+        anyhow::ensure!(cmd.band >= 1.0, "--band must be >= 1.0 (got {})", cmd.band);
+        anyhow::ensure!(
+            !cmd.update_baseline || cmd.baseline.is_some(),
+            "--update-baseline requires --baseline FILE"
+        );
+        anyhow::ensure!(
+            !cmd.record_measured || cmd.update_baseline,
+            "--record-measured only applies with --update-baseline"
+        );
+        Ok(cmd)
+    }
+
+    fn run(self) -> Result<()> {
+        let suite = ExperimentSuite::load(&self.suite)?;
+        let opts = RunOptions { out_dir: self.out.clone(), workers_override: self.workers };
+        let mut cmp = run_suite(&suite, &opts)?;
+        cmp.bench = load_bench(&self.bench)?;
+        let table = cmp.render();
+        print!("{table}");
+        std::fs::create_dir_all(&self.out)?;
+        mpq::util::fs::atomic_write_text(
+            &self.out.join("comparison.json"),
+            &format!("{}\n", cmp.deterministic_json()),
+        )?;
+        std::fs::write(self.out.join("comparison.txt"), &table)?;
+        let mut gate_report = None;
+        if let Some(bpath) = &self.baseline {
+            let prev = if bpath.is_file() { Some(Baseline::load(bpath)?) } else { None };
+            if self.update_baseline {
+                let updated = cmp.to_baseline(prev.as_ref(), self.record_measured);
+                updated.save(bpath)?;
+                eprintln!("[experiment] baseline updated -> {}", bpath.display());
+            } else {
+                let base = prev.ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "baseline {} not found (create it with --update-baseline)",
+                        bpath.display()
+                    )
+                })?;
+                let report = gate(&cmp, &base, self.band);
+                print!("{}", report.render());
+                gate_report = Some(report);
+            }
+        }
+        // The RESULT envelope is deliberately free of worker counts and
+        // wall-time: CI byte-diffs it across `--workers 1` and `2`.
+        ResultLine::new("experiment")
+            .payload(Value::obj(vec![
+                ("suite", Value::Str(cmp.suite.clone())),
+                ("variants", Value::Num(cmp.rows.len() as f64)),
+                ("digest", Value::Str(cmp.digest())),
+                ("gate", match &gate_report {
+                    None => Value::Null,
+                    Some(r) => Value::obj(vec![
+                        ("checked", Value::Num(r.checked as f64)),
+                        ("violations", Value::Num(r.violations.len() as f64)),
+                        ("flags", Value::Num(r.flags.len() as f64)),
+                        ("passed", Value::Bool(r.passed())),
+                    ]),
+                }),
+            ]))
+            .emit();
+        if let Some(r) = gate_report {
+            anyhow::ensure!(
+                r.passed(),
+                "experiment regression gate failed: {} violation(s) (see report above)",
+                r.violations.len()
             );
         }
         Ok(())

@@ -5,12 +5,16 @@ use std::str::FromStr;
 
 use anyhow::{anyhow, bail, Result};
 
-/// Parsed invocation: one subcommand plus `--key value` options.
+/// Parsed invocation: one subcommand plus `--key value` options and any
+/// positional operands (`mpq experiment run suite.yaml`). Subcommands
+/// that take no operands must call [`Args::reject_positionals`] so a
+/// stray token still fails loudly.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub cmd: String,
     opts: HashMap<String, String>,
     flags: Vec<String>,
+    pos: Vec<String>,
 }
 
 impl Args {
@@ -20,9 +24,11 @@ impl Args {
         let cmd = it.next().unwrap_or_default();
         let mut opts = HashMap::new();
         let mut flags = Vec::new();
+        let mut pos = Vec::new();
         while let Some(a) = it.next() {
             let Some(key) = a.strip_prefix("--") else {
-                bail!("unexpected positional argument `{a}`");
+                pos.push(a);
+                continue;
             };
             // --key=value or --key value or boolean --flag
             if let Some((k, v)) = key.split_once('=') {
@@ -33,7 +39,7 @@ impl Args {
                 flags.push(key.to_string());
             }
         }
-        Ok(Self { cmd, opts, flags })
+        Ok(Self { cmd, opts, flags, pos })
     }
 
     pub fn from_env() -> Result<Self> {
@@ -42,6 +48,26 @@ impl Args {
 
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
+    }
+
+    /// Positional operands in order (after the subcommand, non-`--` tokens
+    /// not consumed as option values).
+    pub fn positionals(&self) -> &[String] {
+        &self.pos
+    }
+
+    /// The `i`-th positional operand, if given.
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.pos.get(i).map(|s| s.as_str())
+    }
+
+    /// Fail if any positional operand was given — the historical contract
+    /// for every subcommand that only takes `--key value` options.
+    pub fn reject_positionals(&self) -> Result<()> {
+        if let Some(p) = self.pos.first() {
+            bail!("unexpected positional argument `{p}`");
+        }
+        Ok(())
     }
 
     pub fn get_str(&self, name: &str) -> Option<&str> {
@@ -108,8 +134,16 @@ mod tests {
     }
 
     #[test]
-    fn rejects_positional() {
-        assert!(Args::parse(["eval".into(), "oops".into()]).is_err());
+    fn positionals_are_collected_and_rejectable() {
+        let a = parse("experiment run suite.yaml --out exp --update-baseline");
+        assert_eq!(a.positionals(), ["run".to_string(), "suite.yaml".to_string()]);
+        assert_eq!(a.positional(0), Some("run"));
+        assert_eq!(a.positional(2), None);
+        assert_eq!(a.req_str("out").unwrap(), "exp");
+        assert!(a.flag("update-baseline"));
+        assert!(a.reject_positionals().is_err());
+        // Option-only invocations still pass the no-positional check.
+        assert!(parse("eval --bits 4").reject_positionals().is_ok());
     }
 
     #[test]

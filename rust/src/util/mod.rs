@@ -5,4 +5,5 @@
 pub mod cli;
 pub mod fs;
 pub mod json;
+pub mod result;
 pub mod rng;

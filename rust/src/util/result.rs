@@ -1,0 +1,120 @@
+//! The one `RESULT {json}` emitter every subcommand shares.
+//!
+//! Scripts (CI byte-diffs, the experiment harness) parse exactly one
+//! machine line per run: `RESULT {...}` on stdout. Historically each
+//! subcommand hand-built its own object, so the shapes drifted —
+//! `search` had no subcommand tag, `calibrate` no worker count, and an
+//! extractor had to special-case all of them. [`ResultLine`] fixes the
+//! envelope: every line is an object with a `cmd` tag, the run identity
+//! fields that were actually set (`seed`, `algo`, `metric`, `workers`),
+//! and the subcommand's own summary under `payload`. Keys serialize in
+//! sorted order (see [`crate::util::json::Value`]), so a line is
+//! byte-stable for a given set of fields.
+//!
+//! Determinism caveat baked into the schema: CI diffs RESULT lines
+//! *across worker counts* to prove sharded determinism, so callers on
+//! those paths must pass the envelope only fields that are themselves
+//! worker-independent — or let CI normalize `"workers":N` before
+//! diffing (the workflow does exactly that).
+
+use super::json::Value;
+use std::collections::BTreeMap;
+
+/// Builder for one stable `RESULT {json}` stdout line.
+#[derive(Debug, Clone)]
+pub struct ResultLine {
+    fields: BTreeMap<String, Value>,
+}
+
+impl ResultLine {
+    /// Start a line for subcommand `cmd` (the envelope's `cmd` key).
+    pub fn new(cmd: &str) -> Self {
+        let mut fields = BTreeMap::new();
+        fields.insert("cmd".to_string(), Value::Str(cmd.to_string()));
+        Self { fields }
+    }
+
+    pub fn seed(self, seed: u64) -> Self {
+        self.field("seed", Value::Num(seed as f64))
+    }
+
+    /// Algorithm label (e.g. `Greedy`), as printed by `SearchAlgo::label`.
+    pub fn algo(self, algo: &str) -> Self {
+        self.field("algo", Value::Str(algo.to_string()))
+    }
+
+    /// Sensitivity metric label (e.g. `Hessian`).
+    pub fn metric(self, metric: &str) -> Self {
+        self.field("metric", Value::Str(metric.to_string()))
+    }
+
+    pub fn workers(self, workers: usize) -> Self {
+        self.field("workers", Value::Num(workers as f64))
+    }
+
+    /// The subcommand's own summary object.
+    pub fn payload(self, payload: Value) -> Self {
+        self.field("payload", payload)
+    }
+
+    fn field(mut self, key: &str, value: Value) -> Self {
+        self.fields.insert(key.to_string(), value);
+        self
+    }
+
+    /// The full line, exactly as printed (no trailing newline).
+    pub fn render(&self) -> String {
+        format!("RESULT {}", Value::Obj(self.fields.clone()))
+    }
+
+    /// Print the line to stdout.
+    pub fn emit(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Parse a rendered `RESULT {json}` line back into its JSON envelope —
+/// the extractor-side inverse of [`ResultLine::render`].
+pub fn parse_result_line(line: &str) -> crate::Result<Value> {
+    let rest = line
+        .strip_prefix("RESULT ")
+        .ok_or_else(|| anyhow::anyhow!("not a RESULT line: `{line}`"))?;
+    super::json::parse(rest)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn envelope_is_sorted_and_tagged() {
+        let line = ResultLine::new("search")
+            .workers(2)
+            .seed(7)
+            .algo("Greedy")
+            .payload(Value::obj(vec![("evals", Value::Num(12.0))]))
+            .render();
+        assert_eq!(
+            line,
+            "RESULT {\"algo\":\"Greedy\",\"cmd\":\"search\",\"payload\":{\"evals\":12},\
+             \"seed\":7,\"workers\":2}"
+        );
+    }
+
+    #[test]
+    fn roundtrips_through_the_parser() {
+        let line = ResultLine::new("pareto").seed(3).metric("Hessian").render();
+        let v = parse_result_line(&line).unwrap();
+        assert_eq!(v.req("cmd").unwrap().as_str().unwrap(), "pareto");
+        assert_eq!(v.req("seed").unwrap().as_u64().unwrap(), 3);
+        assert_eq!(v.req("metric").unwrap().as_str().unwrap(), "Hessian");
+        assert!(parse_result_line("nope {}").is_err());
+    }
+
+    #[test]
+    fn unset_fields_stay_absent() {
+        let v = parse_result_line(&ResultLine::new("experiment").render()).unwrap();
+        assert!(v.get("seed").is_none());
+        assert!(v.get("workers").is_none());
+    }
+}

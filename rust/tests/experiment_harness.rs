@@ -1,0 +1,191 @@
+//! End-to-end acceptance for the experiment harness: the checked-in
+//! `experiments/paper_repro.yaml` suite is deterministic (byte-identical
+//! comparison artifacts across reruns and across `--workers 1` vs `2`),
+//! the checked-in null baseline gates clean, and a perturbed baseline
+//! fails the gate naming the offending variant and metric — asserted
+//! here against both the library API and the real `mpq` binary, not
+//! just in CI.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use mpq::experiment::{gate, run_suite, Baseline, ExperimentSuite, RunOptions};
+use mpq::util::json::Value;
+
+fn repo_path(rel: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(rel)
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("mpq_exp_harness_{tag}_{}", std::process::id()))
+}
+
+#[test]
+fn checked_in_suite_parses_and_serialization_is_a_fixed_point() {
+    let text = std::fs::read_to_string(repo_path("experiments/paper_repro.yaml")).unwrap();
+    let suite = ExperimentSuite::parse(&text).unwrap();
+    assert_eq!(suite.name, "paper_repro");
+    assert_eq!(suite.variants.len(), 8);
+    // Both algorithms and all three informed metrics are pinned.
+    let names: Vec<&str> = suite.variants.iter().map(|v| v.name.as_str()).collect();
+    for required in ["greedy_hessian", "bisection_qe", "greedy_hessian_latency"] {
+        assert!(names.contains(&required), "suite lost variant `{required}`");
+    }
+    let canon = suite.serialize();
+    let reparsed = ExperimentSuite::parse(&canon).unwrap();
+    assert_eq!(reparsed, suite, "parse -> serialize -> parse is not a fixed point");
+    assert_eq!(reparsed.serialize(), canon, "canonical form is not byte-stable");
+}
+
+#[test]
+fn checked_in_baseline_is_in_canonical_form() {
+    let path = repo_path("experiments/baseline.json");
+    let base = Baseline::load(&path).unwrap();
+    assert_eq!(base.suite, "paper_repro");
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        base.render(),
+        text,
+        "experiments/baseline.json is not in canonical form — \
+         regenerate it with `mpq experiment run ... --update-baseline`"
+    );
+}
+
+#[test]
+fn paper_repro_is_deterministic_across_worker_counts() {
+    let suite = ExperimentSuite::load(&repo_path("experiments/paper_repro.yaml")).unwrap();
+    let dir = tmp("det");
+    let a = run_suite(
+        &suite,
+        &RunOptions { out_dir: dir.join("w1"), workers_override: Some(1) },
+    )
+    .unwrap();
+    let b = run_suite(
+        &suite,
+        &RunOptions { out_dir: dir.join("w2"), workers_override: Some(2) },
+    )
+    .unwrap();
+    assert_eq!(
+        a.deterministic_json(),
+        b.deterministic_json(),
+        "comparison artifact differs between --workers 1 and --workers 2"
+    );
+    assert_eq!(a.digest(), b.digest());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn gate_passes_on_the_null_baseline_and_names_a_perturbed_metric() {
+    let suite = ExperimentSuite::load(&repo_path("experiments/paper_repro.yaml")).unwrap();
+    let dir = tmp("gate");
+    let cmp =
+        run_suite(&suite, &RunOptions { out_dir: dir.clone(), workers_override: None }).unwrap();
+    let base = Baseline::load(&repo_path("experiments/baseline.json")).unwrap();
+
+    // The checked-in baseline is all-null: every metric passes with a flag.
+    let report = gate(&cmp, &base, 2.0);
+    assert!(report.passed(), "{}", report.render());
+    assert!(!report.flags.is_empty(), "null baselines must flag, not silently pass");
+
+    // A perturbed deterministic baseline fails, naming variant + metric.
+    let mut bad = base.clone();
+    bad.variants
+        .get_mut("greedy_hessian")
+        .unwrap()
+        .insert("decision_evals".to_string(), Value::Num(-1.0));
+    let report = gate(&cmp, &bad, 2.0);
+    assert!(!report.passed(), "perturbed baseline must fail the gate");
+    assert!(
+        report
+            .violations
+            .iter()
+            .any(|v| v.variant == "greedy_hessian" && v.metric == "decision_evals"),
+        "violation does not name the culprit:\n{}",
+        report.render()
+    );
+
+    // --update-baseline semantics: deterministic fields get recorded,
+    // measured fields stay as the previous baseline had them (null here),
+    // and the on-disk form round-trips byte-identically.
+    let updated = cmp.to_baseline(Some(&base), false);
+    assert_eq!(updated.variants["greedy_hessian"]["wall_ms"], Value::Null);
+    assert_eq!(updated.bench, base.bench);
+    let path = dir.join("baseline.json");
+    updated.save(&path).unwrap();
+    let text1 = std::fs::read_to_string(&path).unwrap();
+    let loaded = Baseline::load(&path).unwrap();
+    assert_eq!(loaded, updated);
+    loaded.save(&path).unwrap();
+    assert_eq!(std::fs::read_to_string(&path).unwrap(), text1);
+
+    // The refreshed baseline now exact-checks every deterministic field.
+    let report = gate(&cmp, &updated, 2.0);
+    assert!(report.passed(), "{}", report.render());
+    assert!(report.checked > 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Run the real binary: `mpq experiment run <suite> [args...]`.
+fn run_cli(out: &Path, extra: &[&str]) -> std::process::Output {
+    let suite = repo_path("experiments/paper_repro.yaml");
+    Command::new(env!("CARGO_BIN_EXE_mpq"))
+        .arg("experiment")
+        .arg("run")
+        .arg(&suite)
+        .arg("--out")
+        .arg(out)
+        .args(extra)
+        .output()
+        .expect("spawning mpq")
+}
+
+#[test]
+fn cli_comparison_artifact_is_byte_identical_across_workers() {
+    let dir = tmp("cli");
+    let a = run_cli(&dir.join("a"), &["--workers", "1"]);
+    assert!(a.status.success(), "stderr:\n{}", String::from_utf8_lossy(&a.stderr));
+    let b = run_cli(&dir.join("b"), &["--workers", "2"]);
+    assert!(b.status.success(), "stderr:\n{}", String::from_utf8_lossy(&b.stderr));
+    let ja = std::fs::read(dir.join("a/comparison.json")).unwrap();
+    let jb = std::fs::read(dir.join("b/comparison.json")).unwrap();
+    assert_eq!(ja, jb, "comparison.json differs between --workers 1 and 2");
+    // Stable RESULT envelope on stdout for scripts (no workers, no timings).
+    let line = |out: &[u8]| {
+        String::from_utf8_lossy(out)
+            .lines()
+            .find(|l| l.starts_with("RESULT "))
+            .expect("missing RESULT line")
+            .to_string()
+    };
+    assert_eq!(line(&a.stdout), line(&b.stdout));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_gate_fails_on_a_perturbed_baseline_naming_the_culprit() {
+    let dir = tmp("cli_gate");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // The checked-in (all-null) baseline passes.
+    let base = repo_path("experiments/baseline.json");
+    let ok = run_cli(&dir.join("ok"), &["--baseline", base.to_str().unwrap()]);
+    assert!(ok.status.success(), "stderr:\n{}", String::from_utf8_lossy(&ok.stderr));
+
+    // Pin one deterministic metric to a wrong value: exit code 1 and a
+    // VIOLATION line naming the variant and metric.
+    let mut bad = Baseline::load(&base).unwrap();
+    bad.variants
+        .get_mut("greedy_hessian")
+        .unwrap()
+        .insert("decision_evals".to_string(), Value::Num(-1.0));
+    let bad_path = dir.join("bad_baseline.json");
+    bad.save(&bad_path).unwrap();
+    let fail = run_cli(&dir.join("bad"), &["--baseline", bad_path.to_str().unwrap()]);
+    assert!(!fail.status.success(), "perturbed baseline must fail the CLI gate");
+    let stdout = String::from_utf8_lossy(&fail.stdout);
+    assert!(
+        stdout.contains("VIOLATION greedy_hessian/decision_evals"),
+        "stdout does not name the culprit:\n{stdout}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -15,18 +15,31 @@
 //! the clients actually generated (vs the `offered_rps` schedule), so
 //! the JSON never claims a load that was not driven.
 //!
+//! Beyond the throughput trials, four data-plane sections measure the
+//! serving hot path directly: `assembly` (copy vs zero-copy batch
+//! build), `memo_t{N}` (lock-striped vs single-mutex eval-memo hits
+//! under 1/2/4/8-thread contention), `multi_config` (two configs served
+//! from one engine with zero cross-config answers) and `swap_under_load`
+//! (drain-free config replacement with zero stale-after-swap answers).
+//!
 //! The report is written as JSON (`BENCH_serve.json`, or `$MPQ_BENCH_OUT`)
 //! next to the search bench's `BENCH_search.json`. `MPQ_BENCH_FAST=1`
 //! shrinks trial durations for CI smoke runs.
 
+use std::collections::HashMap;
 use std::hint::black_box;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use mpq::runtime::HostTensor;
-use mpq::server::{serve_with_backend, BatchJob, ServeOptions, ServingBackend};
+use mpq::coordinator::{EvalResult, StripedMemo};
+use mpq::quant::QuantConfig;
+use mpq::runtime::{BatchArena, HostTensor, TensorData};
+use mpq::server::{
+    pad_batch, serve_multi_with_backend, serve_with_backend, BatchJob, InferOptions, ServeOptions,
+    ServingBackend,
+};
 use mpq::util::json::Value;
 
 /// Compiled batch-size buckets the stub pretends to have.
@@ -186,6 +199,287 @@ fn run_trial(workers: usize, base: u32, offered_rps: f64, dur: Duration) -> Tria
     }
 }
 
+/// §assembly — per-batch cost of the reference copy path (`pad_batch`)
+/// vs zero-copy arena assembly at a full 32-row bucket.
+fn bench_assembly(fast: bool) -> Vec<Value> {
+    let iters = if fast { 2_000u32 } else { 20_000 };
+    let x_shape = [64usize];
+    let examples: Vec<HostTensor> =
+        (0..32).map(|i| HostTensor::f32(vec![i as f32; 64], vec![1, 64])).collect();
+    let mut sink = 0.0f32;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let padded = pad_batch(&examples, &x_shape, 32);
+        if let Some(d) = padded.f32_data() {
+            sink += d[0];
+        }
+    }
+    let copy_ns = t0.elapsed().as_nanos() as f64 / f64::from(iters);
+    let mut arena = BatchArena::new();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let view = arena.assemble(&examples, &x_shape, 32);
+        if let TensorData::F32(d) = view.data() {
+            sink += d[0];
+        }
+    }
+    let arena_ns = t0.elapsed().as_nanos() as f64 / f64::from(iters);
+    black_box(sink);
+    let ratio = copy_ns / arena_ns.max(1.0);
+    println!(
+        "serve_throughput::assembly: copy {copy_ns:.0} ns/batch vs arena {arena_ns:.0} ns/batch \
+         ({ratio:.2}x)"
+    );
+    vec![Value::obj(vec![
+        ("name", Value::Str("serve_throughput::assembly".into())),
+        ("copy_ns_per_batch", Value::Num(copy_ns)),
+        ("arena_ns_per_batch", Value::Num(arena_ns)),
+        ("copy_over_arena", Value::Num(ratio)),
+    ])]
+}
+
+/// Run `threads` readers doing `per_thread` memo hits each; ns per hit.
+fn timed_lookups<F>(threads: usize, per_thread: usize, keys: &[u64], hit: F) -> f64
+where
+    F: Fn(u64) -> bool + Sync,
+{
+    let t0 = Instant::now();
+    thread::scope(|s| {
+        for t in 0..threads {
+            let hit = &hit;
+            s.spawn(move || {
+                let mut found = 0usize;
+                for i in 0..per_thread {
+                    found += usize::from(hit(keys[(t * 7 + i * 13) % keys.len()]));
+                }
+                assert_eq!(found, per_thread, "bench must stay on the hit path");
+            });
+        }
+    });
+    t0.elapsed().as_nanos() as f64 / (threads * per_thread) as f64
+}
+
+/// §memo_contention — hit-path cost of the lock-striped memo vs the old
+/// single `Mutex<HashMap>` design under 1/2/4/8 concurrent readers.
+fn bench_memo_contention(fast: bool) -> Vec<Value> {
+    let per_thread: usize = if fast { 50_000 } else { 400_000 };
+    let res = EvalResult { loss: 0.25, accuracy: 0.97, exact: true };
+    let keys: Vec<u64> = (0..1024u64).map(|k| k.wrapping_mul(0x9E37_79B9_7F4A_7C15)).collect();
+    let striped = StripedMemo::new();
+    let single: Mutex<HashMap<u64, EvalResult>> = Mutex::new(HashMap::new());
+    for &k in &keys {
+        striped.insert(k, res);
+        single.lock().unwrap().insert(k, res);
+    }
+    let mut rows = Vec::new();
+    for threads in [1usize, 2, 4, 8] {
+        let striped_ns = timed_lookups(threads, per_thread, &keys, |k| striped.lookup(k).is_some());
+        let mutex_ns =
+            timed_lookups(threads, per_thread, &keys, |k| single.lock().unwrap().contains_key(&k));
+        let speedup = mutex_ns / striped_ns.max(1e-9);
+        println!(
+            "serve_throughput::memo_t{threads}: striped {striped_ns:.0} ns/hit vs single-mutex \
+             {mutex_ns:.0} ns/hit ({speedup:.2}x)"
+        );
+        rows.push(Value::obj(vec![
+            ("name", Value::Str(format!("serve_throughput::memo_t{threads}"))),
+            ("threads", Value::Num(threads as f64)),
+            ("striped_ns_per_hit", Value::Num(striped_ns)),
+            ("mutex_ns_per_hit", Value::Num(mutex_ns)),
+            ("mutex_over_striped", Value::Num(speedup)),
+        ]));
+    }
+    rows
+}
+
+/// Stub backend whose responses echo the executing config's leading
+/// weight width, so clients can detect wrong-config answers.
+struct ConfigBackend {
+    txs: Vec<mpsc::Sender<BatchJob>>,
+    joins: Vec<thread::JoinHandle<()>>,
+}
+
+impl ConfigBackend {
+    fn new(workers: usize, work: u32) -> Self {
+        let mut txs = Vec::new();
+        let mut joins = Vec::new();
+        for _ in 0..workers {
+            let (tx, rx) = mpsc::channel::<BatchJob>();
+            joins.push(thread::spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    spin(work);
+                    let flat = vec![job.config().bits_w[0]; job.bucket()];
+                    job.complete(Ok(flat));
+                }
+            }));
+            txs.push(tx);
+        }
+        Self { txs, joins }
+    }
+}
+
+impl ServingBackend for ConfigBackend {
+    fn num_workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        BUCKETS.to_vec()
+    }
+
+    fn submit(&mut self, w: usize, job: BatchJob) {
+        if let Err(mpsc::SendError(job)) = self.txs[w].send(job) {
+            job.complete(Err(anyhow::anyhow!("config worker gone")));
+        }
+    }
+}
+
+impl Drop for ConfigBackend {
+    fn drop(&mut self) {
+        self.txs.clear();
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+/// §multi_config — two configs served concurrently from one engine:
+/// dispatch must never co-batch them, and every answer must come from the
+/// config the client asked for (`wrong_config` stays 0).
+fn bench_multi_config(base: u32, fast: bool) -> Vec<Value> {
+    let dur = if fast { Duration::from_millis(300) } else { Duration::from_millis(1200) };
+    let backend = ConfigBackend::new(2, base / 20);
+    let opts = ServeOptions {
+        max_batch: 32,
+        max_wait: Duration::from_micros(500),
+        workers: 2,
+        queue_depth: 256,
+        deadline: None,
+        ..ServeOptions::default()
+    };
+    let configs = vec![QuantConfig::uniform(4, 8.0), QuantConfig::uniform(4, 4.0)];
+    let (handle, join) = serve_multi_with_backend(backend, configs, &opts).expect("engine start");
+    let ok = AtomicUsize::new(0);
+    let shed = AtomicUsize::new(0);
+    let wrong = AtomicUsize::new(0);
+    let t0 = Instant::now();
+    thread::scope(|s| {
+        for c in 0..8u32 {
+            let handle = handle.clone();
+            let (ok, shed, wrong) = (&ok, &shed, &wrong);
+            s.spawn(move || {
+                let mut n = c;
+                while t0.elapsed() < dur {
+                    let config = n % 2;
+                    n += 1;
+                    let opts = InferOptions { config: Some(config), ..Default::default() };
+                    match handle.infer_with(HostTensor::f32(vec![1.0], vec![1, 1]), &opts) {
+                        Ok(out) => {
+                            ok.fetch_add(1, Ordering::Relaxed);
+                            let expect = if config == 0 { 8.0f32 } else { 4.0 };
+                            if out[0] != expect {
+                                wrong.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        Err(_) => {
+                            shed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = handle.stats();
+    handle.shutdown();
+    join.join().expect("dispatcher exits");
+    let (ok, shed, wrong) = (ok.into_inner(), shed.into_inner(), wrong.into_inner());
+    let rps = ok as f64 / wall;
+    println!(
+        "serve_throughput::multi_config: {rps:.0} rps across 2 configs | ok {ok} shed {shed} \
+         wrong_config {wrong} | {} per-config rows",
+        stats.per_config.len()
+    );
+    vec![Value::obj(vec![
+        ("name", Value::Str("serve_throughput::multi_config".into())),
+        ("achieved_rps", Value::Num(rps)),
+        ("ok", Value::Num(ok as f64)),
+        ("shed", Value::Num(shed as f64)),
+        ("wrong_config", Value::Num(wrong as f64)),
+        ("configs_served", Value::Num(stats.per_config.len() as f64)),
+    ])]
+}
+
+/// §swap_under_load — replace the active config mid-traffic without a
+/// drain: no request may see a config that is neither the old nor the new
+/// one, and requests admitted after the swap must all see the new one.
+fn bench_swap_under_load(base: u32, fast: bool) -> Vec<Value> {
+    let dur = if fast { Duration::from_millis(300) } else { Duration::from_millis(1200) };
+    let backend = ConfigBackend::new(2, base / 20);
+    let opts = ServeOptions {
+        max_batch: 32,
+        max_wait: Duration::from_micros(500),
+        workers: 2,
+        queue_depth: 256,
+        deadline: None,
+        ..ServeOptions::default()
+    };
+    let (handle, join) =
+        serve_multi_with_backend(backend, vec![QuantConfig::uniform(4, 8.0)], &opts)
+            .expect("engine start");
+    let ok = AtomicUsize::new(0);
+    let shed = AtomicUsize::new(0);
+    let wrong = AtomicUsize::new(0);
+    let stale = AtomicUsize::new(0);
+    let swapped = AtomicBool::new(false);
+    let t0 = Instant::now();
+    thread::scope(|s| {
+        for _ in 0..8 {
+            let handle = handle.clone();
+            let (ok, shed, wrong, stale, swapped) = (&ok, &shed, &wrong, &stale, &swapped);
+            s.spawn(move || {
+                while t0.elapsed() < dur {
+                    let after_swap = swapped.load(Ordering::SeqCst);
+                    match handle.infer(HostTensor::f32(vec![1.0], vec![1, 1])) {
+                        Ok(out) => {
+                            ok.fetch_add(1, Ordering::Relaxed);
+                            if out[0] != 8.0 && out[0] != 4.0 {
+                                wrong.fetch_add(1, Ordering::Relaxed);
+                            } else if after_swap && out[0] == 8.0 {
+                                stale.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        Err(_) => {
+                            shed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+        thread::sleep(dur / 2);
+        handle.swap_config(0, QuantConfig::uniform(4, 4.0)).expect("swap");
+        swapped.store(true, Ordering::SeqCst);
+    });
+    let stats = handle.stats();
+    handle.shutdown();
+    join.join().expect("dispatcher exits");
+    let (ok, shed) = (ok.into_inner(), shed.into_inner());
+    let (wrong, stale) = (wrong.into_inner(), stale.into_inner());
+    println!(
+        "serve_throughput::swap_under_load: ok {ok} shed {shed} | wrong_config {wrong} \
+         stale_after_swap {stale} (both must be 0) | rejected {}",
+        stats.rejected
+    );
+    vec![Value::obj(vec![
+        ("name", Value::Str("serve_throughput::swap_under_load".into())),
+        ("ok", Value::Num(ok as f64)),
+        ("shed", Value::Num(shed as f64)),
+        ("rejected", Value::Num(stats.rejected as f64)),
+        ("wrong_config", Value::Num(wrong as f64)),
+        ("stale_after_swap", Value::Num(stale as f64)),
+    ])]
+}
+
 fn main() {
     let fast = std::env::var_os("MPQ_BENCH_FAST").is_some();
     let dur = if fast { Duration::from_millis(400) } else { Duration::from_millis(1500) };
@@ -257,6 +551,12 @@ fn main() {
             ]));
         }
     }
+
+    println!("-- data-plane sections --");
+    rows.extend(bench_assembly(fast));
+    rows.extend(bench_memo_contention(fast));
+    rows.extend(bench_multi_config(base, fast));
+    rows.extend(bench_swap_under_load(base, fast));
 
     let out_path = std::env::var("MPQ_BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".into());
     let doc = Value::obj(vec![

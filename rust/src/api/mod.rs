@@ -59,7 +59,10 @@ pub use partition::{
     SharedSegmentEval,
 };
 pub use session::{SearchReport, SearchSession};
-pub use spec::{BackendSpec, CacheSpec, ObjectiveSpec, ScaleSpec, SearchSpec, DEFAULT_TRIALS};
+pub use spec::{
+    parse_tenants, BackendSpec, CacheSpec, ObjectiveSpec, ScaleSpec, SearchSpec, TenantSpec,
+    DEFAULT_TRIALS,
+};
 pub use synthetic::{SyntheticCost, SyntheticEnv, SyntheticStage};
 
 /// The versioned sensitivity score cache lives with the metric code but

@@ -112,10 +112,23 @@ impl SearchSession {
     /// scales — either way, `mpq serve` builds exactly one pool per
     /// process.
     pub fn into_server(
-        mut self,
+        self,
         cfg: QuantConfig,
+        opts: ServeOptions,
+    ) -> Result<(ServerHandle, std::thread::JoinHandle<()>)> {
+        self.into_multi_server(vec![cfg], opts)
+    }
+
+    /// [`SearchSession::into_server`] with a multi-config serving table:
+    /// all configs (e.g. one frontier pick per tenant) are served from
+    /// the same warm pool, routed per request by
+    /// [`crate::server::InferOptions::config`].
+    pub fn into_multi_server(
+        mut self,
+        configs: Vec<QuantConfig>,
         mut opts: ServeOptions,
     ) -> Result<(ServerHandle, std::thread::JoinHandle<()>)> {
+        anyhow::ensure!(!configs.is_empty(), "serving needs at least one config");
         self.ctx.ensure_calibrated()?;
         opts.workers = self.spec.workers.max(1);
         if let Some(pool) = self.ctx.take_pool() {
@@ -125,16 +138,24 @@ impl SearchSession {
             // Drop the context pipeline's device state before warmup: the
             // pool is this process's one remaining device owner.
             drop(self);
-            return crate::server::serve_with_pool(pool, cfg, opts);
+            return crate::server::serve_multi_with_pool(pool, configs, opts);
         }
         let dir = self.ctx.pipeline.artifacts.dir.clone();
         let model = self.spec.model.clone();
         drop(self);
         let scales_path = dir.join(format!("{model}_scales.json"));
-        crate::server::spawn(dir, model, cfg, opts, move |p| {
+        let mut configs = configs;
+        let first = configs.remove(0);
+        let (handle, join) = crate::server::spawn(dir, model, first, opts, move |p| {
             p.scales = Scales::load(&scales_path)?;
             p.sync_scales()
-        })
+        })?;
+        // Register the remaining configs; their bits buffers upload
+        // lazily, once per worker, on first routed batch.
+        for cfg in configs {
+            handle.add_config(cfg)?;
+        }
+        Ok((handle, join))
     }
 }
 

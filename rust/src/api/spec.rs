@@ -32,7 +32,7 @@ use crate::sensitivity::MetricKind;
 use crate::Result;
 
 use super::{
-    AccuracyTarget, CostModel, FootprintBudget, LatencyBudget, ModelContext, Objective,
+    AccuracyTarget, CostModel, FootprintBudget, LatencyBudget, ModelContext, Objective, PickSpec,
     SearchSession,
 };
 
@@ -313,6 +313,47 @@ impl SearchSpec {
     }
 }
 
+// --------------------------------------------------------------- tenants
+
+/// One serving tenant: a name plus the frontier [`PickSpec`] that selects
+/// its quantization config. Parsed from `name:latency<=B,acc>=F` (the
+/// constraint grammar is exactly `--pick`'s).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    pub name: String,
+    pub pick: PickSpec,
+}
+
+impl std::str::FromStr for TenantSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let (name, constraints) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("bad tenant `{s}` (want name:latency<=B,acc>=F)"))?;
+        let name = name.trim();
+        ensure!(!name.is_empty(), "bad tenant `{s}`: empty name");
+        Ok(Self { name: name.to_string(), pick: constraints.parse()? })
+    }
+}
+
+/// Parse a `--tenants` list: `;`-separated [`TenantSpec`]s with unique
+/// names, e.g. `gold:latency<=0.6,acc>=0.99;bronze:latency<=0.4`.
+pub fn parse_tenants(s: &str) -> Result<Vec<TenantSpec>> {
+    let mut tenants: Vec<TenantSpec> = Vec::new();
+    for part in s.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+        let t: TenantSpec = part.parse()?;
+        ensure!(
+            tenants.iter().all(|seen| seen.name != t.name),
+            "duplicate tenant name `{}`",
+            t.name
+        );
+        tenants.push(t);
+    }
+    ensure!(!tenants.is_empty(), "no tenants in `{s}`");
+    Ok(tenants)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -347,6 +388,30 @@ mod tests {
             (SearchSpec::new("m").partitions(0), "0 partitions"),
         ] {
             assert!(spec.validate().is_err(), "{what} should be rejected");
+        }
+    }
+
+    #[test]
+    fn tenants_parse() {
+        let ts = parse_tenants("gold:latency<=0.6,acc>=0.99; bronze:latency<=0.4").unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].name, "gold");
+        assert_eq!(ts[0].pick.max_rel_latency, Some(0.6));
+        assert_eq!(ts[0].pick.min_accuracy, Some(0.99));
+        assert_eq!(ts[1].name, "bronze");
+        assert_eq!(ts[1].pick, PickSpec { max_rel_latency: Some(0.4), ..PickSpec::default() });
+    }
+
+    #[test]
+    fn bad_tenants_are_rejected() {
+        for (s, what) in [
+            ("", "empty list"),
+            ("gold", "missing constraints separator"),
+            (":latency<=0.5", "empty name"),
+            ("gold:wat<=1", "unknown constraint"),
+            ("gold:latency<=0.5;gold:acc>=0.9", "duplicate name"),
+        ] {
+            assert!(parse_tenants(s).is_err(), "{what} should be rejected");
         }
     }
 }

@@ -27,12 +27,14 @@
 pub mod bisection;
 mod cache;
 pub mod greedy;
+mod memo;
 mod parallel;
 mod pipeline;
 mod pool;
 pub mod shard;
 
 pub use cache::EvalCache;
+pub use memo::{PendingWrites, StripedMemo, STRIPES};
 pub use parallel::{ParallelEnv, SyncSearchEnv};
 pub use pipeline::{Pipeline, PipelineStats};
 pub use pool::PipelinePool;

@@ -16,7 +16,9 @@ use anyhow::{ensure, Context};
 use crate::model::ModelArtifacts;
 use crate::quant::calibrate::{BatchGrad, NoiseSample, TraceSample};
 use crate::quant::{self, AdjustReport, CalibrationOptions, QuantConfig, Scales};
-use crate::runtime::{scalar_f32, vec_f32, Engine, Executable, HostTensor};
+use crate::runtime::{
+    scalar_f32, vec_f32, BatchArena, Engine, Executable, HostTensor, TensorData, TensorView,
+};
 use crate::util::rng::{noise_seed, probe_seed, Rng};
 use crate::Result;
 
@@ -56,6 +58,18 @@ impl CachedEval {
     }
 }
 
+/// Device-resident bit vectors for one serving configuration, uploaded
+/// once per `(config id, table version)` and reused across batches (see
+/// [`Pipeline::logits_keyed`]).
+struct ConfigSlot {
+    bw: xla::PjRtBuffer,
+    ba: xla::PjRtBuffer,
+}
+
+/// Bound on retained [`ConfigSlot`]s per pipeline; two tiny vectors each,
+/// so the bound is about hygiene under config churn, not memory pressure.
+const MAX_CONFIG_SLOTS: usize = 64;
+
 pub struct Pipeline {
     engine: Engine,
     pub artifacts: ModelArtifacts,
@@ -78,6 +92,12 @@ pub struct Pipeline {
     cache: HashMap<u64, CachedEval>,
     /// Optional cross-run cache (see [`Pipeline::attach_eval_cache`]).
     eval_cache: Option<EvalCache>,
+    /// Serving bits buffers keyed by `(config id, table version)` — the
+    /// multi-config data plane uploads each configuration's bit vectors
+    /// once and reuses them for every batch routed to that config.
+    config_slots: HashMap<(u32, u64), ConfigSlot>,
+    /// Reusable zero-copy batch-assembly buffer for the serving path.
+    batch_arena: BatchArena,
     pub stats: PipelineStats,
 }
 
@@ -128,6 +148,8 @@ impl Pipeline {
             calib_adj_batches,
             cache: HashMap::new(),
             eval_cache: None,
+            config_slots: HashMap::new(),
+            batch_arena: BatchArena::new(),
             stats: PipelineStats::default(),
         };
         pipe.sync_scales()?;
@@ -184,13 +206,13 @@ impl Pipeline {
         m.float_val_loss.to_bits().hash(&mut h);
         m.eval_batch.hash(&mut h);
         self.artifacts.val.count.hash(&mut h);
-        match &self.artifacts.val.y {
-            HostTensor::F32 { data, .. } => {
+        match self.artifacts.val.y.data() {
+            TensorData::F32(data) => {
                 for v in data {
                     v.to_bits().hash(&mut h);
                 }
             }
-            HostTensor::I32 { data, .. } => data.hash(&mut h),
+            TensorData::I32(data) => data.hash(&mut h),
         }
         format!("{}/v{}/state-{:016x}", m.model, m.version, h.finish())
     }
@@ -623,21 +645,85 @@ impl Pipeline {
     /// the serving path used by [`crate::server`]. The leading dimension of
     /// `x` must be one of [`Self::logits_batch_sizes`].
     pub fn logits(&mut self, cfg: &QuantConfig, x: &HostTensor) -> Result<Vec<f32>> {
+        self.logits_view(cfg, &x.view())
+    }
+
+    /// [`Pipeline::logits`] over a borrowed [`TensorView`] — the zero-copy
+    /// serving path: the device upload reads straight from the view (a
+    /// batch arena or a window into shared tensor storage).
+    pub fn logits_view(&mut self, cfg: &QuantConfig, x: &TensorView<'_>) -> Result<Vec<f32>> {
+        let (bw, ba) = self.bits_bufs(cfg)?;
+        self.logits_with_bits(&bw, &ba, x)
+    }
+
+    fn logits_with_bits(
+        &mut self,
+        bw: &xla::PjRtBuffer,
+        ba: &xla::PjRtBuffer,
+        x: &TensorView<'_>,
+    ) -> Result<Vec<f32>> {
         let batch = x.dims()[0];
         self.logits_exe_for(batch)?;
-        let (bw, ba) = self.bits_bufs(cfg)?;
-        let xb = self.engine.upload(x)?;
+        let xb = self.engine.upload_view(x)?;
         let exe = self.logits_exes.remove(&batch).expect("compiled above");
         let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.param_bufs.len() + 7);
         args.extend(self.param_bufs.iter());
         args.extend(self.scale_bufs.iter());
-        args.push(&bw);
-        args.push(&ba);
+        args.push(bw);
+        args.push(ba);
         args.push(&xb);
         let out = exe.run(&args);
         self.stats.batch_execs += 1;
         self.logits_exes.insert(batch, exe);
         Ok(vec_f32(&out?[0])?)
+    }
+
+    /// [`Pipeline::logits_view`] through the versioned per-config bits
+    /// table: `cfg`'s bit vectors are uploaded once per `key` (a
+    /// `(config id, table version)` pair from the serving config table)
+    /// and reused for every later batch routed to that config. A config
+    /// swap bumps the version, so a stale slot can never answer for the
+    /// new configuration; slots are pruned past [`MAX_CONFIG_SLOTS`].
+    pub fn logits_keyed(
+        &mut self,
+        key: (u32, u64),
+        cfg: &QuantConfig,
+        x: &TensorView<'_>,
+    ) -> Result<Vec<f32>> {
+        if !self.config_slots.contains_key(&key) {
+            if self.config_slots.len() >= MAX_CONFIG_SLOTS {
+                self.config_slots.clear();
+            }
+            let (bw, ba) = self.bits_bufs(cfg)?;
+            self.config_slots.insert(key, ConfigSlot { bw, ba });
+        }
+        let slot = self.config_slots.remove(&key).expect("inserted above");
+        let out = self.logits_with_bits(&slot.bw, &slot.ba, x);
+        self.config_slots.insert(key, slot);
+        out
+    }
+
+    /// Zero-copy batch serving: stack `xs` (one `[1, x_shape...]` tensor
+    /// per request) into the pipeline's retained [`BatchArena`], zero-pad
+    /// to the `bucket` rows of a compiled graph, and run the keyed logits
+    /// path. Each request payload is written exactly once — no per-request
+    /// `to_vec`, no per-batch concatenation, no steady-state allocation.
+    pub fn logits_rows(
+        &mut self,
+        key: (u32, u64),
+        cfg: &QuantConfig,
+        xs: &[HostTensor],
+        bucket: usize,
+    ) -> Result<Vec<f32>> {
+        let x_shape = self.artifacts.manifest.x_shape.clone();
+        // Take the arena so its borrowed view and `&mut self` coexist.
+        let mut arena = std::mem::take(&mut self.batch_arena);
+        let out = {
+            let view = arena.assemble(xs, &x_shape, bucket);
+            self.logits_keyed(key, cfg, &view)
+        };
+        self.batch_arena = arena;
+        out
     }
 
     /// Compile and execute every serving bucket once with zero inputs so

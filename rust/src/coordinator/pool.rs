@@ -9,10 +9,17 @@
 //!
 //! The workers share two interior-mutability-safe caches:
 //!
-//! * a memo map (`Mutex<HashMap>`) of exact results, so no configuration is
-//!   evaluated twice anywhere in the pool, and
+//! * a lock-striped memo ([`StripedMemo`]) of exact results, so no
+//!   configuration is evaluated twice anywhere in the pool — a hit costs
+//!   exactly one stripe-mutex acquisition, and distinct config hashes
+//!   never contend, and
 //! * an optional persistent [`EvalCache`], giving cross-run reuse identical
 //!   to a single pipeline's (see [`PipelinePool::attach_eval_cache`]).
+//!   Publishes never write it on the hot path: they queue on
+//!   [`PendingWrites`] and a background interval flusher drains them into
+//!   the cache and persists dirty state (atomic rename, exactly as
+//!   before); detach and shutdown still flush synchronously, so crash
+//!   semantics are unchanged.
 //!
 //! Only *exact* results enter the shared maps — they answer any accuracy
 //! target decisively, so sharing never changes a decision. Memory cost is
@@ -27,9 +34,10 @@
 //! [`WorkerJob::SetScales`] — see [`super::shard`] for the drivers and the
 //! determinism guarantee.
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Duration;
 
 use anyhow::{anyhow, Context as _};
 
@@ -37,29 +45,47 @@ use crate::quant::calibrate::{self, BatchGrad, NoiseSample, TraceSample};
 use crate::quant::{QuantConfig, Scales};
 use crate::Result;
 
+use super::memo::{PendingWrites, StripedMemo};
 use super::shard::StageRunner;
 use super::{EvalCache, EvalResult, Pipeline, SearchEnv};
 
+/// How often the background flusher drains deferred writes into the
+/// persistent cache and saves dirty state.
+const EVAL_CACHE_FLUSH_INTERVAL: Duration = Duration::from_millis(200);
+
 /// Shared state all workers consult before touching their device.
 struct SharedCache {
-    /// Exact results by configuration key.
-    memo: Mutex<HashMap<u64, EvalResult>>,
+    /// Exact results by configuration key — one stripe lock per hit.
+    memo: StripedMemo,
+    /// Publishes destined for the persistent cache, deferred off the eval
+    /// hot path; drained by the interval flusher and at flush points.
+    pending: PendingWrites,
     /// Optional cross-run cache (exact results only, context-guarded).
     persistent: Mutex<Option<EvalCache>>,
-    /// Lookups answered by the shared memo (persistent hits are counted
-    /// by the [`EvalCache`] itself).
-    memo_hits: std::sync::atomic::AtomicUsize,
+    /// Cheap hot-path gate: whether a persistent cache is attached (so
+    /// publishes skip the pending queue entirely when there is none).
+    attached: AtomicBool,
 }
 
 impl SharedCache {
+    fn new() -> Self {
+        Self {
+            memo: StripedMemo::new(),
+            pending: PendingWrites::new(),
+            persistent: Mutex::new(None),
+            attached: AtomicBool::new(false),
+        }
+    }
+
     fn lookup(&self, key: u64) -> Option<EvalResult> {
-        if let Some(hit) = self.memo.lock().unwrap().get(&key).copied() {
-            self.memo_hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        // Hit path: exactly one stripe-mutex acquisition.
+        if let Some(hit) = self.memo.lookup(key) {
             return Some(hit);
         }
-        let mut guard = self.persistent.lock().unwrap();
-        let hit = guard.as_mut().and_then(|c| c.lookup(key))?;
-        self.memo.lock().unwrap().insert(key, hit);
+        // Miss path: consult the persistent cache and seed the memo so
+        // later lookups stay on the one-lock path.
+        let hit = self.persistent.lock().unwrap().as_mut().and_then(|c| c.lookup(key))?;
+        self.memo.insert(key, hit);
         Some(hit)
     }
 
@@ -67,10 +93,90 @@ impl SharedCache {
         if !result.exact {
             return;
         }
-        self.memo.lock().unwrap().insert(key, *result);
-        if let Some(cache) = self.persistent.lock().unwrap().as_mut() {
-            cache.insert(key, result);
+        self.memo.insert(key, *result);
+        // The persistent write leaves the hot path: queue it for the
+        // background flusher instead of taking the cache mutex here.
+        if self.attached.load(Ordering::Relaxed) {
+            self.pending.push(key, *result);
         }
+    }
+
+    /// Drain deferred writes into the attached cache and persist dirty
+    /// state (the dirty flag makes clean saves free; writes go through
+    /// the same atomic temp-file rename as always).
+    fn flush(&self) -> Result<()> {
+        let mut guard = self.persistent.lock().unwrap();
+        let entries = self.pending.drain();
+        match guard.as_mut() {
+            Some(cache) => {
+                for (k, r) in &entries {
+                    cache.insert(*k, r);
+                }
+                cache.save()
+            }
+            None => Ok(()),
+        }
+    }
+
+    /// Flush, then detach the cache — the scale-change/shutdown path.
+    /// Deferred writes were computed under the scales the detaching
+    /// cache's fingerprint covers, so they are committed to it first.
+    fn detach(&self) {
+        self.attached.store(false, Ordering::Relaxed);
+        let mut guard = self.persistent.lock().unwrap();
+        let entries = self.pending.drain();
+        if let Some(mut cache) = guard.take() {
+            for (k, r) in &entries {
+                cache.insert(*k, r);
+            }
+            let _ = cache.save();
+        }
+    }
+}
+
+/// Background interval flusher for the shared persistent cache: wakes
+/// every [`EVAL_CACHE_FLUSH_INTERVAL`], drains [`PendingWrites`] and
+/// saves. Stopped (and joined) on detach, re-attach and pool drop —
+/// always followed by a synchronous flush, so no deferred write outlives
+/// the pool.
+struct Flusher {
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Flusher {
+    fn spawn(shared: Arc<SharedCache>) -> Self {
+        let stop = Arc::new((Mutex::new(false), Condvar::new()));
+        let signal = stop.clone();
+        let join = std::thread::spawn(move || {
+            let (lock, cvar) = &*signal;
+            let mut stopped = lock.lock().unwrap();
+            while !*stopped {
+                let (guard, _) = cvar.wait_timeout(stopped, EVAL_CACHE_FLUSH_INTERVAL).unwrap();
+                stopped = guard;
+                if *stopped {
+                    break;
+                }
+                drop(stopped);
+                let _ = shared.flush();
+                stopped = lock.lock().unwrap();
+            }
+        });
+        Self { stop, join: Some(join) }
+    }
+
+    fn shutdown(&mut self) {
+        *self.stop.0.lock().unwrap() = true;
+        self.stop.1.notify_all();
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+impl Drop for Flusher {
+    fn drop(&mut self) {
+        self.shutdown();
     }
 }
 
@@ -151,7 +257,11 @@ pub struct PipelinePool {
     weight_numels: Vec<u64>,
     /// Evaluations dispatched to workers (shared-cache hits excluded).
     /// Atomic so concurrent segment drivers can submit through `&self`.
-    dispatched: std::sync::atomic::AtomicUsize,
+    dispatched: AtomicUsize,
+    /// Background persistent-cache flusher; present exactly while a cache
+    /// is attached. In a `Mutex<Option<..>>` because attachment happens
+    /// through `&self` (the pool is shared behind `Arc` while serving).
+    flusher: Mutex<Option<Flusher>>,
 }
 
 impl PipelinePool {
@@ -165,11 +275,7 @@ impl PipelinePool {
         configure: impl Fn(&mut Pipeline) -> Result<()> + Send + Sync + 'static,
     ) -> Result<Self> {
         let workers = workers.max(1);
-        let shared = Arc::new(SharedCache {
-            memo: Mutex::new(HashMap::new()),
-            persistent: Mutex::new(None),
-            memo_hits: std::sync::atomic::AtomicUsize::new(0),
-        });
+        let shared = Arc::new(SharedCache::new());
         let configure: Arc<dyn Fn(&mut Pipeline) -> Result<()> + Send + Sync> = Arc::new(configure);
         // Spawn every worker before waiting on any readiness signal, so the
         // expensive per-worker construction (graph compilation, scale
@@ -224,7 +330,8 @@ impl PipelinePool {
             batch_sizes: info.batch_sizes,
             adjust_batches: info.adjust_batches,
             weight_numels: info.weight_numels,
-            dispatched: std::sync::atomic::AtomicUsize::new(0),
+            dispatched: AtomicUsize::new(0),
+            flusher: Mutex::new(None),
         })
     }
 
@@ -267,21 +374,45 @@ impl PipelinePool {
     /// [`Pipeline::eval_context`] on a scratch pipeline, or pass any
     /// stable string covering model + scales.
     pub fn attach_eval_cache(&self, path: &Path, context: &str, capacity: Option<usize>) {
+        // Settle any previous attachment first: stop its flusher and
+        // commit its deferred writes to *its own* cache. A stray entry
+        // queued against the old scales must never land in the new cache
+        // (the contexts differ), so anything still pending after the
+        // detach is discarded, not carried over.
+        self.stop_flusher();
+        self.shared.detach();
+        let _ = self.shared.pending.drain();
         *self.shared.persistent.lock().unwrap() =
             Some(EvalCache::with_capacity(path, context, capacity));
+        self.shared.attached.store(true, Ordering::Relaxed);
+        *self.flusher.lock().unwrap() = Some(Flusher::spawn(self.shared.clone()));
     }
 
-    /// Persist the shared cache, if attached.
+    /// Apply deferred writes and persist the shared cache, if attached.
     pub fn flush_eval_cache(&self) -> Result<()> {
-        match self.shared.persistent.lock().unwrap().as_mut() {
-            Some(cache) => cache.save(),
-            None => Ok(()),
+        self.shared.flush()
+    }
+
+    /// Entries currently in the shared persistent cache (0 if detached),
+    /// counting deferred writes the flusher has not drained yet.
+    pub fn eval_cache_len(&self) -> usize {
+        let mut guard = self.shared.persistent.lock().unwrap();
+        match guard.as_mut() {
+            Some(cache) => {
+                for (k, r) in self.shared.pending.drain() {
+                    cache.insert(k, &r);
+                }
+                cache.len()
+            }
+            None => 0,
         }
     }
 
-    /// Entries currently in the shared persistent cache (0 if detached).
-    pub fn eval_cache_len(&self) -> usize {
-        self.shared.persistent.lock().unwrap().as_ref().map_or(0, EvalCache::len)
+    /// Stop and join the background flusher, if one is running.
+    fn stop_flusher(&self) {
+        if let Some(mut f) = self.flusher.lock().unwrap().take() {
+            f.shutdown();
+        }
     }
 
     /// Scatter one calibration/sensitivity stage over the workers —
@@ -316,13 +447,13 @@ impl PipelinePool {
 
     /// Evaluations that actually reached a worker (cache misses).
     pub fn dispatched(&self) -> usize {
-        self.dispatched.load(std::sync::atomic::Ordering::Relaxed)
+        self.dispatched.load(Ordering::Relaxed)
     }
 
     /// Lookups answered without touching a device:
     /// `(shared memo hits, persistent cross-run cache hits)`.
     pub fn cache_hits(&self) -> (usize, usize) {
-        let memo = self.shared.memo_hits.load(std::sync::atomic::Ordering::Relaxed);
+        let memo = self.shared.memo.hits();
         let persistent =
             self.shared.persistent.lock().unwrap().as_ref().map_or(0, EvalCache::hits);
         (memo, persistent)
@@ -371,7 +502,7 @@ impl PipelinePool {
                 slots[slot] = Some(Err(anyhow!("pool worker exited")));
                 continue;
             }
-            self.dispatched.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            self.dispatched.fetch_add(1, Ordering::Relaxed);
             outstanding += 1;
         }
         drop(resp_tx);
@@ -517,13 +648,14 @@ impl StageRunner for PipelinePool {
         // Results depend on scales: invalidate the shared caches exactly
         // like [`Pipeline::sync_scales`] invalidates its per-pipeline
         // ones — the memo is cleared, a persistent cache (whose context
-        // fingerprint no longer matches) is flushed and detached. The
-        // owner re-attaches once the new scales are final
-        // (`ModelContext` does so after calibration).
-        self.shared.memo.lock().unwrap().clear();
-        if let Some(mut cache) = self.shared.persistent.lock().unwrap().take() {
-            let _ = cache.save();
-        }
+        // fingerprint no longer matches) is flushed and detached — its
+        // deferred writes were computed under the *old* scales, which is
+        // exactly what its fingerprint covers, so they are committed to
+        // it before the detach. The owner re-attaches once the new scales
+        // are final (`ModelContext` does so after calibration).
+        self.stop_flusher();
+        self.shared.memo.clear();
+        self.shared.detach();
         let mut rxs = Vec::with_capacity(self.workers.len());
         for (wi, w) in self.workers.iter().enumerate() {
             let (tx, rx) = mpsc::channel();
@@ -558,6 +690,7 @@ impl SearchEnv for PipelinePool {
 
 impl Drop for PipelinePool {
     fn drop(&mut self) {
+        self.stop_flusher();
         let _ = self.flush_eval_cache();
         // Closing the job channels ends each worker loop; then reap.
         let workers: Vec<Worker> = self.workers.drain(..).collect();
@@ -569,5 +702,125 @@ impl Drop for PipelinePool {
         for join in joins {
             let _ = join.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("mpq_poolcache_{name}.json"))
+    }
+
+    fn res(accuracy: f64) -> EvalResult {
+        EvalResult { loss: 1.0 - accuracy, accuracy, exact: true }
+    }
+
+    fn attach(shared: &SharedCache, path: &Path, context: &str) {
+        *shared.persistent.lock().unwrap() = Some(EvalCache::with_capacity(path, context, None));
+        shared.attached.store(true, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn memo_hit_is_one_acquisition_and_skips_persistent() {
+        let path = tmp("memo_hit");
+        let _ = std::fs::remove_file(&path);
+        let shared = SharedCache::new();
+        attach(&shared, &path, "ctx");
+        shared.publish(11, &res(0.8));
+        assert!(!shared.pending.is_empty());
+        let before = shared.memo.lock_acquisitions();
+        for _ in 0..5 {
+            assert_eq!(shared.lookup(11).unwrap().accuracy, 0.8);
+        }
+        // Five hits, five stripe acquisitions — the persistent mutex and
+        // the old re-insert acquisition are both off the hit path.
+        assert_eq!(shared.memo.lock_acquisitions() - before, 5);
+        assert_eq!(shared.memo.hits(), 5);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn persistent_hit_seeds_memo_for_one_lock_rereads() {
+        let path = tmp("seed_memo");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut cache = EvalCache::with_capacity(&path, "ctx", None);
+            cache.insert(42, &res(0.7));
+            cache.save().unwrap();
+        }
+        let shared = SharedCache::new();
+        attach(&shared, &path, "ctx");
+        // First lookup misses the memo, hits the persistent cache...
+        assert_eq!(shared.lookup(42).unwrap().accuracy, 0.7);
+        assert_eq!(shared.memo.hits(), 0);
+        // ...and seeds the memo: the re-read is a one-acquisition hit.
+        let before = shared.memo.lock_acquisitions();
+        assert_eq!(shared.lookup(42).unwrap().accuracy, 0.7);
+        assert_eq!(shared.memo.lock_acquisitions() - before, 1);
+        assert_eq!(shared.memo.hits(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn publish_defers_persistent_write_until_flush() {
+        let path = tmp("deferred");
+        let _ = std::fs::remove_file(&path);
+        let shared = SharedCache::new();
+        attach(&shared, &path, "ctx");
+        shared.publish(1, &res(0.9));
+        shared.publish(2, &EvalResult { loss: 0.5, accuracy: 0.5, exact: false });
+        // The exact result is queued, the inexact one dropped; neither has
+        // touched the EvalCache yet.
+        assert_eq!(shared.persistent.lock().unwrap().as_ref().unwrap().len(), 0);
+        shared.flush().unwrap();
+        assert!(shared.pending.is_empty());
+        let guard = shared.persistent.lock().unwrap();
+        let cache = guard.as_ref().unwrap();
+        assert_eq!(cache.len(), 1);
+        // And the flush persisted to disk (atomic rename, as before).
+        drop(guard);
+        let mut reloaded = EvalCache::with_capacity(&path, "ctx", None);
+        assert_eq!(reloaded.lookup(1).unwrap().accuracy, 0.9);
+        assert!(reloaded.lookup(2).is_none());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn detach_commits_pending_to_the_old_cache() {
+        let path = tmp("detach");
+        let _ = std::fs::remove_file(&path);
+        let shared = SharedCache::new();
+        attach(&shared, &path, "ctx");
+        shared.publish(7, &res(0.6));
+        shared.detach();
+        assert!(shared.persistent.lock().unwrap().is_none());
+        assert!(shared.pending.is_empty());
+        // Publishes while detached go to the memo only — nothing queues.
+        shared.publish(8, &res(0.4));
+        assert!(shared.pending.is_empty());
+        let mut reloaded = EvalCache::with_capacity(&path, "ctx", None);
+        assert_eq!(reloaded.lookup(7).unwrap().accuracy, 0.6);
+        assert!(reloaded.lookup(8).is_none());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn background_flusher_drains_without_explicit_flush() {
+        let path = tmp("flusher");
+        let _ = std::fs::remove_file(&path);
+        let shared = Arc::new(SharedCache::new());
+        attach(&shared, &path, "ctx");
+        let mut flusher = Flusher::spawn(shared.clone());
+        shared.publish(3, &res(0.3));
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while !shared.pending.is_empty() && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(shared.pending.is_empty(), "flusher never drained the pending queue");
+        flusher.shutdown();
+        assert_eq!(shared.persistent.lock().unwrap().as_ref().unwrap().len(), 1);
+        let _ = std::fs::remove_file(&path);
     }
 }

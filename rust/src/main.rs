@@ -30,9 +30,9 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use mpq::api::{
-    build_frontier_synthetic_partitioned, log_event, run_search, BackendSpec, Checkpoint,
-    CostModel, EventSink, FrontierArtifact, FrontierReport, ObjectiveSpec, PickSpec, SearchEvent,
-    SearchSpec, SyntheticCost, SyntheticEnv, SyntheticStage,
+    build_frontier_synthetic_partitioned, log_event, parse_tenants, run_search, BackendSpec,
+    Checkpoint, CostModel, EventSink, FrontierArtifact, FrontierReport, ObjectiveSpec, PickSpec,
+    SearchEvent, SearchSpec, SyntheticCost, SyntheticEnv, SyntheticStage, TenantSpec,
 };
 use mpq::coordinator::{
     calibrate_sharded, hessian_trace_sharded, noise_scores_sharded, ParallelEnv, SearchAlgo,
@@ -96,8 +96,9 @@ COMMANDS
   ablation    --model M [--target 0.99] [--out DIR]
   serve       --model M [--bits 8] [--requests 256] [--concurrency 8]
               [--workers 2] [--queue-depth 256] [--deadline-ms 0]
-              [--max-batch 32] [--wait-us 500]
+              [--max-batch 32] [--wait-us 500] [--priority 0]
               [--frontier frontier.json [--pick latency<=B,size<=B,acc>=F]]
+              [--frontier frontier.json --tenants \"gold:latency<=B,acc>=F;...\"]
   experiment  run <suite.yaml> [--out DIR] [--workers N]
               [--baseline baseline.json [--update-baseline [--record-measured]]]
               [--bench BENCH_a.json,BENCH_b.json] [--band 2.0]
@@ -1432,6 +1433,12 @@ struct ServeCmd {
     /// uniform bit-width.
     frontier: Option<PathBuf>,
     pick: Option<PickSpec>,
+    /// Multi-tenant serving: one frontier pick per tenant, all tenants
+    /// served concurrently from one warm pool.
+    tenants: Option<Vec<TenantSpec>>,
+    /// Admission priority for every generated request (higher pops
+    /// first; ties stay FIFO).
+    priority: i32,
     opts: mpq::server::ServeOptions,
 }
 
@@ -1445,6 +1452,8 @@ impl ServeCmd {
             concurrency: args.get_or("concurrency", 8usize)?.max(1),
             frontier: args.get_str("frontier").map(PathBuf::from),
             pick: args.get_str("pick").map(str::parse).transpose()?,
+            tenants: args.get_str("tenants").map(parse_tenants).transpose()?,
+            priority: args.get_or("priority", 0i32)?,
             opts: mpq::server::ServeOptions {
                 max_batch: args.get_or("max-batch", 32usize)?,
                 max_wait: std::time::Duration::from_micros(args.get_or("wait-us", 500u64)?),
@@ -1461,6 +1470,14 @@ impl ServeCmd {
         anyhow::ensure!(
             args.get_str("bits").is_none() || cmd.frontier.is_none(),
             "--bits and --frontier are mutually exclusive (the frontier picks the config)"
+        );
+        anyhow::ensure!(
+            cmd.tenants.is_none() || cmd.frontier.is_some(),
+            "--tenants requires --frontier frontier.json"
+        );
+        anyhow::ensure!(
+            cmd.tenants.is_none() || cmd.pick.is_none(),
+            "--tenants and --pick are mutually exclusive (each tenant carries its own pick)"
         );
         Ok(cmd)
     }
@@ -1484,11 +1501,36 @@ impl ServeCmd {
         let examples: Vec<mpq::runtime::HostTensor> =
             (0..self.requests).map(|i| val.x.slice_rows(i % val_count, 1)).collect();
 
-        // Config selection: a frontier pick (best accuracy under the
-        // --pick constraints, straight from the artifact — no search at
-        // serve time) or the uniform --bits fallback.
-        let (cfg, cfg_desc) = match &self.frontier {
-            Some(path) => {
+        // Config selection: per-tenant frontier picks (one config per
+        // tenant, all served from one warm pool), a single frontier pick
+        // (best accuracy under the --pick constraints, straight from the
+        // artifact — no search at serve time), or the uniform --bits
+        // fallback.
+        let mut tenant_labels: Vec<String> = Vec::new();
+        let (configs, cfg_desc) = match (&self.frontier, &self.tenants) {
+            (Some(path), Some(tenants)) => {
+                let artifact = FrontierArtifact::load(path)?;
+                let mut configs = Vec::new();
+                for t in tenants {
+                    let point = artifact.pick(&t.pick)?;
+                    anyhow::ensure!(
+                        point.config.bits_w.len() == n,
+                        "frontier config has {} layers but {model} has {n}",
+                        point.config.bits_w.len()
+                    );
+                    eprintln!(
+                        "[serve] tenant {} ({}): accuracy={:.2}% rel_latency={:.2}%",
+                        t.name,
+                        t.pick.describe(),
+                        point.accuracy * 100.0,
+                        point.rel_latency * 100.0,
+                    );
+                    tenant_labels.push(t.name.clone());
+                    configs.push(point.config.clone());
+                }
+                (configs, format!("{} tenant picks", tenants.len()))
+            }
+            (Some(path), None) => {
                 let artifact = FrontierArtifact::load(path)?;
                 let pick = self.pick.unwrap_or_default();
                 let point = artifact.pick(&pick)?;
@@ -1506,12 +1548,16 @@ impl ServeCmd {
                     point.rel_size * 100.0,
                     point.cost_provenance,
                 );
-                (point.config.clone(), "frontier pick".to_string())
+                (vec![point.config.clone()], "frontier pick".to_string())
             }
-            None => (QuantConfig::uniform(n, self.bits), format!("uniform {}b", self.bits)),
+            (None, _) => {
+                (vec![QuantConfig::uniform(n, self.bits)], format!("uniform {}b", self.bits))
+            }
         };
-        let (handle, join) = session.into_server(cfg, self.opts)?;
+        let (handle, join) = session.into_multi_server(configs, self.opts)?;
 
+        let tenant_count = tenant_labels.len();
+        let priority = self.priority;
         let t0 = std::time::Instant::now();
         std::thread::scope(|s| {
             for c in 0..concurrency {
@@ -1520,7 +1566,12 @@ impl ServeCmd {
                 s.spawn(move || {
                     for (i, ex) in examples.iter().enumerate() {
                         if i % concurrency == c {
-                            let _ = handle.infer(ex.clone());
+                            let opts = mpq::server::InferOptions {
+                                priority,
+                                config: (tenant_count > 0).then(|| (i % tenant_count) as u32),
+                                ..Default::default()
+                            };
+                            let _ = handle.infer_with(ex.clone(), &opts);
                         }
                     }
                 });
@@ -1556,6 +1607,18 @@ impl ServeCmd {
                 w.requests,
                 w.mean_batch_fill()
             );
+        }
+        if stats.per_config.len() > 1 {
+            for cs in &stats.per_config {
+                let label = tenant_labels
+                    .get(cs.config as usize)
+                    .map(String::as_str)
+                    .unwrap_or("config");
+                println!(
+                    "config {} ({label}): {} batches, {} requests",
+                    cs.config, cs.batches, cs.requests
+                );
+            }
         }
         Ok(())
     }

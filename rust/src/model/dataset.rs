@@ -80,9 +80,6 @@ mod tests {
         let (x, y) = s.batch(1, 4);
         assert_eq!(x.dims(), &[4, 2]);
         assert_eq!(y.dims(), &[4]);
-        match y {
-            HostTensor::I32 { data, .. } => assert_eq!(data, vec![4, 5, 6, 7]),
-            _ => panic!(),
-        }
+        assert_eq!(y.i32_data().unwrap(), &[4, 5, 6, 7]);
     }
 }

@@ -13,7 +13,7 @@
 
 mod tensor;
 
-pub use tensor::HostTensor;
+pub use tensor::{BatchArena, HostTensor, TensorData, TensorView};
 
 use std::path::Path;
 
@@ -64,9 +64,16 @@ impl Engine {
 
     /// Upload a [`HostTensor`] (f32 or i32).
     pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
-        match t {
-            HostTensor::F32 { data, dims } => self.upload_f32(data, dims),
-            HostTensor::I32 { data, dims } => self.upload_i32(data, dims),
+        self.upload_view(&t.view())
+    }
+
+    /// Upload a borrowed [`TensorView`] — the zero-copy serving path:
+    /// the device reads straight from the view's slice (a batch arena or
+    /// a window into shared tensor storage), no owned tensor is built.
+    pub fn upload_view(&self, v: &TensorView<'_>) -> Result<xla::PjRtBuffer> {
+        match v.data() {
+            TensorData::F32(d) => self.upload_f32(d, v.dims()),
+            TensorData::I32(d) => self.upload_i32(d, v.dims()),
         }
     }
 }

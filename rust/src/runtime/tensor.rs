@@ -1,53 +1,240 @@
-//! Minimal host-side tensor used at the Rust/PJRT boundary.
+//! Host-side tensors at the Rust/PJRT boundary.
+//!
+//! Storage is `Arc`-backed and immutable: cloning a [`HostTensor`] or
+//! slicing rows off one ([`HostTensor::slice_rows`]) bumps a refcount and
+//! adjusts an offset — it never copies elements. The serving data plane
+//! builds on two zero-copy primitives on top of that:
+//!
+//! * [`TensorView`] / [`HostTensor::view_rows`] — a borrowed, dtype-tagged
+//!   window (elements + dims) the execution path consumes directly; device
+//!   uploads read straight from the view.
+//! * [`BatchArena`] — a reusable batch-assembly buffer: request rows are
+//!   written exactly once into a retained allocation (zero-padded to the
+//!   batch bucket), so steady-state batch formation performs no per-request
+//!   `to_vec` and no per-batch re-concatenation or allocation.
+
+use std::sync::Arc;
+
+/// Shared immutable element storage behind [`HostTensor`].
+#[derive(Clone, Debug)]
+enum Storage {
+    F32(Arc<[f32]>),
+    I32(Arc<[i32]>),
+}
 
 /// A dense host tensor, either f32 or i32 — the only dtypes crossing the
-/// AOT boundary in this system.
-#[derive(Clone, Debug, PartialEq)]
-pub enum HostTensor {
-    F32 { data: Vec<f32>, dims: Vec<usize> },
-    I32 { data: Vec<i32>, dims: Vec<usize> },
+/// AOT boundary in this system. `clone` and [`HostTensor::slice_rows`] are
+/// O(1): the element storage is shared, never copied.
+#[derive(Clone, Debug)]
+pub struct HostTensor {
+    storage: Storage,
+    /// Element offset of this tensor's first element within `storage`.
+    offset: usize,
+    dims: Vec<usize>,
+}
+
+/// Borrowed, dtype-tagged elements of a tensor, view, or arena buffer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TensorData<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl TensorData<'_> {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(d) => d.len(),
+            TensorData::I32(d) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A borrowed view (elements + dims) of tensor data — what the execution
+/// hot path consumes. Views are produced without copying by
+/// [`HostTensor::view`], [`HostTensor::view_rows`] and
+/// [`BatchArena::assemble`]; device uploads read the borrowed slice
+/// directly.
+#[derive(Clone, Debug)]
+pub struct TensorView<'a> {
+    data: TensorData<'a>,
+    dims: Vec<usize>,
+}
+
+impl<'a> TensorView<'a> {
+    pub fn new(data: TensorData<'a>, dims: Vec<usize>) -> Self {
+        debug_assert_eq!(data.len(), dims.iter().product::<usize>().max(1));
+        Self { data, dims }
+    }
+
+    pub fn data(&self) -> TensorData<'a> {
+        self.data
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
 }
 
 impl HostTensor {
     pub fn f32(data: Vec<f32>, dims: Vec<usize>) -> Self {
         debug_assert_eq!(data.len(), dims.iter().product::<usize>());
-        HostTensor::F32 { data, dims }
+        Self { storage: Storage::F32(data.into()), offset: 0, dims }
     }
 
     pub fn i32(data: Vec<i32>, dims: Vec<usize>) -> Self {
         debug_assert_eq!(data.len(), dims.iter().product::<usize>());
-        HostTensor::I32 { data, dims }
+        Self { storage: Storage::I32(data.into()), offset: 0, dims }
     }
 
     pub fn dims(&self) -> &[usize] {
-        match self {
-            HostTensor::F32 { dims, .. } | HostTensor::I32 { dims, .. } => dims,
-        }
+        &self.dims
     }
 
     pub fn numel(&self) -> usize {
-        self.dims().iter().product()
+        self.dims.iter().product()
     }
 
-    /// Leading-axis slice `[start, start+len)` — used for batching.
-    /// The row stride is the product of the trailing dims.
-    pub fn slice_rows(&self, start: usize, len: usize) -> HostTensor {
-        let dims = self.dims();
-        assert!(!dims.is_empty() && start + len <= dims[0], "slice out of range");
-        let stride: usize = dims[1..].iter().product::<usize>().max(1);
-        let mut new_dims = dims.to_vec();
-        new_dims[0] = len;
-        match self {
-            HostTensor::F32 { data, .. } => HostTensor::F32 {
-                data: data[start * stride..(start + len) * stride].to_vec(),
-                dims: new_dims,
-            },
-            HostTensor::I32 { data, .. } => HostTensor::I32 {
-                data: data[start * stride..(start + len) * stride].to_vec(),
-                dims: new_dims,
-            },
+    /// This tensor's elements, dtype-tagged. Borrowed straight from the
+    /// shared storage — no copy.
+    pub fn data(&self) -> TensorData<'_> {
+        let n = self.numel();
+        match &self.storage {
+            Storage::F32(d) => TensorData::F32(&d[self.offset..self.offset + n]),
+            Storage::I32(d) => TensorData::I32(&d[self.offset..self.offset + n]),
         }
     }
+
+    /// The elements as f32, if this is an f32 tensor.
+    pub fn f32_data(&self) -> Option<&[f32]> {
+        match self.data() {
+            TensorData::F32(d) => Some(d),
+            TensorData::I32(_) => None,
+        }
+    }
+
+    /// The elements as i32, if this is an i32 tensor.
+    pub fn i32_data(&self) -> Option<&[i32]> {
+        match self.data() {
+            TensorData::I32(d) => Some(d),
+            TensorData::F32(_) => None,
+        }
+    }
+
+    pub fn is_i32(&self) -> bool {
+        matches!(self.storage, Storage::I32(_))
+    }
+
+    /// Borrowed view of the whole tensor.
+    pub fn view(&self) -> TensorView<'_> {
+        TensorView { data: self.data(), dims: self.dims.clone() }
+    }
+
+    /// Borrowed leading-axis view `[start, start+len)` — the zero-copy
+    /// form of [`HostTensor::slice_rows`]. The row stride is the product
+    /// of the trailing dims.
+    pub fn view_rows(&self, start: usize, len: usize) -> TensorView<'_> {
+        let (lo, n, dims) = self.row_range(start, len);
+        let data = match &self.storage {
+            Storage::F32(d) => TensorData::F32(&d[lo..lo + n]),
+            Storage::I32(d) => TensorData::I32(&d[lo..lo + n]),
+        };
+        TensorView { data, dims }
+    }
+
+    /// Leading-axis slice `[start, start+len)` — used for batching. O(1):
+    /// the returned tensor shares this tensor's storage at an offset.
+    pub fn slice_rows(&self, start: usize, len: usize) -> HostTensor {
+        let (lo, _, dims) = self.row_range(start, len);
+        Self { storage: self.storage.clone(), offset: lo, dims }
+    }
+
+    /// Bounds-checked `(start element, element count, sliced dims)` for a
+    /// `[start, start+len)` row window.
+    fn row_range(&self, start: usize, len: usize) -> (usize, usize, Vec<usize>) {
+        let dims = &self.dims;
+        assert!(!dims.is_empty() && start + len <= dims[0], "slice out of range");
+        let stride: usize = dims[1..].iter().product::<usize>().max(1);
+        let mut new_dims = dims.clone();
+        new_dims[0] = len;
+        (self.offset + start * stride, len * stride, new_dims)
+    }
+}
+
+/// Structural equality: dtype, dims and element values (offsets and
+/// storage sharing are invisible).
+impl PartialEq for HostTensor {
+    fn eq(&self, other: &Self) -> bool {
+        self.dims == other.dims && self.data() == other.data()
+    }
+}
+
+/// Reusable batch-assembly arena. [`BatchArena::assemble`] stacks request
+/// rows into a retained buffer, zero-pads to the batch bucket, and hands
+/// back a borrowed [`TensorView`] — each request payload is written
+/// exactly once, and steady-state assembly allocates nothing beyond the
+/// first (largest-bucket) call.
+#[derive(Debug, Default)]
+pub struct BatchArena {
+    f32_buf: Vec<f32>,
+    i32_buf: Vec<i32>,
+}
+
+impl BatchArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Stack `examples` (leading dim 1 each, trailing dims `x_shape`) and
+    /// zero-pad to `batch` rows; dtype follows the examples. The returned
+    /// view has dims `[batch, x_shape...]` and borrows the arena, so it
+    /// must be dropped before the next `assemble`.
+    pub fn assemble(
+        &mut self,
+        examples: &[HostTensor],
+        x_shape: &[usize],
+        batch: usize,
+    ) -> TensorView<'_> {
+        assert!(!examples.is_empty() && examples.len() <= batch, "batch arena overflow");
+        let per: usize = x_shape.iter().product::<usize>().max(1);
+        let mut dims = vec![batch];
+        dims.extend_from_slice(x_shape);
+        if examples[0].is_i32() {
+            let data = fill_rows(&mut self.i32_buf, examples, HostTensor::i32_data, per, batch);
+            TensorView { data: TensorData::I32(data), dims }
+        } else {
+            let data = fill_rows(&mut self.f32_buf, examples, HostTensor::f32_data, per, batch);
+            TensorView { data: TensorData::F32(data), dims }
+        }
+    }
+}
+
+/// Write each example's row into `buf` and zero the padding tail. Only
+/// grows the buffer; retained capacity makes repeat batches allocation-free.
+fn fill_rows<'b, T: Copy + Default>(
+    buf: &'b mut Vec<T>,
+    examples: &[HostTensor],
+    row: impl Fn(&HostTensor) -> Option<&[T]>,
+    per: usize,
+    batch: usize,
+) -> &'b [T] {
+    buf.resize(batch * per, T::default());
+    for (i, e) in examples.iter().enumerate() {
+        if let Some(d) = row(e) {
+            buf[i * per..(i + 1) * per].copy_from_slice(d);
+        }
+    }
+    // Rows 0..len were overwritten above; only the tail needs zeroing
+    // (it may hold data from a previous, fuller batch).
+    buf[examples.len() * per..batch * per].fill(T::default());
+    &buf[..batch * per]
 }
 
 #[cfg(test)]
@@ -59,10 +246,7 @@ mod tests {
         let t = HostTensor::f32((0..12).map(|i| i as f32).collect(), vec![4, 3]);
         let s = t.slice_rows(1, 2);
         assert_eq!(s.dims(), &[2, 3]);
-        match s {
-            HostTensor::F32 { data, .. } => assert_eq!(data, vec![3., 4., 5., 6., 7., 8.]),
-            _ => panic!(),
-        }
+        assert_eq!(s.f32_data().unwrap(), &[3., 4., 5., 6., 7., 8.]);
     }
 
     #[test]
@@ -70,15 +254,77 @@ mod tests {
         let t = HostTensor::i32(vec![7, 8, 9, 10], vec![4]);
         let s = t.slice_rows(2, 2);
         assert_eq!(s.dims(), &[2]);
-        match s {
-            HostTensor::I32 { data, .. } => assert_eq!(data, vec![9, 10]),
-            _ => panic!(),
-        }
+        assert_eq!(s.i32_data().unwrap(), &[9, 10]);
     }
 
     #[test]
     #[should_panic(expected = "slice out of range")]
     fn slice_rows_oob_panics() {
         HostTensor::f32(vec![0.0; 6], vec![2, 3]).slice_rows(1, 2);
+    }
+
+    #[test]
+    fn slice_rows_shares_storage() {
+        let t = HostTensor::f32((0..12).map(|i| i as f32).collect(), vec![4, 3]);
+        let s = t.slice_rows(1, 2);
+        // Zero-copy: the slice's elements alias the parent's storage.
+        let parent = t.f32_data().unwrap();
+        assert!(std::ptr::eq(&parent[3], &s.f32_data().unwrap()[0]));
+        // Slices of slices compose.
+        let s2 = s.slice_rows(1, 1);
+        assert_eq!(s2.f32_data().unwrap(), &[6., 7., 8.]);
+        assert_eq!(t, t.clone());
+        assert_eq!(s.slice_rows(0, 2), s);
+    }
+
+    #[test]
+    fn view_rows_borrows_without_copy() {
+        let t = HostTensor::i32(vec![1, 2, 3, 4, 5, 6], vec![3, 2]);
+        let v = t.view_rows(1, 2);
+        assert_eq!(v.dims(), &[2, 2]);
+        assert_eq!(v.numel(), 4);
+        match v.data() {
+            TensorData::I32(d) => {
+                assert_eq!(d, &[3, 4, 5, 6]);
+                assert!(std::ptr::eq(&t.i32_data().unwrap()[2], &d[0]));
+            }
+            TensorData::F32(_) => panic!("dtype preserved"),
+        }
+        assert_eq!(t.view().dims(), t.dims());
+    }
+
+    #[test]
+    fn arena_matches_fresh_padding_and_reuses_buffer() {
+        let mut arena = BatchArena::new();
+        let a = HostTensor::f32(vec![1.0, 2.0], vec![1, 2]);
+        let b = HostTensor::f32(vec![3.0, 4.0], vec![1, 2]);
+        {
+            let v = arena.assemble(&[a.clone(), b], &[2], 4);
+            assert_eq!(v.dims(), &[4, 2]);
+            match v.data() {
+                TensorData::F32(d) => {
+                    assert_eq!(d, &[1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+                }
+                TensorData::I32(_) => panic!(),
+            }
+        }
+        // A smaller follow-up batch must not see rows from the first one.
+        let v = arena.assemble(&[a], &[2], 2);
+        match v.data() {
+            TensorData::F32(d) => assert_eq!(d, &[1.0, 2.0, 0.0, 0.0]),
+            TensorData::I32(_) => panic!(),
+        }
+    }
+
+    #[test]
+    fn arena_handles_i32_examples() {
+        let mut arena = BatchArena::new();
+        let a = HostTensor::i32(vec![7, 8], vec![1, 2]);
+        let v = arena.assemble(&[a], &[2], 2);
+        assert_eq!(v.dims(), &[2, 2]);
+        match v.data() {
+            TensorData::I32(d) => assert_eq!(d, &[7, 8, 0, 0]),
+            TensorData::F32(_) => panic!(),
+        }
     }
 }

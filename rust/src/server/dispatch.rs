@@ -20,11 +20,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::ensure;
 
+use crate::quant::QuantConfig;
 use crate::runtime::HostTensor;
 use crate::Result;
 
 use super::queue::{Request, SubmitQueue};
 use super::stats::ServeRecorder;
+use super::ConfigTable;
 
 /// A set of serving workers the dispatcher can fan batches across.
 ///
@@ -111,6 +113,14 @@ impl InflightGate {
 pub struct BatchJob {
     xs: Vec<HostTensor>,
     bucket: usize,
+    /// Serving config id this batch was formed for (batches never mix
+    /// configs — see [`super::queue::SubmitQueue::next_batch`]).
+    config: u32,
+    /// Config-table version at dispatch time: a swap after dispatch does
+    /// not retarget this batch, which is what makes swaps drain-free.
+    version: u64,
+    /// The resolved configuration, shared with the table.
+    cfg: Arc<QuantConfig>,
     state: Option<JobState>,
 }
 
@@ -136,22 +146,35 @@ impl BatchJob {
         self.bucket
     }
 
+    /// Serving config id this batch executes under.
+    pub fn config_id(&self) -> u32 {
+        self.config
+    }
+
+    /// Config-table version resolved at dispatch time.
+    pub fn config_version(&self) -> u64 {
+        self.version
+    }
+
+    /// The quantization configuration this batch executes under.
+    pub fn config(&self) -> &QuantConfig {
+        &self.cfg
+    }
+
     /// Deliver a flat output vector covering all `bucket()` rows (or an
     /// execution error) to every requester.
     pub fn complete(mut self, result: Result<Vec<f32>>) {
         self.finish(result);
     }
 
-    /// Run the real serving path: pad to the bucket, execute the `logits`
-    /// graph, scatter per-request outputs.
-    pub fn run_logits(
-        self,
-        pipeline: &mut crate::coordinator::Pipeline,
-        cfg: &crate::quant::QuantConfig,
-    ) {
-        let x_shape = pipeline.artifacts.manifest.x_shape.clone();
-        let padded = super::pad_batch(self.xs(), &x_shape, self.bucket());
-        let result = pipeline.logits(cfg, &padded);
+    /// Run the real serving path: assemble the batch zero-copy in the
+    /// pipeline's arena, execute the `logits` graph under this job's
+    /// config (bits buffers cached per `(config, version)` on the
+    /// worker), scatter per-request outputs.
+    pub fn run_logits(self, pipeline: &mut crate::coordinator::Pipeline) {
+        let key = (self.config, self.version);
+        let cfg = self.cfg.clone();
+        let result = pipeline.logits_rows(key, &cfg, self.xs(), self.bucket());
         self.complete(result);
     }
 
@@ -176,6 +199,7 @@ impl BatchJob {
         // Record before answering: a caller that reads `stats()` the
         // moment its response arrives must already see this batch.
         st.recorder.record_batch(st.worker, &lats, errors);
+        st.recorder.note_config(self.config, st.resp.len());
         match result {
             Ok(flat) => {
                 let per = flat.len() / self.bucket.max(1);
@@ -214,6 +238,9 @@ pub(crate) struct Dispatcher<B: ServingBackend> {
     pub queue: Arc<SubmitQueue>,
     pub recorder: Arc<ServeRecorder>,
     pub gate: Arc<InflightGate>,
+    /// Serving config table; each batch resolves its `(version, config)`
+    /// here at dispatch time, so a swap retargets only later batches.
+    pub table: Arc<ConfigTable>,
     /// Normalized ascending compiled batch sizes.
     pub sizes: Vec<usize>,
     /// Max live requests folded into one batch.
@@ -235,15 +262,15 @@ impl<B: ServingBackend> Dispatcher<B> {
             }
         }
         let _guard = FailPending(self.queue.clone());
-        while let Some(batch) = self.queue.next_batch(self.batch_cap, self.max_wait) {
-            self.dispatch(batch);
+        while let Some((config, batch)) = self.queue.next_batch(self.batch_cap, self.max_wait) {
+            self.dispatch(config, batch);
         }
         // Queue closed and drained. Dropping the backend joins the worker
         // threads after their channels drain, so in-flight batches still
         // complete before the dispatcher thread (and thus `join`) returns.
     }
 
-    fn dispatch(&mut self, batch: Vec<Request>) {
+    fn dispatch(&mut self, config: u32, batch: Vec<Request>) {
         let worker = self.gate.acquire();
         // The gate may have blocked on saturated workers; re-check
         // deadlines so stale requests are answered, not executed.
@@ -267,9 +294,15 @@ impl<B: ServingBackend> Dispatcher<B> {
             xs.push(req.x);
             resp.push((req.resp, req.enqueued, req.deadline));
         }
+        // Resolve the config NOW: the batch is pinned to this version for
+        // its whole life, so a concurrent swap never retargets it.
+        let (version, cfg) = self.table.resolve(config);
         let job = BatchJob {
             xs,
             bucket,
+            config,
+            version,
+            cfg,
             state: Some(JobState {
                 resp,
                 worker,

@@ -1,4 +1,4 @@
-//! Multi-worker batching inference server over a quantized model.
+//! Multi-worker batching inference server over quantized models.
 //!
 //! The paper motivates mixed-precision PTQ with serving latency/QoS; this
 //! module closes the loop by serving the quantized model from the Rust hot
@@ -10,16 +10,31 @@
 //!
 //! 1. **Admission** ([`queue`]): a bounded submission queue; a full queue
 //!    rejects immediately with an error instead of blocking or growing.
-//! 2. **Batching** ([`dispatch`]): the dispatcher collects requests until
-//!    `max_batch` or `max_wait` elapses, expires requests past their
-//!    deadline (they are answered, never executed), picks the smallest
-//!    compiled batch-size bucket covering the batch, and fans it to the
-//!    least-loaded worker. In-flight batches per worker are bounded, so
-//!    backpressure lands in the submission queue where admission control
-//!    and deadlines are enforced.
-//! 3. **Execution**: the worker pads the batch to its bucket, runs the
-//!    `logits` graph once, scatters per-request outputs, and records
-//!    latency into its own stats shard ([`stats`] — bounded memory).
+//!    Requests carry a priority (higher pops first, FIFO among equals)
+//!    and a serving-config id; the queue holds one priority heap per
+//!    config so a batch is always formed from a single config.
+//! 2. **Batching** ([`dispatch`]): the dispatcher collects same-config
+//!    requests until `max_batch` or `max_wait` elapses, expires requests
+//!    past their deadline (they are answered, never executed), picks the
+//!    smallest compiled batch-size bucket covering the batch, resolves
+//!    the config id against the versioned [`ConfigTable`], and fans the
+//!    batch to the least-loaded worker. In-flight batches per worker are
+//!    bounded, so backpressure lands in the submission queue where
+//!    admission control and deadlines are enforced.
+//! 3. **Execution**: the worker assembles the batch **zero-copy** in its
+//!    pipeline's retained [`crate::runtime::BatchArena`] (each request
+//!    payload is written exactly once; no per-request `to_vec`, no
+//!    per-batch concatenation), runs the `logits` graph once under the
+//!    batch's config — bits buffers are uploaded once per
+//!    `(config, version)` and reused — scatters per-request outputs, and
+//!    records latency into its own stats shard ([`stats`]).
+//!
+//! Multi-config serving: [`serve_multi_with_pool`] serves several
+//! [`QuantConfig`]s (e.g. per-tenant frontier picks) from ONE warm pool.
+//! [`ServerHandle::swap_config`] replaces a config **drain-free**: the
+//! table entry's version is bumped, new admissions resolve to the new
+//! configuration, and in-flight batches finish under the version they
+//! resolved at dispatch time — no request is dropped or retargeted.
 //!
 //! Shutdown: [`ServerHandle::shutdown`] (or dropping the last handle)
 //! closes the queue; the dispatcher drains everything already admitted,
@@ -30,18 +45,21 @@
 //! takes a uniform `--bits` width or resolves `--frontier f.json --pick
 //! latency<=B,acc>=F` through [`crate::api::FrontierArtifact::pick`] —
 //! the best Pareto point under the constraints, read straight from the
-//! frontier artifact with no search at serve time. The engine itself is
-//! config-agnostic: it serves whatever [`QuantConfig`] it is handed.
+//! frontier artifact with no search at serve time (`--tenants` resolves
+//! one pick per tenant into a multi-config table). The engine itself is
+//! config-agnostic: it serves whatever [`QuantConfig`]s it is handed.
 
 mod dispatch;
 mod queue;
 mod stats;
 
 pub use dispatch::{BatchJob, ServingBackend};
-pub use stats::{LatencyRing, ServeRecorder, ServeStats, WorkerStats, DEFAULT_LATENCY_SAMPLES};
+pub use stats::{
+    ConfigStats, LatencyRing, ServeRecorder, ServeStats, WorkerStats, DEFAULT_LATENCY_SAMPLES,
+};
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{Pipeline, PipelinePool};
@@ -86,6 +104,97 @@ impl Default for ServeOptions {
     }
 }
 
+/// How a request's deadline is derived ([`InferOptions::deadline`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum DeadlinePolicy {
+    /// Use the server's default deadline ([`ServeOptions::deadline`]).
+    #[default]
+    Server,
+    /// No deadline, even if the server has a default.
+    None,
+    /// Deadline this long after submission.
+    After(Duration),
+}
+
+/// Per-request options for [`ServerHandle::infer_with`].
+#[derive(Debug, Clone, Default)]
+pub struct InferOptions {
+    pub deadline: DeadlinePolicy,
+    /// Higher pops first; FIFO among equals. Default 0.
+    pub priority: i32,
+    /// Serving config id; `None` routes to the server's active config.
+    pub config: Option<u32>,
+}
+
+/// Versioned serving-config table — the source of truth for config-keyed
+/// dispatch. Entry `id` holds `(version, config)`; [`ConfigTable::swap`]
+/// bumps the version so worker-side cached bits buffers (keyed by
+/// `(id, version)`) can never answer for the new configuration, while
+/// batches already dispatched keep the `Arc` they resolved — which is
+/// what makes a swap drain-free.
+pub(crate) struct ConfigTable {
+    entries: Mutex<Vec<(u64, Arc<QuantConfig>)>>,
+    /// Default config for requests that don't pick one.
+    active: AtomicU32,
+}
+
+impl ConfigTable {
+    fn new(configs: Vec<QuantConfig>) -> Self {
+        Self {
+            entries: Mutex::new(configs.into_iter().map(|c| (0, Arc::new(c))).collect()),
+            active: AtomicU32::new(0),
+        }
+    }
+
+    /// The `(version, config)` currently installed for `id`, resolved at
+    /// dispatch time; ids are validated at admission.
+    pub fn resolve(&self, id: u32) -> (u64, Arc<QuantConfig>) {
+        let entries = self.entries.lock().unwrap();
+        let e = &entries[(id as usize).min(entries.len() - 1)];
+        (e.0, e.1.clone())
+    }
+
+    fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    fn active(&self) -> u32 {
+        self.active.load(Ordering::Relaxed)
+    }
+
+    /// Replace entry `id`, bumping its version. The layer count must
+    /// match the table's existing configs (same model).
+    fn swap(&self, id: u32, cfg: QuantConfig) -> Result<u64> {
+        let mut entries = self.entries.lock().unwrap();
+        let n = entries.len();
+        let e = entries
+            .get_mut(id as usize)
+            .ok_or_else(|| anyhow::anyhow!("unknown serving config {id} ({n} configs)"))?;
+        anyhow::ensure!(
+            cfg.num_layers() == e.1.num_layers(),
+            "config swap layer mismatch: {} vs {}",
+            cfg.num_layers(),
+            e.1.num_layers()
+        );
+        e.0 += 1;
+        e.1 = Arc::new(cfg);
+        Ok(e.0)
+    }
+
+    /// Append a new config; returns its id.
+    fn add(&self, cfg: QuantConfig) -> Result<u32> {
+        let mut entries = self.entries.lock().unwrap();
+        anyhow::ensure!(
+            cfg.num_layers() == entries[0].1.num_layers(),
+            "added config layer mismatch: {} vs {}",
+            cfg.num_layers(),
+            entries[0].1.num_layers()
+        );
+        entries.push((0, Arc::new(cfg)));
+        Ok((entries.len() - 1) as u32)
+    }
+}
+
 /// Closes the submission queue when the last handle clone drops, so a
 /// leaked server cannot outlive its clients.
 struct HandleToken {
@@ -103,6 +212,7 @@ impl Drop for HandleToken {
 pub struct ServerHandle {
     queue: Arc<SubmitQueue>,
     recorder: Arc<ServeRecorder>,
+    table: Arc<ConfigTable>,
     deadline: Option<Duration>,
     shut: Arc<AtomicBool>,
     _token: Arc<HandleToken>,
@@ -110,10 +220,10 @@ pub struct ServerHandle {
 
 impl ServerHandle {
     /// Submit one example (leading dim == 1) with the server's default
-    /// deadline; blocks until its predictions (or an admission/deadline/
-    /// execution error) return.
+    /// deadline, priority 0, and the active config; blocks until its
+    /// predictions (or an admission/deadline/execution error) return.
     pub fn infer(&self, x: HostTensor) -> Result<Vec<f32>> {
-        self.infer_with_deadline(x, self.deadline)
+        self.infer_with(x, &InferOptions::default())
     }
 
     /// Submit with an explicit deadline override (`None` = no deadline).
@@ -122,6 +232,27 @@ impl ServerHandle {
         x: HostTensor,
         deadline: Option<Duration>,
     ) -> Result<Vec<f32>> {
+        let deadline = match deadline {
+            Some(d) => DeadlinePolicy::After(d),
+            None => DeadlinePolicy::None,
+        };
+        self.infer_with(x, &InferOptions { deadline, ..InferOptions::default() })
+    }
+
+    /// Submit with full per-request options: deadline policy, priority,
+    /// and serving-config routing.
+    pub fn infer_with(&self, x: HostTensor, opts: &InferOptions) -> Result<Vec<f32>> {
+        let deadline = match opts.deadline {
+            DeadlinePolicy::Server => self.deadline,
+            DeadlinePolicy::None => None,
+            DeadlinePolicy::After(d) => Some(d),
+        };
+        let config = opts.config.unwrap_or_else(|| self.table.active());
+        anyhow::ensure!(
+            (config as usize) < self.table.len(),
+            "unknown serving config {config} ({} configs)",
+            self.table.len()
+        );
         let (tx, rx) = mpsc::channel();
         let now = Instant::now();
         self.queue.push(Request {
@@ -129,8 +260,34 @@ impl ServerHandle {
             resp: tx,
             enqueued: now,
             deadline: deadline.map(|d| now + d),
+            priority: opts.priority,
+            config,
         })?;
         rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))?
+    }
+
+    /// Drain-free config replacement: bump config `id` to `cfg`. Requests
+    /// admitted after this call execute under `cfg`; batches already
+    /// dispatched finish under the configuration they resolved — nothing
+    /// is dropped or retargeted. Returns the new table version for `id`.
+    pub fn swap_config(&self, id: u32, cfg: QuantConfig) -> Result<u64> {
+        self.table.swap(id, cfg)
+    }
+
+    /// Add a serving config to the table; returns its id for
+    /// [`InferOptions::config`] routing.
+    pub fn add_config(&self, cfg: QuantConfig) -> Result<u32> {
+        self.table.add(cfg)
+    }
+
+    /// The config id requests route to when they don't pick one.
+    pub fn active_config(&self) -> u32 {
+        self.table.active()
+    }
+
+    /// Number of configs in the serving table.
+    pub fn num_configs(&self) -> usize {
+        self.table.len()
     }
 
     /// Merged snapshot of serving statistics.
@@ -157,24 +314,39 @@ impl ServerHandle {
     }
 }
 
-/// Start the serving engine over an already-built backend. Exposed so
-/// integration tests and benches can drive the dispatcher against stub
-/// workers without artifacts or a PJRT device.
+/// Start the serving engine over an already-built backend with a
+/// single-entry config table. Exposed so integration tests and benches
+/// can drive the dispatcher against stub workers without artifacts or a
+/// PJRT device (stub backends never read the config, so a placeholder is
+/// installed).
 pub fn serve_with_backend<B: ServingBackend>(
     backend: B,
     opts: &ServeOptions,
 ) -> Result<(ServerHandle, std::thread::JoinHandle<()>)> {
+    serve_multi_with_backend(backend, vec![QuantConfig::float(0)], opts)
+}
+
+/// [`serve_with_backend`] with an explicit multi-config table: entry `i`
+/// serves requests routed to config id `i`.
+pub fn serve_multi_with_backend<B: ServingBackend>(
+    backend: B,
+    configs: Vec<QuantConfig>,
+    opts: &ServeOptions,
+) -> Result<(ServerHandle, std::thread::JoinHandle<()>)> {
+    anyhow::ensure!(!configs.is_empty(), "serving needs at least one config");
     let sizes = dispatch::normalize_batch_sizes(&backend.batch_sizes())?;
     let workers = backend.num_workers().max(1);
     let batch_cap = opts.max_batch.max(1).min(*sizes.last().expect("non-empty"));
     let queue = Arc::new(SubmitQueue::new(opts.queue_depth));
     let recorder = Arc::new(ServeRecorder::new(workers, opts.latency_samples));
     let gate = Arc::new(InflightGate::new(workers, opts.max_inflight));
+    let table = Arc::new(ConfigTable::new(configs));
     let dispatcher = Dispatcher {
         backend,
         queue: queue.clone(),
         recorder: recorder.clone(),
         gate,
+        table: table.clone(),
         sizes,
         batch_cap,
         max_wait: opts.max_wait,
@@ -185,6 +357,7 @@ pub fn serve_with_backend<B: ServingBackend>(
     let handle = ServerHandle {
         queue: queue.clone(),
         recorder,
+        table,
         deadline: opts.deadline,
         shut: Arc::new(AtomicBool::new(false)),
         _token: Arc::new(HandleToken { queue }),
@@ -194,9 +367,10 @@ pub fn serve_with_backend<B: ServingBackend>(
 
 /// [`ServingBackend`] over a [`PipelinePool`]: one device pipeline per
 /// worker thread, batches executed via the pool's per-worker submission.
+/// Each [`BatchJob`] carries its own resolved config, so the backend is
+/// config-agnostic.
 struct PoolBackend {
     pool: PipelinePool,
-    cfg: QuantConfig,
 }
 
 impl ServingBackend for PoolBackend {
@@ -209,9 +383,8 @@ impl ServingBackend for PoolBackend {
     }
 
     fn submit(&mut self, w: usize, job: BatchJob) {
-        let cfg = self.cfg.clone();
         self.pool.run_on(w, move |p| match p {
-            Some(pipeline) => job.run_logits(pipeline, &cfg),
+            Some(pipeline) => job.run_logits(pipeline),
             None => job.complete(Err(anyhow::anyhow!("serving worker exited"))),
         });
     }
@@ -228,10 +401,22 @@ pub fn serve_with_pool(
     cfg: QuantConfig,
     opts: ServeOptions,
 ) -> Result<(ServerHandle, std::thread::JoinHandle<()>)> {
+    serve_multi_with_pool(pool, vec![cfg], opts)
+}
+
+/// [`serve_with_pool`] with a multi-config table: all configs (e.g. one
+/// frontier pick per tenant) are served from the SAME warm pool, batched
+/// separately and routed by [`InferOptions::config`].
+pub fn serve_multi_with_pool(
+    pool: PipelinePool,
+    configs: Vec<QuantConfig>,
+    opts: ServeOptions,
+) -> Result<(ServerHandle, std::thread::JoinHandle<()>)> {
+    anyhow::ensure!(!configs.is_empty(), "serving needs at least one config");
     let (tx, rx) = mpsc::channel::<Result<()>>();
     for w in 0..pool.num_workers() {
         let tx = tx.clone();
-        let warm_cfg = cfg.clone();
+        let warm_cfg = configs[0].clone();
         pool.run_on(w, move |p| {
             let result = match p {
                 Some(pipeline) => pipeline
@@ -246,7 +431,7 @@ pub fn serve_with_pool(
     for result in rx {
         result?;
     }
-    serve_with_backend(PoolBackend { pool, cfg }, &opts)
+    serve_multi_with_backend(PoolBackend { pool }, configs, &opts)
 }
 
 /// Spawn the serving engine: build `opts.workers` pipelines for `model`
@@ -269,41 +454,44 @@ pub fn spawn(
         // Warm every serving-batch executable before taking traffic.
         p.warm_logits(&warm_cfg)
     })?;
-    serve_with_backend(PoolBackend { pool, cfg }, &opts)
+    serve_multi_with_backend(PoolBackend { pool }, vec![cfg], &opts)
 }
 
 /// Stack examples (leading dim 1 each, trailing dims `x_shape`) and
-/// zero-pad to `batch` rows.
-pub(crate) fn pad_batch(examples: &[HostTensor], x_shape: &[usize], batch: usize) -> HostTensor {
+/// zero-pad to `batch` rows, allocating a fresh owned tensor.
+///
+/// This is the **reference copy path**: the serving hot path assembles
+/// batches zero-copy through [`crate::runtime::BatchArena`] instead, and
+/// the parity tests + `serve_throughput` bench compare the two
+/// element-for-element.
+pub fn pad_batch(examples: &[HostTensor], x_shape: &[usize], batch: usize) -> HostTensor {
     debug_assert!(!examples.is_empty() && examples.len() <= batch);
     let per: usize = x_shape.iter().product::<usize>().max(1);
     let mut dims = vec![batch];
     dims.extend(x_shape);
-    match examples[0] {
-        HostTensor::F32 { .. } => {
-            let mut data = vec![0.0f32; batch * per];
-            for (i, e) in examples.iter().enumerate() {
-                if let HostTensor::F32 { data: d, .. } = e {
-                    data[i * per..(i + 1) * per].copy_from_slice(d);
-                }
+    if examples[0].is_i32() {
+        let mut data = vec![0i32; batch * per];
+        for (i, e) in examples.iter().enumerate() {
+            if let Some(d) = e.i32_data() {
+                data[i * per..(i + 1) * per].copy_from_slice(d);
             }
-            HostTensor::f32(data, dims)
         }
-        HostTensor::I32 { .. } => {
-            let mut data = vec![0i32; batch * per];
-            for (i, e) in examples.iter().enumerate() {
-                if let HostTensor::I32 { data: d, .. } = e {
-                    data[i * per..(i + 1) * per].copy_from_slice(d);
-                }
+        HostTensor::i32(data, dims)
+    } else {
+        let mut data = vec![0.0f32; batch * per];
+        for (i, e) in examples.iter().enumerate() {
+            if let Some(d) = e.f32_data() {
+                data[i * per..(i + 1) * per].copy_from_slice(d);
             }
-            HostTensor::i32(data, dims)
         }
+        HostTensor::f32(data, dims)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::{BatchArena, TensorData};
 
     #[test]
     fn pad_batch_zero_fills_tail_rows() {
@@ -311,11 +499,53 @@ mod tests {
         let b = HostTensor::f32(vec![3.0, 4.0], vec![1, 2]);
         let padded = pad_batch(&[a, b], &[2], 4);
         assert_eq!(padded.dims(), &[4, 2]);
-        match padded {
-            HostTensor::F32 { data, .. } => {
-                assert_eq!(data, vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(padded.f32_data().unwrap(), &[1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn arena_assembly_matches_pad_batch_exactly() {
+        // The zero-copy path must be byte-identical to the reference copy
+        // path for every fill level of every bucket.
+        let x_shape = [3usize];
+        let mut arena = BatchArena::new();
+        for bucket in [1usize, 2, 4, 8] {
+            for fill in 1..=bucket {
+                let examples: Vec<HostTensor> = (0..fill)
+                    .map(|i| {
+                        let base = (bucket * 100 + i) as f32;
+                        HostTensor::f32(vec![base, base + 0.5, -base], vec![1, 3])
+                    })
+                    .collect();
+                let padded = pad_batch(&examples, &x_shape, bucket);
+                let view = arena.assemble(&examples, &x_shape, bucket);
+                assert_eq!(view.dims(), padded.dims());
+                match view.data() {
+                    TensorData::F32(d) => assert_eq!(d, padded.f32_data().unwrap()),
+                    TensorData::I32(_) => panic!("dtype follows the examples"),
+                }
             }
-            _ => panic!("dtype follows the examples"),
         }
+    }
+
+    #[test]
+    fn config_table_swap_bumps_version_and_checks_layers() {
+        let table = ConfigTable::new(vec![QuantConfig::uniform(4, 8.0)]);
+        let (v0, c0) = table.resolve(0);
+        assert_eq!(v0, 0);
+        assert_eq!(c0.bits_w[0], 8.0);
+        let v1 = table.swap(0, QuantConfig::uniform(4, 4.0)).unwrap();
+        assert_eq!(v1, 1);
+        let (v, c) = table.resolve(0);
+        assert_eq!((v, c.bits_w[0]), (1, 4.0));
+        // Wrong layer count and unknown id are rejected.
+        assert!(table.swap(0, QuantConfig::uniform(3, 4.0)).is_err());
+        assert!(table.swap(7, QuantConfig::uniform(4, 4.0)).is_err());
+        // Adding starts the new entry at version 0.
+        let id = table.add(QuantConfig::uniform(4, 2.0)).unwrap();
+        assert_eq!(id, 1);
+        assert_eq!(table.resolve(1).0, 0);
+        assert!(table.add(QuantConfig::uniform(5, 2.0)).is_err());
+        assert_eq!(table.len(), 2);
+        assert_eq!(table.active(), 0);
     }
 }

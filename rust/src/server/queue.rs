@@ -1,16 +1,24 @@
-//! Bounded submission queue with admission control and per-request
-//! deadlines.
+//! Bounded submission queue with admission control, per-request priority
+//! and deadlines, and config-keyed batch formation.
 //!
 //! Producers ([`crate::server::ServerHandle::infer`]) push under a mutex
 //! and are *never* blocked by a full queue — admission control answers
 //! immediately with a queue-full error so callers can shed load or retry.
 //! The single dispatcher consumes via [`SubmitQueue::next_batch`], which
 //! blocks for the first live request and then gathers more until the
-//! batch cap or the formation wait elapses. Requests whose deadline has
-//! already passed are answered with a deadline error during the pop, so
-//! they never occupy a batch slot.
+//! batch cap or the formation wait elapses.
+//!
+//! Ordering: requests are held in one binary heap per serving config,
+//! popped highest [`Request::priority`] first with FIFO tie-break (a
+//! global admission sequence number), so equal-priority traffic keeps the
+//! old strict arrival order. A batch is always formed from a **single**
+//! config's heap — two configs are never co-batched, which is what lets
+//! the execution path bind one bits table per batch. Requests whose
+//! deadline has already passed are answered with a deadline error during
+//! the pop, so they never occupy a batch slot.
 
-use std::collections::VecDeque;
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Condvar, Mutex};
@@ -27,11 +35,55 @@ pub(crate) struct Request {
     pub enqueued: Instant,
     /// Absolute deadline; expired requests are answered with an error.
     pub deadline: Option<Instant>,
+    /// Higher pops first; FIFO among equals. Default 0.
+    pub priority: i32,
+    /// Serving config id (index into the server's config table).
+    pub config: u32,
+}
+
+/// Heap entry: a request plus its admission sequence number. Max-heap
+/// order is `(priority, Reverse(seq))` — highest priority first, oldest
+/// first among equals.
+struct Queued {
+    req: Request,
+    seq: u64,
+}
+
+impl Queued {
+    fn rank(&self) -> (i32, std::cmp::Reverse<u64>) {
+        (self.req.priority, std::cmp::Reverse(self.seq))
+    }
+}
+
+impl PartialEq for Queued {
+    fn eq(&self, other: &Self) -> bool {
+        self.rank() == other.rank()
+    }
+}
+
+impl Eq for Queued {}
+
+impl PartialOrd for Queued {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Queued {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        self.rank().cmp(&other.rank())
+    }
 }
 
 #[derive(Default)]
 struct State {
-    queue: VecDeque<Request>,
+    /// One priority heap per config id (index == id; grown lazily as
+    /// configs are first seen).
+    queues: Vec<BinaryHeap<Queued>>,
+    /// Total queued requests across all configs.
+    len: usize,
+    /// Global admission counter — the FIFO tie-break.
+    seq: u64,
     closed: bool,
     max_depth: usize,
 }
@@ -58,18 +110,26 @@ impl SubmitQueue {
     }
 
     /// Admit a request, or answer immediately: queue-full rejections and
-    /// submissions after shutdown never block the caller.
+    /// submissions after shutdown never block the caller. The capacity
+    /// bound is global across configs.
     pub fn push(&self, req: Request) -> Result<()> {
         let mut state = self.state.lock().unwrap();
         if state.closed {
             anyhow::bail!("server stopped");
         }
-        if state.queue.len() >= self.capacity {
+        if state.len >= self.capacity {
             self.rejected.fetch_add(1, Ordering::Relaxed);
-            anyhow::bail!("server queue full ({} pending)", state.queue.len());
+            anyhow::bail!("server queue full ({} pending)", state.len);
         }
-        state.queue.push_back(req);
-        state.max_depth = state.max_depth.max(state.queue.len());
+        let ci = req.config as usize;
+        while state.queues.len() <= ci {
+            state.queues.push(BinaryHeap::new());
+        }
+        let seq = state.seq;
+        state.seq += 1;
+        state.queues[ci].push(Queued { req, seq });
+        state.len += 1;
+        state.max_depth = state.max_depth.max(state.len);
         drop(state);
         self.cond.notify_one();
         Ok(())
@@ -89,9 +149,12 @@ impl SubmitQueue {
     pub fn fail_pending(&self, msg: &str) {
         let mut state = self.state.lock().unwrap();
         state.closed = true;
-        while let Some(req) = state.queue.pop_front() {
-            let _ = req.resp.send(Err(anyhow::anyhow!("{msg}")));
+        for heap in &mut state.queues {
+            for q in heap.drain() {
+                let _ = q.req.resp.send(Err(anyhow::anyhow!("{msg}")));
+            }
         }
+        state.len = 0;
         drop(state);
         self.cond.notify_all();
     }
@@ -113,38 +176,73 @@ impl SubmitQueue {
         )));
     }
 
-    /// Pop the oldest request whose deadline has not passed, expiring the
-    /// rest. `None` when the queue is momentarily empty.
-    fn pop_live(&self, state: &mut State) -> Option<Request> {
+    /// Pop config `ci`'s best live request — highest priority, FIFO among
+    /// equals — expiring dead heads on the way. `None` when that config's
+    /// heap is momentarily empty.
+    fn pop_live_for(&self, state: &mut State, ci: usize) -> Option<Request> {
         let now = Instant::now();
-        while let Some(req) = state.queue.pop_front() {
-            if req.deadline.is_some_and(|d| d <= now) {
-                self.expire(req);
+        while let Some(q) = state.queues[ci].pop() {
+            state.len -= 1;
+            if q.req.deadline.is_some_and(|d| d <= now) {
+                self.expire(q.req);
                 continue;
             }
-            return Some(req);
+            return Some(q.req);
         }
         None
     }
 
-    /// Block for the first live request, then gather up to `max` total
-    /// until `max_wait` elapses. Returns `None` once the queue is closed
-    /// *and* drained — the dispatcher's exit condition.
-    pub fn next_batch(&self, max: usize, max_wait: Duration) -> Option<Vec<Request>> {
+    /// Pop the globally best live request and its config: the winning
+    /// head across all config heaps by `(priority, admission order)`.
+    /// Expired heads are answered and the choice re-made — an expiry can
+    /// hand the win to another config.
+    fn pop_best_live(&self, state: &mut State) -> Option<(u32, Request)> {
+        loop {
+            let mut best: Option<(usize, (i32, std::cmp::Reverse<u64>))> = None;
+            for (ci, heap) in state.queues.iter().enumerate() {
+                if let Some(head) = heap.peek() {
+                    let rank = head.rank();
+                    let better = match &best {
+                        Some((_, b)) => rank > *b,
+                        None => true,
+                    };
+                    if better {
+                        best = Some((ci, rank));
+                    }
+                }
+            }
+            let (ci, _) = best?;
+            let q = state.queues[ci].pop().expect("peeked above");
+            state.len -= 1;
+            if q.req.deadline.is_some_and(|d| d <= Instant::now()) {
+                self.expire(q.req);
+                continue;
+            }
+            return Some((ci as u32, q.req));
+        }
+    }
+
+    /// Block for the first live request, then gather up to `max` total —
+    /// all from the same config — until `max_wait` elapses. Returns the
+    /// batch together with the config id it was formed for, or `None`
+    /// once the queue is closed *and* drained — the dispatcher's exit
+    /// condition.
+    pub fn next_batch(&self, max: usize, max_wait: Duration) -> Option<(u32, Vec<Request>)> {
         let mut state = self.state.lock().unwrap();
-        let first = loop {
-            if let Some(req) = self.pop_live(&mut state) {
-                break req;
+        let (config, first) = loop {
+            if let Some(hit) = self.pop_best_live(&mut state) {
+                break hit;
             }
             if state.closed {
                 return None;
             }
             state = self.cond.wait(state).unwrap();
         };
+        let ci = config as usize;
         let formed_by = Instant::now() + max_wait;
         let mut batch = vec![first];
         while batch.len() < max {
-            if let Some(req) = self.pop_live(&mut state) {
+            if let Some(req) = self.pop_live_for(&mut state, ci) {
                 batch.push(req);
                 continue;
             }
@@ -160,7 +258,7 @@ impl SubmitQueue {
             if timeout.timed_out() {
                 // One final sweep for anything that raced the timeout.
                 while batch.len() < max {
-                    match self.pop_live(&mut state) {
+                    match self.pop_live_for(&mut state, ci) {
                         Some(req) => batch.push(req),
                         None => break,
                     }
@@ -168,7 +266,7 @@ impl SubmitQueue {
                 break;
             }
         }
-        Some(batch)
+        Some((config, batch))
     }
 
     /// Admissions rejected because the queue was full.
@@ -192,12 +290,22 @@ mod tests {
     use super::*;
 
     fn req(deadline: Option<Instant>) -> (Request, mpsc::Receiver<Result<Vec<f32>>>) {
+        req_full(deadline, 0, 0)
+    }
+
+    fn req_full(
+        deadline: Option<Instant>,
+        priority: i32,
+        config: u32,
+    ) -> (Request, mpsc::Receiver<Result<Vec<f32>>>) {
         let (tx, rx) = mpsc::channel();
         let r = Request {
             x: HostTensor::f32(vec![0.0], vec![1, 1]),
             resp: tx,
             enqueued: Instant::now(),
             deadline,
+            priority,
+            config,
         };
         (r, rx)
     }
@@ -227,7 +335,8 @@ mod tests {
         let (c, _rc) = req(None);
         assert!(format!("{:#}", q.push(c).unwrap_err()).contains("stopped"));
         // Queued-before-close requests still come out, then None.
-        let batch = q.next_batch(8, Duration::from_millis(1)).unwrap();
+        let (config, batch) = q.next_batch(8, Duration::from_millis(1)).unwrap();
+        assert_eq!(config, 0);
         assert_eq!(batch.len(), 2);
         assert!(q.next_batch(8, Duration::from_millis(1)).is_none());
     }
@@ -240,7 +349,7 @@ mod tests {
         let (b, _rb) = req(None);
         q.push(a).unwrap();
         q.push(b).unwrap();
-        let batch = q.next_batch(8, Duration::from_millis(1)).unwrap();
+        let (_, batch) = q.next_batch(8, Duration::from_millis(1)).unwrap();
         assert_eq!(batch.len(), 1, "expired request must not occupy a slot");
         assert_eq!(q.expired(), 1);
         let answer = ra.recv().unwrap();
@@ -256,9 +365,44 @@ mod tests {
             q.push(r).unwrap();
             rxs.push(rx);
         }
-        let batch = q.next_batch(3, Duration::from_millis(1)).unwrap();
+        let (_, batch) = q.next_batch(3, Duration::from_millis(1)).unwrap();
         assert_eq!(batch.len(), 3);
-        let batch = q.next_batch(3, Duration::from_millis(1)).unwrap();
+        let (_, batch) = q.next_batch(3, Duration::from_millis(1)).unwrap();
         assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn priority_pops_first_with_fifo_ties() {
+        let q = SubmitQueue::new(16);
+        // Tag each request's payload so pop order is observable.
+        let push = |prio: i32, tag: f32| {
+            let (mut r, rx) = req_full(None, prio, 0);
+            r.x = HostTensor::f32(vec![tag], vec![1, 1]);
+            q.push(r).unwrap();
+            rx
+        };
+        let _rxs = [push(0, 1.0), push(5, 2.0), push(0, 3.0), push(5, 4.0), push(-1, 5.0)];
+        let (_, batch) = q.next_batch(8, Duration::from_millis(1)).unwrap();
+        let order: Vec<f32> = batch.iter().map(|r| r.x.f32_data().unwrap()[0]).collect();
+        // Highest priority first; FIFO among equal priorities.
+        assert_eq!(order, vec![2.0, 4.0, 1.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn batches_never_mix_configs() {
+        let q = SubmitQueue::new(16);
+        let mut rxs = Vec::new();
+        for config in [0u32, 1, 0, 1, 1] {
+            let (r, rx) = req_full(None, 0, config);
+            q.push(r).unwrap();
+            rxs.push(rx);
+        }
+        let (c0, b0) = q.next_batch(8, Duration::from_millis(1)).unwrap();
+        let (c1, b1) = q.next_batch(8, Duration::from_millis(1)).unwrap();
+        assert_ne!(c0, c1, "each call drains exactly one config");
+        let (n0, n1) = if c0 == 0 { (b0.len(), b1.len()) } else { (b1.len(), b0.len()) };
+        assert_eq!((n0, n1), (2, 3));
+        assert!(b0.iter().all(|r| r.config == c0));
+        assert!(b1.iter().all(|r| r.config == c1));
     }
 }

@@ -7,6 +7,7 @@
 //! point-in-time snapshot; percentiles use linear interpolation between
 //! the two nearest ranks (p50 of `[10, 20, 30, 40]` is 25, not 30).
 
+use std::collections::HashMap;
 use std::sync::Mutex;
 
 /// Default total latency-sample capacity across all shards.
@@ -62,6 +63,10 @@ struct Shard {
 #[derive(Debug)]
 pub struct ServeRecorder {
     shards: Vec<Mutex<Shard>>,
+    /// Per-config `(batches, requests)` tallies — off the per-worker
+    /// shards so `record_batch` (and its counters) stay byte-identical
+    /// for single-config serving.
+    per_config: Mutex<HashMap<u32, (usize, usize)>>,
 }
 
 impl ServeRecorder {
@@ -81,7 +86,7 @@ impl ServeRecorder {
                 })
             })
             .collect();
-        Self { shards }
+        Self { shards, per_config: Mutex::new(HashMap::new()) }
     }
 
     /// Record one completed batch on `worker`: per-request latencies plus
@@ -96,6 +101,16 @@ impl ServeRecorder {
         for &l in latencies_us {
             s.latencies.push(l);
         }
+    }
+
+    /// Tally one executed batch against its serving config. Separate from
+    /// [`ServeRecorder::record_batch`] so the per-worker hot-path counters
+    /// are untouched by the multi-config extension.
+    pub fn note_config(&self, config: u32, requests: usize) {
+        let mut m = self.per_config.lock().unwrap();
+        let e = m.entry(config).or_insert((0, 0));
+        e.0 += 1;
+        e.1 += requests;
     }
 
     /// Merge all shards into a snapshot. Admission-side counters (rejects,
@@ -114,8 +129,25 @@ impl ServeRecorder {
                 requests: s.requests,
             });
         }
+        stats.per_config = self
+            .per_config
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(&config, &(batches, requests))| ConfigStats { config, batches, requests })
+            .collect();
+        stats.per_config.sort_by_key(|c| c.config);
         stats
     }
+}
+
+/// Per-config slice of a [`ServeStats`] snapshot (multi-config serving).
+#[derive(Debug, Default, Clone)]
+pub struct ConfigStats {
+    /// Serving config id (index into the server's config table).
+    pub config: u32,
+    pub batches: usize,
+    pub requests: usize,
 }
 
 /// Per-worker slice of a [`ServeStats`] snapshot.
@@ -157,6 +189,9 @@ pub struct ServeStats {
     /// Highest submission-queue depth observed.
     pub max_queue_depth: usize,
     pub per_worker: Vec<WorkerStats>,
+    /// Per-config batch/request tallies, ascending by config id. A single
+    /// entry (config 0) for classic single-config serving.
+    pub per_config: Vec<ConfigStats>,
     latencies_us: Vec<u64>,
 }
 
@@ -246,6 +281,22 @@ mod tests {
         assert_eq!(s.percentile_us(1.0), 60);
         assert_eq!(s.mean_batch_fill(), 2.0);
         assert!((s.mean_us() - 35.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_config_tallies_are_additive() {
+        let rec = ServeRecorder::new(1, 128);
+        rec.record_batch(0, &[10, 20], 0);
+        rec.note_config(1, 2);
+        rec.record_batch(0, &[30], 0);
+        rec.note_config(0, 1);
+        rec.note_config(1, 4);
+        let s = rec.snapshot();
+        // Worker counters are untouched by the per-config tallies.
+        assert_eq!((s.requests, s.batches), (3, 2));
+        let rows: Vec<(u32, usize, usize)> =
+            s.per_config.iter().map(|c| (c.config, c.batches, c.requests)).collect();
+        assert_eq!(rows, vec![(0, 1, 1), (1, 2, 6)]);
     }
 
     #[test]

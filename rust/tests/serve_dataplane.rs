@@ -1,0 +1,337 @@
+//! Data-plane integration tests: config-keyed dispatch (batches never mix
+//! configs), zero-copy batch assembly parity against the reference copy
+//! path, drain-free config swaps under load, and multi-tenant serving
+//! from frontier picks — all over stub backends, so no artifacts or PJRT
+//! device is needed.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::Duration;
+
+use mpq::api::{build_frontier_synthetic, parse_tenants};
+use mpq::coordinator::SearchAlgo;
+use mpq::quant::QuantConfig;
+use mpq::runtime::{BatchArena, HostTensor, TensorData};
+use mpq::server::{
+    pad_batch, serve_multi_with_backend, BatchJob, InferOptions, ServeOptions, ServingBackend,
+};
+use mpq::util::rng::Rng;
+
+/// Stub worker pool: each worker is a plain thread applying `f` to every
+/// job. Dropping blocks until in-flight batches finish — the drain
+/// contract [`ServingBackend`] requires.
+struct StubBackend {
+    txs: Vec<mpsc::Sender<BatchJob>>,
+    joins: Vec<thread::JoinHandle<()>>,
+    sizes: Vec<usize>,
+}
+
+impl StubBackend {
+    fn new<F>(workers: usize, sizes: &[usize], f: F) -> Self
+    where
+        F: Fn(&BatchJob) -> Vec<f32> + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let mut txs = Vec::new();
+        let mut joins = Vec::new();
+        for _ in 0..workers {
+            let (tx, rx) = mpsc::channel::<BatchJob>();
+            let f = f.clone();
+            joins.push(thread::spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    let flat = f(&job);
+                    job.complete(Ok(flat));
+                }
+            }));
+            txs.push(tx);
+        }
+        Self { txs, joins, sizes: sizes.to_vec() }
+    }
+}
+
+impl ServingBackend for StubBackend {
+    fn num_workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.sizes.to_vec()
+    }
+
+    fn submit(&mut self, w: usize, job: BatchJob) {
+        if let Err(mpsc::SendError(job)) = self.txs[w].send(job) {
+            job.complete(Err(anyhow::anyhow!("stub worker gone")));
+        }
+    }
+}
+
+impl Drop for StubBackend {
+    fn drop(&mut self) {
+        self.txs.clear();
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+fn example(v: f32) -> HostTensor {
+    HostTensor::f32(vec![v], vec![1, 1])
+}
+
+/// Join with a watchdog so a drain bug fails the test instead of hanging
+/// the whole suite.
+fn join_within(join: thread::JoinHandle<()>, secs: u64) {
+    let (tx, rx) = mpsc::channel();
+    thread::spawn(move || {
+        let ok = join.join().is_ok();
+        let _ = tx.send(ok);
+    });
+    let ok = rx
+        .recv_timeout(Duration::from_secs(secs))
+        .expect("dispatcher join did not return after shutdown");
+    assert!(ok, "dispatcher panicked");
+}
+
+#[test]
+fn mixed_config_admissions_never_co_batch() {
+    // Every payload encodes its config id as floor(x / 1000): a batch
+    // mixing configs would surface a row whose prefix disagrees with the
+    // job's config id.
+    let violations = Arc::new(AtomicUsize::new(0));
+    let v = violations.clone();
+    let backend = StubBackend::new(2, &[8], move |job: &BatchJob| {
+        let mut flat = vec![0.0f32; job.bucket()];
+        for (i, x) in job.xs().iter().enumerate() {
+            let val = x.f32_data().unwrap()[0];
+            if (val / 1000.0).floor() as u32 != job.config_id() {
+                v.fetch_add(1, Ordering::Relaxed);
+            }
+            flat[i] = val + 0.25;
+        }
+        flat
+    });
+    let configs =
+        vec![QuantConfig::float(2), QuantConfig::uniform(2, 8.0), QuantConfig::uniform(2, 4.0)];
+    let opts = ServeOptions {
+        max_batch: 8,
+        max_wait: Duration::from_micros(500),
+        queue_depth: 1024,
+        ..ServeOptions::default()
+    };
+    let (handle, join) = serve_multi_with_backend(backend, configs, &opts).unwrap();
+
+    // Interleave the three configs in a seeded-random admission order
+    // from several client threads at once.
+    thread::scope(|s| {
+        for t in 0..4u64 {
+            let handle = handle.clone();
+            s.spawn(move || {
+                let mut rng = Rng::seed_from(0xDA7A + t);
+                for i in 0..50u32 {
+                    let config = rng.below(3) as u32;
+                    let val = (config * 1000 + i) as f32;
+                    let opts = InferOptions { config: Some(config), ..InferOptions::default() };
+                    let out = handle.infer_with(example(val), &opts).expect("infer failed");
+                    assert_eq!(out, vec![val + 0.25]);
+                }
+            });
+        }
+    });
+
+    let stats = handle.stats();
+    assert_eq!(stats.requests, 200);
+    assert_eq!(stats.errors, 0);
+    assert_eq!(violations.load(Ordering::Relaxed), 0, "a batch mixed serving configs");
+    assert_eq!(stats.per_config.len(), 3, "all three configs saw traffic");
+    assert_eq!(stats.per_config.iter().map(|c| c.requests).sum::<usize>(), 200);
+
+    handle.shutdown();
+    join_within(join, 10);
+}
+
+#[test]
+fn zero_copy_assembly_matches_copy_path_in_flight() {
+    // For every batch the engine actually forms (whatever its size and
+    // fill), the arena's zero-copy assembly must be byte-identical to the
+    // reference `pad_batch` copy path — at 1, 2, and 8 workers.
+    for workers in [1usize, 2, 8] {
+        let mismatches = Arc::new(AtomicUsize::new(0));
+        let m = mismatches.clone();
+        let backend = StubBackend::new(workers, &[1, 2, 4, 8], move |job: &BatchJob| {
+            let padded = pad_batch(job.xs(), &[1], job.bucket());
+            let mut arena = BatchArena::new();
+            let view = arena.assemble(job.xs(), &[1], job.bucket());
+            let reference = padded.f32_data().unwrap();
+            let zero_copy: &[f32] = match view.data() {
+                TensorData::F32(d) => d,
+                TensorData::I32(_) => &[],
+            };
+            let identical = view.dims() == padded.dims()
+                && reference.len() == zero_copy.len()
+                && reference.iter().zip(zero_copy).all(|(a, b)| a.to_bits() == b.to_bits());
+            if !identical {
+                m.fetch_add(1, Ordering::Relaxed);
+            }
+            zero_copy.iter().map(|v| v * 2.0 + 1.0).collect()
+        });
+        let opts = ServeOptions {
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            queue_depth: 1024,
+            ..ServeOptions::default()
+        };
+        let (handle, join) =
+            serve_multi_with_backend(backend, vec![QuantConfig::float(1)], &opts).unwrap();
+
+        thread::scope(|s| {
+            for t in 0..4i32 {
+                let handle = handle.clone();
+                s.spawn(move || {
+                    for i in 0..25i32 {
+                        let val = (t * 100 + i) as f32;
+                        let out = handle.infer(example(val)).expect("infer failed");
+                        assert_eq!(out, vec![val * 2.0 + 1.0], "workers={workers}");
+                    }
+                });
+            }
+        });
+
+        let stats = handle.stats();
+        assert_eq!(stats.requests, 100, "workers={workers}");
+        assert_eq!(stats.errors, 0, "workers={workers}");
+        assert_eq!(mismatches.load(Ordering::Relaxed), 0, "workers={workers}: assembly diverged");
+
+        handle.shutdown();
+        join_within(join, 10);
+    }
+}
+
+#[test]
+fn config_swap_under_load_drops_nothing() {
+    // Stub output = x * bits_w[0], so every response reveals which
+    // configuration its batch executed under.
+    let backend = StubBackend::new(2, &[4], |job: &BatchJob| {
+        let scale = job.config().bits_w[0];
+        let mut flat = vec![0.0f32; job.bucket()];
+        for (i, x) in job.xs().iter().enumerate() {
+            flat[i] = x.f32_data().unwrap()[0] * scale;
+        }
+        flat
+    });
+    let opts = ServeOptions {
+        max_batch: 4,
+        max_wait: Duration::from_micros(200),
+        queue_depth: 4096,
+        ..ServeOptions::default()
+    };
+    let (handle, join) =
+        serve_multi_with_backend(backend, vec![QuantConfig::uniform(3, 8.0)], &opts).unwrap();
+
+    let answered = AtomicUsize::new(0);
+    let wrong = AtomicUsize::new(0);
+    thread::scope(|s| {
+        for t in 0..4i32 {
+            let handle = handle.clone();
+            let (answered, wrong) = (&answered, &wrong);
+            s.spawn(move || {
+                for i in 0..100i32 {
+                    let v = (t * 1000 + i) as f32 + 1.0;
+                    let out = handle.infer(example(v)).expect("swap must not drop requests");
+                    if out != vec![v * 8.0] && out != vec![v * 4.0] {
+                        wrong.fetch_add(1, Ordering::Relaxed);
+                    }
+                    answered.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+        // Swap mid-stream: batches already dispatched finish on 8-bit,
+        // later admissions resolve 4-bit. No drain, no drops.
+        thread::sleep(Duration::from_millis(5));
+        handle.swap_config(0, QuantConfig::uniform(3, 4.0)).unwrap();
+    });
+    assert_eq!(answered.into_inner(), 400, "every admitted request must be answered");
+    assert_eq!(wrong.into_inner(), 0, "a response matched neither the old nor the new config");
+
+    // Requests admitted after the swap observe the new config only.
+    for i in 0..8i32 {
+        let v = i as f32 + 0.5;
+        assert_eq!(handle.infer(example(v)).unwrap(), vec![v * 4.0]);
+    }
+    let stats = handle.stats();
+    assert_eq!(stats.requests, 408);
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.rejected, 0);
+
+    handle.shutdown();
+    join_within(join, 10);
+}
+
+#[test]
+fn tenant_picks_serve_from_one_engine() {
+    // Build a synthetic frontier, resolve one pick per tenant, and serve
+    // both picked configs from a single engine with per-tenant routing.
+    let report = build_frontier_synthetic(
+        20,
+        7,
+        1,
+        SearchAlgo::Greedy,
+        &[0.9, 0.97, 0.99],
+        None,
+        false,
+        None,
+        None,
+    )
+    .unwrap();
+    let artifact = report.artifact;
+    let tenants = parse_tenants("gold:latency<=1.0;bronze:latency<=0.7").unwrap();
+    let configs: Vec<QuantConfig> =
+        tenants.iter().map(|t| artifact.pick(&t.pick).unwrap().config.clone()).collect();
+    let expect: Vec<u64> = configs.iter().map(QuantConfig::key).collect();
+
+    // The worker sees, per batch, the exact config the tenant's pick
+    // resolved — routing by id must never cross tenants.
+    let mismatched = Arc::new(AtomicUsize::new(0));
+    let m = mismatched.clone();
+    let backend = StubBackend::new(2, &[4], move |job: &BatchJob| {
+        if expect[job.config_id() as usize] != job.config().key() {
+            m.fetch_add(1, Ordering::Relaxed);
+        }
+        vec![job.config_id() as f32 + 0.5; job.bucket()]
+    });
+    let opts = ServeOptions {
+        max_batch: 4,
+        max_wait: Duration::from_micros(200),
+        queue_depth: 1024,
+        ..ServeOptions::default()
+    };
+    let (handle, join) = serve_multi_with_backend(backend, configs, &opts).unwrap();
+    assert_eq!(handle.num_configs(), 2);
+
+    thread::scope(|s| {
+        for tenant in 0..2u32 {
+            let handle = handle.clone();
+            s.spawn(move || {
+                let opts = InferOptions { config: Some(tenant), ..InferOptions::default() };
+                for i in 0..40 {
+                    let out = handle.infer_with(example(i as f32), &opts).unwrap();
+                    assert_eq!(out, vec![tenant as f32 + 0.5], "tenant {tenant} mis-routed");
+                }
+            });
+        }
+    });
+
+    assert_eq!(mismatched.load(Ordering::Relaxed), 0);
+    let stats = handle.stats();
+    let rows: Vec<(u32, usize)> =
+        stats.per_config.iter().map(|c| (c.config, c.requests)).collect();
+    assert_eq!(rows, vec![(0, 40), (1, 40)]);
+    // An out-of-table id is rejected at admission, not at dispatch.
+    let err = handle
+        .infer_with(example(0.0), &InferOptions { config: Some(9), ..InferOptions::default() })
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("unknown serving config"), "{err:#}");
+
+    handle.shutdown();
+    join_within(join, 10);
+}

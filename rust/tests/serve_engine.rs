@@ -16,7 +16,7 @@ use mpq::server::{serve_with_backend, BatchJob, ServeOptions, ServerHandle, Serv
 fn stub_flat(job: &BatchJob) -> Vec<f32> {
     let mut flat = vec![0.0f32; job.bucket()];
     for (i, x) in job.xs().iter().enumerate() {
-        if let HostTensor::F32 { data, .. } = x {
+        if let Some(data) = x.f32_data() {
             flat[i] = data[0] * 2.0 + 1.0;
         }
     }

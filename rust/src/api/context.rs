@@ -25,7 +25,7 @@ use crate::coordinator::{
 use crate::latency::{AccelModel, CostModel, DeployScale, KernelTable};
 use crate::model::Manifest;
 use crate::quant::{AdjustReport, CalibrationOptions, QuantConfig, Scales};
-use crate::sensitivity::{self, MetricKind, NoiseOptions, Sensitivity};
+use crate::sensitivity::{self, InterLayerOptions, MetricKind, NoiseOptions, Sensitivity};
 use crate::Result;
 
 use super::{log_event, BackendSpec, CacheSpec, ObjectiveSpec, ScaleSpec, SearchEvent, SearchSpec};
@@ -74,14 +74,18 @@ pub struct ModelContext {
 
 impl ModelContext {
     /// On-disk sensitivity cache schema version. Bumped to 2 when Hessian
-    /// probes became trial-addressable (`probe_seed(seed, trial)`), and to
-    /// 3 when ε_N perturbations became (layer, trial)-addressable
-    /// (`noise_seed(seed, layer, trial)`): v1/v2 files carry scores drawn
-    /// from a sequentially shared RNG and would order layers differently,
-    /// so they are recomputed rather than trusted — v3 sharded noise
-    /// scores are never mixed with serial-loop files. The version itself
-    /// lives with the cache type ([`sensitivity::ScoreCache::VERSION`]);
-    /// this alias keeps the long-standing `ModelContext` spelling.
+    /// probes became trial-addressable (`probe_seed(seed, trial)`), to 3
+    /// when ε_N perturbations became (layer, trial)-addressable
+    /// (`noise_seed(seed, layer, trial)`), and to 4 when the
+    /// pair-addressed inter-layer metric landed: v1/v2 files carry scores
+    /// drawn from a sequentially shared RNG and would order layers
+    /// differently, so they are recomputed rather than trusted. The v3→v4
+    /// bump changed no existing metric's draws, so the gate is
+    /// per-metric ([`sensitivity::ScoreCache::min_version_for`]): v3
+    /// Hessian/noise/QE files survive the upgrade, only inter-layer
+    /// entries require v4. The version itself lives with the cache type
+    /// ([`sensitivity::ScoreCache::VERSION`]); this alias keeps the
+    /// long-standing `ModelContext` spelling.
     pub const SENS_CACHE_VERSION: usize = sensitivity::ScoreCache::VERSION;
 
     /// Context with default spec settings (A100-like analytical costing,
@@ -392,6 +396,11 @@ impl ModelContext {
             (MetricKind::Noise, Some(pool)) => sensitivity::noise_sensitivity_pooled(
                 pool,
                 &NoiseOptions { trials: trials.max(1), ..Default::default() },
+                seed,
+            )?,
+            (MetricKind::InterLayer, Some(pool)) => sensitivity::interlayer_sensitivity_pooled(
+                pool,
+                &InterLayerOptions { trials: trials.max(1), ..Default::default() },
                 seed,
             )?,
             _ => sensitivity::compute(&mut self.pipeline, metric, trials, seed)?,

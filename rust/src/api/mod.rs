@@ -63,7 +63,7 @@ pub use spec::{
     parse_tenants, BackendSpec, CacheSpec, ObjectiveSpec, ScaleSpec, SearchSpec, TenantSpec,
     DEFAULT_TRIALS,
 };
-pub use synthetic::{SyntheticCost, SyntheticEnv, SyntheticStage};
+pub use synthetic::{synthetic_sensitivity, SyntheticCost, SyntheticEnv, SyntheticStage};
 
 /// The versioned sensitivity score cache lives with the metric code but
 /// is part of the API's cache surface (same idiom as the frontier

@@ -16,10 +16,16 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use crate::coordinator::{EvalResult, StageRunner, SyncSearchEnv};
-use crate::quant::calibrate::{merge_act_stats, BatchGrad, NoiseSample, TraceSample};
-use crate::quant::{QuantConfig, Scales};
-use crate::util::rng::{noise_seed, probe_seed, Rng};
+use crate::coordinator::{
+    hessian_trace_sharded, interlayer_scores_sharded, noise_scores_sharded, EvalResult,
+    StageRunner, SyncSearchEnv,
+};
+use crate::quant::calibrate::{
+    merge_act_stats, pair_at, pair_count, BatchGrad, NoiseSample, PairSample, TraceSample,
+};
+use crate::quant::{eps_qe, QuantConfig, Scales, QUANT_BITS};
+use crate::sensitivity::{InterLayerOptions, MetricKind, NoiseOptions, Sensitivity};
+use crate::util::rng::{noise_seed, pair_seed, probe_seed, Rng};
 use crate::Result;
 
 use super::CostModel;
@@ -283,6 +289,46 @@ impl SyntheticStage {
         let degradation = lambda * (1.0 + layer as f64) * rng.gaussian().abs();
         NoiseSample { item, loss: self.clean_loss() + degradation }
     }
+
+    /// Planted pairwise coupling strength for the inter-layer metric:
+    /// layers 0 and 1 interact strongly, every other pair is independent.
+    /// The coupling is large enough that the cross-layer score must rank
+    /// both coupled layers above the independently-noisier high-index
+    /// layers, while diagonal-only metrics (Hessian/noise) order strictly
+    /// by layer index — an analytically checkable reordering.
+    fn planted_coupling(i: usize, j: usize) -> f64 {
+        let (lo, hi) = if i <= j { (i, j) } else { (j, i) };
+        if (lo, hi) == (0, 1) {
+            8.0
+        } else {
+            0.0
+        }
+    }
+
+    /// One paired-perturbation cell — pure in `(seed, pair, trial)`.
+    /// Diagonal cells (l, l) reproduce a per-layer degradation seeded
+    /// `pair_seed(seed, l, l, trial)`; off-diagonal cells (i, j) add the
+    /// two diagonal degradations (the separable part, which the
+    /// finite-difference interaction cancels exactly) plus the planted
+    /// coupling drawn from the off-diagonal seed.
+    fn pair_item(&self, lambda: f64, trials: usize, seed: u64, item: usize) -> PairSample {
+        Self::spin(self.work);
+        let trials = trials.max(1);
+        let (pair, trial) = (item / trials, item % trials);
+        let (i, j) = pair_at(self.layers, pair);
+        let diag = |l: usize| {
+            let mut rng = Rng::seed_from(pair_seed(seed, l as u64, l as u64, trial as u64));
+            lambda * (1.0 + l as f64) * rng.gaussian().abs()
+        };
+        let loss = if i == j {
+            self.clean_loss() + diag(i)
+        } else {
+            let mut rng = Rng::seed_from(pair_seed(seed, i as u64, j as u64, trial as u64));
+            let interaction = Self::planted_coupling(i, j) * lambda * rng.gaussian().abs();
+            self.clean_loss() + diag(i) + diag(j) + interaction
+        };
+        PairSample { item, loss }
+    }
 }
 
 impl StageRunner for SyntheticStage {
@@ -346,11 +392,80 @@ impl StageRunner for SyntheticStage {
         Ok(self.fan(shards, |item| self.noise_item(lambda, trials, seed, item)))
     }
 
+    fn stage_pair(
+        &mut self,
+        lambda: f64,
+        trials: usize,
+        seed: u64,
+        shards: &[Vec<usize>],
+    ) -> Result<Vec<Vec<PairSample>>> {
+        Ok(self.fan(shards, |item| self.pair_item(lambda, trials, seed, item)))
+    }
+
     fn broadcast_scales(&mut self, scales: &Scales) -> Result<()> {
         self.current = scales.clone();
         self.broadcasts += 1;
         Ok(())
     }
+}
+
+/// Calibration batches behind the synthetic stage runner (sensitivity
+/// probes); results are worker-count-independent, so this is a fixed
+/// constant rather than a caller knob.
+const STAGE_BATCHES: usize = 8;
+
+/// Domain tag for the synthetic ε_QE probe weights, so they never share
+/// a splitmix64 stream with the env/cost/stage constructions.
+const QE_SALT: u64 = 0x9e5a_17_e5;
+
+/// Probe tensor length per layer for the synthetic ε_QE stand-in.
+const QE_PROBE_LEN: usize = 256;
+
+/// The synthetic stand-in for every sensitivity metric: Hessian, noise,
+/// and inter-layer run the real sharded metric drivers over
+/// [`SyntheticStage`] (bit-identical at every worker count); ε_QE scores
+/// seeded per-layer probe tensors with [`eps_qe`] at the harshest
+/// candidate width; random is the paper's uninformed baseline. Shared by
+/// the experiment harness, `mpq search --synthetic --metric`, and the
+/// metric-agreement report, so all three agree byte-for-byte.
+pub fn synthetic_sensitivity(
+    metric: MetricKind,
+    layers: usize,
+    trials: usize,
+    seed: u64,
+    workers: usize,
+) -> Result<Sensitivity> {
+    Ok(match metric {
+        MetricKind::Random => Sensitivity::random(layers, seed),
+        MetricKind::Hessian => {
+            let mut stage = SyntheticStage::new(layers, STAGE_BATCHES, workers, seed);
+            let scores = hessian_trace_sharded(&mut stage, trials, seed)?;
+            Sensitivity::from_scores(MetricKind::Hessian, scores)
+        }
+        MetricKind::Noise => {
+            let mut stage = SyntheticStage::new(layers, STAGE_BATCHES, workers, seed);
+            let lambda = NoiseOptions::default().lambda;
+            let scores = noise_scores_sharded(&mut stage, lambda, trials, seed)?;
+            Sensitivity::from_scores(MetricKind::Noise, scores)
+        }
+        MetricKind::InterLayer => {
+            let mut stage = SyntheticStage::new(layers, STAGE_BATCHES, workers, seed);
+            let lambda = InterLayerOptions::default().lambda;
+            let scores = interlayer_scores_sharded(&mut stage, lambda, trials, seed)?;
+            Sensitivity::from_scores(MetricKind::InterLayer, scores)
+        }
+        MetricKind::Qe => {
+            let probe_bits = QUANT_BITS[QUANT_BITS.len() - 1];
+            let scores = (0..layers)
+                .map(|layer| {
+                    let mut rng = Rng::seed_from(probe_seed(seed ^ QE_SALT, layer as u64));
+                    let w: Vec<f32> = (0..QE_PROBE_LEN).map(|_| rng.gaussian() as f32).collect();
+                    eps_qe(&w, probe_bits)
+                })
+                .collect();
+            Sensitivity::from_scores(MetricKind::Qe, scores)
+        }
+    })
 }
 
 #[cfg(test)]

@@ -39,8 +39,8 @@ pub use parallel::{ParallelEnv, SyncSearchEnv};
 pub use pipeline::{Pipeline, PipelineStats};
 pub use pool::PipelinePool;
 pub use shard::{
-    act_stats_sharded, calibrate_sharded, hessian_trace_sharded, noise_scores_sharded,
-    shard_indices, StageRunner,
+    act_stats_sharded, calibrate_sharded, hessian_trace_sharded, interlayer_reduction_sharded,
+    interlayer_scores_sharded, noise_scores_sharded, shard_indices, StageRunner,
 };
 
 use crate::quant::QuantConfig;

@@ -14,12 +14,12 @@ use std::path::Path;
 use anyhow::{ensure, Context};
 
 use crate::model::ModelArtifacts;
-use crate::quant::calibrate::{BatchGrad, NoiseSample, TraceSample};
+use crate::quant::calibrate::{pair_at, pair_count, BatchGrad, NoiseSample, PairSample, TraceSample};
 use crate::quant::{self, AdjustReport, CalibrationOptions, QuantConfig, Scales};
 use crate::runtime::{
     scalar_f32, vec_f32, BatchArena, Engine, Executable, HostTensor, TensorData, TensorView,
 };
-use crate::util::rng::{noise_seed, probe_seed, Rng};
+use crate::util::rng::{noise_seed, pair_seed, probe_seed, Rng};
 use crate::Result;
 
 use super::shard::{self, StageRunner};
@@ -406,6 +406,34 @@ impl Pipeline {
         Ok(res?.loss)
     }
 
+    /// Mean float calibration loss with *two* parameter tensors temporarily
+    /// replaced — the paired-perturbation inner loop of the inter-layer
+    /// metric. Only the two perturbed tensors are uploaded; all other
+    /// parameters stay device-resident, and both originals are restored
+    /// before returning.
+    pub fn calib_loss_with_perturbed_pair(
+        &mut self,
+        param_a: usize,
+        perturbed_a: &[f32],
+        param_b: usize,
+        perturbed_b: &[f32],
+    ) -> Result<f64> {
+        ensure!(param_a != param_b, "paired perturbation targets the same parameter tensor");
+        let dims_a = self.artifacts.params.dims(param_a).to_vec();
+        let dims_b = self.artifacts.params.dims(param_b).to_vec();
+        let new_a = self.engine.upload_f32(perturbed_a, &dims_a)?;
+        let new_b = self.engine.upload_f32(perturbed_b, &dims_b)?;
+        let old_a = std::mem::replace(&mut self.param_bufs[param_a], new_a);
+        let old_b = std::mem::replace(&mut self.param_bufs[param_b], new_b);
+        let cfg = QuantConfig::float(self.num_quant_layers());
+        let params = std::mem::take(&mut self.param_bufs);
+        let res = self.eval_on(&params, &cfg, Which::CalibSens, None);
+        self.param_bufs = params;
+        self.param_bufs[param_a] = old_a;
+        self.param_bufs[param_b] = old_b;
+        Ok(res?.loss)
+    }
+
     // ---------------------------------------------------------- calibration
     //
     // The calibration/sensitivity path is split into pure per-shard
@@ -603,6 +631,57 @@ impl Pipeline {
             let (pi, perturbed) = self.gaussian_perturbation(qi, lambda, &mut rng)?;
             let loss = self.calib_loss_with_perturbed(pi, &perturbed)?;
             samples.push(NoiseSample { item, loss });
+        }
+        Ok(samples)
+    }
+
+    /// Paired-perturbation trials for the listed flattened pair-major
+    /// `pair * trials + trial` items — the pure inter-layer shard kernel.
+    /// Layer `l`'s draw is seeded by [`pair_seed`]`(seed, l, l, trial)` in
+    /// *every* cell, so a diagonal cell `(l, l)` measures the single-layer
+    /// baseline and an off-diagonal cell `(i, j)` re-applies the exact
+    /// same two draws jointly: the host-side finite difference
+    /// `L_ij - L_i - L_j + clean` is then a per-trial interaction term,
+    /// and a sample depends only on `(seed, i, j, trial)`, never on shard
+    /// layout.
+    pub fn pair_shard(
+        &mut self,
+        lambda: f64,
+        trials: usize,
+        seed: u64,
+        items: &[usize],
+    ) -> Result<Vec<PairSample>> {
+        let trials = trials.max(1);
+        let n = self.num_quant_layers();
+        let pairs = pair_count(n);
+        let mut samples = Vec::with_capacity(items.len());
+        for &item in items {
+            let (p, trial) = (item / trials, item % trials);
+            ensure!(p < pairs, "pair item {item} outside the {pairs} x {trials} trial grid");
+            let (i, j) = pair_at(n, p);
+            let mut rng_i = Rng::seed_from(pair_seed(seed, i as u64, i as u64, trial as u64));
+            let (pi, pert_i) = self.gaussian_perturbation(i, lambda, &mut rng_i)?;
+            let loss = if i == j {
+                self.calib_loss_with_perturbed(pi, &pert_i)?
+            } else {
+                let mut rng_j = Rng::seed_from(pair_seed(seed, j as u64, j as u64, trial as u64));
+                let (pj, pert_j) = self.gaussian_perturbation(j, lambda, &mut rng_j)?;
+                if pi == pj {
+                    // Both quant layers read the same parameter tensor:
+                    // compose the two deltas into one buffer.
+                    let w = self.artifacts.params.values(pi);
+                    let combined: Vec<f32> = pert_i
+                        .iter()
+                        .zip(&pert_j)
+                        .zip(w)
+                        .map(|((&a, &b), &base)| a + b - base)
+                        .collect();
+                    self.calib_loss_with_perturbed(pi, &combined)?
+                } else {
+                    self.calib_loss_with_perturbed_pair(pi, &pert_i, pj, &pert_j)?
+                }
+            };
+            samples.push(PairSample { item, loss });
         }
         Ok(samples)
     }
@@ -828,6 +907,16 @@ impl StageRunner for Pipeline {
         shards: &[Vec<usize>],
     ) -> Result<Vec<Vec<NoiseSample>>> {
         shards.iter().map(|s| self.noise_shard(lambda, trials, seed, s)).collect()
+    }
+
+    fn stage_pair(
+        &mut self,
+        lambda: f64,
+        trials: usize,
+        seed: u64,
+        shards: &[Vec<usize>],
+    ) -> Result<Vec<Vec<PairSample>>> {
+        shards.iter().map(|s| self.pair_shard(lambda, trials, seed, s)).collect()
     }
 
     fn broadcast_scales(&mut self, scales: &Scales) -> Result<()> {

@@ -41,7 +41,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Context as _};
 
-use crate::quant::calibrate::{self, BatchGrad, NoiseSample, TraceSample};
+use crate::quant::calibrate::{self, BatchGrad, NoiseSample, PairSample, TraceSample};
 use crate::quant::{QuantConfig, Scales};
 use crate::Result;
 
@@ -217,6 +217,16 @@ enum WorkerJob {
         seed: u64,
         items: Vec<usize>,
         resp: mpsc::Sender<Result<Vec<NoiseSample>>>,
+    },
+    /// Sharded-sensitivity stage: inter-layer paired-perturbation trials
+    /// for the listed flattened pair-major (pair, trial) items
+    /// ([`Pipeline::pair_shard`]).
+    PairPerturb {
+        lambda: f64,
+        trials: usize,
+        seed: u64,
+        items: Vec<usize>,
+        resp: mpsc::Sender<Result<Vec<PairSample>>>,
     },
     /// ε_N baseline: float calibration loss of the unperturbed model
     /// ([`Pipeline::calib_loss_float`]; identical on every worker).
@@ -549,6 +559,9 @@ fn worker_loop(pipeline: &mut Pipeline, shared: &SharedCache, rx: &mpsc::Receive
             WorkerJob::NoisePerturb { lambda, trials, seed, items, resp } => {
                 let _ = resp.send(pipeline.noise_shard(lambda, trials, seed, &items));
             }
+            WorkerJob::PairPerturb { lambda, trials, seed, items, resp } => {
+                let _ = resp.send(pipeline.pair_shard(lambda, trials, seed, &items));
+            }
             WorkerJob::CleanLoss { resp } => {
                 let _ = resp.send(pipeline.calib_loss_float());
             }
@@ -641,6 +654,18 @@ impl StageRunner for PipelinePool {
     ) -> Result<Vec<Vec<NoiseSample>>> {
         self.scatter_stage("noise perturbations", shards, |items, resp| {
             WorkerJob::NoisePerturb { lambda, trials, seed, items, resp }
+        })
+    }
+
+    fn stage_pair(
+        &mut self,
+        lambda: f64,
+        trials: usize,
+        seed: u64,
+        shards: &[Vec<usize>],
+    ) -> Result<Vec<Vec<PairSample>>> {
+        self.scatter_stage("pair perturbations", shards, |items, resp| {
+            WorkerJob::PairPerturb { lambda, trials, seed, items, resp }
         })
     }
 

@@ -5,7 +5,7 @@
 //! and the ε_N noise metric used to be monolithic single-device loops
 //! inside [`Pipeline`](super::Pipeline). They are now split into *pure
 //! per-shard kernels* (`Pipeline::{act_stats_shard, adjust_grads_shard,
-//! hvp_shard, noise_shard}`) plus the host-side reducers in
+//! hvp_shard, noise_shard, pair_shard}`) plus the host-side reducers in
 //! [`crate::quant::calibrate`], driven by the functions in this module
 //! over anything implementing [`StageRunner`]:
 //!
@@ -26,16 +26,17 @@
 //! [`ScaleAdam`](crate::quant::calibrate::ScaleAdam), trial-ordered trace
 //! and noise accumulation); and Monte-Carlo draws are item-seeded —
 //! Hutchinson probes per trial ([`crate::util::rng::probe_seed`]), ε_N
-//! perturbations per (layer, trial) ([`crate::util::rng::noise_seed`]) —
-//! not from a sequentially shared RNG. Nothing in the math depends on
-//! which worker computed what.
+//! perturbations per (layer, trial) ([`crate::util::rng::noise_seed`]),
+//! inter-layer paired perturbations per (layer, layer, trial)
+//! ([`crate::util::rng::pair_seed`]) — not from a sequentially shared
+//! RNG. Nothing in the math depends on which worker computed what.
 
 use anyhow::ensure;
 
 use crate::api::SearchEvent;
 use crate::quant::calibrate::{
-    self, merge_act_stats, reduce_grads, reduce_noise, reduce_traces, sync_groups, BatchGrad,
-    NoiseSample, ScaleAdam, TraceSample,
+    self, merge_act_stats, pair_count, reduce_grads, reduce_noise, reduce_pairs, reduce_traces,
+    sync_groups, BatchGrad, InterLayerReduction, NoiseSample, PairSample, ScaleAdam, TraceSample,
 };
 use crate::quant::{AdjustReport, CalibrationOptions, Scales};
 use crate::Result;
@@ -89,6 +90,19 @@ pub trait StageRunner {
         seed: u64,
         shards: &[Vec<usize>],
     ) -> Result<Vec<Vec<NoiseSample>>>;
+    /// Per-item paired-perturbation trials for the inter-layer metric;
+    /// shard `i` covers the flattened pair-major
+    /// `pair_index(layers, i, j) * trials + trial` indices in `shards[i]`,
+    /// each layer draw seeded by
+    /// [`crate::util::rng::pair_seed`]`(seed, l, l, trial)` so the paired
+    /// run reuses the exact single-layer draws of the diagonal cells.
+    fn stage_pair(
+        &mut self,
+        lambda: f64,
+        trials: usize,
+        seed: u64,
+        shards: &[Vec<usize>],
+    ) -> Result<Vec<Vec<PairSample>>>;
     /// Install `scales` on every worker pipeline (device sync included).
     fn broadcast_scales(&mut self, scales: &Scales) -> Result<()>;
 }
@@ -275,6 +289,50 @@ pub fn noise_scores_sharded<R: StageRunner + ?Sized>(
         samples.len()
     );
     reduce_noise(&mut samples, n, trials, clean_loss)
+}
+
+/// The inter-layer-augmented Hessian metric as a sharded stage job: the
+/// symmetric `(layer, layer, trial)` grid of paired Gaussian perturbation
+/// trials is flattened pair-major (upper triangle `i <= j`, row-major,
+/// diagonal cells = single-layer baselines), fanned across the runner's
+/// workers, and reduced host-side in global item order against the
+/// clean-model baseline loss. Layer draws are addressed by
+/// [`crate::util::rng::pair_seed`], so the full reduction — baselines,
+/// coupling matrix, and augmented scores — is bit-identical at every
+/// worker count. Returns the full [`InterLayerReduction`]; use
+/// [`interlayer_scores_sharded`] for just the per-layer scores.
+pub fn interlayer_reduction_sharded<R: StageRunner + ?Sized>(
+    runner: &mut R,
+    lambda: f64,
+    trials: usize,
+    seed: u64,
+) -> Result<InterLayerReduction> {
+    let trials = trials.max(1);
+    let n = runner.shard_layers();
+    let clean_loss = runner.stage_clean_loss()?;
+    let total = pair_count(n) * trials;
+    let items: Vec<usize> = (0..total).collect();
+    let shards = shard_indices(&items, runner.shard_workers());
+    let mut samples: Vec<PairSample> =
+        runner.stage_pair(lambda, trials, seed, &shards)?.into_iter().flatten().collect();
+    ensure!(
+        samples.len() == total,
+        "pair shards returned {} samples for a {} x {trials} pair grid",
+        samples.len(),
+        pair_count(n)
+    );
+    reduce_pairs(&mut samples, n, trials, clean_loss)
+}
+
+/// Per-layer inter-layer-augmented sensitivity scores (see
+/// [`interlayer_reduction_sharded`]).
+pub fn interlayer_scores_sharded<R: StageRunner + ?Sized>(
+    runner: &mut R,
+    lambda: f64,
+    trials: usize,
+    seed: u64,
+) -> Result<Vec<f64>> {
+    Ok(interlayer_reduction_sharded(runner, lambda, trials, seed)?.scores)
 }
 
 #[cfg(test)]

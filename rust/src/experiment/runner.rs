@@ -18,31 +18,17 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::api::{
-    checkpoint_fingerprint, run_search, Checkpoint, EventSink, ObjectiveSpec, Partition,
-    PartitionedDriver, SearchEvent, SearchSpec, SharedSegmentEval, SyntheticCost, SyntheticEnv,
-    SyntheticStage,
+    checkpoint_fingerprint, run_search, synthetic_sensitivity, Checkpoint, EventSink,
+    ObjectiveSpec, Partition, PartitionedDriver, SearchEvent, SearchSpec, SharedSegmentEval,
+    SyntheticCost, SyntheticEnv,
 };
-use crate::coordinator::{hessian_trace_sharded, noise_scores_sharded, ParallelEnv};
-use crate::quant::{eps_qe, QUANT_BITS};
-use crate::sensitivity::{MetricKind, NoiseOptions, Sensitivity};
+use crate::coordinator::ParallelEnv;
+use crate::quant::QUANT_BITS;
 use crate::util::json::Value;
-use crate::util::rng::{probe_seed, Rng};
 
 use super::compare::{Comparison, VariantRow};
 use super::metrics::{self, VariantMetrics};
 use super::suite::{ExperimentSuite, ResolvedVariant};
-
-/// Calibration batches behind the synthetic stage runner (sensitivity
-/// probes); results are worker-count-independent, so this is a fixed
-/// harness constant rather than a suite knob.
-const STAGE_BATCHES: usize = 8;
-
-/// Domain tag for the synthetic ε_QE probe weights, so they never share
-/// a splitmix64 stream with the env/cost/stage constructions.
-const QE_SALT: u64 = 0x9e5a_17_e5;
-
-/// Probe tensor length per layer for the synthetic ε_QE stand-in.
-const QE_PROBE_LEN: usize = 256;
 
 /// How a suite run executes.
 #[derive(Debug, Clone)]
@@ -91,39 +77,12 @@ fn describe(v: &ResolvedVariant) -> String {
     )
 }
 
-/// The sensitivity ordering a synthetic variant searches in. Hessian and
-/// noise run the real sharded metric drivers over [`SyntheticStage`]
-/// (bit-identical at every worker count); ε_QE scores seeded per-layer
-/// probe tensors with [`eps_qe`] at the harshest candidate width; random
-/// is the paper's uninformed baseline.
+/// The sensitivity ordering a synthetic variant searches in — the shared
+/// [`synthetic_sensitivity`] stand-in, so the harness, the `--synthetic`
+/// search CLI, and the metric-agreement report all rank from the same
+/// scores (bit-identical at every worker count).
 fn synthetic_order(v: &ResolvedVariant, workers: usize) -> Result<Vec<usize>> {
-    let sens = match v.metric {
-        MetricKind::Random => Sensitivity::random(v.layers, v.seed),
-        MetricKind::Hessian => {
-            let mut stage = SyntheticStage::new(v.layers, STAGE_BATCHES, workers, v.seed);
-            let scores = hessian_trace_sharded(&mut stage, v.trials, v.seed)?;
-            Sensitivity::from_scores(MetricKind::Hessian, scores)
-        }
-        MetricKind::Noise => {
-            let mut stage = SyntheticStage::new(v.layers, STAGE_BATCHES, workers, v.seed);
-            let lambda = NoiseOptions::default().lambda;
-            let scores = noise_scores_sharded(&mut stage, lambda, v.trials, v.seed)?;
-            Sensitivity::from_scores(MetricKind::Noise, scores)
-        }
-        MetricKind::Qe => {
-            let probe_bits = QUANT_BITS[QUANT_BITS.len() - 1];
-            let scores = (0..v.layers)
-                .map(|layer| {
-                    let mut rng = Rng::seed_from(probe_seed(v.seed ^ QE_SALT, layer as u64));
-                    let w: Vec<f32> =
-                        (0..QE_PROBE_LEN).map(|_| rng.gaussian() as f32).collect();
-                    eps_qe(&w, probe_bits)
-                })
-                .collect();
-            Sensitivity::from_scores(MetricKind::Qe, scores)
-        }
-    };
-    Ok(sens.order)
+    Ok(synthetic_sensitivity(v.metric, v.layers, v.trials, v.seed, workers)?.order)
 }
 
 /// One synthetic `(variant, workers)` execution: metric ordering, the

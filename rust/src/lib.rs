@@ -10,7 +10,8 @@
 //! * [`model`] — artifact manifests, parameter store, dataset loaders.
 //! * [`quant`] — Eq. 1 quantizer mirror, per-layer configurations, scale
 //!   calibration + backprop adjustment drivers.
-//! * [`sensitivity`] — the paper's three metrics: ε_QE, ε_N, ε_Hessian.
+//! * [`sensitivity`] — the paper's three metrics (ε_QE, ε_N, ε_Hessian)
+//!   plus the cross-layer inter-layer-augmented metric.
 //! * [`coordinator`] — the evaluation pipeline, the bisection (Alg. 1)
 //!   and greedy (Alg. 2) configuration searches, and the sharded
 //!   calibration/sensitivity stage driver (`coordinator::shard`).

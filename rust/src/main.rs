@@ -14,6 +14,7 @@
 //! mpq figure --id 1|3|4 [--model M] [--out DIR]  # regenerate figure data
 //! mpq report --sweep --model M --budgets 0.5,0.7 --floors 0.99,0.999
 //! mpq report --sweep --synthetic 24 --checkpoint sweep.ck.json --resume
+//! mpq report --agreement --synthetic 16 --target 0.95
 //! mpq pareto --model M --floors 0.9,0.99       # one-pass frontier -> <M>_frontier.json
 //! mpq report --sweep --model M --from-frontier artifacts/M_frontier.json
 //! mpq serve --model resnet_s --bits 8 --requests 256
@@ -30,9 +31,10 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use mpq::api::{
-    build_frontier_synthetic_partitioned, log_event, parse_tenants, run_search, BackendSpec,
-    Checkpoint, CostModel, EventSink, FrontierArtifact, FrontierReport, ObjectiveSpec, PickSpec,
-    SearchEvent, SearchSpec, SyntheticCost, SyntheticEnv, SyntheticStage, TenantSpec,
+    build_frontier_synthetic_partitioned, log_event, parse_tenants, run_search,
+    synthetic_sensitivity, BackendSpec, Checkpoint, CostModel, EventSink, FrontierArtifact,
+    FrontierReport, ObjectiveSpec, PickSpec, SearchEvent, SearchSpec, SyntheticCost, SyntheticEnv,
+    SyntheticStage, TenantSpec,
 };
 use mpq::coordinator::{
     calibrate_sharded, hessian_trace_sharded, noise_scores_sharded, ParallelEnv, SearchAlgo,
@@ -43,7 +45,7 @@ use mpq::report::experiments::{self, ExperimentCtx, METRIC_TRIALS};
 use mpq::report::{
     budget_sweep_from_frontier, budget_sweep_synthetic, budget_sweep_synthetic_costed,
     cells_to_json, render_sweep, sweep_cells_json, sweep_fingerprint, synthetic_table_cost,
-    BudgetKind, Driver, SweepCheckpoint, SweepGrid,
+    AgreementReport, BudgetKind, Driver, SweepCheckpoint, SweepGrid,
 };
 use mpq::experiment::{gate, load_bench, run_suite, Baseline, ExperimentSuite, RunOptions};
 use mpq::sensitivity::{MetricKind, NoiseOptions};
@@ -64,8 +66,8 @@ COMMANDS
               [--grad-batches 8] [--seed 0]
               [--batches 16] [--trials 8]  (synthetic only)
   eval        --model M [--bits 8]
-  sensitivity --model M --metric random|qe|noise|hessian [--trials N] [--seed S]
-              [--workers 1]
+  sensitivity --model M --metric random|qe|noise|hessian|interlayer
+              [--trials N] [--seed S] [--workers 1]
   search      --model M | --synthetic N
               [--algo greedy|bisection] [--metric hessian] [--target 0.99]
               [--seed 0] [--workers 1] [--trials 5]
@@ -74,6 +76,8 @@ COMMANDS
               [--partitions K]  (segment-scoped search + reconciliation)
               [--checkpoint ck.json [--resume]] [--cache-capacity N]
               [--no-cache] [--abort-after N (synthetic only)]
+                (--metric also works with --synthetic: rank layers via
+                 the shared synthetic sensitivity stand-in)
   table       --id 1|2|3 [--model M] [--out DIR] [--workers 1]
               [--budget-latency F | --budget-size F]
   report      --sweep (--model M | --synthetic N)
@@ -85,6 +89,11 @@ COMMANDS
               [--checkpoint sweep.ck.json [--resume]] [--out DIR]
               [--from-frontier frontier.json]  (O(1) lookups, no searches)
               [--abort-after N (synthetic only)]
+  report      --agreement (--model M | --synthetic N)
+              [--target 0.99] [--seed 0] [--trials 5] [--workers 1]
+              [--backend a100|tpu | --table kernels.json] [--out DIR]
+                (all four informed metrics x both algorithms: rank
+                 correlation, edit distance, and outcome deltas)
   pareto      --model M | --synthetic N
               [--floors 0.9,0.99] [--algo greedy|bisection]
               [--metric hessian] [--seed 0] [--trials 5] [--workers 1]
@@ -474,6 +483,12 @@ struct SearchCmd {
     synthetic: Option<usize>,
     algo: SearchAlgo,
     metric: MetricKind,
+    /// Whether `--metric` was given on the command line. Synthetic runs
+    /// historically ignored metrics (the env's identity order); an
+    /// explicit flag now routes through [`synthetic_sensitivity`] — and
+    /// only an explicit flag, so default synthetic runs (and their
+    /// checkpoints/CI byte-diffs) are literally unchanged.
+    metric_explicit: bool,
     target: f64,
     seed: u64,
     trials: usize,
@@ -545,6 +560,7 @@ impl SearchCmd {
             synthetic: args.get_str("synthetic").map(str::parse).transpose()?,
             algo: args.get_str("algo").unwrap_or("greedy").parse()?,
             metric: args.get_or("metric", MetricKind::Hessian)?,
+            metric_explicit: args.get_str("metric").is_some(),
             target: args.get_or("target", 0.99f64)?,
             seed: args.get_or("seed", 0u64)?,
             trials: args.get_or("trials", METRIC_TRIALS)?,
@@ -570,9 +586,11 @@ impl SearchCmd {
         );
         if cmd.synthetic.is_some() {
             // Reject flags the synthetic path would otherwise silently
-            // ignore (it has no sensitivity metrics, cost backends, or
-            // persistent eval cache).
-            for flag in ["metric", "trials", "backend", "table", "cache-capacity"] {
+            // ignore (it has no cost backends or persistent eval cache).
+            // `--metric`/`--trials` *do* apply: an explicit metric ranks
+            // the synthetic layers through the shared sensitivity
+            // stand-in instead of the env's identity order.
+            for flag in ["backend", "table", "cache-capacity"] {
                 anyhow::ensure!(
                     args.get_str(flag).is_none(),
                     "--{flag} does not apply to --synthetic runs"
@@ -581,6 +599,14 @@ impl SearchCmd {
             anyhow::ensure!(
                 !args.flag("no-cache") && !args.flag("native-scale"),
                 "--no-cache/--native-scale do not apply to --synthetic runs"
+            );
+            anyhow::ensure!(
+                cmd.metric_explicit || args.get_str("trials").is_none(),
+                "--trials on --synthetic runs requires --metric"
+            );
+            anyhow::ensure!(
+                !cmd.metric_explicit || cmd.partitions == 1,
+                "--metric with --synthetic requires --partitions 1"
             );
         }
         Ok(cmd)
@@ -693,19 +719,37 @@ impl SearchCmd {
         if let Some(limit) = self.abort_after {
             env = env.abort_after(limit);
         }
-        let order = env.order();
+        // An explicit `--metric` ranks the synthetic layers through the
+        // shared sensitivity stand-in (worker-count independent); the
+        // historical default stays the env's identity order, keeping
+        // existing checkpoints and CI byte-diffs valid.
+        let order = if self.metric_explicit {
+            synthetic_sensitivity(self.metric, n, self.trials, self.seed, self.workers)?.order
+        } else {
+            env.order()
+        };
         let cost = Arc::new(SyntheticCost::new(n, self.seed));
         // The synthetic float baseline is exactly 1.0, so the floor is the
         // target itself.
         let objective = self.objective.build(self.target, cost.clone());
         let mut checkpoint = match &self.checkpoint {
             Some(path) => {
+                let context = if self.metric_explicit {
+                    format!(
+                        "synthetic/n{n}/seed{}/metric{}/trials{}",
+                        self.seed,
+                        self.metric.label(),
+                        self.trials
+                    )
+                } else {
+                    format!("synthetic/n{n}/seed{}", self.seed)
+                };
                 let fp = mpq::api::checkpoint_fingerprint(
                     self.algo,
                     &QUANT_BITS,
                     &objective.describe(),
                     &order,
-                    &format!("synthetic/n{n}/seed{}", self.seed),
+                    &context,
                 );
                 Some(Checkpoint::attach(path, &fp, self.resume)?)
             }
@@ -752,12 +796,15 @@ impl SearchCmd {
             let events = sink.finish()?;
             eprintln!("[events] {events} events -> {}", sink.path().display());
         }
-        ResultLine::new("search")
+        let mut line = ResultLine::new("search")
             .seed(self.seed)
             .algo(self.algo.label())
             .workers(self.workers)
-            .payload(summary)
-            .emit();
+            .payload(summary);
+        if self.metric_explicit {
+            line = line.metric(self.metric.label());
+        }
+        line.emit();
         Ok(())
     }
 
@@ -890,12 +937,19 @@ impl TableCmd {
 struct ReportCmd {
     model: Option<String>,
     synthetic: Option<usize>,
+    /// `--agreement`: run every informed metric + both algorithms and
+    /// report rank correlation / edit distance / outcome deltas instead
+    /// of the budget × accuracy-floor sweep.
+    agreement: bool,
     grid: SweepGrid,
     algo: SearchAlgo,
     metric: MetricKind,
     seed: u64,
     trials: usize,
     workers: usize,
+    /// Agreement mode only: the accuracy target every grid cell searches
+    /// under.
+    target: f64,
     backend: BackendSpec,
     checkpoint: Option<PathBuf>,
     resume: bool,
@@ -911,13 +965,16 @@ struct ReportCmd {
 
 impl ReportCmd {
     fn parse(args: &Args) -> Result<Self> {
+        let agreement = args.flag("agreement");
         anyhow::ensure!(
-            args.flag("sweep"),
-            "report currently has one mode: pass --sweep for the budget x accuracy-floor grid"
+            args.flag("sweep") != agreement,
+            "report needs exactly one mode: --sweep (budget x accuracy-floor grid) or \
+             --agreement (metric-agreement report)"
         );
         let cmd = Self {
             model: args.get_str("model").map(String::from),
             synthetic: args.get_str("synthetic").map(str::parse).transpose()?,
+            agreement,
             grid: SweepGrid {
                 kind: args.get_or("budget-kind", BudgetKind::Latency)?,
                 budgets: parse_f64_list(args, "budgets", &[0.5, 0.7, 0.9])?,
@@ -928,6 +985,7 @@ impl ReportCmd {
             seed: args.get_or("seed", 0u64)?,
             trials: args.get_or("trials", METRIC_TRIALS)?,
             workers: args.get_or("workers", 1usize)?.max(1),
+            target: args.get_or("target", 0.99f64)?,
             backend: parse_backend(args)?,
             checkpoint: args.get_str("checkpoint").map(PathBuf::from),
             resume: args.flag("resume"),
@@ -939,7 +997,39 @@ impl ReportCmd {
         cmd.grid.validate()?;
         anyhow::ensure!(
             cmd.model.is_some() != cmd.synthetic.is_some(),
-            "report --sweep needs exactly one of --model M or --synthetic N"
+            "report needs exactly one of --model M or --synthetic N"
+        );
+        if cmd.agreement {
+            // The agreement report runs every informed metric through
+            // both algorithms at one accuracy target — the sweep-only
+            // knobs (and any single-metric/-algo selection) don't apply.
+            for flag in [
+                "budget-kind",
+                "budgets",
+                "floors",
+                "from-frontier",
+                "checkpoint",
+                "abort-after",
+                "algo",
+                "metric",
+            ] {
+                anyhow::ensure!(
+                    args.get_str(flag).is_none(),
+                    "--{flag} does not apply to --agreement reports"
+                );
+            }
+            anyhow::ensure!(!cmd.resume, "--resume does not apply to --agreement reports");
+            if cmd.synthetic.is_some() {
+                anyhow::ensure!(
+                    args.get_str("backend").is_none() && args.get_str("table").is_none(),
+                    "--backend/--table do not apply to synthetic --agreement reports"
+                );
+            }
+            return Ok(cmd);
+        }
+        anyhow::ensure!(
+            args.get_str("target").is_none(),
+            "--target only applies to --agreement reports (sweeps take --floors)"
         );
         anyhow::ensure!(
             cmd.abort_after.is_none() || cmd.synthetic.is_some(),
@@ -1053,6 +1143,9 @@ impl ReportCmd {
     /// answered entirely from the artifact.
     fn run(self, dir: &Path) -> Result<()> {
         let model = self.model.clone().expect("checked in parse");
+        if self.agreement {
+            return self.run_agreement_model(dir, &model);
+        }
         if let Some(path) = self.from_frontier.clone() {
             let artifact = FrontierArtifact::load(&path)?;
             return self.run_from_frontier(&artifact, &model);
@@ -1078,6 +1171,16 @@ impl ReportCmd {
     /// and the `--from-frontier` byte-identity check.
     fn run_synthetic(self) -> Result<()> {
         let layers = self.synthetic.expect("checked in parse");
+        if self.agreement {
+            let report = AgreementReport::synthetic(
+                layers,
+                self.trials.max(1),
+                self.seed,
+                self.workers,
+                self.target,
+            )?;
+            return self.emit_agreement("synthetic", &report);
+        }
         // The synthetic ordering is the identity permutation; layer count
         // and seed (which fully determine the environment) are in the
         // context string.
@@ -1121,6 +1224,44 @@ impl ReportCmd {
             self.abort_after,
         )?;
         self.emit("synthetic", &cells)
+    }
+
+    /// Artifact-backed agreement report: every informed metric through
+    /// the context's disk-cached sensitivity path, every (algo, metric)
+    /// cell through the shared pool at `--workers > 1`.
+    fn run_agreement_model(self, dir: &Path, model: &str) -> Result<()> {
+        let spec = SearchSpec::new(model)
+            .artifacts_dir(dir)
+            .workers(self.workers)
+            .trials(self.trials.max(1))
+            .seed(self.seed)
+            .backend(self.backend.clone());
+        let mut ctx = spec.open_context()?;
+        let report =
+            AgreementReport::for_model(&mut ctx, self.trials.max(1), self.seed, self.target)?;
+        self.emit_agreement(model, &report)
+    }
+
+    /// Render + emit one agreement report: the human-readable summary on
+    /// stdout, the worker-independent RESULT payload for scripts, and
+    /// optional `--out` artifacts.
+    fn emit_agreement(&self, label: &str, report: &AgreementReport) -> Result<()> {
+        let text = report.render();
+        println!("{text}");
+        ResultLine::new("report")
+            .seed(self.seed)
+            .workers(self.workers)
+            .payload(report.to_json())
+            .emit();
+        if let Some(dir_out) = &self.out {
+            std::fs::create_dir_all(dir_out)?;
+            std::fs::write(dir_out.join(format!("agreement_{label}.txt")), &text)?;
+            std::fs::write(
+                dir_out.join(format!("agreement_{label}.json")),
+                report.to_json().to_string(),
+            )?;
+        }
+        Ok(())
     }
 }
 

@@ -84,6 +84,121 @@ pub struct NoiseSample {
     pub loss: f64,
 }
 
+/// One paired-perturbation trial's calibration loss for the inter-layer
+/// metric, tagged with its global `item` index in the flattened pair-major
+/// `pair × trial` grid (pairs enumerate the upper triangle `i <= j` in
+/// row-major order, see [`pair_at`]). The perturbations that produced it
+/// depend only on [`crate::util::rng::pair_seed`], so host reduction is
+/// independent of which worker ran the trial.
+#[derive(Debug, Clone)]
+pub struct PairSample {
+    /// `pair_index(layers, i, j) * trials + trial` — the flattened
+    /// shard-domain index.
+    pub item: usize,
+    /// Mean calibration loss with the pair's weights perturbed (both
+    /// layers for `i < j`, a single layer on the diagonal `i == j`).
+    pub loss: f64,
+}
+
+/// Number of unordered layer pairs including the diagonal: `n(n+1)/2`.
+pub fn pair_count(layers: usize) -> usize {
+    layers * (layers + 1) / 2
+}
+
+/// Row-major upper-triangle index of the unordered pair `{i, j}`.
+pub fn pair_index(layers: usize, i: usize, j: usize) -> usize {
+    let (i, j) = if i <= j { (i, j) } else { (j, i) };
+    debug_assert!(j < layers);
+    // Rows 0..i hold (layers - k) pairs each: i*layers - i(i-1)/2 in total.
+    i * (2 * layers - i + 1) / 2 + (j - i)
+}
+
+/// Inverse of [`pair_index`]: decode a flat pair index into `(i, j)` with
+/// `i <= j`.
+pub fn pair_at(layers: usize, index: usize) -> (usize, usize) {
+    let mut rest = index;
+    for i in 0..layers {
+        let row = layers - i;
+        if rest < row {
+            return (i, i + rest);
+        }
+        rest -= row;
+    }
+    panic!("pair index {index} out of range for {layers} layers");
+}
+
+/// The host half of the inter-layer metric: per-layer single-perturbation
+/// baselines, the symmetric pairwise-interaction magnitude matrix, and the
+/// augmented per-layer scores derived from both.
+#[derive(Debug, Clone)]
+pub struct InterLayerReduction {
+    /// `mean_t(loss(i, i, t) - clean_loss)` — the diagonal ε_N-style term.
+    pub base: Vec<f64>,
+    /// Row-major `layers × layers` matrix of `|mean_t I(i, j, t)|` where
+    /// `I = L_ij - L_i - L_j + clean` is the per-trial finite-difference
+    /// cross term. Symmetric by construction; zero on the diagonal.
+    pub coupling: Vec<f64>,
+    /// `base[i] + Σ_{j≠i} coupling[i][j]` — the inter-layer-augmented
+    /// sensitivity score.
+    pub scores: Vec<f64>,
+}
+
+/// Fixed-order inter-layer reduction: sort samples by global item index,
+/// verify the pair-major `pair × trial` grid is complete, then accumulate
+/// baselines and interaction terms in ascending `(i, j, trial)` order.
+/// Because the paired run reuses the diagonal draws (see
+/// [`crate::util::rng::pair_seed`]), `I(i, j, t)` is an exact per-trial
+/// finite difference `δ_iᵀ H δ_j`-style cross term, and the fixed
+/// accumulation order makes every shard layout bit-identical.
+pub fn reduce_pairs(
+    samples: &mut [PairSample],
+    layers: usize,
+    trials: usize,
+    clean_loss: f64,
+) -> Result<InterLayerReduction> {
+    ensure!(trials > 0, "inter-layer reduction over zero trials");
+    let pairs = pair_count(layers);
+    ensure!(
+        samples.len() == pairs * trials,
+        "inter-layer reduction expected {} samples ({pairs} pairs x {trials} trials), got {}",
+        pairs * trials,
+        samples.len()
+    );
+    samples.sort_by_key(|s| s.item);
+    for (pos, s) in samples.iter().enumerate() {
+        ensure!(s.item == pos, "pair samples are not a permutation of the trial grid");
+    }
+    let loss = |i: usize, j: usize, t: usize| samples[pair_index(layers, i, j) * trials + t].loss;
+    let mut base = vec![0.0f64; layers];
+    for (i, b) in base.iter_mut().enumerate() {
+        for t in 0..trials {
+            *b += loss(i, i, t) - clean_loss;
+        }
+        *b /= trials as f64;
+    }
+    let mut coupling = vec![0.0f64; layers * layers];
+    for i in 0..layers {
+        for j in (i + 1)..layers {
+            let mut inter = 0.0f64;
+            for t in 0..trials {
+                inter += loss(i, j, t) - loss(i, i, t) - loss(j, j, t) + clean_loss;
+            }
+            let magnitude = (inter / trials as f64).abs();
+            coupling[i * layers + j] = magnitude;
+            coupling[j * layers + i] = magnitude;
+        }
+    }
+    let mut scores = base.clone();
+    for i in 0..layers {
+        for j in 0..layers {
+            if i != j {
+                scores[i] += coupling[i * layers + j];
+            }
+        }
+    }
+    Ok(InterLayerReduction { base, coupling, scores })
+}
+
 /// Step 1 (weights): `alpha = 1/max|w|`, `gamma = max|w|` per quant layer.
 /// Activation scales start at identity and are filled in from the
 /// `actstats` graph via [`apply_act_stats`]. Errors (rather than panics)
@@ -466,6 +581,104 @@ mod tests {
             NoiseSample { item: 0, loss: 2.0 },
         ];
         assert!(reduce_noise(&mut dup, 1, 2, 1.0).is_err());
+    }
+
+    #[test]
+    fn pair_grid_indexing_roundtrips() {
+        for n in [1usize, 2, 3, 5, 9] {
+            assert_eq!(pair_count(n), n * (n + 1) / 2);
+            let mut flat = 0usize;
+            for i in 0..n {
+                for j in i..n {
+                    assert_eq!(pair_index(n, i, j), flat, "n={n} i={i} j={j}");
+                    assert_eq!(pair_index(n, j, i), flat, "index must be symmetric");
+                    assert_eq!(pair_at(n, flat), (i, j), "n={n} flat={flat}");
+                    flat += 1;
+                }
+            }
+            assert_eq!(flat, pair_count(n));
+        }
+    }
+
+    /// Build the full pair-sample grid for a planted interaction model:
+    /// single-layer degradation `d[i]`, pairwise interaction `c[i][j]`.
+    fn planted_pair_grid(d: &[f64], c: &[Vec<f64>], trials: usize, clean: f64) -> Vec<PairSample> {
+        let n = d.len();
+        let mut samples = Vec::new();
+        for p in 0..pair_count(n) {
+            let (i, j) = pair_at(n, p);
+            for t in 0..trials {
+                let jitter = 0.01 * t as f64;
+                let loss = if i == j {
+                    clean + d[i] + jitter
+                } else {
+                    // Paired run re-incurs both single degradations (same
+                    // draws as the diagonals) plus the planted interaction.
+                    clean + d[i] + d[j] + 2.0 * jitter + c[i][j]
+                };
+                samples.push(PairSample { item: p * trials + t, loss });
+            }
+        }
+        samples
+    }
+
+    #[test]
+    fn pair_reduction_recovers_planted_interactions() {
+        let d = vec![0.1, 0.2, 0.4];
+        let c = vec![
+            vec![0.0, 0.5, 0.0],
+            vec![0.5, 0.0, 0.0],
+            vec![0.0, 0.0, 0.0],
+        ];
+        let mut samples = planted_pair_grid(&d, &c, 2, 1.0);
+        let red = reduce_pairs(&mut samples, 3, 2, 1.0).unwrap();
+        // Baselines: d[i] plus the mean trial jitter 0.005.
+        for (i, &b) in red.base.iter().enumerate() {
+            assert!((b - d[i] - 0.005).abs() < 1e-12, "base[{i}] = {b}");
+        }
+        // The jitter cancels in the finite difference, so the coupling
+        // matrix recovers the planted interactions exactly.
+        assert!((red.coupling[1] - 0.5).abs() < 1e-12);
+        assert!((red.coupling[3] - 0.5).abs() < 1e-12, "matrix must be symmetric");
+        assert!(red.coupling[2].abs() < 1e-12);
+        assert!(red.coupling[5].abs() < 1e-12);
+        assert_eq!(red.coupling[0], 0.0, "diagonal is zero");
+        // Scores: base + row-sum of couplings. The coupled pair (0, 1)
+        // outranks the individually-noisier layer 2.
+        assert!((red.scores[0] - (0.105 + 0.5)).abs() < 1e-12);
+        assert!((red.scores[2] - 0.405).abs() < 1e-12);
+        assert!(red.scores[0] > red.scores[2]);
+        assert!(red.scores[1] > red.scores[2]);
+    }
+
+    #[test]
+    fn pair_reduction_is_gather_order_independent() {
+        let d = vec![0.3, 0.1, 0.2, 0.05];
+        let c: Vec<Vec<f64>> = (0..4)
+            .map(|i| (0..4).map(|j| if i != j { 0.01 * (i + j) as f64 } else { 0.0 }).collect())
+            .collect();
+        let mut ordered = planted_pair_grid(&d, &c, 3, 2.0);
+        let reference = reduce_pairs(&mut ordered.clone(), 4, 3, 2.0).unwrap();
+        // Scrambled gather order (reverse) must reduce bit-identically.
+        ordered.reverse();
+        let again = reduce_pairs(&mut ordered, 4, 3, 2.0).unwrap();
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&reference.scores), bits(&again.scores));
+        assert_eq!(bits(&reference.coupling), bits(&again.coupling));
+        assert_eq!(bits(&reference.base), bits(&again.base));
+    }
+
+    #[test]
+    fn pair_reduction_rejects_malformed_grids() {
+        assert!(reduce_pairs(&mut [], 2, 0, 1.0).is_err());
+        let mut short = vec![PairSample { item: 0, loss: 1.0 }];
+        assert!(reduce_pairs(&mut short, 2, 2, 1.0).is_err());
+        // Duplicate item indices are not a permutation of the grid.
+        let mut dup = vec![
+            PairSample { item: 0, loss: 1.0 },
+            PairSample { item: 0, loss: 2.0 },
+        ];
+        assert!(reduce_pairs(&mut dup, 1, 2, 1.0).is_err());
     }
 
     #[test]

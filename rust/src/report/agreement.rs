@@ -1,0 +1,440 @@
+//! Metric-agreement report: how much the four sensitivity metrics agree,
+//! and what the disagreement costs.
+//!
+//! One model runs through every informed metric (ε_QE, ε_N, Hessian,
+//! inter-layer); the report renders pairwise rank correlation (Spearman
+//! ρ with average ranks for ties) and Levenshtein distance between the
+//! orderings, then both search algorithms under each ordering with the
+//! final configuration, accuracy, cost, and evaluation deltas against
+//! each algorithm's Hessian row — the paper's §4.1 agreement analysis
+//! extended to the cross-layer metric.
+//!
+//! Everything the report serializes ([`AgreementReport::to_json`]) is
+//! worker-count independent: sensitivities come from the sharded metric
+//! drivers (or the shared synthetic stand-in) and search outcomes are
+//! decision-exact at every worker count, so CI byte-diffs the RESULT
+//! line across `--workers`.
+
+use std::sync::Arc;
+
+use crate::api::{run_search, synthetic_sensitivity, SyntheticCost, SyntheticEnv};
+use crate::coordinator::{ParallelEnv, SearchAlgo};
+use crate::quant::QUANT_BITS;
+use crate::sensitivity::{self, MetricKind, Sensitivity};
+use crate::util::json::Value;
+use crate::Result;
+
+use super::experiments::{run_cell, ExperimentCtx};
+
+/// The informed metrics the agreement report compares, in render order.
+pub const AGREEMENT_METRICS: [MetricKind; 4] =
+    [MetricKind::Qe, MetricKind::Noise, MetricKind::Hessian, MetricKind::InterLayer];
+
+/// Average 1-based ranks of `scores` (ties share the mean of the
+/// positions they span).
+fn average_ranks(scores: &[f64]) -> Vec<f64> {
+    let n = scores.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| {
+        scores[a].partial_cmp(&scores[b]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut ranks = vec![0.0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        let mean_rank = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            ranks[k] = mean_rank;
+        }
+        i = j + 1;
+    }
+    ranks
+}
+
+/// Spearman rank correlation between two score vectors of equal length,
+/// with average ranks for ties. `1.0` for identical orderings, `-1.0`
+/// for exactly inverted ones. Degenerate inputs (fewer than two layers,
+/// or a constant vector) have no meaningful ordering: two constant
+/// vectors agree perfectly (`1.0`), a constant against a varying one
+/// carries no rank information (`0.0`).
+pub fn rank_correlation(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "rank_correlation over mismatched score vectors");
+    let n = a.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let (ra, rb) = (average_ranks(a), average_ranks(b));
+    let mean = (n as f64 + 1.0) / 2.0;
+    let (mut cov, mut va, mut vb) = (0.0f64, 0.0f64, 0.0f64);
+    for k in 0..n {
+        let (da, db) = (ra[k] - mean, rb[k] - mean);
+        cov += da * db;
+        va += da * da;
+        vb += db * db;
+    }
+    if va <= 0.0 || vb <= 0.0 {
+        return if va <= 0.0 && vb <= 0.0 { 1.0 } else { 0.0 };
+    }
+    cov / (va.sqrt() * vb.sqrt())
+}
+
+/// Agreement between one pair of metrics.
+#[derive(Debug, Clone)]
+pub struct PairAgreement {
+    pub a: MetricKind,
+    pub b: MetricKind,
+    /// Spearman ρ over the score vectors.
+    pub rho: f64,
+    /// Levenshtein distance between the induced orderings (§4.1).
+    pub edit_distance: usize,
+}
+
+/// One (algorithm, metric) search outcome in the agreement grid.
+#[derive(Debug, Clone)]
+pub struct AgreementCell {
+    pub algo: SearchAlgo,
+    pub metric: MetricKind,
+    pub accuracy: f64,
+    pub rel_size: f64,
+    pub rel_latency: f64,
+    pub evals: usize,
+    /// Final per-layer weight widths.
+    pub bits: Vec<f32>,
+}
+
+/// The full report: orderings, pairwise agreement, and the search grid.
+#[derive(Debug, Clone)]
+pub struct AgreementReport {
+    pub model: String,
+    pub layers: usize,
+    pub target: f64,
+    pub seed: u64,
+    pub trials: usize,
+    /// One entry per metric in [`AGREEMENT_METRICS`] order.
+    pub sensitivities: Vec<Sensitivity>,
+    /// Upper-triangle metric pairs in [`AGREEMENT_METRICS`] order.
+    pub pairs: Vec<PairAgreement>,
+    /// (algo × metric) grid, algorithms outer, metrics inner.
+    pub cells: Vec<AgreementCell>,
+}
+
+impl AgreementReport {
+    /// Device-free report over the seeded synthetic model: metric
+    /// orderings through [`synthetic_sensitivity`], searches over
+    /// [`SyntheticEnv`]/[`SyntheticCost`]. Every serialized field is
+    /// worker-count independent.
+    pub fn synthetic(
+        layers: usize,
+        trials: usize,
+        seed: u64,
+        workers: usize,
+        target: f64,
+    ) -> Result<Self> {
+        let sensitivities: Vec<Sensitivity> = AGREEMENT_METRICS
+            .iter()
+            .map(|&mk| synthetic_sensitivity(mk, layers, trials, seed, workers))
+            .collect::<Result<_>>()?;
+        let cost = Arc::new(SyntheticCost::new(layers, seed));
+        let mut cells = Vec::new();
+        for algo in [SearchAlgo::Bisection, SearchAlgo::Greedy] {
+            for sens in &sensitivities {
+                // Fresh env per cell so eval counters never leak across
+                // cells; the synthetic float baseline is exactly 1.0, so
+                // the floor is the target itself.
+                let env = SyntheticEnv::new(layers, seed);
+                let objective =
+                    crate::api::ObjectiveSpec::AccuracyTarget.build(target, cost.clone());
+                let mut penv = ParallelEnv::new(&env, workers);
+                let outcome = run_search(
+                    algo,
+                    &mut penv,
+                    &sens.order,
+                    &QUANT_BITS,
+                    objective.as_ref(),
+                    None,
+                    None,
+                )?;
+                cells.push(AgreementCell {
+                    algo,
+                    metric: sens.metric,
+                    accuracy: outcome.accuracy,
+                    rel_size: cost.rel_size(&outcome.config),
+                    rel_latency: cost.rel_latency(&outcome.config),
+                    evals: outcome.evals,
+                    bits: outcome.config.bits_w.clone(),
+                });
+            }
+        }
+        Ok(Self::assemble("synthetic".into(), layers, target, seed, trials, sensitivities, cells))
+    }
+
+    /// Artifact-backed report: metrics through the context's disk-cached
+    /// sensitivity path, searches through [`run_cell`] (pool-fanned at
+    /// `workers > 1`, decision-exact at every worker count).
+    pub fn for_model(
+        ctx: &mut ExperimentCtx,
+        trials: usize,
+        seed: u64,
+        target: f64,
+    ) -> Result<Self> {
+        ctx.ensure_calibrated()?;
+        let sensitivities: Vec<Sensitivity> = AGREEMENT_METRICS
+            .iter()
+            .map(|&mk| ctx.cached_sensitivity(mk, trials, seed))
+            .collect::<Result<_>>()?;
+        let mut cells = Vec::new();
+        for algo in [SearchAlgo::Bisection, SearchAlgo::Greedy] {
+            for sens in &sensitivities {
+                let cell = run_cell(ctx, algo, sens, seed, target)?;
+                cells.push(AgreementCell {
+                    algo,
+                    metric: sens.metric,
+                    accuracy: cell.accuracy,
+                    rel_size: cell.rel_size_pct / 100.0,
+                    rel_latency: cell.rel_latency_pct / 100.0,
+                    evals: cell.evals,
+                    bits: cell.config.bits_w.clone(),
+                });
+            }
+        }
+        let (model, layers) = (ctx.model(), ctx.pipeline.num_quant_layers());
+        Ok(Self::assemble(model, layers, target, seed, trials, sensitivities, cells))
+    }
+
+    fn assemble(
+        model: String,
+        layers: usize,
+        target: f64,
+        seed: u64,
+        trials: usize,
+        sensitivities: Vec<Sensitivity>,
+        cells: Vec<AgreementCell>,
+    ) -> Self {
+        let mut pairs = Vec::new();
+        for i in 0..sensitivities.len() {
+            for j in (i + 1)..sensitivities.len() {
+                let (a, b) = (&sensitivities[i], &sensitivities[j]);
+                pairs.push(PairAgreement {
+                    a: a.metric,
+                    b: b.metric,
+                    rho: rank_correlation(&a.scores, &b.scores),
+                    edit_distance: sensitivity::levenshtein(&a.order, &b.order),
+                });
+            }
+        }
+        Self { model, layers, target, seed, trials, sensitivities, pairs, cells }
+    }
+
+    /// The metric pair with the lowest rank correlation — the pair whose
+    /// disagreement most deserves a look at the per-algorithm deltas.
+    pub fn lowest_agreement(&self) -> Option<&PairAgreement> {
+        self.pairs.iter().min_by(|x, y| {
+            x.rho.partial_cmp(&y.rho).unwrap_or(std::cmp::Ordering::Equal)
+        })
+    }
+
+    /// The baseline cell deltas are taken against: the same algorithm's
+    /// Hessian row (the paper's best-performing single-layer metric).
+    fn baseline(&self, algo: SearchAlgo) -> Option<&AgreementCell> {
+        self.cells.iter().find(|c| c.algo == algo && c.metric == MetricKind::Hessian)
+    }
+
+    /// Human-readable rendering (stderr/stdout; the machine line is
+    /// [`AgreementReport::to_json`] under the RESULT envelope).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "Metric agreement — {} ({} layers, target {:.1}%, seed {}, {} trials)\n",
+            self.model,
+            self.layers,
+            self.target * 100.0,
+            self.seed,
+            self.trials,
+        ));
+        out.push_str("\npairwise agreement (Spearman rho / edit distance):\n");
+        for p in &self.pairs {
+            out.push_str(&format!(
+                "  {:>10} vs {:<10}  rho={:+.3}  edit={}/{}\n",
+                p.a.label(),
+                p.b.label(),
+                p.rho,
+                p.edit_distance,
+                self.layers,
+            ));
+        }
+        if let Some(p) = self.lowest_agreement() {
+            out.push_str(&format!(
+                "lowest agreement: {} vs {} (rho={:+.3})\n",
+                p.a.label(),
+                p.b.label(),
+                p.rho,
+            ));
+        }
+        out.push_str("\nsearch grid (deltas vs the same algorithm's Hessian row):\n");
+        for c in &self.cells {
+            let base = self.baseline(c.algo);
+            let delta = |v: f64, b: f64| format!("{:+.4}", v - b);
+            let (da, ds, dl, de) = match base {
+                Some(b) => (
+                    delta(c.accuracy, b.accuracy),
+                    delta(c.rel_size, b.rel_size),
+                    delta(c.rel_latency, b.rel_latency),
+                    format!("{:+}", c.evals as i64 - b.evals as i64),
+                ),
+                None => ("-".into(), "-".into(), "-".into(), "-".into()),
+            };
+            out.push_str(&format!(
+                "  {:>9}/{:<10} acc={:.4} ({da})  size={:.4} ({ds})  \
+                 latency={:.4} ({dl})  evals={} ({de})\n",
+                c.algo.label(),
+                c.metric.label(),
+                c.accuracy,
+                c.rel_size,
+                c.rel_latency,
+                c.evals,
+            ));
+        }
+        out
+    }
+
+    /// The worker-count-independent machine payload (keys serialize
+    /// sorted; CI byte-diffs this across worker counts).
+    pub fn to_json(&self) -> Value {
+        let metrics = Value::Arr(
+            self.sensitivities
+                .iter()
+                .map(|s| {
+                    Value::obj(vec![
+                        ("metric", Value::Str(s.metric.label().to_string())),
+                        (
+                            "order",
+                            Value::Arr(s.order.iter().map(|&l| Value::Num(l as f64)).collect()),
+                        ),
+                        ("scores", Value::Arr(s.scores.iter().map(|&v| Value::Num(v)).collect())),
+                    ])
+                })
+                .collect(),
+        );
+        let pairs = Value::Arr(
+            self.pairs
+                .iter()
+                .map(|p| {
+                    Value::obj(vec![
+                        ("a", Value::Str(p.a.label().to_string())),
+                        ("b", Value::Str(p.b.label().to_string())),
+                        ("edit_distance", Value::Num(p.edit_distance as f64)),
+                        ("rho", Value::Num(p.rho)),
+                    ])
+                })
+                .collect(),
+        );
+        let cells = Value::Arr(
+            self.cells
+                .iter()
+                .map(|c| {
+                    let base = self.baseline(c.algo);
+                    let mut fields = vec![
+                        ("accuracy", Value::Num(c.accuracy)),
+                        ("algo", Value::Str(c.algo.label().to_string())),
+                        ("bits", Value::arr_f32(&c.bits)),
+                        ("evals", Value::Num(c.evals as f64)),
+                        ("metric", Value::Str(c.metric.label().to_string())),
+                        ("rel_latency", Value::Num(c.rel_latency)),
+                        ("rel_size", Value::Num(c.rel_size)),
+                    ];
+                    if let Some(b) = base {
+                        fields.push(("d_accuracy", Value::Num(c.accuracy - b.accuracy)));
+                        fields.push(("d_evals", Value::Num(c.evals as f64 - b.evals as f64)));
+                        fields.push(("d_rel_latency", Value::Num(c.rel_latency - b.rel_latency)));
+                        fields.push(("d_rel_size", Value::Num(c.rel_size - b.rel_size)));
+                    }
+                    Value::obj(fields)
+                })
+                .collect(),
+        );
+        let mut fields = vec![
+            ("cells", cells),
+            ("layers", Value::Num(self.layers as f64)),
+            ("metrics", metrics),
+            ("model", Value::Str(self.model.clone())),
+            ("pairs", pairs),
+            ("seed", Value::Num(self.seed as f64)),
+            ("target", Value::Num(self.target)),
+            ("trials", Value::Num(self.trials as f64)),
+        ];
+        if let Some(p) = self.lowest_agreement() {
+            fields.push((
+                "lowest_agreement",
+                Value::obj(vec![
+                    ("a", Value::Str(p.a.label().to_string())),
+                    ("b", Value::Str(p.b.label().to_string())),
+                    ("rho", Value::Num(p.rho)),
+                ]),
+            ));
+        }
+        Value::obj(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_correlation_perfect_inverted_and_uncorrelated() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        assert!((rank_correlation(&a, &a) - 1.0).abs() < 1e-12);
+        let inv = [4.0, 3.0, 2.0, 1.0];
+        assert!((rank_correlation(&a, &inv) + 1.0).abs() < 1e-12);
+        // Monotone transforms preserve ranks exactly.
+        let exp = [0.1, 10.0, 11.0, 1e6];
+        assert!((rank_correlation(&a, &exp) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rank_correlation_handles_ties_and_degenerates() {
+        // Ties share average ranks: identical tie structure still agrees
+        // perfectly.
+        let t = [1.0, 2.0, 2.0, 3.0];
+        assert!((rank_correlation(&t, &t) - 1.0).abs() < 1e-12);
+        // A tie against distinct values lowers but does not destroy
+        // agreement.
+        let d = [1.0, 2.0, 3.0, 4.0];
+        let rho = rank_correlation(&t, &d);
+        assert!(rho > 0.9 && rho < 1.0, "rho={rho}");
+        // Constant vectors: no ordering information.
+        let c = [5.0, 5.0, 5.0, 5.0];
+        assert!((rank_correlation(&c, &c) - 1.0).abs() < 1e-12);
+        assert_eq!(rank_correlation(&c, &d), 0.0);
+        // Short vectors trivially agree.
+        assert_eq!(rank_correlation(&[1.0], &[9.0]), 1.0);
+    }
+
+    #[test]
+    fn average_ranks_spread_ties() {
+        assert_eq!(average_ranks(&[10.0, 20.0, 30.0]), vec![1.0, 2.0, 3.0]);
+        assert_eq!(average_ranks(&[10.0, 20.0, 20.0, 30.0]), vec![1.0, 2.5, 2.5, 4.0]);
+        assert_eq!(average_ranks(&[7.0, 7.0]), vec![1.5, 1.5]);
+    }
+
+    #[test]
+    fn synthetic_report_covers_the_full_grid() {
+        let r = AgreementReport::synthetic(8, 2, 5, 1, 0.9).unwrap();
+        assert_eq!(r.sensitivities.len(), AGREEMENT_METRICS.len());
+        // C(4, 2) metric pairs, 2 algorithms x 4 metrics cells.
+        assert_eq!(r.pairs.len(), 6);
+        assert_eq!(r.cells.len(), 8);
+        let low = r.lowest_agreement().unwrap();
+        assert!(r.pairs.iter().all(|p| p.rho >= low.rho));
+        // The render names the lowest-agreement pair.
+        let text = r.render();
+        assert!(text.contains("lowest agreement:"), "{text}");
+        assert!(
+            text.contains(&format!("{} vs {}", low.a.label(), low.b.label())),
+            "{text}"
+        );
+    }
+}

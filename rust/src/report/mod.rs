@@ -1,10 +1,12 @@
 //! Report generation: paper-style tables and figure data.
 
 pub mod ablation;
+pub mod agreement;
 pub mod experiments;
 pub mod sweep;
 mod table;
 
+pub use agreement::{rank_correlation, AgreementReport, AGREEMENT_METRICS};
 pub use sweep::{
     budget_sweep, budget_sweep_ctx, budget_sweep_from_frontier, budget_sweep_synthetic,
     budget_sweep_synthetic_costed, render_sweep, sweep_cells_json, sweep_fingerprint,

@@ -1,0 +1,72 @@
+//! Inter-layer-augmented Hessian score: cross-layer sensitivity from
+//! paired perturbations.
+//!
+//! The paper's three metrics score layers independently, which misses
+//! quantization-error interactions between layers (a δᵢᵀHδⱼ cross term
+//! in the second-order loss expansion). This metric estimates that term
+//! directly with finite differences: for every layer pair (i, j) and
+//! trial t, perturb both layers with the *same* Gaussian draws used in
+//! their single-layer baseline cells and measure
+//!
+//! ```text
+//! I(i, j, t) = L(w + δᵢ + δⱼ) − L(w + δᵢ) − L(w + δⱼ) + L(w)
+//! ```
+//!
+//! which is an exact per-trial estimate of the interaction term (the
+//! first-order and diagonal second-order contributions cancel). A layer's
+//! score is its mean diagonal degradation plus the summed magnitudes of
+//! its mean interactions with every other layer, so strongly coupled
+//! pairs are ranked more sensitive than their diagonal terms alone would
+//! suggest.
+//!
+//! The symmetric (layer, layer, trial) grid is flattened pair-major
+//! (upper triangle, [`crate::quant::calibrate::pair_index`]) and runs
+//! through the sharded stage driver
+//! ([`crate::coordinator::shard::interlayer_scores_sharded`]): every draw
+//! is seeded by [`crate::util::rng::pair_seed`]`(seed, l, l, trial)` and
+//! reduction is host-side in fixed order, so [`interlayer_sensitivity`]
+//! (one pipeline) and [`interlayer_sensitivity_pooled`] (pairs fanned
+//! across a [`PipelinePool`]) are bit-identical at every worker count.
+
+use crate::coordinator::{interlayer_scores_sharded, Pipeline, PipelinePool};
+use crate::Result;
+
+use super::{MetricKind, Sensitivity};
+
+#[derive(Debug, Clone)]
+pub struct InterLayerOptions {
+    /// Perturbation scale λ relative to max|w|, matching ε_N (Eq. 5) so
+    /// the diagonal cells reproduce the noise metric's degradation scale.
+    pub lambda: f64,
+    /// Independent paired draws per (i, j) cell.
+    pub trials: usize,
+}
+
+impl Default for InterLayerOptions {
+    fn default() -> Self {
+        Self { lambda: 0.05, trials: 3 }
+    }
+}
+
+/// Single-pipeline estimate (one worker; pair cells run back-to-back).
+pub fn interlayer_sensitivity(
+    pipeline: &mut Pipeline,
+    opts: &InterLayerOptions,
+    seed: u64,
+) -> Result<Sensitivity> {
+    let scores = interlayer_scores_sharded(pipeline, opts.lambda, opts.trials.max(1), seed)?;
+    Ok(Sensitivity::from_scores(MetricKind::InterLayer, scores))
+}
+
+/// Pool-sharded estimate: the pair-major (pair, trial) grid fans across
+/// the pool's worker pipelines. Bit-identical to
+/// [`interlayer_sensitivity`] at every worker count (both run through the
+/// sharded driver's pair-addressed draws and fixed-order reduction).
+pub fn interlayer_sensitivity_pooled(
+    pool: &mut PipelinePool,
+    opts: &InterLayerOptions,
+    seed: u64,
+) -> Result<Sensitivity> {
+    let scores = interlayer_scores_sharded(pool, opts.lambda, opts.trials.max(1), seed)?;
+    Ok(Sensitivity::from_scores(MetricKind::InterLayer, scores))
+}

@@ -1,21 +1,26 @@
-//! The paper's three sensitivity metrics (§3.2) plus the uninformed
-//! (random) baseline, each producing per-layer scores and an ascending
-//! ordering (least sensitive first) for the configuration searches.
+//! The paper's three sensitivity metrics (§3.2), the cross-layer
+//! inter-layer-augmented Hessian metric, and the uninformed (random)
+//! baseline, each producing per-layer scores and an ascending ordering
+//! (least sensitive first) for the configuration searches.
 //!
-//! The two device-driven metrics run through the sharded stage driver
+//! The device-driven metrics run through the sharded stage driver
 //! ([`crate::coordinator::shard`]): [`hessian_sensitivity_pooled`] fans
-//! Hutchinson trials and [`noise_sensitivity_pooled`] fans the ε_N
-//! (layer, trial) perturbation grid across a
-//! [`crate::coordinator::PipelinePool`]; both are bit-identical to their
+//! Hutchinson trials, [`noise_sensitivity_pooled`] fans the ε_N
+//! (layer, trial) perturbation grid, and
+//! [`interlayer_sensitivity_pooled`] fans the symmetric
+//! (layer, layer, trial) paired-perturbation grid across a
+//! [`crate::coordinator::PipelinePool`]; all are bit-identical to their
 //! single-pipeline counterparts at every worker count because every
 //! Monte-Carlo draw is item-seeded and reduction is host-side in global
 //! item order. ε_QE is host-side math.
 
 mod hessian;
+mod interlayer;
 mod noise;
 mod qe;
 
 pub use hessian::{hessian_sensitivity, hessian_sensitivity_pooled};
+pub use interlayer::{interlayer_sensitivity, interlayer_sensitivity_pooled, InterLayerOptions};
 pub use noise::{noise_sensitivity, noise_sensitivity_pooled, NoiseOptions};
 pub use qe::qe_sensitivity;
 
@@ -37,6 +42,10 @@ pub enum MetricKind {
     Noise,
     /// ε_Hessian — Hutchinson mean Hessian trace (Eq. 6).
     Hessian,
+    /// Inter-layer-augmented Hessian score: the diagonal ε_N-style term
+    /// plus the summed pairwise finite-difference interaction magnitudes
+    /// (the follow-up paper's cross-layer correction).
+    InterLayer,
 }
 
 impl MetricKind {
@@ -46,11 +55,17 @@ impl MetricKind {
             MetricKind::Qe => "QE",
             MetricKind::Noise => "Noise",
             MetricKind::Hessian => "Hessian",
+            MetricKind::InterLayer => "InterLayer",
         }
     }
 
-    pub const ALL: [MetricKind; 4] =
-        [MetricKind::Random, MetricKind::Qe, MetricKind::Noise, MetricKind::Hessian];
+    pub const ALL: [MetricKind; 5] = [
+        MetricKind::Random,
+        MetricKind::Qe,
+        MetricKind::Noise,
+        MetricKind::Hessian,
+        MetricKind::InterLayer,
+    ];
 }
 
 impl std::str::FromStr for MetricKind {
@@ -62,7 +77,8 @@ impl std::str::FromStr for MetricKind {
             "qe" => Ok(MetricKind::Qe),
             "noise" => Ok(MetricKind::Noise),
             "hessian" => Ok(MetricKind::Hessian),
-            other => anyhow::bail!("unknown metric `{other}` (random|qe|noise|hessian)"),
+            "interlayer" => Ok(MetricKind::InterLayer),
+            other => anyhow::bail!("unknown metric `{other}` (random|qe|noise|hessian|interlayer)"),
         }
     }
 }
@@ -114,6 +130,10 @@ pub fn compute(
             noise_sensitivity(pipeline, &NoiseOptions { trials, ..Default::default() }, seed)
         }
         MetricKind::Hessian => hessian_sensitivity(pipeline, trials, seed),
+        MetricKind::InterLayer => {
+            let opts = InterLayerOptions { trials, ..Default::default() };
+            interlayer_sensitivity(pipeline, &opts, seed)
+        }
     }
 }
 
@@ -125,21 +145,44 @@ pub fn compute(
 pub struct ScoreCache {
     path: std::path::PathBuf,
     version: usize,
+    /// Oldest file version still trusted for this entry. Version bumps
+    /// that leave a metric's draw scheme untouched raise `version` (what
+    /// [`ScoreCache::save`] stamps) without raising that metric's
+    /// `min_version`, so existing caches survive the upgrade and only
+    /// metrics whose math actually changed are recomputed.
+    min_version: usize,
 }
 
 impl ScoreCache {
     /// Current schema version. History: v1 wrote unversioned files from
     /// the sequentially shared Hessian RNG; v2 moved the Hessian to
     /// trial-addressed seeds but kept serial shared-RNG noise; v3 is the
-    /// sharded (layer, trial)-addressed noise metric. Older files are
-    /// rejected on load and recomputed.
-    pub const VERSION: usize = 3;
+    /// sharded (layer, trial)-addressed noise metric; v4 adds the
+    /// pair-addressed inter-layer metric. v4 changed no existing metric's
+    /// draws, so v3 Hessian/noise/QE files are still accepted (see
+    /// [`ScoreCache::min_version_for`]); v1/v2 files are always rejected
+    /// and recomputed.
+    pub const VERSION: usize = 4;
 
-    /// A cache at an explicit `path` gated on `version` (tests use this
-    /// to fabricate stale files; production callers want
-    /// [`ScoreCache::for_model`]).
+    /// A cache at an explicit `path` gated on exactly `version` (tests
+    /// use this to fabricate stale files; production callers want
+    /// [`ScoreCache::for_model`], which applies the per-metric minimum).
     pub fn new(path: impl Into<std::path::PathBuf>, version: usize) -> Self {
-        Self { path: path.into(), version }
+        Self { path: path.into(), version, min_version: version }
+    }
+
+    /// Oldest schema version whose files are still bit-identical to what
+    /// the current code computes for `metric`. The inter-layer metric was
+    /// introduced in v4; every other metric's draw scheme has been stable
+    /// since v3.
+    pub fn min_version_for(metric: MetricKind) -> usize {
+        match metric {
+            MetricKind::InterLayer => 4,
+            MetricKind::Random
+            | MetricKind::Qe
+            | MetricKind::Noise
+            | MetricKind::Hessian => 3,
+        }
     }
 
     /// The canonical per-model layout at the current version:
@@ -152,7 +195,11 @@ impl ScoreCache {
         seed: u64,
     ) -> Self {
         let name = format!("{model}_sens_{}_{trials}_{seed}.json", metric.label().to_lowercase());
-        Self::new(dir.join(name), Self::VERSION)
+        Self {
+            path: dir.join(name),
+            version: Self::VERSION,
+            min_version: Self::min_version_for(metric),
+        }
     }
 
     pub fn path(&self) -> &Path {
@@ -160,14 +207,15 @@ impl ScoreCache {
     }
 
     /// Read the cached scores, returning them only when the file's schema
-    /// version and layer count match. Anything else — missing file,
-    /// unparsable JSON, an unversioned v1 file, a score vector for a
-    /// different model shape — yields `None` so stale scores are
-    /// recomputed, never trusted.
+    /// version is in the accepted `[min_version, version]` window and the
+    /// layer count matches. Anything else — missing file, unparsable
+    /// JSON, an unversioned v1 file, a score vector for a different model
+    /// shape — yields `None` so stale scores are recomputed, never
+    /// trusted.
     pub fn load(&self, layers: usize) -> Option<Vec<f64>> {
         let v = json::parse(&std::fs::read_to_string(&self.path).ok()?).ok()?;
         let file_version = v.req("version").ok().and_then(|x| x.as_usize().ok()).unwrap_or(1);
-        if file_version != self.version {
+        if file_version < self.min_version || file_version > self.version {
             return None;
         }
         let scores: Vec<f64> =

@@ -26,3 +26,66 @@ pub fn qe_sensitivity(pipeline: &Pipeline) -> Sensitivity {
         .collect();
     Sensitivity::from_scores(MetricKind::Qe, scores)
 }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::FLOAT_BITS;
+
+    #[test]
+    fn probe_bits_is_the_harshest_candidate() {
+        assert_eq!(PROBE_BITS, QUANT_BITS[QUANT_BITS.len() - 1]);
+        assert!(QUANT_BITS.iter().all(|&b| b >= PROBE_BITS));
+        assert!(PROBE_BITS < FLOAT_BITS);
+    }
+
+    #[test]
+    fn grid_aligned_tensors_have_zero_error() {
+        // Multiples of maxabs / 2^(bits-1) are exactly representable at
+        // the probe width, so the max-normalized RMSE vanishes.
+        let step = (PROBE_BITS - 1.0).exp2();
+        let x = [0.0f32, 1.0, -1.0, 1.0 / step, -3.0 / step];
+        assert_eq!(eps_qe(&x, PROBE_BITS), 0.0);
+        // Off-grid values must not.
+        let rough = [0.37f32, -0.91, 0.053, 1.0];
+        assert!(eps_qe(&rough, PROBE_BITS) > 0.0);
+    }
+
+    #[test]
+    fn error_is_max_normalized_scale_invariant() {
+        let x = [0.37f32, -0.91, 0.053, 1.0, -0.42];
+        let base = eps_qe(&x, PROBE_BITS);
+        // Power-of-two rescaling is bit-exact through the normalization.
+        let doubled: Vec<f32> = x.iter().map(|&v| 2.0 * v).collect();
+        assert_eq!(eps_qe(&doubled, PROBE_BITS).to_bits(), base.to_bits());
+        // Arbitrary positive rescaling agrees to rounding error.
+        let scaled: Vec<f32> = x.iter().map(|&v| 3.7 * v).collect();
+        assert!((eps_qe(&scaled, PROBE_BITS) - base).abs() < 1e-6);
+    }
+
+    #[test]
+    fn error_grows_as_bits_shrink() {
+        let x = [0.37f32, -0.91, 0.053, 1.0, -0.42];
+        let harsh = eps_qe(&x, PROBE_BITS);
+        let mild = eps_qe(&x, QUANT_BITS[0]);
+        assert!(harsh > mild, "harsh {harsh} vs mild {mild}");
+        assert_eq!(eps_qe(&x, FLOAT_BITS), 0.0, "float width is lossless");
+    }
+
+    #[test]
+    fn scores_rank_rough_tensors_more_sensitive() {
+        // The same per-tensor scoring qe_sensitivity applies, without the
+        // artifact plumbing: a grid-aligned tensor ranks least sensitive,
+        // rougher tensors rank later.
+        let layers: [&[f32]; 3] = [
+            &[0.37, -0.91, 0.053, 1.0],
+            &[0.5, -0.25, 1.0, 0.0],
+            &[0.333, 0.777, -0.123, 0.9],
+        ];
+        let scores: Vec<f64> = layers.iter().map(|w| eps_qe(w, PROBE_BITS)).collect();
+        let sens = Sensitivity::from_scores(MetricKind::Qe, scores.clone());
+        assert_eq!(sens.metric, MetricKind::Qe);
+        assert_eq!(sens.order[0], 1, "grid-aligned tensor must rank first: {scores:?}");
+        assert!(scores.iter().all(|s| s.is_finite() && *s >= 0.0));
+    }
+}

@@ -37,6 +37,19 @@ pub fn noise_seed(seed: u64, layer: u64, trial: u64) -> u64 {
     probe_seed(probe_seed(seed ^ 0x906e_5eed_0b57_ac1e, layer), trial)
 }
 
+/// (layer, layer, trial)-addressable sub-seed for the inter-layer metric:
+/// symmetric in `(i, j)` (the pair is sorted before mixing) so the
+/// perturbation stream for the unordered pair `{i, j}` is well defined,
+/// and domain-tagged so pair draws never share a splitmix64 stream with
+/// Hessian probes or ε_N noise draws under the same base seed. The
+/// diagonal entries `pair_seed(seed, l, l, trial)` seed the single-layer
+/// draws that the paired runs reuse, making the interaction term an exact
+/// per-trial finite difference.
+pub fn pair_seed(seed: u64, i: u64, j: u64, trial: u64) -> u64 {
+    let (lo, hi) = if i <= j { (i, j) } else { (j, i) };
+    probe_seed(probe_seed(probe_seed(seed ^ 0x9a17_5eed_ca55_b1e5, lo), hi), trial)
+}
+
 impl Rng {
     pub fn seed_from(seed: u64) -> Self {
         let mut sm = seed;
@@ -181,6 +194,26 @@ mod tests {
         // Never the same stream as a Hessian probe with the same indices.
         assert_ne!(noise_seed(42, 0, 3), probe_seed(42, 3));
         assert_ne!(noise_seed(1, 2, 3), noise_seed(2, 2, 3));
+    }
+
+    #[test]
+    fn pair_seeds_are_symmetric_distinct_and_domain_separated() {
+        assert_eq!(pair_seed(7, 1, 3, 2), pair_seed(7, 1, 3, 2));
+        // Symmetric in the unordered pair.
+        assert_eq!(pair_seed(42, 2, 5, 1), pair_seed(42, 5, 2, 1));
+        // Distinct across the sorted (i <= j, trial) grid.
+        let mut seeds: Vec<u64> = (0..8u64)
+            .flat_map(|i| (i..8).flat_map(move |j| (0..8).map(move |t| pair_seed(42, i, j, t))))
+            .collect();
+        let total = seeds.len();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), total, "pair seeds collided");
+        // Never the same stream as a Hessian probe or an ε_N noise draw
+        // with the same indices under the same base seed.
+        assert_ne!(pair_seed(42, 0, 0, 3), probe_seed(42, 3));
+        assert_ne!(pair_seed(42, 2, 2, 3), noise_seed(42, 2, 3));
+        assert_ne!(pair_seed(1, 2, 3, 4), pair_seed(2, 2, 3, 4));
     }
 
     #[test]

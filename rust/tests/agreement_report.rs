@@ -1,0 +1,107 @@
+//! Properties of the metric-agreement report: the serialized payload is
+//! byte-identical at every worker count (the contract the CI smoke
+//! byte-diffs), the grid covers all four informed metrics under both
+//! algorithms, deltas are anchored to the same algorithm's Hessian row,
+//! and the rendering names the metric pair with the lowest agreement.
+
+use mpq::report::{rank_correlation, AgreementReport, AGREEMENT_METRICS};
+use mpq::sensitivity::MetricKind;
+
+#[test]
+fn report_payload_is_byte_identical_across_worker_counts() {
+    let reference = AgreementReport::synthetic(12, 3, 9, 1, 0.92).unwrap().to_json().to_string();
+    for workers in [2usize, 4, 8] {
+        let got = AgreementReport::synthetic(12, 3, 9, workers, 0.92).unwrap();
+        assert_eq!(
+            got.to_json().to_string(),
+            reference,
+            "agreement payload must not depend on worker count ({workers} workers)"
+        );
+    }
+}
+
+#[test]
+fn grid_covers_both_algorithms_and_every_informed_metric() {
+    let r = AgreementReport::synthetic(10, 2, 3, 2, 0.9).unwrap();
+    // Sensitivities arrive in AGREEMENT_METRICS order; random is excluded
+    // (an uninformed permutation has nothing to agree with).
+    let metrics: Vec<MetricKind> = r.sensitivities.iter().map(|s| s.metric).collect();
+    assert_eq!(metrics, AGREEMENT_METRICS.to_vec());
+    assert!(!metrics.contains(&MetricKind::Random));
+    for s in &r.sensitivities {
+        assert_eq!(s.scores.len(), 10);
+        let mut sorted = s.order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..10).collect::<Vec<_>>(), "{} order", s.metric.label());
+    }
+    // 2 algorithms x 4 metrics, metrics inner.
+    assert_eq!(r.cells.len(), 8);
+    for (i, cell) in r.cells.iter().enumerate() {
+        assert_eq!(cell.metric, AGREEMENT_METRICS[i % 4]);
+        assert_eq!(cell.bits.len(), 10);
+    }
+    // C(4, 2) pairs, each with a finite rho in [-1, 1].
+    assert_eq!(r.pairs.len(), 6);
+    for p in &r.pairs {
+        assert!(p.rho.is_finite() && p.rho.abs() <= 1.0 + 1e-12, "rho={}", p.rho);
+        assert!(p.edit_distance <= 10);
+        // The stored rho is reproducible from the stored score vectors.
+        let a = r.sensitivities.iter().find(|s| s.metric == p.a).unwrap();
+        let b = r.sensitivities.iter().find(|s| s.metric == p.b).unwrap();
+        assert_eq!(p.rho.to_bits(), rank_correlation(&a.scores, &b.scores).to_bits());
+    }
+}
+
+#[test]
+fn deltas_are_anchored_to_the_same_algorithms_hessian_row() {
+    let r = AgreementReport::synthetic(10, 2, 3, 1, 0.9).unwrap();
+    let json = r.to_json();
+    let cells = json.req("cells").unwrap().as_arr().unwrap();
+    assert_eq!(cells.len(), 8);
+    for cell in cells {
+        let metric = cell.req("metric").unwrap().as_str().unwrap().to_string();
+        let d_acc = cell.req("d_accuracy").unwrap().as_f64().unwrap();
+        let d_evals = cell.req("d_evals").unwrap().as_f64().unwrap();
+        let d_size = cell.req("d_rel_size").unwrap().as_f64().unwrap();
+        let d_lat = cell.req("d_rel_latency").unwrap().as_f64().unwrap();
+        if metric == "Hessian" {
+            // The anchor's deltas against itself are exactly zero.
+            for d in [d_acc, d_evals, d_size, d_lat] {
+                assert_eq!(d, 0.0, "Hessian row must be its own baseline");
+            }
+        } else {
+            for d in [d_acc, d_evals, d_size, d_lat] {
+                assert!(d.is_finite());
+            }
+        }
+    }
+    // The payload names the lowest-agreement pair, matching the struct.
+    let low = r.lowest_agreement().unwrap();
+    let la = json.req("lowest_agreement").unwrap();
+    assert_eq!(la.req("a").unwrap().as_str().unwrap(), low.a.label());
+    assert_eq!(la.req("b").unwrap().as_str().unwrap(), low.b.label());
+    assert!(r.pairs.iter().all(|p| p.rho >= low.rho));
+}
+
+#[test]
+fn render_names_the_lowest_agreement_pair_and_the_full_grid() {
+    let r = AgreementReport::synthetic(8, 2, 5, 1, 0.9).unwrap();
+    let text = r.render();
+    let low = r.lowest_agreement().unwrap();
+    assert!(
+        text.contains(&format!(
+            "lowest agreement: {} vs {} (rho={:+.3})",
+            low.a.label(),
+            low.b.label(),
+            low.rho,
+        )),
+        "{text}"
+    );
+    // Every informed metric shows up under both algorithm rows.
+    for mk in AGREEMENT_METRICS {
+        assert!(text.contains(mk.label()), "{text}");
+    }
+    for algo in ["Bisection", "Greedy"] {
+        assert!(text.contains(algo), "{text}");
+    }
+}
